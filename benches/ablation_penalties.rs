@@ -1,0 +1,66 @@
+//! §8.4 ablation: quarterly ES-RNN with vs without the level-variability
+//! and c-state stabilization penalties Smyl's original submission used.
+//!
+//! Both variants share shapes, data, seeds and schedule; only the loss
+//! terms baked into the artifact differ (`quarterly` vs `quarterly_pen`).
+//! Reports val/test sMAPE and the smoothness of the learned levels'
+//! implied forecasts (the penalties should trade a little fit for
+//! stability — the paper's §8.4 hypothesis).
+//!
+//! Run with: `cargo bench --bench ablation_penalties`
+
+use fast_esrnn::config::{Frequency, TrainConfig};
+use fast_esrnn::coordinator::{EvalSplit, Trainer};
+use fast_esrnn::data::{generate, GenOptions};
+use fast_esrnn::runtime::Engine;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Mean squared step-to-step relative change of each forecast path —
+/// the §8.4 "variant forecast" proxy (lower = smoother).
+fn roughness(fcs: &[Vec<f32>]) -> f64 {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for fc in fcs {
+        for w in fc.windows(2) {
+            let rel = ((w[1] - w[0]) / w[0].max(1e-6)) as f64;
+            acc += rel * rel;
+            n += 1;
+        }
+    }
+    acc / n.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let epochs = env_usize("FAST_ESRNN_EPOCHS", 8);
+    let engine = Engine::load("artifacts")?;
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+
+    println!("== §8.4 penalties ablation (quarterly, {epochs} epochs) ==\n");
+    println!("{:<26} {:>10} {:>10} {:>12} {:>10}", "variant", "val sMAPE",
+             "test sMAPE", "roughness", "loss[last]");
+    for (label, key) in [("baseline (no penalties)", None),
+                         ("level+cstate penalties", Some("quarterly_pen"))] {
+        let tc = TrainConfig {
+            model_key: key.map(|s| s.to_string()),
+            epochs,
+            batch_size: 64,
+            patience: 50,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&engine, Frequency::Quarterly,
+                                       &corpus, tc)?;
+        let report = trainer.train(false)?;
+        let val = trainer.evaluate(EvalSplit::Validation)?;
+        let test = trainer.evaluate(EvalSplit::Test)?;
+        let fcs = trainer.forecasts(true)?;
+        println!("{:<26} {:>10.3} {:>10.3} {:>12.6} {:>10.5}", label,
+                 val.smape, test.smape, roughness(&fcs),
+                 report.epoch_losses.last().unwrap());
+    }
+    println!("\npaper §8.4: penalties should favor smoother forecasts and \
+              long-horizon stability (possibly at small sMAPE cost).");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Micro-benchmarks of the L3 hot path: where does a training step's
+//! wall-clock go? Feeds the §Perf optimization log in EXPERIMENTS.md.
+//!
+//! Cases:
+//!   * batch assembly (host tensor packing)          — pure Rust
+//!   * store gather / scatter                        — pure Rust
+//!   * train_step execute (end-to-end via PJRT)      — XLA compute
+//!   * predict execute                               — XLA compute
+//!   * classical primer                              — pure Rust
+//!   * forecast-service single-request round trip    — threading + XLA
+//!
+//! Run with: `cargo bench --bench micro_hotpath`
+
+use fast_esrnn::config::{Frequency, TrainConfig};
+use fast_esrnn::coordinator::{Batcher, Trainer};
+use fast_esrnn::data::{generate, GenOptions};
+use fast_esrnn::hw;
+use fast_esrnn::runtime::Engine;
+use fast_esrnn::util::bench::{bench, header};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let freq = Frequency::Quarterly;
+    let b = 64usize;
+    let tc = TrainConfig { batch_size: b, ..Default::default() };
+    let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+    let n = trainer.series_count();
+    println!("quarterly, {n} series, batch {b}\n\n{}", header());
+
+    let mut sched = Batcher::new(n, b, 3);
+    let epoch = sched.epoch();
+    let batch = epoch[0].clone();
+
+    // Warm the executable caches.
+    trainer.train_step_batch(&batch)?;
+    let _ = trainer.forecasts(false)?;
+
+    // --- store gather ---
+    let idx = batch.indices.clone();
+    let store = trainer.store.clone();
+    let st = bench("store.gather_batch (B=64)", 3, 200, || {
+        let _ = store.gather_batch(&idx).unwrap();
+    });
+    println!("{}", st.row(b as f64));
+
+    // --- primer ---
+    let series = trainer.set.series[0].train.clone();
+    let st = bench("hw.primer (C=72, S=4)", 3, 500, || {
+        let _ = hw::primer(&series, 4);
+    });
+    println!("{}", st.row(1.0));
+
+    // --- full train step ---
+    let st = bench("train_step end-to-end (B=64)", 1, 10, || {
+        trainer.train_step_batch(&batch).unwrap();
+    });
+    println!("{}", st.row(b as f64));
+
+    // --- predict pass over the whole pool ---
+    let st = bench("predict all series", 1, 5, || {
+        let _ = trainer.forecasts(false).unwrap();
+    });
+    println!("{}", st.row(n as f64));
+
+    // --- engine phase breakdown accumulated so far ---
+    let stats = engine.stats();
+    println!("\nengine totals: {} executions | pack {:.3}s | execute {:.3}s \
+              | unpack {:.3}s | {} compiles ({:.2}s)",
+             stats.executions, stats.pack_secs, stats.execute_secs,
+             stats.unpack_secs, stats.compiles, stats.compile_secs);
+    println!("{}", trainer.telemetry.report());
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Repo-root pytest shim: the Python package lives under python/."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

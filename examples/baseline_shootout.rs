@@ -1,0 +1,52 @@
+//! Baseline shootout: every classical method vs the holdout on all three
+//! modeled frequencies — the statistical context for Table 4 (the M4
+//! "Comb" benchmark row is the one the paper reports against).
+//!
+//! Run with: `cargo run --release --example baseline_shootout`
+
+use fast_esrnn::baselines::all_baselines;
+use fast_esrnn::config::{NetworkConfig, MODELED_FREQS};
+use fast_esrnn::data::{generate, split_corpus, GenOptions};
+use fast_esrnn::metrics::{mase, smape, MetricAccumulator};
+
+fn main() -> anyhow::Result<()> {
+    let corpus = generate(&GenOptions::default()); // 1/100 Table 2 scale
+    println!("corpus: {} series\n", corpus.len());
+
+    // Per-frequency sMAPE for each method (Table 4's row structure).
+    let mut table: Vec<(String, MetricAccumulator)> = all_baselines()
+        .iter()
+        .map(|m| (m.name().to_string(), MetricAccumulator::new()))
+        .collect();
+
+    for freq in MODELED_FREQS {
+        let net = NetworkConfig::for_freq(freq)?;
+        let set = split_corpus(&corpus, &net)?;
+        println!("{}: {} series ({} discarded by §5.2)",
+                 freq.name(), set.series.len(), set.discarded);
+        for (mi, method) in all_baselines().iter().enumerate() {
+            for sp in &set.series {
+                let fc = method.forecast(&sp.refit, net.seasonality,
+                                         net.horizon);
+                table[mi].1.add(freq.name(), smape(&fc, &sp.test),
+                                mase(&fc, &sp.test, sp.mase_scale));
+            }
+        }
+    }
+
+    println!("\n{:<14} {:>8} {:>10} {:>8} {:>9}", "method", "Yearly",
+             "Quarterly", "Monthly", "Average");
+    let freq_names = ["yearly", "quarterly", "monthly"];
+    for (name, acc) in &table {
+        let cells: Vec<f64> = freq_names
+            .iter()
+            .map(|f| acc.mean_smape(f).unwrap_or(f64::NAN))
+            .collect();
+        let avg = acc.weighted_smape(&freq_names).unwrap_or(f64::NAN);
+        println!("{:<14} {:>8.3} {:>10.3} {:>8.3} {:>9.3}", name, cells[0],
+                 cells[1], cells[2], avg);
+    }
+    println!("\n(Comb is the M4 competition benchmark the paper's Table 4 \
+              reports against.)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Forecast server demo: train briefly, then serve concurrent forecast
+//! requests through the dynamic-batching service (the vLLM-router-shaped
+//! part of the coordinator), reporting latency and throughput.
+//!
+//! Run with: `cargo run --release --example forecast_server`
+
+use std::time::Instant;
+
+use fast_esrnn::config::{Frequency, TrainConfig};
+use fast_esrnn::coordinator::Trainer;
+use fast_esrnn::data::{generate, GenOptions};
+use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
+use fast_esrnn::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let freq = Frequency::Quarterly;
+
+    // Train a small model to serve (2 epochs is enough for a demo).
+    let state = {
+        let engine = Engine::load("artifacts")?;
+        let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+        let tc = TrainConfig { epochs: 2, batch_size: 16, ..Default::default() };
+        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        trainer.train(false)?;
+        println!("trained {} on {} series", freq.name(),
+                 trainer.series_count());
+        trainer.state.clone()
+    };
+
+    // Start the service (it owns its engine on a dedicated thread).
+    let service = ForecastService::start(
+        "artifacts".into(), freq, state,
+        ServiceOptions { max_batch: 64, ..Default::default() })?;
+
+    // Request generators: a fresh corpus the model never saw.
+    let corpus = generate(&GenOptions { scale: 300, seed: 777,
+                                        freqs: Some(vec![freq]) });
+    let candidates: Vec<_> = corpus
+        .series
+        .iter()
+        .filter(|s| s.len() >= 72)
+        .collect();
+    println!("{} candidate request series", candidates.len());
+
+    // Throughput test: submit a burst, await all.
+    let n_req = 200usize;
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let s = candidates[i % candidates.len()];
+        rxs.push(service.handle.submit(ForecastRequest {
+            id: format!("{}#{i}", s.id),
+            values: s.values.clone(),
+            category: s.category,
+        })?);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let r = rx.recv()??;
+        assert_eq!(r.forecast.len(), 8);
+        assert!(r.forecast.iter().all(|v| v.is_finite() && *v > 0.0));
+        ok += 1;
+    }
+    let burst_secs = t0.elapsed().as_secs_f64();
+
+    // Latency test: sequential single requests (batch of 1 path).
+    let mut lat = Vec::new();
+    for i in 0..30 {
+        let s = candidates[i % candidates.len()];
+        let t = Instant::now();
+        service.handle.forecast(ForecastRequest {
+            id: s.id.clone(),
+            values: s.values.clone(),
+            category: s.category,
+        })?;
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let st = service.handle.stats()?;
+    println!("\nburst: {ok}/{n_req} ok in {burst_secs:.3}s \
+              ({:.1} req/s) over {} dynamic batches ({} padded slots)",
+             ok as f64 / burst_secs, st.batches, st.padded_slots);
+    println!("sequential latency: p50 {:.2}ms  p95 {:.2}ms",
+             lat[lat.len() / 2] * 1e3, lat[lat.len() * 95 / 100] * 1e3);
+    Ok(())
+}

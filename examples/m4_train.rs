@@ -1,0 +1,115 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md): train ES-RNN on the
+//! full synthetic M4-like corpus for all three modeled frequencies, log
+//! the loss curves, score the test holdout against the Comb benchmark,
+//! and print the Table 4 / Table 6 analogues.
+//!
+//! This is the complete system doing the paper's experiment: Pallas ES
+//! kernel + fused LSTM cells inside the AOT train step, Rust owning the
+//! per-series parameter store, batching, epochs and evaluation.
+//!
+//! Run with: `cargo run --release --example m4_train` (≈ minutes), or set
+//! FAST_ESRNN_SCALE / FAST_ESRNN_EPOCHS to shrink/grow the run.
+
+use fast_esrnn::baselines::{Comb, Forecaster};
+use fast_esrnn::config::{NetworkConfig, TrainConfig, ALL_CATEGORIES,
+                         MODELED_FREQS};
+use fast_esrnn::coordinator::{EvalSplit, Trainer};
+use fast_esrnn::data::{generate, split_corpus, GenOptions};
+use fast_esrnn::metrics::{mase, smape, MetricAccumulator};
+use fast_esrnn::runtime::Engine;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = env_usize("FAST_ESRNN_SCALE", 100);
+    let epochs = env_usize("FAST_ESRNN_EPOCHS", 15);
+    let batch = env_usize("FAST_ESRNN_BATCH", 64);
+
+    let engine = Engine::load("artifacts")?;
+    println!("PJRT platform: {} | corpus scale 1/{scale} | {epochs} epochs \
+              | batch {batch}", engine.platform());
+    let corpus = generate(&GenOptions { scale, ..Default::default() });
+    println!("corpus: {} series", corpus.len());
+
+    let mut esrnn_rows: Vec<(String, f64, f64, usize, f64)> = Vec::new();
+    let mut comb_rows: Vec<(String, f64)> = Vec::new();
+    let mut cat_table: Vec<(String, MetricAccumulator)> = Vec::new();
+
+    for freq in MODELED_FREQS {
+        let net = NetworkConfig::for_freq(freq)?;
+        println!("\n=== {} ===", freq.name());
+        let tc = TrainConfig {
+            epochs,
+            batch_size: batch,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        println!("{} series survive §5.2 (of {})", trainer.series_count(),
+                 trainer.set.total);
+
+        let report = trainer.train(true)?;
+        println!("loss curve: {:?}",
+                 report.epoch_losses.iter().map(|v| (v * 1e4).round() / 1e4)
+                       .collect::<Vec<_>>());
+
+        let test = trainer.evaluate(EvalSplit::Test)?;
+        esrnn_rows.push((freq.name().into(), test.smape, test.mase,
+                         test.count, report.train_secs));
+        cat_table.push((freq.name().into(), test.per_category.clone()));
+
+        // Comb benchmark on the same splits (Table 4's baseline row).
+        let set = split_corpus(&corpus, &net)?;
+        let mut s_acc = 0.0;
+        for sp in &set.series {
+            let fc = Comb.forecast(&sp.refit, net.seasonality, net.horizon);
+            s_acc += smape(&fc, &sp.test);
+            let _ = mase(&fc, &sp.test, sp.mase_scale);
+        }
+        comb_rows.push((freq.name().into(), s_acc / set.series.len() as f64));
+
+        println!("{}", trainer.telemetry.report());
+    }
+
+    // ---- Table 4 analogue ----
+    println!("\n== Table 4 analogue: sMAPE by frequency ==");
+    println!("{:<20} {:>8} {:>10} {:>8} {:>9}", "model", "Yearly",
+             "Quarterly", "Monthly", "Average");
+    let avg = |rows: &[(String, f64)]| {
+        rows.iter().map(|r| r.1).sum::<f64>() / rows.len() as f64
+    };
+    let comb_simple: Vec<(String, f64)> = comb_rows.clone();
+    println!("{:<20} {:>8.3} {:>10.3} {:>8.3} {:>9.3}", "Comb (benchmark)",
+             comb_rows[0].1, comb_rows[1].1, comb_rows[2].1,
+             avg(&comb_simple));
+    let es: Vec<(String, f64)> =
+        esrnn_rows.iter().map(|r| (r.0.clone(), r.1)).collect();
+    println!("{:<20} {:>8.3} {:>10.3} {:>8.3} {:>9.3}", "ES-RNN (ours)",
+             esrnn_rows[0].1, esrnn_rows[1].1, esrnn_rows[2].1, avg(&es));
+    let improvement = 100.0 * (avg(&comb_simple) - avg(&es)) / avg(&comb_simple);
+    println!("{:<20} {:>37.1}%", "improvement vs Comb", improvement);
+
+    // ---- Table 6 analogue ----
+    println!("\n== Table 6 analogue: sMAPE by category ==");
+    println!("{:<14} {:>8} {:>10} {:>8}", "category", "Yearly", "Quarterly",
+             "Monthly");
+    for cat in ALL_CATEGORIES {
+        let cells: Vec<String> = cat_table
+            .iter()
+            .map(|(_, acc)| {
+                acc.mean_smape(cat.name())
+                   .map(|v| format!("{v:.2}"))
+                   .unwrap_or_else(|| "-".into())
+            })
+            .collect();
+        println!("{:<14} {:>8} {:>10} {:>8}", cat.name(), cells[0], cells[1],
+                 cells[2]);
+    }
+
+    println!("\n== run summary ==");
+    for (f, s, m, n, secs) in &esrnn_rows {
+        println!("{f:<10} sMAPE {s:.3}  MASE {m:.3}  ({n} series, {secs:.1}s)");
+    }
+    Ok(())
+}

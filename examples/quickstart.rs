@@ -1,0 +1,43 @@
+//! Quickstart: train ES-RNN on a small synthetic quarterly corpus and
+//! forecast — the 60-second tour of the public API.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use fast_esrnn::config::{Frequency, TrainConfig};
+use fast_esrnn::coordinator::{EvalSplit, Trainer};
+use fast_esrnn::data::{generate, GenOptions};
+use fast_esrnn::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the AOT artifacts (HLO text compiled from JAX + Pallas).
+    let engine = Engine::load("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. A small deterministic corpus (1/400 of the M4 Table 2 counts).
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    println!("corpus: {} series", corpus.len());
+
+    // 3. Train quarterly ES-RNN for a few epochs.
+    let tc = TrainConfig {
+        epochs: 5,
+        batch_size: 16,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&engine, Frequency::Quarterly, &corpus, tc)?;
+    println!("training on {} equalized series…", trainer.series_count());
+    let report = trainer.train(true)?;
+
+    // 4. Score the test holdout and print a few forecasts.
+    let test = trainer.evaluate(EvalSplit::Test)?;
+    println!("\ntest sMAPE {:.3}  MASE {:.3}  ({} series, {:.1}s train)",
+             test.smape, test.mase, test.count, report.train_secs);
+
+    let forecasts = trainer.forecasts(true)?;
+    for (i, fc) in forecasts.iter().take(3).enumerate() {
+        let s = &trainer.set.series[i];
+        println!("  {}: forecast {:?} … actual {:?}", s.id,
+                 &fc[..3], &s.test[..3]);
+    }
+    Ok(())
+}

@@ -1,0 +1,241 @@
+"""AOT pipeline: lower every ES-RNN program to HLO text + manifest.
+
+This is the ONLY place Python touches the system: it runs once at build
+time (``make artifacts``), emitting for each (frequency, batch-size):
+
+    artifacts/{freq}_b{B}_train_step.hlo.txt
+    artifacts/{freq}_b{B}_predict.hlo.txt
+and per frequency:
+    artifacts/{freq}_init.hlo.txt
+plus a single ``artifacts/manifest.json`` describing, for every program,
+the exact flattened input/output leaf order (name, shape, dtype). The Rust
+coordinator is manifest-driven: it packs literals by name in manifest
+order and routes outputs back to its state store by name, so Python and
+Rust never need to agree on pytree internals.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .configs import CONFIGS, BATCH_SIZES, batch_sizes_for
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _path_str(prefix, path) -> str:
+    parts = [prefix]
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return ".".join(p for p in parts if p)
+
+
+def leaf_entries(prefix, tree):
+    """Flatten a spec tree to [{name, shape, dtype}] in jax flat order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append({
+            "name": _path_str(prefix, path),
+            "shape": list(leaf.shape),
+            "dtype": str(jnp.dtype(leaf.dtype)),
+        })
+    return out
+
+
+def program_entry(fname, freq, batch, kind, arg_trees, out_trees):
+    """Manifest record: inputs/outputs as flattened (name, shape, dtype)."""
+    inputs, outputs = [], []
+    for prefix, tree in arg_trees:
+        inputs.extend(leaf_entries(prefix, tree))
+    for prefix, tree in out_trees:
+        outputs.extend(leaf_entries(prefix, tree))
+    return {
+        "file": fname, "freq": freq, "batch": batch, "kind": kind,
+        "inputs": inputs, "outputs": outputs,
+    }
+
+
+def lower_train_step(cfg, batch, use_pallas):
+    data = model.data_specs(cfg, batch)
+    params = model.param_specs(cfg, batch)
+    opt = model.opt_specs(cfg, batch)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = model.make_train_step(cfg, use_pallas)
+    lowered = jax.jit(fn, keep_unused=True).lower(data, params, opt, lr)
+    loss_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    entry_io = (
+        [("data", data), ("params", params), ("opt", opt), ("lr", lr)],
+        [("loss", loss_spec), ("params", params), ("opt", opt)],
+    )
+    return to_hlo_text(lowered), entry_io
+
+
+def lower_predict(cfg, batch, use_pallas):
+    data = {
+        "y": jax.ShapeDtypeStruct((batch, cfg.length), jnp.float32),
+        "cat": jax.ShapeDtypeStruct((batch, configs.N_CATEGORIES),
+                                    jnp.float32),
+    }
+    params = model.param_specs(cfg, batch)
+    fn = model.make_predict(cfg, use_pallas)
+    lowered = jax.jit(fn, keep_unused=True).lower(data, params)
+    fc = jax.ShapeDtypeStruct((batch, cfg.horizon), jnp.float32)
+    entry_io = (
+        [("data", data), ("params", params)],
+        [("forecast", fc)],
+    )
+    return to_hlo_text(lowered), entry_io
+
+
+def lower_es(cfg, batch, use_pallas):
+    """Debug/verification program: expose the raw ES layer (levels, seas).
+
+    The Rust property tests execute this against their own pure-Rust
+    Holt-Winters filter to pin the L1 kernel numerics across the AOT
+    boundary (kernel ≡ jnp-ref ≡ rust mirror).
+    """
+    import jax.nn
+    from . import kernels
+    from .kernels import ref as kref
+
+    specs = {
+        "y": jax.ShapeDtypeStruct((batch, cfg.length), jnp.float32),
+        "alpha_logit": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        "gamma_logit": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        "log_s_init": jax.ShapeDtypeStruct((batch, cfg.seasonality),
+                                           jnp.float32),
+    }
+
+    def es_fn(d):
+        alpha = jax.nn.sigmoid(d["alpha_logit"])
+        if cfg.seasonal:
+            gamma = jax.nn.sigmoid(d["gamma_logit"])
+            s_init = jnp.exp(d["log_s_init"])
+        else:
+            gamma = jnp.zeros_like(d["gamma_logit"])
+            s_init = jnp.ones_like(d["log_s_init"])
+        fn = kernels.es_smoothing if use_pallas else kref.es_smoothing_ref
+        levels, seas = fn(d["y"], alpha, gamma, s_init)
+        return levels, seas
+
+    lowered = jax.jit(es_fn, keep_unused=True).lower(specs)
+    lv = jax.ShapeDtypeStruct((batch, cfg.length), jnp.float32)
+    se = jax.ShapeDtypeStruct((batch, cfg.length + cfg.seasonality),
+                              jnp.float32)
+    entry_io = ([("data", specs)], [("levels", lv), ("seas", se)])
+    return to_hlo_text(lowered), entry_io
+
+
+def lower_init(cfg):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    fn = model.make_init(cfg)
+    lowered = jax.jit(fn, keep_unused=True).lower(key)
+    rnn_spec = jax.eval_shape(
+        lambda: model.init_rnn_params(jax.random.PRNGKey(0), cfg))
+    entry_io = ([("key", key)], [("rnn", rnn_spec)])
+    return to_hlo_text(lowered), entry_io
+
+
+def build(out_dir, freqs, batch_sizes, use_pallas=True, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    programs = {}
+
+    def emit(name, text, entry):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        programs[name] = entry
+        if verbose:
+            print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB, "
+                  f"{len(entry['inputs'])} in / {len(entry['outputs'])} out)")
+
+    for freq in freqs:
+        cfg = CONFIGS[freq]
+        text, (ins, outs) = lower_init(cfg)
+        emit(f"{freq}_init", text,
+             program_entry(f"{freq}_init.hlo.txt", freq, 0, "init", ins, outs))
+        if not cfg.dual:
+            # ES-layer debug program (fixed B=8) for cross-layer checks.
+            text, (ins, outs) = lower_es(cfg, 8, use_pallas)
+            emit(f"{freq}_b8_es", text,
+                 program_entry(f"{freq}_b8_es.hlo.txt", freq, 8, "es",
+                               ins, outs))
+        for b in batch_sizes_for(freq, batch_sizes):
+            text, (ins, outs) = lower_train_step(cfg, b, use_pallas)
+            emit(f"{freq}_b{b}_train_step", text,
+                 program_entry(f"{freq}_b{b}_train_step.hlo.txt", freq, b,
+                               "train_step", ins, outs))
+            text, (ins, outs) = lower_predict(cfg, b, use_pallas)
+            emit(f"{freq}_b{b}_predict", text,
+                 program_entry(f"{freq}_b{b}_predict.hlo.txt", freq, b,
+                               "predict", ins, outs))
+
+    manifest = {
+        "version": 1,
+        "variant": "pallas" if use_pallas else "ref",
+        "tau": configs.PINBALL_TAU,
+        "per_series_lr_mult": configs.PER_SERIES_LR_MULT,
+        "batch_sizes": list(batch_sizes),
+        "configs": {
+            f: {
+                "seasonality": c.seasonality,
+                "seasonality2": c.seasonality2,
+                "horizon": c.horizon,
+                "input_window": c.input_window,
+                "length": c.length,
+                "hidden": c.hidden,
+                "dilations": [list(b) for b in c.dilations],
+                "positions": c.positions,
+                "valid_positions": c.valid_positions,
+            }
+            for f, c in CONFIGS.items() if f in freqs
+        },
+        "programs": programs,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"  wrote manifest.json ({len(programs)} programs)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest")
+    ap.add_argument("--freqs", default=",".join(CONFIGS))
+    ap.add_argument("--batch-sizes",
+                    default=",".join(str(b) for b in BATCH_SIZES))
+    ap.add_argument("--variant", choices=("pallas", "ref"), default="pallas")
+    args = ap.parse_args()
+    freqs = [f.strip() for f in args.freqs.split(",") if f.strip()]
+    batch_sizes = [int(b) for b in args.batch_sizes.split(",")]
+    build(args.out, freqs, batch_sizes, use_pallas=args.variant == "pallas")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Per-frequency ES-RNN configurations (paper Table 1 + §5.2).
+
+These are the *compile-time* configs: every shape baked into an AOT artifact
+comes from here. The Rust coordinator reads the same values back out of
+``artifacts/manifest.json`` — it never re-derives them.
+
+Paper mapping:
+  * Table 1  — ``dilations`` / ``hidden`` per frequency.
+  * §5.2     — ``length`` (series-length equalization; 72 for Q/M, 24 for Y).
+  * §3.1     — ``seasonality`` (Holt-Winters period; yearly is non-seasonal,
+               see §7/§8.2 of the paper).
+  * M4 rules — ``horizon`` (6 / 8 / 18).
+  * §3.1     — ``input_window`` chosen per Smyl's heuristic: one seasonal
+               period, floored at 4.
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+N_CATEGORIES = 6  # Demographic, Finance, Industry, Macro, Micro, Other
+
+# Smyl trained against the 0.48 quantile (slightly under the median) —
+# pinball loss per Takeuchi et al. (2006), paper §3.5.
+PINBALL_TAU = 0.48
+
+# Per-series smoothing parameters learn on a faster clock than the shared
+# RNN weights (Smyl's per-series learning-rate trick).
+PER_SERIES_LR_MULT = 1.5
+
+
+@dataclass(frozen=True)
+class FreqConfig:
+    """Everything needed to trace one frequency's compute graph."""
+
+    name: str
+    seasonality: int          # S: Holt-Winters period (1 = non-seasonal)
+    horizon: int              # H: forecast length (M4 rules)
+    input_window: int         # input window fed to the RNN at each position
+    length: int               # C: equalized series length (paper §5.2)
+    hidden: int               # LSTM hidden size (Table 1)
+    dilations: Tuple[Tuple[int, ...], ...]  # residual blocks of dilated LSTMs
+    # §8.2 second multiplicative seasonality (0 = single); hourly uses
+    # 24- and 168-hour cycles per Gould et al. (2008).
+    seasonality2: int = 0
+    # §8.4 penalties (0.0 = off; ablation benches switch them on)
+    level_penalty: float = 0.0
+    cstate_penalty: float = 0.0
+
+    @property
+    def positions(self) -> int:
+        """Number of RNN window positions P (last one is forecast-only)."""
+        return self.length - self.input_window + 1
+
+    @property
+    def valid_positions(self) -> int:
+        """Positions with a full in-sample target window (loss-bearing)."""
+        return self.length - self.input_window - self.horizon + 1
+
+    @property
+    def seasonal(self) -> bool:
+        return self.seasonality > 1
+
+    @property
+    def dual(self) -> bool:
+        """§8.2 multiple-seasonality mode."""
+        return self.seasonality2 > 0
+
+    @property
+    def total_seasonality(self) -> int:
+        """Width of the per-series seasonality parameter block."""
+        return self.seasonality + self.seasonality2
+
+    @property
+    def rnn_input_dim(self) -> int:
+        return self.input_window + N_CATEGORIES
+
+    @property
+    def flat_dilations(self) -> Tuple[int, ...]:
+        return tuple(d for block in self.dilations for d in block)
+
+
+CONFIGS = {
+    "yearly": FreqConfig(
+        name="yearly", seasonality=1, horizon=6, input_window=4,
+        length=24, hidden=30, dilations=((1, 2), (2, 6)),
+    ),
+    "quarterly": FreqConfig(
+        name="quarterly", seasonality=4, horizon=8, input_window=8,
+        length=72, hidden=40, dilations=((1, 2), (4, 8)),
+    ),
+    "monthly": FreqConfig(
+        name="monthly", seasonality=12, horizon=18, input_window=12,
+        length=72, hidden=50, dilations=((1, 3), (6, 12)),
+    ),
+    # §8.5: daily shares the quarterly/monthly structure (paper Fig. 3 note).
+    "daily": FreqConfig(
+        name="daily", seasonality=7, horizon=14, input_window=14,
+        length=140, hidden=40, dilations=((1, 2), (4, 8)),
+    ),
+    # §8.2: hourly with dual 24h/168h multiplicative seasonality.
+    "hourly": FreqConfig(
+        name="hourly", seasonality=24, horizon=48, input_window=24,
+        length=336, hidden=40, dilations=((1, 4), (24, 48)),
+        seasonality2=168,
+    ),
+    # §8.4 ablation variant: quarterly with the level-variability and
+    # c-state stabilization penalties enabled.
+    "quarterly_pen": FreqConfig(
+        name="quarterly_pen", seasonality=4, horizon=8, input_window=8,
+        length=72, hidden=40, dilations=((1, 2), (4, 8)),
+        level_penalty=0.05, cstate_penalty=0.05,
+    ),
+}
+
+# Batch sizes we AOT-compile artifacts for. B=1 is the "per-series CPU"
+# baseline of Table 5; the sweep reproduces the paper's vectorization
+# speedup curve.
+BATCH_SIZES = (1, 16, 64, 256)
+
+# Per-frequency overrides (small corpora / ablation-only variants don't
+# need the full sweep).
+BATCH_SIZES_OVERRIDE = {
+    "hourly": (1, 4),
+    "daily": (1, 16, 64),
+    "quarterly_pen": (64,),
+}
+
+
+def batch_sizes_for(freq: str, default=BATCH_SIZES):
+    return BATCH_SIZES_OVERRIDE.get(freq, default)
+
+# Default Adam hyper-parameters baked into the train_step artifact.
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8

@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Public surface:
+  * ``es_smoothing``  — batched Holt-Winters recurrence (the paper's core
+    vectorization target),
+  * ``lstm_cell``     — fused LSTM cell for the dilated stack,
+  * ``pinball_loss``  — masked surrogate training loss,
+  * ``ref``           — pure-jnp oracles for all of the above.
+
+Each kernel is wrapped in ``jax.custom_vjp``: forward runs the Pallas
+kernel (interpret=True), backward differentiates the matching reference.
+"""
+
+from . import ref, ref_dual
+from .es_smoothing import es_smoothing, es_smoothing_pallas
+from .es_dual import es_dual, es_dual_pallas
+from .lstm_cell import lstm_cell, lstm_cell_pallas
+from .pinball import pinball_loss, pinball_sum_pallas
+
+__all__ = [
+    "ref", "ref_dual",
+    "es_smoothing", "es_smoothing_pallas",
+    "es_dual", "es_dual_pallas",
+    "lstm_cell", "lstm_cell_pallas",
+    "pinball_loss", "pinball_sum_pallas",
+]

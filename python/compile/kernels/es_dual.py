@@ -1,0 +1,112 @@
+"""Pallas kernel: dual-seasonality Holt-Winters recurrence (paper §8.2).
+
+Smyl's full M4 submission used multiple multiplicative seasonalities for
+hourly data (24-hour and 168-hour cycles). Following Gould et al. (2008),
+two seasonality buffers are maintained and the data is de-seasonalized by
+both in turn:
+
+    l_t        = α · y_t / (s1_t · s2_t) + (1 - α) · l_{t-1}
+    s1_{t+S1}  = γ1 · y_t / (l_t · s2_t) + (1 - γ1) · s1_t
+    s2_{t+S2}  = γ2 · y_t / (l_t · s1_t) + (1 - γ2) · s2_t
+
+Same VMEM-resident structure as `es_smoothing`: grid over batch blocks,
+whole time loop in-kernel with both rolling buffers in registers/VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref_dual
+from .es_smoothing import _pick_block_b
+
+
+def _es_dual_kernel(y_ref, alpha_ref, g1_ref, g2_ref, s1_ref, s2_ref,
+                    lev_ref, seas1_ref, seas2_ref,
+                    *, C: int, S1: int, S2: int, block_b: int):
+    y = y_ref[...]                           # [block_b, C]
+    alpha = alpha_ref[...]
+    g1 = g1_ref[...]
+    g2 = g2_ref[...]
+    buf1 = s1_ref[...]                       # [block_b, S1]
+    buf2 = s2_ref[...]                       # [block_b, S2]
+    seas1_ref[:, :S1] = buf1
+    seas2_ref[:, :S2] = buf2
+
+    def body(t, carry):
+        l_prev, b1, b2 = carry
+        i1 = jnp.mod(t, S1)
+        i2 = jnp.mod(t, S2)
+        s1_t = jax.lax.dynamic_slice(b1, (0, i1), (block_b, 1))[:, 0]
+        s2_t = jax.lax.dynamic_slice(b2, (0, i2), (block_b, 1))[:, 0]
+        y_t = jax.lax.dynamic_slice(y, (0, t), (block_b, 1))[:, 0]
+        denom = s1_t * s2_t
+        l_t = jnp.where(t == 0, y_t / denom,
+                        alpha * y_t / denom + (1.0 - alpha) * l_prev)
+        s1_n = g1 * y_t / (l_t * s2_t) + (1.0 - g1) * s1_t
+        s2_n = g2 * y_t / (l_t * s1_t) + (1.0 - g2) * s2_t
+        pl.store(lev_ref, (slice(None), pl.dslice(t, 1)), l_t[:, None])
+        pl.store(seas1_ref, (slice(None), pl.dslice(t + S1, 1)), s1_n[:, None])
+        pl.store(seas2_ref, (slice(None), pl.dslice(t + S2, 1)), s2_n[:, None])
+        b1 = jax.lax.dynamic_update_slice(b1, s1_n[:, None], (0, i1))
+        b2 = jax.lax.dynamic_update_slice(b2, s2_n[:, None], (0, i2))
+        return l_t, b1, b2
+
+    jax.lax.fori_loop(0, C, body,
+                      (jnp.zeros((block_b,), y.dtype), buf1, buf2))
+
+
+def es_dual_pallas(y, alpha, gamma1, gamma2, s1_init, s2_init):
+    """Raw Pallas forward. Returns (levels [B,C], seas1 [B,C+S1],
+    seas2 [B,C+S2])."""
+    B, C = y.shape
+    S1 = s1_init.shape[1]
+    S2 = s2_init.shape[1]
+    block_b = _pick_block_b(B)
+    grid = (B // block_b,)
+    kernel = functools.partial(_es_dual_kernel, C=C, S1=S1, S2=S2,
+                               block_b=block_b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, S1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, S2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, C + S1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, C + S2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C), y.dtype),
+            jax.ShapeDtypeStruct((B, C + S1), y.dtype),
+            jax.ShapeDtypeStruct((B, C + S2), y.dtype),
+        ],
+        interpret=True,
+    )(y, alpha, gamma1, gamma2, s1_init, s2_init)
+
+
+@jax.custom_vjp
+def es_dual(y, alpha, gamma1, gamma2, s1_init, s2_init):
+    """Differentiable dual-seasonality ES (Pallas fwd, reference-VJP bwd)."""
+    return es_dual_pallas(y, alpha, gamma1, gamma2, s1_init, s2_init)
+
+
+def _fwd(y, alpha, gamma1, gamma2, s1_init, s2_init):
+    args = (y, alpha, gamma1, gamma2, s1_init, s2_init)
+    return es_dual(*args), args
+
+
+def _bwd(res, cts):
+    _, vjp = jax.vjp(ref_dual.es_dual_ref, *res)
+    return vjp(cts)
+
+
+es_dual.defvjp(_fwd, _bwd)

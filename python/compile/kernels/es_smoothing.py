@@ -1,0 +1,127 @@
+"""Pallas kernel: batched Holt-Winters level/seasonality recurrence.
+
+This is *the* kernel the paper is about. Smyl's original C++ implementation
+ran the exponential-smoothing recurrence one series at a time on a CPU; the
+paper's contribution is vectorizing it so the per-series parameters
+(alpha, gamma, initial seasonality) become batch-dim tensor slices.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the grid iterates over batch *blocks* — each program instance owns
+    ``block_b`` series, the analogue of the paper's CUDA batch parallelism;
+  * the whole [block_b, C] series block plus the rolling seasonality buffer
+    live in VMEM for the entire time loop — one HBM read of y, one HBM
+    write of levels/seas, zero traffic inside the recurrence (the paper's
+    PyTorch version re-materializes per-step tensors in HBM);
+  * the time loop is a ``fori_loop`` *inside* the kernel: sequential in t,
+    dense vector ops across the batch lanes.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO. Correctness is pinned to
+``ref.es_smoothing_ref`` by pytest; the backward pass differentiates the
+reference (see ``custom_vjp`` below).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block_b(B: int) -> int:
+    """Largest power-of-two batch block ≤ 32 that divides B.
+
+    Multiples of the 8-sublane f32 tile granule; the §Perf sweep (see
+    EXPERIMENTS.md) showed per-grid-step overhead dominates below 32 rows
+    while VMEM stays ≪ 1% of budget (≈30 kB at C=72), so 32 is the sweet
+    spot that still leaves ≥2 grid steps of parallelism at B=64. The B=1
+    "per-series CPU" baseline falls back to the batch itself.
+    """
+    for cand in (32, 16, 8, 4, 2, 1):
+        if B % cand == 0:
+            return cand
+    return 1
+
+
+def _es_kernel(y_ref, alpha_ref, gamma_ref, sinit_ref, lev_ref, seas_ref,
+               *, C: int, S: int, block_b: int):
+    """One grid step: the full C-step recurrence for a block of series."""
+    y = y_ref[...]                       # [block_b, C]   — VMEM resident
+    alpha = alpha_ref[...]               # [block_b]
+    gamma = gamma_ref[...]               # [block_b]
+    sbuf0 = sinit_ref[...]               # [block_b, S]   — rolling s buffer
+
+    # Emit the initial seasonality values s_0..s_{S-1} (they are trainable
+    # per-series parameters and part of the output contract).
+    seas_ref[:, :S] = sbuf0
+
+    def body(t, carry):
+        l_prev, sbuf = carry
+        idx = jnp.mod(t, S)              # slot holding s_t
+        s_t = jax.lax.dynamic_slice(sbuf, (0, idx), (block_b, 1))[:, 0]
+        y_t = jax.lax.dynamic_slice(y, (0, t), (block_b, 1))[:, 0]
+        # Eq. 1 with the trend term removed (the RNN models trend, Eq. 5).
+        l_t = jnp.where(t == 0, y_t / s_t,
+                        alpha * y_t / s_t + (1.0 - alpha) * l_prev)
+        # Eq. 3: seasonality update, written S steps ahead.
+        s_next = gamma * y_t / l_t + (1.0 - gamma) * s_t
+        pl.store(lev_ref, (slice(None), pl.dslice(t, 1)), l_t[:, None])
+        pl.store(seas_ref, (slice(None), pl.dslice(t + S, 1)), s_next[:, None])
+        sbuf = jax.lax.dynamic_update_slice(sbuf, s_next[:, None], (0, idx))
+        return l_t, sbuf
+
+    jax.lax.fori_loop(0, C, body, (jnp.zeros((block_b,), y.dtype), sbuf0))
+
+
+def es_smoothing_pallas(y, alpha, gamma, s_init):
+    """Raw Pallas forward (no autodiff). Shapes as in ``es_smoothing_ref``."""
+    B, C = y.shape
+    S = s_init.shape[1]
+    block_b = _pick_block_b(B)
+    grid = (B // block_b,)
+    kernel = functools.partial(_es_kernel, C=C, S=S, block_b=block_b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, S), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, C + S), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C), y.dtype),
+            jax.ShapeDtypeStruct((B, C + S), y.dtype),
+        ],
+        interpret=True,
+    )(y, alpha, gamma, s_init)
+
+
+@jax.custom_vjp
+def es_smoothing(y, alpha, gamma, s_init):
+    """Differentiable ES recurrence: Pallas forward, reference-VJP backward.
+
+    Pallas kernels do not get automatic VJPs; rather than hand-derive the
+    (long) recurrence adjoint we differentiate the jnp reference, whose
+    forward outputs are verified equal to the kernel's by pytest. This is
+    exactly the bwd the XLA autograd would build for the same math.
+    """
+    return es_smoothing_pallas(y, alpha, gamma, s_init)
+
+
+def _es_fwd(y, alpha, gamma, s_init):
+    return es_smoothing(y, alpha, gamma, s_init), (y, alpha, gamma, s_init)
+
+
+def _es_bwd(res, cts):
+    _, vjp = jax.vjp(ref.es_smoothing_ref, *res)
+    return vjp(cts)
+
+
+es_smoothing.defvjp(_es_fwd, _es_bwd)

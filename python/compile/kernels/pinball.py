@@ -1,0 +1,66 @@
+"""Pallas kernel: masked pinball (quantile) loss — paper §3.5.
+
+sMAPE/MASE (the M4 metrics) are non-differentiable, so ES-RNN trains
+against the pinball loss at tau = 0.48 (Takeuchi et al., 2006). The mask
+zeroes both padded series (partial final batch / §8.1 variable-length
+support) and window positions whose target horizon runs past the end of the
+training region — the paper's "unpad and mask" step.
+
+The kernel reduces the whole [P, B, H] tensor to a masked *sum* in one
+pass; the division by the valid count happens outside (the count is cheap
+and keeping the kernel a pure reduction makes it trivially tileable).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pinball_kernel(yhat_ref, target_ref, mask_ref, out_ref, *, tau: float):
+    d = target_ref[...] - yhat_ref[...]                  # [P, B, H]
+    per_elem = jnp.maximum(tau * d, (tau - 1.0) * d)
+    w = mask_ref[...][:, :, None]
+    out_ref[0, 0] = jnp.sum(per_elem * w)
+
+
+def pinball_sum_pallas(yhat, target, mask, tau: float):
+    """Masked pinball *sum* over all elements; returns a [1,1] tensor."""
+    kernel = functools.partial(_pinball_kernel, tau=tau)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), yhat.dtype),
+        interpret=True,
+    )(yhat, target, mask)
+
+
+def _pinball_mean(yhat, target, mask, tau: float):
+    total = pinball_sum_pallas(yhat, target, mask, tau)[0, 0]
+    denom = jnp.maximum(jnp.sum(mask) * yhat.shape[2], 1.0)
+    return total / denom
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def pinball_loss(yhat, target, mask, tau):
+    """Differentiable masked pinball mean (Pallas fwd, reference-VJP bwd).
+
+    ``tau`` is static (baked into the artifact); mask carries no gradient.
+    """
+    return _pinball_mean(yhat, target, mask, tau)
+
+
+def _pin_fwd(yhat, target, mask, tau):
+    return pinball_loss(yhat, target, mask, tau), (yhat, target, mask)
+
+
+def _pin_bwd(tau, res, ct):
+    yhat, target, mask = res
+    _, vjp = jax.vjp(lambda a, b, m: ref.pinball_ref(a, b, m, tau),
+                     yhat, target, mask)
+    return vjp(ct)
+
+
+pinball_loss.defvjp(_pin_fwd, _pin_bwd)

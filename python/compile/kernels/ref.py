@@ -1,0 +1,97 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+the most obvious jnp style. They serve three purposes:
+
+  1. pytest compares kernel output to these references (the core
+     correctness signal for Layer 1);
+  2. the kernels' ``custom_vjp`` backward passes differentiate *these*
+     functions (forward = Pallas, backward = XLA-fused reference gradient —
+     numerics match because forward outputs match);
+  3. ``model.py`` can be traced with ``use_pallas=False`` to produce an
+     all-reference HLO used for A/B testing the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def es_smoothing_ref(y, alpha, gamma, s_init):
+    """Batched Holt-Winters level/seasonality recurrence (paper Eqs. 1, 3).
+
+    Trend (Eq. 2) is intentionally absent: in ES-RNN the RNN models the
+    trend (Eq. 5). Multiplicative seasonality with period S = s_init.shape[1].
+    A period of S == 1 degenerates to simple exponential smoothing; pass
+    gamma = 0 and s_init = 1 to keep seasonality pinned at 1.
+
+    Args:
+      y:      [B, C]   positive observations.
+      alpha:  [B]      level smoothing coefficient in (0, 1).
+      gamma:  [B]      seasonality smoothing coefficient in [0, 1).
+      s_init: [B, S]   initial seasonality factors (positive).
+
+    Returns:
+      levels: [B, C]    l_t for t = 0..C-1 (l_0 = y_0 / s_0).
+      seas:   [B, C+S]  s_t for t = 0..C+S-1 (first S entries are s_init;
+                        entry t+S is produced while consuming y_t).
+    """
+    B, C = y.shape
+    S = s_init.shape[1]
+
+    def step(carry, t):
+        l_prev, sbuf = carry                      # sbuf[:, t % S] holds s_t
+        idx = jnp.mod(t, S)
+        s_t = jax.lax.dynamic_slice(sbuf, (0, idx), (B, 1))[:, 0]
+        y_t = jax.lax.dynamic_slice(y, (0, t), (B, 1))[:, 0]
+        l_t = jnp.where(t == 0, y_t / s_t,
+                        alpha * y_t / s_t + (1.0 - alpha) * l_prev)
+        s_next = gamma * y_t / l_t + (1.0 - gamma) * s_t   # becomes s_{t+S}
+        sbuf = jax.lax.dynamic_update_slice(sbuf, s_next[:, None], (0, idx))
+        return (l_t, sbuf), (l_t, s_t, s_next)
+
+    init = (jnp.zeros((B,), y.dtype), s_init)
+    (_, _), (levels_t, seas_t, seas_next) = jax.lax.scan(
+        step, init, jnp.arange(C))
+    levels = jnp.transpose(levels_t)              # [B, C]
+    # seas[t] for t < C comes straight from the scan; the final S entries
+    # (t = C .. C+S-1) are the last S "next" values in time order.
+    seas_head = jnp.transpose(seas_t)             # [B, C]
+    tail_src = jnp.transpose(seas_next)           # [B, C]; entry t is s_{t+S}
+    seas_tail = tail_src[:, C - S:]               # s_C .. s_{C+S-1}
+    seas = jnp.concatenate([seas_head, seas_tail], axis=1)
+    return levels, seas
+
+
+def lstm_cell_ref(x, h, c, w, b):
+    """Single fused LSTM cell with forget-gate bias 1.0.
+
+    Args:
+      x: [B, Din] input;  h, c: [B, Dh] previous state.
+      w: [Din+Dh, 4*Dh] packed weights (gate order i, f, g, o).
+      b: [4*Dh] packed bias.
+
+    Returns: (h_new, c_new), each [B, Dh].
+    """
+    z = jnp.concatenate([x, h], axis=1) @ w + b[None, :]
+    i, f, g, o = jnp.split(z, 4, axis=1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def pinball_ref(yhat, target, mask, tau):
+    """Masked pinball (quantile) loss, paper §3.5.
+
+    Args:
+      yhat, target: [P, B, H] predictions / truths in normalized log space.
+      mask: [P, B] 1.0 where the (position, series) pair carries loss
+            (in-sample target fully observed AND series not padding).
+      tau: scalar quantile in (0, 1).
+
+    Returns: scalar mean loss over valid elements.
+    """
+    d = target - yhat
+    per_elem = jnp.maximum(tau * d, (tau - 1.0) * d)      # [P, B, H]
+    w = mask[:, :, None]
+    denom = jnp.maximum(jnp.sum(w) * yhat.shape[2], 1.0)
+    return jnp.sum(per_elem * w) / denom

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the dual-seasonality ES recurrence (§8.2)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def es_dual_ref(y, alpha, gamma1, gamma2, s1_init, s2_init):
+    """Reference for `es_dual` (see es_dual.py for the recurrence).
+
+    Args:
+      y: [B, C]; alpha, gamma1, gamma2: [B];
+      s1_init: [B, S1]; s2_init: [B, S2].
+
+    Returns: (levels [B, C], seas1 [B, C+S1], seas2 [B, C+S2]).
+    """
+    B, C = y.shape
+    S1 = s1_init.shape[1]
+    S2 = s2_init.shape[1]
+
+    def step(carry, t):
+        l_prev, b1, b2 = carry
+        i1 = jnp.mod(t, S1)
+        i2 = jnp.mod(t, S2)
+        s1_t = jax.lax.dynamic_slice(b1, (0, i1), (B, 1))[:, 0]
+        s2_t = jax.lax.dynamic_slice(b2, (0, i2), (B, 1))[:, 0]
+        y_t = jax.lax.dynamic_slice(y, (0, t), (B, 1))[:, 0]
+        denom = s1_t * s2_t
+        l_t = jnp.where(t == 0, y_t / denom,
+                        alpha * y_t / denom + (1.0 - alpha) * l_prev)
+        s1_n = gamma1 * y_t / (l_t * s2_t) + (1.0 - gamma1) * s1_t
+        s2_n = gamma2 * y_t / (l_t * s1_t) + (1.0 - gamma2) * s2_t
+        b1 = jax.lax.dynamic_update_slice(b1, s1_n[:, None], (0, i1))
+        b2 = jax.lax.dynamic_update_slice(b2, s2_n[:, None], (0, i2))
+        return (l_t, b1, b2), (l_t, s1_t, s2_t, s1_n, s2_n)
+
+    init = (jnp.zeros((B,), y.dtype), s1_init, s2_init)
+    (_, _, _), (lev, s1_t, s2_t, s1_n, s2_n) = jax.lax.scan(
+        step, init, jnp.arange(C))
+    levels = jnp.transpose(lev)
+    seas1 = jnp.concatenate(
+        [jnp.transpose(s1_t), jnp.transpose(s1_n)[:, C - S1:]], axis=1)
+    seas2 = jnp.concatenate(
+        [jnp.transpose(s2_t), jnp.transpose(s2_n)[:, C - S2:]], axis=1)
+    return levels, seas1, seas2

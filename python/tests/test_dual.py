@@ -1,0 +1,111 @@
+"""§8.2 dual-seasonality extension: kernel vs oracle, model integration."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+from compile.kernels import es_dual, es_dual_pallas, ref_dual
+
+settings.register_profile("dual", max_examples=15, deadline=None)
+settings.load_profile("dual")
+
+
+@given(st.data(), st.sampled_from([(2, 48, 4, 8), (4, 96, 24, 48),
+                                   (1, 30, 3, 5)]))
+def test_es_dual_matches_ref(data, shape):
+    b, c, s1, s2 = shape
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    y = jnp.array(rng.uniform(1.0, 200.0, (b, c)).astype(np.float32))
+    alpha = jnp.array(rng.uniform(0.05, 0.95, b).astype(np.float32))
+    g1 = jnp.array(rng.uniform(0.0, 0.6, b).astype(np.float32))
+    g2 = jnp.array(rng.uniform(0.0, 0.6, b).astype(np.float32))
+    s1i = jnp.array(rng.uniform(0.5, 1.5, (b, s1)).astype(np.float32))
+    s2i = jnp.array(rng.uniform(0.5, 1.5, (b, s2)).astype(np.float32))
+    lk, sk1, sk2 = es_dual(y, alpha, g1, g2, s1i, s2i)
+    lr, sr1, sr2 = ref_dual.es_dual_ref(y, alpha, g1, g2, s1i, s2i)
+    np.testing.assert_allclose(lk, lr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sk1, sr1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sk2, sr2, rtol=1e-5, atol=1e-5)
+
+
+def test_es_dual_shapes():
+    b, c, s1, s2 = 4, 40, 4, 10
+    out = es_dual_pallas(jnp.ones((b, c)), jnp.full((b,), 0.3),
+                         jnp.full((b,), 0.1), jnp.full((b,), 0.1),
+                         jnp.ones((b, s1)), jnp.ones((b, s2)))
+    assert out[0].shape == (b, c)
+    assert out[1].shape == (b, c + s1)
+    assert out[2].shape == (b, c + s2)
+
+
+def test_es_dual_degenerates_to_single_when_s2_is_ones():
+    """With s2 ≡ 1 and gamma2 = 0, dual must equal the single recurrence."""
+    from compile.kernels import ref
+    b, c, s1 = 3, 36, 4
+    rng = np.random.default_rng(0)
+    y = jnp.array(rng.uniform(1, 100, (b, c)).astype(np.float32))
+    alpha = jnp.full((b,), 0.4)
+    g1 = jnp.full((b,), 0.2)
+    s1i = jnp.array(rng.uniform(0.8, 1.2, (b, s1)).astype(np.float32))
+    ld, sd1, _ = ref_dual.es_dual_ref(y, alpha, g1, jnp.zeros((b,)),
+                                      s1i, jnp.ones((b, 2)))
+    ls, ss = ref.es_smoothing_ref(y, alpha, g1, s1i)
+    np.testing.assert_allclose(ld, ls, rtol=1e-5)
+    np.testing.assert_allclose(sd1, ss, rtol=1e-5)
+
+
+def test_es_dual_recovers_planted_dual_cycle():
+    """Filter a clean dual-seasonal series with the true inits: forecast
+    seasonality from both cycles should track the planted pattern."""
+    b, c, s1, s2 = 1, 168 * 2, 24, 168
+    t = np.arange(c)
+    p1 = 1.0 + 0.3 * np.sin(2 * np.pi * t / 24)
+    p2 = 1.0 + 0.15 * np.sin(2 * np.pi * t / 168)
+    y = jnp.array((100.0 * p1 * p2)[None, :].astype(np.float32))
+    s1i = jnp.array((1.0 + 0.3 * np.sin(2 * np.pi * np.arange(24) / 24))
+                    [None, :].astype(np.float32))
+    s2i = jnp.array((1.0 + 0.15 * np.sin(2 * np.pi * np.arange(168) / 168))
+                    [None, :].astype(np.float32))
+    lv, *_ = ref_dual.es_dual_ref(y, jnp.full((1,), 0.2), jnp.full((1,), 0.1),
+                                  jnp.full((1,), 0.05), s1i, s2i)
+    # level should be ~flat at 100 since both cycles are explained
+    assert float(jnp.std(lv)) / float(jnp.mean(lv)) < 0.03
+
+
+def test_hourly_model_trains_and_predicts():
+    cfg = configs.CONFIGS["hourly"]
+    assert cfg.dual and cfg.total_seasonality == 192
+    b = 4
+    rng = np.random.default_rng(1)
+    t = np.arange(cfg.length)
+    y = (100 * (1 + 0.2 * np.sin(2 * np.pi * t / 24))
+         * (1 + 0.1 * np.sin(2 * np.pi * t / 168)))
+    y = jnp.array((y[None] * rng.uniform(0.9, 1.1, (b, cfg.length)))
+                  .astype(np.float32))
+    cat = jax.nn.one_hot(jnp.arange(b) % 6, 6)
+    data = {"y": y, "cat": cat, "mask": jnp.ones((b,))}
+    params = {"rnn": model.init_rnn_params(jax.random.PRNGKey(0), cfg),
+              "series": model.init_per_series(b, cfg)}
+    assert "gamma2_logit" in params["series"]
+    opt = model.init_opt_state(params)
+    step = jax.jit(model.make_train_step(cfg, use_pallas=True))
+    losses = []
+    for _ in range(4):
+        loss, params, opt = step(data, params, opt, 1e-3)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    fc = jax.jit(model.make_predict(cfg))({"y": y, "cat": cat}, params)
+    assert fc.shape == (b, cfg.horizon)
+    assert bool(jnp.all(fc > 0)) and bool(jnp.all(jnp.isfinite(fc)))
+
+
+def test_penalized_variant_config():
+    pen = configs.CONFIGS["quarterly_pen"]
+    base = configs.CONFIGS["quarterly"]
+    assert pen.level_penalty > 0 and pen.cstate_penalty > 0
+    assert (pen.seasonality, pen.horizon, pen.hidden) == \
+        (base.seasonality, base.horizon, base.hidden)

@@ -1,0 +1,201 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; equality here is the foundation the
+whole AOT stack rests on (the kernels' custom_vjp backward differentiates
+the oracle, so forward equality ⇒ consistent gradients).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (es_smoothing, es_smoothing_pallas, lstm_cell,
+                             pinball_loss, pinball_sum_pallas, ref)
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rng_series(data, b, c, lo=0.5, hi=500.0):
+    return np.array(data.draw(
+        st.lists(st.lists(st.floats(lo, hi), min_size=c, max_size=c),
+                 min_size=b, max_size=b)), dtype=np.float32)
+
+
+# ---------------------------------------------------------------------
+# es_smoothing
+# ---------------------------------------------------------------------
+
+@given(st.data(),
+       st.sampled_from([(1, 8, 1), (2, 12, 4), (8, 24, 4), (16, 72, 12),
+                        (3, 30, 12), (8, 72, 4)]))
+def test_es_smoothing_matches_ref(data, shape):
+    b, c, s = shape
+    y = rng_series(data, b, c)
+    alpha = np.array(data.draw(st.lists(st.floats(0.01, 0.99), min_size=b,
+                                        max_size=b)), dtype=np.float32)
+    gamma = np.array(data.draw(st.lists(st.floats(0.0, 0.9), min_size=b,
+                                        max_size=b)), dtype=np.float32)
+    s_init = np.array(data.draw(
+        st.lists(st.lists(st.floats(0.3, 3.0), min_size=s, max_size=s),
+                 min_size=b, max_size=b)), dtype=np.float32)
+    l_k, s_k = es_smoothing(jnp.array(y), jnp.array(alpha), jnp.array(gamma),
+                            jnp.array(s_init))
+    l_r, s_r = ref.es_smoothing_ref(jnp.array(y), jnp.array(alpha),
+                                    jnp.array(gamma), jnp.array(s_init))
+    np.testing.assert_allclose(l_k, l_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-5, atol=1e-5)
+
+
+def test_es_smoothing_shapes():
+    b, c, s = 8, 24, 4
+    y = jnp.ones((b, c))
+    l, se = es_smoothing_pallas(y, jnp.full((b,), 0.3), jnp.full((b,), 0.1),
+                                jnp.ones((b, s)))
+    assert l.shape == (b, c)
+    assert se.shape == (b, c + s)
+
+
+def test_es_smoothing_constant_series_flat():
+    b, c = 4, 20
+    y = jnp.full((b, c), 7.0)
+    l, se = es_smoothing(y, jnp.full((b,), 0.4), jnp.full((b,), 0.2),
+                         jnp.ones((b, 1)))
+    np.testing.assert_allclose(l, 7.0, rtol=1e-5)
+    np.testing.assert_allclose(se, 1.0, rtol=1e-5)
+
+
+def test_es_smoothing_gamma_zero_keeps_seasonality():
+    b, c, s = 2, 16, 4
+    s_init = jnp.array([[0.8, 1.1, 1.2, 0.9]] * b)
+    y = jnp.ones((b, c)) * 10.0
+    _, se = es_smoothing(y, jnp.full((b,), 0.5), jnp.zeros((b,)), s_init)
+    # With gamma = 0, every seasonal cycle repeats s_init exactly.
+    for k in range(c // s):
+        np.testing.assert_allclose(se[:, k * s:(k + 1) * s], s_init,
+                                   rtol=1e-6)
+
+
+@given(st.data())
+def test_es_smoothing_grads_match_ref(data):
+    b, c, s = 4, 16, 4
+    y = jnp.array(rng_series(data, b, c))
+    alpha = jnp.full((b,), 0.35)
+    gamma = jnp.full((b,), 0.15)
+    s_init = jnp.ones((b, s))
+
+    def loss_k(a, g, si):
+        l, se = es_smoothing(y, a, g, si)
+        return jnp.sum(l) + jnp.sum(se * se)
+
+    def loss_r(a, g, si):
+        l, se = ref.es_smoothing_ref(y, a, g, si)
+        return jnp.sum(l) + jnp.sum(se * se)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(alpha, gamma, s_init)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(alpha, gamma, s_init)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------
+
+@given(st.data(), st.sampled_from([(1, 5, 8), (16, 18, 50), (4, 14, 40),
+                                   (8, 10, 30)]))
+def test_lstm_cell_matches_ref(data, shape):
+    b, din, dh = shape
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2**31)))
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    x = jax.random.normal(k1, (b, din))
+    h = jax.random.normal(k2, (b, dh))
+    c = jax.random.normal(k3, (b, dh))
+    w = jax.random.normal(k4, (din + dh, 4 * dh)) * 0.2
+    bias = jax.random.normal(k5, (4 * dh,)) * 0.1
+    hk, ck = lstm_cell(x, h, c, w, bias)
+    hr, cr = ref.lstm_cell_ref(x, h, c, w, bias)
+    np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ck, cr, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_gates_bounded():
+    b, din, dh = 8, 6, 12
+    x = jnp.ones((b, din)) * 100.0  # saturate
+    h = jnp.zeros((b, dh))
+    c = jnp.zeros((b, dh))
+    w = jnp.ones((din + dh, 4 * dh)) * 0.5
+    bias = jnp.zeros((4 * dh,))
+    hk, ck = lstm_cell(x, h, c, w, bias)
+    assert bool(jnp.all(jnp.abs(hk) <= 1.0 + 1e-6))  # |tanh| * sigmoid ≤ 1
+    assert bool(jnp.all(jnp.abs(ck) <= 1.0 + 1e-5))  # from zero state
+
+
+@given(st.data())
+def test_lstm_cell_grads_match_ref(data):
+    b, din, dh = 4, 6, 10
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2**31)))
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, din))
+    h = jax.random.normal(ks[1], (b, dh))
+    c = jax.random.normal(ks[2], (b, dh))
+    w = jax.random.normal(ks[3], (din + dh, 4 * dh)) * 0.2
+    bias = jax.random.normal(ks[4], (4 * dh,)) * 0.1
+
+    def lk(w, bias):
+        hh, cc = lstm_cell(x, h, c, w, bias)
+        return jnp.sum(hh * hh) + jnp.sum(cc)
+
+    def lr(w, bias):
+        hh, cc = ref.lstm_cell_ref(x, h, c, w, bias)
+        return jnp.sum(hh * hh) + jnp.sum(cc)
+
+    gk = jax.grad(lk, argnums=(0, 1))(w, bias)
+    gr = jax.grad(lr, argnums=(0, 1))(w, bias)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# pinball
+# ---------------------------------------------------------------------
+
+@given(st.data(), st.sampled_from([(5, 4, 6), (43, 16, 18), (1, 1, 1),
+                                   (57, 8, 8)]))
+def test_pinball_matches_ref(data, shape):
+    p, b, h = shape
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2**31)))
+    k1, k2, k3 = jax.random.split(key, 3)
+    yhat = jax.random.normal(k1, (p, b, h))
+    tgt = jax.random.normal(k2, (p, b, h))
+    mask = (jax.random.uniform(k3, (p, b)) > 0.3).astype(jnp.float32)
+    tau = data.draw(st.sampled_from([0.2, 0.48, 0.5, 0.8]))
+    lk = pinball_loss(yhat, tgt, mask, tau)
+    lr = ref.pinball_ref(yhat, tgt, mask, tau)
+    np.testing.assert_allclose(lk, lr, rtol=1e-5, atol=1e-7)
+
+
+def test_pinball_all_masked_is_zero():
+    yhat = jnp.ones((3, 2, 4))
+    tgt = jnp.zeros((3, 2, 4))
+    mask = jnp.zeros((3, 2))
+    assert float(pinball_loss(yhat, tgt, mask, 0.48)) == 0.0
+
+
+def test_pinball_sum_kernel_scalar_shape():
+    yhat = jnp.zeros((2, 2, 2))
+    out = pinball_sum_pallas(yhat, yhat, jnp.ones((2, 2)), 0.48)
+    assert out.shape == (1, 1)
+
+
+def test_pinball_masked_entries_do_not_contribute():
+    yhat = jnp.zeros((2, 2, 1))
+    tgt = jnp.ones((2, 2, 1)) * 100.0
+    # mask off the second position entirely
+    m1 = jnp.array([[1.0, 1.0], [0.0, 0.0]])
+    tgt2 = tgt.at[1].set(-999.0)  # garbage in masked region
+    l1 = pinball_loss(yhat, tgt, m1, 0.48)
+    l2 = pinball_loss(yhat, tgt2, m1, 0.48)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)

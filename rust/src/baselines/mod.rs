@@ -1,0 +1,356 @@
+//! Classical forecasting baselines.
+//!
+//! Table 4 compares ES-RNN against the M4 benchmark **Comb** — the simple
+//! average of Simple, Holt and Damped exponential smoothing (Makridakis et
+//! al. 2018). We implement those three exactly, plus Naive, Seasonal Naive,
+//! full Holt-Winters and Theta as additional reference points. All methods
+//! operate on a seasonally-adjusted series when the frequency is seasonal
+//! (the M4 benchmark convention: classical decomposition → forecast →
+//! re-seasonalize).
+
+use crate::hw::seasonal_indices;
+
+mod theta;
+pub use theta::Theta;
+
+/// A point-forecast method: history → H-step forecast.
+pub trait Forecaster {
+    fn name(&self) -> &'static str;
+    /// `y` is strictly positive history; returns `horizon` forecasts.
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32>;
+}
+
+// ---------------------------------------------------------------------
+// Seasonal adjustment shared by the ES-family baselines (M4 convention).
+// ---------------------------------------------------------------------
+
+/// Deseasonalize; returns (adjusted series, indices).
+fn deseasonalize(y: &[f32], period: usize) -> (Vec<f32>, Vec<f32>) {
+    if period <= 1 {
+        return (y.to_vec(), vec![1.0]);
+    }
+    let idx = seasonal_indices(y, period);
+    let adj: Vec<f32> = y
+        .iter()
+        .enumerate()
+        .map(|(t, v)| v / idx[t % period].max(1e-6))
+        .collect();
+    (adj, idx)
+}
+
+/// Re-seasonalize an H-step forecast started at position `n`.
+fn reseasonalize(fc: &mut [f32], idx: &[f32], n: usize, period: usize) {
+    if period <= 1 {
+        return;
+    }
+    for (h, v) in fc.iter_mut().enumerate() {
+        *v *= idx[(n + h) % period];
+    }
+}
+
+// ---------------------------------------------------------------------
+// Core exponential-smoothing fits (SSE-grid-optimized like the M4 code).
+// ---------------------------------------------------------------------
+
+/// Simple exponential smoothing with fixed alpha; returns (fitted level,
+/// one-step SSE).
+fn ses_sse(y: &[f32], alpha: f32) -> (f32, f64) {
+    let mut l = y[0];
+    let mut sse = 0.0f64;
+    for &v in &y[1..] {
+        sse += ((v - l) as f64).powi(2);
+        l = alpha * v + (1.0 - alpha) * l;
+    }
+    (l, sse)
+}
+
+/// Grid-search alpha for SES (the M4 benchmark optimizes smoothing
+/// parameters; a fine grid is equivalent for our purposes).
+fn fit_ses(y: &[f32]) -> (f32, f32) {
+    let mut best = (0.1f32, f64::INFINITY, y[0]);
+    for i in 1..=99 {
+        let a = i as f32 / 100.0;
+        let (l, sse) = ses_sse(y, a);
+        if sse < best.1 {
+            best = (a, sse, l);
+        }
+    }
+    (best.0, best.2)
+}
+
+/// Holt's linear trend (optionally damped by phi); returns (level, trend,
+/// SSE) for given (alpha, beta).
+fn holt_sse(y: &[f32], alpha: f32, beta: f32, phi: f32) -> (f32, f32, f64) {
+    let mut l = y[0];
+    let mut b = if y.len() > 1 { y[1] - y[0] } else { 0.0 };
+    let mut sse = 0.0f64;
+    for &v in &y[1..] {
+        let pred = l + phi * b;
+        sse += ((v - pred) as f64).powi(2);
+        let l_new = alpha * v + (1.0 - alpha) * pred;
+        b = beta * (l_new - l) + (1.0 - beta) * phi * b;
+        l = l_new;
+    }
+    (l, b, sse)
+}
+
+/// Coarse grid fit for Holt / Damped-Holt.
+fn fit_holt(y: &[f32], phi: f32) -> (f32, f32, f32, f32) {
+    let mut best = (0.2f32, 0.05f32, f64::INFINITY, (y[0], 0.0f32));
+    for ai in 1..=19 {
+        let a = ai as f32 * 0.05;
+        for bi in 0..=10 {
+            let b = bi as f32 * 0.05;
+            let (l, tr, sse) = holt_sse(y, a, b, phi);
+            if sse < best.2 {
+                best = (a, b, sse, (l, tr));
+            }
+        }
+    }
+    (best.0, best.1, best.3 .0, best.3 .1)
+}
+
+// ---------------------------------------------------------------------
+// Public methods
+// ---------------------------------------------------------------------
+
+/// Repeat the last observation.
+pub struct Naive;
+
+impl Forecaster for Naive {
+    fn name(&self) -> &'static str {
+        "Naive"
+    }
+
+    fn forecast(&self, y: &[f32], _period: usize, horizon: usize) -> Vec<f32> {
+        vec![*y.last().unwrap(); horizon]
+    }
+}
+
+/// Repeat the last seasonal cycle (M4's Naive2 on raw data).
+pub struct SeasonalNaive;
+
+impl Forecaster for SeasonalNaive {
+    fn name(&self) -> &'static str {
+        "SeasonalNaive"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        let p = period.max(1).min(y.len());
+        (0..horizon).map(|h| y[y.len() - p + (h % p)]).collect()
+    }
+}
+
+/// Simple exponential smoothing on the seasonally-adjusted series.
+pub struct Ses;
+
+impl Forecaster for Ses {
+    fn name(&self) -> &'static str {
+        "SES"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        let (adj, idx) = deseasonalize(y, period);
+        let (_, l) = fit_ses(&adj);
+        let mut fc = vec![l; horizon];
+        reseasonalize(&mut fc, &idx, y.len(), period);
+        fc
+    }
+}
+
+/// Holt's linear trend on the adjusted series.
+pub struct Holt;
+
+impl Forecaster for Holt {
+    fn name(&self) -> &'static str {
+        "Holt"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        let (adj, idx) = deseasonalize(y, period);
+        let (_, _, l, b) = fit_holt(&adj, 1.0);
+        let mut fc: Vec<f32> =
+            (1..=horizon).map(|h| l + h as f32 * b).collect();
+        reseasonalize(&mut fc, &idx, y.len(), period);
+        fc
+    }
+}
+
+/// Damped-trend Holt (phi = 0.9, the Comb convention).
+pub struct DampedHolt;
+
+impl Forecaster for DampedHolt {
+    fn name(&self) -> &'static str {
+        "Damped"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        const PHI: f32 = 0.9;
+        let (adj, idx) = deseasonalize(y, period);
+        let (_, _, l, b) = fit_holt(&adj, PHI);
+        let mut fc = Vec::with_capacity(horizon);
+        let mut damp = 0.0f32;
+        for h in 1..=horizon {
+            damp += PHI.powi(h as i32);
+            fc.push(l + damp * b);
+        }
+        reseasonalize(&mut fc, &idx, y.len(), period);
+        fc
+    }
+}
+
+/// The M4 benchmark: average of SES, Holt and Damped (paper §6 "Comb").
+pub struct Comb;
+
+impl Forecaster for Comb {
+    fn name(&self) -> &'static str {
+        "Comb"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        let a = Ses.forecast(y, period, horizon);
+        let b = Holt.forecast(y, period, horizon);
+        let c = DampedHolt.forecast(y, period, horizon);
+        (0..horizon)
+            .map(|h| (a[h] + b[h] + c[h]) / 3.0)
+            .collect()
+    }
+}
+
+/// Full multiplicative Holt-Winters (level + trend + seasonality) — the
+/// textbook Eqs. 1–4 with a fixed small parameter set.
+pub struct HoltWinters;
+
+impl Forecaster for HoltWinters {
+    fn name(&self) -> &'static str {
+        "HoltWinters"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        let p = period.max(1);
+        if p == 1 || y.len() < 2 * p {
+            return DampedHolt.forecast(y, 1, horizon);
+        }
+        let (alpha, beta, gamma) = (0.3f32, 0.05f32, 0.2f32);
+        let mut s: Vec<f32> = seasonal_indices(y, p);
+        let mut l = y[..p].iter().sum::<f32>() / p as f32;
+        let mut b = (y[p..2 * p].iter().sum::<f32>()
+                     - y[..p].iter().sum::<f32>())
+            / (p * p) as f32;
+        for (t, &v) in y.iter().enumerate() {
+            let s_t = s[t % p];
+            let l_new = alpha * v / s_t.max(1e-6) + (1.0 - alpha) * (l + b);
+            b = beta * (l_new - l) + (1.0 - beta) * b;
+            s[t % p] = gamma * v / l_new.max(1e-6) + (1.0 - gamma) * s_t;
+            l = l_new;
+        }
+        (1..=horizon)
+            .map(|h| (l + h as f32 * b) * s[(y.len() + h - 1) % p])
+            .collect()
+    }
+}
+
+/// All baselines in display order.
+pub fn all_baselines() -> Vec<Box<dyn Forecaster>> {
+    vec![
+        Box::new(Naive),
+        Box::new(SeasonalNaive),
+        Box::new(Ses),
+        Box::new(Holt),
+        Box::new(DampedHolt),
+        Box::new(Comb),
+        Box::new(HoltWinters),
+        Box::new(theta::Theta),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seasonal_series(n: usize) -> Vec<f32> {
+        let s = [0.8f32, 1.1, 1.25, 0.85];
+        (0..n).map(|t| (100.0 + t as f32) * s[t % 4]).collect()
+    }
+
+    #[test]
+    fn naive_repeats_last() {
+        let fc = Naive.forecast(&[1.0, 2.0, 7.0], 1, 3);
+        assert_eq!(fc, vec![7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn seasonal_naive_repeats_cycle() {
+        let y = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let fc = SeasonalNaive.forecast(&y, 4, 6);
+        assert_eq!(fc, vec![10.0, 20.0, 30.0, 40.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn ses_constant_series_exact() {
+        let fc = Ses.forecast(&vec![5.0; 30], 1, 4);
+        for v in fc {
+            assert!((v - 5.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn holt_extrapolates_linear_trend() {
+        let y: Vec<f32> = (0..40).map(|t| 10.0 + 2.0 * t as f32).collect();
+        let fc = Holt.forecast(&y, 1, 4);
+        for (h, v) in fc.iter().enumerate() {
+            let expect = 10.0 + 2.0 * (39 + h + 1) as f32;
+            assert!((v - expect).abs() < 0.5, "h={h}: {v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn damped_growth_slower_than_holt() {
+        let y: Vec<f32> = (0..40).map(|t| 10.0 + 2.0 * t as f32).collect();
+        let h = Holt.forecast(&y, 1, 8);
+        let d = DampedHolt.forecast(&y, 1, 8);
+        assert!(d[7] < h[7], "damped {} should trail holt {}", d[7], h[7]);
+        assert!(d[7] > *y.last().unwrap(), "damped still grows");
+    }
+
+    #[test]
+    fn comb_is_mean_of_components() {
+        let y = seasonal_series(60);
+        let comb = Comb.forecast(&y, 4, 4);
+        let s = Ses.forecast(&y, 4, 4);
+        let h = Holt.forecast(&y, 4, 4);
+        let d = DampedHolt.forecast(&y, 4, 4);
+        for i in 0..4 {
+            assert!((comb[i] - (s[i] + h[i] + d[i]) / 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn seasonal_methods_capture_seasonality() {
+        let y = seasonal_series(80);
+        for m in [&Comb as &dyn Forecaster, &HoltWinters, &Ses] {
+            let fc = m.forecast(&y, 4, 4);
+            // Forecast phase pattern should match planted indices:
+            // position 80 is phase 0 (0.8), 82 is phase 2 (1.25).
+            assert!(fc[2] > fc[0],
+                    "{}: expected phase-2 > phase-0, got {fc:?}", m.name());
+        }
+    }
+
+    #[test]
+    fn forecasts_are_finite_positive_on_generated_corpus() {
+        use crate::data::{generate, GenOptions};
+        let corpus = generate(&GenOptions { scale: 2000, ..Default::default() });
+        for s in &corpus.series {
+            if s.len() < 10 {
+                continue;
+            }
+            for m in all_baselines() {
+                let fc = m.forecast(&s.values, s.freq.seasonality().min(s.len() / 2),
+                                    s.freq.horizon());
+                assert!(fc.iter().all(|v| v.is_finite()),
+                        "{} produced non-finite on {}", m.name(), s.id);
+            }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Theta method (Assimakopoulos & Nikolopoulos 2000) — the M4 reference
+//! statistical method (it won M3; Hyndman's meta-learner ensembles it).
+//!
+//! Standard two-line formulation: the theta=0 line is the linear
+//! regression on time (pure trend), the theta=2 line is `2y - line0`,
+//! forecast = average of (extrapolated line0, SES forecast of line2),
+//! applied to the seasonally-adjusted series.
+
+use super::{Forecaster};
+use crate::hw::seasonal_indices;
+
+/// Least-squares line a + b*t over the series.
+fn linfit(y: &[f32]) -> (f64, f64) {
+    let n = y.len() as f64;
+    let sum_t = (0..y.len()).sum::<usize>() as f64;
+    let sum_y: f64 = y.iter().map(|v| *v as f64).sum();
+    let sum_tt: f64 = (0..y.len()).map(|t| (t * t) as f64).sum();
+    let sum_ty: f64 = y.iter().enumerate().map(|(t, v)| t as f64 * *v as f64).sum();
+    let denom = n * sum_tt - sum_t * sum_t;
+    if denom.abs() < 1e-12 {
+        return (sum_y / n, 0.0);
+    }
+    let b = (n * sum_ty - sum_t * sum_y) / denom;
+    let a = (sum_y - b * sum_t) / n;
+    (a, b)
+}
+
+/// SES with grid-fit alpha; returns final level.
+fn ses_level(y: &[f32]) -> f32 {
+    let mut best = (f64::INFINITY, y[0]);
+    for i in 1..=99 {
+        let alpha = i as f32 / 100.0;
+        let mut l = y[0];
+        let mut sse = 0.0f64;
+        for &v in &y[1..] {
+            sse += ((v - l) as f64).powi(2);
+            l = alpha * v + (1.0 - alpha) * l;
+        }
+        if sse < best.0 {
+            best = (sse, l);
+        }
+    }
+    best.1
+}
+
+pub struct Theta;
+
+impl Forecaster for Theta {
+    fn name(&self) -> &'static str {
+        "Theta"
+    }
+
+    fn forecast(&self, y: &[f32], period: usize, horizon: usize) -> Vec<f32> {
+        // Seasonal adjustment (multiplicative, M4 convention).
+        let p = period.max(1);
+        let (adj, idx): (Vec<f32>, Vec<f32>) = if p > 1 {
+            let idx = seasonal_indices(y, p);
+            (
+                y.iter()
+                    .enumerate()
+                    .map(|(t, v)| v / idx[t % p].max(1e-6))
+                    .collect(),
+                idx,
+            )
+        } else {
+            (y.to_vec(), vec![1.0])
+        };
+
+        let n = adj.len();
+        let (a, b) = linfit(&adj);
+        // theta = 2 line: 2*y - line0.
+        let line2: Vec<f32> = adj
+            .iter()
+            .enumerate()
+            .map(|(t, v)| 2.0 * v - (a + b * t as f64) as f32)
+            .collect();
+        let l2 = ses_level(&line2);
+
+        (0..horizon)
+            .map(|h| {
+                let t = (n + h) as f64;
+                let line0 = (a + b * t) as f32;
+                let f = 0.5 * (line0 + l2);
+                if p > 1 {
+                    f * idx[(n + h) % p]
+                } else {
+                    f
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linfit_recovers_line() {
+        let y: Vec<f32> = (0..30).map(|t| 3.0 + 0.5 * t as f32).collect();
+        let (a, b) = linfit(&y);
+        assert!((a - 3.0).abs() < 1e-6);
+        assert!((b - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn theta_on_linear_trend_tracks_it() {
+        let y: Vec<f32> = (0..40).map(|t| 10.0 + 2.0 * t as f32).collect();
+        let fc = Theta.forecast(&y, 1, 4);
+        // Theta halves the trend slope relative to pure extrapolation
+        // (line0 grows, SES line flat) — forecasts must keep rising but
+        // stay between last value and full extrapolation.
+        let last = *y.last().unwrap();
+        for (h, v) in fc.iter().enumerate() {
+            let full = 10.0 + 2.0 * (40 + h) as f32;
+            assert!(*v > last - 1.0 && *v <= full + 1e-3,
+                    "h={h}: {v} not in ({last}, {full}]");
+        }
+        assert!(fc[3] > fc[0]);
+    }
+
+    #[test]
+    fn theta_seasonal_phase_preserved() {
+        let s = [0.7f32, 1.3];
+        let y: Vec<f32> = (0..60).map(|t| (50.0 + t as f32) * s[t % 2]).collect();
+        let fc = Theta.forecast(&y, 2, 4);
+        assert!(fc[1] > fc[0], "phase 1 should exceed phase 0: {fc:?}");
+        assert!(fc[3] > fc[2]);
+    }
+}

@@ -1,0 +1,365 @@
+//! Configuration: frequencies, network shapes (paper Table 1), training
+//! hyper-parameters.
+//!
+//! The *compile-time* shapes (seasonality, horizon, window, length, hidden,
+//! dilations) are authoritative in `python/compile/configs.py` and travel to
+//! Rust via the artifact manifest; this module mirrors them for components
+//! that run before/without an engine (data pipeline, baselines) and asserts
+//! the mirror matches the manifest at engine start-up.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::FreqManifest;
+
+/// Series sampling frequency. Yearly/Quarterly/Monthly have full model
+/// support (the paper's scope); Weekly/Daily/Hourly exist for the data
+/// pipeline and classical baselines (paper §8.5 future work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Frequency {
+    Yearly,
+    Quarterly,
+    Monthly,
+    Weekly,
+    Daily,
+    Hourly,
+}
+
+pub const MODELED_FREQS: [Frequency; 3] =
+    [Frequency::Yearly, Frequency::Quarterly, Frequency::Monthly];
+
+pub const ALL_FREQS: [Frequency; 6] = [
+    Frequency::Yearly, Frequency::Quarterly, Frequency::Monthly,
+    Frequency::Weekly, Frequency::Daily, Frequency::Hourly,
+];
+
+impl Frequency {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frequency::Yearly => "yearly",
+            Frequency::Quarterly => "quarterly",
+            Frequency::Monthly => "monthly",
+            Frequency::Weekly => "weekly",
+            Frequency::Daily => "daily",
+            Frequency::Hourly => "hourly",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "yearly" => Frequency::Yearly,
+            "quarterly" => Frequency::Quarterly,
+            "monthly" => Frequency::Monthly,
+            "weekly" => Frequency::Weekly,
+            "daily" => Frequency::Daily,
+            "hourly" => Frequency::Hourly,
+            other => bail!("unknown frequency `{other}`"),
+        })
+    }
+
+    /// Natural seasonal period (M4 convention).
+    pub fn seasonality(&self) -> usize {
+        match self {
+            Frequency::Yearly => 1,
+            Frequency::Quarterly => 4,
+            Frequency::Monthly => 12,
+            Frequency::Weekly => 52,
+            Frequency::Daily => 7,
+            Frequency::Hourly => 24,
+        }
+    }
+
+    /// M4 forecast horizon.
+    pub fn horizon(&self) -> usize {
+        match self {
+            Frequency::Yearly => 6,
+            Frequency::Quarterly => 8,
+            Frequency::Monthly => 18,
+            Frequency::Weekly => 13,
+            Frequency::Daily => 14,
+            Frequency::Hourly => 48,
+        }
+    }
+
+    /// Whether ES-RNN artifacts exist for this frequency. The paper's
+    /// core scope is Y/Q/M; Daily (§8.5) and Hourly (§8.2) are built as
+    /// extensions. Weekly remains future work.
+    pub fn is_modeled(&self) -> bool {
+        !matches!(self, Frequency::Weekly)
+    }
+}
+
+/// M4 sampling category (Table 2 columns). The one-hot of this value is
+/// concatenated to every RNN input window (paper §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    Demographic,
+    Finance,
+    Industry,
+    Macro,
+    Micro,
+    Other,
+}
+
+pub const ALL_CATEGORIES: [Category; 6] = [
+    Category::Demographic, Category::Finance, Category::Industry,
+    Category::Macro, Category::Micro, Category::Other,
+];
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Demographic => "Demographic",
+            Category::Finance => "Finance",
+            Category::Industry => "Industry",
+            Category::Macro => "Macro",
+            Category::Micro => "Micro",
+            Category::Other => "Other",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        ALL_CATEGORIES.iter().position(|c| c == self).unwrap()
+    }
+
+    pub fn from_index(i: usize) -> Result<Self> {
+        ALL_CATEGORIES
+            .get(i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("category index {i} out of range"))
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        ALL_CATEGORIES
+            .iter()
+            .find(|c| c.name().eq_ignore_ascii_case(s))
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown category `{s}`"))
+    }
+}
+
+/// Mirror of Table 1 + §5.2: the network/equalization shape per frequency.
+/// Must agree with `python/compile/configs.py` (checked by
+/// [`NetworkConfig::check_manifest`] at startup and by unit tests).
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    pub freq: Frequency,
+    pub seasonality: usize,
+    /// §8.2 second multiplicative seasonality (0 = single).
+    pub seasonality2: usize,
+    pub horizon: usize,
+    pub input_window: usize,
+    pub length: usize,
+    pub hidden: usize,
+    pub dilations: Vec<Vec<usize>>,
+}
+
+impl NetworkConfig {
+    pub fn for_freq(freq: Frequency) -> Result<Self> {
+        let cfg = match freq {
+            Frequency::Yearly => Self {
+                freq, seasonality: 1, seasonality2: 0, horizon: 6,
+                input_window: 4, length: 24, hidden: 30,
+                dilations: vec![vec![1, 2], vec![2, 6]],
+            },
+            Frequency::Quarterly => Self {
+                freq, seasonality: 4, seasonality2: 0, horizon: 8,
+                input_window: 8, length: 72, hidden: 40,
+                dilations: vec![vec![1, 2], vec![4, 8]],
+            },
+            Frequency::Monthly => Self {
+                freq, seasonality: 12, seasonality2: 0, horizon: 18,
+                input_window: 12, length: 72, hidden: 50,
+                dilations: vec![vec![1, 3], vec![6, 12]],
+            },
+            // §8.5: daily shares the quarterly/monthly structure.
+            Frequency::Daily => Self {
+                freq, seasonality: 7, seasonality2: 0, horizon: 14,
+                input_window: 14, length: 140, hidden: 40,
+                dilations: vec![vec![1, 2], vec![4, 8]],
+            },
+            // §8.2: hourly with dual 24h/168h seasonality.
+            Frequency::Hourly => Self {
+                freq, seasonality: 24, seasonality2: 168, horizon: 48,
+                input_window: 24, length: 336, hidden: 40,
+                dilations: vec![vec![1, 4], vec![24, 48]],
+            },
+            other => bail!("no ES-RNN network config for {other:?} \
+                            (weekly is §8.5 future work)"),
+        };
+        Ok(cfg)
+    }
+
+    /// Number of RNN window positions (the last is forecast-only).
+    pub fn positions(&self) -> usize {
+        self.length - self.input_window + 1
+    }
+
+    /// Positions with a full in-sample target (loss-bearing).
+    pub fn valid_positions(&self) -> usize {
+        self.length - self.input_window - self.horizon + 1
+    }
+
+    /// Minimum raw series length usable for training: equalized length
+    /// plus validation and test holdouts (paper Eq. 8).
+    pub fn min_series_length(&self) -> usize {
+        self.length + 2 * self.horizon
+    }
+
+    /// Per-series Holt-Winters parameter count: the paper's `2 + S`
+    /// (alpha, gamma, S initial seasonality values); dual-seasonality
+    /// configs add gamma2 and the second period's initial values.
+    pub fn per_series_param_count(&self) -> usize {
+        if self.seasonality2 > 0 {
+            3 + self.seasonality + self.seasonality2
+        } else {
+            2 + self.seasonality
+        }
+    }
+
+    /// Width of the per-series seasonality parameter block.
+    pub fn total_seasonality(&self) -> usize {
+        self.seasonality + self.seasonality2
+    }
+
+    /// §8.2 dual-seasonality mode.
+    pub fn dual(&self) -> bool {
+        self.seasonality2 > 0
+    }
+
+    /// Assert this mirror matches what the artifacts were compiled with.
+    pub fn check_manifest(&self, m: &FreqManifest) -> Result<()> {
+        let ok = self.seasonality == m.seasonality
+            && self.seasonality2 == m.seasonality2
+            && self.horizon == m.horizon
+            && self.input_window == m.input_window
+            && self.length == m.length
+            && self.hidden == m.hidden
+            && self.dilations == m.dilations;
+        if !ok {
+            bail!("NetworkConfig for {:?} disagrees with artifact manifest: \
+                   rust={self:?} manifest={m:?} — re-run `make artifacts` or \
+                   update config/mod.rs to match configs.py", self.freq);
+        }
+        Ok(())
+    }
+}
+
+/// Training-loop hyper-parameters (owned by Rust; not baked in artifacts).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest model key override (e.g. "quarterly_pen" for the §8.4
+    /// penalties ablation); None = the frequency's own name.
+    pub model_key: Option<String>,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub learning_rate: f32,
+    /// Multiply the LR by this at each epoch in `lr_drop_epochs`.
+    pub lr_decay: f32,
+    pub lr_drop_epochs: Vec<usize>,
+    /// Stop early after this many epochs without val-sMAPE improvement.
+    pub patience: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model_key: None,
+            epochs: 15, // the paper reports run-times for 15 epochs
+            batch_size: 64,
+            learning_rate: 1e-3,
+            lr_decay: 0.5,
+            lr_drop_epochs: vec![7, 12],
+            patience: 5,
+            seed: 42,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 1: dilations and LSTM sizes.
+    #[test]
+    fn table1_network_parameters() {
+        let m = NetworkConfig::for_freq(Frequency::Monthly).unwrap();
+        assert_eq!(m.dilations, vec![vec![1, 3], vec![6, 12]]);
+        assert_eq!(m.hidden, 50);
+        let q = NetworkConfig::for_freq(Frequency::Quarterly).unwrap();
+        assert_eq!(q.dilations, vec![vec![1, 2], vec![4, 8]]);
+        assert_eq!(q.hidden, 40);
+        let y = NetworkConfig::for_freq(Frequency::Yearly).unwrap();
+        assert_eq!(y.dilations, vec![vec![1, 2], vec![2, 6]]);
+        assert_eq!(y.hidden, 30);
+    }
+
+    /// Paper §5.2: C = 72 for quarterly and monthly.
+    #[test]
+    fn series_length_equalization_thresholds() {
+        assert_eq!(NetworkConfig::for_freq(Frequency::Quarterly).unwrap().length, 72);
+        assert_eq!(NetworkConfig::for_freq(Frequency::Monthly).unwrap().length, 72);
+    }
+
+    /// Paper §3.3: N series store N * (2 + S) Holt-Winters parameters.
+    #[test]
+    fn per_series_param_counts() {
+        assert_eq!(NetworkConfig::for_freq(Frequency::Monthly).unwrap()
+                   .per_series_param_count(), 14);
+        assert_eq!(NetworkConfig::for_freq(Frequency::Quarterly).unwrap()
+                   .per_series_param_count(), 6);
+        assert_eq!(NetworkConfig::for_freq(Frequency::Yearly).unwrap()
+                   .per_series_param_count(), 3);
+    }
+
+    #[test]
+    fn m4_horizons_and_seasonality() {
+        assert_eq!(Frequency::Yearly.horizon(), 6);
+        assert_eq!(Frequency::Quarterly.horizon(), 8);
+        assert_eq!(Frequency::Monthly.horizon(), 18);
+        assert_eq!(Frequency::Monthly.seasonality(), 12);
+        assert_eq!(Frequency::Hourly.seasonality(), 24);
+    }
+
+    #[test]
+    fn unmodeled_freqs_have_no_network() {
+        assert!(NetworkConfig::for_freq(Frequency::Weekly).is_err());
+        assert!(!Frequency::Weekly.is_modeled());
+    }
+
+    /// §8.2: hourly dual-seasonality shape.
+    #[test]
+    fn hourly_dual_seasonality_config() {
+        let h = NetworkConfig::for_freq(Frequency::Hourly).unwrap();
+        assert_eq!((h.seasonality, h.seasonality2), (24, 168));
+        assert!(h.dual());
+        assert_eq!(h.total_seasonality(), 192);
+        // alpha + gamma1 + gamma2 + 24 + 168 initial values
+        assert_eq!(h.per_series_param_count(), 195);
+        let d = NetworkConfig::for_freq(Frequency::Daily).unwrap();
+        assert!(!d.dual());
+        assert_eq!(d.per_series_param_count(), 9);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in ALL_FREQS {
+            assert_eq!(Frequency::parse(f.name()).unwrap(), f);
+        }
+        for c in ALL_CATEGORIES {
+            assert_eq!(Category::parse(c.name()).unwrap(), c);
+            assert_eq!(Category::from_index(c.index()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn positions_match_python() {
+        // Mirrors configs.py properties: P = C - in + 1.
+        let m = NetworkConfig::for_freq(Frequency::Monthly).unwrap();
+        assert_eq!(m.positions(), 61);
+        assert_eq!(m.valid_positions(), 43);
+        let y = NetworkConfig::for_freq(Frequency::Yearly).unwrap();
+        assert_eq!(y.positions(), 21);
+        assert_eq!(y.valid_positions(), 15);
+    }
+}

@@ -1,0 +1,181 @@
+//! Batch scheduler: shuffled fixed-size batches over the series pool.
+//!
+//! Artifact shapes are static, so every batch must be exactly `batch_size`
+//! wide; the final partial batch is padded by repeating earlier indices
+//! with `valid = false`, which zeroes their loss contribution in-graph
+//! (via `data.mask`) and suppresses their scatter on the way out.
+
+use crate::util::rng::Rng;
+
+/// One scheduled batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// Series indices, length = batch_size (may repeat for padding).
+    pub indices: Vec<usize>,
+    /// valid[i] == false marks a padded slot.
+    pub valid: Vec<bool>,
+}
+
+impl Batch {
+    pub fn mask_f32(&self) -> Vec<f32> {
+        self.valid.iter().map(|&v| if v { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn real_count(&self) -> usize {
+        self.valid.iter().filter(|v| **v).count()
+    }
+}
+
+/// Epoch-oriented scheduler.
+#[derive(Debug)]
+pub struct Batcher {
+    n: usize,
+    batch_size: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch_size: usize, seed: u64) -> Self {
+        assert!(n > 0 && batch_size > 0);
+        Self { n, batch_size, rng: Rng::new(seed) }
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n.div_ceil(self.batch_size)
+    }
+
+    /// Produce one shuffled epoch of batches.
+    pub fn epoch(&mut self) -> Vec<Batch> {
+        let mut order: Vec<usize> = (0..self.n).collect();
+        self.rng.shuffle(&mut order);
+        let mut out = Vec::with_capacity(self.batches_per_epoch());
+        for chunk in order.chunks(self.batch_size) {
+            let mut indices = chunk.to_vec();
+            let mut valid = vec![true; chunk.len()];
+            // Pad the tail batch by cycling the epoch's own order.
+            let mut fill = 0usize;
+            while indices.len() < self.batch_size {
+                indices.push(order[fill % order.len()]);
+                valid.push(false);
+                fill += 1;
+            }
+            out.push(Batch { indices, valid });
+        }
+        out
+    }
+
+    /// Deterministic, unshuffled cover of `0..n` (for evaluation passes).
+    pub fn sequential(n: usize, batch_size: usize) -> Vec<Batch> {
+        let order: Vec<usize> = (0..n).collect();
+        let mut out = Vec::new();
+        for chunk in order.chunks(batch_size) {
+            let mut indices = chunk.to_vec();
+            let mut valid = vec![true; chunk.len()];
+            while indices.len() < batch_size {
+                indices.push(0);
+                valid.push(false);
+            }
+            out.push(Batch { indices, valid });
+        }
+        out
+    }
+
+    /// Greedy mixed-size cover of `0..n` using the compiled batch sizes
+    /// (§Perf): pick the largest artifact that fits the remainder, so
+    /// e.g. n = 82 with sizes {1, 16, 64, 256} becomes 64 + 16 + 1 + 1
+    /// (zero padded slots) instead of one 256-wide call that wastes 68%
+    /// of its compute on padding. Falls back to the smallest artifact ≥
+    /// remainder (padded) when no exact fit exists.
+    pub fn greedy_cover(n: usize, available: &[usize]) -> Vec<Batch> {
+        assert!(!available.is_empty());
+        let mut sizes = available.to_vec();
+        sizes.sort_unstable();
+        let mut out = Vec::new();
+        let mut next = 0usize;
+        while next < n {
+            let remaining = n - next;
+            let size = sizes
+                .iter()
+                .rev()
+                .copied()
+                .find(|s| *s <= remaining)
+                // no artifact fits under the remainder: take the smallest
+                // one that covers it and pad
+                .unwrap_or_else(|| {
+                    sizes.iter().copied().find(|s| *s >= remaining).unwrap()
+                });
+            let real = size.min(remaining);
+            let mut indices: Vec<usize> = (next..next + real).collect();
+            let mut valid = vec![true; real];
+            while indices.len() < size {
+                indices.push(0);
+                valid.push(false);
+            }
+            out.push(Batch { indices, valid });
+            next += real;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn epoch_covers_every_series_exactly_once() {
+        let mut b = Batcher::new(103, 16, 1);
+        let batches = b.epoch();
+        assert_eq!(batches.len(), 7);
+        let mut seen = HashSet::new();
+        let mut real = 0;
+        for batch in &batches {
+            assert_eq!(batch.indices.len(), 16);
+            for (i, &idx) in batch.indices.iter().enumerate() {
+                if batch.valid[i] {
+                    assert!(seen.insert(idx), "series {idx} scheduled twice");
+                    real += 1;
+                }
+            }
+        }
+        assert_eq!(real, 103);
+        assert_eq!(seen.len(), 103);
+    }
+
+    #[test]
+    fn partial_batch_is_padded_and_masked() {
+        let mut b = Batcher::new(5, 4, 2);
+        let batches = b.epoch();
+        assert_eq!(batches.len(), 2);
+        let tail = &batches[1];
+        assert_eq!(tail.real_count(), 1);
+        assert_eq!(tail.mask_f32().iter().sum::<f32>(), 1.0);
+        assert_eq!(tail.indices.len(), 4);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut b = Batcher::new(64, 8, 3);
+        let e1: Vec<usize> = b.epoch().iter().flat_map(|x| x.indices.clone()).collect();
+        let e2: Vec<usize> = b.epoch().iter().flat_map(|x| x.indices.clone()).collect();
+        assert_ne!(e1, e2, "epochs should be differently shuffled");
+    }
+
+    #[test]
+    fn sequential_is_ordered() {
+        let batches = Batcher::sequential(6, 4);
+        assert_eq!(batches[0].indices, vec![0, 1, 2, 3]);
+        assert_eq!(batches[1].indices[..2], [4, 5]);
+        assert!(!batches[1].valid[2] && !batches[1].valid[3]);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_padding() {
+        let mut b = Batcher::new(32, 8, 4);
+        for batch in b.epoch() {
+            assert_eq!(batch.real_count(), 8);
+        }
+    }
+}

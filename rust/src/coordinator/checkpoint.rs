@@ -1,0 +1,149 @@
+//! Checkpointing: persist and restore a trained model (shared RNN state +
+//! the per-series parameter store) as JSON.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::store::ParamStore;
+use crate::coordinator::trainer::ModelState;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+
+/// Serialize (state, store) to a JSON file.
+pub fn save(path: impl AsRef<Path>, freq: &str, state: &ModelState,
+            store: &ParamStore) -> Result<()> {
+    let mut tensors = Vec::new();
+    let mut names: Vec<&String> = state.tensors.keys().collect();
+    names.sort();
+    for name in names {
+        let t = &state.tensors[name];
+        tensors.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            ("shape", Json::arr_usize(&t.shape)),
+            ("data", Json::arr_f32(&t.data)),
+        ]));
+    }
+    let mut series = Vec::new();
+    for (name, width, values) in store.export() {
+        series.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("width", Json::num(width as f64)),
+            ("data", Json::arr_f32(&values)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("freq", Json::str(freq)),
+        ("n_series", Json::num(store.n as f64)),
+        ("seasonality", Json::num(store.seasonality as f64)),
+        ("model", Json::Arr(tensors)),
+        ("series_store", Json::Arr(series)),
+    ]);
+    std::fs::write(path.as_ref(), doc.to_string())
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+/// Restore into an existing (state, store) pair; shapes must match.
+pub fn load(path: impl AsRef<Path>, state: &mut ModelState,
+            store: &mut ParamStore) -> Result<String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let doc = Json::parse(&text)?;
+    if doc.get("version")?.as_usize()? != 1 {
+        bail!("unsupported checkpoint version");
+    }
+    if doc.get("n_series")?.as_usize()? != store.n {
+        bail!("checkpoint has {} series, store has {}",
+              doc.get("n_series")?.as_usize()?, store.n);
+    }
+    for t in doc.get("model")?.as_arr()? {
+        let name = t.get("name")?.as_str()?.to_string();
+        let shape = t.get("shape")?.as_usize_vec()?;
+        let data = t.get("data")?.as_f32_vec()?;
+        state.tensors.insert(name, HostTensor::new(shape, data)?);
+    }
+    let mut entries = Vec::new();
+    for e in doc.get("series_store")?.as_arr()? {
+        entries.push((
+            e.get("name")?.as_str()?.to_string(),
+            e.get("width")?.as_usize()?,
+            e.get("data")?.as_f32_vec()?,
+        ));
+    }
+    store.import(&entries)?;
+    Ok(doc.get("freq")?.as_str()?.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Primer;
+    use std::collections::HashMap;
+
+    #[test]
+    fn roundtrip() {
+        let mut state = ModelState { tensors: HashMap::new() };
+        state.tensors.insert(
+            "params.rnn.w".into(),
+            HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+        );
+        state.tensors.insert("opt.step".into(), HostTensor::scalar(7.0));
+        let primers: Vec<Primer> = (0..3)
+            .map(|i| Primer {
+                alpha_logit: i as f32,
+                gamma_logit: 0.0,
+                gamma2_logit: 0.0,
+                log_s_init: vec![0.1, 0.2],
+            })
+            .collect();
+        let store = ParamStore::from_primers(&primers, 2).unwrap();
+
+        let dir = std::env::temp_dir().join("fast_esrnn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        save(&path, "quarterly", &state, &store).unwrap();
+
+        let mut state2 = ModelState { tensors: HashMap::new() };
+        let mut store2 = ParamStore::from_primers(&primers, 2).unwrap();
+        // clobber store2 so load must restore it
+        let t = HostTensor::new(vec![1], vec![-9.0]).unwrap();
+        store2.scatter("params.series.alpha_logit", &[1], &[true], &t).unwrap();
+
+        let freq = load(&path, &mut state2, &mut store2).unwrap();
+        assert_eq!(freq, "quarterly");
+        assert_eq!(state2.tensors["params.rnn.w"].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(state2.step(), 7.0);
+        assert_eq!(store2.series_params(1).0, 1.0); // restored, not -9
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let primers: Vec<Primer> = (0..2)
+            .map(|_| Primer {
+                alpha_logit: 0.0,
+                gamma_logit: 0.0,
+                gamma2_logit: 0.0,
+                log_s_init: vec![0.0],
+            })
+            .collect();
+        let state = ModelState { tensors: HashMap::new() };
+        let store = ParamStore::from_primers(&primers, 1).unwrap();
+        let dir = std::env::temp_dir().join("fast_esrnn_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        save(&path, "yearly", &state, &store).unwrap();
+
+        let bigger: Vec<Primer> = (0..5)
+            .map(|_| Primer {
+                alpha_logit: 0.0,
+                gamma_logit: 0.0,
+                gamma2_logit: 0.0,
+                log_s_init: vec![0.0],
+            })
+            .collect();
+        let mut state2 = ModelState { tensors: HashMap::new() };
+        let mut store2 = ParamStore::from_primers(&bigger, 1).unwrap();
+        assert!(load(&path, &mut state2, &mut store2).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The Layer-3 coordinator: the paper's system contribution in Rust.
+//!
+//! * [`store`] — the N × (2 + S) per-series Holt-Winters parameter store
+//!   with batch gather/scatter (the vectorization trick's host side);
+//! * [`batcher`] — shuffled fixed-size batch scheduling with padding masks;
+//! * [`trainer`] — the joint-training epoch loop, evaluation and early
+//!   stopping;
+//! * [`checkpoint`] — JSON persistence of trained models.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod store;
+pub mod trainer;
+
+pub use batcher::{Batch, Batcher};
+pub use store::ParamStore;
+pub use trainer::{EvalReport, EvalSplit, ModelState, TrainReport, Trainer};

@@ -1,0 +1,390 @@
+//! Per-series parameter store — the paper's N × (2 + S) Holt-Winters
+//! parameters (§3.3) plus their Adam moments.
+//!
+//! This is the coordination half of the paper's vectorization trick: the
+//! artifact's train step sees per-series parameters as batch-dim tensor
+//! slices; the store owns the *full* N-series tables on the host, gathers
+//! the slices for each scheduled batch, and scatters the updated values
+//! back after the step. Padded slots of a partial batch are never
+//! scattered, so duplicate indices cannot clobber real parameters.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::hw::Primer;
+use crate::runtime::HostTensor;
+
+/// One per-series parameter table (value + Adam m/v), `width` floats per
+/// series, laid out row-major `[n, width]`.
+#[derive(Debug, Clone)]
+struct Table {
+    width: usize,
+    value: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Table {
+    fn new(n: usize, width: usize) -> Self {
+        Self {
+            width,
+            value: vec![0.0; n * width],
+            m: vec![0.0; n * width],
+            v: vec![0.0; n * width],
+        }
+    }
+
+    fn gather(&self, idx: &[usize], part: Part) -> Vec<f32> {
+        let src = match part {
+            Part::Value => &self.value,
+            Part::M => &self.m,
+            Part::V => &self.v,
+        };
+        let mut out = Vec::with_capacity(idx.len() * self.width);
+        for &i in idx {
+            out.extend_from_slice(&src[i * self.width..(i + 1) * self.width]);
+        }
+        out
+    }
+
+    fn scatter(&mut self, idx: &[usize], valid: &[bool], part: Part,
+               data: &[f32]) {
+        let dst = match part {
+            Part::Value => &mut self.value,
+            Part::M => &mut self.m,
+            Part::V => &mut self.v,
+        };
+        for (slot, &i) in idx.iter().enumerate() {
+            if !valid[slot] {
+                continue;
+            }
+            dst[i * self.width..(i + 1) * self.width]
+                .copy_from_slice(&data[slot * self.width..(slot + 1) * self.width]);
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Part {
+    Value,
+    M,
+    V,
+}
+
+/// Parse a state leaf name into (table, part):
+/// `params.series.alpha_logit` → (alpha, Value);
+/// `opt.m.series.log_s_init`  → (s_init, M); etc.
+fn parse_name(name: &str) -> Option<(&str, Part)> {
+    if let Some(rest) = name.strip_prefix("params.series.") {
+        Some((rest, Part::Value))
+    } else if let Some(rest) = name.strip_prefix("opt.m.series.") {
+        Some((rest, Part::M))
+    } else if let Some(rest) = name.strip_prefix("opt.v.series.") {
+        Some((rest, Part::V))
+    } else {
+        None
+    }
+}
+
+/// The store: full-corpus tables for alpha/gamma logits and log initial
+/// seasonality.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub n: usize,
+    /// Primary seasonality width S1.
+    pub seasonality: usize,
+    /// §8.2 secondary seasonality width S2 (0 = single).
+    pub seasonality2: usize,
+    alpha: Table,
+    gamma: Table,
+    gamma2: Table,
+    s_init: Table,
+}
+
+impl ParamStore {
+    /// Initialize from per-series classical primers (§3.3).
+    /// `seasonality` is the packed width S1 (+ S2 for §8.2 dual configs —
+    /// use [`Self::from_primers_dual`] to record the split).
+    pub fn from_primers(primers: &[Primer], seasonality: usize) -> Result<Self> {
+        Self::from_primers_dual(primers, seasonality, 0)
+    }
+
+    /// Dual-seasonality constructor: the seasonality block packs
+    /// `[S1 | S2]` per series and the refit rotation treats each
+    /// component separately.
+    pub fn from_primers_dual(primers: &[Primer], s1: usize, s2: usize)
+                             -> Result<Self> {
+        let n = primers.len();
+        if n == 0 {
+            bail!("empty primer list");
+        }
+        let width = s1 + s2;
+        let mut store = Self {
+            n,
+            seasonality: s1,
+            seasonality2: s2,
+            alpha: Table::new(n, 1),
+            gamma: Table::new(n, 1),
+            gamma2: Table::new(n, 1),
+            s_init: Table::new(n, width),
+        };
+        for (i, p) in primers.iter().enumerate() {
+            if p.log_s_init.len() != width {
+                bail!("primer {i}: {} seasonality values, expected {width}",
+                      p.log_s_init.len());
+            }
+            store.alpha.value[i] = p.alpha_logit;
+            store.gamma.value[i] = p.gamma_logit;
+            store.gamma2.value[i] = p.gamma2_logit;
+            store.s_init.value[i * width..(i + 1) * width]
+                .copy_from_slice(&p.log_s_init);
+        }
+        Ok(store)
+    }
+
+    fn table(&self, key: &str) -> Option<&Table> {
+        match key {
+            "alpha_logit" => Some(&self.alpha),
+            "gamma_logit" => Some(&self.gamma),
+            "gamma2_logit" => Some(&self.gamma2),
+            "log_s_init" => Some(&self.s_init),
+            _ => None,
+        }
+    }
+
+    fn table_mut(&mut self, key: &str) -> Option<&mut Table> {
+        match key {
+            "alpha_logit" => Some(&mut self.alpha),
+            "gamma_logit" => Some(&mut self.gamma),
+            "gamma2_logit" => Some(&mut self.gamma2),
+            "log_s_init" => Some(&mut self.s_init),
+            _ => None,
+        }
+    }
+
+    /// Is this state-leaf name owned by the store?
+    pub fn owns(name: &str) -> bool {
+        parse_name(name).is_some()
+    }
+
+    /// Gather batch slices for every (table × part) combination, keyed by
+    /// the manifest leaf names.
+    pub fn gather_batch(&self, idx: &[usize]) -> Result<HashMap<String, HostTensor>> {
+        self.gather_batch_rotated(idx, 0)
+    }
+
+    /// Like [`Self::gather_batch`] but rotates each series' initial
+    /// seasonality left by a *time shift* of `rot` steps.
+    ///
+    /// Needed when forecasting from a window whose start is shifted by a
+    /// non-multiple of the period relative to the training window (the
+    /// Eq. 8 refit window shifts by H, and e.g. monthly H = 18 ≡ 6 mod
+    /// S = 12): `log_s_init[k]` was learned for train-window phase k, so
+    /// the shifted window must read phase (k + shift) mod S. For dual
+    /// configs each packed component rotates by `rot` mod its own period.
+    pub fn gather_batch_rotated(&self, idx: &[usize], rot: usize)
+                                -> Result<HashMap<String, HostTensor>> {
+        for &i in idx {
+            if i >= self.n {
+                bail!("series index {i} out of range (n={})", self.n);
+            }
+        }
+        let b = idx.len();
+        let mut out = HashMap::with_capacity(9);
+        for (key, tbl) in [("alpha_logit", &self.alpha),
+                           ("gamma_logit", &self.gamma),
+                           ("gamma2_logit", &self.gamma2),
+                           ("log_s_init", &self.s_init)] {
+            // alpha/gamma are rank-1 [B]; log_s_init is always rank-2
+            // [B, S], including the non-seasonal S = 1 case.
+            let shape = if key == "log_s_init" {
+                vec![b, tbl.width]
+            } else {
+                vec![b]
+            };
+            for (prefix, part) in [("params.series.", Part::Value),
+                                   ("opt.m.series.", Part::M),
+                                   ("opt.v.series.", Part::V)] {
+                let mut data = tbl.gather(idx, part);
+                if key == "log_s_init" && rot > 0 {
+                    let (s1, s2) = (self.seasonality, self.seasonality2);
+                    let (r1, r2) = (rot % s1.max(1),
+                                    if s2 > 0 { rot % s2 } else { 0 });
+                    if r1 > 0 || r2 > 0 {
+                        for row in data.chunks_mut(tbl.width) {
+                            row[..s1].rotate_left(r1);
+                            if s2 > 0 {
+                                row[s1..].rotate_left(r2);
+                            }
+                        }
+                    }
+                }
+                out.insert(format!("{prefix}{key}"),
+                           HostTensor::new(shape.clone(), data)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Scatter one updated batch tensor back. `valid[slot] == false`
+    /// (padding) slots are ignored. Unknown names are an error — the
+    /// caller routes only store-owned names here.
+    pub fn scatter(&mut self, name: &str, idx: &[usize], valid: &[bool],
+                   tensor: &HostTensor) -> Result<()> {
+        let Some((key, part)) = parse_name(name) else {
+            bail!("`{name}` is not a per-series leaf");
+        };
+        let width = {
+            let Some(tbl) = self.table(key) else {
+                bail!("unknown per-series table `{key}`");
+            };
+            tbl.width
+        };
+        if tensor.data.len() != idx.len() * width {
+            bail!("scatter `{name}`: tensor has {} elems, batch needs {}",
+                  tensor.data.len(), idx.len() * width);
+        }
+        self.table_mut(key).unwrap().scatter(idx, valid, part, &tensor.data);
+        Ok(())
+    }
+
+    /// Read one series' effective smoothing parameters (for inspection).
+    /// The seasonality vector is the full packed block (`S1 + S2` wide
+    /// for §8.2 dual configs).
+    pub fn series_params(&self, i: usize) -> (f32, f32, Vec<f32>) {
+        let w = self.s_init.width;
+        (
+            self.alpha.value[i],
+            self.gamma.value[i],
+            self.s_init.value[i * w..(i + 1) * w].to_vec(),
+        )
+    }
+
+    /// Total host memory of the store in floats (3 parts × 3 tables).
+    pub fn float_count(&self) -> usize {
+        3 * (self.alpha.value.len() + self.gamma.value.len()
+             + self.s_init.value.len())
+    }
+
+    /// Flat export for checkpointing: (name, width, values).
+    pub fn export(&self) -> Vec<(String, usize, Vec<f32>)> {
+        let mut out = Vec::new();
+        for (key, tbl) in [("alpha_logit", &self.alpha),
+                           ("gamma_logit", &self.gamma),
+                           ("gamma2_logit", &self.gamma2),
+                           ("log_s_init", &self.s_init)] {
+            out.push((format!("value.{key}"), tbl.width, tbl.value.clone()));
+            out.push((format!("m.{key}"), tbl.width, tbl.m.clone()));
+            out.push((format!("v.{key}"), tbl.width, tbl.v.clone()));
+        }
+        out
+    }
+
+    /// Restore from `export` output.
+    pub fn import(&mut self, entries: &[(String, usize, Vec<f32>)]) -> Result<()> {
+        for (name, _width, values) in entries {
+            let (part_s, key) = name
+                .split_once('.')
+                .ok_or_else(|| anyhow::anyhow!("bad store entry `{name}`"))?;
+            let tbl = self
+                .table_mut(key)
+                .ok_or_else(|| anyhow::anyhow!("unknown table `{key}`"))?;
+            let dst = match part_s {
+                "value" => &mut tbl.value,
+                "m" => &mut tbl.m,
+                "v" => &mut tbl.v,
+                _ => bail!("bad part `{part_s}`"),
+            };
+            if dst.len() != values.len() {
+                bail!("store entry `{name}`: {} values, expected {}",
+                      values.len(), dst.len());
+            }
+            dst.copy_from_slice(values);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn primers(n: usize, s: usize) -> Vec<Primer> {
+        (0..n)
+            .map(|i| Primer {
+                alpha_logit: i as f32,
+                gamma_logit: -(i as f32),
+                gamma2_logit: 0.0,
+                log_s_init: (0..s).map(|k| (i * 10 + k) as f32).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gather_pulls_correct_rows() {
+        let store = ParamStore::from_primers(&primers(5, 3), 3).unwrap();
+        let g = store.gather_batch(&[4, 0, 2]).unwrap();
+        assert_eq!(g["params.series.alpha_logit"].data, vec![4.0, 0.0, 2.0]);
+        assert_eq!(g["params.series.log_s_init"].shape, vec![3, 3]);
+        assert_eq!(g["params.series.log_s_init"].data[0..3], [40.0, 41.0, 42.0]);
+        // fresh Adam moments start at zero
+        assert!(g["opt.m.series.alpha_logit"].data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn scatter_respects_padding_mask() {
+        let mut store = ParamStore::from_primers(&primers(4, 1), 1).unwrap();
+        // batch = [1, 2, 1] where slot 2 is padding duplicating series 1
+        let idx = [1usize, 2, 1];
+        let valid = [true, true, false];
+        let t = HostTensor::new(vec![3], vec![100.0, 200.0, 999.0]).unwrap();
+        store.scatter("params.series.alpha_logit", &idx, &valid, &t).unwrap();
+        assert_eq!(store.series_params(1).0, 100.0); // not clobbered by 999
+        assert_eq!(store.series_params(2).0, 200.0);
+        assert_eq!(store.series_params(0).0, 0.0);
+    }
+
+    #[test]
+    fn adam_moments_roundtrip() {
+        let mut store = ParamStore::from_primers(&primers(3, 2), 2).unwrap();
+        let idx = [0usize, 2];
+        let valid = [true, true];
+        let t = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        store.scatter("opt.v.series.log_s_init", &idx, &valid, &t).unwrap();
+        let g = store.gather_batch(&[2]).unwrap();
+        assert_eq!(g["opt.v.series.log_s_init"].data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn ownership_and_errors() {
+        assert!(ParamStore::owns("params.series.alpha_logit"));
+        assert!(ParamStore::owns("opt.m.series.log_s_init"));
+        assert!(!ParamStore::owns("params.rnn.cells.0.w"));
+        assert!(!ParamStore::owns("opt.step"));
+        let store = ParamStore::from_primers(&primers(2, 1), 1).unwrap();
+        assert!(store.gather_batch(&[5]).is_err());
+        let mut store = store;
+        let bad = HostTensor::new(vec![1], vec![0.0]).unwrap();
+        assert!(store
+            .scatter("params.rnn.cells.0.w", &[0], &[true], &bad)
+            .is_err());
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let mut a = ParamStore::from_primers(&primers(4, 2), 2).unwrap();
+        let t = HostTensor::new(vec![1], vec![7.5]).unwrap();
+        a.scatter("params.series.gamma_logit", &[3], &[true], &t).unwrap();
+        let dump = a.export();
+        let mut b = ParamStore::from_primers(&primers(4, 2), 2).unwrap();
+        b.import(&dump).unwrap();
+        assert_eq!(b.series_params(3).1, 7.5);
+        assert_eq!(b.float_count(), a.float_count());
+    }
+
+    #[test]
+    fn primer_width_mismatch_rejected() {
+        assert!(ParamStore::from_primers(&primers(2, 3), 4).is_err());
+    }
+}

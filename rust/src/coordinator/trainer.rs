@@ -1,0 +1,378 @@
+//! Training driver: the epoch loop that joins the per-series parameter
+//! store, the batch scheduler and the AOT train-step artifact.
+//!
+//! One `Trainer` owns one frequency's model (paper §3: each frequency has
+//! its own network). The loop is the paper's §3.3 procedure: classical
+//! primer → joint gradient training of {RNN weights, per-series HW
+//! parameters} → holdout evaluation, with LR drops and early stopping on
+//! validation sMAPE.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Frequency, NetworkConfig, TrainConfig, ALL_CATEGORIES};
+use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::store::ParamStore;
+use crate::data::{split_corpus, Corpus, SplitSet};
+use crate::hw;
+use crate::metrics::{mase, smape, MetricAccumulator};
+use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::telemetry::Telemetry;
+use crate::util::rng::Rng;
+
+/// Host-side model state: shared RNN weights and their Adam moments plus
+/// the global step counter — everything in the train-step signature that
+/// is NOT per-series or per-batch.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub tensors: HashMap<String, HostTensor>,
+}
+
+impl ModelState {
+    /// Initialize from the per-frequency `init` artifact.
+    pub fn init(engine: &Engine, freq: &str, seed: u64) -> Result<Self> {
+        let rnn = engine.execute_init(freq, seed)?;
+        let mut tensors = HashMap::new();
+        for (name, t) in rnn {
+            // `name` comes back as e.g. `rnn.cells.0.w`.
+            tensors.insert(format!("opt.m.{name}"),
+                           HostTensor::zeros(t.shape.clone()));
+            tensors.insert(format!("opt.v.{name}"),
+                           HostTensor::zeros(t.shape.clone()));
+            tensors.insert(format!("params.{name}"), t);
+        }
+        tensors.insert("opt.step".into(), HostTensor::scalar(0.0));
+        Ok(Self { tensors })
+    }
+
+    pub fn step(&self) -> f32 {
+        self.tensors.get("opt.step").map(|t| t.data[0]).unwrap_or(0.0)
+    }
+}
+
+/// Which holdout to score against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalSplit {
+    /// Forecast from the training window, score against the val block.
+    Validation,
+    /// Forecast from the refit window (shifted by H), score against test.
+    Test,
+}
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub split: &'static str,
+    pub count: usize,
+    pub smape: f64,
+    pub mase: f64,
+    pub per_category: MetricAccumulator,
+}
+
+impl EvalReport {
+    pub fn category_smape(&self, cat: &str) -> Option<f64> {
+        self.per_category.mean_smape(cat)
+    }
+}
+
+/// Full training-run record (feeds EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub freq: String,
+    pub epochs_run: usize,
+    pub epoch_losses: Vec<f32>,
+    pub val_smape: Vec<f64>,
+    pub best_epoch: usize,
+    pub train_secs: f64,
+    pub steps: usize,
+    pub series: usize,
+}
+
+/// The per-frequency training coordinator.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub freq: Frequency,
+    pub net: NetworkConfig,
+    pub set: SplitSet,
+    pub store: ParamStore,
+    pub state: ModelState,
+    batcher: Batcher,
+    pub opts: TrainConfig,
+    pub telemetry: Telemetry,
+    lr: f32,
+    train_name: String,
+    model_key: String,
+    predict_batches: Vec<usize>,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer: equalize + split the corpus, prime the store,
+    /// initialize RNN weights from the artifact.
+    pub fn new(engine: &'e Engine, freq: Frequency, corpus: &Corpus,
+               opts: TrainConfig) -> Result<Self> {
+        let net = NetworkConfig::for_freq(freq)?;
+        // Model key: usually the frequency name; ablation variants (e.g.
+        // "quarterly_pen", §8.4) share the frequency's shapes but bake
+        // different loss terms into their artifacts.
+        let key = opts
+            .model_key
+            .clone()
+            .unwrap_or_else(|| freq.name().to_string());
+        let mcfg = engine.manifest().config(&key)?;
+        net.check_manifest(mcfg)?;
+
+        let avail = engine.manifest().available_batches(&key, "train_step");
+        if !avail.contains(&opts.batch_size) {
+            bail!("no {key} train_step artifact for batch size {} (have {:?}); \
+                   re-run `make artifacts` with --batch-sizes",
+                  opts.batch_size, avail);
+        }
+        let set = split_corpus(corpus, &net)
+            .with_context(|| format!("splitting {} corpus", freq.name()))?;
+        if set.series.is_empty() {
+            bail!("no {} series survive §5.2 equalization (need length ≥ {})",
+                  freq.name(), net.min_series_length());
+        }
+
+        // §3.3 primer: classical seasonality decomposition per series
+        // (dual decomposition for §8.2 configs), with a small jitter for
+        // symmetry breaking.
+        let mut rng = Rng::new(opts.seed ^ 0x5eed);
+        let primers: Vec<hw::Primer> = set
+            .series
+            .iter()
+            .map(|s| {
+                let mut p = hw::primer_for(&s.train, net.seasonality,
+                                           net.seasonality2);
+                p.alpha_logit += rng.normal_scaled(0.0, 0.05) as f32;
+                p.gamma_logit += rng.normal_scaled(0.0, 0.05) as f32;
+                p
+            })
+            .collect();
+        let store = ParamStore::from_primers_dual(
+            &primers, net.seasonality, net.seasonality2)?;
+        let state = ModelState::init(engine, &key, opts.seed)?;
+        let batcher = Batcher::new(set.series.len(), opts.batch_size, opts.seed);
+
+        // All compiled predict batch sizes: evaluation uses a greedy
+        // mixed-size cover (§Perf) to minimize padded compute.
+        let predict_batches = engine.manifest().available_batches(&key, "predict");
+        if predict_batches.is_empty() {
+            bail!("no predict artifacts for {key}");
+        }
+
+        let lr = opts.learning_rate;
+        let train_name =
+            Manifest::program_name(&key, opts.batch_size, "train_step");
+        Ok(Self {
+            engine,
+            freq,
+            net,
+            set,
+            store,
+            state,
+            batcher,
+            opts,
+            telemetry: Telemetry::new(),
+            lr,
+            train_name,
+            model_key: key,
+            predict_batches,
+        })
+    }
+
+    pub fn series_count(&self) -> usize {
+        self.set.series.len()
+    }
+
+    pub fn current_lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Assemble the batch data tensors (y, category one-hot, mask).
+    fn batch_data(&self, batch: &Batch, refit: bool) -> Result<HashMap<String, HostTensor>> {
+        let b = batch.indices.len();
+        let c = self.net.length;
+        let mut y = Vec::with_capacity(b * c);
+        let mut cat = Vec::with_capacity(b * 6);
+        for &i in &batch.indices {
+            let s = &self.set.series[i];
+            y.extend_from_slice(if refit { &s.refit } else { &s.train });
+            cat.extend_from_slice(&s.category_onehot);
+        }
+        let mut map = HashMap::with_capacity(4);
+        map.insert("data.y".into(), HostTensor::new(vec![b, c], y)?);
+        map.insert("data.cat".into(), HostTensor::new(vec![b, 6], cat)?);
+        map.insert("data.mask".into(), HostTensor::new(vec![b], batch.mask_f32())?);
+        Ok(map)
+    }
+
+    /// One optimizer step over one batch; returns the loss.
+    pub fn train_step_batch(&mut self, batch: &Batch) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let mut inputs = self.batch_data(batch, false)?;
+        inputs.extend(self.store.gather_batch(&batch.indices)?);
+        inputs.insert("lr".into(), HostTensor::scalar(self.lr));
+        self.telemetry.add_time("assemble", t0.elapsed().as_secs_f64());
+
+        let state = &self.state;
+        let outs = {
+            let t1 = std::time::Instant::now();
+            let outs = self.engine.execute_named(&self.train_name, |spec| {
+                inputs
+                    .get(&spec.name)
+                    .or_else(|| state.tensors.get(&spec.name))
+                    .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
+            })?;
+            self.telemetry.add_time("train_step", t1.elapsed().as_secs_f64());
+            outs
+        };
+
+        let t2 = std::time::Instant::now();
+        let mut loss = f32::NAN;
+        for (name, tensor) in outs {
+            if name == "loss" {
+                loss = tensor.data[0];
+            } else if ParamStore::owns(&name) {
+                self.store
+                    .scatter(&name, &batch.indices, &batch.valid, &tensor)?;
+            } else {
+                self.state.tensors.insert(name, tensor);
+            }
+        }
+        self.telemetry.add_time("writeback", t2.elapsed().as_secs_f64());
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {} ({})", self.state.step(),
+                  self.train_name);
+        }
+        Ok(loss)
+    }
+
+    /// One full epoch; returns mean batch loss.
+    pub fn run_epoch(&mut self) -> Result<f32> {
+        let batches = self.batcher.epoch();
+        let mut acc = 0.0f64;
+        for batch in &batches {
+            acc += self.train_step_batch(batch)? as f64;
+        }
+        self.telemetry.incr("steps", batches.len() as u64);
+        Ok((acc / batches.len() as f64) as f32)
+    }
+
+    /// Batched forecasts for every series (train or refit window).
+    pub fn forecasts(&mut self, refit: bool) -> Result<Vec<Vec<f32>>> {
+        let n = self.set.series.len();
+        let h = self.net.horizon;
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(n);
+        // The refit window starts H later than the train window the
+        // per-series seasonality was learned on — rotate its phase(s)
+        // by the raw time shift (the store mods per component).
+        let rot = if refit { self.net.horizon } else { 0 };
+        for batch in Batcher::greedy_cover(n, &self.predict_batches) {
+            let name = Manifest::program_name(&self.model_key,
+                                              batch.indices.len(), "predict");
+            let mut inputs = self.batch_data(&batch, refit)?;
+            inputs.extend(self.store.gather_batch_rotated(&batch.indices, rot)?);
+            let state = &self.state;
+            let t0 = std::time::Instant::now();
+            let outs = self.engine.execute_named(&name, |spec| {
+                inputs
+                    .get(&spec.name)
+                    .or_else(|| state.tensors.get(&spec.name))
+                    .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
+            })?;
+            self.telemetry.add_time("predict", t0.elapsed().as_secs_f64());
+            let fc = &outs[0].1;
+            for (slot, &valid) in batch.valid.iter().enumerate() {
+                if valid {
+                    out.push(fc.data[slot * h..(slot + 1) * h].to_vec());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Score the model against a holdout block.
+    pub fn evaluate(&mut self, split: EvalSplit) -> Result<EvalReport> {
+        let refit = split == EvalSplit::Test;
+        let forecasts = self.forecasts(refit)?;
+        let mut per_category = MetricAccumulator::new();
+        let (mut s_acc, mut m_acc) = (0.0f64, 0.0f64);
+        for (i, fc) in forecasts.iter().enumerate() {
+            let sp = &self.set.series[i];
+            let actual = if refit { &sp.test } else { &sp.val };
+            let s = smape(fc, actual);
+            let m = mase(fc, actual, sp.mase_scale);
+            s_acc += s;
+            m_acc += m;
+            per_category.add(ALL_CATEGORIES[sp.category_index].name(), s, m);
+        }
+        let n = forecasts.len();
+        Ok(EvalReport {
+            split: if refit { "test" } else { "val" },
+            count: n,
+            smape: s_acc / n as f64,
+            mase: m_acc / n as f64,
+            per_category,
+        })
+    }
+
+    /// The full §3.3 training loop with LR schedule and early stopping.
+    pub fn train(&mut self, verbose: bool) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let mut epoch_losses = Vec::new();
+        let mut val_smape = Vec::new();
+        let mut best = (0usize, f64::INFINITY);
+        for epoch in 0..self.opts.epochs {
+            if self.opts.lr_drop_epochs.contains(&epoch) {
+                self.lr *= self.opts.lr_decay;
+            }
+            let loss = self.run_epoch()?;
+            epoch_losses.push(loss);
+            let report = self.evaluate(EvalSplit::Validation)?;
+            val_smape.push(report.smape);
+            if verbose {
+                println!(
+                    "  [{}] epoch {:>2}: loss {:.5}  val sMAPE {:.3}  lr {:.2e}",
+                    self.freq.name(), epoch, loss, report.smape, self.lr);
+            }
+            if report.smape < best.1 {
+                best = (epoch, report.smape);
+            } else if epoch - best.0 >= self.opts.patience {
+                if verbose {
+                    println!("  [{}] early stop at epoch {epoch} \
+                              (best {} @ {:.3})",
+                             self.freq.name(), best.0, best.1);
+                }
+                break;
+            }
+        }
+        Ok(TrainReport {
+            freq: self.freq.name().into(),
+            epochs_run: epoch_losses.len(),
+            epoch_losses,
+            val_smape,
+            best_epoch: best.0,
+            train_secs: t0.elapsed().as_secs_f64(),
+            steps: self.telemetry.counter("steps") as usize,
+            series: self.set.series.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_split_flags() {
+        assert_ne!(EvalSplit::Validation, EvalSplit::Test);
+    }
+
+    #[test]
+    fn model_state_step_default() {
+        let s = ModelState { tensors: HashMap::new() };
+        assert_eq!(s.step(), 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Corpus persistence: a simple CSV-ish line format
+//! (`id,freq,category,v1,v2,...`) so generated corpora can be saved,
+//! inspected and re-loaded without regeneration.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Category, Frequency};
+use crate::data::types::{Corpus, Series};
+
+pub fn save(corpus: &Corpus, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    for s in &corpus.series {
+        write!(w, "{},{},{}", s.id, s.freq.name(), s.category.name())?;
+        for v in &s.values {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Corpus> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let r = BufReader::new(f);
+    let mut series = Vec::new();
+    for (ln, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut it = line.split(',');
+        let id = it.next().unwrap_or_default().to_string();
+        let freq = Frequency::parse(it.next().unwrap_or_default())
+            .with_context(|| format!("line {}", ln + 1))?;
+        let category = Category::parse(it.next().unwrap_or_default())
+            .with_context(|| format!("line {}", ln + 1))?;
+        let values: Vec<f32> = it
+            .map(|t| t.parse::<f32>()
+                 .with_context(|| format!("line {}: bad value `{t}`", ln + 1)))
+            .collect::<Result<_>>()?;
+        if values.is_empty() {
+            bail!("line {}: series `{id}` has no values", ln + 1);
+        }
+        series.push(Series { id, freq, category, values });
+    }
+    Ok(Corpus::new(series))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let corpus = Corpus::new(vec![
+            Series {
+                id: "m-1".into(),
+                freq: Frequency::Monthly,
+                category: Category::Micro,
+                values: vec![1.5, 2.25, 3.0],
+            },
+            Series {
+                id: "y-1".into(),
+                freq: Frequency::Yearly,
+                category: Category::Macro,
+                values: vec![10.0, 20.0],
+            },
+        ]);
+        let dir = std::env::temp_dir().join("fast_esrnn_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.csv");
+        save(&corpus, &path).unwrap();
+        let re = load(&path).unwrap();
+        assert_eq!(re.len(), 2);
+        assert_eq!(re.series[0].values, vec![1.5, 2.25, 3.0]);
+        assert_eq!(re.series[1].freq, Frequency::Yearly);
+        assert_eq!(re.series[1].category, Category::Macro);
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        let dir = std::env::temp_dir().join("fast_esrnn_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "id,monthly,Micro,1.0,oops\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "id,blah,Micro,1.0\n").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

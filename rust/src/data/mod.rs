@@ -1,0 +1,13 @@
+//! Dataset pipeline: corpus types, the synthetic M4-like generator
+//! (Tables 2–3), length equalization + splits (§5.2, Eqs. 7–8), summary
+//! statistics and CSV persistence.
+
+pub mod csv;
+pub mod split;
+pub mod stats;
+pub mod synthetic;
+pub mod types;
+
+pub use split::{split_corpus, split_series, SplitSeries, SplitSet};
+pub use synthetic::{generate, GenOptions};
+pub use types::{Corpus, Series};

@@ -1,0 +1,181 @@
+//! Series-length equalization (§5.2) and train/val/test splits (Eqs. 7–8).
+//!
+//! The paper fixes every series of a frequency to length C (72 for Q/M),
+//! discarding shorter series, and holds out the last two horizons:
+//!
+//! ```text
+//! Train[N-O*2-C .. N-O*2-1],  Val[N-O*2 .. N-O-1],  Test[N-O .. N]   (Eq. 8)
+//! ```
+//!
+//! We expose BOTH alignments: `fit` (train window, val next — used during
+//! training/early stopping) and `refit` (window shifted forward by H so the
+//! model sees the val region; its forecast scores against test).
+
+use anyhow::{bail, Result};
+
+use crate::config::NetworkConfig;
+use crate::data::types::{Corpus, Series};
+
+/// One equalized series, ready for the coordinator.
+#[derive(Debug, Clone)]
+pub struct SplitSeries {
+    pub id: String,
+    pub category_onehot: [f32; 6],
+    pub category_index: usize,
+    /// C values ending right before the validation block (Eq. 8 Train).
+    pub train: Vec<f32>,
+    /// H values following `train` (Eq. 8 Val).
+    pub val: Vec<f32>,
+    /// C values ending right before the test block (train shifted by H).
+    pub refit: Vec<f32>,
+    /// Final H values (Eq. 8 Test).
+    pub test: Vec<f32>,
+    /// In-sample history *before* the test block (for MASE scaling).
+    pub insample_len: usize,
+    /// Naive-seasonal scale for MASE, computed over the full pre-test
+    /// history (M4 convention).
+    pub mase_scale: f32,
+}
+
+/// Result of equalizing one frequency's slice of a corpus.
+#[derive(Debug, Clone)]
+pub struct SplitSet {
+    pub series: Vec<SplitSeries>,
+    pub discarded: usize,
+    pub total: usize,
+}
+
+impl SplitSet {
+    /// Paper §5.2 "data retention" after thresholding.
+    pub fn retention(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.series.len() as f64 / self.total as f64
+    }
+}
+
+/// MASE denominator: mean absolute seasonal-naive error over the
+/// in-sample portion (M4 definition).
+fn mase_scale(insample: &[f32], period: usize) -> f32 {
+    let m = period.max(1);
+    if insample.len() <= m {
+        return 1.0;
+    }
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for t in m..insample.len() {
+        acc += (insample[t] - insample[t - m]).abs() as f64;
+        n += 1;
+    }
+    if n == 0 || acc == 0.0 {
+        1.0
+    } else {
+        (acc / n as f64) as f32
+    }
+}
+
+/// Split one raw series per Eq. 8. Returns None if too short (§5.2).
+pub fn split_series(s: &Series, cfg: &NetworkConfig) -> Option<SplitSeries> {
+    let c = cfg.length;
+    let h = cfg.horizon;
+    let n = s.len();
+    if n < c + 2 * h {
+        return None;
+    }
+    let test_start = n - h;
+    let val_start = n - 2 * h;
+    let train_start = val_start - c;
+    let refit_start = test_start - c;
+    Some(SplitSeries {
+        id: s.id.clone(),
+        category_onehot: s.category_onehot(),
+        category_index: s.category.index(),
+        train: s.values[train_start..val_start].to_vec(),
+        val: s.values[val_start..test_start].to_vec(),
+        refit: s.values[refit_start..test_start].to_vec(),
+        test: s.values[test_start..].to_vec(),
+        insample_len: test_start,
+        mase_scale: mase_scale(&s.values[..test_start], cfg.seasonality),
+    })
+}
+
+/// Equalize + split every series of `cfg.freq` in the corpus.
+pub fn split_corpus(corpus: &Corpus, cfg: &NetworkConfig) -> Result<SplitSet> {
+    let pool = corpus.by_freq(cfg.freq);
+    let total = pool.len();
+    if total == 0 {
+        bail!("corpus has no {} series", cfg.freq.name());
+    }
+    let mut series = Vec::new();
+    for s in pool {
+        if let Some(sp) = split_series(s, cfg) {
+            series.push(sp);
+        }
+    }
+    let discarded = total - series.len();
+    Ok(SplitSet { series, discarded, total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Category, Frequency};
+
+    fn cfg() -> NetworkConfig {
+        NetworkConfig::for_freq(Frequency::Quarterly).unwrap()
+    }
+
+    fn series(n: usize) -> Series {
+        Series {
+            id: "t".into(),
+            freq: Frequency::Quarterly,
+            category: Category::Macro,
+            values: (0..n).map(|i| i as f32 + 1.0).collect(),
+        }
+    }
+
+    #[test]
+    fn split_windows_line_up_with_eq8() {
+        let cfg = cfg(); // C=72, H=8
+        let s = series(100);
+        let sp = split_series(&s, &cfg).unwrap();
+        assert_eq!(sp.train.len(), 72);
+        assert_eq!(sp.val.len(), 8);
+        assert_eq!(sp.test.len(), 8);
+        assert_eq!(sp.refit.len(), 72);
+        // Contiguity: train ends where val starts, val ends where test starts.
+        assert_eq!(*sp.train.last().unwrap() + 1.0, sp.val[0]);
+        assert_eq!(*sp.val.last().unwrap() + 1.0, sp.test[0]);
+        // refit = last C values before test (so it *contains* val).
+        assert_eq!(*sp.refit.last().unwrap(), *sp.val.last().unwrap());
+        assert_eq!(sp.insample_len, 92);
+    }
+
+    #[test]
+    fn short_series_discarded() {
+        let cfg = cfg();
+        assert!(split_series(&series(87), &cfg).is_none()); // < 72+16
+        assert!(split_series(&series(88), &cfg).is_some()); // == 72+16
+    }
+
+    #[test]
+    fn split_corpus_counts_discards() {
+        let corpus = Corpus::new(vec![series(87), series(90), series(120)]);
+        let set = split_corpus(&corpus, &cfg()).unwrap();
+        assert_eq!(set.total, 3);
+        assert_eq!(set.series.len(), 2);
+        assert_eq!(set.discarded, 1);
+        assert!((set.retention() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mase_scale_of_linear_series() {
+        // y_t = t+1, period 4: |y_t - y_{t-4}| = 4 everywhere.
+        let s = series(92);
+        let sc = mase_scale(&s.values, 4);
+        assert!((sc - 4.0).abs() < 1e-6);
+        // Degenerate short series fall back to 1.
+        assert_eq!(mase_scale(&[1.0, 2.0], 4), 1.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Corpus summary statistics — regenerates the *shape* of paper Tables 2
+//! and 3 for our synthetic corpus (`fast-esrnn data-gen --report`).
+
+use std::fmt::Write as _;
+
+use crate::config::{ALL_CATEGORIES, ALL_FREQS};
+use crate::data::types::Corpus;
+
+/// Five-number-ish summary of series lengths (paper Table 3 columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthStats {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: usize,
+    pub q25: usize,
+    pub median: usize,
+    pub q75: usize,
+    pub max: usize,
+}
+
+pub fn length_stats(lengths: &[usize]) -> Option<LengthStats> {
+    if lengths.is_empty() {
+        return None;
+    }
+    let mut v = lengths.to_vec();
+    v.sort_unstable();
+    let n = v.len();
+    let mean = v.iter().sum::<usize>() as f64 / n as f64;
+    let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+    let q = |p: f64| v[(((n - 1) as f64) * p).round() as usize];
+    Some(LengthStats {
+        count: n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        q25: q(0.25),
+        median: q(0.5),
+        q75: q(0.75),
+        max: v[n - 1],
+    })
+}
+
+/// Render the Table 2 analogue (counts by frequency × category).
+pub fn render_count_table(corpus: &Corpus) -> String {
+    let t = corpus.count_table();
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<10} {:>12} {:>9} {:>9} {:>9} {:>9} {:>7} {:>8}",
+                     "Frequency", "Demographic", "Finance", "Industry",
+                     "Macro", "Micro", "Other", "Total");
+    let mut grand = 0usize;
+    for f in ALL_FREQS {
+        let row: Vec<usize> = ALL_CATEGORIES
+            .iter()
+            .map(|c| *t.get(&(f, *c)).unwrap_or(&0))
+            .collect();
+        let total: usize = row.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        grand += total;
+        let _ = writeln!(out, "{:<10} {:>12} {:>9} {:>9} {:>9} {:>9} {:>7} {:>8}",
+                         f.name(), row[0], row[1], row[2], row[3], row[4],
+                         row[5], total);
+    }
+    let _ = writeln!(out, "{:<10} {:>81}", "Total", grand);
+    out
+}
+
+/// Render the Table 3 analogue (length stats per frequency).
+pub fn render_length_table(corpus: &Corpus) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<10} {:>6} {:>8} {:>8} {:>5} {:>5} {:>5} {:>5} {:>6}",
+                     "Frequency", "count", "mean", "std", "min", "25%", "50%",
+                     "75%", "max");
+    for f in ALL_FREQS {
+        if let Some(st) = length_stats(&corpus.lengths(f)) {
+            let _ = writeln!(out,
+                "{:<10} {:>6} {:>8.1} {:>8.1} {:>5} {:>5} {:>5} {:>5} {:>6}",
+                f.name(), st.count, st.mean, st.std, st.min, st.q25,
+                st.median, st.q75, st.max);
+        }
+    }
+    out
+}
+
+/// Data retention after §5.2 equalization, per frequency.
+pub fn retention_report(corpus: &Corpus) -> String {
+    use crate::config::{NetworkConfig, MODELED_FREQS};
+    use crate::data::split::split_corpus;
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<10} {:>6} {:>9} {:>10}", "Frequency", "kept",
+                     "discarded", "retention");
+    for f in MODELED_FREQS {
+        let cfg = NetworkConfig::for_freq(f).unwrap();
+        if let Ok(set) = split_corpus(corpus, &cfg) {
+            let _ = writeln!(out, "{:<10} {:>6} {:>9} {:>9.1}%", f.name(),
+                             set.series.len(), set.discarded,
+                             100.0 * set.retention());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Category, Frequency};
+    use crate::data::types::Series;
+
+    #[test]
+    fn stats_of_known_sequence() {
+        let st = length_stats(&[10, 20, 30, 40, 50]).unwrap();
+        assert_eq!(st.min, 10);
+        assert_eq!(st.median, 30);
+        assert_eq!(st.max, 50);
+        assert!((st.mean - 30.0).abs() < 1e-12);
+        assert!(length_stats(&[]).is_none());
+    }
+
+    #[test]
+    fn tables_render_nonempty() {
+        let corpus = Corpus::new(vec![Series {
+            id: "a".into(),
+            freq: Frequency::Monthly,
+            category: Category::Micro,
+            values: vec![1.0; 120],
+        }]);
+        let t2 = render_count_table(&corpus);
+        assert!(t2.contains("monthly"));
+        let t3 = render_length_table(&corpus);
+        assert!(t3.contains("120"));
+    }
+}

@@ -1,0 +1,109 @@
+//! Core dataset types: series and corpus.
+
+use std::collections::BTreeMap;
+
+use crate::config::{Category, Frequency};
+
+/// One univariate time series (strictly positive values, M4-style).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub id: String,
+    pub freq: Frequency,
+    pub category: Category,
+    pub values: Vec<f32>,
+}
+
+impl Series {
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// One-hot category encoding (paper §5.3).
+    pub fn category_onehot(&self) -> [f32; 6] {
+        let mut v = [0.0; 6];
+        v[self.category.index()] = 1.0;
+        v
+    }
+}
+
+/// A collection of series across frequencies/categories.
+#[derive(Debug, Clone, Default)]
+pub struct Corpus {
+    pub series: Vec<Series>,
+}
+
+impl Corpus {
+    pub fn new(series: Vec<Series>) -> Self {
+        Self { series }
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    pub fn by_freq(&self, freq: Frequency) -> Vec<&Series> {
+        self.series.iter().filter(|s| s.freq == freq).collect()
+    }
+
+    /// Count table keyed by (frequency, category) — the shape of paper
+    /// Table 2.
+    pub fn count_table(&self) -> BTreeMap<(Frequency, Category), usize> {
+        let mut t = BTreeMap::new();
+        for s in &self.series {
+            *t.entry((s.freq, s.category)).or_insert(0) += 1;
+        }
+        t
+    }
+
+    /// Series lengths for one frequency (input to Table 3 stats).
+    pub fn lengths(&self, freq: Frequency) -> Vec<usize> {
+        self.series
+            .iter()
+            .filter(|s| s.freq == freq)
+            .map(|s| s.len())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(freq: Frequency, cat: Category, n: usize) -> Series {
+        Series {
+            id: format!("{}-{}-{}", freq.name(), cat.name(), n),
+            freq,
+            category: cat,
+            values: vec![1.0; n],
+        }
+    }
+
+    #[test]
+    fn onehot_puts_one_in_category_slot() {
+        let s = mk(Frequency::Monthly, Category::Finance, 5);
+        let oh = s.category_onehot();
+        assert_eq!(oh.iter().sum::<f32>(), 1.0);
+        assert_eq!(oh[Category::Finance.index()], 1.0);
+    }
+
+    #[test]
+    fn count_table_groups() {
+        let c = Corpus::new(vec![
+            mk(Frequency::Yearly, Category::Macro, 10),
+            mk(Frequency::Yearly, Category::Macro, 12),
+            mk(Frequency::Monthly, Category::Micro, 80),
+        ]);
+        let t = c.count_table();
+        assert_eq!(t[&(Frequency::Yearly, Category::Macro)], 2);
+        assert_eq!(t[&(Frequency::Monthly, Category::Micro)], 1);
+        assert_eq!(c.lengths(Frequency::Yearly), vec![10, 12]);
+    }
+}

@@ -1,0 +1,320 @@
+//! Forecast service: a vLLM-router-style request loop over the predict
+//! artifact.
+//!
+//! Clients submit single series; the service dynamically batches them
+//! (collect-until-deadline, like continuous batching in serving systems),
+//! picks the smallest compiled batch size that fits, pads the remainder,
+//! executes the AOT predict program and fans the results back out.
+//!
+//! The PJRT client is not `Send`, so the engine lives on a dedicated
+//! service thread; the public [`ForecastHandle`] is a cheap clonable
+//! channel endpoint usable from any thread (no async runtime available
+//! offline — std threads + mpsc).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Category, Frequency, NetworkConfig};
+use crate::coordinator::{ModelState, ParamStore};
+use crate::hw;
+use crate::runtime::{Engine, HostTensor, Manifest};
+
+/// A single forecast request: raw history (≥ C values) + category.
+#[derive(Debug, Clone)]
+pub struct ForecastRequest {
+    pub id: String,
+    pub values: Vec<f32>,
+    pub category: Category,
+}
+
+/// The H-step forecast for one request.
+#[derive(Debug, Clone)]
+pub struct ForecastResponse {
+    pub id: String,
+    pub forecast: Vec<f32>,
+}
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceOptions {
+    /// How long to hold the first request while more arrive.
+    pub batch_window: Duration,
+    /// Cap on requests per executed batch (≤ largest compiled size).
+    pub max_batch: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        Self { batch_window: Duration::from_millis(4), max_batch: 256 }
+    }
+}
+
+/// Counters exposed for tests/benches.
+#[derive(Debug, Default, Clone)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+}
+
+enum Msg {
+    Request(ForecastRequest, mpsc::Sender<Result<ForecastResponse>>),
+    Stats(mpsc::Sender<ServiceStats>),
+    Shutdown,
+}
+
+/// Clonable client handle to a running service.
+#[derive(Clone)]
+pub struct ForecastHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ForecastHandle {
+    /// Blocking single forecast.
+    pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(req, tx))
+            .map_err(|_| anyhow!("forecast service is down"))?;
+        rx.recv().map_err(|_| anyhow!("forecast service dropped reply"))?
+    }
+
+    /// Submit without waiting; returns the reply receiver.
+    pub fn submit(&self, req: ForecastRequest)
+                  -> Result<mpsc::Receiver<Result<ForecastResponse>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(req, tx))
+            .map_err(|_| anyhow!("forecast service is down"))?;
+        Ok(rx)
+    }
+
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| anyhow!("forecast service is down"))?;
+        rx.recv().map_err(|_| anyhow!("forecast service dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// A running forecast service (engine thread + request channel).
+pub struct ForecastService {
+    pub handle: ForecastHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ForecastService {
+    /// Start the service for one frequency. `state` is a trained
+    /// [`ModelState`]; requests for series the model was not trained on
+    /// get classical primer parameters (the shared RNN generalizes —
+    /// paper §9's "generalization towards specific problems").
+    pub fn start(artifacts_dir: std::path::PathBuf, freq: Frequency,
+                 state: ModelState, opts: ServiceOptions) -> Result<Self> {
+        let net = NetworkConfig::for_freq(freq)?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("forecast-{}", freq.name()))
+            .spawn(move || {
+                match Engine::load(&artifacts_dir) {
+                    Ok(engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        serve(engine, net, state, opts, rx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("service thread died during startup"))??;
+        Ok(Self { handle: ForecastHandle { tx }, join: Some(join) })
+    }
+}
+
+impl Drop for ForecastService {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Pick the smallest compiled batch that fits `n` (or the largest
+/// available if none fits — callers cap at max_batch anyway).
+fn pick_batch(available: &[usize], n: usize) -> usize {
+    available
+        .iter()
+        .copied()
+        .filter(|b| *b >= n)
+        .min()
+        .unwrap_or_else(|| available.iter().copied().max().unwrap_or(1))
+}
+
+fn serve(engine: Engine, net: NetworkConfig, state: ModelState,
+         opts: ServiceOptions, rx: mpsc::Receiver<Msg>) {
+    let freq = net.freq.name().to_string();
+    let available = engine.manifest().available_batches(&freq, "predict");
+    let mut stats = ServiceStats::default();
+
+    loop {
+        // Block for the first message.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let mut pending: Vec<(ForecastRequest,
+                              mpsc::Sender<Result<ForecastResponse>>)> = Vec::new();
+        match first {
+            Msg::Shutdown => return,
+            Msg::Stats(tx) => {
+                let _ = tx.send(stats.clone());
+                continue;
+            }
+            Msg::Request(r, tx) => pending.push((r, tx)),
+        }
+        // Dynamic batching window: gather more requests until deadline.
+        let deadline = Instant::now() + opts.batch_window;
+        while pending.len() < opts.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Request(r, tx)) => pending.push((r, tx)),
+                Ok(Msg::Stats(tx)) => {
+                    let _ = tx.send(stats.clone());
+                }
+                Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Serve what we have, then exit.
+                    run_batch(&engine, &net, &state, &available, &mut stats,
+                              &mut pending);
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+            }
+        }
+        run_batch(&engine, &net, &state, &available, &mut stats, &mut pending);
+    }
+}
+
+fn run_batch(engine: &Engine, net: &NetworkConfig, state: &ModelState,
+             available: &[usize], stats: &mut ServiceStats,
+             pending: &mut Vec<(ForecastRequest,
+                                mpsc::Sender<Result<ForecastResponse>>)>) {
+    if pending.is_empty() {
+        return;
+    }
+    stats.requests += pending.len() as u64;
+    stats.batches += 1;
+    let result = execute_batch(engine, net, state, available, stats, pending);
+    match result {
+        Ok(forecasts) => {
+            for ((req, tx), fc) in pending.drain(..).zip(forecasts) {
+                let _ = tx.send(Ok(ForecastResponse { id: req.id, forecast: fc }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (_, tx) in pending.drain(..) {
+                let _ = tx.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+fn execute_batch(engine: &Engine, net: &NetworkConfig, state: &ModelState,
+                 available: &[usize], stats: &mut ServiceStats,
+                 pending: &[(ForecastRequest,
+                             mpsc::Sender<Result<ForecastResponse>>)])
+                 -> Result<Vec<Vec<f32>>> {
+    let n = pending.len();
+    let b = pick_batch(available, n);
+    let c = net.length;
+    let h = net.horizon;
+    stats.padded_slots += (b - n.min(b)) as u64;
+
+    // Assemble y/cat plus per-request primer parameters.
+    let mut y = Vec::with_capacity(b * c);
+    let mut cat = vec![0.0f32; b * 6];
+    let mut inputs: HashMap<String, HostTensor> = HashMap::new();
+    let s_width = net.total_seasonality();
+    let mut alpha = Vec::with_capacity(b);
+    let mut gamma = Vec::with_capacity(b);
+    let mut gamma2 = Vec::with_capacity(b);
+    let mut s_init = Vec::with_capacity(b * s_width);
+    for slot in 0..b {
+        let (req, _) = &pending[slot.min(n - 1)];
+        if req.values.len() < c {
+            bail!("request `{}`: need ≥ {c} values, got {}", req.id,
+                  req.values.len());
+        }
+        let window = &req.values[req.values.len() - c..];
+        y.extend_from_slice(window);
+        cat[slot * 6 + req.category.index()] = 1.0;
+        let p = hw::primer_for(window, net.seasonality, net.seasonality2);
+        alpha.push(p.alpha_logit);
+        gamma.push(p.gamma_logit);
+        gamma2.push(p.gamma2_logit);
+        s_init.extend_from_slice(&p.log_s_init);
+    }
+    inputs.insert("data.y".into(), HostTensor::new(vec![b, c], y)?);
+    inputs.insert("data.cat".into(), HostTensor::new(vec![b, 6], cat)?);
+    inputs.insert("params.series.alpha_logit".into(),
+                  HostTensor::new(vec![b], alpha)?);
+    inputs.insert("params.series.gamma_logit".into(),
+                  HostTensor::new(vec![b], gamma)?);
+    inputs.insert("params.series.gamma2_logit".into(),
+                  HostTensor::new(vec![b], gamma2)?);
+    inputs.insert("params.series.log_s_init".into(),
+                  HostTensor::new(vec![b, s_width], s_init)?);
+
+    let name = Manifest::program_name(net.freq.name(), b, "predict");
+    let outs = engine.execute_named(&name, |spec| {
+        inputs
+            .get(&spec.name)
+            .or_else(|| state.tensors.get(&spec.name))
+            .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
+    })?;
+    let fc = &outs[0].1;
+    Ok((0..n).map(|i| fc.data[i * h..(i + 1) * h].to_vec()).collect())
+}
+
+/// Build a `ParamStore`-free state for serving from a checkpoint-less
+/// trained trainer (convenience re-export point; see examples).
+pub fn state_from_parts(state: ModelState, _store: &ParamStore) -> ModelState {
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_smallest_fitting() {
+        let avail = vec![1, 16, 64, 256];
+        assert_eq!(pick_batch(&avail, 1), 1);
+        assert_eq!(pick_batch(&avail, 2), 16);
+        assert_eq!(pick_batch(&avail, 16), 16);
+        assert_eq!(pick_batch(&avail, 17), 64);
+        assert_eq!(pick_batch(&avail, 500), 256); // cap at largest
+    }
+
+    #[test]
+    fn default_options_sane() {
+        let o = ServiceOptions::default();
+        assert!(o.max_batch >= 1);
+        assert!(o.batch_window >= Duration::from_millis(1));
+    }
+}

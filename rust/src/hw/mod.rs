@@ -1,0 +1,296 @@
+//! Classical Holt-Winters machinery on the Rust side.
+//!
+//! Two jobs:
+//! 1. **Primer** (paper §3.3): before joint training starts, each series
+//!    gets classical estimates of its initial seasonality indices (ratio-
+//!    to-moving-average decomposition) and starting smoothing coefficients.
+//!    These seed the per-series parameter store; joint training then tunes
+//!    them by gradient descent.
+//! 2. **Filter**: a pure-Rust mirror of the L1 Pallas recurrence
+//!    (`es_smoothing`), used by property tests to cross-check the artifact
+//!    numerics and by the classical baselines.
+
+use crate::util::rng::Rng;
+
+/// Inverse sigmoid.
+pub fn logit(p: f32) -> f32 {
+    let p = p.clamp(1e-6, 1.0 - 1e-6);
+    (p / (1.0 - p)).ln()
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Default starting smoothing coefficients (tuned mild; training moves
+/// them per series).
+pub const INIT_ALPHA: f32 = 0.30;
+pub const INIT_GAMMA: f32 = 0.10;
+
+/// Per-series primer output: what the coordinator writes into the store.
+#[derive(Debug, Clone)]
+pub struct Primer {
+    pub alpha_logit: f32,
+    pub gamma_logit: f32,
+    /// §8.2 second smoothing coefficient (unused when seasonality2 = 0).
+    pub gamma2_logit: f32,
+    /// log of the initial seasonality indices: `[S1]`, or `[S1 | S2]`
+    /// packed back-to-back for dual-seasonality configs.
+    pub log_s_init: Vec<f32>,
+}
+
+/// Ratio-to-moving-average seasonal decomposition (multiplicative).
+///
+/// Returns `period` seasonality indices normalized to mean 1. For
+/// `period == 1` (non-seasonal) returns `[1.0]`.
+pub fn seasonal_indices(y: &[f32], period: usize) -> Vec<f32> {
+    if period <= 1 || y.len() < 2 * period {
+        return vec![1.0; period.max(1)];
+    }
+    // Centered moving average of window `period`.
+    let n = y.len();
+    let half = period / 2;
+    let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); period];
+    for t in half..n - half {
+        let (lo, hi) = (t - half, t + half);
+        // Centered MA: plain window for odd periods, 2×S (half-weighted
+        // endpoints) for even periods — the standard decomposition MA.
+        let ma: f64 = if period % 2 == 0 {
+            let mid: f64 = y[lo + 1..hi].iter().map(|v| *v as f64).sum();
+            (0.5 * y[lo] as f64 + mid + 0.5 * y[hi] as f64) / period as f64
+        } else {
+            y[lo..=hi].iter().map(|v| *v as f64).sum::<f64>()
+                / (hi - lo + 1) as f64
+        };
+        if ma > 0.0 {
+            ratios[t % period].push(y[t] as f64 / ma);
+        }
+    }
+    let mut idx: Vec<f64> = ratios
+        .iter()
+        .map(|r| {
+            if r.is_empty() {
+                1.0
+            } else {
+                r.iter().sum::<f64>() / r.len() as f64
+            }
+        })
+        .collect();
+    // Normalize to mean 1 (multiplicative convention).
+    let mean = idx.iter().sum::<f64>() / period as f64;
+    if mean > 0.0 {
+        for v in &mut idx {
+            *v /= mean;
+        }
+    }
+    idx.iter().map(|v| (*v as f32).clamp(0.05, 20.0)).collect()
+}
+
+/// Build the primer for one series (paper §3.3 "primer estimate").
+pub fn primer(y: &[f32], period: usize) -> Primer {
+    let s = seasonal_indices(y, period);
+    Primer {
+        alpha_logit: logit(INIT_ALPHA),
+        gamma_logit: logit(INIT_GAMMA),
+        gamma2_logit: logit(INIT_GAMMA),
+        log_s_init: s.iter().map(|v| v.max(1e-6).ln()).collect(),
+    }
+}
+
+/// §8.2 dual-seasonality primer: decompose the primary cycle first, then
+/// the secondary cycle on the residual (Gould et al. 2008 ordering).
+pub fn primer_dual(y: &[f32], s1: usize, s2: usize) -> Primer {
+    let idx1 = seasonal_indices(y, s1);
+    let residual: Vec<f32> = y
+        .iter()
+        .enumerate()
+        .map(|(t, v)| v / idx1[t % s1].max(1e-6))
+        .collect();
+    let idx2 = seasonal_indices(&residual, s2);
+    let mut log_s = Vec::with_capacity(s1 + s2);
+    log_s.extend(idx1.iter().map(|v| v.max(1e-6).ln()));
+    log_s.extend(idx2.iter().map(|v| v.max(1e-6).ln()));
+    Primer {
+        alpha_logit: logit(INIT_ALPHA),
+        gamma_logit: logit(INIT_GAMMA),
+        gamma2_logit: logit(INIT_GAMMA),
+        log_s_init: log_s,
+    }
+}
+
+/// Primer dispatch on the network config shape.
+pub fn primer_for(y: &[f32], s1: usize, s2: usize) -> Primer {
+    if s2 > 0 {
+        primer_dual(y, s1, s2)
+    } else {
+        primer(y, s1)
+    }
+}
+
+/// Optionally jitter a primer (symmetry breaking across identical series).
+pub fn primer_jittered(y: &[f32], period: usize, rng: &mut Rng) -> Primer {
+    let mut p = primer(y, period);
+    p.alpha_logit += rng.normal_scaled(0.0, 0.05) as f32;
+    p.gamma_logit += rng.normal_scaled(0.0, 0.05) as f32;
+    p
+}
+
+/// Pure-Rust mirror of the dual-seasonality recurrence (`es_dual`),
+/// §8.2. Returns (levels, seas1 [C+S1], seas2 [C+S2]).
+pub fn es_dual_filter(y: &[f32], alpha: f32, gamma1: f32, gamma2: f32,
+                      s1_init: &[f32], s2_init: &[f32])
+                      -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let c = y.len();
+    let (s1, s2) = (s1_init.len(), s2_init.len());
+    let mut seas1 = Vec::with_capacity(c + s1);
+    let mut seas2 = Vec::with_capacity(c + s2);
+    seas1.extend_from_slice(s1_init);
+    seas2.extend_from_slice(s2_init);
+    let mut levels = Vec::with_capacity(c);
+    let mut l_prev = 0.0f32;
+    for t in 0..c {
+        let s1_t = seas1[t];
+        let s2_t = seas2[t];
+        let denom = s1_t * s2_t;
+        let l_t = if t == 0 {
+            y[0] / denom
+        } else {
+            alpha * y[t] / denom + (1.0 - alpha) * l_prev
+        };
+        seas1.push(gamma1 * y[t] / (l_t * s2_t) + (1.0 - gamma1) * s1_t);
+        seas2.push(gamma2 * y[t] / (l_t * s1_t) + (1.0 - gamma2) * s2_t);
+        levels.push(l_t);
+        l_prev = l_t;
+    }
+    (levels, seas1, seas2)
+}
+
+/// Output of the ES filter (mirror of the Pallas kernel contract).
+#[derive(Debug, Clone)]
+pub struct EsOutput {
+    /// l_t for t = 0..C-1.
+    pub levels: Vec<f32>,
+    /// s_t for t = 0..C+S-1 (first S = initial indices).
+    pub seas: Vec<f32>,
+}
+
+/// Pure-Rust mirror of the L1 `es_smoothing` recurrence (Eqs. 1, 3 with
+/// the trend term removed). Must stay in lock-step with
+/// `python/compile/kernels/ref.py::es_smoothing_ref` — the integration
+/// tests compare artifact output against this.
+pub fn es_filter(y: &[f32], alpha: f32, gamma: f32, s_init: &[f32]) -> EsOutput {
+    let c = y.len();
+    let s_len = s_init.len().max(1);
+    let mut seas = Vec::with_capacity(c + s_len);
+    seas.extend_from_slice(s_init);
+    let mut levels = Vec::with_capacity(c);
+    let mut l_prev = 0.0f32;
+    for t in 0..c {
+        let s_t = seas[t];
+        let l_t = if t == 0 {
+            y[0] / s_t
+        } else {
+            alpha * y[t] / s_t + (1.0 - alpha) * l_prev
+        };
+        let s_next = gamma * y[t] / l_t + (1.0 - gamma) * s_t;
+        seas.push(s_next);
+        levels.push(l_t);
+        l_prev = l_t;
+    }
+    EsOutput { levels, seas }
+}
+
+/// Holt-Winters point forecast from filter state (Eq. 4 with b ≡ 1, i.e.
+/// the ES-RNN pre-processing's own h-step forecast — used as a baseline
+/// sanity check and in tests).
+pub fn es_forecast(out: &EsOutput, period: usize, horizon: usize) -> Vec<f32> {
+    let c = out.levels.len();
+    let l = out.levels[c - 1];
+    let s_len = period.max(1);
+    (0..horizon)
+        .map(|h| {
+            let idx = c + (h % s_len);
+            l * out.seas.get(idx).copied().unwrap_or(1.0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logit_sigmoid_roundtrip() {
+        for p in [0.1f32, 0.3, 0.5, 0.9] {
+            assert!((sigmoid(logit(p)) - p).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn seasonal_indices_recover_planted_pattern() {
+        // y_t = 100 * s_{t%4}, s = [0.8, 1.1, 1.2, 0.9]
+        let s_true = [0.8f32, 1.1, 1.2, 0.9];
+        let y: Vec<f32> = (0..48).map(|t| 100.0 * s_true[t % 4]).collect();
+        let idx = seasonal_indices(&y, 4);
+        for (est, truth) in idx.iter().zip(&s_true) {
+            assert!((est - truth).abs() < 0.02, "est {est} vs {truth}");
+        }
+        // mean-1 normalization
+        let mean: f32 = idx.iter().sum::<f32>() / 4.0;
+        assert!((mean - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn seasonal_indices_nonseasonal_is_ones() {
+        let y = vec![5.0f32; 30];
+        assert_eq!(seasonal_indices(&y, 1), vec![1.0]);
+        // Too-short series also degrade gracefully.
+        assert_eq!(seasonal_indices(&y[..5], 12), vec![1.0; 12]);
+    }
+
+    #[test]
+    fn es_filter_constant_series_is_flat() {
+        let y = vec![10.0f32; 20];
+        let out = es_filter(&y, 0.3, 0.1, &[1.0]);
+        for l in &out.levels {
+            assert!((l - 10.0).abs() < 1e-4);
+        }
+        for s in &out.seas {
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+        let fc = es_forecast(&out, 1, 4);
+        assert!(fc.iter().all(|v| (v - 10.0).abs() < 1e-3));
+    }
+
+    #[test]
+    fn es_filter_tracks_level_shift() {
+        let mut y = vec![10.0f32; 10];
+        y.extend(vec![20.0f32; 30]);
+        let out = es_filter(&y, 0.5, 0.0, &[1.0]);
+        assert!((out.levels.last().unwrap() - 20.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn primer_matches_decomposition() {
+        let s_true = [0.8f32, 1.2];
+        let y: Vec<f32> = (0..40).map(|t| 50.0 * s_true[t % 2]).collect();
+        let p = primer(&y, 2);
+        assert_eq!(p.log_s_init.len(), 2);
+        assert!((p.log_s_init[0].exp() - 0.8).abs() < 0.05);
+        assert!((sigmoid(p.alpha_logit) - INIT_ALPHA).abs() < 1e-5);
+    }
+
+    #[test]
+    fn es_filter_seasonal_recovery() {
+        // Planted multiplicative seasonality; filter with the true s_init
+        // keeps seasonality stable.
+        let s_true = [0.7f32, 1.3];
+        let y: Vec<f32> = (0..60).map(|t| 100.0 * s_true[t % 2]).collect();
+        let out = es_filter(&y, 0.2, 0.2, &s_true);
+        let c = y.len();
+        // final seasonal states stay near truth
+        assert!((out.seas[c] / out.seas[c + 1] - 0.7 / 1.3).abs() < 0.05);
+        let fc = es_forecast(&out, 2, 4);
+        assert!((fc[0] / fc[1] - 0.7 / 1.3).abs() < 0.05);
+    }
+}

@@ -1,0 +1,30 @@
+//! # Fast ES-RNN
+//!
+//! A production-grade reproduction of *"Fast ES-RNN: A GPU Implementation of
+//! the ES-RNN Algorithm"* (Redd, Khin & Marini, 2019): the M4-winning hybrid
+//! of per-series Holt-Winters exponential smoothing and a shared
+//! dilated-residual LSTM, vectorized so the per-series parameters become
+//! batch-dimension tensor slices.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L1** — Pallas kernels (batched ES recurrence, fused LSTM cell,
+//!   pinball loss), compiled into
+//! * **L2** — the JAX ES-RNN compute graph, AOT-lowered to HLO text, loaded
+//!   and executed by
+//! * **L3** — this crate: dataset pipeline, per-series parameter store,
+//!   batch scheduler, training driver, evaluation, classical baselines,
+//!   forecast service and CLI.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod forecast;
+pub mod hw;
+pub mod metrics;
+pub mod runtime;
+pub mod telemetry;
+pub mod util;

@@ -1,0 +1,304 @@
+//! `fast-esrnn` CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands:
+//!   data-gen   generate the synthetic M4-like corpus (+ Tables 2/3 report)
+//!   train      train ES-RNN for one or more frequencies, save checkpoints
+//!   evaluate   score a checkpoint on the test holdout
+//!   baselines  run the classical baselines (incl. the M4 Comb benchmark)
+//!   serve      demo of the dynamic-batching forecast service
+//!
+//! Everything runs from the AOT artifacts in `--artifacts` (default
+//! `artifacts/`); Python is never invoked.
+
+use anyhow::{bail, Result};
+
+use fast_esrnn::baselines::{all_baselines, Comb, Forecaster};
+use fast_esrnn::config::{Category, Frequency, NetworkConfig, TrainConfig,
+                         ALL_CATEGORIES, MODELED_FREQS};
+use fast_esrnn::coordinator::{checkpoint, EvalSplit, Trainer};
+use fast_esrnn::data::{self, stats, Corpus, GenOptions};
+use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
+use fast_esrnn::metrics::{mase, smape};
+use fast_esrnn::runtime::Engine;
+use fast_esrnn::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        bail!("usage: fast-esrnn <data-gen|train|evaluate|baselines|serve> \
+               [options]\n       fast-esrnn <cmd> --help for details");
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "data-gen" => cmd_data_gen(rest),
+        "train" => cmd_train(rest),
+        "evaluate" => cmd_evaluate(rest),
+        "baselines" => cmd_baselines(rest),
+        "serve" => cmd_serve(rest),
+        other => bail!("unknown command `{other}`"),
+    }
+}
+
+fn load_or_gen_corpus(corpus_path: &str, scale: usize, seed: u64) -> Result<Corpus> {
+    if !corpus_path.is_empty() && std::path::Path::new(corpus_path).exists() {
+        println!("loading corpus from {corpus_path}");
+        return data::csv::load(corpus_path);
+    }
+    println!("generating synthetic M4-like corpus (scale 1/{scale}, seed {seed})");
+    Ok(data::generate(&GenOptions { scale, seed, freqs: None }))
+}
+
+fn parse_freqs(list: &[String]) -> Result<Vec<Frequency>> {
+    if list.len() == 1 && list[0] == "all" {
+        return Ok(MODELED_FREQS.to_vec());
+    }
+    list.iter().map(|s| Frequency::parse(s)).collect()
+}
+
+// ---------------------------------------------------------------------
+
+fn cmd_data_gen(args: &[String]) -> Result<()> {
+    let cli = Cli::new("data-gen", "generate the synthetic M4-like corpus")
+        .opt("scale", "100", "divide Table 2 counts by this")
+        .opt("seed", "20190603", "corpus RNG seed")
+        .opt("out", "", "write corpus CSV here (optional)")
+        .flag("report", "print Tables 2/3-style summaries");
+    let a = cli.parse(args)?;
+    let corpus = data::generate(&GenOptions {
+        scale: a.get_usize("scale")?,
+        seed: a.get_u64("seed")?,
+        freqs: None,
+    });
+    println!("generated {} series", corpus.len());
+    if a.get_flag("report") {
+        println!("\n== Table 2 analogue: counts by frequency × category ==");
+        print!("{}", stats::render_count_table(&corpus));
+        println!("\n== Table 3 analogue: series length statistics ==");
+        print!("{}", stats::render_length_table(&corpus));
+        println!("\n== §5.2 equalization retention ==");
+        print!("{}", stats::retention_report(&corpus));
+    }
+    let out = a.get("out");
+    if !out.is_empty() {
+        data::csv::save(&corpus, out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cli = Cli::new("train", "train ES-RNN per frequency")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("freqs", "all", "comma list: yearly,quarterly,monthly or `all`")
+        .opt("scale", "100", "synthetic corpus scale divisor")
+        .opt("corpus", "", "load corpus CSV instead of generating")
+        .opt("epochs", "15", "training epochs")
+        .opt("batch-size", "64", "train batch size (needs matching artifact)")
+        .opt("lr", "0.001", "Adam learning rate")
+        .opt("seed", "42", "training seed")
+        .opt("checkpoint-dir", "checkpoints", "save checkpoints here")
+        .flag("quiet", "suppress per-epoch logs");
+    let a = cli.parse(args)?;
+    let engine = Engine::load(a.get("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+    let corpus = load_or_gen_corpus(a.get("corpus"), a.get_usize("scale")?,
+                                    20190603)?;
+    let freqs = parse_freqs(&a.get_str_list("freqs"))?;
+    std::fs::create_dir_all(a.get("checkpoint-dir"))?;
+
+    for freq in freqs {
+        let tc = TrainConfig {
+            epochs: a.get_usize("epochs")?,
+            batch_size: a.get_usize("batch-size")?,
+            learning_rate: a.get_f32("lr")?,
+            seed: a.get_u64("seed")?,
+            ..Default::default()
+        };
+        println!("\n=== training {} ({} epochs, batch {}) ===",
+                 freq.name(), tc.epochs, tc.batch_size);
+        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        println!("  {} series after §5.2 equalization ({} discarded)",
+                 trainer.series_count(), trainer.set.discarded);
+        let report = trainer.train(!a.get_flag("quiet"))?;
+        let test = trainer.evaluate(EvalSplit::Test)?;
+        println!("  [{}] test sMAPE {:.3}  MASE {:.3}  ({} series, {:.1}s, \
+                  {} steps)",
+                 freq.name(), test.smape, test.mase, test.count,
+                 report.train_secs, report.steps);
+        let path = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
+        checkpoint::save(&path, freq.name(), &trainer.state, &trainer.store)?;
+        println!("  checkpoint → {path}");
+        if !a.get_flag("quiet") {
+            println!("{}", trainer.telemetry.report());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &[String]) -> Result<()> {
+    let cli = Cli::new("evaluate", "score a checkpoint on the test holdout")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("freqs", "all", "frequencies")
+        .opt("scale", "100", "synthetic corpus scale divisor")
+        .opt("corpus", "", "corpus CSV (must match training corpus)")
+        .opt("checkpoint-dir", "checkpoints", "checkpoint directory")
+        .opt("batch-size", "64", "batch artifact used for store sizing")
+        .opt("seed", "42", "seed (must match training for primer layout)");
+    let a = cli.parse(args)?;
+    let engine = Engine::load(a.get("artifacts"))?;
+    let corpus = load_or_gen_corpus(a.get("corpus"), a.get_usize("scale")?,
+                                    20190603)?;
+    let freqs = parse_freqs(&a.get_str_list("freqs"))?;
+
+    println!("\n{:<10} {:>8} {:>8} {:>8}  per-category sMAPE", "freq",
+             "series", "sMAPE", "MASE");
+    for freq in freqs {
+        let tc = TrainConfig {
+            batch_size: a.get_usize("batch-size")?,
+            seed: a.get_u64("seed")?,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let path = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
+        checkpoint::load(&path, &mut trainer.state, &mut trainer.store)?;
+        let test = trainer.evaluate(EvalSplit::Test)?;
+        let cats: Vec<String> = ALL_CATEGORIES
+            .iter()
+            .filter_map(|c| {
+                test.category_smape(c.name())
+                    .map(|v| format!("{}={:.2}", c.name(), v))
+            })
+            .collect();
+        println!("{:<10} {:>8} {:>8.3} {:>8.3}  {}", freq.name(), test.count,
+                 test.smape, test.mase, cats.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_baselines(args: &[String]) -> Result<()> {
+    let cli = Cli::new("baselines", "classical baselines incl. M4 Comb")
+        .opt("freqs", "all", "frequencies")
+        .opt("scale", "100", "synthetic corpus scale divisor")
+        .opt("corpus", "", "corpus CSV");
+    let a = cli.parse(args)?;
+    let corpus = load_or_gen_corpus(a.get("corpus"), a.get_usize("scale")?,
+                                    20190603)?;
+    let freqs = parse_freqs(&a.get_str_list("freqs"))?;
+
+    for freq in freqs {
+        let net = NetworkConfig::for_freq(freq)?;
+        let set = data::split_corpus(&corpus, &net)?;
+        println!("\n=== {} ({} series) ===", freq.name(), set.series.len());
+        println!("{:<14} {:>8} {:>8}", "method", "sMAPE", "MASE");
+        for method in all_baselines() {
+            let mut s_acc = 0.0;
+            let mut m_acc = 0.0;
+            for sp in &set.series {
+                let fc = method.forecast(&sp.refit, net.seasonality, net.horizon);
+                s_acc += smape(&fc, &sp.test);
+                m_acc += mase(&fc, &sp.test, sp.mase_scale);
+            }
+            let n = set.series.len() as f64;
+            println!("{:<14} {:>8.3} {:>8.3}", method.name(), s_acc / n,
+                     m_acc / n);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cli = Cli::new("serve", "demo the dynamic-batching forecast service")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("freq", "quarterly", "frequency to serve")
+        .opt("checkpoint-dir", "checkpoints", "checkpoint directory")
+        .opt("requests", "64", "number of demo requests")
+        .opt("scale", "200", "corpus scale for demo request data");
+    let a = cli.parse(args)?;
+    let freq = Frequency::parse(a.get("freq"))?;
+    let net = NetworkConfig::for_freq(freq)?;
+
+    // Load a trained model if present; otherwise serve with fresh weights
+    // (still exercises the full service path).
+    let state = {
+        let engine = Engine::load(a.get("artifacts"))?;
+        let mut state = fast_esrnn::coordinator::ModelState::init(
+            &engine, freq.name(), 42)?;
+        let ckpt = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
+        if std::path::Path::new(&ckpt).exists() {
+            println!("serving RNN weights from {ckpt}");
+            let text = std::fs::read_to_string(&ckpt)?;
+            let doc = fast_esrnn::util::json::Json::parse(&text)?;
+            let n = doc.get("n_series")?.as_usize()?;
+            let primer = fast_esrnn::hw::Primer {
+                alpha_logit: 0.0,
+                gamma_logit: 0.0,
+                gamma2_logit: 0.0,
+                log_s_init: vec![0.0; net.total_seasonality()],
+            };
+            let mut store = fast_esrnn::coordinator::ParamStore::from_primers_dual(
+                &vec![primer; n], net.seasonality, net.seasonality2)?;
+            checkpoint::load(&ckpt, &mut state, &mut store)?;
+        }
+        state
+    }; // engine dropped: the service owns its own engine thread
+
+    let service = ForecastService::start(
+        a.get("artifacts").into(), freq, state, ServiceOptions::default())?;
+
+    // Fire demo requests from generated series.
+    let corpus = data::generate(&GenOptions {
+        scale: a.get_usize("scale")?,
+        seed: 7,
+        freqs: Some(vec![freq]),
+    });
+    let n_req = a.get_usize("requests")?;
+    let mut receivers = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut sent = 0usize;
+    for s in corpus.series.iter().cycle() {
+        if sent >= n_req {
+            break;
+        }
+        if s.len() < net.length {
+            continue;
+        }
+        receivers.push(service.handle.submit(ForecastRequest {
+            id: s.id.clone(),
+            values: s.values.clone(),
+            category: s.category,
+        })?);
+        sent += 1;
+    }
+    let mut ok = 0usize;
+    for rx in receivers {
+        let resp = rx.recv()??;
+        assert_eq!(resp.forecast.len(), net.horizon);
+        ok += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let st = service.handle.stats()?;
+    println!("served {ok}/{n_req} requests in {:.3}s \
+              ({:.1} req/s; {} batches, {} padded slots)",
+             secs, ok as f64 / secs, st.batches, st.padded_slots);
+
+    // Show one example forecast vs the Comb baseline for color.
+    if let Some(s) = corpus.series.iter().find(|s| s.len() >= net.length) {
+        let resp = service.handle.forecast(ForecastRequest {
+            id: s.id.clone(),
+            values: s.values.clone(),
+            category: Category::Other,
+        })?;
+        let comb = Comb.forecast(&s.values, net.seasonality, net.horizon);
+        println!("\nexample `{}`:\n  es-rnn: {:?}\n  comb:   {:?}", s.id,
+                 &resp.forecast[..4.min(resp.forecast.len())],
+                 &comb[..4.min(comb.len())]);
+    }
+    Ok(())
+}

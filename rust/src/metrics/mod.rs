@@ -1,0 +1,166 @@
+//! Forecast accuracy metrics (paper §3.5 + M4 conventions): sMAPE, MASE,
+//! OWA, pinball — plus aggregation helpers used by the Table 4/6 benches.
+
+use std::collections::BTreeMap;
+
+/// Symmetric Mean Absolute Percentage Error, in percent (M4 definition):
+/// `200/h * Σ |y - ŷ| / (|y| + |ŷ|)`.
+pub fn smape(forecast: &[f32], actual: &[f32]) -> f64 {
+    assert_eq!(forecast.len(), actual.len());
+    assert!(!forecast.is_empty());
+    let mut acc = 0.0f64;
+    for (f, a) in forecast.iter().zip(actual) {
+        let denom = (f.abs() + a.abs()) as f64;
+        if denom > 0.0 {
+            acc += 200.0 * (f - a).abs() as f64 / denom;
+        }
+    }
+    acc / forecast.len() as f64
+}
+
+/// Mean Absolute Scaled Error. `scale` is the in-sample mean absolute
+/// seasonal-naive error (see `data::split::mase_scale`).
+pub fn mase(forecast: &[f32], actual: &[f32], scale: f32) -> f64 {
+    assert_eq!(forecast.len(), actual.len());
+    assert!(!forecast.is_empty());
+    let scale = if scale > 0.0 { scale as f64 } else { 1.0 };
+    let mae: f64 = forecast
+        .iter()
+        .zip(actual)
+        .map(|(f, a)| (f - a).abs() as f64)
+        .sum::<f64>()
+        / forecast.len() as f64;
+    mae / scale
+}
+
+/// Pinball (quantile) loss at `tau` — the training surrogate (§3.5).
+pub fn pinball(forecast: &[f32], actual: &[f32], tau: f64) -> f64 {
+    assert_eq!(forecast.len(), actual.len());
+    assert!(!forecast.is_empty());
+    let mut acc = 0.0f64;
+    for (f, a) in forecast.iter().zip(actual) {
+        let d = (a - f) as f64;
+        acc += (tau * d).max((tau - 1.0) * d);
+    }
+    acc / forecast.len() as f64
+}
+
+/// Overall Weighted Average relative to a benchmark method (M4):
+/// `OWA = 0.5 * (sMAPE/sMAPE_bench + MASE/MASE_bench)`.
+pub fn owa(smape_m: f64, mase_m: f64, smape_bench: f64, mase_bench: f64) -> f64 {
+    0.5 * (smape_m / smape_bench + mase_m / mase_bench)
+}
+
+/// Streaming accumulator for per-group metric means (Table 4 / Table 6).
+#[derive(Debug, Default, Clone)]
+pub struct MetricAccumulator {
+    groups: BTreeMap<String, (f64, f64, usize)>, // (Σ smape, Σ mase, n)
+}
+
+impl MetricAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, group: &str, smape_v: f64, mase_v: f64) {
+        let e = self.groups.entry(group.to_string()).or_insert((0.0, 0.0, 0));
+        e.0 += smape_v;
+        e.1 += mase_v;
+        e.2 += 1;
+    }
+
+    pub fn count(&self, group: &str) -> usize {
+        self.groups.get(group).map(|e| e.2).unwrap_or(0)
+    }
+
+    pub fn mean_smape(&self, group: &str) -> Option<f64> {
+        self.groups.get(group).and_then(|(s, _, n)| {
+            (*n > 0).then(|| s / *n as f64)
+        })
+    }
+
+    pub fn mean_mase(&self, group: &str) -> Option<f64> {
+        self.groups.get(group).and_then(|(_, m, n)| {
+            (*n > 0).then(|| m / *n as f64)
+        })
+    }
+
+    pub fn groups(&self) -> Vec<&str> {
+        self.groups.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Series-weighted overall mean across selected groups.
+    pub fn weighted_smape(&self, groups: &[&str]) -> Option<f64> {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for g in groups {
+            if let Some((s, _, c)) = self.groups.get(*g) {
+                acc += s;
+                n += c;
+            }
+        }
+        (n > 0).then(|| acc / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smape_perfect_forecast_is_zero() {
+        assert_eq!(smape(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn smape_known_value() {
+        // |10-8|/(10+8)*200 = 22.22...
+        let v = smape(&[10.0], &[8.0]);
+        assert!((v - 200.0 * 2.0 / 18.0).abs() < 1e-9);
+        // symmetric
+        assert!((smape(&[8.0], &[10.0]) - v).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smape_bounded_0_200() {
+        let v = smape(&[1.0], &[-1.0]);
+        assert!((v - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mase_scales_by_naive_error() {
+        // forecast off by 2 everywhere, naive scale 4 -> 0.5
+        let v = mase(&[3.0, 5.0], &[1.0, 3.0], 4.0);
+        assert!((v - 0.5).abs() < 1e-9);
+        // degenerate scale falls back to 1
+        assert_eq!(mase(&[2.0], &[1.0], 0.0), 1.0);
+    }
+
+    #[test]
+    fn pinball_asymmetry() {
+        // under-forecast penalized by tau, over-forecast by 1-tau
+        let under = pinball(&[0.0], &[1.0], 0.48); // d=1 -> 0.48
+        let over = pinball(&[1.0], &[0.0], 0.48); // d=-1 -> 0.52
+        assert!((under - 0.48).abs() < 1e-9);
+        assert!((over - 0.52).abs() < 1e-9);
+    }
+
+    #[test]
+    fn owa_of_benchmark_is_one() {
+        assert!((owa(12.0, 1.5, 12.0, 1.5) - 1.0).abs() < 1e-12);
+        assert!(owa(6.0, 0.75, 12.0, 1.5) < 1.0);
+    }
+
+    #[test]
+    fn accumulator_means_and_weights() {
+        let mut acc = MetricAccumulator::new();
+        acc.add("Finance", 10.0, 1.0);
+        acc.add("Finance", 20.0, 2.0);
+        acc.add("Macro", 30.0, 3.0);
+        assert_eq!(acc.mean_smape("Finance"), Some(15.0));
+        assert_eq!(acc.mean_mase("Macro"), Some(3.0));
+        assert_eq!(acc.count("Finance"), 2);
+        assert_eq!(acc.weighted_smape(&["Finance", "Macro"]), Some(20.0));
+        assert_eq!(acc.mean_smape("Nope"), None);
+    }
+}

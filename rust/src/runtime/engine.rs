@@ -1,0 +1,248 @@
+//! PJRT execution engine: loads AOT artifacts and runs them.
+//!
+//! The request-path half of the AOT bridge: `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`. Executables are compiled lazily on first
+//! use and cached for the life of the engine, so a training run pays one
+//! compile per (frequency, batch-size) program.
+//!
+//! All tensors are f32 on the wire except the `init` program's uint32 PRNG
+//! key. Host-side state lives in [`HostTensor`]s; packing/unpacking to
+//! [`xla::Literal`] is centralized here so the rest of the crate never
+//! touches XLA types directly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, TensorSpec};
+
+/// A host-resident tensor (f32, row-major) with its shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} needs {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal matching `spec` (validates shape).
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.shape != spec.shape {
+            return Err(anyhow!("tensor `{}`: host shape {:?} != manifest shape {:?}",
+                             spec.name, self.shape, spec.shape));
+        }
+        let lit = xla::Literal::vec1(&self.data);
+        if spec.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != spec.elem_count() {
+            return Err(anyhow!("tensor `{}`: literal has {} elems, manifest says {}",
+                             spec.name, data.len(), spec.elem_count()));
+        }
+        Ok(Self { shape: spec.shape.clone(), data })
+    }
+}
+
+/// Timing counters the telemetry layer scrapes.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub pack_secs: f64,
+    pub unpack_secs: f64,
+}
+
+/// Lazily-compiling PJRT engine over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<EngineStats>,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Compile (or fetch from cache) a program by manifest name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.program(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a program with f32 host tensors supplied by name.
+    ///
+    /// `lookup` is called once per manifest input, in order; outputs come
+    /// back as `(name, HostTensor)` pairs in manifest output order.
+    pub fn execute_named<'a, F>(
+        &self,
+        name: &str,
+        mut lookup: F,
+    ) -> Result<Vec<(String, HostTensor)>>
+    where
+        F: FnMut(&TensorSpec) -> Result<&'a HostTensor>,
+    {
+        let spec = self.manifest.program(name)?.clone();
+        let exe = self.executable(name)?;
+
+        let t0 = Instant::now();
+        let mut lits = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            if input.dtype != "float32" {
+                return Err(anyhow!("input `{}` has dtype {}, execute_named only \
+                                  handles float32 (use execute_literals)",
+                                 input.name, input.dtype));
+            }
+            let host = lookup(input)
+                .with_context(|| format!("packing input `{}`", input.name))?;
+            lits.push(host.to_literal(input)?);
+        }
+        let pack = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing `{name}`: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of `{name}`: {e}"))?;
+        let exec = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling `{name}`: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!("`{name}` returned {} outputs, manifest says {}",
+                             parts.len(), spec.outputs.len()));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&spec.outputs) {
+            out.push((ospec.name.clone(), HostTensor::from_literal(lit, ospec)?));
+        }
+        let unpack = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.pack_secs += pack;
+        st.execute_secs += exec;
+        st.unpack_secs += unpack;
+        Ok(out)
+    }
+
+    /// Execute the per-frequency `init` program: PRNG seed → RNN weights.
+    pub fn execute_init(&self, freq: &str, seed: u64) -> Result<Vec<(String, HostTensor)>> {
+        let name = Manifest::program_name(freq, 0, "init");
+        let spec = self.manifest.program(&name)?.clone();
+        let exe = self.executable(&name)?;
+        let key = [(seed >> 32) as u32, seed as u32];
+        let lit = xla::Literal::vec1(&key);
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("executing `{name}`: {e}"))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!("`{name}` returned {} outputs, manifest says {}",
+                             parts.len(), spec.outputs.len()));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&spec.outputs) {
+            out.push((ospec.name.clone(), HostTensor::from_literal(lit, ospec)?));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_validation() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(HostTensor::scalar(1.5).elem_count(), 1);
+        assert_eq!(HostTensor::zeros(vec![4, 2]).data.len(), 8);
+    }
+}

@@ -1,0 +1,225 @@
+//! Artifact manifest: the contract between the Python AOT pipeline and the
+//! Rust coordinator.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! lowered program: its HLO file and the exact flattened order of input and
+//! output leaves (name, shape, dtype). Rust packs literals by walking the
+//! manifest — it never hardcodes pytree layouts, so the two sides can evolve
+//! independently as long as leaf *names* stay stable.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor leaf in a program's flattened input or output list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total number of elements (1 for rank-0).
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled program (train_step / predict / init).
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub freq: String,
+    pub batch: usize,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ProgramSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            file: v.get("file")?.as_str()?.to_string(),
+            freq: v.get("freq")?.as_str()?.to_string(),
+            batch: v.get("batch")?.as_usize()?,
+            kind: v.get("kind")?.as_str()?.to_string(),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+        })
+    }
+}
+
+/// Per-frequency compile-time configuration (mirror of `configs.py`).
+#[derive(Debug, Clone)]
+pub struct FreqManifest {
+    pub seasonality: usize,
+    /// §8.2 second seasonality (0 = single; absent in old manifests).
+    pub seasonality2: usize,
+    pub horizon: usize,
+    pub input_window: usize,
+    pub length: usize,
+    pub hidden: usize,
+    pub dilations: Vec<Vec<usize>>,
+    pub positions: usize,
+    pub valid_positions: usize,
+}
+
+impl FreqManifest {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            seasonality: v.get("seasonality")?.as_usize()?,
+            seasonality2: v.opt("seasonality2")
+                .map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            horizon: v.get("horizon")?.as_usize()?,
+            input_window: v.get("input_window")?.as_usize()?,
+            length: v.get("length")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            dilations: v
+                .get("dilations")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize_vec())
+                .collect::<Result<_>>()?,
+            positions: v.get("positions")?.as_usize()?,
+            valid_positions: v.get("valid_positions")?.as_usize()?,
+        })
+    }
+}
+
+/// The whole `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub variant: String,
+    pub tau: f32,
+    pub per_series_lr_mult: f32,
+    pub batch_sizes: Vec<usize>,
+    pub configs: HashMap<String, FreqManifest>,
+    pub programs: HashMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut configs = HashMap::new();
+        for (k, c) in v.get("configs")?.as_obj()? {
+            configs.insert(k.clone(), FreqManifest::from_json(c)?);
+        }
+        let mut programs = HashMap::new();
+        for (k, p) in v.get("programs")?.as_obj()? {
+            programs.insert(k.clone(), ProgramSpec::from_json(p)?);
+        }
+        Ok(Self {
+            version: v.get("version")?.as_usize()?,
+            variant: v.get("variant")?.as_str()?.to_string(),
+            tau: v.get("tau")?.as_f32()?,
+            per_series_lr_mult: v.get("per_series_lr_mult")?.as_f32()?,
+            batch_sizes: v.get("batch_sizes")?.as_usize_vec()?,
+            configs,
+            programs,
+        })
+    }
+
+    /// Program name for a given frequency / batch size / kind.
+    pub fn program_name(freq: &str, batch: usize, kind: &str) -> String {
+        match kind {
+            "init" => format!("{freq}_init"),
+            _ => format!("{freq}_b{batch}_{kind}"),
+        }
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs.get(name).ok_or_else(|| {
+            anyhow!("program `{name}` not in manifest (have: {:?})",
+                    self.programs.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn config(&self, freq: &str) -> Result<&FreqManifest> {
+        self.configs
+            .get(freq)
+            .ok_or_else(|| anyhow!("frequency `{freq}` not in manifest"))
+    }
+
+    /// Frequencies present, sorted.
+    pub fn freqs(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.configs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Batch sizes available for a (freq, kind) pair, ascending.
+    pub fn available_batches(&self, freq: &str, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .programs
+            .values()
+            .filter(|p| p.freq == freq && p.kind == kind)
+            .map(|p| p.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "variant": "pallas", "tau": 0.48,
+      "per_series_lr_mult": 1.5, "batch_sizes": [1, 16],
+      "configs": {"yearly": {"seasonality": 1, "horizon": 6,
+        "input_window": 4, "length": 24, "hidden": 30,
+        "dilations": [[1,2],[2,6]], "positions": 21, "valid_positions": 15}},
+      "programs": {"yearly_b16_train_step": {
+        "file": "yearly_b16_train_step.hlo.txt", "freq": "yearly",
+        "batch": 16, "kind": "train_step",
+        "inputs": [{"name": "data.y", "shape": [16, 24], "dtype": "float32"}],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tau, 0.48);
+        let cfg = m.config("yearly").unwrap();
+        assert_eq!(cfg.dilations, vec![vec![1, 2], vec![2, 6]]);
+        let p = m.program("yearly_b16_train_step").unwrap();
+        assert_eq!(p.inputs[0].elem_count(), 384);
+        assert_eq!(p.outputs[0].elem_count(), 1);
+        assert_eq!(m.available_batches("yearly", "train_step"), vec![16]);
+        assert!(m.program("nope").is_err());
+        assert!(m.config("weekly").is_err());
+    }
+
+    #[test]
+    fn program_name_formats() {
+        assert_eq!(Manifest::program_name("monthly", 64, "train_step"),
+                   "monthly_b64_train_step");
+        assert_eq!(Manifest::program_name("yearly", 0, "init"), "yearly_init");
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 ↔ Layer-2 bridge: load and execute the AOT-compiled HLO
+//! artifacts via the PJRT C API (`xla` crate).
+//!
+//! Python never runs at train/serve time: `make artifacts` lowers the JAX
+//! model (with its Pallas kernels) to HLO text once, and everything in this
+//! module consumes those files.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats, HostTensor};
+pub use manifest::{FreqManifest, Manifest, ProgramSpec, TensorSpec};

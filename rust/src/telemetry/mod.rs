@@ -1,0 +1,96 @@
+//! Lightweight telemetry: phase timers and counters for the training loop
+//! and forecast service. The §Perf pass reads these to find hot phases.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Accumulates wall-clock per named phase plus call counts.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    phases: BTreeMap<String, (f64, u64)>, // (total secs, calls)
+    counters: BTreeMap<String, u64>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add_time(phase, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add_time(&mut self, phase: &str, secs: f64) {
+        let e = self.phases.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    pub fn incr(&mut self, counter: &str, by: u64) {
+        *self.counters.entry(counter.to_string()).or_insert(0) += by;
+    }
+
+    pub fn total_secs(&self, phase: &str) -> f64 {
+        self.phases.get(phase).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn calls(&self, phase: &str) -> u64 {
+        self.phases.get(phase).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Human-readable phase breakdown sorted by total time.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.phases.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        let total: f64 = rows.iter().map(|(_, (s, _))| s).sum();
+        let mut out = String::new();
+        let _ = writeln!(out, "{:<28} {:>10} {:>8} {:>10} {:>6}",
+                         "phase", "total", "calls", "per-call", "share");
+        for (name, (secs, calls)) in rows {
+            let _ = writeln!(out, "{:<28} {:>9.3}s {:>8} {:>9.2}ms {:>5.1}%",
+                             name, secs, calls,
+                             1e3 * secs / (*calls).max(1) as f64,
+                             100.0 * secs / total.max(1e-12));
+        }
+        if !self.counters.is_empty() {
+            let _ = writeln!(out, "counters:");
+            for (k, v) in &self.counters {
+                let _ = writeln!(out, "  {k} = {v}");
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_time_and_counts() {
+        let mut t = Telemetry::new();
+        let x = t.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(x, 42);
+        t.time("work", || ());
+        assert_eq!(t.calls("work"), 2);
+        assert!(t.total_secs("work") >= 0.005);
+        t.incr("steps", 3);
+        t.incr("steps", 1);
+        assert_eq!(t.counter("steps"), 4);
+        let rep = t.report();
+        assert!(rep.contains("work"));
+        assert!(rep.contains("steps = 4"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Micro/macro benchmark harness (no `criterion` offline).
+//!
+//! Measures wall-clock over a warmup + N timed iterations, reports
+//! min/median/mean/p95 and throughput. Used by every `benches/` target and
+//! by the §Perf profiling pass.
+
+use std::time::Instant;
+
+/// Summary statistics for one benchmark case, all in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+    pub total: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let total: f64 = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        Self {
+            name: name.to_string(),
+            iters: n,
+            min: samples[0],
+            median: pct(0.5),
+            mean: total / n as f64,
+            p95: pct(0.95),
+            total,
+        }
+    }
+
+    /// One formatted row: `name  median  mean  p95  [unit/s]`.
+    pub fn row(&self, per_iter_items: f64) -> String {
+        let thr = if per_iter_items > 0.0 {
+            format!("{:>12.1} items/s", per_iter_items / self.median)
+        } else {
+            String::new()
+        };
+        format!("{:<44} {:>10} {:>10} {:>10} {thr}",
+                self.name,
+                fmt_secs(self.median),
+                fmt_secs(self.mean),
+                fmt_secs(self.p95))
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(name, samples)
+}
+
+/// Time a single long-running closure (for end-to-end cases where one
+/// iteration is already seconds long).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Pretty table header matching `BenchStats::row`.
+pub fn header() -> String {
+    format!("{:<44} {:>10} {:>10} {:>10}", "case", "median", "mean", "p95")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let st = BenchStats::from_samples("x", vec![3.0, 1.0, 2.0]);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.median, 2.0);
+        assert!((st.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let st = bench("inc", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(st.iters, 5);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("µs"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,231 @@
+//! Tiny declarative CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with generated `--help` text. Only what the `fast-esrnn`
+//! binary and the bench harnesses need.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative parser for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Parse result: option values + positionals.
+#[derive(Debug)]
+pub struct Args {
+    values: HashMap<&'static str, String>,
+    flags: HashMap<&'static str, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:28}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (without argv[0] / the subcommand word).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut values: HashMap<&'static str, String> = HashMap::new();
+        let mut flags: HashMap<&'static str, bool> = HashMap::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name, false);
+            } else if let Some(d) = o.default {
+                values.insert(o.name, d.to_string());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option `--{key}`\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("flag `--{key}` takes no value");
+                    }
+                    flags.insert(spec.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("`--{key}` needs a value"))?
+                        }
+                    };
+                    values.insert(spec.name, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                bail!("missing required option `--{}`\n\n{}", o.name, self.usage());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &'static str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option `{name}` was never declared"))
+    }
+
+    pub fn get_flag(&self, name: &'static str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag `{name}` was never declared"))
+    }
+
+    pub fn get_usize(&self, name: &'static str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not an integer: {e}"))
+    }
+
+    pub fn get_f32(&self, name: &'static str) -> Result<f32> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not a number: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &'static str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not a number: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &'static str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not an integer: {e}"))
+    }
+
+    /// Comma-separated list, e.g. `--batch-sizes 1,16,64`.
+    pub fn get_usize_list(&self, name: &'static str) -> Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse()
+                 .map_err(|e| anyhow!("--{name}: bad entry `{s}`: {e}")))
+            .collect()
+    }
+
+    pub fn get_str_list(&self, name: &'static str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "test command")
+            .opt("epochs", "15", "number of epochs")
+            .opt("freqs", "yearly,monthly", "frequencies")
+            .flag("verbose", "chatty output")
+            .req("out", "output path")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&s(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), 15);
+        assert!(!a.get_flag("verbose"));
+        let a = cli()
+            .parse(&s(&["--epochs=3", "--verbose", "--out", "x", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), 3);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = cli().parse(&s(&["--out", "x", "--freqs", "a, b,c"])).unwrap();
+        assert_eq!(a.get_str_list("freqs"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(&s(&[])).is_err()); // missing --out
+        assert!(cli().parse(&s(&["--out", "x", "--nope"])).is_err());
+        assert!(cli().parse(&s(&["--out"])).is_err()); // dangling value
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates: the build environment is offline with no third-party
+//! crates beyond `xla`/`anyhow`, so JSON, CLI parsing, RNG, the bench
+//! harness and the property-test driver live here (DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

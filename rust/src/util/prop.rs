@@ -1,0 +1,89 @@
+//! Minimal property-testing driver (no `proptest` offline).
+//!
+//! `forall(seed, cases, gen, check)` draws `cases` random inputs from `gen`
+//! and asserts `check`; on failure it reruns the generator to report the
+//! failing case index and seed so the exact input can be reproduced by
+//! plugging the printed seed back in.
+
+use crate::util::rng::Rng;
+
+/// Run a property over `cases` generated inputs.
+///
+/// Panics with the failing case's seed/index on the first violation, so
+/// `Rng::new(seed)` + `case_idx` reproduces it deterministically.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for i in 0..cases {
+        let mut case_rng = root.fork(i as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed (seed={seed}, case={i}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Common generator: a positive series of length `len` with multiplicative
+/// seasonality — the invariant-bearing shape most of our properties need.
+pub fn gen_positive_series(rng: &mut Rng, len: usize, period: usize) -> Vec<f32> {
+    let base = rng.uniform(10.0, 1000.0);
+    let trend = rng.uniform(-0.01, 0.02);
+    let amp = rng.uniform(0.0, 0.4);
+    let noise = rng.uniform(0.0, 0.1);
+    (0..len)
+        .map(|t| {
+            let seas = if period > 1 {
+                1.0 + amp * (2.0 * std::f64::consts::PI * (t % period) as f64
+                             / period as f64).sin()
+            } else {
+                1.0
+            };
+            let eps = (1.0 + noise * rng.normal()).max(0.05);
+            (base * (1.0 + trend).powi(t as i32) * seas * eps).max(1e-3) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 100, |r| r.uniform(0.0, 1.0), |x| {
+            if (0.0..1.0).contains(x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(1, 100, |r| r.below(10), |x| {
+            if *x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generated_series_is_positive() {
+        let mut r = Rng::new(2);
+        for _ in 0..50 {
+            let s = gen_positive_series(&mut r, 60, 12);
+            assert_eq!(s.len(), 60);
+            assert!(s.iter().all(|v| *v > 0.0));
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration test for the AOT bridge: requires `make artifacts` (or at
+//! least the yearly b16 programs) to have been run. Skips gracefully when
+//! artifacts are absent so `cargo test` works on a fresh checkout.
+
+use fast_esrnn::runtime::{Engine, HostTensor, Manifest};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Synthetic positive series with mild seasonality for smoke runs.
+fn toy_batch(b: usize, c: usize, s: usize) -> Vec<f32> {
+    let mut y = Vec::with_capacity(b * c);
+    for i in 0..b {
+        for t in 0..c {
+            let seas = if s > 1 {
+                1.0 + 0.2 * ((t % s) as f32 / s as f32 - 0.5)
+            } else {
+                1.0
+            };
+            let trend = 100.0 + i as f32 * 3.0 + t as f32 * 0.5;
+            y.push(trend * seas);
+        }
+    }
+    y
+}
+
+#[test]
+fn init_then_train_steps_reduce_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    let m = engine.manifest().clone();
+    let freq = "yearly";
+    let batches = m.available_batches(freq, "train_step");
+    assert!(!batches.is_empty(), "no yearly train_step artifacts");
+    let b = batches[0];
+    let cfg = m.config(freq).unwrap().clone();
+
+    // 1. init: PRNG seed -> RNN weights, keyed by leaf name.
+    let rnn = engine.execute_init(freq, 42).expect("init");
+    assert!(rnn.iter().any(|(n, _)| n.starts_with("rnn.cells.0")));
+
+    // 2. Assemble the full state map the manifest wants.
+    let mut state: std::collections::HashMap<String, HostTensor> =
+        rnn.into_iter().map(|(n, t)| (format!("params.{n}"), t)).collect();
+    // Per-series params (neutral init) + matching Adam slots.
+    let series = [
+        ("alpha_logit", vec![b], vec![-0.5f32; b]),
+        ("gamma_logit", vec![b], vec![-1.0f32; b]),
+        ("log_s_init", vec![b, cfg.seasonality],
+         vec![0.0f32; b * cfg.seasonality]),
+    ];
+    for (name, shape, data) in series {
+        state.insert(format!("params.series.{name}"),
+                     HostTensor::new(shape.clone(), data).unwrap());
+    }
+    let param_keys: Vec<String> = state.keys().cloned().collect();
+    for k in &param_keys {
+        let z = HostTensor::zeros(state[k].shape.clone());
+        state.insert(k.replace("params.", "opt.m."), z.clone());
+        state.insert(k.replace("params.", "opt.v."), z);
+    }
+    state.insert("opt.step".into(), HostTensor::scalar(0.0));
+
+    // 3. Batch data.
+    let name = Manifest::program_name(freq, b, "train_step");
+    let y = HostTensor::new(vec![b, cfg.length],
+                            toy_batch(b, cfg.length, cfg.seasonality)).unwrap();
+    let mut cat = vec![0.0f32; b * 6];
+    for i in 0..b {
+        cat[i * 6 + i % 6] = 1.0;
+    }
+    let cat = HostTensor::new(vec![b, 6], cat).unwrap();
+    let mask = HostTensor::new(vec![b], vec![1.0; b]).unwrap();
+    let lr = HostTensor::scalar(1e-3);
+
+    // 4. Run a few steps; state outputs feed the next step's inputs.
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let outs = engine
+            .execute_named(&name, |spec| {
+                Ok(match spec.name.as_str() {
+                    "data.y" => &y,
+                    "data.cat" => &cat,
+                    "data.mask" => &mask,
+                    "lr" => &lr,
+                    other => state
+                        .get(other)
+                        .unwrap_or_else(|| panic!("missing state `{other}`")),
+                })
+            })
+            .expect("train step");
+        let mut loss = f32::NAN;
+        for (n, t) in outs {
+            if n == "loss" {
+                loss = t.data[0];
+            } else {
+                state.insert(n, t);
+            }
+        }
+        assert!(loss.is_finite(), "loss must be finite");
+        losses.push(loss);
+    }
+    assert!(losses[4] < losses[0],
+            "loss should fall over 5 steps: {losses:?}");
+
+    // 5. Forecasts come out positive and finite.
+    let pname = Manifest::program_name(freq, b, "predict");
+    let outs = engine
+        .execute_named(&pname, |spec| {
+            Ok(match spec.name.as_str() {
+                "data.y" => &y,
+                "data.cat" => &cat,
+                other => state
+                    .get(other)
+                    .unwrap_or_else(|| panic!("missing state `{other}`")),
+            })
+        })
+        .expect("predict");
+    assert_eq!(outs.len(), 1);
+    let fc = &outs[0].1;
+    assert_eq!(fc.shape, vec![b, cfg.horizon]);
+    assert!(fc.data.iter().all(|v| v.is_finite() && *v > 0.0),
+            "forecasts must be positive/finite");
+}

@@ -1,0 +1,321 @@
+//! End-to-end integration tests over the full three-layer stack:
+//! corpus → primer → AOT train step → evaluation → checkpoint → serving.
+//! Requires `make artifacts`; tests skip gracefully when absent.
+
+use fast_esrnn::config::{Frequency, TrainConfig};
+use fast_esrnn::coordinator::{checkpoint, EvalSplit, Trainer};
+use fast_esrnn::data::{generate, GenOptions};
+use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
+use fast_esrnn::runtime::Engine;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn tiny_config(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        batch_size: 16,
+        learning_rate: 1e-3,
+        patience: 50, // no early stop in smoke runs
+        ..Default::default()
+    }
+}
+
+#[test]
+fn quarterly_train_loss_falls_and_eval_is_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    let mut trainer =
+        Trainer::new(&engine, Frequency::Quarterly, &corpus, tiny_config(4))
+            .unwrap();
+    let report = trainer.train(false).unwrap();
+    assert_eq!(report.epochs_run, 4);
+    assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+    assert!(report.epoch_losses[3] < report.epoch_losses[0],
+            "loss should fall: {:?}", report.epoch_losses);
+
+    let val = trainer.evaluate(EvalSplit::Validation).unwrap();
+    let test = trainer.evaluate(EvalSplit::Test).unwrap();
+    for r in [&val, &test] {
+        assert!(r.smape.is_finite() && r.smape > 0.0 && r.smape < 200.0);
+        assert!(r.mase.is_finite() && r.mase > 0.0);
+        assert_eq!(r.count, trainer.series_count());
+    }
+    // Every forecast positive & finite.
+    let fcs = trainer.forecasts(true).unwrap();
+    assert_eq!(fcs.len(), trainer.series_count());
+    for fc in &fcs {
+        assert_eq!(fc.len(), 8);
+        assert!(fc.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+}
+
+#[test]
+fn yearly_nonseasonal_path_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let mut trainer =
+        Trainer::new(&engine, Frequency::Yearly, &corpus, tiny_config(2))
+            .unwrap();
+    let report = trainer.train(false).unwrap();
+    assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+    let test = trainer.evaluate(EvalSplit::Test).unwrap();
+    assert!(test.smape.is_finite());
+    // Yearly is non-seasonal: trained gamma/s_init must remain at the
+    // primer values (gradient is structurally zero through the ES layer;
+    // Adam gets exactly-zero grads, so the update is 0/(0+eps) = 0).
+    let (_, g0, s0) = trainer.store.series_params(0);
+    assert!((g0 - fast_esrnn::hw::primer(&[1.0; 36], 1).gamma_logit).abs() < 0.2,
+            "gamma_logit moved on non-seasonal data: {g0}");
+    assert_eq!(s0.len(), 1);
+}
+
+#[test]
+fn monthly_smoke() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 800, ..Default::default() });
+    let mut trainer =
+        Trainer::new(&engine, Frequency::Monthly, &corpus, tiny_config(1))
+            .unwrap();
+    let report = trainer.train(false).unwrap();
+    assert!(report.epoch_losses[0].is_finite());
+    let fcs = trainer.forecasts(false).unwrap();
+    assert!(fcs.iter().all(|fc| fc.len() == 18
+                           && fc.iter().all(|v| v.is_finite() && *v > 0.0)));
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_forecasts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    let mut t1 =
+        Trainer::new(&engine, Frequency::Quarterly, &corpus, tiny_config(2))
+            .unwrap();
+    t1.train(false).unwrap();
+    let before = t1.forecasts(true).unwrap();
+
+    let tmp = std::env::temp_dir().join("fast_esrnn_pipeline_ckpt.json");
+    checkpoint::save(&tmp, "quarterly", &t1.state, &t1.store).unwrap();
+
+    let mut t2 =
+        Trainer::new(&engine, Frequency::Quarterly, &corpus, tiny_config(2))
+            .unwrap();
+    let freq = checkpoint::load(&tmp, &mut t2.state, &mut t2.store).unwrap();
+    assert_eq!(freq, "quarterly");
+    let after = t2.forecasts(true).unwrap();
+    assert_eq!(before.len(), after.len());
+    for (a, b) in before.iter().zip(&after) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0),
+                    "forecast drifted after checkpoint reload: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn trained_model_beats_untrained_on_validation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 300, ..Default::default() });
+    let mut trainer =
+        Trainer::new(&engine, Frequency::Quarterly, &corpus, tiny_config(6))
+            .unwrap();
+    let before = trainer.evaluate(EvalSplit::Validation).unwrap().smape;
+    trainer.train(false).unwrap();
+    let after = trainer.evaluate(EvalSplit::Validation).unwrap().smape;
+    assert!(after < before,
+            "training should improve val sMAPE: {before:.3} -> {after:.3}");
+}
+
+#[test]
+fn forecast_service_serves_batched_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let state = {
+        let engine = Engine::load(&dir).unwrap();
+        let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+        let mut trainer = Trainer::new(&engine, Frequency::Quarterly, &corpus,
+                                       tiny_config(1)).unwrap();
+        trainer.train(false).unwrap();
+        trainer.state.clone()
+    };
+    let service = ForecastService::start(
+        dir, Frequency::Quarterly, state,
+        ServiceOptions { max_batch: 16, ..Default::default() }).unwrap();
+
+    let corpus = generate(&GenOptions { scale: 300, seed: 9,
+                                        freqs: Some(vec![Frequency::Quarterly]) });
+    let mut rxs = Vec::new();
+    let mut sent = 0;
+    for s in &corpus.series {
+        if s.len() < 72 || sent >= 40 {
+            continue;
+        }
+        rxs.push(service.handle.submit(ForecastRequest {
+            id: s.id.clone(),
+            values: s.values.clone(),
+            category: s.category,
+        }).unwrap());
+        sent += 1;
+    }
+    assert!(sent >= 10, "need enough demo series, got {sent}");
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.forecast.len(), 8);
+        assert!(resp.forecast.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+    let st = service.handle.stats().unwrap();
+    assert_eq!(st.requests, sent as u64);
+    assert!(st.batches >= 1);
+
+    // Too-short request is rejected, not crashed.
+    let err = service.handle.forecast(ForecastRequest {
+        id: "short".into(),
+        values: vec![1.0; 10],
+        category: fast_esrnn::config::Category::Other,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn es_artifact_matches_rust_filter() {
+    // Cross-layer numeric pin: the AOT ES program (Pallas kernel) must
+    // agree with the pure-Rust Holt-Winters mirror to float tolerance.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let m = engine.manifest().clone();
+    for freq in ["quarterly", "monthly", "yearly"] {
+        let name = format!("{freq}_b8_es");
+        if m.program(&name).is_err() {
+            eprintln!("skipping {name}: not in manifest");
+            continue;
+        }
+        let cfg = m.config(freq).unwrap().clone();
+        let (b, c, s) = (8usize, cfg.length, cfg.seasonality);
+        let mut rng = fast_esrnn::util::rng::Rng::new(33);
+        let mut y = Vec::with_capacity(b * c);
+        let mut alpha_logit = Vec::new();
+        let mut gamma_logit = Vec::new();
+        let mut log_s_init = Vec::new();
+        for _ in 0..b {
+            y.extend(fast_esrnn::util::prop::gen_positive_series(&mut rng, c, s));
+            alpha_logit.push(rng.uniform(-2.0, 2.0) as f32);
+            gamma_logit.push(rng.uniform(-3.0, 0.0) as f32);
+            for _ in 0..s {
+                log_s_init.push(rng.uniform(-0.3, 0.3) as f32);
+            }
+        }
+        use fast_esrnn::runtime::HostTensor;
+        let inputs = std::collections::HashMap::from([
+            ("data.y".to_string(),
+             HostTensor::new(vec![b, c], y.clone()).unwrap()),
+            ("data.alpha_logit".to_string(),
+             HostTensor::new(vec![b], alpha_logit.clone()).unwrap()),
+            ("data.gamma_logit".to_string(),
+             HostTensor::new(vec![b], gamma_logit.clone()).unwrap()),
+            ("data.log_s_init".to_string(),
+             HostTensor::new(vec![b, s], log_s_init.clone()).unwrap()),
+        ]);
+        let outs = engine.execute_named(&name, |spec| {
+            inputs.get(&spec.name)
+                .ok_or_else(|| anyhow::anyhow!("missing {}", spec.name))
+        }).unwrap();
+        let levels = &outs[0].1;
+        let seas = &outs[1].1;
+        for i in 0..b {
+            let alpha = fast_esrnn::hw::sigmoid(alpha_logit[i]);
+            let (gamma, s_init): (f32, Vec<f32>) = if s > 1 {
+                (fast_esrnn::hw::sigmoid(gamma_logit[i]),
+                 log_s_init[i * s..(i + 1) * s].iter().map(|v| v.exp()).collect())
+            } else {
+                (0.0, vec![1.0])
+            };
+            let mirror = fast_esrnn::hw::es_filter(
+                &y[i * c..(i + 1) * c], alpha, gamma, &s_init);
+            for t in 0..c {
+                let a = levels.data[i * c + t];
+                let r = mirror.levels[t];
+                assert!((a - r).abs() <= 1e-3 * r.abs().max(1.0),
+                        "{freq} series {i} level[{t}]: artifact {a} vs rust {r}");
+            }
+            for t in 0..c + s {
+                let a = seas.data[i * (c + s) + t];
+                let r = mirror.seas[t];
+                assert!((a - r).abs() <= 1e-3 * r.abs().max(1.0),
+                        "{freq} series {i} seas[{t}]: artifact {a} vs rust {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn daily_extension_trains() {
+    // §8.5: daily (quarterly-structured network, S = 7).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 200, ..Default::default() });
+    let tc = TrainConfig { epochs: 1, batch_size: 16, patience: 50,
+                           ..Default::default() };
+    let mut trainer =
+        Trainer::new(&engine, fast_esrnn::config::Frequency::Daily, &corpus,
+                     tc).unwrap();
+    let report = trainer.train(false).unwrap();
+    assert!(report.epoch_losses[0].is_finite());
+    let fcs = trainer.forecasts(true).unwrap();
+    assert!(fcs.iter().all(|fc| fc.len() == 14
+                           && fc.iter().all(|v| v.is_finite() && *v > 0.0)));
+}
+
+#[test]
+fn hourly_dual_seasonality_trains() {
+    // §8.2: hourly with the dual 24h/168h ES kernel.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let tc = TrainConfig { epochs: 2, batch_size: 4, patience: 50,
+                           ..Default::default() };
+    let mut trainer =
+        Trainer::new(&engine, fast_esrnn::config::Frequency::Hourly, &corpus,
+                     tc).unwrap();
+    assert!(trainer.series_count() >= 2);
+    // 192-wide packed seasonality + gamma2 present in the store
+    let (_, _, s) = trainer.store.series_params(0);
+    assert_eq!(s.len(), 192);
+    let report = trainer.train(false).unwrap();
+    assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+    assert!(report.epoch_losses.last().unwrap()
+            <= report.epoch_losses.first().unwrap());
+    let test = trainer.evaluate(EvalSplit::Test).unwrap();
+    assert!(test.smape.is_finite() && test.smape < 200.0);
+}
+
+#[test]
+fn penalties_variant_trains_via_model_key() {
+    // §8.4: the quarterly_pen artifact is selected by TrainConfig.model_key.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    let tc = TrainConfig {
+        model_key: Some("quarterly_pen".into()),
+        epochs: 2,
+        batch_size: 64,
+        patience: 50,
+        ..Default::default()
+    };
+    let mut trainer =
+        Trainer::new(&engine, Frequency::Quarterly, &corpus, tc).unwrap();
+    let report = trainer.train(false).unwrap();
+    assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+    let val = trainer.evaluate(EvalSplit::Validation).unwrap();
+    assert!(val.smape.is_finite());
+}

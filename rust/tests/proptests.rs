@@ -1,0 +1,422 @@
+//! Property-based tests over the coordinator's invariants (in-tree
+//! `util::prop` driver — no proptest crate offline).
+//!
+//! These cover the L3 surfaces the paper's correctness rests on: the
+//! Holt-Winters filter/primer, metrics bounds, baseline sanity, the
+//! per-series store's gather/scatter discipline, batching coverage, and
+//! JSON round-trips.
+
+use fast_esrnn::baselines::{all_baselines, Comb, Forecaster, SeasonalNaive};
+use fast_esrnn::coordinator::{Batcher, ParamStore};
+use fast_esrnn::hw::{self, es_filter, seasonal_indices};
+use fast_esrnn::metrics::{mase, pinball, smape};
+use fast_esrnn::runtime::HostTensor;
+use fast_esrnn::util::json::Json;
+use fast_esrnn::util::prop::{forall, gen_positive_series};
+use fast_esrnn::util::rng::Rng;
+
+#[test]
+fn prop_seasonal_indices_normalized_positive() {
+    forall(101, 200, |r| {
+        let period = [1usize, 2, 4, 7, 12][r.below(5)];
+        let len = period * 2 + r.below(120);
+        (gen_positive_series(r, len.max(4), period), period)
+    }, |(y, period)| {
+        let idx = seasonal_indices(y, *period);
+        if idx.len() != (*period).max(1) {
+            return Err(format!("wrong length {}", idx.len()));
+        }
+        if !idx.iter().all(|v| *v > 0.0 && v.is_finite()) {
+            return Err(format!("nonpositive index: {idx:?}"));
+        }
+        if y.len() >= 2 * period && *period > 1 {
+            let mean: f32 = idx.iter().sum::<f32>() / *period as f32;
+            if (mean - 1.0).abs() > 0.05 {
+                return Err(format!("mean {mean} far from 1"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_es_filter_positive_and_bounded() {
+    forall(102, 200, |r| {
+        let s = [1usize, 4, 12][r.below(3)];
+        let c = 2 * s + 8 + r.below(80);
+        let y = gen_positive_series(r, c, s);
+        let alpha = r.uniform(0.01, 0.99) as f32;
+        let gamma = r.uniform(0.0, 0.5) as f32;
+        let s_init: Vec<f32> =
+            (0..s).map(|_| r.uniform(0.5, 1.5) as f32).collect();
+        (y, alpha, gamma, s_init)
+    }, |(y, alpha, gamma, s_init)| {
+        let out = es_filter(y, *alpha, *gamma, s_init);
+        if !out.levels.iter().all(|v| v.is_finite() && *v > 0.0) {
+            return Err("nonpositive level".into());
+        }
+        if !out.seas.iter().all(|v| v.is_finite() && *v > 0.0) {
+            return Err("nonpositive seasonality".into());
+        }
+        // Level stays within the envelope of deseasonalized observations.
+        let lo = y.iter().zip(out.seas.iter())
+            .map(|(v, s)| v / s).fold(f32::INFINITY, f32::min);
+        let hi = y.iter().zip(out.seas.iter())
+            .map(|(v, s)| v / s).fold(0.0f32, f32::max);
+        for l in &out.levels {
+            if *l < lo * 0.5 || *l > hi * 2.0 {
+                return Err(format!("level {l} escapes envelope [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_es_filter_alpha_one_tracks_deseasonalized_obs() {
+    forall(103, 100, |r| {
+        let y = gen_positive_series(r, 40, 4);
+        let s_init: Vec<f32> = (0..4).map(|_| r.uniform(0.7, 1.3) as f32).collect();
+        (y, s_init)
+    }, |(y, s_init)| {
+        let out = es_filter(y, 1.0, 0.0, s_init);
+        for t in 0..y.len() {
+            let expect = y[t] / out.seas[t];
+            if (out.levels[t] - expect).abs() > 1e-3 * expect {
+                return Err(format!("alpha=1 level[{t}] {} != {}",
+                                   out.levels[t], expect));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smape_bounds_and_symmetry() {
+    forall(104, 300, |r| {
+        let h = 1 + r.below(18);
+        let a: Vec<f32> = (0..h).map(|_| r.uniform(0.1, 1e4) as f32).collect();
+        let b: Vec<f32> = (0..h).map(|_| r.uniform(0.1, 1e4) as f32).collect();
+        (a, b)
+    }, |(a, b)| {
+        let v = smape(a, b);
+        if !(0.0..=200.0 + 1e-9).contains(&v) {
+            return Err(format!("smape {v} out of [0, 200]"));
+        }
+        if (smape(b, a) - v).abs() > 1e-9 {
+            return Err("smape asymmetric".into());
+        }
+        if smape(a, a) > 1e-12 {
+            return Err("smape(x,x) != 0".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mase_scales_linearly() {
+    forall(105, 200, |r| {
+        let h = 1 + r.below(12);
+        let f: Vec<f32> = (0..h).map(|_| r.uniform(1.0, 100.0) as f32).collect();
+        let a: Vec<f32> = (0..h).map(|_| r.uniform(1.0, 100.0) as f32).collect();
+        let scale = r.uniform(0.1, 10.0) as f32;
+        (f, a, scale)
+    }, |(f, a, scale)| {
+        let m1 = mase(f, a, *scale);
+        let m2 = mase(f, a, *scale * 2.0);
+        if (m1 / m2 - 2.0).abs() > 1e-6 {
+            return Err(format!("mase not inverse-linear in scale: {m1} {m2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pinball_zero_iff_perfect_and_tau_weighting() {
+    forall(106, 200, |r| {
+        let h = 1 + r.below(8);
+        let f: Vec<f32> = (0..h).map(|_| r.uniform(1.0, 50.0) as f32).collect();
+        let d = r.uniform(0.1, 5.0) as f32;
+        (f, d)
+    }, |(f, d)| {
+        if pinball(f, f, 0.48) > 1e-12 {
+            return Err("pinball(x,x) != 0".into());
+        }
+        let over: Vec<f32> = f.iter().map(|v| v + d).collect();
+        let under: Vec<f32> = f.iter().map(|v| v - d).collect();
+        // tau < 0.5 ⇒ over-forecasting (actual below) costs more.
+        let c_over = pinball(&over, f, 0.48);
+        let c_under = pinball(&under, f, 0.48);
+        if c_over <= c_under {
+            return Err(format!("tau weighting broken: over {c_over} \
+                                under {c_under}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baselines_finite_positive() {
+    forall(107, 120, |r| {
+        let period = [1usize, 4, 12][r.below(3)];
+        let len = (2 * period + 10 + r.below(90)).max(12);
+        let y = gen_positive_series(r, len, period);
+        let horizon = 1 + r.below(18);
+        (y, period, horizon)
+    }, |(y, period, horizon)| {
+        for m in all_baselines() {
+            let fc = m.forecast(y, *period, *horizon);
+            if fc.len() != *horizon {
+                return Err(format!("{} wrong horizon", m.name()));
+            }
+            if !fc.iter().all(|v| v.is_finite()) {
+                return Err(format!("{} non-finite forecast", m.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_seasonal_naive_is_periodic() {
+    forall(108, 100, |r| {
+        let period = 2 + r.below(11);
+        let len = period * 3 + r.below(30);
+        let y = gen_positive_series(r, len, period);
+        (y, period)
+    }, |(y, period)| {
+        let fc = SeasonalNaive.forecast(y, *period, period * 2);
+        for h in 0..*period {
+            if (fc[h] - fc[h + period]).abs() > 1e-6 {
+                return Err("seasonal naive not periodic".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_scatter_gather_roundtrip() {
+    forall(109, 100, |r| {
+        let n = 2 + r.below(50);
+        let s = 1 + r.below(12);
+        let b = 1 + r.below(n.min(16));
+        // random distinct indices
+        let mut idx: Vec<usize> = (0..n).collect();
+        r.shuffle(&mut idx);
+        idx.truncate(b);
+        let values: Vec<f32> = (0..b * s).map(|_| r.normal() as f32).collect();
+        (n, s, idx, values)
+    }, |(n, s, idx, values)| {
+        let primers: Vec<hw::Primer> = (0..*n)
+            .map(|_| hw::Primer {
+                alpha_logit: 0.0,
+                gamma_logit: 0.0,
+                gamma2_logit: 0.0,
+                log_s_init: vec![0.0; *s],
+            })
+            .collect();
+        let mut store = ParamStore::from_primers(&primers, *s).unwrap();
+        let valid = vec![true; idx.len()];
+        let t = HostTensor::new(vec![idx.len(), *s], values.clone()).unwrap();
+        store.scatter("params.series.log_s_init", idx, &valid, &t).unwrap();
+        let g = store.gather_batch(idx).unwrap();
+        if g["params.series.log_s_init"].data != *values {
+            return Err("gather != scatter input".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_covers_without_duplicates() {
+    forall(110, 100, |r| {
+        let n = 1 + r.below(500);
+        let b = 1 + r.below(64);
+        let seed = r.next_u64();
+        (n, b, seed)
+    }, |(n, b, seed)| {
+        let mut batcher = Batcher::new(*n, *b, *seed);
+        let mut seen = vec![false; *n];
+        for batch in batcher.epoch() {
+            if batch.indices.len() != *b {
+                return Err("batch wrong width".into());
+            }
+            for (slot, &i) in batch.indices.iter().enumerate() {
+                if batch.valid[slot] {
+                    if seen[i] {
+                        return Err(format!("series {i} scheduled twice"));
+                    }
+                    seen[i] = true;
+                }
+            }
+        }
+        if !seen.iter().all(|s| *s) {
+            return Err("not all series scheduled".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn gen_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.chance(0.5)),
+            2 => Json::Num((r.normal() * 100.0 * 128.0).round() / 128.0),
+            3 => {
+                let n = r.below(12);
+                Json::Str((0..n).map(|_| {
+                    ['a', 'é', '"', '\\', '\n', 'z', '7', ' ']
+                        [r.below(8)]
+                }).collect())
+            }
+            4 => Json::Arr((0..r.below(5))
+                .map(|_| gen_json(r, depth - 1)).collect()),
+            _ => Json::Obj((0..r.below(5))
+                .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                .collect()),
+        }
+    }
+    forall(111, 300, |r| gen_json(r, 3), |doc| {
+        let text = doc.to_string();
+        let re = Json::parse(&text)
+            .map_err(|e| format!("reparse failed on `{text}`: {e}"))?;
+        if re != *doc {
+            return Err(format!("roundtrip mismatch: {doc:?} -> {re:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comb_between_min_max_of_components() {
+    forall(112, 100, |r| {
+        let len = 60 + r.below(40);
+        let y = gen_positive_series(r, len, 4);
+        (y,)
+    }, |(y,)| {
+        use fast_esrnn::baselines::{DampedHolt, Holt, Ses};
+        let c = Comb.forecast(y, 4, 8);
+        let s = Ses.forecast(y, 4, 8);
+        let h = Holt.forecast(y, 4, 8);
+        let d = DampedHolt.forecast(y, 4, 8);
+        for i in 0..8 {
+            let lo = s[i].min(h[i]).min(d[i]);
+            let hi = s[i].max(h[i]).max(d[i]);
+            if c[i] < lo - 1e-3 || c[i] > hi + 1e-3 {
+                return Err(format!("comb[{i}]={} outside [{lo}, {hi}]", c[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_primer_seasonality_normalized() {
+    forall(113, 150, |r| {
+        let s = [4usize, 12][r.below(2)];
+        let len = 3 * s + r.below(60);
+        let y = gen_positive_series(r, len, s);
+        (y, s)
+    }, |(y, s)| {
+        let p = hw::primer(y, *s);
+        if p.log_s_init.len() != *s {
+            return Err("wrong seasonality length".into());
+        }
+        let mean: f32 =
+            p.log_s_init.iter().map(|v| v.exp()).sum::<f32>() / *s as f32;
+        if (mean - 1.0).abs() > 0.06 {
+            return Err(format!("primer indices mean {mean} far from 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_filter_degenerates_to_single() {
+    // With s2 ≡ 1 and gamma2 = 0 the dual recurrence must equal the
+    // single-seasonality filter exactly.
+    forall(114, 100, |r| {
+        let y = gen_positive_series(r, 48, 4);
+        let alpha = r.uniform(0.05, 0.95) as f32;
+        let gamma = r.uniform(0.0, 0.6) as f32;
+        let s_init: Vec<f32> = (0..4).map(|_| r.uniform(0.6, 1.4) as f32).collect();
+        (y, alpha, gamma, s_init)
+    }, |(y, alpha, gamma, s_init)| {
+        let single = es_filter(y, *alpha, *gamma, s_init);
+        let (lv, s1, _) = hw::es_dual_filter(y, *alpha, *gamma, 0.0, s_init,
+                                             &[1.0, 1.0]);
+        for t in 0..y.len() {
+            if (lv[t] - single.levels[t]).abs() > 1e-4 * single.levels[t].abs() {
+                return Err(format!("level[{t}] {} != {}", lv[t],
+                                   single.levels[t]));
+            }
+        }
+        for t in 0..s1.len() {
+            if (s1[t] - single.seas[t]).abs() > 1e-4 {
+                return Err(format!("seas[{t}] mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_store_rotation_per_component() {
+    // gather_batch_rotated must rotate the [S1 | S2] block per component
+    // by shift mod its own period.
+    forall(115, 60, |r| {
+        let s1 = 2 + r.below(6);
+        let s2 = s1 + 1 + r.below(8);
+        let shift = r.below(40);
+        (s1, s2, shift)
+    }, |(s1, s2, shift)| {
+        let primer = hw::Primer {
+            alpha_logit: 0.0,
+            gamma_logit: 0.0,
+            gamma2_logit: 0.0,
+            log_s_init: (0..s1 + s2).map(|k| k as f32).collect(),
+        };
+        let store = ParamStore::from_primers_dual(&[primer], *s1, *s2).unwrap();
+        let g = store.gather_batch_rotated(&[0], *shift).unwrap();
+        let got = &g["params.series.log_s_init"].data;
+        let (r1, r2) = (shift % s1, shift % s2);
+        for k in 0..*s1 {
+            let expect = ((k + r1) % s1) as f32;
+            if got[k] != expect {
+                return Err(format!("s1[{k}] = {} want {expect}", got[k]));
+            }
+        }
+        for k in 0..*s2 {
+            let expect = (s1 + (k + r2) % s2) as f32;
+            if got[s1 + k] != expect {
+                return Err(format!("s2[{k}] = {} want {expect}", got[s1 + k]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_filter_positive() {
+    forall(116, 80, |r| {
+        let y = gen_positive_series(r, 80, 8);
+        let a = r.uniform(0.05, 0.9) as f32;
+        let g1 = r.uniform(0.0, 0.5) as f32;
+        let g2 = r.uniform(0.0, 0.5) as f32;
+        let s1: Vec<f32> = (0..8).map(|_| r.uniform(0.6, 1.4) as f32).collect();
+        let s2: Vec<f32> = (0..20).map(|_| r.uniform(0.6, 1.4) as f32).collect();
+        (y, a, g1, g2, s1, s2)
+    }, |(y, a, g1, g2, s1, s2)| {
+        let (lv, e1, e2) = hw::es_dual_filter(y, *a, *g1, *g2, s1, s2);
+        if !lv.iter().all(|v| v.is_finite() && *v > 0.0) {
+            return Err("nonpositive level".into());
+        }
+        if !e1.iter().chain(e2.iter()).all(|v| v.is_finite() && *v > 0.0) {
+            return Err("nonpositive seasonality".into());
+        }
+        Ok(())
+    });
+}
