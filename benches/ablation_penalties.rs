@@ -12,7 +12,7 @@
 use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{EvalSplit, Trainer};
 use fast_esrnn::data::{generate, GenOptions};
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -35,7 +35,7 @@ fn roughness(fcs: &[Vec<f32>]) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 8);
-    let engine = Engine::load("artifacts")?;
+    let backend = default_backend()?;
     let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
 
     println!("== §8.4 penalties ablation (quarterly, {epochs} epochs) ==\n");
@@ -43,6 +43,13 @@ fn main() -> anyhow::Result<()> {
              "test sMAPE", "roughness", "loss[last]");
     for (label, key) in [("baseline (no penalties)", None),
                          ("level+cstate penalties", Some("quarterly_pen"))] {
+        if let Some(k) = key {
+            if backend.manifest().config(k).is_err() {
+                println!("{label:<26} skipped: model key `{k}` not served by \
+                          this backend (penalty variants are PJRT-only)");
+                continue;
+            }
+        }
         let tc = TrainConfig {
             model_key: key.map(|s| s.to_string()),
             epochs,
@@ -50,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             patience: 50,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, Frequency::Quarterly,
+        let mut trainer = Trainer::new(backend.as_ref(), Frequency::Quarterly,
                                        &corpus, tc)?;
         let report = trainer.train(false)?;
         let val = trainer.evaluate(EvalSplit::Validation)?;

@@ -10,14 +10,14 @@ use fast_esrnn::config::{Frequency, NetworkConfig, TrainConfig};
 use fast_esrnn::coordinator::{EvalSplit, Trainer};
 use fast_esrnn::data::{generate, split_corpus, GenOptions};
 use fast_esrnn::metrics::smape;
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load("artifacts")?;
+    let backend = default_backend()?;
     let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
 
     println!("== §8.2/§8.5 extension frequencies ==\n");
@@ -27,6 +27,11 @@ fn main() -> anyhow::Result<()> {
         (Frequency::Daily, env_usize("FAST_ESRNN_EPOCHS", 6), 16),
         (Frequency::Hourly, env_usize("FAST_ESRNN_EPOCHS_HOURLY", 4), 4),
     ] {
+        if backend.manifest().config(freq.name()).is_err() {
+            println!("{:<10} skipped: not served by this backend (the §8.2 \
+                      dual-seasonality model is PJRT-only)", freq.name());
+            continue;
+        }
         let net = NetworkConfig::for_freq(freq)?;
         let tc = TrainConfig {
             epochs,
@@ -34,7 +39,7 @@ fn main() -> anyhow::Result<()> {
             patience: 50,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         let n = trainer.series_count();
         eprintln!("[extensions] training {} on {n} series…", freq.name());
         trainer.train(false)?;

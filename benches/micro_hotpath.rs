@@ -15,18 +15,19 @@ use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{Batcher, Trainer};
 use fast_esrnn::data::{generate, GenOptions};
 use fast_esrnn::hw;
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 use fast_esrnn::util::bench::{bench, header};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load("artifacts")?;
+    let backend = default_backend()?;
     let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
     let freq = Frequency::Quarterly;
     let b = 64usize;
     let tc = TrainConfig { batch_size: b, ..Default::default() };
-    let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+    let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
     let n = trainer.series_count();
-    println!("quarterly, {n} series, batch {b}\n\n{}", header());
+    println!("{} | quarterly, {n} series, batch {b}\n\n{}",
+             backend.platform(), header());
 
     let mut sched = Batcher::new(n, b, 3);
     let epoch = sched.epoch();
@@ -63,9 +64,9 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", st.row(n as f64));
 
-    // --- engine phase breakdown accumulated so far ---
-    let stats = engine.stats();
-    println!("\nengine totals: {} executions | pack {:.3}s | execute {:.3}s \
+    // --- backend phase breakdown accumulated so far ---
+    let stats = backend.stats();
+    println!("\nbackend totals: {} executions | pack {:.3}s | execute {:.3}s \
               | unpack {:.3}s | {} compiles ({:.2}s)",
              stats.executions, stats.pack_secs, stats.execute_secs,
              stats.unpack_secs, stats.compiles, stats.compile_secs);

@@ -11,7 +11,7 @@ use fast_esrnn::config::{NetworkConfig, TrainConfig, MODELED_FREQS};
 use fast_esrnn::coordinator::{EvalSplit, Trainer};
 use fast_esrnn::data::{generate, split_corpus, GenOptions};
 use fast_esrnn::metrics::smape;
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -20,10 +20,10 @@ fn env_usize(key: &str, default: usize) -> usize {
 fn main() -> anyhow::Result<()> {
     let scale = env_usize("FAST_ESRNN_SCALE", 100);
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 10);
-    let engine = Engine::load("artifacts")?;
+    let backend = default_backend()?;
     let corpus = generate(&GenOptions { scale, ..Default::default() });
-    println!("corpus 1/{scale} of Table 2 | {epochs} epochs | platform {}\n",
-             engine.platform());
+    println!("corpus 1/{scale} of Table 2 | {epochs} epochs | backend {}\n",
+             backend.platform());
 
     let mut es_row = Vec::new();
     let mut comb_row = Vec::new();
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
             batch_size: 64,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         eprintln!("[table4] training {} on {} series…", freq.name(),
                   trainer.series_count());
         trainer.train(false)?;

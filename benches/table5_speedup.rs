@@ -14,7 +14,7 @@
 use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{Batcher, Trainer};
 use fast_esrnn::data::{generate, GenOptions};
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 use fast_esrnn::util::bench::fmt_secs;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -23,9 +23,9 @@ fn env_usize(key: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     let steps = env_usize("FAST_ESRNN_STEPS", 6);
-    let engine = Engine::load("artifacts")?;
-    println!("PJRT platform: {} | {} timed steps per config\n",
-             engine.platform(), steps);
+    let backend = default_backend()?;
+    println!("backend: {} | {} timed steps per config\n",
+             backend.platform(), steps);
     // Generous corpus so every batch size has enough distinct series.
     let corpus = generate(&GenOptions { scale: 50, ..Default::default() });
 
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
              "speedup");
 
     for freq in [Frequency::Quarterly, Frequency::Monthly, Frequency::Yearly] {
-        let batches = engine
+        let batches = backend
             .manifest()
             .available_batches(freq.name(), "train_step");
         let mut per_series_b1: Option<f64> = None;
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
                 epochs: 1,
                 ..Default::default()
             };
-            let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+            let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
             let n = trainer.series_count();
             let mut sched = Batcher::new(n, b, 7);
             let epoch = sched.epoch();

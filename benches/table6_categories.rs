@@ -12,7 +12,7 @@ use fast_esrnn::config::{TrainConfig, ALL_CATEGORIES, MODELED_FREQS};
 use fast_esrnn::coordinator::{EvalSplit, Trainer};
 use fast_esrnn::data::{generate, stats, GenOptions};
 use fast_esrnn::metrics::MetricAccumulator;
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::default_backend;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -21,7 +21,7 @@ fn env_usize(key: &str, default: usize) -> usize {
 fn main() -> anyhow::Result<()> {
     let scale = env_usize("FAST_ESRNN_SCALE", 100);
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 10);
-    let engine = Engine::load("artifacts")?;
+    let backend = default_backend()?;
     let corpus = generate(&GenOptions { scale, ..Default::default() });
 
     println!("== Table 2 analogue (corpus calibration) ==");
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             batch_size: 64,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         eprintln!("[table6] training {} on {} series…", freq.name(),
                   trainer.series_count());
         trainer.train(false)?;

@@ -10,26 +10,27 @@ use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::Trainer;
 use fast_esrnn::data::{generate, GenOptions};
 use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 
 fn main() -> anyhow::Result<()> {
     let freq = Frequency::Quarterly;
 
     // Train a small model to serve (2 epochs is enough for a demo).
     let state = {
-        let engine = Engine::load("artifacts")?;
+        let backend = default_backend()?;
+        println!("backend: {}", backend.platform());
         let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
         let tc = TrainConfig { epochs: 2, batch_size: 16, ..Default::default() };
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         trainer.train(false)?;
         println!("trained {} on {} series", freq.name(),
                  trainer.series_count());
         trainer.state.clone()
     };
 
-    // Start the service (it owns its engine on a dedicated thread).
+    // Start the service (it builds its own backend on a dedicated thread).
     let service = ForecastService::start(
-        "artifacts".into(), freq, state,
+        default_backend, freq, state,
         ServiceOptions { max_batch: 64, ..Default::default() })?;
 
     // Request generators: a fresh corpus the model never saw.

@@ -1,11 +1,12 @@
-//! END-TO-END DRIVER (recorded in EXPERIMENTS.md): train ES-RNN on the
-//! full synthetic M4-like corpus for all three modeled frequencies, log
-//! the loss curves, score the test holdout against the Comb benchmark,
-//! and print the Table 4 / Table 6 analogues.
+//! END-TO-END DRIVER: train ES-RNN on the full synthetic M4-like corpus
+//! for all three modeled frequencies, log the loss curves, score the test
+//! holdout against the Comb benchmark, and print the Table 4 / Table 6
+//! analogues.
 //!
-//! This is the complete system doing the paper's experiment: Pallas ES
-//! kernel + fused LSTM cells inside the AOT train step, Rust owning the
-//! per-series parameter store, batching, epochs and evaluation.
+//! This is the complete system doing the paper's experiment — ES layer +
+//! dilated LSTM inside the train step (native Rust graph, or Pallas
+//! kernels via the pjrt backend), Rust owning the per-series parameter
+//! store, batching, epochs and evaluation.
 //!
 //! Run with: `cargo run --release --example m4_train` (≈ minutes), or set
 //! FAST_ESRNN_SCALE / FAST_ESRNN_EPOCHS to shrink/grow the run.
@@ -16,7 +17,7 @@ use fast_esrnn::config::{NetworkConfig, TrainConfig, ALL_CATEGORIES,
 use fast_esrnn::coordinator::{EvalSplit, Trainer};
 use fast_esrnn::data::{generate, split_corpus, GenOptions};
 use fast_esrnn::metrics::{mase, smape, MetricAccumulator};
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::runtime::{default_backend, Backend};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -27,9 +28,9 @@ fn main() -> anyhow::Result<()> {
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 15);
     let batch = env_usize("FAST_ESRNN_BATCH", 64);
 
-    let engine = Engine::load("artifacts")?;
-    println!("PJRT platform: {} | corpus scale 1/{scale} | {epochs} epochs \
-              | batch {batch}", engine.platform());
+    let backend = default_backend()?;
+    println!("backend: {} | corpus scale 1/{scale} | {epochs} epochs \
+              | batch {batch}", backend.platform());
     let corpus = generate(&GenOptions { scale, ..Default::default() });
     println!("corpus: {} series", corpus.len());
 
@@ -45,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             batch_size: batch,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         println!("{} series survive §5.2 (of {})", trainer.series_count(),
                  trainer.set.total);
 

@@ -1,18 +1,21 @@
-//! Quickstart: train ES-RNN on a small synthetic quarterly corpus and
-//! forecast — the 60-second tour of the public API.
+//! Quickstart: train ES-RNN on a small synthetic quarterly corpus, then
+//! serve a forecast through the dynamic-batching service — the 60-second
+//! tour of the public API, end-to-end on the pure-Rust native backend.
 //!
 //! Run with: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first).
+//! (no artifacts or XLA needed; set FAST_ESRNN_BACKEND=pjrt to run the
+//! same flow against AOT artifacts under `--features pjrt`).
 
 use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{EvalSplit, Trainer};
 use fast_esrnn::data::{generate, GenOptions};
-use fast_esrnn::runtime::Engine;
+use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
+use fast_esrnn::runtime::{default_backend, Backend};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Open the AOT artifacts (HLO text compiled from JAX + Pallas).
-    let engine = Engine::load("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
+    // 1. Pick an execution backend (native CPU unless overridden).
+    let backend = default_backend()?;
+    println!("backend: {}", backend.platform());
 
     // 2. A small deterministic corpus (1/400 of the M4 Table 2 counts).
     let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
@@ -24,7 +27,8 @@ fn main() -> anyhow::Result<()> {
         batch_size: 16,
         ..Default::default()
     };
-    let mut trainer = Trainer::new(&engine, Frequency::Quarterly, &corpus, tc)?;
+    let mut trainer = Trainer::new(backend.as_ref(), Frequency::Quarterly,
+                                   &corpus, tc)?;
     println!("training on {} equalized series…", trainer.series_count());
     let report = trainer.train(true)?;
 
@@ -39,5 +43,23 @@ fn main() -> anyhow::Result<()> {
         println!("  {}: forecast {:?} … actual {:?}", s.id,
                  &fc[..3], &s.test[..3]);
     }
+
+    // 5. Serve the trained model through the forecast service (the
+    //    service thread builds its own backend via the same selector).
+    let service = ForecastService::start(
+        default_backend, Frequency::Quarterly, trainer.state.clone(),
+        ServiceOptions::default())?;
+    let demo = trainer.set.series[0].clone();
+    let resp = service.handle.forecast(ForecastRequest {
+        id: demo.id.clone(),
+        values: demo.refit.clone(),
+        category: fast_esrnn::config::Category::Other,
+    })?;
+    assert_eq!(resp.forecast.len(), 8);
+    assert!(resp.forecast.iter().all(|v| v.is_finite() && *v > 0.0));
+    println!("\nserved forecast for `{}`: {:?}", resp.id, &resp.forecast[..4]);
+    let st = service.handle.stats()?;
+    println!("service stats: {} requests, {} batches, {} padded slots",
+             st.requests, st.batches, st.padded_slots);
     Ok(())
 }

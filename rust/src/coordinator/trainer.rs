@@ -1,15 +1,17 @@
 //! Training driver: the epoch loop that joins the per-series parameter
-//! store, the batch scheduler and the AOT train-step artifact.
+//! store, the batch scheduler and the backend's train-step program.
 //!
 //! One `Trainer` owns one frequency's model (paper §3: each frequency has
 //! its own network). The loop is the paper's §3.3 procedure: classical
 //! primer → joint gradient training of {RNN weights, per-series HW
 //! parameters} → holdout evaluation, with LR drops and early stopping on
-//! validation sMAPE.
+//! validation sMAPE. The trainer is backend-agnostic: it talks to any
+//! [`Backend`] (native CPU by default, PJRT artifacts with the `pjrt`
+//! feature) purely through manifest program/leaf names.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::{Frequency, NetworkConfig, TrainConfig, ALL_CATEGORIES};
 use crate::coordinator::batcher::{Batch, Batcher};
@@ -17,7 +19,7 @@ use crate::coordinator::store::ParamStore;
 use crate::data::{split_corpus, Corpus, SplitSet};
 use crate::hw;
 use crate::metrics::{mase, smape, MetricAccumulator};
-use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::runtime::{execute_with_maps, Backend, HostTensor, Manifest};
 use crate::telemetry::Telemetry;
 use crate::util::rng::Rng;
 
@@ -30,9 +32,9 @@ pub struct ModelState {
 }
 
 impl ModelState {
-    /// Initialize from the per-frequency `init` artifact.
-    pub fn init(engine: &Engine, freq: &str, seed: u64) -> Result<Self> {
-        let rnn = engine.execute_init(freq, seed)?;
+    /// Initialize from the backend's per-frequency `init` program.
+    pub fn init(backend: &dyn Backend, freq: &str, seed: u64) -> Result<Self> {
+        let rnn = backend.execute_init(freq, seed)?;
         let mut tensors = HashMap::new();
         for (name, t) in rnn {
             // `name` comes back as e.g. `rnn.cells.0.w`.
@@ -91,7 +93,7 @@ pub struct TrainReport {
 
 /// The per-frequency training coordinator.
 pub struct Trainer<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn Backend,
     pub freq: Frequency,
     pub net: NetworkConfig,
     pub set: SplitSet,
@@ -108,8 +110,8 @@ pub struct Trainer<'e> {
 
 impl<'e> Trainer<'e> {
     /// Build a trainer: equalize + split the corpus, prime the store,
-    /// initialize RNN weights from the artifact.
-    pub fn new(engine: &'e Engine, freq: Frequency, corpus: &Corpus,
+    /// initialize RNN weights via the backend's `init` program.
+    pub fn new(backend: &'e dyn Backend, freq: Frequency, corpus: &Corpus,
                opts: TrainConfig) -> Result<Self> {
         let net = NetworkConfig::for_freq(freq)?;
         // Model key: usually the frequency name; ablation variants (e.g.
@@ -119,13 +121,13 @@ impl<'e> Trainer<'e> {
             .model_key
             .clone()
             .unwrap_or_else(|| freq.name().to_string());
-        let mcfg = engine.manifest().config(&key)?;
+        let mcfg = backend.manifest().config(&key)?;
         net.check_manifest(mcfg)?;
 
-        let avail = engine.manifest().available_batches(&key, "train_step");
+        let avail = backend.manifest().available_batches(&key, "train_step");
         if !avail.contains(&opts.batch_size) {
-            bail!("no {key} train_step artifact for batch size {} (have {:?}); \
-                   re-run `make artifacts` with --batch-sizes",
+            bail!("no {key} train_step program for batch size {} (have {:?}); \
+                   for PJRT, re-run `make artifacts` with --batch-sizes",
                   opts.batch_size, avail);
         }
         let set = split_corpus(corpus, &net)
@@ -152,21 +154,21 @@ impl<'e> Trainer<'e> {
             .collect();
         let store = ParamStore::from_primers_dual(
             &primers, net.seasonality, net.seasonality2)?;
-        let state = ModelState::init(engine, &key, opts.seed)?;
+        let state = ModelState::init(backend, &key, opts.seed)?;
         let batcher = Batcher::new(set.series.len(), opts.batch_size, opts.seed);
 
-        // All compiled predict batch sizes: evaluation uses a greedy
+        // All available predict batch sizes: evaluation uses a greedy
         // mixed-size cover (§Perf) to minimize padded compute.
-        let predict_batches = engine.manifest().available_batches(&key, "predict");
+        let predict_batches = backend.manifest().available_batches(&key, "predict");
         if predict_batches.is_empty() {
-            bail!("no predict artifacts for {key}");
+            bail!("no predict programs for {key}");
         }
 
         let lr = opts.learning_rate;
         let train_name =
             Manifest::program_name(&key, opts.batch_size, "train_step");
         Ok(Self {
-            engine,
+            backend,
             freq,
             net,
             set,
@@ -216,15 +218,10 @@ impl<'e> Trainer<'e> {
         inputs.insert("lr".into(), HostTensor::scalar(self.lr));
         self.telemetry.add_time("assemble", t0.elapsed().as_secs_f64());
 
-        let state = &self.state;
         let outs = {
             let t1 = std::time::Instant::now();
-            let outs = self.engine.execute_named(&self.train_name, |spec| {
-                inputs
-                    .get(&spec.name)
-                    .or_else(|| state.tensors.get(&spec.name))
-                    .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
-            })?;
+            let outs = execute_with_maps(self.backend, &self.train_name,
+                                         &inputs, &self.state.tensors)?;
             self.telemetry.add_time("train_step", t1.elapsed().as_secs_f64());
             outs
         };
@@ -274,14 +271,9 @@ impl<'e> Trainer<'e> {
                                               batch.indices.len(), "predict");
             let mut inputs = self.batch_data(&batch, refit)?;
             inputs.extend(self.store.gather_batch_rotated(&batch.indices, rot)?);
-            let state = &self.state;
             let t0 = std::time::Instant::now();
-            let outs = self.engine.execute_named(&name, |spec| {
-                inputs
-                    .get(&spec.name)
-                    .or_else(|| state.tensors.get(&spec.name))
-                    .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
-            })?;
+            let outs = execute_with_maps(self.backend, &name, &inputs,
+                                         &self.state.tensors)?;
             self.telemetry.add_time("predict", t0.elapsed().as_secs_f64());
             let fc = &outs[0].1;
             for (slot, &valid) in batch.valid.iter().enumerate() {

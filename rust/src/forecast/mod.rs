@@ -1,15 +1,17 @@
-//! Forecast service: a vLLM-router-style request loop over the predict
-//! artifact.
+//! Forecast service: a vLLM-router-style request loop over the backend's
+//! predict program.
 //!
 //! Clients submit single series; the service dynamically batches them
 //! (collect-until-deadline, like continuous batching in serving systems),
-//! picks the smallest compiled batch size that fits, pads the remainder,
-//! executes the AOT predict program and fans the results back out.
+//! splits the pending set into executions no larger than the biggest
+//! available batch program, pads each execution up to the smallest
+//! program that fits, runs the backend and fans the results back out.
 //!
-//! The PJRT client is not `Send`, so the engine lives on a dedicated
-//! service thread; the public [`ForecastHandle`] is a cheap clonable
-//! channel endpoint usable from any thread (no async runtime available
-//! offline — std threads + mpsc).
+//! Backends may be `!Send` (the PJRT client is), so the service owns its
+//! backend on a dedicated thread and *constructs it there* from a factory
+//! closure; the public [`ForecastHandle`] is a cheap clonable channel
+//! endpoint usable from any thread (no async runtime available offline —
+//! std threads + mpsc).
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -19,9 +21,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{Category, Frequency, NetworkConfig};
-use crate::coordinator::{ModelState, ParamStore};
+use crate::coordinator::ModelState;
 use crate::hw;
-use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::runtime::{execute_with_maps, Backend, HostTensor, Manifest,
+                     NativeBackend};
 
 /// A single forecast request: raw history (≥ C values) + category.
 #[derive(Debug, Clone)]
@@ -43,7 +46,9 @@ pub struct ForecastResponse {
 pub struct ServiceOptions {
     /// How long to hold the first request while more arrive.
     pub batch_window: Duration,
-    /// Cap on requests per executed batch (≤ largest compiled size).
+    /// Cap on requests drained per batching round. May exceed the largest
+    /// available batch program: the round is split into multiple
+    /// executions, each padded-accounted individually.
     pub max_batch: usize,
 }
 
@@ -57,6 +62,7 @@ impl Default for ServiceOptions {
 #[derive(Debug, Default, Clone)]
 pub struct ServiceStats {
     pub requests: u64,
+    /// Executed batches (one per backend execution, not per drain round).
     pub batches: u64,
     pub padded_slots: u64,
 }
@@ -106,29 +112,34 @@ impl ForecastHandle {
     }
 }
 
-/// A running forecast service (engine thread + request channel).
+/// A running forecast service (backend thread + request channel).
 pub struct ForecastService {
     pub handle: ForecastHandle,
     join: Option<JoinHandle<()>>,
 }
 
 impl ForecastService {
-    /// Start the service for one frequency. `state` is a trained
-    /// [`ModelState`]; requests for series the model was not trained on
-    /// get classical primer parameters (the shared RNN generalizes —
-    /// paper §9's "generalization towards specific problems").
-    pub fn start(artifacts_dir: std::path::PathBuf, freq: Frequency,
-                 state: ModelState, opts: ServiceOptions) -> Result<Self> {
+    /// Start the service for one frequency with a backend built by
+    /// `factory` *on the service thread* (backends may be `!Send`).
+    /// `state` is a trained [`ModelState`]; requests for series the model
+    /// was not trained on get classical primer parameters (the shared RNN
+    /// generalizes — paper §9's "generalization towards specific
+    /// problems").
+    pub fn start<F>(factory: F, freq: Frequency, state: ModelState,
+                    opts: ServiceOptions) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
         let net = NetworkConfig::for_freq(freq)?;
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
             .name(format!("forecast-{}", freq.name()))
             .spawn(move || {
-                match Engine::load(&artifacts_dir) {
-                    Ok(engine) => {
+                match factory() {
+                    Ok(backend) => {
                         let _ = ready_tx.send(Ok(()));
-                        serve(engine, net, state, opts, rx);
+                        serve(backend.as_ref(), net, state, opts, rx);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -139,6 +150,26 @@ impl ForecastService {
             .recv()
             .map_err(|_| anyhow!("service thread died during startup"))??;
         Ok(Self { handle: ForecastHandle { tx }, join: Some(join) })
+    }
+
+    /// Start on the pure-Rust native backend (no artifacts needed).
+    pub fn start_native(freq: Frequency, state: ModelState,
+                        opts: ServiceOptions) -> Result<Self> {
+        Self::start(|| Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>),
+                    freq, state, opts)
+    }
+
+    /// Start on the PJRT backend over an AOT artifact directory.
+    #[cfg(feature = "pjrt")]
+    pub fn start_pjrt(artifacts_dir: std::path::PathBuf, freq: Frequency,
+                      state: ModelState, opts: ServiceOptions) -> Result<Self> {
+        Self::start(
+            move || {
+                Ok(Box::new(crate::runtime::PjrtBackend::load(&artifacts_dir)?)
+                   as Box<dyn Backend>)
+            },
+            freq, state, opts,
+        )
     }
 }
 
@@ -151,8 +182,8 @@ impl Drop for ForecastService {
     }
 }
 
-/// Pick the smallest compiled batch that fits `n` (or the largest
-/// available if none fits — callers cap at max_batch anyway).
+/// Pick the smallest available batch that fits `n`; callers must have
+/// already split `n` to at most the largest available size.
 fn pick_batch(available: &[usize], n: usize) -> usize {
     available
         .iter()
@@ -162,10 +193,27 @@ fn pick_batch(available: &[usize], n: usize) -> usize {
         .unwrap_or_else(|| available.iter().copied().max().unwrap_or(1))
 }
 
-fn serve(engine: Engine, net: NetworkConfig, state: ModelState,
+/// Split a pending set of `n` requests into per-execution real counts,
+/// each at most the largest available batch program. A drain round larger
+/// than the biggest program becomes several executions instead of
+/// silently truncating (the old behavior under-counted `padded_slots`
+/// and over-read the forecast buffer).
+fn plan_batches(available: &[usize], n: usize) -> Vec<usize> {
+    let cap = available.iter().copied().max().unwrap_or(1);
+    let mut plan = Vec::with_capacity(n.div_ceil(cap));
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(cap);
+        plan.push(take);
+        remaining -= take;
+    }
+    plan
+}
+
+fn serve(backend: &dyn Backend, net: NetworkConfig, state: ModelState,
          opts: ServiceOptions, rx: mpsc::Receiver<Msg>) {
     let freq = net.freq.name().to_string();
-    let available = engine.manifest().available_batches(&freq, "predict");
+    let available = backend.manifest().available_batches(&freq, "predict");
     let mut stats = ServiceStats::default();
 
     loop {
@@ -198,18 +246,20 @@ fn serve(engine: Engine, net: NetworkConfig, state: ModelState,
                 }
                 Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
                     // Serve what we have, then exit.
-                    run_batch(&engine, &net, &state, &available, &mut stats,
+                    run_round(backend, &net, &state, &available, &mut stats,
                               &mut pending);
                     return;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
             }
         }
-        run_batch(&engine, &net, &state, &available, &mut stats, &mut pending);
+        run_round(backend, &net, &state, &available, &mut stats, &mut pending);
     }
 }
 
-fn run_batch(engine: &Engine, net: &NetworkConfig, state: &ModelState,
+/// Serve one drained round of requests, splitting it into as many backend
+/// executions as the available batch sizes require.
+fn run_round(backend: &dyn Backend, net: &NetworkConfig, state: &ModelState,
              available: &[usize], stats: &mut ServiceStats,
              pending: &mut Vec<(ForecastRequest,
                                 mpsc::Sender<Result<ForecastResponse>>)>) {
@@ -217,25 +267,34 @@ fn run_batch(engine: &Engine, net: &NetworkConfig, state: &ModelState,
         return;
     }
     stats.requests += pending.len() as u64;
-    stats.batches += 1;
-    let result = execute_batch(engine, net, state, available, stats, pending);
-    match result {
-        Ok(forecasts) => {
-            for ((req, tx), fc) in pending.drain(..).zip(forecasts) {
-                let _ = tx.send(Ok(ForecastResponse { id: req.id, forecast: fc }));
+    let mut start = 0usize;
+    for real in plan_batches(available, pending.len()) {
+        let chunk = &pending[start..start + real];
+        stats.batches += 1;
+        match execute_batch(backend, net, state, available, stats, chunk) {
+            Ok(forecasts) => {
+                for ((req, tx), fc) in chunk.iter().zip(forecasts) {
+                    let _ = tx.send(Ok(ForecastResponse {
+                        id: req.id.clone(),
+                        forecast: fc,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, tx) in chunk {
+                    let _ = tx.send(Err(anyhow!("{msg}")));
+                }
             }
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for (_, tx) in pending.drain(..) {
-                let _ = tx.send(Err(anyhow!("{msg}")));
-            }
-        }
+        start += real;
     }
+    pending.clear();
 }
 
-fn execute_batch(engine: &Engine, net: &NetworkConfig, state: &ModelState,
-                 available: &[usize], stats: &mut ServiceStats,
+fn execute_batch(backend: &dyn Backend, net: &NetworkConfig,
+                 state: &ModelState, available: &[usize],
+                 stats: &mut ServiceStats,
                  pending: &[(ForecastRequest,
                              mpsc::Sender<Result<ForecastResponse>>)])
                  -> Result<Vec<Vec<f32>>> {
@@ -281,20 +340,9 @@ fn execute_batch(engine: &Engine, net: &NetworkConfig, state: &ModelState,
                   HostTensor::new(vec![b, s_width], s_init)?);
 
     let name = Manifest::program_name(net.freq.name(), b, "predict");
-    let outs = engine.execute_named(&name, |spec| {
-        inputs
-            .get(&spec.name)
-            .or_else(|| state.tensors.get(&spec.name))
-            .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
-    })?;
+    let outs = execute_with_maps(backend, &name, &inputs, &state.tensors)?;
     let fc = &outs[0].1;
     Ok((0..n).map(|i| fc.data[i * h..(i + 1) * h].to_vec()).collect())
-}
-
-/// Build a `ParamStore`-free state for serving from a checkpoint-less
-/// trained trainer (convenience re-export point; see examples).
-pub fn state_from_parts(state: ModelState, _store: &ParamStore) -> ModelState {
-    state
 }
 
 #[cfg(test)]
@@ -308,7 +356,35 @@ mod tests {
         assert_eq!(pick_batch(&avail, 2), 16);
         assert_eq!(pick_batch(&avail, 16), 16);
         assert_eq!(pick_batch(&avail, 17), 64);
-        assert_eq!(pick_batch(&avail, 500), 256); // cap at largest
+    }
+
+    #[test]
+    fn plan_splits_oversized_rounds() {
+        // 500 pending with max program 256 → two executions, not a
+        // truncated single one.
+        assert_eq!(plan_batches(&[1, 16, 64, 256], 500), vec![256, 244]);
+        assert_eq!(plan_batches(&[1, 16], 20), vec![16, 4]);
+        assert_eq!(plan_batches(&[1, 16], 16), vec![16]);
+        assert_eq!(plan_batches(&[8], 7), vec![7]);
+        assert_eq!(plan_batches(&[4], 9), vec![4, 4, 1]);
+    }
+
+    #[test]
+    fn plan_padding_accounting_is_exact() {
+        // Padding per execution = pick_batch(real) - real; summed over an
+        // oversized round it must count every padded slot.
+        let avail = vec![1, 16, 64];
+        let n = 100; // 64 + 36→64(pad 28)
+        let mut padded = 0usize;
+        let mut covered = 0usize;
+        for real in plan_batches(&avail, n) {
+            let b = pick_batch(&avail, real);
+            assert!(b >= real, "split must remove truncation");
+            padded += b - real;
+            covered += real;
+        }
+        assert_eq!(covered, n);
+        assert_eq!(padded, 28);
     }
 
     #[test]

@@ -6,17 +6,20 @@
 //! dilated-residual LSTM, vectorized so the per-series parameters become
 //! batch-dimension tensor slices.
 //!
-//! Architecture (three layers, Python never on the request path):
-//! * **L1** — Pallas kernels (batched ES recurrence, fused LSTM cell,
-//!   pinball loss), compiled into
-//! * **L2** — the JAX ES-RNN compute graph, AOT-lowered to HLO text, loaded
-//!   and executed by
+//! Architecture (three layers; Python never on the request path — and with
+//! the default backend, never anywhere):
+//! * **L1** — kernels implementing the batched ES recurrence, fused LSTM
+//!   cell and pinball loss: either Pallas (compiled into the AOT
+//!   artifacts) or the pure-Rust mirrors in [`runtime::native::model`];
+//! * **L2** — the ES-RNN compute graph: the AOT-lowered JAX/HLO programs
+//!   (`--features pjrt`) or the native Rust graph, both served behind the
+//!   [`runtime::Backend`] trait under identical manifest contracts;
 //! * **L3** — this crate: dataset pipeline, per-series parameter store,
 //!   batch scheduler, training driver, evaluation, classical baselines,
-//!   forecast service and CLI.
+//!   forecast service and CLI — all backend-agnostic.
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the full system inventory, the `Backend` trait
+//! contract and the tensor naming scheme; `ROADMAP.md` tracks open items.
 
 pub mod baselines;
 pub mod config;

@@ -7,8 +7,9 @@
 //!   baselines  run the classical baselines (incl. the M4 Comb benchmark)
 //!   serve      demo of the dynamic-batching forecast service
 //!
-//! Everything runs from the AOT artifacts in `--artifacts` (default
-//! `artifacts/`); Python is never invoked.
+//! `--backend native` (the default) runs everything on the pure-Rust
+//! backend — no artifacts, no XLA, no Python. `--backend pjrt` runs from
+//! the AOT artifacts in `--artifacts` (requires `--features pjrt`).
 
 use anyhow::{bail, Result};
 
@@ -19,8 +20,14 @@ use fast_esrnn::coordinator::{checkpoint, EvalSplit, Trainer};
 use fast_esrnn::data::{self, stats, Corpus, GenOptions};
 use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
 use fast_esrnn::metrics::{mase, smape};
-use fast_esrnn::runtime::Engine;
-use fast_esrnn::util::cli::Cli;
+use fast_esrnn::runtime::{backend_with_artifacts, Backend};
+use fast_esrnn::util::cli::{Args, Cli};
+
+/// Build the backend selected by `--backend` / `--artifacts`.
+fn backend_from_args(a: &Args) -> Result<Box<dyn Backend>> {
+    backend_with_artifacts(a.get("backend"),
+                           Some(std::path::Path::new(a.get("artifacts"))))
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -95,7 +102,8 @@ fn cmd_data_gen(args: &[String]) -> Result<()> {
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let cli = Cli::new("train", "train ES-RNN per frequency")
-        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("backend", "native", "execution backend: native or pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("freqs", "all", "comma list: yearly,quarterly,monthly or `all`")
         .opt("scale", "100", "synthetic corpus scale divisor")
         .opt("corpus", "", "load corpus CSV instead of generating")
@@ -106,8 +114,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("checkpoint-dir", "checkpoints", "save checkpoints here")
         .flag("quiet", "suppress per-epoch logs");
     let a = cli.parse(args)?;
-    let engine = Engine::load(a.get("artifacts"))?;
-    println!("PJRT platform: {}", engine.platform());
+    let backend = backend_from_args(&a)?;
+    println!("backend: {}", backend.platform());
     let corpus = load_or_gen_corpus(a.get("corpus"), a.get_usize("scale")?,
                                     20190603)?;
     let freqs = parse_freqs(&a.get_str_list("freqs"))?;
@@ -123,7 +131,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         };
         println!("\n=== training {} ({} epochs, batch {}) ===",
                  freq.name(), tc.epochs, tc.batch_size);
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         println!("  {} series after §5.2 equalization ({} discarded)",
                  trainer.series_count(), trainer.set.discarded);
         let report = trainer.train(!a.get_flag("quiet"))?;
@@ -144,7 +152,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
 fn cmd_evaluate(args: &[String]) -> Result<()> {
     let cli = Cli::new("evaluate", "score a checkpoint on the test holdout")
-        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("backend", "native", "execution backend: native or pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("freqs", "all", "frequencies")
         .opt("scale", "100", "synthetic corpus scale divisor")
         .opt("corpus", "", "corpus CSV (must match training corpus)")
@@ -152,7 +161,7 @@ fn cmd_evaluate(args: &[String]) -> Result<()> {
         .opt("batch-size", "64", "batch artifact used for store sizing")
         .opt("seed", "42", "seed (must match training for primer layout)");
     let a = cli.parse(args)?;
-    let engine = Engine::load(a.get("artifacts"))?;
+    let backend = backend_from_args(&a)?;
     let corpus = load_or_gen_corpus(a.get("corpus"), a.get_usize("scale")?,
                                     20190603)?;
     let freqs = parse_freqs(&a.get_str_list("freqs"))?;
@@ -165,7 +174,7 @@ fn cmd_evaluate(args: &[String]) -> Result<()> {
             seed: a.get_u64("seed")?,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, freq, &corpus, tc)?;
+        let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         let path = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
         checkpoint::load(&path, &mut trainer.state, &mut trainer.store)?;
         let test = trainer.evaluate(EvalSplit::Test)?;
@@ -215,7 +224,8 @@ fn cmd_baselines(args: &[String]) -> Result<()> {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     let cli = Cli::new("serve", "demo the dynamic-batching forecast service")
-        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("backend", "native", "execution backend: native or pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("freq", "quarterly", "frequency to serve")
         .opt("checkpoint-dir", "checkpoints", "checkpoint directory")
         .opt("requests", "64", "number of demo requests")
@@ -227,9 +237,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // Load a trained model if present; otherwise serve with fresh weights
     // (still exercises the full service path).
     let state = {
-        let engine = Engine::load(a.get("artifacts"))?;
+        let backend = backend_from_args(&a)?;
         let mut state = fast_esrnn::coordinator::ModelState::init(
-            &engine, freq.name(), 42)?;
+            backend.as_ref(), freq.name(), 42)?;
         let ckpt = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
         if std::path::Path::new(&ckpt).exists() {
             println!("serving RNN weights from {ckpt}");
@@ -247,10 +257,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             checkpoint::load(&ckpt, &mut state, &mut store)?;
         }
         state
-    }; // engine dropped: the service owns its own engine thread
+    }; // backend dropped: the service constructs its own on its thread
 
+    let backend_name = a.get("backend").to_string();
+    let artifacts = std::path::PathBuf::from(a.get("artifacts"));
     let service = ForecastService::start(
-        a.get("artifacts").into(), freq, state, ServiceOptions::default())?;
+        move || backend_with_artifacts(&backend_name, Some(&artifacts)),
+        freq, state, ServiceOptions::default())?;
 
     // Fire demo requests from generated series.
     let corpus = data::generate(&GenOptions {

@@ -1,0 +1,125 @@
+//! The execution-backend abstraction: everything the coordinator, the
+//! forecast service and the CLI need from "something that can run the
+//! ES-RNN programs", with the program *catalog* (the [`Manifest`]) as the
+//! shared contract.
+//!
+//! Two implementations ship in-tree:
+//! * [`crate::runtime::native::NativeBackend`] — pure Rust, no external
+//!   runtime, batch-parallel on std threads (the default);
+//! * [`crate::runtime::pjrt::PjrtBackend`] — the AOT HLO artifact path via
+//!   the PJRT C API (`--features pjrt`).
+//!
+//! The contract is name-driven: programs are addressed by manifest name
+//! (`{freq}_b{batch}_{kind}`), tensors by manifest leaf name (the
+//! `data.*` / `params.rnn.*` / `params.series.*` / `opt.{m,v}.*` /
+//! `opt.step` / `lr` scheme described in `DESIGN.md`). Callers never see
+//! backend-internal types.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{Manifest, TensorSpec};
+
+/// A host-resident tensor (f32, row-major) with its shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} needs {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Timing/counter totals the telemetry layer scrapes. `compiles` /
+/// `compile_secs` stay zero for backends with no compilation step.
+#[derive(Debug, Default, Clone)]
+pub struct BackendStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub pack_secs: f64,
+    pub unpack_secs: f64,
+}
+
+/// A pluggable execution backend.
+///
+/// Implementations must honor the manifest contract:
+/// * `execute_named` calls `lookup` once per program input, in manifest
+///   order, validates shapes against the specs, and returns outputs as
+///   `(leaf name, tensor)` pairs in manifest output order;
+/// * `execute_init` runs the per-frequency `init` program, returning RNN
+///   weight leaves named `rnn.*` (no `params.` prefix — the caller owns
+///   the prefixing);
+/// * `stats` returns cumulative totals since construction.
+pub trait Backend {
+    /// Execute a program with f32 host tensors supplied by name.
+    fn execute_named<'a>(
+        &self,
+        name: &str,
+        lookup: &mut dyn FnMut(&TensorSpec) -> Result<&'a HostTensor>,
+    ) -> Result<Vec<(String, HostTensor)>>;
+
+    /// Run the per-frequency `init` program: PRNG seed → RNN weights.
+    fn execute_init(&self, freq: &str, seed: u64) -> Result<Vec<(String, HostTensor)>>;
+
+    /// The program catalog this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Human-readable platform identifier (e.g. `native-cpu (8 threads)`).
+    fn platform(&self) -> String;
+
+    /// Cumulative execution statistics.
+    fn stats(&self) -> BackendStats;
+}
+
+/// Convenience for the common call shape: execute with inputs drawn from
+/// one or two name→tensor maps (the second typically being persistent
+/// model state).
+pub fn execute_with_maps(
+    backend: &dyn Backend,
+    name: &str,
+    inputs: &HashMap<String, HostTensor>,
+    state: &HashMap<String, HostTensor>,
+) -> Result<Vec<(String, HostTensor)>> {
+    backend.execute_named(name, &mut |spec| {
+        inputs
+            .get(&spec.name)
+            .or_else(|| state.get(&spec.name))
+            .ok_or_else(|| anyhow!("no source for input `{}`", spec.name))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_validation() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(HostTensor::scalar(1.5).elem_count(), 1);
+        assert_eq!(HostTensor::zeros(vec![4, 2]).data.len(), 8);
+    }
+}

@@ -1,12 +1,70 @@
-//! Layer-3 ↔ Layer-2 bridge: load and execute the AOT-compiled HLO
-//! artifacts via the PJRT C API (`xla` crate).
+//! Layer-3 execution runtime: the [`Backend`] abstraction plus its two
+//! implementations and the manifest contract they share.
 //!
-//! Python never runs at train/serve time: `make artifacts` lowers the JAX
-//! model (with its Pallas kernels) to HLO text once, and everything in this
-//! module consumes those files.
+//! * [`backend`]  — the `Backend` trait, [`HostTensor`] and stats;
+//! * [`manifest`] — the program catalog (names, shapes, leaf order);
+//! * [`native`]   — pure-Rust CPU backend (default; no XLA, no Python);
+//! * [`pjrt`]     — AOT HLO artifacts via the PJRT C API
+//!   (`--features pjrt`).
 
-pub mod engine;
+pub mod backend;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use engine::{Engine, EngineStats, HostTensor};
+pub use backend::{execute_with_maps, Backend, BackendStats, HostTensor};
 pub use manifest::{FreqManifest, Manifest, ProgramSpec, TensorSpec};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+
+/// Build the backend selected by the environment:
+///
+/// * `FAST_ESRNN_BACKEND=native` (or unset) — [`NativeBackend`];
+/// * `FAST_ESRNN_BACKEND=pjrt` — [`PjrtBackend`] over the artifact dir in
+///   `FAST_ESRNN_ARTIFACTS` (default `artifacts/`); requires the `pjrt`
+///   feature.
+///
+/// Examples and benches use this so one binary exercises either backend.
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    let which = std::env::var("FAST_ESRNN_BACKEND")
+        .unwrap_or_else(|_| "native".to_string());
+    backend_by_name(&which)
+}
+
+/// Build a backend by name (`native` or `pjrt`), used by the CLI's
+/// `--backend` option as well as [`default_backend`].
+pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
+    backend_with_artifacts(name, None)
+}
+
+/// Like [`backend_by_name`] with an explicit artifact directory for the
+/// PJRT backend (`None` falls back to `FAST_ESRNN_ARTIFACTS`, then
+/// `artifacts/`).
+pub fn backend_with_artifacts(name: &str,
+                              artifacts: Option<&std::path::Path>)
+                              -> Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let dir: std::path::PathBuf = match artifacts {
+                Some(p) => p.to_path_buf(),
+                None => std::env::var("FAST_ESRNN_ARTIFACTS")
+                    .unwrap_or_else(|_| "artifacts".to_string())
+                    .into(),
+            };
+            Ok(Box::new(PjrtBackend::load(dir)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            let _ = artifacts;
+            anyhow::bail!("backend `pjrt` requires building with --features pjrt")
+        }
+        other => anyhow::bail!(
+            "unknown backend `{other}` (expected `native` or `pjrt`)"),
+    }
+}

@@ -1,0 +1,734 @@
+//! `NativeBackend` — a pure-Rust execution backend for the ES-RNN
+//! programs: no XLA, no AOT artifacts, no Python anywhere.
+//!
+//! The backend synthesizes its own [`Manifest`] from the Table-1 network
+//! configs (so callers observe exactly the contract the PJRT artifact
+//! manifest describes: same program names, same tensor leaf names, same
+//! shapes) and serves three program kinds:
+//!
+//! * `init`       — Glorot-uniform RNN weight init seeded from
+//!   [`crate::util::rng`] (distributionally equivalent to the JAX init;
+//!   bit-exactness with the Threefry artifact is explicitly *not* part of
+//!   the backend contract);
+//! * `predict`    — the batched forward pass + §3.4 de-normalization;
+//! * `train_step` — forward, hand-written backward (validated by finite
+//!   differences) and the Adam update with the §3.3 per-series
+//!   learning-rate multiplier;
+//! * `es`         — the bare Holt-Winters layer (debug/verification
+//!   program, mirroring `aot.py::lower_es`).
+//!
+//! The batch dimension is data-parallel: `train_step` and `predict` split
+//! the batch across `std::thread` scoped workers (per-series gradients are
+//! independent; shared-weight gradients are reduced across chunks).
+//!
+//! Scope: single-seasonality frequencies (yearly/quarterly/monthly/daily).
+//! The §8.2 dual-seasonality (hourly) and §8.4 penalty variants remain
+//! PJRT-artifact-only; their configs are simply absent from the native
+//! manifest, which every caller already handles by name lookup.
+
+pub mod model;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Frequency, NetworkConfig};
+use crate::util::rng::Rng;
+
+use super::backend::{Backend, BackendStats, HostTensor};
+use super::manifest::{FreqManifest, Manifest, ProgramSpec, TensorSpec};
+
+use model::{RnnGrads, RnnView, SeriesGrads, Shape};
+
+/// Batch sizes the native manifest advertises. Native programs have no
+/// compile cost, so the ladder is denser than the artifact sweep — the
+/// greedy cover and the forecast service get near-zero padding.
+pub const NATIVE_BATCH_SIZES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Batch size of the `es` debug program (mirror of `aot.py`).
+const ES_DEBUG_BATCH: usize = 8;
+
+/// Frequencies with native support (single-seasonality, no penalties).
+const NATIVE_FREQS: [Frequency; 4] = [
+    Frequency::Yearly,
+    Frequency::Quarterly,
+    Frequency::Monthly,
+    Frequency::Daily,
+];
+
+/// Pinball quantile (paper §3.5) and per-series LR multiplier (§3.3) —
+/// mirrors `python/compile/configs.py`.
+pub const PINBALL_TAU: f32 = 0.48;
+pub const PER_SERIES_LR_MULT: f32 = 1.5;
+
+fn f32_spec(name: impl Into<String>, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name: name.into(), shape, dtype: "float32".into() }
+}
+
+/// Parameter leaves in manifest (jax flat, i.e. alphabetical) order,
+/// named WITHOUT the `params.` prefix.
+fn param_leaves(net: &NetworkConfig, b: usize) -> Vec<(String, Vec<usize>)> {
+    let hid = net.hidden;
+    let h = net.horizon;
+    let mut din = net.input_window + 6;
+    let mut leaves = Vec::new();
+    for i in 0..net.dilations.iter().flatten().count() {
+        leaves.push((format!("rnn.cells.{i}.b"), vec![4 * hid]));
+        leaves.push((format!("rnn.cells.{i}.w"), vec![din + hid, 4 * hid]));
+        din = hid;
+    }
+    leaves.push(("rnn.dense_b".into(), vec![hid]));
+    leaves.push(("rnn.dense_w".into(), vec![hid, hid]));
+    leaves.push(("rnn.out_b".into(), vec![h]));
+    leaves.push(("rnn.out_w".into(), vec![hid, h]));
+    leaves.push(("series.alpha_logit".into(), vec![b]));
+    leaves.push(("series.gamma_logit".into(), vec![b]));
+    leaves.push(("series.log_s_init".into(), vec![b, net.total_seasonality()]));
+    leaves
+}
+
+fn train_step_spec(freq: &str, net: &NetworkConfig, b: usize) -> ProgramSpec {
+    let leaves = param_leaves(net, b);
+    let mut inputs = vec![
+        f32_spec("data.cat", vec![b, 6]),
+        f32_spec("data.mask", vec![b]),
+        f32_spec("data.y", vec![b, net.length]),
+    ];
+    let mut outputs = vec![f32_spec("loss", vec![])];
+    for (name, shape) in &leaves {
+        inputs.push(f32_spec(format!("params.{name}"), shape.clone()));
+        outputs.push(f32_spec(format!("params.{name}"), shape.clone()));
+    }
+    for (name, shape) in &leaves {
+        inputs.push(f32_spec(format!("opt.m.{name}"), shape.clone()));
+        outputs.push(f32_spec(format!("opt.m.{name}"), shape.clone()));
+    }
+    inputs.push(f32_spec("opt.step", vec![]));
+    outputs.push(f32_spec("opt.step", vec![]));
+    for (name, shape) in &leaves {
+        inputs.push(f32_spec(format!("opt.v.{name}"), shape.clone()));
+        outputs.push(f32_spec(format!("opt.v.{name}"), shape.clone()));
+    }
+    inputs.push(f32_spec("lr", vec![]));
+    ProgramSpec {
+        file: format!("<native:{freq}_b{b}_train_step>"),
+        freq: freq.to_string(),
+        batch: b,
+        kind: "train_step".into(),
+        inputs,
+        outputs,
+    }
+}
+
+fn predict_spec(freq: &str, net: &NetworkConfig, b: usize) -> ProgramSpec {
+    let mut inputs = vec![
+        f32_spec("data.cat", vec![b, 6]),
+        f32_spec("data.y", vec![b, net.length]),
+    ];
+    for (name, shape) in param_leaves(net, b) {
+        inputs.push(f32_spec(format!("params.{name}"), shape));
+    }
+    ProgramSpec {
+        file: format!("<native:{freq}_b{b}_predict>"),
+        freq: freq.to_string(),
+        batch: b,
+        kind: "predict".into(),
+        inputs,
+        outputs: vec![f32_spec("forecast", vec![b, net.horizon])],
+    }
+}
+
+fn es_spec(freq: &str, net: &NetworkConfig, b: usize) -> ProgramSpec {
+    let (c, s) = (net.length, net.seasonality);
+    ProgramSpec {
+        file: format!("<native:{freq}_b{b}_es>"),
+        freq: freq.to_string(),
+        batch: b,
+        kind: "es".into(),
+        inputs: vec![
+            f32_spec("data.alpha_logit", vec![b]),
+            f32_spec("data.gamma_logit", vec![b]),
+            f32_spec("data.log_s_init", vec![b, s]),
+            f32_spec("data.y", vec![b, c]),
+        ],
+        outputs: vec![
+            f32_spec("levels", vec![b, c]),
+            f32_spec("seas", vec![b, c + s]),
+        ],
+    }
+}
+
+fn init_spec(freq: &str, net: &NetworkConfig) -> ProgramSpec {
+    let outputs = param_leaves(net, 1)
+        .into_iter()
+        .filter(|(name, _)| name.starts_with("rnn."))
+        .map(|(name, shape)| f32_spec(name, shape))
+        .collect();
+    ProgramSpec {
+        file: format!("<native:{freq}_init>"),
+        freq: freq.to_string(),
+        batch: 0,
+        kind: "init".into(),
+        inputs: vec![TensorSpec {
+            name: "key".into(),
+            shape: vec![2],
+            dtype: "uint32".into(),
+        }],
+        outputs,
+    }
+}
+
+fn native_manifest() -> Manifest {
+    let mut configs = HashMap::new();
+    let mut programs = HashMap::new();
+    for freq in NATIVE_FREQS {
+        let net = NetworkConfig::for_freq(freq)
+            .expect("native frequencies always have a network config");
+        let name = freq.name();
+        configs.insert(name.to_string(), FreqManifest {
+            seasonality: net.seasonality,
+            seasonality2: net.seasonality2,
+            horizon: net.horizon,
+            input_window: net.input_window,
+            length: net.length,
+            hidden: net.hidden,
+            dilations: net.dilations.clone(),
+            positions: net.positions(),
+            valid_positions: net.valid_positions(),
+        });
+        programs.insert(Manifest::program_name(name, 0, "init"),
+                        init_spec(name, &net));
+        programs.insert(Manifest::program_name(name, ES_DEBUG_BATCH, "es"),
+                        es_spec(name, &net, ES_DEBUG_BATCH));
+        for &b in NATIVE_BATCH_SIZES {
+            programs.insert(Manifest::program_name(name, b, "train_step"),
+                            train_step_spec(name, &net, b));
+            programs.insert(Manifest::program_name(name, b, "predict"),
+                            predict_spec(name, &net, b));
+        }
+    }
+    Manifest {
+        version: 1,
+        variant: "native".into(),
+        tau: PINBALL_TAU,
+        per_series_lr_mult: PER_SERIES_LR_MULT,
+        batch_sizes: NATIVE_BATCH_SIZES.to_vec(),
+        configs,
+        programs,
+    }
+}
+
+/// The pure-Rust execution backend.
+pub struct NativeBackend {
+    manifest: Manifest,
+    threads: usize,
+    stats: Mutex<BackendStats>,
+}
+
+impl NativeBackend {
+    /// Backend using every available core for batch parallelism.
+    pub fn new() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_threads(threads)
+    }
+
+    /// Backend with an explicit worker-thread cap (1 = fully sequential).
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            manifest: native_manifest(),
+            threads: threads.max(1),
+            stats: Mutex::new(BackendStats::default()),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn shape_for(&self, freq: &str) -> Result<Shape> {
+        let cfg = self.manifest.config(freq)?;
+        Ok(Shape::new(cfg.seasonality, cfg.horizon, cfg.input_window,
+                      cfg.length, cfg.hidden, &cfg.dilations, 6))
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fetch an input tensor by name, preserving the underlying lifetime.
+fn get_in<'x>(inputs: &HashMap<&str, &'x HostTensor>, name: &str)
+              -> Result<&'x HostTensor> {
+    inputs
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("missing input `{name}`"))
+}
+
+fn get_data<'x>(inputs: &HashMap<&str, &'x HostTensor>, name: &str)
+                -> Result<&'x [f32]> {
+    Ok(get_in(inputs, name)?.data.as_slice())
+}
+
+/// Resolve the per-series parameter slices for one batch slot.
+struct SeriesView<'a> {
+    alpha_logit: &'a [f32],
+    gamma_logit: &'a [f32],
+    log_s_init: &'a [f32],
+    s_width: usize,
+}
+
+impl<'a> SeriesView<'a> {
+    fn from_inputs(inputs: &HashMap<&str, &'a HostTensor>, s_width: usize)
+                   -> Result<Self> {
+        Ok(Self {
+            alpha_logit: get_data(inputs, "params.series.alpha_logit")?,
+            gamma_logit: get_data(inputs, "params.series.gamma_logit")?,
+            log_s_init: get_data(inputs, "params.series.log_s_init")?,
+            s_width,
+        })
+    }
+
+    fn log_s(&self, i: usize) -> &'a [f32] {
+        &self.log_s_init[i * self.s_width..(i + 1) * self.s_width]
+    }
+}
+
+/// Owned collection of RNN weight slices; [`RnnParts::view`] borrows it
+/// into the [`RnnView`] the compute core consumes.
+struct RnnParts<'a> {
+    cells: Vec<(&'a [f32], &'a [f32])>,
+    dense_w: &'a [f32],
+    dense_b: &'a [f32],
+    out_w: &'a [f32],
+    out_b: &'a [f32],
+}
+
+impl<'a> RnnParts<'a> {
+    fn from_inputs(inputs: &HashMap<&str, &'a HostTensor>, n_layers: usize)
+                   -> Result<Self> {
+        let mut cells = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            cells.push((
+                get_data(inputs, &format!("params.rnn.cells.{i}.w"))?,
+                get_data(inputs, &format!("params.rnn.cells.{i}.b"))?,
+            ));
+        }
+        Ok(Self {
+            cells,
+            dense_w: get_data(inputs, "params.rnn.dense_w")?,
+            dense_b: get_data(inputs, "params.rnn.dense_b")?,
+            out_w: get_data(inputs, "params.rnn.out_w")?,
+            out_b: get_data(inputs, "params.rnn.out_b")?,
+        })
+    }
+
+    fn view(&self) -> RnnView<'_> {
+        RnnView {
+            cells: &self.cells,
+            dense_w: self.dense_w,
+            dense_b: self.dense_b,
+            out_w: self.out_w,
+            out_b: self.out_b,
+        }
+    }
+}
+
+/// Split `0..n` into at most `threads` contiguous chunks.
+fn chunks(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.min(n).max(1);
+    let per = n.div_ceil(t);
+    (0..t)
+        .map(|i| (i * per, ((i + 1) * per).min(n)))
+        .filter(|(lo, hi)| lo < hi)
+        .collect()
+}
+
+impl Backend for NativeBackend {
+    fn execute_named<'a>(
+        &self,
+        name: &str,
+        lookup: &mut dyn FnMut(&TensorSpec) -> Result<&'a HostTensor>,
+    ) -> Result<Vec<(String, HostTensor)>> {
+        let spec = self.manifest.program(name)?.clone();
+        let t0 = Instant::now();
+        let mut inputs: HashMap<&str, &'a HostTensor> =
+            HashMap::with_capacity(spec.inputs.len());
+        for ispec in &spec.inputs {
+            if ispec.dtype != "float32" {
+                bail!("input `{}` has dtype {}, execute_named only handles \
+                       float32", ispec.name, ispec.dtype);
+            }
+            let host = lookup(ispec)
+                .with_context(|| format!("packing input `{}`", ispec.name))?;
+            if host.shape != ispec.shape {
+                bail!("tensor `{}`: host shape {:?} != manifest shape {:?}",
+                      ispec.name, host.shape, ispec.shape);
+            }
+            inputs.insert(ispec.name.as_str(), host);
+        }
+        let pack = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let shape = self.shape_for(&spec.freq)?;
+        let out = match spec.kind.as_str() {
+            "train_step" => self.run_train_step(&spec, &shape, &inputs)?,
+            "predict" => self.run_predict(&spec, &shape, &inputs)?,
+            "es" => run_es(&spec, &shape, &inputs)?,
+            other => bail!("native backend cannot execute kind `{other}`"),
+        };
+        let exec = t1.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.pack_secs += pack;
+        st.execute_secs += exec;
+        Ok(out)
+    }
+
+    fn execute_init(&self, freq: &str, seed: u64) -> Result<Vec<(String, HostTensor)>> {
+        let name = Manifest::program_name(freq, 0, "init");
+        let spec = self.manifest.program(&name)?.clone();
+        // Per-frequency stream: fold the frequency name into the seed so
+        // identically-seeded frequencies don't share weights.
+        let mut salted = seed ^ 0x9E37_79B9_7F4A_7C15;
+        for byte in freq.bytes() {
+            salted = salted.wrapping_mul(0x0000_0100_0000_01B3) ^ byte as u64;
+        }
+        let mut rng = Rng::new(salted);
+        let mut out = Vec::with_capacity(spec.outputs.len());
+        for ospec in &spec.outputs {
+            let n = ospec.elem_count();
+            let data = if ospec.name.ends_with(".w")
+                || ospec.name.ends_with("_w")
+            {
+                // Glorot-uniform on (fan_in, fan_out) = (rows, cols).
+                let (rows, cols) = (ospec.shape[0], ospec.shape[1]);
+                let lim = (6.0 / (rows + cols) as f64).sqrt();
+                (0..n).map(|_| rng.uniform(-lim, lim) as f32).collect()
+            } else {
+                vec![0.0; n] // biases start at zero (init_rnn_params)
+            };
+            out.push((ospec.name.clone(),
+                      HostTensor::new(ospec.shape.clone(), data)?));
+        }
+        Ok(out)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        format!("native-cpu ({} threads)", self.threads)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl NativeBackend {
+    fn run_predict(&self, spec: &ProgramSpec, shape: &Shape,
+                   inputs: &HashMap<&str, &HostTensor>)
+                   -> Result<Vec<(String, HostTensor)>> {
+        let b = spec.batch;
+        let y = get_data(inputs, "data.y")?;
+        let cat = get_data(inputs, "data.cat")?;
+        let parts = RnnParts::from_inputs(inputs, shape.n_layers())?;
+        let rnn = parts.view();
+        let series = SeriesView::from_inputs(inputs, shape.s)?;
+        let (c, h) = (shape.c, shape.h);
+
+        let mut forecast = vec![0.0f32; b * h];
+        let ranges = chunks(b, self.threads);
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(ranges.len());
+            for &(lo, hi) in &ranges {
+                let series = &series;
+                let handle = sc.spawn(move || {
+                    let mut rows = Vec::with_capacity((hi - lo) * h);
+                    for i in lo..hi {
+                        let fwd = model::forward_series(
+                            shape, &y[i * c..(i + 1) * c],
+                            &cat[i * 6..(i + 1) * 6], &rnn,
+                            series.alpha_logit[i], series.gamma_logit[i],
+                            series.log_s(i), false);
+                        rows.extend(model::forecast_from(shape, &fwd));
+                    }
+                    rows
+                });
+                handles.push((lo, hi, handle));
+            }
+            for (lo, hi, handle) in handles {
+                let rows = handle.join().expect("predict worker panicked");
+                forecast[lo * h..hi * h].copy_from_slice(&rows);
+            }
+        });
+        Ok(vec![("forecast".into(),
+                 HostTensor::new(vec![b, h], forecast)?)])
+    }
+
+    fn run_train_step(&self, spec: &ProgramSpec, shape: &Shape,
+                      inputs: &HashMap<&str, &HostTensor>)
+                      -> Result<Vec<(String, HostTensor)>> {
+        let b = spec.batch;
+        let c = shape.c;
+        let y = get_data(inputs, "data.y")?;
+        let cat = get_data(inputs, "data.cat")?;
+        let mask = get_data(inputs, "data.mask")?;
+        let lr = get_data(inputs, "lr")?[0];
+        let step_old = get_data(inputs, "opt.step")?[0];
+        let parts = RnnParts::from_inputs(inputs, shape.n_layers())?;
+        let rnn = parts.view();
+        let series = SeriesView::from_inputs(inputs, shape.s)?;
+        let tau = self.manifest.tau;
+
+        // Global loss denominator (pinball_ref): Σ mask over (P, B) × H.
+        let mask_sum: f32 = mask.iter().sum();
+        let denom = ((shape.valid_positions as f32) * mask_sum
+                     * shape.h as f32).max(1.0);
+
+        // ---- batch-parallel forward + backward ----
+        struct Chunk {
+            loss_num: f64,
+            rnn_grads: RnnGrads,
+            series_grads: Vec<SeriesGrads>,
+        }
+        let ranges = chunks(b, self.threads);
+        let mut chunks_out: Vec<(usize, Chunk)> = Vec::with_capacity(ranges.len());
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(ranges.len());
+            for &(lo, hi) in &ranges {
+                let series = &series;
+                let handle = sc.spawn(move || {
+                    let mut acc = Chunk {
+                        loss_num: 0.0,
+                        rnn_grads: RnnGrads::zeros(shape),
+                        series_grads: Vec::with_capacity(hi - lo),
+                    };
+                    for i in lo..hi {
+                        if mask[i] == 0.0 {
+                            // Padded slot: zero loss and gradient by
+                            // construction (the scatter drops the update
+                            // anyway), so skip its forward entirely.
+                            acc.series_grads.push(SeriesGrads::zeros(shape.s));
+                            continue;
+                        }
+                        let yi = &y[i * c..(i + 1) * c];
+                        let fwd = model::forward_series(
+                            shape, yi, &cat[i * 6..(i + 1) * 6], &rnn,
+                            series.alpha_logit[i], series.gamma_logit[i],
+                            series.log_s(i), true);
+                        let (loss_num, dout, dz) = model::pinball_seeds(
+                            shape, &fwd, tau, mask[i], denom);
+                        acc.loss_num += loss_num;
+                        acc.series_grads.push(model::backward_series(
+                            shape, yi, &rnn, &fwd, &dout, &dz,
+                            &mut acc.rnn_grads));
+                    }
+                    acc
+                });
+                handles.push((lo, handle));
+            }
+            for (lo, handle) in handles {
+                chunks_out.push((lo, handle.join().expect("train worker panicked")));
+            }
+        });
+        chunks_out.sort_by_key(|(lo, _)| *lo);
+
+        let mut rnn_grads = RnnGrads::zeros(shape);
+        let mut loss = 0.0f64;
+        let mut d_alpha = Vec::with_capacity(b);
+        let mut d_gamma = Vec::with_capacity(b);
+        let mut d_log_s = Vec::with_capacity(b * shape.s);
+        for (_, chunk) in &chunks_out {
+            rnn_grads.merge(&chunk.rnn_grads);
+            loss += chunk.loss_num;
+            for sg in &chunk.series_grads {
+                d_alpha.push(sg.alpha_logit);
+                d_gamma.push(sg.gamma_logit);
+                d_log_s.extend_from_slice(&sg.log_s_init);
+            }
+        }
+        let loss = (loss / denom as f64) as f32;
+
+        // ---- gradient table keyed by parameter leaf name ----
+        let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
+        for (i, (gw, gb)) in rnn_grads.cells.iter().enumerate() {
+            grads.insert(format!("rnn.cells.{i}.w"), gw.clone());
+            grads.insert(format!("rnn.cells.{i}.b"), gb.clone());
+        }
+        grads.insert("rnn.dense_w".into(), rnn_grads.dense_w);
+        grads.insert("rnn.dense_b".into(), rnn_grads.dense_b);
+        grads.insert("rnn.out_w".into(), rnn_grads.out_w);
+        grads.insert("rnn.out_b".into(), rnn_grads.out_b);
+        grads.insert("series.alpha_logit".into(), d_alpha);
+        grads.insert("series.gamma_logit".into(), d_gamma);
+        grads.insert("series.log_s_init".into(), d_log_s);
+
+        // ---- Adam (model.py::_adam_update) ----
+        let step_new = step_old + 1.0;
+        let bc1 = 1.0 - model::ADAM_B1.powf(step_new);
+        let bc2 = 1.0 - model::ADAM_B2.powf(step_new);
+        let mut out_map: HashMap<String, HostTensor> = HashMap::new();
+        out_map.insert("loss".into(), HostTensor::scalar(loss));
+        out_map.insert("opt.step".into(), HostTensor::scalar(step_new));
+        for ospec in &spec.outputs {
+            let Some(leaf) = ospec.name.strip_prefix("params.") else {
+                continue;
+            };
+            let g = grads
+                .get(leaf)
+                .ok_or_else(|| anyhow!("no gradient for `{leaf}`"))?;
+            let mut p = get_data(inputs, &ospec.name)?.to_vec();
+            let mut m = get_data(inputs, &format!("opt.m.{leaf}"))?.to_vec();
+            let mut v = get_data(inputs, &format!("opt.v.{leaf}"))?.to_vec();
+            let mult = if leaf.starts_with("series.") {
+                self.manifest.per_series_lr_mult
+            } else {
+                1.0
+            };
+            model::adam_update(&mut p, g, &mut m, &mut v, lr, mult, bc1, bc2);
+            out_map.insert(ospec.name.clone(),
+                           HostTensor::new(ospec.shape.clone(), p)?);
+            out_map.insert(format!("opt.m.{leaf}"),
+                           HostTensor::new(ospec.shape.clone(), m)?);
+            out_map.insert(format!("opt.v.{leaf}"),
+                           HostTensor::new(ospec.shape.clone(), v)?);
+        }
+
+        spec.outputs
+            .iter()
+            .map(|ospec| {
+                out_map
+                    .remove(&ospec.name)
+                    .map(|t| (ospec.name.clone(), t))
+                    .ok_or_else(|| anyhow!("missing output `{}`", ospec.name))
+            })
+            .collect()
+    }
+}
+
+/// The bare ES layer (debug/verification program).
+fn run_es(spec: &ProgramSpec, shape: &Shape,
+          inputs: &HashMap<&str, &HostTensor>)
+          -> Result<Vec<(String, HostTensor)>> {
+    let b = spec.batch;
+    let (c, s) = (shape.c, shape.s);
+    let y = get_data(inputs, "data.y")?;
+    let alpha_logit = get_data(inputs, "data.alpha_logit")?;
+    let gamma_logit = get_data(inputs, "data.gamma_logit")?;
+    let log_s = get_data(inputs, "data.log_s_init")?;
+    let mut levels = Vec::with_capacity(b * c);
+    let mut seas = Vec::with_capacity(b * (c + s));
+    for i in 0..b {
+        let alpha = 1.0 / (1.0 + (-alpha_logit[i]).exp());
+        let (gamma, s_init): (f32, Vec<f32>) = if shape.seasonal {
+            (1.0 / (1.0 + (-gamma_logit[i]).exp()),
+             log_s[i * s..(i + 1) * s].iter().map(|v| v.exp()).collect())
+        } else {
+            (0.0, vec![1.0; s])
+        };
+        let es = crate::hw::es_filter(&y[i * c..(i + 1) * c], alpha, gamma,
+                                      &s_init);
+        levels.extend(es.levels);
+        seas.extend(es.seas);
+    }
+    Ok(vec![
+        ("levels".into(), HostTensor::new(vec![b, c], levels)?),
+        ("seas".into(), HostTensor::new(vec![b, c + s], seas)?),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_covers_native_freqs_and_kinds() {
+        let backend = NativeBackend::with_threads(2);
+        let m = backend.manifest();
+        assert_eq!(m.variant, "native");
+        for freq in ["yearly", "quarterly", "monthly", "daily"] {
+            assert!(m.config(freq).is_ok(), "missing config {freq}");
+            assert_eq!(m.available_batches(freq, "train_step"),
+                       NATIVE_BATCH_SIZES.to_vec());
+            assert_eq!(m.available_batches(freq, "predict"),
+                       NATIVE_BATCH_SIZES.to_vec());
+            assert!(m.program(&format!("{freq}_init")).is_ok());
+            assert!(m.program(&format!("{freq}_b8_es")).is_ok());
+        }
+        // Dual-seasonality and penalty variants are PJRT-only.
+        assert!(m.config("hourly").is_err());
+        assert!(m.config("quarterly_pen").is_err());
+    }
+
+    #[test]
+    fn train_step_spec_leaf_order_is_manifest_flat_order() {
+        let net = NetworkConfig::for_freq(Frequency::Quarterly).unwrap();
+        let spec = train_step_spec("quarterly", &net, 16);
+        let names: Vec<&str> =
+            spec.inputs.iter().map(|t| t.name.as_str()).collect();
+        // jax flat order: data.{cat,mask,y}, params.*, opt.m.*, opt.step,
+        // opt.v.*, lr — with alphabetical leaves inside each subtree.
+        assert_eq!(names[0], "data.cat");
+        assert_eq!(names[1], "data.mask");
+        assert_eq!(names[2], "data.y");
+        assert_eq!(names[3], "params.rnn.cells.0.b");
+        assert_eq!(names[4], "params.rnn.cells.0.w");
+        let params_end = 3 + 8 + 4 + 3; // 4 cells × 2 + 4 head + 3 series
+        assert_eq!(names[params_end - 1], "params.series.log_s_init");
+        assert_eq!(names.last().unwrap(), &"lr");
+        assert!(names.contains(&"opt.step"));
+        assert_eq!(spec.outputs[0].name, "loss");
+        assert_eq!(spec.outputs.len(), 1 + 3 * 15 + 1);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_glorot_bounded() {
+        let backend = NativeBackend::with_threads(1);
+        let a = backend.execute_init("yearly", 42).unwrap();
+        let b = backend.execute_init("yearly", 42).unwrap();
+        let c = backend.execute_init("yearly", 43).unwrap();
+        assert_eq!(a.len(), b.len());
+        for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(ta.data, tb.data);
+        }
+        // different seed ⇒ different weights
+        assert!(a.iter().zip(&c).any(|((_, ta), (_, tc))| ta.data != tc.data));
+        // biases zero, weights inside the glorot bound
+        for (name, t) in &a {
+            if name.ends_with('b') {
+                assert!(t.data.iter().all(|v| *v == 0.0), "{name} not zero");
+            } else {
+                let (rows, cols) = (t.shape[0], t.shape[1]);
+                let lim = (6.0 / (rows + cols) as f64).sqrt() as f32;
+                assert!(t.data.iter().all(|v| v.abs() <= lim),
+                        "{name} exceeds glorot bound");
+                assert!(t.data.iter().any(|v| *v != 0.0), "{name} all zero");
+            }
+        }
+        // distinct frequencies draw distinct streams under one seed
+        let q = backend.execute_init("quarterly", 42).unwrap();
+        assert_ne!(a[1].1.data[..8], q[1].1.data[..8]);
+    }
+
+    #[test]
+    fn chunks_partition_exactly() {
+        assert_eq!(chunks(10, 3), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunks(2, 8), vec![(0, 1), (1, 2)]);
+        assert_eq!(chunks(1, 1), vec![(0, 1)]);
+        let parts = chunks(257, 16);
+        assert_eq!(parts.iter().map(|(lo, hi)| hi - lo).sum::<usize>(), 257);
+        assert_eq!(parts.first().unwrap().0, 0);
+        assert_eq!(parts.last().unwrap().1, 257);
+    }
+}

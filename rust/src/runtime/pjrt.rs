@@ -1,14 +1,15 @@
-//! PJRT execution engine: loads AOT artifacts and runs them.
+//! PJRT execution backend: loads AOT HLO artifacts and runs them
+//! (`--features pjrt`).
 //!
 //! The request-path half of the AOT bridge: `HloModuleProto::from_text_file`
 //! → `client.compile` → `execute`. Executables are compiled lazily on first
-//! use and cached for the life of the engine, so a training run pays one
+//! use and cached for the life of the backend, so a training run pays one
 //! compile per (frequency, batch-size) program.
 //!
 //! All tensors are f32 on the wire except the `init` program's uint32 PRNG
-//! key. Host-side state lives in [`HostTensor`]s; packing/unpacking to
-//! [`xla::Literal`] is centralized here so the rest of the crate never
-//! touches XLA types directly.
+//! key. Packing/unpacking to [`xla::Literal`] is centralized here so the
+//! rest of the crate never touches XLA types directly — everything above
+//! this module talks [`Backend`] + [`HostTensor`].
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -17,84 +18,44 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::backend::{Backend, BackendStats, HostTensor};
 use super::manifest::{Manifest, TensorSpec};
 
-/// A host-resident tensor (f32, row-major) with its shape.
-#[derive(Debug, Clone, PartialEq)]
-pub struct HostTensor {
-    pub shape: Vec<usize>,
-    pub data: Vec<f32>,
-}
-
-impl HostTensor {
-    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
-        let n: usize = shape.iter().product();
-        if n != data.len() {
-            return Err(anyhow!("shape {:?} needs {} elems, got {}", shape, n, data.len()));
-        }
-        Ok(Self { shape, data })
+/// Convert a host tensor to an XLA literal matching `spec` (validates shape).
+fn to_literal(host: &HostTensor, spec: &TensorSpec) -> Result<xla::Literal> {
+    if host.shape != spec.shape {
+        return Err(anyhow!("tensor `{}`: host shape {:?} != manifest shape {:?}",
+                         spec.name, host.shape, spec.shape));
     }
-
-    pub fn scalar(v: f32) -> Self {
-        Self { shape: vec![], data: vec![v] }
-    }
-
-    pub fn zeros(shape: Vec<usize>) -> Self {
-        let n = shape.iter().product();
-        Self { shape, data: vec![0.0; n] }
-    }
-
-    pub fn elem_count(&self) -> usize {
-        self.data.len()
-    }
-
-    /// Convert to an XLA literal matching `spec` (validates shape).
-    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
-        if self.shape != spec.shape {
-            return Err(anyhow!("tensor `{}`: host shape {:?} != manifest shape {:?}",
-                             spec.name, self.shape, spec.shape));
-        }
-        let lit = xla::Literal::vec1(&self.data);
-        if spec.shape.is_empty() {
-            // rank-0: reshape to scalar
-            Ok(lit.reshape(&[])?)
-        } else {
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            Ok(lit.reshape(&dims)?)
-        }
-    }
-
-    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
-        let data = lit.to_vec::<f32>()?;
-        if data.len() != spec.elem_count() {
-            return Err(anyhow!("tensor `{}`: literal has {} elems, manifest says {}",
-                             spec.name, data.len(), spec.elem_count()));
-        }
-        Ok(Self { shape: spec.shape.clone(), data })
+    let lit = xla::Literal::vec1(&host.data);
+    if spec.shape.is_empty() {
+        // rank-0: reshape to scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
     }
 }
 
-/// Timing counters the telemetry layer scrapes.
-#[derive(Debug, Default, Clone)]
-pub struct EngineStats {
-    pub compiles: u64,
-    pub compile_secs: f64,
-    pub executions: u64,
-    pub execute_secs: f64,
-    pub pack_secs: f64,
-    pub unpack_secs: f64,
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != spec.elem_count() {
+        return Err(anyhow!("tensor `{}`: literal has {} elems, manifest says {}",
+                         spec.name, data.len(), spec.elem_count()));
+    }
+    Ok(HostTensor { shape: spec.shape.clone(), data })
 }
 
-/// Lazily-compiling PJRT engine over an artifact directory.
-pub struct Engine {
+/// Lazily-compiling PJRT backend over an artifact directory.
+pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    stats: Mutex<EngineStats>,
+    stats: Mutex<BackendStats>,
 }
 
-impl Engine {
+impl PjrtBackend {
     /// Open the artifact directory (must contain `manifest.json`).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
@@ -106,20 +67,8 @@ impl Engine {
             dir,
             manifest,
             cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(EngineStats::default()),
+            stats: Mutex::new(BackendStats::default()),
         })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn stats(&self) -> EngineStats {
-        self.stats.lock().unwrap().clone()
     }
 
     /// Compile (or fetch from cache) a program by manifest name.
@@ -151,19 +100,14 @@ impl Engine {
             .insert(name.to_string(), exe.clone());
         Ok(exe)
     }
+}
 
-    /// Execute a program with f32 host tensors supplied by name.
-    ///
-    /// `lookup` is called once per manifest input, in order; outputs come
-    /// back as `(name, HostTensor)` pairs in manifest output order.
-    pub fn execute_named<'a, F>(
+impl Backend for PjrtBackend {
+    fn execute_named<'a>(
         &self,
         name: &str,
-        mut lookup: F,
-    ) -> Result<Vec<(String, HostTensor)>>
-    where
-        F: FnMut(&TensorSpec) -> Result<&'a HostTensor>,
-    {
+        lookup: &mut dyn FnMut(&TensorSpec) -> Result<&'a HostTensor>,
+    ) -> Result<Vec<(String, HostTensor)>> {
         let spec = self.manifest.program(name)?.clone();
         let exe = self.executable(name)?;
 
@@ -172,12 +116,12 @@ impl Engine {
         for input in &spec.inputs {
             if input.dtype != "float32" {
                 return Err(anyhow!("input `{}` has dtype {}, execute_named only \
-                                  handles float32 (use execute_literals)",
+                                  handles float32",
                                  input.name, input.dtype));
             }
             let host = lookup(input)
                 .with_context(|| format!("packing input `{}`", input.name))?;
-            lits.push(host.to_literal(input)?);
+            lits.push(to_literal(host, input)?);
         }
         let pack = t0.elapsed().as_secs_f64();
 
@@ -198,7 +142,7 @@ impl Engine {
         }
         let mut out = Vec::with_capacity(parts.len());
         for (lit, ospec) in parts.iter().zip(&spec.outputs) {
-            out.push((ospec.name.clone(), HostTensor::from_literal(lit, ospec)?));
+            out.push((ospec.name.clone(), from_literal(lit, ospec)?));
         }
         let unpack = t2.elapsed().as_secs_f64();
 
@@ -210,8 +154,7 @@ impl Engine {
         Ok(out)
     }
 
-    /// Execute the per-frequency `init` program: PRNG seed → RNN weights.
-    pub fn execute_init(&self, freq: &str, seed: u64) -> Result<Vec<(String, HostTensor)>> {
+    fn execute_init(&self, freq: &str, seed: u64) -> Result<Vec<(String, HostTensor)>> {
         let name = Manifest::program_name(freq, 0, "init");
         let spec = self.manifest.program(&name)?.clone();
         let exe = self.executable(&name)?;
@@ -228,21 +171,20 @@ impl Engine {
         }
         let mut out = Vec::with_capacity(parts.len());
         for (lit, ospec) in parts.iter().zip(&spec.outputs) {
-            out.push((ospec.name.clone(), HostTensor::from_literal(lit, ospec)?));
+            out.push((ospec.name.clone(), from_literal(lit, ospec)?));
         }
         Ok(out)
     }
-}
 
-#[cfg(test)]
-mod tests {
-    use super::*;
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
 
-    #[test]
-    fn host_tensor_shape_validation() {
-        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
-        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
-        assert_eq!(HostTensor::scalar(1.5).elem_count(), 1);
-        assert_eq!(HostTensor::zeros(vec![4, 2]).data.len(), 8);
+    fn platform(&self) -> String {
+        format!("pjrt ({})", self.client.platform_name())
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.lock().unwrap().clone()
     }
 }

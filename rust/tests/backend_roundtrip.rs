@@ -1,18 +1,10 @@
-//! Integration test for the AOT bridge: requires `make artifacts` (or at
-//! least the yearly b16 programs) to have been run. Skips gracefully when
-//! artifacts are absent so `cargo test` works on a fresh checkout.
+//! Integration test for the backend contract: init → repeated train steps
+//! → predict, driven purely through the manifest (no Trainer, no
+//! artifacts). Runs on the native backend out of the box; the same flow
+//! works unchanged against `PjrtBackend` because both honor the same
+//! program/leaf naming.
 
-use fast_esrnn::runtime::{Engine, HostTensor, Manifest};
-
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-        None
-    }
-}
+use fast_esrnn::runtime::{Backend, HostTensor, Manifest, NativeBackend};
 
 /// Synthetic positive series with mild seasonality for smoke runs.
 fn toy_batch(b: usize, c: usize, s: usize) -> Vec<f32> {
@@ -31,19 +23,15 @@ fn toy_batch(b: usize, c: usize, s: usize) -> Vec<f32> {
     y
 }
 
-#[test]
-fn init_then_train_steps_reduce_loss() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(&dir).expect("engine");
-    let m = engine.manifest().clone();
-    let freq = "yearly";
+fn roundtrip(freq: &str, b: usize) {
+    let backend = NativeBackend::new();
+    let m = backend.manifest().clone();
     let batches = m.available_batches(freq, "train_step");
-    assert!(!batches.is_empty(), "no yearly train_step artifacts");
-    let b = batches[0];
+    assert!(batches.contains(&b), "no {freq} train_step program for b={b}");
     let cfg = m.config(freq).unwrap().clone();
 
     // 1. init: PRNG seed -> RNN weights, keyed by leaf name.
-    let rnn = engine.execute_init(freq, 42).expect("init");
+    let rnn = backend.execute_init(freq, 42).expect("init");
     assert!(rnn.iter().any(|(n, _)| n.starts_with("rnn.cells.0")));
 
     // 2. Assemble the full state map the manifest wants.
@@ -83,8 +71,8 @@ fn init_then_train_steps_reduce_loss() {
     // 4. Run a few steps; state outputs feed the next step's inputs.
     let mut losses = Vec::new();
     for _ in 0..5 {
-        let outs = engine
-            .execute_named(&name, |spec| {
+        let outs = backend
+            .execute_named(&name, &mut |spec| {
                 Ok(match spec.name.as_str() {
                     "data.y" => &y,
                     "data.cat" => &cat,
@@ -108,12 +96,14 @@ fn init_then_train_steps_reduce_loss() {
         losses.push(loss);
     }
     assert!(losses[4] < losses[0],
-            "loss should fall over 5 steps: {losses:?}");
+            "{freq} loss should fall over 5 steps: {losses:?}");
+    // The step counter advanced with the optimizer.
+    assert_eq!(state["opt.step"].data[0], 5.0);
 
     // 5. Forecasts come out positive and finite.
     let pname = Manifest::program_name(freq, b, "predict");
-    let outs = engine
-        .execute_named(&pname, |spec| {
+    let outs = backend
+        .execute_named(&pname, &mut |spec| {
             Ok(match spec.name.as_str() {
                 "data.y" => &y,
                 "data.cat" => &cat,
@@ -128,4 +118,30 @@ fn init_then_train_steps_reduce_loss() {
     assert_eq!(fc.shape, vec![b, cfg.horizon]);
     assert!(fc.data.iter().all(|v| v.is_finite() && *v > 0.0),
             "forecasts must be positive/finite");
+}
+
+#[test]
+fn yearly_init_then_train_steps_reduce_loss() {
+    roundtrip("yearly", 16);
+}
+
+#[test]
+fn quarterly_roundtrip_small_batch() {
+    roundtrip("quarterly", 8);
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let backend = NativeBackend::new();
+    let bad = HostTensor::new(vec![2, 3], vec![0.0; 6]).unwrap();
+    let err = backend.execute_named("yearly_b1_predict", &mut |_| Ok(&bad));
+    assert!(err.is_err(), "wrong-shaped input must be rejected");
+}
+
+#[test]
+fn unknown_program_is_rejected() {
+    let backend = NativeBackend::new();
+    let t = HostTensor::scalar(0.0);
+    assert!(backend.execute_named("hourly_b4_train_step", &mut |_| Ok(&t)).is_err());
+    assert!(backend.execute_named("nope", &mut |_| Ok(&t)).is_err());
 }

@@ -1,0 +1,137 @@
+//! Stub of the `xla` (PJRT C API) crate surface used by
+//! `fast_esrnn::runtime::pjrt`.
+//!
+//! The offline build environment cannot link libxla, so this crate makes
+//! `--features pjrt` *compile* everywhere while failing fast at runtime:
+//! [`PjRtClient::cpu`] — the first call every PJRT code path makes —
+//! returns an error explaining how to swap in the real bindings (point the
+//! `xla` path dependency in the root `Cargo.toml` at the real crate, or
+//! use a `[patch]` section). No other entry point can be reached without
+//! a client, so the remaining methods are honest `unreachable!`s.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (implements `std::error::Error`
+/// so `?` converts it into `anyhow::Error`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable: the `xla` dependency is the vendored \
+         stub (rust/vendor/xla). To run the PJRT backend, point the `xla` \
+         path dependency in Cargo.toml at the real PJRT bindings and \
+         rebuild with --features pjrt"
+            .to_string(),
+    )
+}
+
+/// Host literal (stub: carries no data; unreachable without a client).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unreachable!("stub PjRtBuffer cannot exist: PjRtClient::cpu() errors")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("stub PjRtLoadedExecutable cannot exist")
+    }
+}
+
+/// PJRT client (stub: construction always fails with a clear message).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unreachable!("stub PjRtClient cannot exist")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("vendored stub"));
+    }
+
+    #[test]
+    fn literal_ops_error_not_panic() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
