@@ -28,8 +28,8 @@ fn main() -> anyhow::Result<()> {
         (Frequency::Hourly, env_usize("FAST_ESRNN_EPOCHS_HOURLY", 4), 4),
     ] {
         if backend.manifest().config(freq.name()).is_err() {
-            println!("{:<10} skipped: not served by this backend (the §8.2 \
-                      dual-seasonality model is PJRT-only)", freq.name());
+            println!("{:<10} skipped: not served by this backend's manifest",
+                     freq.name());
             continue;
         }
         let net = NetworkConfig::for_freq(freq)?;
@@ -60,7 +60,8 @@ fn main() -> anyhow::Result<()> {
                  freq.name(), n, epochs, test.smape, comb / m, snaive / m);
     }
     println!("\nhourly uses the §8.2 dual-seasonality (24h × 168h) ES kernel \
-              end-to-end: Pallas dual recurrence → combined deseasonalization \
-              → per-series [alpha, gamma1, gamma2, 192 seasonality inits].");
+              end-to-end: dual recurrence (native Rust or Pallas) → combined \
+              deseasonalization → per-series [alpha, gamma1, gamma2, 192 \
+              seasonality inits].");
     Ok(())
 }

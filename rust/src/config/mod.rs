@@ -7,9 +7,34 @@
 //! that run before/without an engine (data pipeline, baselines) and asserts
 //! the mirror matches the manifest at engine start-up.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::runtime::FreqManifest;
+
+/// Number of RNN window positions for a (length, input_window) pair:
+/// `P = C - in + 1`, as a checked computation — errors (instead of
+/// underflowing) when the series is shorter than the window. Shared by
+/// [`NetworkConfig`] and the native compute core's `Shape` so the guard
+/// logic cannot drift between them.
+pub fn window_positions(length: usize, input_window: usize) -> Result<usize> {
+    match (length + 1).checked_sub(input_window) {
+        Some(p) if p > 0 => Ok(p),
+        _ => bail!("length {length} is shorter than the input window \
+                    {input_window} — no RNN positions exist"),
+    }
+}
+
+/// Loss-bearing window positions: `P_valid = C - in - H + 1`, checked —
+/// errors when `length < input_window + horizon`.
+pub fn valid_window_positions(length: usize, input_window: usize,
+                              horizon: usize) -> Result<usize> {
+    match (length + 1).checked_sub(input_window + horizon) {
+        Some(v) if v > 0 => Ok(v),
+        _ => bail!("length {length} is shorter than input window \
+                    {input_window} + horizon {horizon} — no loss-bearing \
+                    positions exist"),
+    }
+}
 
 /// Series sampling frequency. Yearly/Quarterly/Monthly have full model
 /// support (the paper's scope); Weekly/Daily/Hourly exist for the data
@@ -190,13 +215,21 @@ impl NetworkConfig {
     }
 
     /// Number of RNN window positions (the last is forecast-only).
-    pub fn positions(&self) -> usize {
-        self.length - self.input_window + 1
+    ///
+    /// Errors (instead of underflowing) when the equalized length is
+    /// shorter than the input window.
+    pub fn positions(&self) -> Result<usize> {
+        window_positions(self.length, self.input_window)
+            .with_context(|| format!("{:?} config", self.freq))
     }
 
     /// Positions with a full in-sample target (loss-bearing).
-    pub fn valid_positions(&self) -> usize {
-        self.length - self.input_window - self.horizon + 1
+    ///
+    /// Errors (instead of underflowing) when
+    /// `length < input_window + horizon`.
+    pub fn valid_positions(&self) -> Result<usize> {
+        valid_window_positions(self.length, self.input_window, self.horizon)
+            .with_context(|| format!("{:?} config", self.freq))
     }
 
     /// Minimum raw series length usable for training: equalized length
@@ -356,10 +389,25 @@ mod tests {
     fn positions_match_python() {
         // Mirrors configs.py properties: P = C - in + 1.
         let m = NetworkConfig::for_freq(Frequency::Monthly).unwrap();
-        assert_eq!(m.positions(), 61);
-        assert_eq!(m.valid_positions(), 43);
+        assert_eq!(m.positions().unwrap(), 61);
+        assert_eq!(m.valid_positions().unwrap(), 43);
         let y = NetworkConfig::for_freq(Frequency::Yearly).unwrap();
-        assert_eq!(y.positions(), 21);
-        assert_eq!(y.valid_positions(), 15);
+        assert_eq!(y.positions().unwrap(), 21);
+        assert_eq!(y.valid_positions().unwrap(), 15);
+    }
+
+    #[test]
+    fn degenerate_lengths_error_instead_of_underflowing() {
+        // length < input_window: no positions at all.
+        let mut cfg = NetworkConfig::for_freq(Frequency::Quarterly).unwrap();
+        cfg.length = 4; // input_window is 8
+        assert!(cfg.positions().is_err());
+        assert!(cfg.valid_positions().is_err());
+        // length ≥ input_window but < input_window + horizon.
+        cfg.length = 10; // horizon is 8
+        assert!(cfg.positions().is_ok());
+        let err = cfg.valid_positions().unwrap_err();
+        assert!(format!("{err:#}").contains("horizon"),
+                "error should be descriptive: {err:#}");
     }
 }

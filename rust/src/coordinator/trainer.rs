@@ -144,13 +144,8 @@ impl<'e> Trainer<'e> {
         let primers: Vec<hw::Primer> = set
             .series
             .iter()
-            .map(|s| {
-                let mut p = hw::primer_for(&s.train, net.seasonality,
-                                           net.seasonality2);
-                p.alpha_logit += rng.normal_scaled(0.0, 0.05) as f32;
-                p.gamma_logit += rng.normal_scaled(0.0, 0.05) as f32;
-                p
-            })
+            .map(|s| hw::primer_jittered(&s.train, net.seasonality,
+                                         net.seasonality2, &mut rng))
             .collect();
         let store = ParamStore::from_primers_dual(
             &primers, net.seasonality, net.seasonality2)?;
@@ -249,6 +244,11 @@ impl<'e> Trainer<'e> {
     /// One full epoch; returns mean batch loss.
     pub fn run_epoch(&mut self) -> Result<f32> {
         let batches = self.batcher.epoch();
+        if batches.is_empty() {
+            // Guard the mean below: 0/0 would silently report NaN loss.
+            bail!("no batches scheduled for {} — the batcher produced an \
+                   empty epoch (0 series?)", self.freq.name());
+        }
         let mut acc = 0.0f64;
         for batch in &batches {
             acc += self.train_step_batch(batch)? as f64;
@@ -301,6 +301,13 @@ impl<'e> Trainer<'e> {
             per_category.add(ALL_CATEGORIES[sp.category_index].name(), s, m);
         }
         let n = forecasts.len();
+        if n == 0 {
+            // Guard the means below: 0/0 would propagate NaN sMAPE/MASE
+            // into the early-stopping comparison and reports.
+            bail!("evaluate({}): no forecasts produced for {} — empty \
+                   series set", if refit { "test" } else { "val" },
+                  self.freq.name());
+        }
         Ok(EvalReport {
             split: if refit { "test" } else { "val" },
             count: n,

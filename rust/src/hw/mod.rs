@@ -128,10 +128,19 @@ pub fn primer_for(y: &[f32], s1: usize, s2: usize) -> Primer {
 }
 
 /// Optionally jitter a primer (symmetry breaking across identical series).
-pub fn primer_jittered(y: &[f32], period: usize, rng: &mut Rng) -> Primer {
-    let mut p = primer(y, period);
+///
+/// Routes through [`primer_for`] so §8.2 dual configs (`s2 > 0`) get the
+/// full packed `[S1 | S2]` seasonality block (a plain [`primer`] call
+/// would emit a length-S1 block that the store's width check rejects),
+/// and jitters `gamma2_logit` alongside the other smoothing coefficients.
+pub fn primer_jittered(y: &[f32], s1: usize, s2: usize, rng: &mut Rng)
+                       -> Primer {
+    let mut p = primer_for(y, s1, s2);
     p.alpha_logit += rng.normal_scaled(0.0, 0.05) as f32;
     p.gamma_logit += rng.normal_scaled(0.0, 0.05) as f32;
+    if s2 > 0 {
+        p.gamma2_logit += rng.normal_scaled(0.0, 0.05) as f32;
+    }
     p
 }
 
@@ -278,6 +287,90 @@ mod tests {
         assert_eq!(p.log_s_init.len(), 2);
         assert!((p.log_s_init[0].exp() - 0.8).abs() < 0.05);
         assert!((sigmoid(p.alpha_logit) - INIT_ALPHA).abs() < 1e-5);
+    }
+
+    #[test]
+    fn es_dual_filter_constant_series_is_flat() {
+        let y = vec![25.0f32; 60];
+        let (levels, s1, s2) =
+            es_dual_filter(&y, 0.3, 0.1, 0.05, &[1.0; 4], &[1.0; 6]);
+        for l in &levels {
+            assert!((l - 25.0).abs() < 1e-3, "level {l}");
+        }
+        for v in s1.iter().chain(s2.iter()) {
+            assert!((v - 1.0).abs() < 1e-3, "seasonality {v}");
+        }
+    }
+
+    #[test]
+    fn es_dual_filter_recovers_planted_dual_cycles() {
+        // Two planted multiplicative cycles (24×168-style structure, kept
+        // tiny): filtering with the true inits keeps both tracks pinned.
+        let s1_true = [0.8f32, 1.0, 1.2, 1.0];
+        let s2_true = [0.9f32, 1.05, 1.1, 1.05, 0.95, 0.95];
+        let y: Vec<f32> = (0..120)
+            .map(|t| 200.0 * s1_true[t % 4] * s2_true[t % 6])
+            .collect();
+        let (levels, e1, e2) =
+            es_dual_filter(&y, 0.2, 0.2, 0.2, &s1_true, &s2_true);
+        let c = y.len();
+        for l in &levels {
+            assert!((l - 200.0).abs() < 2.0, "level {l} drifted from 200");
+        }
+        // Final seasonal states stay near the planted patterns (up to the
+        // usual multiplicative scale ambiguity — compare adjacent ratios;
+        // e_i[c + k] is the state for absolute time c + k, phase
+        // (c + k) % S_i).
+        for k in 0..3 {
+            let got = e1[c + k] / e1[c + k + 1];
+            let want = s1_true[(c + k) % 4] / s1_true[(c + k + 1) % 4];
+            assert!((got / want - 1.0).abs() < 0.05,
+                    "s1 ratio {k}: {got} vs {want}");
+        }
+        for k in 0..5 {
+            let got = e2[c + k] / e2[c + k + 1];
+            let want = s2_true[(c + k) % 6] / s2_true[(c + k + 1) % 6];
+            assert!((got / want - 1.0).abs() < 0.05,
+                    "s2 ratio {k}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn es_dual_filter_degenerates_to_single() {
+        // gamma2 = 0 and s2_init ≡ 1 pins the second track at 1, so the
+        // dual recurrence must equal the single filter exactly.
+        let s_init = [0.7f32, 1.3];
+        let y: Vec<f32> = (0..50)
+            .map(|t| (80.0 + t as f32) * s_init[t % 2])
+            .collect();
+        let single = es_filter(&y, 0.3, 0.2, &s_init);
+        let (lv, e1, e2) = es_dual_filter(&y, 0.3, 0.2, 0.0, &s_init, &[1.0]);
+        for t in 0..y.len() {
+            assert!((lv[t] - single.levels[t]).abs()
+                    <= 1e-5 * single.levels[t].abs(),
+                    "level[{t}]: {} vs {}", lv[t], single.levels[t]);
+        }
+        for t in 0..e1.len() {
+            assert!((e1[t] - single.seas[t]).abs() <= 1e-5,
+                    "seas[{t}]: {} vs {}", e1[t], single.seas[t]);
+        }
+        assert!(e2.iter().all(|v| (v - 1.0).abs() < 1e-7));
+    }
+
+    #[test]
+    fn primer_jittered_dual_has_packed_width_and_jittered_gamma2() {
+        let y: Vec<f32> = (0..80).map(|t| 50.0 + (t % 4) as f32).collect();
+        let mut rng = Rng::new(7);
+        let p = primer_jittered(&y, 4, 6, &mut rng);
+        assert_eq!(p.log_s_init.len(), 10, "dual primer must pack [S1|S2]");
+        assert!((p.gamma2_logit - logit(INIT_GAMMA)).abs() > 1e-6,
+                "gamma2_logit must be jittered for dual configs");
+        // Single configs keep the S1-only block and leave gamma2 at the
+        // default (nothing reads it).
+        let mut rng = Rng::new(7);
+        let q = primer_jittered(&y, 4, 0, &mut rng);
+        assert_eq!(q.log_s_init.len(), 4);
+        assert_eq!(q.gamma2_logit, logit(INIT_GAMMA));
     }
 
     #[test]

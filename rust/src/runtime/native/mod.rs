@@ -21,8 +21,11 @@
 //! the batch across `std::thread` scoped workers (per-series gradients are
 //! independent; shared-weight gradients are reduced across chunks).
 //!
-//! Scope: single-seasonality frequencies (yearly/quarterly/monthly/daily).
-//! The §8.2 dual-seasonality (hourly) and §8.4 penalty variants remain
+//! Scope: every Table-1 frequency — yearly/quarterly/monthly/daily
+//! (single seasonality) and the §8.2 hourly dual-seasonality (24h×168h)
+//! model, whose coupled ES recurrence runs natively through
+//! [`crate::hw::es_dual_filter`] with a `gamma2_logit` leaf and a packed
+//! `[S1 | S2]` seasonality block. Only the §8.4 penalty variants remain
 //! PJRT-artifact-only; their configs are simply absent from the native
 //! manifest, which every caller already handles by name lookup.
 
@@ -50,12 +53,14 @@ pub const NATIVE_BATCH_SIZES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128, 256];
 /// Batch size of the `es` debug program (mirror of `aot.py`).
 const ES_DEBUG_BATCH: usize = 8;
 
-/// Frequencies with native support (single-seasonality, no penalties).
-const NATIVE_FREQS: [Frequency; 4] = [
+/// Frequencies with native support (all Table-1 shapes, incl. §8.2 hourly
+/// dual seasonality; no §8.4 penalty variants).
+const NATIVE_FREQS: [Frequency; 5] = [
     Frequency::Yearly,
     Frequency::Quarterly,
     Frequency::Monthly,
     Frequency::Daily,
+    Frequency::Hourly,
 ];
 
 /// Pinball quantile (paper §3.5) and per-series LR multiplier (§3.3) —
@@ -84,6 +89,11 @@ fn param_leaves(net: &NetworkConfig, b: usize) -> Vec<(String, Vec<usize>)> {
     leaves.push(("rnn.out_b".into(), vec![h]));
     leaves.push(("rnn.out_w".into(), vec![hid, h]));
     leaves.push(("series.alpha_logit".into(), vec![b]));
+    if net.dual() {
+        // jax flat (alphabetical) order: `gamma2_logit` < `gamma_logit`
+        // because '2' sorts before '_'.
+        leaves.push(("series.gamma2_logit".into(), vec![b]));
+    }
     leaves.push(("series.gamma_logit".into(), vec![b]));
     leaves.push(("series.log_s_init".into(), vec![b, net.total_seasonality()]));
     leaves
@@ -141,22 +151,29 @@ fn predict_spec(freq: &str, net: &NetworkConfig, b: usize) -> ProgramSpec {
 }
 
 fn es_spec(freq: &str, net: &NetworkConfig, b: usize) -> ProgramSpec {
-    let (c, s) = (net.length, net.seasonality);
+    let (c, s1, s2) = (net.length, net.seasonality, net.seasonality2);
+    let mut inputs = vec![f32_spec("data.alpha_logit", vec![b])];
+    if net.dual() {
+        inputs.push(f32_spec("data.gamma2_logit", vec![b]));
+    }
+    inputs.push(f32_spec("data.gamma_logit", vec![b]));
+    inputs.push(f32_spec("data.log_s_init", vec![b, s1 + s2]));
+    inputs.push(f32_spec("data.y", vec![b, c]));
+    let mut outputs = vec![
+        f32_spec("levels", vec![b, c]),
+        f32_spec("seas", vec![b, c + s1]),
+    ];
+    if net.dual() {
+        // §8.2: the debug program emits both seasonal tracks.
+        outputs.push(f32_spec("seas2", vec![b, c + s2]));
+    }
     ProgramSpec {
         file: format!("<native:{freq}_b{b}_es>"),
         freq: freq.to_string(),
         batch: b,
         kind: "es".into(),
-        inputs: vec![
-            f32_spec("data.alpha_logit", vec![b]),
-            f32_spec("data.gamma_logit", vec![b]),
-            f32_spec("data.log_s_init", vec![b, s]),
-            f32_spec("data.y", vec![b, c]),
-        ],
-        outputs: vec![
-            f32_spec("levels", vec![b, c]),
-            f32_spec("seas", vec![b, c + s]),
-        ],
+        inputs,
+        outputs,
     }
 }
 
@@ -195,8 +212,10 @@ fn native_manifest() -> Manifest {
             length: net.length,
             hidden: net.hidden,
             dilations: net.dilations.clone(),
-            positions: net.positions(),
-            valid_positions: net.valid_positions(),
+            positions: net.positions()
+                .expect("Table-1 configs always have positions"),
+            valid_positions: net.valid_positions()
+                .expect("Table-1 configs always have valid positions"),
         });
         programs.insert(Manifest::program_name(name, 0, "init"),
                         init_spec(name, &net));
@@ -251,8 +270,8 @@ impl NativeBackend {
 
     fn shape_for(&self, freq: &str) -> Result<Shape> {
         let cfg = self.manifest.config(freq)?;
-        Ok(Shape::new(cfg.seasonality, cfg.horizon, cfg.input_window,
-                      cfg.length, cfg.hidden, &cfg.dilations, 6))
+        Shape::new(cfg.seasonality, cfg.seasonality2, cfg.horizon,
+                   cfg.input_window, cfg.length, cfg.hidden, &cfg.dilations, 6)
     }
 }
 
@@ -277,26 +296,45 @@ fn get_data<'x>(inputs: &HashMap<&str, &'x HostTensor>, name: &str)
 }
 
 /// Resolve the per-series parameter slices for one batch slot.
+/// `gamma2_logit` is present only for §8.2 dual configs (empty otherwise).
 struct SeriesView<'a> {
     alpha_logit: &'a [f32],
     gamma_logit: &'a [f32],
+    gamma2_logit: &'a [f32],
     log_s_init: &'a [f32],
     s_width: usize,
 }
 
 impl<'a> SeriesView<'a> {
-    fn from_inputs(inputs: &HashMap<&str, &'a HostTensor>, s_width: usize)
+    fn from_inputs(inputs: &HashMap<&str, &'a HostTensor>, shape: &Shape)
                    -> Result<Self> {
+        let gamma2_logit: &'a [f32] = if shape.dual() {
+            get_data(inputs, "params.series.gamma2_logit")?
+        } else {
+            &[]
+        };
         Ok(Self {
             alpha_logit: get_data(inputs, "params.series.alpha_logit")?,
             gamma_logit: get_data(inputs, "params.series.gamma_logit")?,
+            gamma2_logit,
             log_s_init: get_data(inputs, "params.series.log_s_init")?,
-            s_width,
+            s_width: shape.s_total(),
         })
     }
 
-    fn log_s(&self, i: usize) -> &'a [f32] {
-        &self.log_s_init[i * self.s_width..(i + 1) * self.s_width]
+    /// Bundle slot `i`'s parameters for the compute core.
+    fn hw(&self, i: usize) -> model::HwView<'a> {
+        model::HwView {
+            alpha_logit: self.alpha_logit[i],
+            gamma_logit: self.gamma_logit[i],
+            gamma2_logit: if self.gamma2_logit.is_empty() {
+                0.0
+            } else {
+                self.gamma2_logit[i]
+            },
+            log_s_init: &self.log_s_init[i * self.s_width
+                                         ..(i + 1) * self.s_width],
+        }
     }
 }
 
@@ -443,7 +481,7 @@ impl NativeBackend {
         let cat = get_data(inputs, "data.cat")?;
         let parts = RnnParts::from_inputs(inputs, shape.n_layers())?;
         let rnn = parts.view();
-        let series = SeriesView::from_inputs(inputs, shape.s)?;
+        let series = SeriesView::from_inputs(inputs, shape)?;
         let (c, h) = (shape.c, shape.h);
 
         let mut forecast = vec![0.0f32; b * h];
@@ -458,8 +496,7 @@ impl NativeBackend {
                         let fwd = model::forward_series(
                             shape, &y[i * c..(i + 1) * c],
                             &cat[i * 6..(i + 1) * 6], &rnn,
-                            series.alpha_logit[i], series.gamma_logit[i],
-                            series.log_s(i), false);
+                            series.hw(i), false);
                         rows.extend(model::forecast_from(shape, &fwd));
                     }
                     rows
@@ -487,7 +524,7 @@ impl NativeBackend {
         let step_old = get_data(inputs, "opt.step")?[0];
         let parts = RnnParts::from_inputs(inputs, shape.n_layers())?;
         let rnn = parts.view();
-        let series = SeriesView::from_inputs(inputs, shape.s)?;
+        let series = SeriesView::from_inputs(inputs, shape)?;
         let tau = self.manifest.tau;
 
         // Global loss denominator (pinball_ref): Σ mask over (P, B) × H.
@@ -518,14 +555,14 @@ impl NativeBackend {
                             // Padded slot: zero loss and gradient by
                             // construction (the scatter drops the update
                             // anyway), so skip its forward entirely.
-                            acc.series_grads.push(SeriesGrads::zeros(shape.s));
+                            acc.series_grads
+                                .push(SeriesGrads::zeros(shape.s_total()));
                             continue;
                         }
                         let yi = &y[i * c..(i + 1) * c];
                         let fwd = model::forward_series(
                             shape, yi, &cat[i * 6..(i + 1) * 6], &rnn,
-                            series.alpha_logit[i], series.gamma_logit[i],
-                            series.log_s(i), true);
+                            series.hw(i), true);
                         let (loss_num, dout, dz) = model::pinball_seeds(
                             shape, &fwd, tau, mask[i], denom);
                         acc.loss_num += loss_num;
@@ -547,13 +584,15 @@ impl NativeBackend {
         let mut loss = 0.0f64;
         let mut d_alpha = Vec::with_capacity(b);
         let mut d_gamma = Vec::with_capacity(b);
-        let mut d_log_s = Vec::with_capacity(b * shape.s);
+        let mut d_gamma2 = Vec::with_capacity(b);
+        let mut d_log_s = Vec::with_capacity(b * shape.s_total());
         for (_, chunk) in &chunks_out {
             rnn_grads.merge(&chunk.rnn_grads);
             loss += chunk.loss_num;
             for sg in &chunk.series_grads {
                 d_alpha.push(sg.alpha_logit);
                 d_gamma.push(sg.gamma_logit);
+                d_gamma2.push(sg.gamma2_logit);
                 d_log_s.extend_from_slice(&sg.log_s_init);
             }
         }
@@ -571,6 +610,7 @@ impl NativeBackend {
         grads.insert("rnn.out_b".into(), rnn_grads.out_b);
         grads.insert("series.alpha_logit".into(), d_alpha);
         grads.insert("series.gamma_logit".into(), d_gamma);
+        grads.insert("series.gamma2_logit".into(), d_gamma2);
         grads.insert("series.log_s_init".into(), d_log_s);
 
         // ---- Adam (model.py::_adam_update) ----
@@ -616,35 +656,62 @@ impl NativeBackend {
     }
 }
 
-/// The bare ES layer (debug/verification program).
+/// The bare ES layer (debug/verification program). Dual configs read
+/// `data.gamma2_logit` and a packed `[S1 | S2]` seasonality block and emit
+/// both seasonal tracks (`seas`, `seas2`).
 fn run_es(spec: &ProgramSpec, shape: &Shape,
           inputs: &HashMap<&str, &HostTensor>)
           -> Result<Vec<(String, HostTensor)>> {
     let b = spec.batch;
-    let (c, s) = (shape.c, shape.s);
+    let (c, s, s2) = (shape.c, shape.s, shape.s2);
+    let width = shape.s_total();
     let y = get_data(inputs, "data.y")?;
     let alpha_logit = get_data(inputs, "data.alpha_logit")?;
     let gamma_logit = get_data(inputs, "data.gamma_logit")?;
+    let gamma2_logit: &[f32] = if shape.dual() {
+        get_data(inputs, "data.gamma2_logit")?
+    } else {
+        &[]
+    };
     let log_s = get_data(inputs, "data.log_s_init")?;
     let mut levels = Vec::with_capacity(b * c);
     let mut seas = Vec::with_capacity(b * (c + s));
+    let mut seas2 = Vec::with_capacity(if shape.dual() { b * (c + s2) } else { 0 });
     for i in 0..b {
-        let alpha = 1.0 / (1.0 + (-alpha_logit[i]).exp());
-        let (gamma, s_init): (f32, Vec<f32>) = if shape.seasonal {
-            (1.0 / (1.0 + (-gamma_logit[i]).exp()),
-             log_s[i * s..(i + 1) * s].iter().map(|v| v.exp()).collect())
+        let yi = &y[i * c..(i + 1) * c];
+        let alpha = crate::hw::sigmoid(alpha_logit[i]);
+        let row = &log_s[i * width..(i + 1) * width];
+        if shape.dual() {
+            let gamma = crate::hw::sigmoid(gamma_logit[i]);
+            let gamma2 = crate::hw::sigmoid(gamma2_logit[i]);
+            let s1_init: Vec<f32> = row[..s].iter().map(|v| v.exp()).collect();
+            let s2_init: Vec<f32> = row[s..].iter().map(|v| v.exp()).collect();
+            let (lv, e1, e2) = crate::hw::es_dual_filter(
+                yi, alpha, gamma, gamma2, &s1_init, &s2_init);
+            levels.extend(lv);
+            seas.extend(e1);
+            seas2.extend(e2);
         } else {
-            (0.0, vec![1.0; s])
-        };
-        let es = crate::hw::es_filter(&y[i * c..(i + 1) * c], alpha, gamma,
-                                      &s_init);
-        levels.extend(es.levels);
-        seas.extend(es.seas);
+            let (gamma, s_init): (f32, Vec<f32>) = if shape.seasonal {
+                (crate::hw::sigmoid(gamma_logit[i]),
+                 row.iter().map(|v| v.exp()).collect())
+            } else {
+                (0.0, vec![1.0; s])
+            };
+            let es = crate::hw::es_filter(yi, alpha, gamma, &s_init);
+            levels.extend(es.levels);
+            seas.extend(es.seas);
+        }
     }
-    Ok(vec![
-        ("levels".into(), HostTensor::new(vec![b, c], levels)?),
-        ("seas".into(), HostTensor::new(vec![b, c + s], seas)?),
-    ])
+    let mut out = vec![
+        ("levels".to_string(), HostTensor::new(vec![b, c], levels)?),
+        ("seas".to_string(), HostTensor::new(vec![b, c + s], seas)?),
+    ];
+    if shape.dual() {
+        out.push(("seas2".to_string(),
+                  HostTensor::new(vec![b, c + s2], seas2)?));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -656,7 +723,7 @@ mod tests {
         let backend = NativeBackend::with_threads(2);
         let m = backend.manifest();
         assert_eq!(m.variant, "native");
-        for freq in ["yearly", "quarterly", "monthly", "daily"] {
+        for freq in ["yearly", "quarterly", "monthly", "daily", "hourly"] {
             assert!(m.config(freq).is_ok(), "missing config {freq}");
             assert_eq!(m.available_batches(freq, "train_step"),
                        NATIVE_BATCH_SIZES.to_vec());
@@ -665,9 +732,40 @@ mod tests {
             assert!(m.program(&format!("{freq}_init")).is_ok());
             assert!(m.program(&format!("{freq}_b8_es")).is_ok());
         }
-        // Dual-seasonality and penalty variants are PJRT-only.
-        assert!(m.config("hourly").is_err());
+        // §8.2 dual seasonality is native now; only the §8.4 penalty
+        // variants (and unmodeled weekly) stay out of the native manifest.
+        assert_eq!(m.config("hourly").unwrap().seasonality2, 168);
         assert!(m.config("quarterly_pen").is_err());
+        assert!(m.config("weekly").is_err());
+    }
+
+    #[test]
+    fn hourly_specs_carry_dual_leaves() {
+        let net = NetworkConfig::for_freq(Frequency::Hourly).unwrap();
+        let spec = train_step_spec("hourly", &net, 4);
+        let names: Vec<&str> =
+            spec.inputs.iter().map(|t| t.name.as_str()).collect();
+        // jax flat (alphabetical) series order: alpha, gamma2, gamma, log_s.
+        let a = names.iter().position(|n| *n == "params.series.alpha_logit")
+            .unwrap();
+        assert_eq!(names[a + 1], "params.series.gamma2_logit");
+        assert_eq!(names[a + 2], "params.series.gamma_logit");
+        assert_eq!(names[a + 3], "params.series.log_s_init");
+        let log_s = spec.inputs.iter()
+            .find(|t| t.name == "params.series.log_s_init").unwrap();
+        assert_eq!(log_s.shape, vec![4, 192]);
+        // 8 cell leaves + 4 head + 4 series = 16; 1 loss + 3×16 + step.
+        assert_eq!(spec.outputs.len(), 1 + 3 * 16 + 1);
+
+        let es = es_spec("hourly", &net, 8);
+        let in_names: Vec<&str> =
+            es.inputs.iter().map(|t| t.name.as_str()).collect();
+        assert!(in_names.contains(&"data.gamma2_logit"));
+        let out_names: Vec<&str> =
+            es.outputs.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(out_names, vec!["levels", "seas", "seas2"]);
+        assert_eq!(es.outputs[1].shape, vec![8, 336 + 24]);
+        assert_eq!(es.outputs[2].shape, vec![8, 336 + 168]);
     }
 
     #[test]

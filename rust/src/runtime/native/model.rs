@@ -2,20 +2,26 @@
 //! hand-written reverse-mode backward through the full ES-RNN graph.
 //!
 //! This mirrors, operation for operation, the JAX graph in
-//! `python/compile/model.py` (single-seasonality path):
+//! `python/compile/model.py`, covering both the single-seasonality path
+//! and the §8.2 dual-seasonality (hourly 24h×168h) path:
 //!
-//!   ES recurrence ([`hw::es_filter`], Eqs. 1/3) → seasonality extension →
-//!   per-position log-normalized windows (Fig. 2) → dilated-residual LSTM
-//!   stack with ring-buffer state (Fig. 1) → tanh dense + linear head →
-//!   masked pinball loss (§3.5) → gradients → Adam with the per-series
-//!   learning-rate multiplier (§3.3).
+//!   ES recurrence ([`hw::es_filter`] / [`hw::es_dual_filter`], Eqs. 1/3)
+//!   → seasonality extension (product of per-component tails for dual
+//!   configs, Gould et al. 2008) → per-position log-normalized windows
+//!   (Fig. 2) → dilated-residual LSTM stack with ring-buffer state
+//!   (Fig. 1) → tanh dense + linear head → masked pinball loss (§3.5) →
+//!   gradients → Adam with the per-series learning-rate multiplier (§3.3).
 //!
 //! The backward pass was derived by hand and validated against central
 //! finite differences (see `rust/tests/native_backend.rs`); the recurrence
-//! gradient ordering invariant is documented inline. Everything here is
+//! gradient ordering invariants — including the coupled dual-recurrence
+//! one — are documented inline at the ES backward loop. Everything here is
 //! one-series-at-a-time — the batch dimension is parallelized by the
 //! caller ([`super::NativeBackend`]) across std threads.
 
+use anyhow::Result;
+
+use crate::config::{valid_window_positions, window_positions};
 use crate::hw;
 
 /// Adam hyper-parameters baked into the train-step graph (mirror of
@@ -31,7 +37,10 @@ const EPS: f32 = 1e-8;
 #[derive(Debug, Clone)]
 pub struct Shape {
     pub c: usize,
+    /// Primary seasonal period S1.
     pub s: usize,
+    /// §8.2 secondary seasonal period S2 (0 = single-seasonality).
+    pub s2: usize,
     pub h: usize,
     pub in_w: usize,
     pub p: usize,
@@ -48,9 +57,16 @@ pub struct Shape {
 }
 
 impl Shape {
-    pub fn new(seasonality: usize, horizon: usize, input_window: usize,
-               length: usize, hidden: usize, dilations: &[Vec<usize>],
-               n_categories: usize) -> Self {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(seasonality: usize, seasonality2: usize, horizon: usize,
+               input_window: usize, length: usize, hidden: usize,
+               dilations: &[Vec<usize>], n_categories: usize) -> Result<Self> {
+        // Checked window counts (shared guards with `NetworkConfig`): a
+        // series shorter than the window (or window + horizon) is a
+        // descriptive error, not a usize wrap/panic.
+        let p = window_positions(length, input_window)?;
+        let valid_positions =
+            valid_window_positions(length, input_window, horizon)?;
         let flat: Vec<usize> = dilations.iter().flatten().copied().collect();
         let din0 = input_window + n_categories;
         let mut layer_din = Vec::with_capacity(flat.len());
@@ -59,24 +75,35 @@ impl Shape {
             layer_din.push(din);
             din = hidden;
         }
-        Self {
+        Ok(Self {
             c: length,
             s: seasonality,
+            s2: seasonality2,
             h: horizon,
             in_w: input_window,
-            p: length - input_window + 1,
+            p,
             hidden,
             din0,
             blocks: dilations.to_vec(),
             flat,
             layer_din,
             seasonal: seasonality > 1,
-            valid_positions: length - input_window - horizon + 1,
-        }
+            valid_positions,
+        })
     }
 
     pub fn n_layers(&self) -> usize {
         self.flat.len()
+    }
+
+    /// §8.2 dual-seasonality mode.
+    pub fn dual(&self) -> bool {
+        self.s2 > 0
+    }
+
+    /// Width of the packed `[S1 | S2]` per-series seasonality block.
+    pub fn s_total(&self) -> usize {
+        self.s + self.s2
     }
 }
 
@@ -134,29 +161,57 @@ impl RnnGrads {
     }
 }
 
-/// Gradients for one series' Holt-Winters parameters.
+/// Gradients for one series' Holt-Winters parameters. `log_s_init` is the
+/// full packed `[S1 | S2]` block; `gamma2_logit` stays 0 for single
+/// configs.
 #[derive(Debug, Clone)]
 pub struct SeriesGrads {
     pub alpha_logit: f32,
     pub gamma_logit: f32,
+    pub gamma2_logit: f32,
     pub log_s_init: Vec<f32>,
 }
 
 impl SeriesGrads {
-    pub fn zeros(s: usize) -> Self {
-        Self { alpha_logit: 0.0, gamma_logit: 0.0, log_s_init: vec![0.0; s] }
+    /// `s_total` is the packed seasonality width (S1 + S2).
+    pub fn zeros(s_total: usize) -> Self {
+        Self {
+            alpha_logit: 0.0,
+            gamma_logit: 0.0,
+            gamma2_logit: 0.0,
+            log_s_init: vec![0.0; s_total],
+        }
     }
+}
+
+/// One series' Holt-Winters parameters in stored (logit/log) space.
+/// `log_s_init` packs `[S1 | S2]`; `gamma2_logit` is ignored for single
+/// configs.
+#[derive(Clone, Copy)]
+pub struct HwView<'a> {
+    pub alpha_logit: f32,
+    pub gamma_logit: f32,
+    pub gamma2_logit: f32,
+    pub log_s_init: &'a [f32],
 }
 
 /// Everything the forward pass records for one series: outputs plus the
 /// activation tape the backward pass replays.
 pub struct Forward {
     pub levels: Vec<f32>,
+    /// Primary seasonal track `[C+S1]`.
     pub seas: Vec<f32>,
+    /// §8.2 secondary seasonal track `[C+S2]` (empty for single configs).
+    pub seas2: Vec<f32>,
+    /// Combined multiplicative seasonality over `[C+H]`: the per-step
+    /// product of the components, with each component's tail tiled from
+    /// its own final period past C.
     pub seas_ext: Vec<f32>,
     pub alpha: f32,
     pub gamma: f32,
+    pub gamma2: f32,
     pub s_init: Vec<f32>,
+    pub s2_init: Vec<f32>,
     /// Log-normalized input windows `[P, in_w]`.
     pub x: Vec<f32>,
     /// Log-normalized targets `[P, H]` (empty unless `want_targets`).
@@ -228,32 +283,56 @@ fn mat_t_vec(w: &[f32], dz: &[f32], row_offset: usize, rows: usize,
 /// Full forward pass for one series.
 ///
 /// `y` has length C, `cat` length 6 (one-hot). Per-series parameters come
-/// in logit/log space exactly as stored by the [`crate::coordinator::ParamStore`].
+/// in logit/log space exactly as stored by the [`crate::coordinator::ParamStore`],
+/// bundled in an [`HwView`] (dual configs carry `gamma2_logit` and a
+/// packed `[S1 | S2]` seasonality block).
 pub fn forward_series(shape: &Shape, y: &[f32], cat: &[f32], rnn: &RnnView,
-                      alpha_logit: f32, gamma_logit: f32, log_s_init: &[f32],
-                      want_targets: bool) -> Forward {
+                      hwp: HwView, want_targets: bool) -> Forward {
     let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
+    let s2 = shape.s2;
+    let dual = shape.dual();
     let hid = shape.hidden;
     let n_l = shape.n_layers();
     let din_max = shape.din0.max(hid);
 
-    let alpha = sigmoid(alpha_logit);
+    let alpha = sigmoid(hwp.alpha_logit);
     let (gamma, s_init): (f32, Vec<f32>) = if shape.seasonal {
-        (sigmoid(gamma_logit),
-         log_s_init.iter().map(|v| v.exp()).collect())
+        (sigmoid(hwp.gamma_logit),
+         hwp.log_s_init[..s].iter().map(|v| v.exp()).collect())
     } else {
         (0.0, vec![1.0; s])
     };
+    let (gamma2, s2_init): (f32, Vec<f32>) = if dual {
+        (sigmoid(hwp.gamma2_logit),
+         hwp.log_s_init[s..s + s2].iter().map(|v| v.exp()).collect())
+    } else {
+        (0.0, Vec::new())
+    };
 
-    // 1. ES recurrence — the pure-Rust Holt-Winters mirror IS the kernel.
-    let es = hw::es_filter(y, alpha, gamma, &s_init);
-    let (levels, seas) = (es.levels, es.seas);
+    // 1. ES recurrence — the pure-Rust Holt-Winters mirror IS the kernel
+    //    (coupled dual recurrence for §8.2 configs).
+    let (levels, seas, seas2) = if dual {
+        hw::es_dual_filter(y, alpha, gamma, gamma2, &s_init, &s2_init)
+    } else {
+        let es = hw::es_filter(y, alpha, gamma, &s_init);
+        (es.levels, es.seas, Vec::new())
+    };
 
-    // 2. Seasonality extension past C: tile the final period (§3.4).
+    // 2. Seasonality extension past C: tile each component's final period
+    //    (§3.4); dual configs multiply the two tracks (Gould et al. 2008).
     let mut seas_ext = Vec::with_capacity(c + h);
-    seas_ext.extend_from_slice(&seas[..c]);
-    for k in 0..h {
-        seas_ext.push(seas[c + (k % s)]);
+    if dual {
+        for t in 0..c {
+            seas_ext.push(seas[t] * seas2[t]);
+        }
+        for k in 0..h {
+            seas_ext.push(seas[c + (k % s)] * seas2[c + (k % s2)]);
+        }
+    } else {
+        seas_ext.extend_from_slice(&seas[..c]);
+        for k in 0..h {
+            seas_ext.push(seas[c + (k % s)]);
+        }
     }
 
     // 3. Windows: log-normalized inputs and (optionally) targets (Fig. 2).
@@ -298,10 +377,13 @@ pub fn forward_series(shape: &Shape, y: &[f32], cat: &[f32], rnn: &RnnView,
     let mut fwd = Forward {
         levels,
         seas,
+        seas2,
         seas_ext,
         alpha,
         gamma,
+        gamma2,
         s_init,
+        s2_init,
         x,
         z,
         x_ok,
@@ -414,6 +496,8 @@ pub fn backward_series(shape: &Shape, y: &[f32], rnn: &RnnView, fwd: &Forward,
                        dout: &[f32], dz: &[f32], grads: &mut RnnGrads)
                        -> SeriesGrads {
     let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
+    let s2 = shape.s2;
+    let dual = shape.dual();
     let hid = shape.hidden;
     let n_l = shape.n_layers();
     let din_max = fwd.din_max;
@@ -534,55 +618,112 @@ pub fn backward_series(shape: &Shape, y: &[f32], rnn: &RnnView, fwd: &Forward,
         dlev[p + in_w - 1] += dlvl;
     }
 
-    // seas_ext → seas (the tail tiles seas[C..C+S]).
-    let mut dseas = vec![0.0f32; c + s];
-    dseas[..c].copy_from_slice(&dseas_ext[..c]);
-    for k in 0..h {
-        dseas[c + (k % s)] += dseas_ext[c + k];
+    // seas_ext → per-component seasonality gradients. For single configs
+    // the combined track IS the primary track; for dual configs
+    // seas_ext[t] = seas1[t] * seas2[t] (head) and
+    // seas_ext[C+k] = seas1[C + k%S1] * seas2[C + k%S2] (tails), so the
+    // product rule routes each position's gradient to both components.
+    let mut gseas = vec![0.0f32; c + s];
+    let mut gseas2 = vec![0.0f32; if dual { c + s2 } else { 0 }];
+    if dual {
+        for t in 0..c {
+            gseas[t] += dseas_ext[t] * fwd.seas2[t];
+            gseas2[t] += dseas_ext[t] * fwd.seas[t];
+        }
+        for k in 0..h {
+            let (i1, i2) = (c + (k % s), c + (k % s2));
+            gseas[i1] += dseas_ext[c + k] * fwd.seas2[i2];
+            gseas2[i2] += dseas_ext[c + k] * fwd.seas[i1];
+        }
+    } else {
+        gseas[..c].copy_from_slice(&dseas_ext[..c]);
+        for k in 0..h {
+            gseas[c + (k % s)] += dseas_ext[c + k];
+        }
     }
 
     // ---- ES recurrence backward ----
-    // Reverse over t: when step t is processed, every use of seas[t+S]
-    // (level at t' = t+S, recurrence at t' = t+S, direct window reads)
-    // has already deposited its gradient, because all those uses happen
-    // at steps > t or were seeded from dseas above.
-    let (alpha, gamma) = (fwd.alpha, fwd.gamma);
+    // Reverse over t: when step t is processed, every use of seas1[t+S1]
+    // and seas2[t+S2] (level at t' = t+S_i, both seasonal updates at
+    // t' = t+S_i, direct window reads) has already deposited its gradient,
+    // because all those uses happen at steps > t or were seeded above.
+    //
+    // Dual-recurrence coupling invariant: within step t the forward order
+    // is l_t first (reading s1_t, s2_t, l_{t-1}), then seas1[t+S1] and
+    // seas2[t+S2] (each reading l_t AND the *other* component's s_t). The
+    // backward therefore (a) drains both "next" seasonal gradients into
+    // glev[t] / gseas{1,2}[t] / d gamma{1,2} — including the cross terms
+    // through the other component — and only then (b) consumes glev[t]
+    // for the level recurrence: by that point l_t's full use set {level
+    // at t+1, seas1[t+S1], seas2[t+S2], window reads} has deposited.
+    // Deposits into gseas{1,2}[t] are safe because index t is consumed at
+    // step t-S_i < t (or, for t < S_i, by the s_init mapping after the
+    // loop).
+    let (alpha, gamma, gamma2) = (fwd.alpha, fwd.gamma, fwd.gamma2);
     let mut glev = dlev;
-    let mut gseas = dseas;
     let mut d_alpha = 0.0f32;
     let mut d_gamma = 0.0f32;
+    let mut d_gamma2 = 0.0f32;
     for t in (0..c).rev() {
-        let g_snext = gseas[t + s];
         let l_t = fwd.levels[t];
-        let s_t = fwd.seas[t];
-        // seas[t+S] = gamma*y_t/l_t + (1-gamma)*seas[t]
-        glev[t] += g_snext * (-gamma * y[t] / (l_t * l_t));
-        d_gamma += g_snext * (y[t] / l_t - s_t);
-        gseas[t] += g_snext * (1.0 - gamma);
+        let y_t = y[t];
+        let s1_t = fwd.seas[t];
+        let s2_t = if dual { fwd.seas2[t] } else { 1.0 };
+
+        // seas1[t+S1] = gamma*y_t/(l_t*s2_t) + (1-gamma)*s1_t
+        let g1n = gseas[t + s];
+        let u1 = y_t / (l_t * s2_t);
+        glev[t] += g1n * (-gamma * u1 / l_t);
+        d_gamma += g1n * (u1 - s1_t);
+        gseas[t] += g1n * (1.0 - gamma);
+        if dual {
+            gseas2[t] += g1n * (-gamma * u1 / s2_t);
+            // seas2[t+S2] = gamma2*y_t/(l_t*s1_t) + (1-gamma2)*s2_t
+            let g2n = gseas2[t + s2];
+            let u2 = y_t / (l_t * s1_t);
+            glev[t] += g2n * (-gamma2 * u2 / l_t);
+            d_gamma2 += g2n * (u2 - s2_t);
+            gseas[t] += g2n * (-gamma2 * u2 / s1_t);
+            gseas2[t] += g2n * (1.0 - gamma2);
+        }
+
         let g_l = glev[t];
+        let s_all = s1_t * s2_t;
         if t > 0 {
-            // l_t = alpha*y_t/seas[t] + (1-alpha)*l_{t-1}
-            d_alpha += g_l * (y[t] / s_t - fwd.levels[t - 1]);
-            gseas[t] += g_l * (-alpha * y[t] / (s_t * s_t));
+            // l_t = alpha*y_t/(s1_t*s2_t) + (1-alpha)*l_{t-1}
+            d_alpha += g_l * (y_t / s_all - fwd.levels[t - 1]);
+            gseas[t] += g_l * (-alpha * y_t / (s_all * s1_t));
+            if dual {
+                gseas2[t] += g_l * (-alpha * y_t / (s_all * s2_t));
+            }
             glev[t - 1] += g_l * (1.0 - alpha);
         } else {
-            // l_0 = y_0/seas[0]
-            gseas[0] += g_l * (-y[0] / (s_t * s_t));
+            // l_0 = y_0/(s1_0*s2_0)
+            gseas[0] += g_l * (-y_t / (s_all * s1_t));
+            if dual {
+                gseas2[0] += g_l * (-y_t / (s_all * s2_t));
+            }
         }
     }
 
     let d_alpha_logit = d_alpha * alpha * (1.0 - alpha);
-    let (d_gamma_logit, d_log_s) = if shape.seasonal {
+    let (d_gamma_logit, d_gamma2_logit, d_log_s) = if shape.seasonal {
+        let mut d_log_s = Vec::with_capacity(s + s2);
+        // d log s_init = d s_init * s_init (chain through exp), per block.
+        d_log_s.extend((0..s).map(|k| gseas[k] * fwd.s_init[k]));
+        d_log_s.extend((0..s2).map(|k| gseas2[k] * fwd.s2_init[k]));
         (d_gamma * gamma * (1.0 - gamma),
-         (0..s).map(|k| gseas[k] * fwd.s_init[k]).collect())
+         if dual { d_gamma2 * gamma2 * (1.0 - gamma2) } else { 0.0 },
+         d_log_s)
     } else {
         // Non-seasonal: gamma is pinned to 0 and s_init to 1 in-graph, so
         // no gradient flows to the stored logits (matches the artifact).
-        (0.0, vec![0.0; s])
+        (0.0, 0.0, vec![0.0; s + s2])
     };
     SeriesGrads {
         alpha_logit: d_alpha_logit,
         gamma_logit: d_gamma_logit,
+        gamma2_logit: d_gamma2_logit,
         log_s_init: d_log_s,
     }
 }
@@ -642,7 +783,11 @@ mod tests {
     use super::*;
 
     fn toy_shape() -> Shape {
-        Shape::new(4, 4, 5, 20, 6, &[vec![1, 2], vec![2, 4]], 6)
+        Shape::new(4, 0, 4, 5, 20, 6, &[vec![1, 2], vec![2, 4]], 6).unwrap()
+    }
+
+    fn toy_dual_shape() -> Shape {
+        Shape::new(3, 6, 4, 5, 24, 6, &[vec![1, 2], vec![2, 4]], 6).unwrap()
     }
 
     fn toy_rnn(shape: &Shape, seed: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
@@ -711,7 +856,13 @@ mod tests {
         let y = toy_series(&shape, 3);
         let cat = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         let log_s = vec![0.05, -0.05, 0.1, -0.1];
-        let fwd = forward_series(&shape, &y, &cat, &rnn, -0.5, -2.0, &log_s, true);
+        let hwp = HwView {
+            alpha_logit: -0.5,
+            gamma_logit: -2.0,
+            gamma2_logit: 0.0,
+            log_s_init: &log_s,
+        };
+        let fwd = forward_series(&shape, &y, &cat, &rnn, hwp, true);
         assert_eq!(fwd.out.len(), shape.p * shape.h);
         assert_eq!(fwd.z.len(), shape.p * shape.h);
         assert!(fwd.out.iter().all(|v| v.is_finite()));
@@ -722,6 +873,48 @@ mod tests {
     }
 
     #[test]
+    fn dual_forward_tracks_and_forecast_are_finite() {
+        let shape = toy_dual_shape();
+        assert!(shape.dual());
+        assert_eq!(shape.s_total(), 9);
+        let parts = toy_rnn(&shape, 9);
+        let cells = cell_refs(&parts);
+        let rnn = view(&parts, &cells);
+        let y = toy_series(&shape, 5);
+        let cat = [0.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        let log_s = vec![0.02f32; 9];
+        let hwp = HwView {
+            alpha_logit: -0.5,
+            gamma_logit: -2.0,
+            gamma2_logit: -2.5,
+            log_s_init: &log_s,
+        };
+        let fwd = forward_series(&shape, &y, &cat, &rnn, hwp, true);
+        assert_eq!(fwd.seas.len(), shape.c + shape.s);
+        assert_eq!(fwd.seas2.len(), shape.c + shape.s2);
+        assert_eq!(fwd.seas_ext.len(), shape.c + shape.h);
+        // Combined head equals the product of the component tracks.
+        for t in 0..shape.c {
+            assert!((fwd.seas_ext[t] - fwd.seas[t] * fwd.seas2[t]).abs()
+                    < 1e-6);
+        }
+        let fc = forecast_from(&shape, &fwd);
+        assert!(fc.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn shape_rejects_short_series() {
+        // length < input_window: no positions at all.
+        assert!(Shape::new(4, 0, 4, 30, 20, 6, &[vec![1]], 6).is_err());
+        // length >= input_window but < input_window + horizon.
+        assert!(Shape::new(4, 0, 18, 12, 20, 6, &[vec![1]], 6).is_err());
+        // Exactly one valid position is fine.
+        let ok = Shape::new(4, 0, 4, 5, 9, 6, &[vec![1]], 6).unwrap();
+        assert_eq!(ok.valid_positions, 1);
+        assert_eq!(ok.p, 5);
+    }
+
+    #[test]
     fn pinball_seeds_mask_padding() {
         let shape = toy_shape();
         let parts = toy_rnn(&shape, 7);
@@ -729,8 +922,13 @@ mod tests {
         let rnn = view(&parts, &cells);
         let y = toy_series(&shape, 4);
         let cat = [0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
-        let fwd = forward_series(&shape, &y, &cat, &rnn, -0.5, -2.0,
-                                 &[0.0; 4], true);
+        let hwp = HwView {
+            alpha_logit: -0.5,
+            gamma_logit: -2.0,
+            gamma2_logit: 0.0,
+            log_s_init: &[0.0; 4],
+        };
+        let fwd = forward_series(&shape, &y, &cat, &rnn, hwp, true);
         let (l0, d0, z0) = pinball_seeds(&shape, &fwd, 0.48, 0.0, 100.0);
         assert_eq!(l0, 0.0);
         assert!(d0.iter().all(|v| *v == 0.0) && z0.iter().all(|v| *v == 0.0));

@@ -34,16 +34,20 @@ fn roundtrip(freq: &str, b: usize) {
     let rnn = backend.execute_init(freq, 42).expect("init");
     assert!(rnn.iter().any(|(n, _)| n.starts_with("rnn.cells.0")));
 
-    // 2. Assemble the full state map the manifest wants.
+    // 2. Assemble the full state map the manifest wants. Dual configs
+    //    (§8.2 hourly) add `gamma2_logit` and widen the packed block.
     let mut state: std::collections::HashMap<String, HostTensor> =
         rnn.into_iter().map(|(n, t)| (format!("params.{n}"), t)).collect();
     // Per-series params (neutral init) + matching Adam slots.
-    let series = [
+    let width = cfg.seasonality + cfg.seasonality2;
+    let mut series = vec![
         ("alpha_logit", vec![b], vec![-0.5f32; b]),
         ("gamma_logit", vec![b], vec![-1.0f32; b]),
-        ("log_s_init", vec![b, cfg.seasonality],
-         vec![0.0f32; b * cfg.seasonality]),
+        ("log_s_init", vec![b, width], vec![0.0f32; b * width]),
     ];
+    if cfg.seasonality2 > 0 {
+        series.push(("gamma2_logit", vec![b], vec![-1.0f32; b]));
+    }
     for (name, shape, data) in series {
         state.insert(format!("params.series.{name}"),
                      HostTensor::new(shape.clone(), data).unwrap());
@@ -131,6 +135,13 @@ fn quarterly_roundtrip_small_batch() {
 }
 
 #[test]
+fn hourly_roundtrip_dual_seasonality() {
+    // §8.2: the full init → train → predict contract over the native
+    // hourly dual program, driven purely through manifest names.
+    roundtrip("hourly", 4);
+}
+
+#[test]
 fn shape_mismatch_is_rejected() {
     let backend = NativeBackend::new();
     let bad = HostTensor::new(vec![2, 3], vec![0.0; 6]).unwrap();
@@ -140,8 +151,10 @@ fn shape_mismatch_is_rejected() {
 
 #[test]
 fn unknown_program_is_rejected() {
+    // weekly has no ES-RNN network at all (§8.5 future work), so its
+    // programs are absent from every manifest.
     let backend = NativeBackend::new();
     let t = HostTensor::scalar(0.0);
-    assert!(backend.execute_named("hourly_b4_train_step", &mut |_| Ok(&t)).is_err());
+    assert!(backend.execute_named("weekly_b4_train_step", &mut |_| Ok(&t)).is_err());
     assert!(backend.execute_named("nope", &mut |_| Ok(&t)).is_err());
 }

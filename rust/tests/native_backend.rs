@@ -6,10 +6,13 @@
 //!   1e-4 across random series/seasonality configs, and the batched
 //!   predict program agrees with the single-series reference forward;
 //! * a 5-step training run on a synthetic corpus whose pinball loss must
-//!   fall (the train_step end-to-end signal);
+//!   fall (the train_step end-to-end signal), for both a single-
+//!   seasonality config and the §8.2 hourly dual-seasonality program;
 //! * directional finite-difference checks of the hand-written backward
-//!   pass, for every parameter group, on seasonal and non-seasonal
-//!   configs (the same derivation was validated at f64 precision during
+//!   pass, for every parameter group, on seasonal, non-seasonal and
+//!   dual-seasonality configs — the dual check covers alpha, gamma,
+//!   gamma2, both packed `[S1 | S2]` log_s_init blocks and the RNN
+//!   weights (the same derivation was validated at f64 precision during
 //!   development; this guards the f32 transcription).
 
 use std::collections::HashMap;
@@ -26,7 +29,8 @@ use fast_esrnn::util::rng::Rng;
 const FREQS: [(&str, usize); 4] =
     [("yearly", 1), ("quarterly", 4), ("monthly", 12), ("daily", 7)];
 
-/// Owned toy parameters for direct model-module calls.
+/// Owned toy parameters for direct model-module calls. `log_s` packs
+/// `[S1 | S2]` per series (S2 = 0 for single-seasonality shapes).
 struct Params {
     cells: Vec<(Vec<f32>, Vec<f32>)>,
     dense_w: Vec<f32>,
@@ -35,6 +39,7 @@ struct Params {
     out_b: Vec<f32>,
     alpha: Vec<f32>,
     gamma: Vec<f32>,
+    gamma2: Vec<f32>,
     log_s: Vec<f32>,
 }
 
@@ -60,9 +65,20 @@ fn toy_params(shape: &Shape, n_series: usize, rng: &mut Rng) -> Params {
         out_b: vec![0.0; shape.h],
         alpha: (0..n_series).map(|_| rng.uniform(-1.5, 0.5) as f32).collect(),
         gamma: (0..n_series).map(|_| rng.uniform(-3.0, -0.5) as f32).collect(),
-        log_s: (0..n_series * shape.s)
+        gamma2: (0..n_series).map(|_| rng.uniform(-3.0, -0.5) as f32).collect(),
+        log_s: (0..n_series * shape.s_total())
             .map(|_| rng.uniform(-0.2, 0.2) as f32)
             .collect(),
+    }
+}
+
+fn hw_view<'a>(p: &'a Params, shape: &Shape, i: usize) -> model::HwView<'a> {
+    let w = shape.s_total();
+    model::HwView {
+        alpha_logit: p.alpha[i],
+        gamma_logit: p.gamma[i],
+        gamma2_logit: p.gamma2[i],
+        log_s_init: &p.log_s[i * w..(i + 1) * w],
     }
 }
 
@@ -92,8 +108,7 @@ fn batch_loss(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
     let mut num = 0.0f64;
     for (i, y) in ys.iter().enumerate() {
         let fwd = model::forward_series(
-            shape, y, &cats[i], &rnn, p.alpha[i], p.gamma[i],
-            &p.log_s[i * shape.s..(i + 1) * shape.s], true);
+            shape, y, &cats[i], &rnn, hw_view(p, shape, i), true);
         let (loss_num, _, _) = model::pinball_seeds(shape, &fwd, tau,
                                                     smask[i], denom);
         num += loss_num;
@@ -114,12 +129,11 @@ fn batch_grads(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
     let mut series_grads = Vec::new();
     for (i, y) in ys.iter().enumerate() {
         let fwd = model::forward_series(
-            shape, y, &cats[i], &rnn, p.alpha[i], p.gamma[i],
-            &p.log_s[i * shape.s..(i + 1) * shape.s], true);
+            shape, y, &cats[i], &rnn, hw_view(p, shape, i), true);
         let (_, dout, dz) = model::pinball_seeds(shape, &fwd, tau, smask[i],
                                                  denom);
         if smask[i] == 0.0 {
-            series_grads.push(model::SeriesGrads::zeros(shape.s));
+            series_grads.push(model::SeriesGrads::zeros(shape.s_total()));
         } else {
             series_grads.push(model::backward_series(shape, y, &rnn, &fwd,
                                                      &dout, &dz,
@@ -216,8 +230,9 @@ fn prop_predict_program_matches_reference_forward() {
     }, |(freq, b, seed, y)| {
         let (b, seed) = (*b, *seed);
         let cfg = backend.manifest().config(freq).unwrap().clone();
-        let shape = Shape::new(cfg.seasonality, cfg.horizon, cfg.input_window,
-                               cfg.length, cfg.hidden, &cfg.dilations, 6);
+        let shape = Shape::new(cfg.seasonality, cfg.seasonality2, cfg.horizon,
+                               cfg.input_window, cfg.length, cfg.hidden,
+                               &cfg.dilations, 6).unwrap();
         let mut rng = Rng::new(seed);
         let p = toy_params(&shape, b, &mut rng);
         let mut cat = vec![0.0f32; b * 6];
@@ -276,8 +291,7 @@ fn prop_predict_program_matches_reference_forward() {
         for i in 0..b {
             let fwd = model::forward_series(
                 &shape, &y[i * cfg.length..(i + 1) * cfg.length], &cats[i],
-                &rnn, p.alpha[i], p.gamma[i],
-                &p.log_s[i * shape.s..(i + 1) * shape.s], false);
+                &rnn, hw_view(&p, &shape, i), false);
             let want = model::forecast_from(&shape, &fwd);
             for k in 0..shape.h {
                 let got = fc.data[i * shape.h + k];
@@ -364,6 +378,161 @@ fn train_step_reduces_pinball_loss_over_5_steps() {
 }
 
 #[test]
+fn hourly_es_program_matches_dual_filter_oracle() {
+    // §8.2: the hourly es debug program must agree elementwise with the
+    // pure-Rust coupled dual filter, emitting both seasonal tracks.
+    let backend = NativeBackend::with_threads(2);
+    let cfg = backend.manifest().config("hourly").unwrap().clone();
+    let (b, c) = (8usize, cfg.length);
+    let (s1, s2) = (cfg.seasonality, cfg.seasonality2);
+    let w = s1 + s2;
+    let mut rng = Rng::new(77);
+    let mut y = Vec::new();
+    let mut alpha = Vec::new();
+    let mut gamma = Vec::new();
+    let mut gamma2 = Vec::new();
+    let mut log_s = Vec::new();
+    for _ in 0..b {
+        y.extend(gen_positive_series(&mut rng, c, s1));
+        alpha.push(rng.uniform(-2.0, 2.0) as f32);
+        gamma.push(rng.uniform(-3.0, 0.0) as f32);
+        gamma2.push(rng.uniform(-3.0, 0.0) as f32);
+        for _ in 0..w {
+            log_s.push(rng.uniform(-0.3, 0.3) as f32);
+        }
+    }
+    let inputs = HashMap::from([
+        ("data.y".to_string(),
+         HostTensor::new(vec![b, c], y.clone()).unwrap()),
+        ("data.alpha_logit".to_string(),
+         HostTensor::new(vec![b], alpha.clone()).unwrap()),
+        ("data.gamma_logit".to_string(),
+         HostTensor::new(vec![b], gamma.clone()).unwrap()),
+        ("data.gamma2_logit".to_string(),
+         HostTensor::new(vec![b], gamma2.clone()).unwrap()),
+        ("data.log_s_init".to_string(),
+         HostTensor::new(vec![b, w], log_s.clone()).unwrap()),
+    ]);
+    let outs = backend
+        .execute_named("hourly_b8_es", &mut |spec| {
+            inputs.get(&spec.name)
+                .ok_or_else(|| anyhow::anyhow!("missing {}", spec.name))
+        })
+        .unwrap();
+    assert_eq!(outs[0].0, "levels");
+    assert_eq!(outs[1].0, "seas");
+    assert_eq!(outs[2].0, "seas2");
+    for i in 0..b {
+        let a = hw::sigmoid(alpha[i]);
+        let g1 = hw::sigmoid(gamma[i]);
+        let g2 = hw::sigmoid(gamma2[i]);
+        let row = &log_s[i * w..(i + 1) * w];
+        let s1_init: Vec<f32> = row[..s1].iter().map(|v| v.exp()).collect();
+        let s2_init: Vec<f32> = row[s1..].iter().map(|v| v.exp()).collect();
+        let (lv, e1, e2) = hw::es_dual_filter(
+            &y[i * c..(i + 1) * c], a, g1, g2, &s1_init, &s2_init);
+        for t in 0..c {
+            let got = outs[0].1.data[i * c + t];
+            assert!((got - lv[t]).abs() <= 1e-4 * lv[t].abs().max(1.0),
+                    "level[{i},{t}] {got} != {}", lv[t]);
+        }
+        for t in 0..c + s1 {
+            let got = outs[1].1.data[i * (c + s1) + t];
+            assert!((got - e1[t]).abs() <= 1e-4 * e1[t].abs().max(1.0),
+                    "seas[{i},{t}] {got} != {}", e1[t]);
+        }
+        for t in 0..c + s2 {
+            let got = outs[2].1.data[i * (c + s2) + t];
+            assert!((got - e2[t]).abs() <= 1e-4 * e2[t].abs().max(1.0),
+                    "seas2[{i},{t}] {got} != {}", e2[t]);
+        }
+    }
+}
+
+#[test]
+fn hourly_train_step_reduces_pinball_loss_over_5_steps() {
+    // §8.2 end-to-end training signal on the real hourly dual program:
+    // 24h×168h seasonality, gamma2 leaf, packed [24 | 168] log_s_init.
+    let backend = NativeBackend::new();
+    let freq = "hourly";
+    let b = 4usize;
+    let cfg = backend.manifest().config(freq).unwrap().clone();
+    let w = cfg.seasonality + cfg.seasonality2;
+    let mut rng = Rng::new(13);
+    let mut y = Vec::new();
+    for _ in 0..b {
+        // Daily cycle from the generator plus a planted weekly-style
+        // modulation so both seasonal tracks carry signal.
+        let base = gen_positive_series(&mut rng, cfg.length, cfg.seasonality);
+        let amp2 = rng.uniform(0.05, 0.2);
+        for (t, v) in base.iter().enumerate() {
+            let wv = std::f64::consts::TAU * (t % cfg.seasonality2) as f64
+                / cfg.seasonality2 as f64;
+            y.push((*v as f64 * (1.0 + amp2 * wv.sin())) as f32);
+        }
+    }
+
+    let rnn = backend.execute_init(freq, 42).unwrap();
+    let mut state: HashMap<String, HostTensor> =
+        rnn.into_iter().map(|(n, t)| (format!("params.{n}"), t)).collect();
+    state.insert("params.series.alpha_logit".into(),
+                 HostTensor::new(vec![b], vec![-0.5; b]).unwrap());
+    state.insert("params.series.gamma_logit".into(),
+                 HostTensor::new(vec![b], vec![-1.0; b]).unwrap());
+    state.insert("params.series.gamma2_logit".into(),
+                 HostTensor::new(vec![b], vec![-1.0; b]).unwrap());
+    state.insert("params.series.log_s_init".into(),
+                 HostTensor::new(vec![b, w], vec![0.0; b * w]).unwrap());
+    let keys: Vec<String> = state.keys().cloned().collect();
+    for k in &keys {
+        let z = HostTensor::zeros(state[k].shape.clone());
+        state.insert(k.replace("params.", "opt.m."), z.clone());
+        state.insert(k.replace("params.", "opt.v."), z);
+    }
+    state.insert("opt.step".into(), HostTensor::scalar(0.0));
+
+    let yt = HostTensor::new(vec![b, cfg.length], y).unwrap();
+    let mut cat = vec![0.0f32; b * 6];
+    for i in 0..b {
+        cat[i * 6 + 5] = 1.0; // M4 hourly series are all "Other"
+    }
+    let cat = HostTensor::new(vec![b, 6], cat).unwrap();
+    let mask = HostTensor::new(vec![b], vec![1.0; b]).unwrap();
+    let lr = HostTensor::scalar(1e-3);
+    let name = Manifest::program_name(freq, b, "train_step");
+
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let outs = backend
+            .execute_named(&name, &mut |spec| {
+                Ok(match spec.name.as_str() {
+                    "data.y" => &yt,
+                    "data.cat" => &cat,
+                    "data.mask" => &mask,
+                    "lr" => &lr,
+                    other => state.get(other).unwrap_or_else(
+                        || panic!("missing `{other}`")),
+                })
+            })
+            .unwrap();
+        for (n, t) in outs {
+            if n == "loss" {
+                losses.push(t.data[0]);
+            } else {
+                state.insert(n, t);
+            }
+        }
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses[4] < losses[0],
+            "hourly pinball loss should fall over 5 steps: {losses:?}");
+    // gamma2 moved: the dual smoothing coefficient received gradient.
+    let g2 = &state["params.series.gamma2_logit"].data;
+    assert!(g2.iter().any(|v| (*v - -1.0).abs() > 1e-7),
+            "gamma2_logit never updated: {g2:?}");
+}
+
+#[test]
 fn thread_count_does_not_change_train_step_numerics() {
     // Same inputs through 1-thread and 4-thread backends: losses must
     // agree to float tolerance (association order differs slightly).
@@ -427,12 +596,25 @@ fn thread_count_does_not_change_train_step_numerics() {
 // -------------------------------------------- finite-difference gradients
 
 /// Directional derivative check: analytic g·u vs central difference along
-/// a random ±1 direction `u` over one parameter group.
-fn check_direction(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
-                   smask: &[f32], p: &mut Params, tau: f32, group: &str,
-                   analytic: &[f32], rng: &mut Rng) {
+/// a random ±1 direction `u` over one parameter group. `mask` zeroes
+/// direction entries outside a sub-block (used to exercise the two packed
+/// `[S1 | S2]` seasonality blocks independently); `label` names the check
+/// in failure messages.
+#[allow(clippy::too_many_arguments)]
+fn check_direction_masked(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
+                          smask: &[f32], p: &mut Params, tau: f32,
+                          group: &str, label: &str, analytic: &[f32],
+                          mask: &dyn Fn(usize) -> bool, rng: &mut Rng) {
     let u: Vec<f32> = (0..analytic.len())
-        .map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 })
+        .map(|j| {
+            if !mask(j) {
+                0.0
+            } else if rng.chance(0.5) {
+                1.0
+            } else {
+                -1.0
+            }
+        })
         .collect();
     let dot: f64 = analytic
         .iter()
@@ -454,6 +636,7 @@ fn check_direction(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
             "out_b" => &mut p.out_b,
             "alpha" => &mut p.alpha,
             "gamma" => &mut p.gamma,
+            "gamma2" => &mut p.gamma2,
             "log_s" => &mut p.log_s,
             other => panic!("unknown group {other}"),
         };
@@ -469,14 +652,22 @@ fn check_direction(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
     let fd = (lp - lm) / (2.0 * eps as f64);
     let tol = 0.05 * dot.abs().max(fd.abs()) + 5e-4;
     assert!((dot - fd).abs() <= tol,
-            "group {group}: analytic {dot:.6e} vs fd {fd:.6e} (tol {tol:.2e})");
+            "group {label}: analytic {dot:.6e} vs fd {fd:.6e} (tol {tol:.2e})");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_direction(shape: &Shape, ys: &[Vec<f32>], cats: &[[f32; 6]],
+                   smask: &[f32], p: &mut Params, tau: f32, group: &str,
+                   analytic: &[f32], rng: &mut Rng) {
+    check_direction_masked(shape, ys, cats, smask, p, tau, group, group,
+                           analytic, &|_| true, rng);
 }
 
 fn run_gradient_check(seasonal: bool, seed: u64) {
     let shape = if seasonal {
-        Shape::new(4, 4, 5, 20, 6, &[vec![1, 2], vec![2, 4]], 6)
+        Shape::new(4, 0, 4, 5, 20, 6, &[vec![1, 2], vec![2, 4]], 6).unwrap()
     } else {
-        Shape::new(1, 3, 4, 16, 5, &[vec![1, 2], vec![2, 3]], 6)
+        Shape::new(1, 0, 3, 4, 16, 5, &[vec![1, 2], vec![2, 3]], 6).unwrap()
     };
     let mut rng = Rng::new(seed);
     let b = 3usize;
@@ -543,4 +734,82 @@ fn gradients_match_finite_differences_seasonal() {
 #[test]
 fn gradients_match_finite_differences_nonseasonal() {
     run_gradient_check(false, 1002);
+}
+
+/// §8.2 dual path: every parameter group — including gamma2 and the two
+/// packed `[S1 | S2]` seasonality blocks independently — must match
+/// central finite differences through the coupled ES recurrence.
+#[test]
+fn gradients_match_finite_differences_dual() {
+    let shape =
+        Shape::new(3, 6, 4, 5, 24, 6, &[vec![1, 2], vec![2, 4]], 6).unwrap();
+    assert!(shape.dual());
+    let (s1, w) = (shape.s, shape.s_total());
+    let mut rng = Rng::new(1003);
+    let b = 3usize;
+    let mut ys = Vec::new();
+    let mut cats = Vec::new();
+    for i in 0..b {
+        // Plant both cycles so the second seasonal track carries signal.
+        let base = gen_positive_series(&mut rng, shape.c, shape.s);
+        let amp2 = rng.uniform(0.05, 0.2);
+        let y: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(t, v)| {
+                let wv = std::f64::consts::TAU * (t % shape.s2) as f64
+                    / shape.s2 as f64;
+                (*v as f64 * (1.0 + amp2 * wv.sin())) as f32
+            })
+            .collect();
+        ys.push(y);
+        let mut one = [0.0f32; 6];
+        one[i % 6] = 1.0;
+        cats.push(one);
+    }
+    let smask = [1.0f32, 1.0, 0.0]; // include a padded slot
+    let mut p = toy_params(&shape, b, &mut rng);
+    let tau = 0.48;
+
+    let (rnn_g, series_g) = batch_grads(&shape, &ys, &cats, &smask, &p, tau);
+
+    // Padded slot: exactly zero gradients, full packed width.
+    assert_eq!(series_g[2].alpha_logit, 0.0);
+    assert_eq!(series_g[2].gamma2_logit, 0.0);
+    assert_eq!(series_g[2].log_s_init.len(), w);
+    assert!(series_g[2].log_s_init.iter().all(|v| *v == 0.0));
+
+    let alpha_g: Vec<f32> = series_g.iter().map(|s| s.alpha_logit).collect();
+    let gamma_g: Vec<f32> = series_g.iter().map(|s| s.gamma_logit).collect();
+    let gamma2_g: Vec<f32> =
+        series_g.iter().map(|s| s.gamma2_logit).collect();
+    let log_s_g: Vec<f32> =
+        series_g.iter().flat_map(|s| s.log_s_init.clone()).collect();
+
+    let groups: Vec<(&str, Vec<f32>)> = vec![
+        ("cells.0.w", rnn_g.cells[0].0.clone()),
+        ("cells.3.w", rnn_g.cells[3].0.clone()),
+        ("dense_w", rnn_g.dense_w.clone()),
+        ("out_w", rnn_g.out_w.clone()),
+        ("out_b", rnn_g.out_b.clone()),
+        ("alpha", alpha_g),
+        ("gamma", gamma_g),
+        ("gamma2", gamma2_g),
+        ("log_s", log_s_g.clone()),
+    ];
+    for (name, analytic) in &groups {
+        for _ in 0..2 {
+            check_direction(&shape, &ys, &cats, &smask, &mut p, tau, name,
+                            analytic, &mut rng);
+        }
+    }
+    // The two packed seasonality blocks, each in isolation.
+    for _ in 0..2 {
+        check_direction_masked(&shape, &ys, &cats, &smask, &mut p, tau,
+                               "log_s", "log_s[S1 block]", &log_s_g,
+                               &|j| j % w < s1, &mut rng);
+        check_direction_masked(&shape, &ys, &cats, &smask, &mut p, tau,
+                               "log_s", "log_s[S2 block]", &log_s_g,
+                               &|j| j % w >= s1, &mut rng);
+    }
 }

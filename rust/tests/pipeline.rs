@@ -2,9 +2,10 @@
 //! corpus → primer → train step → evaluation → checkpoint → serving.
 //!
 //! Everything here runs on the pure-Rust [`NativeBackend`] — no
-//! artifacts, no XLA, stock `cargo test`. The §8.2 dual-seasonality
-//! (hourly) and §8.4 penalty variants are PJRT-artifact-only and are
-//! exercised by the benches when that backend is selected.
+//! artifacts, no XLA, stock `cargo test` — including the §8.2 hourly
+//! dual-seasonality (24h×168h) model. Only the §8.4 penalty variants
+//! remain PJRT-artifact-only (exercised by the feature-gated module
+//! below when artifacts are present).
 
 use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{checkpoint, EvalSplit, Trainer};
@@ -261,14 +262,41 @@ fn daily_extension_trains() {
 }
 
 #[test]
-fn dual_seasonality_requires_pjrt_backend() {
-    // §8.2 hourly is artifact-only: the native manifest must reject it
-    // with a name-lookup error rather than producing wrong numbers.
+fn hourly_dual_seasonality_trains_natively() {
+    // §8.2: the hourly 24h×168h dual-seasonality model now runs on the
+    // pure-Rust backend end-to-end — primer (dual decomposition) →
+    // train_step (coupled ES backward, gamma2 + packed [24|168] leaves)
+    // → evaluation → refit forecasts — with no `--features pjrt`.
     let backend = NativeBackend::new();
     let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
-    let tc = TrainConfig { epochs: 1, batch_size: 4, ..Default::default() };
-    let err = Trainer::new(&backend, Frequency::Hourly, &corpus, tc);
-    assert!(err.is_err(), "hourly must not silently run on native");
+    let tc = TrainConfig { epochs: 2, batch_size: 4, patience: 50,
+                           ..Default::default() };
+    let mut trainer =
+        Trainer::new(&backend, Frequency::Hourly, &corpus, tc).unwrap();
+    assert!(trainer.series_count() >= 2);
+    // 192-wide packed seasonality + gamma2 present in the store.
+    let (_, _, s) = trainer.store.series_params(0);
+    assert_eq!(s.len(), 192);
+
+    let report = trainer.train(false).unwrap();
+    assert_eq!(report.epochs_run, 2);
+    assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+
+    let val = trainer.evaluate(EvalSplit::Validation).unwrap();
+    let test = trainer.evaluate(EvalSplit::Test).unwrap();
+    for r in [&val, &test] {
+        assert!(r.smape.is_finite() && r.smape > 0.0 && r.smape < 200.0);
+        assert!(r.mase.is_finite() && r.mase > 0.0);
+        assert_eq!(r.count, trainer.series_count());
+    }
+    // Refit forecasts (phase-rotated per seasonal component: the H = 48
+    // shift is 0 mod 24 but 48 mod 168) are positive and finite.
+    let fcs = trainer.forecasts(true).unwrap();
+    assert_eq!(fcs.len(), trainer.series_count());
+    for fc in &fcs {
+        assert_eq!(fc.len(), 48);
+        assert!(fc.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
 }
 
 #[test]
