@@ -1,13 +1,18 @@
 //! Micro-benchmarks of the L3 hot path: where does a training step's
-//! wall-clock go? Feeds the §Perf optimization log in EXPERIMENTS.md.
+//! wall-clock go? Feeds the §Perf optimization log in EXPERIMENTS.md and
+//! the CI perf gate (`scripts/bench_gate.sh`).
 //!
-//! Cases:
-//!   * batch assembly (host tensor packing)          — pure Rust
-//!   * store gather / scatter                        — pure Rust
-//!   * train_step execute (end-to-end via PJRT)      — XLA compute
-//!   * predict execute                               — XLA compute
-//!   * classical primer                              — pure Rust
-//!   * forecast-service single-request round trip    — threading + XLA
+//! Sections:
+//!   * scalar vs. lane-vectorized train step, per Table-1 frequency —
+//!     the PR-3 SIMD speedup trajectory; emitted as BENCH_3.json when
+//!     `FAST_ESRNN_BENCH_JSON=<path>` is set
+//!   * batch assembly / store gather / primer / end-to-end train and
+//!     predict on the default backend (skipped in quick mode)
+//!
+//! Env:
+//!   FAST_ESRNN_QUICK=1        — CI mode: fewer steps, smaller batches,
+//!                               kernel comparison only
+//!   FAST_ESRNN_BENCH_JSON=p   — write the kernel-comparison summary to p
 //!
 //! Run with: `cargo bench --bench micro_hotpath`
 
@@ -15,18 +20,123 @@ use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{Batcher, Trainer};
 use fast_esrnn::data::{generate, GenOptions};
 use fast_esrnn::hw;
-use fast_esrnn::runtime::{default_backend, Backend};
-use fast_esrnn::util::bench::{bench, header};
+use fast_esrnn::runtime::{default_backend, Backend, ComputeMode,
+                          NativeBackend};
+use fast_esrnn::util::bench::{bench, fmt_secs, header};
+use fast_esrnn::util::json::Json;
+
+/// Largest manifest batch size ≤ both `cap` and the series count.
+fn pick_batch(n_series: usize, cap: usize) -> usize {
+    let mut b = 1usize;
+    while b * 2 <= n_series.min(cap) {
+        b *= 2;
+    }
+    b
+}
+
+/// Median seconds per train step for one backend mode.
+fn time_train_step(backend: &NativeBackend, freq: Frequency, corpus: &fast_esrnn::data::Corpus,
+                   b: usize, warmup: usize, iters: usize)
+                   -> anyhow::Result<f64> {
+    let tc = TrainConfig { batch_size: b, epochs: 1, ..Default::default() };
+    let mut trainer = Trainer::new(backend, freq, corpus, tc)?;
+    let n = trainer.series_count();
+    let mut sched = Batcher::new(n, b, 7);
+    let batch = sched.epoch().remove(0);
+    let st = bench("step", warmup, iters, || {
+        trainer.train_step_batch(&batch).unwrap();
+    });
+    Ok(st.median)
+}
 
 fn main() -> anyhow::Result<()> {
-    let backend = default_backend()?;
+    let quick = std::env::var("FAST_ESRNN_QUICK").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // scale 50 keeps every frequency populated (hourly: 9 series — one
+    // full lane group) without making trainer setup dominate.
+    let corpus = generate(&GenOptions { scale: 50, ..Default::default() });
+
+    // ---- scalar vs. lane-vectorized train step, per frequency ----
+    let cap = if quick { 16 } else { 64 };
+    // Quick mode still takes the median of 5 timed steps: the gate in CI
+    // hard-fails on this number, and a median-of-2 would let one
+    // noisy-neighbor stall on a shared runner flip the verdict.
+    let (warmup, iters) = if quick { (1, 5) } else { (2, 8) };
+    println!("== lane-vectorized vs scalar native train step ==");
+    println!("{} threads | batch cap {cap} | {iters} timed steps\n", threads);
+    println!("{:<10} {:>6} {:>14} {:>14} {:>9}",
+             "freq", "batch", "scalar/step", "lanes/step", "speedup");
+    let freqs = [Frequency::Yearly, Frequency::Quarterly, Frequency::Monthly,
+                 Frequency::Daily, Frequency::Hourly];
+    let scalar_backend =
+        NativeBackend::with_threads_mode(threads, ComputeMode::Scalar);
+    let lane_backend =
+        NativeBackend::with_threads_mode(threads, ComputeMode::Lanes);
+    let mut freq_rows: Vec<(&'static str, usize, f64, f64, f64)> = Vec::new();
+    for freq in freqs {
+        // Probe the series count cheaply via a b=1 trainer.
+        let probe = Trainer::new(&scalar_backend, freq, &corpus,
+                                 TrainConfig { batch_size: 1, epochs: 1,
+                                               ..Default::default() })?;
+        let b = pick_batch(probe.series_count(), cap);
+        drop(probe);
+        let scalar_s =
+            time_train_step(&scalar_backend, freq, &corpus, b, warmup, iters)?;
+        let lanes_s =
+            time_train_step(&lane_backend, freq, &corpus, b, warmup, iters)?;
+        let speedup = scalar_s / lanes_s;
+        println!("{:<10} {:>6} {:>14} {:>14} {:>8.2}x", freq.name(), b,
+                 fmt_secs(scalar_s), fmt_secs(lanes_s), speedup);
+        freq_rows.push((freq.name(), b, scalar_s, lanes_s, speedup));
+    }
+    let (best_freq, _, _, _, best) = freq_rows
+        .iter()
+        .copied()
+        .max_by(|a, b| a.4.partial_cmp(&b.4).unwrap())
+        .unwrap();
+    println!("\nmax speedup: {best:.2}x ({best_freq})");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH_JSON") {
+        let freq_objs: Vec<(&str, Json)> = freq_rows
+            .iter()
+            .map(|(name, b, sc, la, sp)| {
+                (*name,
+                 Json::obj(vec![
+                     ("batch", Json::num(*b as f64)),
+                     ("scalar_ns_per_step", Json::num(sc * 1e9)),
+                     ("lanes_ns_per_step", Json::num(la * 1e9)),
+                     ("speedup", Json::num(*sp)),
+                 ]))
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::str("micro_hotpath")),
+            ("quick", Json::Bool(quick)),
+            ("threads", Json::num(threads as f64)),
+            ("frequencies", Json::obj(freq_objs)),
+            ("max_speedup", Json::num(best)),
+            ("max_speedup_freq", Json::str(best_freq)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+    if quick {
+        return Ok(());
+    }
+
+    // ---- legacy hot-path cases on the default backend ----
+    // Regenerated at the historical scale (100) so these rows stay
+    // comparable with previously logged EXPERIMENTS.md numbers.
     let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let backend = default_backend()?;
     let freq = Frequency::Quarterly;
     let b = 64usize;
     let tc = TrainConfig { batch_size: b, ..Default::default() };
     let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
     let n = trainer.series_count();
-    println!("{} | quarterly, {n} series, batch {b}\n\n{}",
+    println!("\n{} | quarterly, {n} series, batch {b}\n\n{}",
              backend.platform(), header());
 
     let mut sched = Batcher::new(n, b, 3);

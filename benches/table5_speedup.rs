@@ -9,7 +9,8 @@
 //! vectorization, growing with batch size) is the reproduced claim.
 //!
 //! Run with: `cargo bench --bench table5_speedup`
-//! Env: FAST_ESRNN_STEPS (timed steps per config, default 6).
+//! Env: FAST_ESRNN_STEPS (timed steps per config, default 6);
+//!      FAST_ESRNN_QUICK=1 (CI mode: batch ladder {1, 8, 64}, 2 steps).
 
 use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{Batcher, Trainer};
@@ -22,7 +23,8 @@ fn env_usize(key: &str, default: usize) -> usize {
 }
 
 fn main() -> anyhow::Result<()> {
-    let steps = env_usize("FAST_ESRNN_STEPS", 6);
+    let quick = std::env::var("FAST_ESRNN_QUICK").is_ok();
+    let steps = env_usize("FAST_ESRNN_STEPS", if quick { 2 } else { 6 });
     let backend = default_backend()?;
     println!("backend: {} | {} timed steps per config\n",
              backend.platform(), steps);
@@ -35,9 +37,14 @@ fn main() -> anyhow::Result<()> {
              "speedup");
 
     for freq in [Frequency::Quarterly, Frequency::Monthly, Frequency::Yearly] {
-        let batches = backend
+        let mut batches = backend
             .manifest()
             .available_batches(freq.name(), "train_step");
+        if quick {
+            // CI mode: endpoints of the ladder are enough to show the
+            // orders-of-magnitude vectorization gain.
+            batches.retain(|b| [1usize, 8, 64].contains(b));
+        }
         let mut per_series_b1: Option<f64> = None;
         for &b in &batches {
             let tc = TrainConfig {

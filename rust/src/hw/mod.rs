@@ -10,6 +10,7 @@
 //!    (`es_smoothing`), used by property tests to cross-check the artifact
 //!    numerics and by the classical baselines.
 
+use crate::simd::{Lanes, LANES};
 use crate::util::rng::Rng;
 
 /// Inverse sigmoid.
@@ -169,6 +170,77 @@ pub fn es_dual_filter(y: &[f32], alpha: f32, gamma1: f32, gamma2: f32,
         seas1.push(gamma1 * y[t] / (l_t * s2_t) + (1.0 - gamma1) * s1_t);
         seas2.push(gamma2 * y[t] / (l_t * s1_t) + (1.0 - gamma2) * s2_t);
         levels.push(l_t);
+        l_prev = l_t;
+    }
+    (levels, seas1, seas2)
+}
+
+/// Lane-vectorized mirror of [`es_filter`]: one recurrence step updates
+/// [`LANES`] series at once.
+///
+/// Structure-of-arrays layout: `y` is `[C][LANES]` (`y[t*LANES + l]` is
+/// series `l` at time `t`), `s_init` is `[S][LANES]`; returns
+/// (levels `[C][LANES]`, seas `[(C+S)][LANES]`). `alpha`/`gamma` carry
+/// one smoothing coefficient per lane. The per-lane arithmetic sequence
+/// is identical to the scalar filter, so each lane matches [`es_filter`]
+/// on that series to f32 rounding.
+pub fn es_filter_lanes(y: &[f32], c: usize, alpha: Lanes, gamma: Lanes,
+                       s_init: &[f32], s: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(y.len(), c * LANES);
+    debug_assert_eq!(s_init.len(), s * LANES);
+    let one = Lanes::ONE;
+    let mut seas = vec![0.0f32; (c + s) * LANES];
+    seas[..s * LANES].copy_from_slice(s_init);
+    let mut levels = vec![0.0f32; c * LANES];
+    let mut l_prev = Lanes::ZERO;
+    for t in 0..c {
+        let y_t = Lanes::load(&y[t * LANES..]);
+        let s_t = Lanes::load(&seas[t * LANES..]);
+        let l_t = if t == 0 {
+            y_t / s_t
+        } else {
+            alpha * y_t / s_t + (one - alpha) * l_prev
+        };
+        let s_next = gamma * y_t / l_t + (one - gamma) * s_t;
+        s_next.store(&mut seas[(t + s) * LANES..]);
+        l_t.store(&mut levels[t * LANES..]);
+        l_prev = l_t;
+    }
+    (levels, seas)
+}
+
+/// Lane-vectorized mirror of [`es_dual_filter`] (§8.2 coupled 24h×168h
+/// recurrence), same SoA conventions as [`es_filter_lanes`]. Returns
+/// (levels `[C][LANES]`, seas1 `[(C+S1)][LANES]`, seas2 `[(C+S2)][LANES]`).
+pub fn es_dual_filter_lanes(y: &[f32], c: usize, alpha: Lanes, gamma1: Lanes,
+                            gamma2: Lanes, s1_init: &[f32], s1: usize,
+                            s2_init: &[f32], s2: usize)
+                            -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(y.len(), c * LANES);
+    debug_assert_eq!(s1_init.len(), s1 * LANES);
+    debug_assert_eq!(s2_init.len(), s2 * LANES);
+    let one = Lanes::ONE;
+    let mut seas1 = vec![0.0f32; (c + s1) * LANES];
+    seas1[..s1 * LANES].copy_from_slice(s1_init);
+    let mut seas2 = vec![0.0f32; (c + s2) * LANES];
+    seas2[..s2 * LANES].copy_from_slice(s2_init);
+    let mut levels = vec![0.0f32; c * LANES];
+    let mut l_prev = Lanes::ZERO;
+    for t in 0..c {
+        let y_t = Lanes::load(&y[t * LANES..]);
+        let s1_t = Lanes::load(&seas1[t * LANES..]);
+        let s2_t = Lanes::load(&seas2[t * LANES..]);
+        let denom = s1_t * s2_t;
+        let l_t = if t == 0 {
+            y_t / denom
+        } else {
+            alpha * y_t / denom + (one - alpha) * l_prev
+        };
+        (gamma1 * y_t / (l_t * s2_t) + (one - gamma1) * s1_t)
+            .store(&mut seas1[(t + s1) * LANES..]);
+        (gamma2 * y_t / (l_t * s1_t) + (one - gamma2) * s2_t)
+            .store(&mut seas2[(t + s2) * LANES..]);
+        l_t.store(&mut levels[t * LANES..]);
         l_prev = l_t;
     }
     (levels, seas1, seas2)
@@ -371,6 +443,118 @@ mod tests {
         let q = primer_jittered(&y, 4, 0, &mut rng);
         assert_eq!(q.log_s_init.len(), 4);
         assert_eq!(q.gamma2_logit, logit(INIT_GAMMA));
+    }
+
+    /// Transpose `n` per-series rows (each length `c`) into `[c][LANES]`
+    /// SoA, padding missing lanes with 1.0 — test-local marshalling.
+    fn to_soa(rows: &[Vec<f32>], c: usize) -> Vec<f32> {
+        let mut soa = vec![1.0f32; c * LANES];
+        for (l, row) in rows.iter().enumerate() {
+            for t in 0..c {
+                soa[t * LANES + l] = row[t];
+            }
+        }
+        soa
+    }
+
+    #[test]
+    fn es_filter_lanes_matches_scalar_per_lane() {
+        let mut rng = Rng::new(31);
+        let s = 4usize;
+        let c = 40usize;
+        let mut ys = Vec::new();
+        let mut inits = Vec::new();
+        let mut alpha = [0.0f32; LANES];
+        let mut gamma = [0.0f32; LANES];
+        for l in 0..LANES {
+            ys.push((0..c)
+                .map(|t| {
+                    (50.0 + t as f32)
+                        * (1.0 + 0.2 * ((t % s) as f32 - 1.5))
+                        * rng.uniform(0.9, 1.1) as f32
+                })
+                .collect::<Vec<f32>>());
+            inits.push((0..s)
+                .map(|_| rng.uniform(0.7, 1.4) as f32)
+                .collect::<Vec<f32>>());
+            alpha[l] = rng.uniform(0.05, 0.9) as f32;
+            gamma[l] = rng.uniform(0.0, 0.5) as f32;
+        }
+        let y_soa = to_soa(&ys, c);
+        let s_soa = to_soa(&inits, s);
+        let (levels, seas) = es_filter_lanes(&y_soa, c, Lanes(alpha),
+                                             Lanes(gamma), &s_soa, s);
+        for l in 0..LANES {
+            let want = es_filter(&ys[l], alpha[l], gamma[l], &inits[l]);
+            for t in 0..c {
+                let got = levels[t * LANES + l];
+                assert!((got - want.levels[t]).abs()
+                        <= 1e-5 * want.levels[t].abs().max(1.0),
+                        "lane {l} level[{t}]: {got} vs {}", want.levels[t]);
+            }
+            for t in 0..c + s {
+                let got = seas[t * LANES + l];
+                assert!((got - want.seas[t]).abs() <= 1e-5,
+                        "lane {l} seas[{t}]: {got} vs {}", want.seas[t]);
+            }
+        }
+    }
+
+    #[test]
+    fn es_dual_filter_lanes_matches_scalar_per_lane() {
+        let mut rng = Rng::new(37);
+        let (s1, s2) = (3usize, 5usize);
+        let c = 45usize;
+        let mut ys = Vec::new();
+        let mut i1 = Vec::new();
+        let mut i2 = Vec::new();
+        let mut alpha = [0.0f32; LANES];
+        let mut g1 = [0.0f32; LANES];
+        let mut g2 = [0.0f32; LANES];
+        for l in 0..LANES {
+            ys.push((0..c)
+                .map(|t| {
+                    200.0
+                        * (1.0 + 0.15 * ((t % s1) as f32 - 1.0))
+                        * (1.0 + 0.1 * ((t % s2) as f32 - 2.0))
+                        * rng.uniform(0.95, 1.05) as f32
+                })
+                .collect::<Vec<f32>>());
+            i1.push((0..s1)
+                .map(|_| rng.uniform(0.8, 1.2) as f32)
+                .collect::<Vec<f32>>());
+            i2.push((0..s2)
+                .map(|_| rng.uniform(0.8, 1.2) as f32)
+                .collect::<Vec<f32>>());
+            alpha[l] = rng.uniform(0.05, 0.9) as f32;
+            g1[l] = rng.uniform(0.0, 0.5) as f32;
+            g2[l] = rng.uniform(0.0, 0.5) as f32;
+        }
+        let y_soa = to_soa(&ys, c);
+        let s1_soa = to_soa(&i1, s1);
+        let s2_soa = to_soa(&i2, s2);
+        let (levels, e1, e2) = es_dual_filter_lanes(
+            &y_soa, c, Lanes(alpha), Lanes(g1), Lanes(g2), &s1_soa, s1,
+            &s2_soa, s2);
+        for l in 0..LANES {
+            let (wl, w1, w2) = es_dual_filter(&ys[l], alpha[l], g1[l],
+                                              g2[l], &i1[l], &i2[l]);
+            for t in 0..c {
+                let got = levels[t * LANES + l];
+                assert!((got - wl[t]).abs() <= 1e-5 * wl[t].abs().max(1.0),
+                        "lane {l} level[{t}]: {got} vs {}", wl[t]);
+            }
+            for t in 0..c + s1 {
+                let got = e1[t * LANES + l];
+                assert!((got - w1[t]).abs() <= 1e-5,
+                        "lane {l} seas1[{t}]: {got} vs {}", w1[t]);
+            }
+            for t in 0..c + s2 {
+                let got = e2[t * LANES + l];
+                assert!((got - w2[t]).abs() <= 1e-5,
+                        "lane {l} seas2[{t}]: {got} vs {}", w2[t]);
+            }
+        }
     }
 
     #[test]

@@ -29,5 +29,6 @@ pub mod forecast;
 pub mod hw;
 pub mod metrics;
 pub mod runtime;
+pub mod simd;
 pub mod telemetry;
 pub mod util;

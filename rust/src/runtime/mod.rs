@@ -15,7 +15,7 @@ pub mod pjrt;
 
 pub use backend::{execute_with_maps, Backend, BackendStats, HostTensor};
 pub use manifest::{FreqManifest, Manifest, ProgramSpec, TensorSpec};
-pub use native::NativeBackend;
+pub use native::{ComputeMode, NativeBackend};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 

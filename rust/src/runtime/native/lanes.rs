@@ -1,0 +1,971 @@
+//! Lane-vectorized (structure-of-arrays) batch kernels — the paper's §5
+//! vectorization step executed natively.
+//!
+//! The scalar compute core ([`super::model`]) runs one series at a time;
+//! this module runs [`LANES`] series per recurrence step. A batch is
+//! marshalled into [`LaneGroup`]s: every per-series value becomes one
+//! lane of an SoA buffer (`buf[t * LANES + l]` is series `l` at index
+//! `t`), so the ES filter, the window log-normalization, the
+//! dilated-LSTM cell, the pinball loss, the hand-written backward and
+//! the Adam leaf updates all execute as 8-wide [`Lanes`] arithmetic with
+//! shared RNN weights broadcast across lanes.
+//!
+//! Conventions:
+//!
+//! * **Tail handling** — a batch that does not fill the last group (or a
+//!   masked-out slot anywhere) gets *padding lanes*: `y ≡ 1.0`, zero
+//!   logits, zero `log_s`, lane mask 0. Padding forwards to finite values
+//!   and receives exactly-zero loss seeds, so its gradients are exact
+//!   zeros and its outputs are simply never copied out. Flat leaf
+//!   updates ([`adam_update_lanes`]) instead use a scalar tail for the
+//!   `len % LANES` remainder.
+//! * **Parity** — each lane executes the same floating-point operation
+//!   sequence as the scalar core, except that shared-weight reductions
+//!   sum 8 series at once and the transcendentals use the fast
+//!   [`Lanes`] approximations (≤ 3e-7). `rust/tests/simd_parity.rs`
+//!   property-tests every kernel here against the scalar oracle,
+//!   including ragged tails and the §8.2 dual-seasonality path.
+//! * **Determinism** — lane order inside a group and group order inside
+//!   a batch are fixed, so a given thread count always reproduces the
+//!   same bits; across thread counts only the f32 association of the
+//!   shared-weight chunk merge differs (last-ulp effects, same as the
+//!   scalar path).
+
+use crate::hw;
+use crate::simd::{add_assign_slice, Lanes, LANES};
+
+use super::model::{self, RnnGrads, RnnView, Shape};
+
+/// One lane group's marshalled inputs: [`LANES`] series in SoA layout.
+pub struct LaneGroup {
+    /// First batch slot this group covers.
+    pub start: usize,
+    /// Real batch slots in this group (1..=LANES); lanes ≥ `fill` are
+    /// padding.
+    pub fill: usize,
+    /// Series values, `[C][LANES]` (padding/masked lanes hold 1.0).
+    pub y: Vec<f32>,
+    /// One-hot categories, `[6][LANES]`.
+    pub cat: Vec<f32>,
+    pub alpha_logit: Lanes,
+    pub gamma_logit: Lanes,
+    pub gamma2_logit: Lanes,
+    /// Packed `[S1 | S2]` log seasonality inits, `[s_total][LANES]`.
+    pub log_s: Vec<f32>,
+    /// Per-lane series mask (0.0 for padding and masked-out slots).
+    pub mask: Lanes,
+}
+
+/// Split a batch of `b` AoS series rows into `ceil(b / LANES)` SoA lane
+/// groups. `y` is `[b, C]`, `cat` `[b, 6]`, `log_s` `[b, s_total]`;
+/// `gamma2_logit` may be empty for single-seasonality configs. A slot is
+/// *live* iff it exists (`i < b`) and its `mask` entry (when given) is
+/// non-zero; dead slots become padding lanes (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn marshal_groups(shape: &Shape, b: usize, y: &[f32], cat: &[f32],
+                      mask: Option<&[f32]>, alpha_logit: &[f32],
+                      gamma_logit: &[f32], gamma2_logit: &[f32],
+                      log_s: &[f32]) -> Vec<LaneGroup> {
+    let c = shape.c;
+    let w = shape.s_total();
+    let n_groups = b.div_ceil(LANES);
+    let mut groups = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let start = g * LANES;
+        let fill = LANES.min(b - start);
+        let mut gy = vec![1.0f32; c * LANES];
+        let mut gcat = vec![0.0f32; 6 * LANES];
+        let mut ga = [0.0f32; LANES];
+        let mut gg = [0.0f32; LANES];
+        let mut gg2 = [0.0f32; LANES];
+        let mut gls = vec![0.0f32; w * LANES];
+        let mut gm = [0.0f32; LANES];
+        for l in 0..fill {
+            let i = start + l;
+            let m = mask.map_or(1.0, |mv| mv[i]);
+            if m == 0.0 {
+                // Masked slot: keep the benign padding values so the
+                // forward stays finite; zero seeds then make every
+                // gradient for this lane exactly zero.
+                continue;
+            }
+            gm[l] = m;
+            for t in 0..c {
+                gy[t * LANES + l] = y[i * c + t];
+            }
+            for j in 0..6 {
+                gcat[j * LANES + l] = cat[i * 6 + j];
+            }
+            ga[l] = alpha_logit[i];
+            gg[l] = gamma_logit[i];
+            if !gamma2_logit.is_empty() {
+                gg2[l] = gamma2_logit[i];
+            }
+            for k in 0..w {
+                gls[k * LANES + l] = log_s[i * w + k];
+            }
+        }
+        groups.push(LaneGroup {
+            start,
+            fill,
+            y: gy,
+            cat: gcat,
+            alpha_logit: Lanes(ga),
+            gamma_logit: Lanes(gg),
+            gamma2_logit: Lanes(gg2),
+            log_s: gls,
+            mask: Lanes(gm),
+        });
+    }
+    groups
+}
+
+/// `out[j] += Σ_i x[i] · w[(row_offset+i), j]` with `x` SoA `[n_rows][L]`
+/// and `out` SoA `[cols][L]` — the shared weight is broadcast across
+/// lanes. Row-major `w` is streamed once (i outer, j inner), matching
+/// the scalar accumulation order.
+fn vec_mat_acc_lanes(x: &[f32], n_rows: usize, w: &[f32], row_offset: usize,
+                     cols: usize, out: &mut [f32]) {
+    for i in 0..n_rows {
+        let xi = Lanes::load(&x[i * LANES..]);
+        let row = &w[(row_offset + i) * cols..(row_offset + i + 1) * cols];
+        for (j, &wv) in row.iter().enumerate() {
+            (Lanes::load(&out[j * LANES..]) + xi * Lanes::splat(wv))
+                .store(&mut out[j * LANES..]);
+        }
+    }
+}
+
+/// `gw[(row_offset+i), j] += Σ_l x[i][l] · dz[j][l]` — the shared-weight
+/// gradient is the horizontal lane sum of the per-series outer products
+/// (fixed lane order, so thread-count independent).
+fn outer_acc_lanes(x: &[f32], n_rows: usize, dz: &[f32], row_offset: usize,
+                   cols: usize, gw: &mut [f32]) {
+    for i in 0..n_rows {
+        let xi = Lanes::load(&x[i * LANES..]);
+        let row = &mut gw[(row_offset + i) * cols..(row_offset + i + 1) * cols];
+        for (j, g) in row.iter_mut().enumerate() {
+            *g += (xi * Lanes::load(&dz[j * LANES..])).sum();
+        }
+    }
+}
+
+/// `out[i] = Σ_j w[(row_offset+i), j] · dz[j]` (transpose mat-vec),
+/// `dz`/`out` SoA.
+fn mat_t_vec_lanes(w: &[f32], dz: &[f32], row_offset: usize, rows: usize,
+                   cols: usize, out: &mut [f32]) {
+    for i in 0..rows {
+        let row = &w[(row_offset + i) * cols..(row_offset + i + 1) * cols];
+        let mut acc = Lanes::ZERO;
+        for (j, &wv) in row.iter().enumerate() {
+            acc += Lanes::splat(wv) * Lanes::load(&dz[j * LANES..]);
+        }
+        acc.store(&mut out[i * LANES..]);
+    }
+}
+
+/// Broadcast a shared bias vector into an SoA `[b.len()][LANES]` buffer.
+fn broadcast_rows(b: &[f32], out: &mut [f32]) {
+    for (k, &v) in b.iter().enumerate() {
+        Lanes::splat(v).store(&mut out[k * LANES..]);
+    }
+}
+
+/// Elementwise exp over an SoA buffer (length must be a LANES multiple).
+fn exp_slice(buf: &mut [f32]) {
+    for chunk in buf.chunks_exact_mut(LANES) {
+        Lanes::load(chunk).exp().store(chunk);
+    }
+}
+
+/// Clamped log-normalization: returns `(ln(max(u, EPS)), gate)` with
+/// gate 1.0 where `u > EPS` (mirror of the scalar `x_ok` bookkeeping —
+/// the gradient is gated by multiply instead of a branch).
+fn ln_gate(u: Lanes) -> (Lanes, Lanes) {
+    let eps = Lanes::splat(model::EPS);
+    (u.max(eps).ln(), u.gt_gate(eps))
+}
+
+/// Everything the lane forward records for one group: outputs plus the
+/// SoA activation tape the backward replays. Field meanings mirror
+/// [`model::Forward`]; every buffer gains a trailing `[LANES]` axis.
+pub struct ForwardLanes {
+    /// `[C][L]`.
+    pub levels: Vec<f32>,
+    /// `[C+S1][L]`.
+    pub seas: Vec<f32>,
+    /// `[C+S2][L]` (empty for single configs).
+    pub seas2: Vec<f32>,
+    /// `[C+H][L]` combined multiplicative seasonality.
+    pub seas_ext: Vec<f32>,
+    pub alpha: Lanes,
+    pub gamma: Lanes,
+    pub gamma2: Lanes,
+    /// `[S1][L]`.
+    pub s_init: Vec<f32>,
+    /// `[S2][L]`.
+    pub s2_init: Vec<f32>,
+    /// `[P][in_w][L]` log-normalized input windows.
+    pub x: Vec<f32>,
+    /// `[P][H][L]` log-normalized targets (empty unless `want_targets`).
+    pub z: Vec<f32>,
+    /// 1.0/0.0 gates where the log's EPS clamp did NOT fire.
+    pub x_ok: Vec<f32>,
+    pub z_ok: Vec<f32>,
+    /// `[P][H][L]` head output in normalized log space.
+    pub out: Vec<f32>,
+    // ---- tape (indexed [p][layer][k][lane], flattened) ----
+    x_in: Vec<f32>,
+    h_prev: Vec<f32>,
+    c_prev: Vec<f32>,
+    si: Vec<f32>,
+    sf: Vec<f32>,
+    tg: Vec<f32>,
+    so: Vec<f32>,
+    tanh_c: Vec<f32>,
+    h_seq: Vec<f32>,
+    act: Vec<f32>,
+    din_max: usize,
+}
+
+/// Full forward pass for one lane group (mirror of
+/// [`model::forward_series`], all [`LANES`] series advancing together).
+pub fn forward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
+                     want_targets: bool) -> ForwardLanes {
+    let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
+    let s2 = shape.s2;
+    let dual = shape.dual();
+    let hid = shape.hidden;
+    let n_l = shape.n_layers();
+    let din_max = shape.din0.max(hid);
+
+    let alpha = grp.alpha_logit.sigmoid();
+    let (gamma, s_init): (Lanes, Vec<f32>) = if shape.seasonal {
+        let mut si = grp.log_s[..s * LANES].to_vec();
+        exp_slice(&mut si);
+        (grp.gamma_logit.sigmoid(), si)
+    } else {
+        (Lanes::ZERO, vec![1.0; s * LANES])
+    };
+    let (gamma2, s2_init): (Lanes, Vec<f32>) = if dual {
+        let mut si = grp.log_s[s * LANES..(s + s2) * LANES].to_vec();
+        exp_slice(&mut si);
+        (grp.gamma2_logit.sigmoid(), si)
+    } else {
+        (Lanes::ZERO, Vec::new())
+    };
+
+    // 1. ES recurrence, one lane per series.
+    let (levels, seas, seas2) = if dual {
+        hw::es_dual_filter_lanes(&grp.y[..c * LANES], c, alpha, gamma,
+                                 gamma2, &s_init, s, &s2_init, s2)
+    } else {
+        let (levels, seas) = hw::es_filter_lanes(&grp.y[..c * LANES], c,
+                                                 alpha, gamma, &s_init, s);
+        (levels, seas, Vec::new())
+    };
+
+    // 2. Seasonality extension past C (per-component tail tiling).
+    let mut seas_ext = vec![0.0f32; (c + h) * LANES];
+    if dual {
+        for t in 0..c {
+            (Lanes::load(&seas[t * LANES..])
+             * Lanes::load(&seas2[t * LANES..]))
+                .store(&mut seas_ext[t * LANES..]);
+        }
+        for k in 0..h {
+            (Lanes::load(&seas[(c + (k % s)) * LANES..])
+             * Lanes::load(&seas2[(c + (k % s2)) * LANES..]))
+                .store(&mut seas_ext[(c + k) * LANES..]);
+        }
+    } else {
+        seas_ext[..c * LANES].copy_from_slice(&seas[..c * LANES]);
+        for k in 0..h {
+            Lanes::load(&seas[(c + (k % s)) * LANES..])
+                .store(&mut seas_ext[(c + k) * LANES..]);
+        }
+    }
+
+    // 3. Log-normalized windows and (optionally) targets.
+    let mut x = vec![0.0f32; p_n * in_w * LANES];
+    let mut x_ok = vec![0.0f32; p_n * in_w * LANES];
+    let (mut z, mut z_ok) = if want_targets {
+        (vec![0.0f32; p_n * h * LANES], vec![0.0f32; p_n * h * LANES])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    for p in 0..p_n {
+        let lvl = Lanes::load(&levels[(p + in_w - 1) * LANES..]);
+        for j in 0..in_w {
+            let u = Lanes::load(&grp.y[(p + j) * LANES..])
+                / (lvl * Lanes::load(&seas_ext[(p + j) * LANES..]));
+            let (xv, ok) = ln_gate(u);
+            xv.store(&mut x[(p * in_w + j) * LANES..]);
+            ok.store(&mut x_ok[(p * in_w + j) * LANES..]);
+        }
+        if want_targets {
+            for k in 0..h {
+                let ty = (p + in_w + k).min(c - 1);
+                let u = Lanes::load(&grp.y[ty * LANES..])
+                    / (lvl * Lanes::load(&seas_ext[(p + in_w + k) * LANES..]));
+                let (zv, ok) = ln_gate(u);
+                zv.store(&mut z[(p * h + k) * LANES..]);
+                ok.store(&mut z_ok[(p * h + k) * LANES..]);
+            }
+        }
+    }
+
+    // 4. Dilated-residual LSTM stack, ring buffers now SoA per slot.
+    let mut h_ring: Vec<Vec<f32>> =
+        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
+    let mut c_ring: Vec<Vec<f32>> =
+        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
+
+    let tape_len = p_n * n_l * hid * LANES;
+    let mut fwd = ForwardLanes {
+        levels,
+        seas,
+        seas2,
+        seas_ext,
+        alpha,
+        gamma,
+        gamma2,
+        s_init,
+        s2_init,
+        x,
+        z,
+        x_ok,
+        z_ok,
+        out: vec![0.0; p_n * h * LANES],
+        x_in: vec![0.0; p_n * n_l * din_max * LANES],
+        h_prev: vec![0.0; tape_len],
+        c_prev: vec![0.0; tape_len],
+        si: vec![0.0; tape_len],
+        sf: vec![0.0; tape_len],
+        tg: vec![0.0; tape_len],
+        so: vec![0.0; tape_len],
+        tanh_c: vec![0.0; tape_len],
+        h_seq: vec![0.0; p_n * hid * LANES],
+        act: vec![0.0; p_n * hid * LANES],
+        din_max,
+    };
+
+    let mut zbuf = vec![0.0f32; 4 * hid * LANES];
+    let mut h_in = vec![0.0f32; din_max * LANES];
+    let mut block_in = vec![0.0f32; din_max * LANES];
+    let mut pre = vec![0.0f32; hid * LANES];
+    let mut head = vec![0.0f32; h * LANES];
+    for p in 0..p_n {
+        h_in[..in_w * LANES]
+            .copy_from_slice(&fwd.x[p * in_w * LANES..(p + 1) * in_w * LANES]);
+        h_in[in_w * LANES..shape.din0 * LANES].copy_from_slice(&grp.cat);
+        let mut cur_dim = shape.din0;
+
+        let mut li = 0usize;
+        for (bi, block) in shape.blocks.iter().enumerate() {
+            let block_dim = cur_dim;
+            block_in[..block_dim * LANES]
+                .copy_from_slice(&h_in[..block_dim * LANES]);
+            for &d in block {
+                let slot = p % d;
+                let din = shape.layer_din[li];
+                let (w, b) = rnn.cells[li];
+                let t = (p * n_l + li) * hid * LANES;
+                let ti = (p * n_l + li) * din_max * LANES;
+                let ring_at = slot * hid * LANES;
+                fwd.x_in[ti..ti + din * LANES]
+                    .copy_from_slice(&h_in[..din * LANES]);
+                fwd.h_prev[t..t + hid * LANES]
+                    .copy_from_slice(&h_ring[li][ring_at..ring_at + hid * LANES]);
+                fwd.c_prev[t..t + hid * LANES]
+                    .copy_from_slice(&c_ring[li][ring_at..ring_at + hid * LANES]);
+
+                broadcast_rows(b, &mut zbuf);
+                vec_mat_acc_lanes(&h_in, din, w, 0, 4 * hid, &mut zbuf);
+                vec_mat_acc_lanes(&fwd.h_prev[t..t + hid * LANES], hid, w,
+                                  din, 4 * hid, &mut zbuf);
+
+                // Gate order i, f, g, o; forget-gate bias +1.0 (ref.py).
+                for k in 0..hid {
+                    let si = Lanes::load(&zbuf[k * LANES..]).sigmoid();
+                    let sf = (Lanes::load(&zbuf[(hid + k) * LANES..])
+                              + Lanes::ONE)
+                        .sigmoid();
+                    let tg = Lanes::load(&zbuf[(2 * hid + k) * LANES..]).tanh();
+                    let so = Lanes::load(&zbuf[(3 * hid + k) * LANES..])
+                        .sigmoid();
+                    let c_prev = Lanes::load(&fwd.c_prev[t + k * LANES..]);
+                    let c_new = sf * c_prev + si * tg;
+                    let tanh_c = c_new.tanh();
+                    let h_new = so * tanh_c;
+                    si.store(&mut fwd.si[t + k * LANES..]);
+                    sf.store(&mut fwd.sf[t + k * LANES..]);
+                    tg.store(&mut fwd.tg[t + k * LANES..]);
+                    so.store(&mut fwd.so[t + k * LANES..]);
+                    tanh_c.store(&mut fwd.tanh_c[t + k * LANES..]);
+                    h_new.store(&mut h_ring[li][ring_at + k * LANES..]);
+                    c_new.store(&mut c_ring[li][ring_at + k * LANES..]);
+                    h_new.store(&mut h_in[k * LANES..]);
+                }
+                cur_dim = hid;
+                li += 1;
+            }
+            if bi > 0 {
+                // Residual connection over non-first blocks (Fig. 1).
+                add_assign_slice(&mut h_in[..hid * LANES],
+                                 &block_in[..hid * LANES]);
+            }
+        }
+        fwd.h_seq[p * hid * LANES..(p + 1) * hid * LANES]
+            .copy_from_slice(&h_in[..hid * LANES]);
+
+        // 5. Output head: tanh dense, then linear adapter to H.
+        broadcast_rows(rnn.dense_b, &mut pre);
+        vec_mat_acc_lanes(&h_in, hid, rnn.dense_w, 0, hid, &mut pre);
+        for k in 0..hid {
+            Lanes::load(&pre[k * LANES..])
+                .tanh()
+                .store(&mut fwd.act[(p * hid + k) * LANES..]);
+        }
+        broadcast_rows(rnn.out_b, &mut head);
+        vec_mat_acc_lanes(&fwd.act[p * hid * LANES..(p + 1) * hid * LANES],
+                          hid, rnn.out_w, 0, h, &mut head);
+        fwd.out[p * h * LANES..(p + 1) * h * LANES].copy_from_slice(&head);
+    }
+    fwd
+}
+
+/// Point forecasts from a completed lane forward, `[H][LANES]` SoA
+/// (mirror of [`model::forecast_from`]).
+pub fn forecast_from_lanes(shape: &Shape, fwd: &ForwardLanes) -> Vec<f32> {
+    let (c, h, p_n) = (shape.c, shape.h, shape.p);
+    let l_c = Lanes::load(&fwd.levels[(c - 1) * LANES..]);
+    let mut out = vec![0.0f32; h * LANES];
+    for k in 0..h {
+        (Lanes::load(&fwd.out[((p_n - 1) * h + k) * LANES..]).exp()
+         * l_c
+         * Lanes::load(&fwd.seas_ext[(c + k) * LANES..]))
+            .store(&mut out[k * LANES..]);
+    }
+    out
+}
+
+/// Pinball loss numerator plus `dout`/`dz` seeds for one lane group
+/// (mirror of [`model::pinball_seeds`]; `smask` carries the per-lane
+/// series masks, so padding lanes get exactly-zero seeds).
+pub fn pinball_seeds_lanes(shape: &Shape, fwd: &ForwardLanes, tau: f32,
+                           smask: Lanes, denom: f32)
+                           -> (f64, Vec<f32>, Vec<f32>) {
+    let (h, p_n) = (shape.h, shape.p);
+    let mut loss_num = 0.0f64;
+    let mut dout = vec![0.0f32; p_n * h * LANES];
+    let mut dz = vec![0.0f32; p_n * h * LANES];
+    if smask.0.iter().all(|v| *v == 0.0) {
+        return (0.0, dout, dz);
+    }
+    let tau_l = Lanes::splat(tau);
+    let wv = smask / Lanes::splat(denom);
+    let dout_ge = -tau_l * wv;
+    let dout_lt = (Lanes::ONE - tau_l) * wv;
+    let dz_ge = tau_l * wv;
+    let dz_lt = -dout_lt;
+    for p in 0..p_n.min(shape.valid_positions) {
+        for k in 0..h {
+            let idx = (p * h + k) * LANES;
+            let d = Lanes::load(&fwd.z[idx..]) - Lanes::load(&fwd.out[idx..]);
+            let per = (tau_l * d).max((tau_l - Lanes::ONE) * d);
+            let weighted = per * smask;
+            for l in 0..LANES {
+                loss_num += weighted.0[l] as f64;
+            }
+            d.select_ge_zero(dout_ge, dout_lt).store(&mut dout[idx..]);
+            d.select_ge_zero(dz_ge, dz_lt).store(&mut dz[idx..]);
+        }
+    }
+    (loss_num, dout, dz)
+}
+
+/// Per-lane Holt-Winters gradients for one group; `log_s_init` is SoA
+/// `[s_total][LANES]`. Padding lanes hold exact zeros.
+pub struct SeriesGradsLanes {
+    pub alpha_logit: Lanes,
+    pub gamma_logit: Lanes,
+    pub gamma2_logit: Lanes,
+    pub log_s_init: Vec<f32>,
+}
+
+impl SeriesGradsLanes {
+    /// All-zero gradients (`s_total` is the packed seasonality width).
+    pub fn zeros(s_total: usize) -> Self {
+        Self {
+            alpha_logit: Lanes::ZERO,
+            gamma_logit: Lanes::ZERO,
+            gamma2_logit: Lanes::ZERO,
+            log_s_init: vec![0.0; s_total * LANES],
+        }
+    }
+}
+
+/// Hand-written backward for one lane group (mirror of
+/// [`model::backward_series`]; see that function and DESIGN.md for the
+/// recurrence-ordering invariants, which are unchanged — lanes never
+/// exchange data except in the shared-weight reductions).
+pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
+                      fwd: &ForwardLanes, dout: &[f32], dz: &[f32],
+                      grads: &mut RnnGrads) -> SeriesGradsLanes {
+    let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
+    let s2 = shape.s2;
+    let dual = shape.dual();
+    let hid = shape.hidden;
+    let n_l = shape.n_layers();
+    let din_max = fwd.din_max;
+    let one = Lanes::ONE;
+
+    // ---- head backward, collecting dL/dh_seq ----
+    let mut dh_seq = vec![0.0f32; p_n * hid * LANES];
+    let mut dpre = vec![0.0f32; hid * LANES];
+    for p in 0..p_n {
+        let dop = &dout[p * h * LANES..(p + 1) * h * LANES];
+        let a = &fwd.act[p * hid * LANES..(p + 1) * hid * LANES];
+        outer_acc_lanes(a, hid, dop, 0, h, &mut grads.out_w);
+        for (k, g) in grads.out_b.iter_mut().enumerate() {
+            *g += Lanes::load(&dop[k * LANES..]).sum();
+        }
+        // da = out_w @ dout;  dpre = da * (1 - a^2)
+        mat_t_vec_lanes(rnn.out_w, dop, 0, hid, h, &mut dpre);
+        for k in 0..hid {
+            let av = Lanes::load(&a[k * LANES..]);
+            (Lanes::load(&dpre[k * LANES..]) * (one - av * av))
+                .store(&mut dpre[k * LANES..]);
+        }
+        let hs = &fwd.h_seq[p * hid * LANES..(p + 1) * hid * LANES];
+        outer_acc_lanes(hs, hid, &dpre, 0, hid, &mut grads.dense_w);
+        for (k, g) in grads.dense_b.iter_mut().enumerate() {
+            *g += Lanes::load(&dpre[k * LANES..]).sum();
+        }
+        mat_t_vec_lanes(rnn.dense_w, &dpre, 0, hid, hid,
+                        &mut dh_seq[p * hid * LANES..(p + 1) * hid * LANES]);
+    }
+
+    // ---- BPTT through the dilated stack (SoA gradient rings) ----
+    let mut dh_ring: Vec<Vec<f32>> =
+        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
+    let mut dc_ring: Vec<Vec<f32>> =
+        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
+    let mut dx = vec![0.0f32; p_n * in_w * LANES];
+
+    let mut g_h = vec![0.0f32; din_max * LANES];
+    let mut g_resid = vec![0.0f32; hid * LANES];
+    let mut dzz = vec![0.0f32; 4 * hid * LANES];
+    let mut dinp = vec![0.0f32; (din_max + hid) * LANES];
+    for p in (0..p_n).rev() {
+        g_h[..hid * LANES]
+            .copy_from_slice(&dh_seq[p * hid * LANES..(p + 1) * hid * LANES]);
+        let mut li = n_l;
+        for (bi, block) in shape.blocks.iter().enumerate().rev() {
+            let has_resid = bi > 0;
+            if has_resid {
+                g_resid.copy_from_slice(&g_h[..hid * LANES]);
+            }
+            for &d in block.iter().rev() {
+                li -= 1;
+                let slot = p % d;
+                let din = shape.layer_din[li];
+                let (w, _) = rnn.cells[li];
+                let t = (p * n_l + li) * hid * LANES;
+                let ti = (p * n_l + li) * din_max * LANES;
+                let ring_at = slot * hid * LANES;
+                let (gw, gb) = &mut grads.cells[li];
+                for k in 0..hid {
+                    let kt = t + k * LANES;
+                    let kr = ring_at + k * LANES;
+                    let total_dh = Lanes::load(&g_h[k * LANES..])
+                        + Lanes::load(&dh_ring[li][kr..]);
+                    let si = Lanes::load(&fwd.si[kt..]);
+                    let sf = Lanes::load(&fwd.sf[kt..]);
+                    let tg = Lanes::load(&fwd.tg[kt..]);
+                    let so = Lanes::load(&fwd.so[kt..]);
+                    let tanh_c = Lanes::load(&fwd.tanh_c[kt..]);
+                    let c_prev = Lanes::load(&fwd.c_prev[kt..]);
+                    let dc_total = Lanes::load(&dc_ring[li][kr..])
+                        + total_dh * so * (one - tanh_c * tanh_c);
+                    (dc_total * tg * si * (one - si)) // d i_pre
+                        .store(&mut dzz[k * LANES..]);
+                    (dc_total * c_prev * sf * (one - sf)) // d f_pre
+                        .store(&mut dzz[(hid + k) * LANES..]);
+                    (dc_total * si * (one - tg * tg)) // d g_pre
+                        .store(&mut dzz[(2 * hid + k) * LANES..]);
+                    (total_dh * tanh_c * so * (one - so)) // d o_pre
+                        .store(&mut dzz[(3 * hid + k) * LANES..]);
+                    (dc_total * sf).store(&mut dc_ring[li][kr..]); // → c_prev
+                }
+                let x_in = &fwd.x_in[ti..ti + din * LANES];
+                let h_prev = &fwd.h_prev[t..t + hid * LANES];
+                outer_acc_lanes(x_in, din, &dzz, 0, 4 * hid, gw);
+                outer_acc_lanes(h_prev, hid, &dzz, din, 4 * hid, gw);
+                for (k, g) in gb.iter_mut().enumerate() {
+                    *g += Lanes::load(&dzz[k * LANES..]).sum();
+                }
+                // dinp = w @ dzz, split into d x_in | d h_prev
+                mat_t_vec_lanes(w, &dzz, 0, din + hid, 4 * hid,
+                                &mut dinp[..(din + hid) * LANES]);
+                dh_ring[li][ring_at..ring_at + hid * LANES]
+                    .copy_from_slice(&dinp[din * LANES..(din + hid) * LANES]);
+                g_h[..din * LANES].copy_from_slice(&dinp[..din * LANES]);
+            }
+            if has_resid {
+                // block_in feeds both the first layer and the skip path.
+                add_assign_slice(&mut g_h[..hid * LANES],
+                                 &g_resid[..hid * LANES]);
+            }
+        }
+        dx[p * in_w * LANES..(p + 1) * in_w * LANES]
+            .copy_from_slice(&g_h[..in_w * LANES]);
+    }
+
+    // ---- window backward: d levels, d seas_ext (gate by multiply) ----
+    let mut dlev = vec![0.0f32; c * LANES];
+    let mut dseas_ext = vec![0.0f32; (c + h) * LANES];
+    for p in 0..p_n {
+        let lvl = Lanes::load(&fwd.levels[(p + in_w - 1) * LANES..]);
+        let mut dlvl = Lanes::ZERO;
+        for j in 0..in_w {
+            let idx = (p * in_w + j) * LANES;
+            let dxj = Lanes::load(&dx[idx..]) * Lanes::load(&fwd.x_ok[idx..]);
+            dlvl -= dxj / lvl;
+            let se_at = (p + j) * LANES;
+            (Lanes::load(&dseas_ext[se_at..])
+             - dxj / Lanes::load(&fwd.seas_ext[se_at..]))
+                .store(&mut dseas_ext[se_at..]);
+        }
+        for k in 0..h {
+            let idx = (p * h + k) * LANES;
+            let dzk = Lanes::load(&dz[idx..]) * Lanes::load(&fwd.z_ok[idx..]);
+            dlvl -= dzk / lvl;
+            let se_at = (p + in_w + k) * LANES;
+            (Lanes::load(&dseas_ext[se_at..])
+             - dzk / Lanes::load(&fwd.seas_ext[se_at..]))
+                .store(&mut dseas_ext[se_at..]);
+        }
+        let dl_at = (p + in_w - 1) * LANES;
+        (Lanes::load(&dlev[dl_at..]) + dlvl).store(&mut dlev[dl_at..]);
+    }
+
+    // ---- seas_ext → per-component seasonality gradients ----
+    let mut gseas = vec![0.0f32; (c + s) * LANES];
+    let mut gseas2 = vec![0.0f32; if dual { (c + s2) * LANES } else { 0 }];
+    if dual {
+        for t in 0..c {
+            let dse = Lanes::load(&dseas_ext[t * LANES..]);
+            (Lanes::load(&gseas[t * LANES..])
+             + dse * Lanes::load(&fwd.seas2[t * LANES..]))
+                .store(&mut gseas[t * LANES..]);
+            (Lanes::load(&gseas2[t * LANES..])
+             + dse * Lanes::load(&fwd.seas[t * LANES..]))
+                .store(&mut gseas2[t * LANES..]);
+        }
+        for k in 0..h {
+            let (i1, i2) = ((c + (k % s)) * LANES, (c + (k % s2)) * LANES);
+            let dse = Lanes::load(&dseas_ext[(c + k) * LANES..]);
+            (Lanes::load(&gseas[i1..]) + dse * Lanes::load(&fwd.seas2[i2..]))
+                .store(&mut gseas[i1..]);
+            (Lanes::load(&gseas2[i2..]) + dse * Lanes::load(&fwd.seas[i1..]))
+                .store(&mut gseas2[i2..]);
+        }
+    } else {
+        gseas[..c * LANES].copy_from_slice(&dseas_ext[..c * LANES]);
+        for k in 0..h {
+            let at = (c + (k % s)) * LANES;
+            (Lanes::load(&gseas[at..])
+             + Lanes::load(&dseas_ext[(c + k) * LANES..]))
+                .store(&mut gseas[at..]);
+        }
+    }
+
+    // ---- ES recurrence backward ----
+    // Same ordering invariants as the scalar core (see backward_series
+    // and DESIGN.md §Dual-recurrence backward ordering invariant); every
+    // lane runs the scalar schedule independently.
+    let (alpha, gamma, gamma2) = (fwd.alpha, fwd.gamma, fwd.gamma2);
+    let mut glev = dlev;
+    let mut d_alpha = Lanes::ZERO;
+    let mut d_gamma = Lanes::ZERO;
+    let mut d_gamma2 = Lanes::ZERO;
+    for t in (0..c).rev() {
+        let l_t = Lanes::load(&fwd.levels[t * LANES..]);
+        let y_t = Lanes::load(&grp.y[t * LANES..]);
+        let s1_t = Lanes::load(&fwd.seas[t * LANES..]);
+        let mut glev_t = Lanes::load(&glev[t * LANES..]);
+        let mut gs1_t = Lanes::load(&gseas[t * LANES..]);
+
+        // seas1[t+S1] = gamma*y_t/(l_t*s2_t) + (1-gamma)*s1_t
+        let g1n = Lanes::load(&gseas[(t + s) * LANES..]);
+        if dual {
+            let s2_t = Lanes::load(&fwd.seas2[t * LANES..]);
+            let mut gs2_t = Lanes::load(&gseas2[t * LANES..]);
+            let u1 = y_t / (l_t * s2_t);
+            glev_t += g1n * (-gamma * u1 / l_t);
+            d_gamma += g1n * (u1 - s1_t);
+            gs1_t += g1n * (one - gamma);
+            gs2_t += g1n * (-gamma * u1 / s2_t);
+            // seas2[t+S2] = gamma2*y_t/(l_t*s1_t) + (1-gamma2)*s2_t
+            let g2n = Lanes::load(&gseas2[(t + s2) * LANES..]);
+            let u2 = y_t / (l_t * s1_t);
+            glev_t += g2n * (-gamma2 * u2 / l_t);
+            d_gamma2 += g2n * (u2 - s2_t);
+            gs1_t += g2n * (-gamma2 * u2 / s1_t);
+            gs2_t += g2n * (one - gamma2);
+
+            let g_l = glev_t;
+            let s_all = s1_t * s2_t;
+            if t > 0 {
+                // l_t = alpha*y_t/(s1_t*s2_t) + (1-alpha)*l_{t-1}
+                let l_prev = Lanes::load(&fwd.levels[(t - 1) * LANES..]);
+                d_alpha += g_l * (y_t / s_all - l_prev);
+                gs1_t += g_l * (-alpha * y_t / (s_all * s1_t));
+                gs2_t += g_l * (-alpha * y_t / (s_all * s2_t));
+                (Lanes::load(&glev[(t - 1) * LANES..]) + g_l * (one - alpha))
+                    .store(&mut glev[(t - 1) * LANES..]);
+            } else {
+                // l_0 = y_0/(s1_0*s2_0)
+                gs1_t += g_l * (-y_t / (s_all * s1_t));
+                gs2_t += g_l * (-y_t / (s_all * s2_t));
+            }
+            gs2_t.store(&mut gseas2[t * LANES..]);
+        } else {
+            let u1 = y_t / l_t;
+            glev_t += g1n * (-gamma * u1 / l_t);
+            d_gamma += g1n * (u1 - s1_t);
+            gs1_t += g1n * (one - gamma);
+
+            let g_l = glev_t;
+            if t > 0 {
+                let l_prev = Lanes::load(&fwd.levels[(t - 1) * LANES..]);
+                d_alpha += g_l * (y_t / s1_t - l_prev);
+                gs1_t += g_l * (-alpha * y_t / (s1_t * s1_t));
+                (Lanes::load(&glev[(t - 1) * LANES..]) + g_l * (one - alpha))
+                    .store(&mut glev[(t - 1) * LANES..]);
+            } else {
+                gs1_t += g_l * (-y_t / (s1_t * s1_t));
+            }
+        }
+        gs1_t.store(&mut gseas[t * LANES..]);
+    }
+
+    let d_alpha_logit = d_alpha * alpha * (one - alpha);
+    let (d_gamma_logit, d_gamma2_logit, d_log_s) = if shape.seasonal {
+        // d log s_init = d s_init * s_init (chain through exp), per block.
+        let mut d_log_s = vec![0.0f32; (s + s2) * LANES];
+        for k in 0..s {
+            (Lanes::load(&gseas[k * LANES..])
+             * Lanes::load(&fwd.s_init[k * LANES..]))
+                .store(&mut d_log_s[k * LANES..]);
+        }
+        for k in 0..s2 {
+            (Lanes::load(&gseas2[k * LANES..])
+             * Lanes::load(&fwd.s2_init[k * LANES..]))
+                .store(&mut d_log_s[(s + k) * LANES..]);
+        }
+        (d_gamma * gamma * (one - gamma),
+         if dual {
+             d_gamma2 * gamma2 * (one - gamma2)
+         } else {
+             Lanes::ZERO
+         },
+         d_log_s)
+    } else {
+        // Non-seasonal: gamma pinned to 0 in-graph, no gradient flows.
+        (Lanes::ZERO, Lanes::ZERO, vec![0.0f32; (s + s2) * LANES])
+    };
+    SeriesGradsLanes {
+        alpha_logit: d_alpha_logit,
+        gamma_logit: d_gamma_logit,
+        gamma2_logit: d_gamma2_logit,
+        log_s_init: d_log_s,
+    }
+}
+
+/// Lane-vectorized Adam leaf update: bit-identical to
+/// [`model::adam_update`] (same operation sequence per element), with a
+/// scalar tail for the `len % LANES` remainder.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_lanes(p: &mut [f32], g: &[f32], m: &mut [f32],
+                         v: &mut [f32], lr: f32, mult: f32, bc1: f32,
+                         bc2: f32) {
+    let n = p.len();
+    let main = n - n % LANES;
+    let b1 = Lanes::splat(model::ADAM_B1);
+    let b1c = Lanes::splat(1.0 - model::ADAM_B1);
+    let b2 = Lanes::splat(model::ADAM_B2);
+    let b2c = Lanes::splat(1.0 - model::ADAM_B2);
+    let rbc1 = Lanes::splat(bc1);
+    let rbc2 = Lanes::splat(bc2);
+    let eps = Lanes::splat(model::ADAM_EPS);
+    let step = Lanes::splat(lr * mult);
+    for i in (0..main).step_by(LANES) {
+        let gv = Lanes::load(&g[i..]);
+        let m2 = b1 * Lanes::load(&m[i..]) + b1c * gv;
+        let v2 = b2 * Lanes::load(&v[i..]) + b2c * gv * gv;
+        let upd = (m2 / rbc1) / ((v2 / rbc2).sqrt() + eps);
+        (Lanes::load(&p[i..]) - step * upd).store(&mut p[i..]);
+        m2.store(&mut m[i..]);
+        v2.store(&mut v[i..]);
+    }
+    model::adam_update(&mut p[main..], &g[main..], &mut m[main..],
+                       &mut v[main..], lr, mult, bc1, bc2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Toy RNN parameters: per-cell (w, b) plus dense/out head weights.
+    fn toy_rnn(shape: &Shape, seed: u64)
+               -> (Vec<(Vec<f32>, Vec<f32>)>, Vec<f32>, Vec<f32>, Vec<f32>,
+                   Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let hid = shape.hidden;
+        let mut cells = Vec::new();
+        for &din in &shape.layer_din {
+            let lim = (6.0 / (din + hid + 4 * hid) as f64).sqrt();
+            cells.push((
+                (0..(din + hid) * 4 * hid)
+                    .map(|_| rng.uniform(-lim, lim) as f32)
+                    .collect(),
+                vec![0.0; 4 * hid],
+            ));
+        }
+        let lim_d = (6.0 / (2 * hid) as f64).sqrt();
+        let dense_w = (0..hid * hid)
+            .map(|_| rng.uniform(-lim_d, lim_d) as f32)
+            .collect();
+        let lim_o = (6.0 / (hid + shape.h) as f64).sqrt();
+        let out_w = (0..hid * shape.h)
+            .map(|_| rng.uniform(-lim_o, lim_o) as f32)
+            .collect();
+        (cells, dense_w, vec![0.0; hid], out_w, vec![0.0; shape.h])
+    }
+
+    #[test]
+    fn marshal_pads_tail_and_masked_slots() {
+        let shape =
+            Shape::new(4, 0, 4, 5, 20, 6, &[vec![1, 2], vec![2, 4]], 6)
+                .unwrap();
+        let b = 11usize; // 2 groups, second fill = 3
+        let c = shape.c;
+        let y: Vec<f32> = (0..b * c).map(|i| 10.0 + i as f32).collect();
+        let mut cat = vec![0.0f32; b * 6];
+        let mut mask = vec![1.0f32; b];
+        mask[1] = 0.0; // masked slot inside the first group
+        for i in 0..b {
+            cat[i * 6 + i % 6] = 1.0;
+        }
+        let alpha: Vec<f32> = (0..b).map(|i| -0.1 * i as f32).collect();
+        let gamma: Vec<f32> = (0..b).map(|i| -1.0 - 0.1 * i as f32).collect();
+        let log_s: Vec<f32> =
+            (0..b * 4).map(|i| 0.01 * i as f32).collect();
+        let groups = marshal_groups(&shape, b, &y, &cat, Some(&mask), &alpha,
+                                    &gamma, &[], &log_s);
+        assert_eq!(groups.len(), 2);
+        assert_eq!((groups[0].start, groups[0].fill), (0, LANES));
+        assert_eq!((groups[1].start, groups[1].fill), (8, 3));
+        // Live lane 0 carries its series transposed.
+        assert_eq!(groups[0].y[0], y[0]);
+        assert_eq!(groups[0].y[3 * LANES], y[3]);
+        assert_eq!(groups[0].alpha_logit.0[0], alpha[0]);
+        assert_eq!(groups[0].log_s[2 * LANES], log_s[2]);
+        assert_eq!(groups[0].mask.0[0], 1.0);
+        // Masked lane 1 is padding: benign y, zeroed params, mask 0.
+        assert_eq!(groups[0].mask.0[1], 0.0);
+        assert!(groups[0].y.iter().skip(1).step_by(LANES).all(|v| *v == 1.0));
+        assert_eq!(groups[0].alpha_logit.0[1], 0.0);
+        // Tail lanes of the last group are padding too.
+        for l in 3..LANES {
+            assert_eq!(groups[1].mask.0[l], 0.0);
+            assert_eq!(groups[1].y[l], 1.0);
+        }
+        // Lane 2 of group 1 is batch slot 10.
+        assert_eq!(groups[1].y[2 * LANES + 2], y[10 * c + 2]);
+        assert_eq!(groups[1].gamma_logit.0[2], gamma[10]);
+    }
+
+    #[test]
+    fn adam_lanes_matches_scalar_bitwise_with_ragged_tail() {
+        let mut rng = Rng::new(3);
+        let n = 37usize; // 4 full lanes + tail of 5
+        let g: Vec<f32> =
+            (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut p1: Vec<f32> =
+            (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let mut m1: Vec<f32> =
+            (0..n).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+        let mut v1: Vec<f32> =
+            (0..n).map(|_| rng.uniform(0.0, 0.1) as f32).collect();
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        let (bc1, bc2) = (1.0 - 0.9f32.powi(3), 1.0 - 0.999f32.powi(3));
+        model::adam_update(&mut p1, &g, &mut m1, &mut v1, 1e-3, 1.5, bc1, bc2);
+        adam_update_lanes(&mut p2, &g, &mut m2, &mut v2, 1e-3, 1.5, bc1, bc2);
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn masked_lane_gets_exactly_zero_gradients() {
+        let shape =
+            Shape::new(4, 0, 4, 5, 20, 6, &[vec![1, 2], vec![2, 4]], 6)
+                .unwrap();
+        let mut rng = Rng::new(9);
+        let b = 3usize;
+        let c = shape.c;
+        let mut y = Vec::new();
+        for _ in 0..b {
+            y.extend(crate::util::prop::gen_positive_series(&mut rng, c, 4));
+        }
+        let mut cat = vec![0.0f32; b * 6];
+        for i in 0..b {
+            cat[i * 6 + i % 6] = 1.0;
+        }
+        let mask = vec![1.0, 0.0, 1.0];
+        let alpha = vec![-0.5f32; b];
+        let gamma = vec![-1.0f32; b];
+        let log_s = vec![0.05f32; b * 4];
+        let groups = marshal_groups(&shape, b, &y, &cat, Some(&mask), &alpha,
+                                    &gamma, &[], &log_s);
+        assert_eq!(groups.len(), 1);
+        let grp = &groups[0];
+
+        let (cells_own, dense_w, dense_b, out_w, out_b) = toy_rnn(&shape, 17);
+        let cells: Vec<(&[f32], &[f32])> = cells_own
+            .iter()
+            .map(|q| (q.0.as_slice(), q.1.as_slice()))
+            .collect();
+        let rnn = RnnView {
+            cells: &cells,
+            dense_w: &dense_w,
+            dense_b: &dense_b,
+            out_w: &out_w,
+            out_b: &out_b,
+        };
+        let fwd = forward_lanes(&shape, grp, &rnn, true);
+        let denom = (shape.valid_positions as f32 * 2.0 * shape.h as f32)
+            .max(1.0);
+        let (_, dout, dz) =
+            pinball_seeds_lanes(&shape, &fwd, 0.48, grp.mask, denom);
+        let mut grads = RnnGrads::zeros(&shape);
+        let sg = backward_lanes(&shape, grp, &rnn, &fwd, &dout, &dz,
+                                &mut grads);
+        // Masked lane 1 and padding lanes 3.. are exact zeros; live lanes
+        // carry gradient.
+        for l in [1usize, 3, 4, 5, 6, 7] {
+            assert_eq!(sg.alpha_logit.0[l], 0.0, "lane {l}");
+            for k in 0..shape.s_total() {
+                assert_eq!(sg.log_s_init[k * LANES + l], 0.0,
+                           "lane {l} log_s[{k}]");
+            }
+        }
+        assert!(sg.alpha_logit.0[0] != 0.0 || sg.alpha_logit.0[2] != 0.0,
+                "live lanes should carry gradient");
+    }
+}

@@ -17,9 +17,19 @@
 //! * `es`         — the bare Holt-Winters layer (debug/verification
 //!   program, mirroring `aot.py::lower_es`).
 //!
-//! The batch dimension is data-parallel: `train_step` and `predict` split
-//! the batch across `std::thread` scoped workers (per-series gradients are
-//! independent; shared-weight gradients are reduced across chunks).
+//! The batch dimension is data-parallel at two levels. The default
+//! [`ComputeMode::Lanes`] marshals the batch into structure-of-arrays
+//! lane groups of [`crate::simd::LANES`] series and runs the
+//! lane-vectorized kernels in [`lanes`] (the paper's §5 vectorization,
+//! natively); `std::thread` scoped workers then split the *groups*
+//! (thread × lane two-level parallelism). [`ComputeMode::Scalar`] keeps
+//! the original one-series-at-a-time core in [`model`] — the oracle the
+//! lane kernels are property-tested against — and splits the batch
+//! across threads per series. Per-series gradients are independent;
+//! shared-weight gradients are reduced across chunks in batch order, so
+//! results are deterministic for a given thread count and vary only at
+//! float-association level across thread counts (chunk boundaries move,
+//! so the f32 summation parenthesization differs).
 //!
 //! Scope: every Table-1 frequency — yearly/quarterly/monthly/daily
 //! (single seasonality) and the §8.2 hourly dual-seasonality (24h×168h)
@@ -29,6 +39,7 @@
 //! PJRT-artifact-only; their configs are simply absent from the native
 //! manifest, which every caller already handles by name lookup.
 
+pub mod lanes;
 pub mod model;
 
 use std::collections::HashMap;
@@ -38,6 +49,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Frequency, NetworkConfig};
+use crate::simd::LANES;
 use crate::util::rng::Rng;
 
 use super::backend::{Backend, BackendStats, HostTensor};
@@ -239,10 +251,22 @@ fn native_manifest() -> Manifest {
     }
 }
 
+/// Which native kernel implementation executes batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// One series at a time through [`model`] — the reference/oracle
+    /// path the lane kernels are property-tested against.
+    Scalar,
+    /// Lane-vectorized SoA batch kernels ([`lanes`], default): every hot
+    /// path advances [`LANES`] series per step.
+    Lanes,
+}
+
 /// The pure-Rust execution backend.
 pub struct NativeBackend {
     manifest: Manifest,
     threads: usize,
+    mode: ComputeMode,
     stats: Mutex<BackendStats>,
 }
 
@@ -256,16 +280,36 @@ impl NativeBackend {
     }
 
     /// Backend with an explicit worker-thread cap (1 = fully sequential).
+    /// The kernel mode defaults to [`ComputeMode::Lanes`];
+    /// `FAST_ESRNN_NATIVE_MODE=scalar` selects the scalar oracle path
+    /// (benches construct both explicitly via [`Self::with_threads_mode`]).
     pub fn with_threads(threads: usize) -> Self {
+        let mode = match std::env::var("FAST_ESRNN_NATIVE_MODE").as_deref() {
+            Ok("scalar") => ComputeMode::Scalar,
+            Ok("lanes") | Err(_) => ComputeMode::Lanes,
+            Ok(other) => panic!(
+                "FAST_ESRNN_NATIVE_MODE=`{other}` is not a native kernel \
+                 mode (expected `scalar` or `lanes`)"),
+        };
+        Self::with_threads_mode(threads, mode)
+    }
+
+    /// Backend with an explicit thread cap and kernel mode.
+    pub fn with_threads_mode(threads: usize, mode: ComputeMode) -> Self {
         Self {
             manifest: native_manifest(),
             threads: threads.max(1),
+            mode,
             stats: Mutex::new(BackendStats::default()),
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn mode(&self) -> ComputeMode {
+        self.mode
     }
 
     fn shape_for(&self, freq: &str) -> Result<Shape> {
@@ -464,7 +508,11 @@ impl Backend for NativeBackend {
     }
 
     fn platform(&self) -> String {
-        format!("native-cpu ({} threads)", self.threads)
+        let kernels = match self.mode {
+            ComputeMode::Scalar => "scalar",
+            ComputeMode::Lanes => "lane",
+        };
+        format!("native-cpu ({} threads, {kernels} kernels)", self.threads)
     }
 
     fn stats(&self) -> BackendStats {
@@ -485,29 +533,66 @@ impl NativeBackend {
         let (c, h) = (shape.c, shape.h);
 
         let mut forecast = vec![0.0f32; b * h];
-        let ranges = chunks(b, self.threads);
-        std::thread::scope(|sc| {
-            let mut handles = Vec::with_capacity(ranges.len());
-            for &(lo, hi) in &ranges {
-                let series = &series;
-                let handle = sc.spawn(move || {
-                    let mut rows = Vec::with_capacity((hi - lo) * h);
-                    for i in lo..hi {
-                        let fwd = model::forward_series(
-                            shape, &y[i * c..(i + 1) * c],
-                            &cat[i * 6..(i + 1) * 6], &rnn,
-                            series.hw(i), false);
-                        rows.extend(model::forecast_from(shape, &fwd));
+        if self.mode == ComputeMode::Lanes {
+            let groups = lanes::marshal_groups(
+                shape, b, y, cat, None, series.alpha_logit,
+                series.gamma_logit, series.gamma2_logit, series.log_s_init);
+            let ranges = chunks(groups.len(), self.threads);
+            std::thread::scope(|sc| {
+                let groups = &groups;
+                let mut handles = Vec::with_capacity(ranges.len());
+                for &(lo, hi) in &ranges {
+                    let handle = sc.spawn(move || {
+                        let mut out = Vec::with_capacity(hi - lo);
+                        for grp in &groups[lo..hi] {
+                            let fwd = lanes::forward_lanes(shape, grp, &rnn,
+                                                           false);
+                            out.push((grp.start, grp.fill,
+                                      lanes::forecast_from_lanes(shape, &fwd)));
+                        }
+                        out
+                    });
+                    handles.push(handle);
+                }
+                for handle in handles {
+                    let worker = handle.join().expect("predict worker panicked");
+                    for (start, fill, fc) in worker {
+                        // De-marshal: lane l of the SoA forecast is batch
+                        // slot start + l; padding lanes are dropped.
+                        for l in 0..fill {
+                            for k in 0..h {
+                                forecast[(start + l) * h + k] =
+                                    fc[k * LANES + l];
+                            }
+                        }
                     }
-                    rows
-                });
-                handles.push((lo, hi, handle));
-            }
-            for (lo, hi, handle) in handles {
-                let rows = handle.join().expect("predict worker panicked");
-                forecast[lo * h..hi * h].copy_from_slice(&rows);
-            }
-        });
+                }
+            });
+        } else {
+            let ranges = chunks(b, self.threads);
+            std::thread::scope(|sc| {
+                let mut handles = Vec::with_capacity(ranges.len());
+                for &(lo, hi) in &ranges {
+                    let series = &series;
+                    let handle = sc.spawn(move || {
+                        let mut rows = Vec::with_capacity((hi - lo) * h);
+                        for i in lo..hi {
+                            let fwd = model::forward_series(
+                                shape, &y[i * c..(i + 1) * c],
+                                &cat[i * 6..(i + 1) * 6], &rnn,
+                                series.hw(i), false);
+                            rows.extend(model::forecast_from(shape, &fwd));
+                        }
+                        rows
+                    });
+                    handles.push((lo, hi, handle));
+                }
+                for (lo, hi, handle) in handles {
+                    let rows = handle.join().expect("predict worker panicked");
+                    forecast[lo * h..hi * h].copy_from_slice(&rows);
+                }
+            });
+        }
         Ok(vec![("forecast".into(),
                  HostTensor::new(vec![b, h], forecast)?)])
     }
@@ -533,67 +618,144 @@ impl NativeBackend {
                      * shape.h as f32).max(1.0);
 
         // ---- batch-parallel forward + backward ----
-        struct Chunk {
-            loss_num: f64,
-            rnn_grads: RnnGrads,
-            series_grads: Vec<SeriesGrads>,
-        }
-        let ranges = chunks(b, self.threads);
-        let mut chunks_out: Vec<(usize, Chunk)> = Vec::with_capacity(ranges.len());
-        std::thread::scope(|sc| {
-            let mut handles = Vec::with_capacity(ranges.len());
-            for &(lo, hi) in &ranges {
-                let series = &series;
-                let handle = sc.spawn(move || {
-                    let mut acc = Chunk {
-                        loss_num: 0.0,
-                        rnn_grads: RnnGrads::zeros(shape),
-                        series_grads: Vec::with_capacity(hi - lo),
-                    };
-                    for i in lo..hi {
-                        if mask[i] == 0.0 {
-                            // Padded slot: zero loss and gradient by
-                            // construction (the scatter drops the update
-                            // anyway), so skip its forward entirely.
-                            acc.series_grads
-                                .push(SeriesGrads::zeros(shape.s_total()));
-                            continue;
-                        }
-                        let yi = &y[i * c..(i + 1) * c];
-                        let fwd = model::forward_series(
-                            shape, yi, &cat[i * 6..(i + 1) * 6], &rnn,
-                            series.hw(i), true);
-                        let (loss_num, dout, dz) = model::pinball_seeds(
-                            shape, &fwd, tau, mask[i], denom);
-                        acc.loss_num += loss_num;
-                        acc.series_grads.push(model::backward_series(
-                            shape, yi, &rnn, &fwd, &dout, &dz,
-                            &mut acc.rnn_grads));
-                    }
-                    acc
-                });
-                handles.push((lo, handle));
-            }
-            for (lo, handle) in handles {
-                chunks_out.push((lo, handle.join().expect("train worker panicked")));
-            }
-        });
-        chunks_out.sort_by_key(|(lo, _)| *lo);
-
+        let w = shape.s_total();
         let mut rnn_grads = RnnGrads::zeros(shape);
         let mut loss = 0.0f64;
-        let mut d_alpha = Vec::with_capacity(b);
-        let mut d_gamma = Vec::with_capacity(b);
-        let mut d_gamma2 = Vec::with_capacity(b);
-        let mut d_log_s = Vec::with_capacity(b * shape.s_total());
-        for (_, chunk) in &chunks_out {
-            rnn_grads.merge(&chunk.rnn_grads);
-            loss += chunk.loss_num;
-            for sg in &chunk.series_grads {
-                d_alpha.push(sg.alpha_logit);
-                d_gamma.push(sg.gamma_logit);
-                d_gamma2.push(sg.gamma2_logit);
-                d_log_s.extend_from_slice(&sg.log_s_init);
+        let mut d_alpha = vec![0.0f32; b];
+        let mut d_gamma = vec![0.0f32; b];
+        let mut d_gamma2 = vec![0.0f32; b];
+        let mut d_log_s = vec![0.0f32; b * w];
+        if self.mode == ComputeMode::Lanes {
+            // Lane path: marshal into SoA groups, thread over groups;
+            // each worker advances LANES series per kernel step.
+            struct GroupChunk {
+                loss_num: f64,
+                rnn_grads: RnnGrads,
+                lane_grads: Vec<(usize, usize, lanes::SeriesGradsLanes)>,
+            }
+            let groups = lanes::marshal_groups(
+                shape, b, y, cat, Some(mask), series.alpha_logit,
+                series.gamma_logit, series.gamma2_logit, series.log_s_init);
+            let ranges = chunks(groups.len(), self.threads);
+            let mut chunks_out: Vec<(usize, GroupChunk)> =
+                Vec::with_capacity(ranges.len());
+            std::thread::scope(|sc| {
+                let groups = &groups;
+                let mut handles = Vec::with_capacity(ranges.len());
+                for &(lo, hi) in &ranges {
+                    let handle = sc.spawn(move || {
+                        let mut acc = GroupChunk {
+                            loss_num: 0.0,
+                            rnn_grads: RnnGrads::zeros(shape),
+                            lane_grads: Vec::with_capacity(hi - lo),
+                        };
+                        for grp in &groups[lo..hi] {
+                            if grp.mask.0.iter().all(|v| *v == 0.0) {
+                                // Entirely padded group: zero loss and
+                                // gradients by construction.
+                                acc.lane_grads.push((
+                                    grp.start, grp.fill,
+                                    lanes::SeriesGradsLanes::zeros(w)));
+                                continue;
+                            }
+                            let fwd = lanes::forward_lanes(shape, grp, &rnn,
+                                                           true);
+                            let (loss_num, dout, dz) =
+                                lanes::pinball_seeds_lanes(
+                                    shape, &fwd, tau, grp.mask, denom);
+                            acc.loss_num += loss_num;
+                            let sg = lanes::backward_lanes(
+                                shape, grp, &rnn, &fwd, &dout, &dz,
+                                &mut acc.rnn_grads);
+                            acc.lane_grads.push((grp.start, grp.fill, sg));
+                        }
+                        acc
+                    });
+                    handles.push((lo, handle));
+                }
+                for (lo, handle) in handles {
+                    chunks_out.push(
+                        (lo, handle.join().expect("train worker panicked")));
+                }
+            });
+            chunks_out.sort_by_key(|(lo, _)| *lo);
+            for (_, chunk) in &chunks_out {
+                rnn_grads.merge(&chunk.rnn_grads);
+                loss += chunk.loss_num;
+                for (start, fill, sg) in &chunk.lane_grads {
+                    // De-marshal lane l → batch slot start + l (padding
+                    // and masked lanes hold exact zeros).
+                    for l in 0..*fill {
+                        let i = start + l;
+                        d_alpha[i] = sg.alpha_logit.0[l];
+                        d_gamma[i] = sg.gamma_logit.0[l];
+                        d_gamma2[i] = sg.gamma2_logit.0[l];
+                        for k in 0..w {
+                            d_log_s[i * w + k] = sg.log_s_init[k * LANES + l];
+                        }
+                    }
+                }
+            }
+        } else {
+            struct Chunk {
+                loss_num: f64,
+                rnn_grads: RnnGrads,
+                series_grads: Vec<SeriesGrads>,
+            }
+            let ranges = chunks(b, self.threads);
+            let mut chunks_out: Vec<(usize, Chunk)> =
+                Vec::with_capacity(ranges.len());
+            std::thread::scope(|sc| {
+                let mut handles = Vec::with_capacity(ranges.len());
+                for &(lo, hi) in &ranges {
+                    let series = &series;
+                    let handle = sc.spawn(move || {
+                        let mut acc = Chunk {
+                            loss_num: 0.0,
+                            rnn_grads: RnnGrads::zeros(shape),
+                            series_grads: Vec::with_capacity(hi - lo),
+                        };
+                        for i in lo..hi {
+                            if mask[i] == 0.0 {
+                                // Padded slot: zero loss and gradient by
+                                // construction (the scatter drops the update
+                                // anyway), so skip its forward entirely.
+                                acc.series_grads
+                                    .push(SeriesGrads::zeros(shape.s_total()));
+                                continue;
+                            }
+                            let yi = &y[i * c..(i + 1) * c];
+                            let fwd = model::forward_series(
+                                shape, yi, &cat[i * 6..(i + 1) * 6], &rnn,
+                                series.hw(i), true);
+                            let (loss_num, dout, dz) = model::pinball_seeds(
+                                shape, &fwd, tau, mask[i], denom);
+                            acc.loss_num += loss_num;
+                            acc.series_grads.push(model::backward_series(
+                                shape, yi, &rnn, &fwd, &dout, &dz,
+                                &mut acc.rnn_grads));
+                        }
+                        acc
+                    });
+                    handles.push((lo, handle));
+                }
+                for (lo, handle) in handles {
+                    chunks_out.push(
+                        (lo, handle.join().expect("train worker panicked")));
+                }
+            });
+            chunks_out.sort_by_key(|(lo, _)| *lo);
+            for (lo, chunk) in &chunks_out {
+                rnn_grads.merge(&chunk.rnn_grads);
+                loss += chunk.loss_num;
+                for (off, sg) in chunk.series_grads.iter().enumerate() {
+                    let i = lo + off;
+                    d_alpha[i] = sg.alpha_logit;
+                    d_gamma[i] = sg.gamma_logit;
+                    d_gamma2[i] = sg.gamma2_logit;
+                    d_log_s[i * w..(i + 1) * w]
+                        .copy_from_slice(&sg.log_s_init);
+                }
             }
         }
         let loss = (loss / denom as f64) as f32;
@@ -635,7 +797,14 @@ impl NativeBackend {
             } else {
                 1.0
             };
-            model::adam_update(&mut p, g, &mut m, &mut v, lr, mult, bc1, bc2);
+            // Same operation sequence per element either way (the lane
+            // update is bit-identical to the scalar one).
+            match self.mode {
+                ComputeMode::Lanes => lanes::adam_update_lanes(
+                    &mut p, g, &mut m, &mut v, lr, mult, bc1, bc2),
+                ComputeMode::Scalar => model::adam_update(
+                    &mut p, g, &mut m, &mut v, lr, mult, bc1, bc2),
+            }
             out_map.insert(ospec.name.clone(),
                            HostTensor::new(ospec.shape.clone(), p)?);
             out_map.insert(format!("opt.m.{leaf}"),

@@ -31,7 +31,8 @@ pub const ADAM_B2: f32 = 0.999;
 pub const ADAM_EPS: f32 = 1e-8;
 
 /// Numeric floor inside the log-normalization (mirror of `model.py::EPS`).
-const EPS: f32 = 1e-8;
+/// Shared with the lane-vectorized kernels in [`super::lanes`].
+pub(crate) const EPS: f32 = 1e-8;
 
 /// Static shape of one frequency's compute graph.
 #[derive(Debug, Clone)]

@@ -1,0 +1,373 @@
+//! Fixed-width f32 lane abstraction for the batch-vectorized native
+//! kernels (the paper's §5 vectorization step, done in portable Rust).
+//!
+//! [`Lanes`] is an 8-wide `[f32; 8]` newtype with elementwise arithmetic,
+//! written so stable rustc auto-vectorizes every operation (fixed-length
+//! array loops, no data-dependent branches). The native backend processes
+//! series in lane *groups* of [`LANES`]: structure-of-arrays buffers hold
+//! one value per series per lane slot, and every step of the ES-RNN
+//! forward/backward executes once per group instead of once per series.
+//! Porting to `std::simd` (or a wgpu subgroup) later is a type swap, not
+//! a kernel rewrite.
+//!
+//! Transcendentals (`exp`, `ln`, `tanh`, `sigmoid`) are branch-free
+//! polynomial approximations rather than libm calls — libm is scalar and
+//! dominates the LSTM gate cost otherwise. Accuracy (validated against
+//! f64 references over the kernels' input ranges):
+//!
+//! * `exp`  — ≤ 3e-7 relative on [-87, 88] (clamped outside, no inf/NaN);
+//! * `ln`   — ≤ 2e-7 relative for |ln x| ≥ 1, ≤ 2e-6 absolute overall;
+//! * `tanh` — ≤ 3e-7 absolute, exact ±1 saturation;
+//! * `sigmoid` — ≤ 3e-7 absolute.
+//!
+//! The scalar compute core ([`crate::runtime::native::model`]) keeps
+//! using libm and serves as the oracle the lane kernels are
+//! property-tested against (`rust/tests/simd_parity.rs`).
+
+/// Lane width of the batch kernels. 8 × f32 = one AVX2 register (two
+/// SSE/NEON registers); wide enough to saturate typical CPU FMA units,
+/// small enough that ragged batch tails waste little work.
+pub const LANES: usize = 8;
+
+const EXP_CLAMP_LO: f32 = -87.0;
+const EXP_CLAMP_HI: f32 = 88.0;
+const LOG2E: f32 = 1.442_695_f32;
+/// ln(2) split hi/lo so `x - n*ln2` stays accurate near the break points.
+const LN2_HI: f32 = 0.693_359_375_f32;
+const LN2_LO: f32 = -2.121_944_4e-4_f32;
+const SQRT_HALF: f32 = 0.707_106_78_f32;
+
+/// Branch-free f32 exp: 2^n · P(r) with n = round(x·log2 e), r = x − n·ln 2,
+/// P the degree-6 Taylor polynomial of e^r on |r| ≤ ln2/2, and the 2^n
+/// scale built directly in the exponent bits. Inputs are clamped to
+/// [-87, 88], so the result is always finite and positive.
+#[inline]
+fn exp_f32(x: f32) -> f32 {
+    let x = x.clamp(EXP_CLAMP_LO, EXP_CLAMP_HI);
+    let n = (x * LOG2E + 0.5).floor();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    let mut p = 1.0 / 720.0;
+    for c in [1.0 / 120.0, 1.0 / 24.0, 1.0 / 6.0, 0.5, 1.0, 1.0] {
+        p = p * r + c;
+    }
+    let bits = (((n as i32) + 127) << 23) as u32;
+    p * f32::from_bits(bits)
+}
+
+/// Branch-free f32 ln for positive normal inputs: decompose x = m·2^e
+/// with m ∈ [√½, √2) via exponent-bit surgery, then
+/// ln m = 2·atanh(t), t = (m−1)/(m+1), by a 5-term odd series.
+/// Non-positive or denormal inputs are undefined (the kernels clamp to
+/// EPS = 1e-8 > f32::MIN_POSITIVE first).
+#[inline]
+fn ln_f32(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let mut e = (((bits >> 23) & 0xff) as i32 - 126) as f32;
+    let mut m = f32::from_bits((bits & 0x007f_ffff) | 0x3f00_0000);
+    if m < SQRT_HALF {
+        m *= 2.0;
+        e -= 1.0;
+    }
+    let t = (m - 1.0) / (m + 1.0);
+    let t2 = t * t;
+    let mut p = 1.0 / 9.0;
+    for c in [1.0 / 7.0, 1.0 / 5.0, 1.0 / 3.0, 1.0] {
+        p = p * t2 + c;
+    }
+    let lnm = 2.0 * t * p;
+    e * LN2_HI + (lnm + e * LN2_LO)
+}
+
+/// An 8-wide bundle of f32 values: one per series in a lane group.
+///
+/// All arithmetic is elementwise. The type is `Copy` and all operations
+/// take `self` by value so the compiler keeps lanes in registers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(transparent)]
+pub struct Lanes(pub [f32; LANES]);
+
+impl Lanes {
+    pub const ZERO: Lanes = Lanes([0.0; LANES]);
+    pub const ONE: Lanes = Lanes([1.0; LANES]);
+
+    /// Broadcast one scalar to every lane.
+    #[inline]
+    pub fn splat(v: f32) -> Lanes {
+        Lanes([v; LANES])
+    }
+
+    /// Load the first [`LANES`] elements of `s` (panics if shorter).
+    #[inline]
+    pub fn load(s: &[f32]) -> Lanes {
+        Lanes(s[..LANES].try_into().expect("lane load"))
+    }
+
+    /// Store into the first [`LANES`] elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        out[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Elementwise map (kept for one-off lane math; hot paths use the
+    /// dedicated methods below so the polynomial kernels inline).
+    #[inline]
+    pub fn map(self, f: impl Fn(f32) -> f32) -> Lanes {
+        let mut out = self.0;
+        for v in &mut out {
+            *v = f(*v);
+        }
+        Lanes(out)
+    }
+
+    /// Horizontal sum over the lanes (fixed lane order 0..LANES, so the
+    /// result is deterministic and thread-count independent).
+    #[inline]
+    pub fn sum(self) -> f32 {
+        let mut acc = 0.0f32;
+        for v in self.0 {
+            acc += v;
+        }
+        acc
+    }
+
+    #[inline]
+    pub fn max(self, o: Lanes) -> Lanes {
+        let mut out = self.0;
+        for (v, w) in out.iter_mut().zip(o.0) {
+            *v = v.max(w);
+        }
+        Lanes(out)
+    }
+
+    #[inline]
+    pub fn sqrt(self) -> Lanes {
+        self.map(f32::sqrt)
+    }
+
+    /// Fast elementwise exp (≤ 3e-7 relative; clamped to [-87, 88]).
+    #[inline]
+    pub fn exp(self) -> Lanes {
+        self.map(exp_f32)
+    }
+
+    /// Fast elementwise ln for positive normal inputs.
+    #[inline]
+    pub fn ln(self) -> Lanes {
+        self.map(ln_f32)
+    }
+
+    /// Fast elementwise tanh via exp(2x): (e−1)/(e+1) with e = e^{2x};
+    /// saturates to exactly ±1 for |x| ≳ 13.
+    #[inline]
+    pub fn tanh(self) -> Lanes {
+        self.map(|x| {
+            let e = exp_f32(2.0 * x);
+            (e - 1.0) / (e + 1.0)
+        })
+    }
+
+    /// Fast elementwise logistic sigmoid 1/(1 + e^{−x}).
+    #[inline]
+    pub fn sigmoid(self) -> Lanes {
+        self.map(|x| 1.0 / (1.0 + exp_f32(-x)))
+    }
+
+    /// Per-lane select: `if self[l] >= 0 { if_ge[l] } else { if_lt[l] }`.
+    #[inline]
+    pub fn select_ge_zero(self, if_ge: Lanes, if_lt: Lanes) -> Lanes {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = if self.0[l] >= 0.0 { if_ge.0[l] } else { if_lt.0[l] };
+        }
+        Lanes(out)
+    }
+
+    /// 1.0 where `self > thresh`, else 0.0 — the gate convention the
+    /// kernels use instead of bool masks (gradient gating by multiply).
+    #[inline]
+    pub fn gt_gate(self, thresh: Lanes) -> Lanes {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = if self.0[l] > thresh.0[l] { 1.0 } else { 0.0 };
+        }
+        Lanes(out)
+    }
+}
+
+macro_rules! lane_binop {
+    ($trait:ident, $method:ident, $op:tt) => {
+        impl std::ops::$trait for Lanes {
+            type Output = Lanes;
+            #[inline]
+            fn $method(self, rhs: Lanes) -> Lanes {
+                let mut out = self.0;
+                for (v, w) in out.iter_mut().zip(rhs.0) {
+                    *v = *v $op w;
+                }
+                Lanes(out)
+            }
+        }
+    };
+}
+
+lane_binop!(Add, add, +);
+lane_binop!(Sub, sub, -);
+lane_binop!(Mul, mul, *);
+lane_binop!(Div, div, /);
+
+impl std::ops::Neg for Lanes {
+    type Output = Lanes;
+    #[inline]
+    fn neg(self) -> Lanes {
+        let mut out = self.0;
+        for v in &mut out {
+            *v = -*v;
+        }
+        Lanes(out)
+    }
+}
+
+impl std::ops::AddAssign for Lanes {
+    #[inline]
+    fn add_assign(&mut self, rhs: Lanes) {
+        for (v, w) in self.0.iter_mut().zip(rhs.0) {
+            *v += w;
+        }
+    }
+}
+
+impl std::ops::SubAssign for Lanes {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Lanes) {
+        for (v, w) in self.0.iter_mut().zip(rhs.0) {
+            *v -= w;
+        }
+    }
+}
+
+/// `dst[i] += src[i]` over two equal-length SoA slices — the elementwise
+/// accumulation the kernels use for residual adds and gradient merges
+/// (plain indexed f32 loop: contiguous, auto-vectorizes).
+#[inline]
+pub fn add_assign_slice(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32, what: &str) {
+        assert!((a - b).abs() <= tol, "{what}: {a} vs {b} (tol {tol})");
+    }
+
+    #[test]
+    fn arithmetic_is_elementwise() {
+        let a = Lanes([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = Lanes::splat(2.0);
+        assert_eq!((a + b).0[3], 6.0);
+        assert_eq!((a - b).0[0], -1.0);
+        assert_eq!((a * b).0[7], 16.0);
+        assert_eq!((a / b).0[1], 1.0);
+        assert_eq!((-a).0[2], -3.0);
+        let mut c = a;
+        c += b;
+        assert_eq!(c.0[5], 8.0);
+        c -= b;
+        assert_eq!(c.0, a.0);
+        assert_eq!(a.sum(), 36.0);
+        assert_eq!(a.max(Lanes::splat(4.5)).0[2], 4.5);
+        assert_eq!(a.max(Lanes::splat(4.5)).0[6], 7.0);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let v = Lanes::load(&src[2..]);
+        assert_eq!(v.0[0], 2.0);
+        assert_eq!(v.0[7], 9.0);
+        let mut dst = vec![0.0f32; 10];
+        v.store(&mut dst[1..]);
+        assert_eq!(dst[1], 2.0);
+        assert_eq!(dst[8], 9.0);
+        assert_eq!(dst[9], 0.0);
+    }
+
+    #[test]
+    fn exp_matches_libm_within_3e7_relative() {
+        let mut x = -20.0f32;
+        while x <= 20.0 {
+            let got = Lanes::splat(x).exp().0[0];
+            let want = x.exp();
+            assert!((got - want).abs() <= 5e-7 * want,
+                    "exp({x}): {got} vs {want}");
+            x += 0.003;
+        }
+        // Clamp region: finite, positive, monotone-ish extremes.
+        let lo = Lanes::splat(-1000.0).exp().0[0];
+        let hi = Lanes::splat(1000.0).exp().0[0];
+        assert!(lo > 0.0 && lo < 1e-37);
+        assert!(hi.is_finite() && hi > 1e38);
+        assert_eq!(Lanes::splat(0.0).exp().0[0], 1.0);
+    }
+
+    #[test]
+    fn ln_matches_libm() {
+        let mut u = 1e-8f64;
+        while u < 1e8 {
+            let uf = u as f32;
+            let got = Lanes::splat(uf).ln().0[0];
+            let want = (uf as f64).ln();
+            let tol = 2e-7 * want.abs().max(1.0);
+            assert!((got as f64 - want).abs() <= tol,
+                    "ln({uf}): {got} vs {want}");
+            u *= 1.37;
+        }
+        // Near 1 (normalized window ratios live here).
+        let mut v = 0.5f32;
+        while v < 2.0 {
+            let got = Lanes::splat(v).ln().0[0];
+            let want = (v as f64).ln();
+            assert!((got as f64 - want).abs() <= 2e-7,
+                    "ln({v}): {got} vs {want}");
+            v += 0.001;
+        }
+        assert_eq!(Lanes::splat(1.0).ln().0[0], 0.0);
+    }
+
+    #[test]
+    fn tanh_sigmoid_match_libm_and_saturate() {
+        let mut x = -30.0f32;
+        while x <= 30.0 {
+            let t = Lanes::splat(x).tanh().0[0];
+            let s = Lanes::splat(x).sigmoid().0[0];
+            assert_close(t, x.tanh(), 3e-7, "tanh");
+            assert_close(s, 1.0 / (1.0 + (-x).exp()), 3e-7, "sigmoid");
+            x += 0.007;
+        }
+        assert_eq!(Lanes::splat(100.0).tanh().0[0], 1.0);
+        assert_eq!(Lanes::splat(-100.0).tanh().0[0], -1.0);
+        assert_eq!(Lanes::splat(0.0).tanh().0[0], 0.0);
+        assert_eq!(Lanes::splat(200.0).sigmoid().0[0], 1.0);
+        assert!(Lanes::splat(-200.0).sigmoid().0[0] >= 0.0);
+    }
+
+    #[test]
+    fn select_and_gate() {
+        let d = Lanes([-1.0, 0.0, 2.0, -0.5, 3.0, -4.0, 5.0, 0.0]);
+        let s = d.select_ge_zero(Lanes::splat(10.0), Lanes::splat(-10.0));
+        assert_eq!(s.0, [-10.0, 10.0, 10.0, -10.0, 10.0, -10.0, 10.0, 10.0]);
+        let g = d.gt_gate(Lanes::ZERO);
+        assert_eq!(g.0, [0.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn add_assign_slice_accumulates() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        add_assign_slice(&mut a, &[0.5, 0.5, 0.5]);
+        assert_eq!(a, vec![1.5, 2.5, 3.5]);
+    }
+}

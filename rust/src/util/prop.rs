@@ -50,6 +50,28 @@ pub fn gen_positive_series(rng: &mut Rng, len: usize, period: usize) -> Vec<f32>
         .collect()
 }
 
+/// [`gen_positive_series`] with a second planted multiplicative cycle of
+/// period `period2` (amplitude 5–20%), so §8.2 dual-seasonality
+/// properties have signal on both tracks. `period2 == 0` degrades to the
+/// single-cycle generator (and draws nothing extra from `rng`, so
+/// single/dual call sites stay reproducible independently).
+pub fn gen_positive_series_dual(rng: &mut Rng, len: usize, period: usize,
+                                period2: usize) -> Vec<f32> {
+    let base = gen_positive_series(rng, len, period);
+    if period2 == 0 {
+        return base;
+    }
+    let amp2 = rng.uniform(0.05, 0.2);
+    base.iter()
+        .enumerate()
+        .map(|(t, v)| {
+            let w = std::f64::consts::TAU * (t % period2) as f64
+                / period2 as f64;
+            (*v as f64 * (1.0 + amp2 * w.sin())) as f32
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +107,19 @@ mod tests {
             assert_eq!(s.len(), 60);
             assert!(s.iter().all(|v| *v > 0.0));
         }
+    }
+
+    #[test]
+    fn dual_series_is_positive_and_degrades_to_single() {
+        let mut r = Rng::new(3);
+        let s = gen_positive_series_dual(&mut r, 72, 4, 6);
+        assert_eq!(s.len(), 72);
+        assert!(s.iter().all(|v| *v > 0.0));
+        // period2 == 0 reproduces the single-cycle stream exactly.
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let a = gen_positive_series(&mut r1, 40, 7);
+        let b = gen_positive_series_dual(&mut r2, 40, 7, 0);
+        assert_eq!(a, b);
     }
 }

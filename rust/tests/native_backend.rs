@@ -295,7 +295,11 @@ fn prop_predict_program_matches_reference_forward() {
             let want = model::forecast_from(&shape, &fwd);
             for k in 0..shape.h {
                 let got = fc.data[i * shape.h + k];
-                if (got - want[k]).abs() > 1e-5 * want[k].abs().max(1.0) {
+                // 1e-4: the default backend runs the lane kernels, whose
+                // fast transcendentals (≤3e-7/op) drift up to ~1e-5
+                // relative from this libm scalar reference over P LSTM
+                // steps; gather/threading mixups are orders above this.
+                if (got - want[k]).abs() > 1e-4 * want[k].abs().max(1.0) {
                     return Err(format!(
                         "{freq} b={b} forecast[{i},{k}] {got} != {}", want[k]));
                 }

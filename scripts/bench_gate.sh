@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# CI perf gate: run the quick benches, record the lane-vs-scalar speedup
+# trajectory, and fail on regression.
+#
+#   scripts/bench_gate.sh [out.json]
+#
+# Runs `micro_hotpath` (and `table5_speedup`) in quick mode, writes the
+# scalar-vs-lane per-frequency summary to BENCH_3.json (or the given
+# path), then compares the measured max speedup against the committed
+# baseline (benches/bench3_baseline.json): the gate fails when the
+# vectorized train step regresses more than 10% below the baseline
+# speedup. The ratio is measured scalar-vs-lane on the same machine in
+# the same process, so it is stable across runner hardware generations
+# in a way absolute ns/step numbers are not.
+set -euo pipefail
+
+out="${1:-BENCH_3.json}"
+baseline="benches/bench3_baseline.json"
+
+export FAST_ESRNN_QUICK=1
+FAST_ESRNN_BENCH_JSON="$out" cargo bench --bench micro_hotpath
+cargo bench --bench table5_speedup
+
+python3 - "$out" "$baseline" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+got = result["max_speedup"]
+want = baseline["min_speedup"]
+floor = want * 0.9
+per_freq_floor = baseline.get("per_freq_floor", 0.0)
+print(f"lane-vs-scalar max speedup: {got:.2f}x "
+      f"({result['max_speedup_freq']}); baseline {want:.2f}x, "
+      f"gate floor {floor:.2f}x, per-frequency floor {per_freq_floor:.2f}x")
+failed = False
+for freq, row in sorted(result["frequencies"].items()):
+    print(f"  {freq:<10} b{int(row['batch']):<4} "
+          f"scalar {row['scalar_ns_per_step']/1e6:9.2f} ms/step   "
+          f"lanes {row['lanes_ns_per_step']/1e6:9.2f} ms/step   "
+          f"{row['speedup']:.2f}x")
+    # A regression confined to one frequency must not hide behind the max.
+    if row["speedup"] < per_freq_floor:
+        print(f"FAIL: {freq} lane path fell below the per-frequency floor: "
+              f"{row['speedup']:.2f}x < {per_freq_floor:.2f}x")
+        failed = True
+if got < floor:
+    print(f"FAIL: vectorized path regressed: {got:.2f}x < {floor:.2f}x")
+    failed = True
+if failed:
+    sys.exit(1)
+print("perf gate OK")
+EOF

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Run one named test filter and fail if it matched nothing.
+#
+#   scripts/run_named_tests.sh <test-target> <name-filter>
+#
+# `cargo test` exits 0 when a name filter matches no tests, so a renamed
+# or feature-gated suite would silently stop running. This wrapper also
+# asserts that at least one test actually ran, turning that silent skip
+# into a CI failure. Used by .github/workflows/ci.yml for the hourly
+# dual-seasonality suite and the SIMD lane/scalar equivalence suite.
+set -euo pipefail
+
+if [ "$#" -ne 2 ]; then
+  echo "usage: $0 <test-target> <name-filter>" >&2
+  exit 2
+fi
+
+target="$1"
+filter="$2"
+
+if ! out=$(cargo test -q --test "$target" "$filter" 2>&1); then
+  echo "$out"
+  exit 1
+fi
+echo "$out"
+echo "$out" | grep -Eq "test result: ok\. [1-9][0-9]* passed" \
+  || { echo "ERROR: filter '$filter' matched no tests in --test $target"; exit 1; }
