@@ -36,7 +36,7 @@ fn roughness(fcs: &[Vec<f32>]) -> f64 {
 fn main() -> anyhow::Result<()> {
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 8);
     let backend = default_backend()?;
-    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() })?;
 
     println!("== §8.4 penalties ablation (quarterly, {epochs} epochs) ==\n");
     println!("{:<26} {:>10} {:>10} {:>12} {:>10}", "variant", "val sMAPE",

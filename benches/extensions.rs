@@ -18,7 +18,7 @@ fn env_usize(key: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     let backend = default_backend()?;
-    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() })?;
 
     println!("== §8.2/§8.5 extension frequencies ==\n");
     println!("{:<10} {:>7} {:>8} {:>12} {:>12} {:>12}", "freq", "series",

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(1);
     // scale 50 keeps every frequency populated (hourly: 9 series — one
     // full lane group) without making trainer setup dominate.
-    let corpus = generate(&GenOptions { scale: 50, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 50, ..Default::default() })?;
 
     // ---- scalar vs. lane-vectorized train step, per frequency ----
     let cap = if quick { 16 } else { 64 };
@@ -129,7 +129,7 @@ fn main() -> anyhow::Result<()> {
     // ---- legacy hot-path cases on the default backend ----
     // Regenerated at the historical scale (100) so these rows stay
     // comparable with previously logged EXPERIMENTS.md numbers.
-    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() })?;
     let backend = default_backend()?;
     let freq = Frequency::Quarterly;
     let b = 64usize;

@@ -1,0 +1,141 @@
+//! Serving-stack throughput bench: requests/sec and p95 latency of the
+//! dynamic-batching forecast pool with 1 worker vs N workers, same
+//! per-worker backend (1 compute thread each, so pool parallelism is the
+//! only parallelism being measured).
+//!
+//! Feeds the CI perf gate (`scripts/bench_gate.sh`): emitted as
+//! BENCH_4.json when `FAST_ESRNN_BENCH_JSON=<path>` is set; the gate
+//! fails when the N-worker pool stops beating the single-worker service
+//! by the committed floor (`benches/bench4_baseline.json`).
+//!
+//! Env:
+//!   FAST_ESRNN_QUICK=1        — CI mode: fewer requests
+//!   FAST_ESRNN_BENCH_JSON=p   — write the summary JSON to p
+//!
+//! Run with: `cargo bench --bench serving_throughput`
+
+use std::time::{Duration, Instant};
+
+use fast_esrnn::config::{Frequency, TrainConfig};
+use fast_esrnn::coordinator::{ModelState, Trainer};
+use fast_esrnn::data::{generate, GenOptions, Series};
+use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
+use fast_esrnn::runtime::{Backend, NativeBackend};
+use fast_esrnn::util::json::Json;
+
+const FREQ: Frequency = Frequency::Quarterly;
+const CLIENTS: usize = 4;
+
+/// Fire `n_req` requests from `CLIENTS` client threads at a pool of
+/// `workers` single-compute-thread workers; returns (req/s, p95 secs).
+fn run_load(state: &ModelState, candidates: &[Series], workers: usize,
+            n_req: usize) -> anyhow::Result<(f64, f64)> {
+    let service = ForecastService::start(
+        || Ok(Box::new(NativeBackend::with_threads(1)) as Box<dyn Backend>),
+        FREQ,
+        state.clone(),
+        ServiceOptions {
+            workers,
+            batch_window: Duration::from_millis(1),
+            max_batch: 8,
+        },
+    )?;
+    let per = n_req / CLIENTS;
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(CLIENTS);
+    for c in 0..CLIENTS {
+        let handle = service.handle.clone();
+        let reqs: Vec<ForecastRequest> = (0..per)
+            .map(|i| {
+                let s = &candidates[(c * per + i) % candidates.len()];
+                ForecastRequest {
+                    id: format!("{c}-{i}"),
+                    values: s.values.clone(),
+                    category: s.category,
+                }
+            })
+            .collect();
+        joins.push(std::thread::spawn(move || {
+            let rxs: Vec<_> = reqs
+                .into_iter()
+                .map(|r| handle.submit(r).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread panicked");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let st = service.handle.stats()?;
+    assert_eq!(st.requests, (per * CLIENTS) as u64, "dropped requests");
+    Ok(((per * CLIENTS) as f64 / secs, st.total.p95))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("FAST_ESRNN_QUICK").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n_req = if quick { 256 } else { 1024 };
+    let pool_workers = (threads / 2).clamp(2, 4);
+
+    // A small trained model + request series it never saw.
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() })?;
+    let tc = TrainConfig {
+        epochs: 1,
+        batch_size: 16,
+        patience: 50,
+        ..Default::default()
+    };
+    let backend = NativeBackend::new();
+    let mut trainer = Trainer::new(&backend, FREQ, &corpus, tc)?;
+    trainer.train(false)?;
+    let state = trainer.state.clone();
+    drop(trainer);
+    let candidates: Vec<Series> = generate(&GenOptions {
+        scale: 300,
+        seed: 777,
+        freqs: Some(vec![FREQ]),
+    })?
+    .series
+    .into_iter()
+    .filter(|s| s.len() >= 72)
+    .collect();
+    assert!(!candidates.is_empty());
+
+    println!("== serving throughput: 1 vs {pool_workers} workers ==");
+    println!("{threads} machine threads | {n_req} requests | {CLIENTS} \
+              clients | 1 compute thread per worker\n");
+    println!("{:<10} {:>12} {:>12}", "workers", "req/s", "p95");
+    let (rps_1, p95_1) = run_load(&state, &candidates, 1, n_req)?;
+    println!("{:<10} {:>12.1} {:>10.2}ms", 1, rps_1, p95_1 * 1e3);
+    let (rps_n, p95_n) = run_load(&state, &candidates, pool_workers, n_req)?;
+    println!("{:<10} {:>12.1} {:>10.2}ms", pool_workers, rps_n, p95_n * 1e3);
+    let speedup = rps_n / rps_1;
+    println!("\npool speedup: {speedup:.2}x requests/sec");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH_JSON") {
+        let row = |workers: usize, rps: f64, p95: f64| {
+            Json::obj(vec![
+                ("workers", Json::num(workers as f64)),
+                ("rps", Json::num(rps)),
+                ("p95_ms", Json::num(p95 * 1e3)),
+            ])
+        };
+        let doc = Json::obj(vec![
+            ("bench", Json::str("serving_throughput")),
+            ("quick", Json::Bool(quick)),
+            ("threads", Json::num(threads as f64)),
+            ("n_requests", Json::num(n_req as f64)),
+            ("single", row(1, rps_1, p95_1)),
+            ("pool", row(pool_workers, rps_n, p95_n)),
+            ("pool_speedup", Json::num(speedup)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let scale = env_usize("FAST_ESRNN_SCALE", 100);
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 10);
     let backend = default_backend()?;
-    let corpus = generate(&GenOptions { scale, ..Default::default() });
+    let corpus = generate(&GenOptions { scale, ..Default::default() })?;
     println!("corpus 1/{scale} of Table 2 | {epochs} epochs | backend {}\n",
              backend.platform());
 

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     println!("backend: {} | {} timed steps per config\n",
              backend.platform(), steps);
     // Generous corpus so every batch size has enough distinct series.
-    let corpus = generate(&GenOptions { scale: 50, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 50, ..Default::default() })?;
 
     println!("== Table 5 analogue: per-epoch training time vs batch size ==");
     println!("{:<10} {:>6} {:>7} {:>14} {:>16} {:>12} {:>9}",

@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let scale = env_usize("FAST_ESRNN_SCALE", 100);
     let epochs = env_usize("FAST_ESRNN_EPOCHS", 10);
     let backend = default_backend()?;
-    let corpus = generate(&GenOptions { scale, ..Default::default() });
+    let corpus = generate(&GenOptions { scale, ..Default::default() })?;
 
     println!("== Table 2 analogue (corpus calibration) ==");
     print!("{}", stats::render_count_table(&corpus));

@@ -10,7 +10,7 @@ use fast_esrnn::data::{generate, split_corpus, GenOptions};
 use fast_esrnn::metrics::{mase, smape, MetricAccumulator};
 
 fn main() -> anyhow::Result<()> {
-    let corpus = generate(&GenOptions::default()); // 1/100 Table 2 scale
+    let corpus = generate(&GenOptions::default())?; // 1/100 Table 2 scale
     println!("corpus: {} series\n", corpus.len());
 
     // Per-frequency sMAPE for each method (Table 4's row structure).

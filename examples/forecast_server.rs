@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let state = {
         let backend = default_backend()?;
         println!("backend: {}", backend.platform());
-        let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+        let corpus = generate(&GenOptions { scale: 400, ..Default::default() })?;
         let tc = TrainConfig { epochs: 2, batch_size: 16, ..Default::default() };
         let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
         trainer.train(false)?;
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
 
     // Request generators: a fresh corpus the model never saw.
     let corpus = generate(&GenOptions { scale: 300, seed: 777,
-                                        freqs: Some(vec![freq]) });
+                                        freqs: Some(vec![freq]) })?;
     let candidates: Vec<_> = corpus
         .series
         .iter()
@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
         })?;
         lat.push(t.elapsed().as_secs_f64());
     }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(|a, b| a.total_cmp(b));
 
     let st = service.handle.stats()?;
     println!("\nburst: {ok}/{n_req} ok in {burst_secs:.3}s \

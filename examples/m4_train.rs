@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let backend = default_backend()?;
     println!("backend: {} | corpus scale 1/{scale} | {epochs} epochs \
               | batch {batch}", backend.platform());
-    let corpus = generate(&GenOptions { scale, ..Default::default() });
+    let corpus = generate(&GenOptions { scale, ..Default::default() })?;
     println!("corpus: {} series", corpus.len());
 
     let mut esrnn_rows: Vec<(String, f64, f64, usize, f64)> = Vec::new();

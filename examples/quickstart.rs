@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     println!("backend: {}", backend.platform());
 
     // 2. A small deterministic corpus (1/400 of the M4 Table 2 counts).
-    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() })?;
     println!("corpus: {} series", corpus.len());
 
     // 3. Train quarterly ES-RNN for a few epochs.

@@ -340,7 +340,7 @@ mod tests {
     #[test]
     fn forecasts_are_finite_positive_on_generated_corpus() {
         use crate::data::{generate, GenOptions};
-        let corpus = generate(&GenOptions { scale: 2000, ..Default::default() });
+        let corpus = generate(&GenOptions { scale: 2000, ..Default::default() }).unwrap();
         for s in &corpus.series {
             if s.len() < 10 {
                 continue;

@@ -1,18 +1,89 @@
 //! Checkpointing: persist and restore a trained model (shared RNN state +
-//! the per-series parameter store) as JSON.
+//! the per-series parameter store) in two formats:
+//!
+//! * **JSON** (version 1) — human-friendly, diffable, the original
+//!   format;
+//! * **compact binary** — `FESRNNCK` magic + format version + a leaf
+//!   table (name, shape, little-endian f32 data per leaf). Roughly 4–5×
+//!   smaller than the JSON text and loses no precision to float→text
+//!   round-trips, which matters once serving hot-swaps reload
+//!   checkpoints on a live stack.
+//!
+//! [`save`] picks the format by extension (`.bin` → binary, anything
+//! else JSON); [`load`] and [`load_model_state`] sniff the magic bytes so
+//! either format loads regardless of file name.
 
+use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::store::ParamStore;
 use crate::coordinator::trainer::ModelState;
 use crate::runtime::HostTensor;
 use crate::util::json::Json;
 
-/// Serialize (state, store) to a JSON file.
+/// First 8 bytes of every binary checkpoint.
+pub const BINARY_MAGIC: [u8; 8] = *b"FESRNNCK";
+/// Current binary format version (independent of the JSON `version`).
+pub const BINARY_VERSION: u32 = 1;
+
+/// Serialize (state, store); format chosen by extension (`.bin` →
+/// binary, anything else the JSON format).
 pub fn save(path: impl AsRef<Path>, freq: &str, state: &ModelState,
             store: &ParamStore) -> Result<()> {
+    if path.as_ref().extension().is_some_and(|e| e == "bin") {
+        save_binary(path, freq, state, store)
+    } else {
+        save_json(path, freq, state, store)
+    }
+}
+
+/// Restore into an existing (state, store) pair; shapes must match. The
+/// format is sniffed from the magic bytes, not the file name. Returns
+/// the frequency the checkpoint was trained for.
+pub fn load(path: impl AsRef<Path>, state: &mut ModelState,
+            store: &mut ParamStore) -> Result<String> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.starts_with(&BINARY_MAGIC) {
+        load_binary_bytes(&bytes, state, store)
+    } else {
+        let text = std::str::from_utf8(&bytes)
+            .with_context(|| format!("{} is neither binary (no magic) nor \
+                                      UTF-8 JSON", path.as_ref().display()))?;
+        load_json_text(text, state, store)
+    }
+}
+
+/// Load only the shared model tensors (RNN weights + optimizer leaves)
+/// from either format — what a serving hot-swap needs: no parameter
+/// store sizing, no training-corpus coupling. Returns
+/// `(freq, ModelState)`.
+pub fn load_model_state(path: impl AsRef<Path>) -> Result<(String, ModelState)> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let mut state = ModelState { tensors: HashMap::new() };
+    if bytes.starts_with(&BINARY_MAGIC) {
+        let (mut c, freq, _n_series) = parse_binary_header(&bytes)?;
+        parse_binary_tensors(&mut c, &mut state)?;
+        Ok((freq, state))
+    } else {
+        let text = std::str::from_utf8(&bytes)
+            .with_context(|| format!("{} is neither binary (no magic) nor \
+                                      UTF-8 JSON", path.as_ref().display()))?;
+        let doc = Json::parse(text)?;
+        check_json_version(&doc)?;
+        insert_json_tensors(&doc, &mut state)?;
+        Ok((doc.get("freq")?.as_str()?.to_string(), state))
+    }
+}
+
+// ------------------------------ JSON ------------------------------
+
+/// Serialize (state, store) to the JSON format.
+pub fn save_json(path: impl AsRef<Path>, freq: &str, state: &ModelState,
+                 store: &ParamStore) -> Result<()> {
     let mut tensors = Vec::new();
     let mut names: Vec<&String> = state.tensors.keys().collect();
     names.sort();
@@ -44,25 +115,32 @@ pub fn save(path: impl AsRef<Path>, freq: &str, state: &ModelState,
         .with_context(|| format!("writing {}", path.as_ref().display()))
 }
 
-/// Restore into an existing (state, store) pair; shapes must match.
-pub fn load(path: impl AsRef<Path>, state: &mut ModelState,
-            store: &mut ParamStore) -> Result<String> {
-    let text = std::fs::read_to_string(path.as_ref())
-        .with_context(|| format!("reading {}", path.as_ref().display()))?;
-    let doc = Json::parse(&text)?;
+fn check_json_version(doc: &Json) -> Result<()> {
     if doc.get("version")?.as_usize()? != 1 {
         bail!("unsupported checkpoint version");
     }
-    if doc.get("n_series")?.as_usize()? != store.n {
-        bail!("checkpoint has {} series, store has {}",
-              doc.get("n_series")?.as_usize()?, store.n);
-    }
+    Ok(())
+}
+
+fn insert_json_tensors(doc: &Json, state: &mut ModelState) -> Result<()> {
     for t in doc.get("model")?.as_arr()? {
         let name = t.get("name")?.as_str()?.to_string();
         let shape = t.get("shape")?.as_usize_vec()?;
         let data = t.get("data")?.as_f32_vec()?;
         state.tensors.insert(name, HostTensor::new(shape, data)?);
     }
+    Ok(())
+}
+
+fn load_json_text(text: &str, state: &mut ModelState,
+                  store: &mut ParamStore) -> Result<String> {
+    let doc = Json::parse(text)?;
+    check_json_version(&doc)?;
+    if doc.get("n_series")?.as_usize()? != store.n {
+        bail!("checkpoint has {} series, store has {}",
+              doc.get("n_series")?.as_usize()?, store.n);
+    }
+    insert_json_tensors(&doc, state)?;
     let mut entries = Vec::new();
     for e in doc.get("series_store")?.as_arr()? {
         entries.push((
@@ -75,14 +153,193 @@ pub fn load(path: impl AsRef<Path>, state: &mut ModelState,
     Ok(doc.get("freq")?.as_str()?.to_string())
 }
 
+// ----------------------------- binary -----------------------------
+//
+// Layout (all integers little-endian, strings u32-length-prefixed UTF-8):
+//
+//   [0..8)   magic  "FESRNNCK"
+//   u32      format version (= 1)
+//   str      freq
+//   u64      n_series
+//   u64      seasonality (S1)
+//   u64      seasonality2 (S2; 0 for single-seasonality models)
+//   u32      model tensor count
+//     per tensor: str name, u32 rank, u64×rank dims, f32×∏dims data
+//   u32      series-store entry count
+//     per entry: str name, u64 width, u64 value count, f32×count data
+
+/// Serialize (state, store) to the compact binary format.
+pub fn save_binary(path: impl AsRef<Path>, freq: &str, state: &ModelState,
+                   store: &ParamStore) -> Result<()> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&BINARY_MAGIC);
+    put_u32(&mut out, BINARY_VERSION);
+    put_str(&mut out, freq);
+    put_u64(&mut out, store.n as u64);
+    put_u64(&mut out, store.seasonality as u64);
+    put_u64(&mut out, store.seasonality2 as u64);
+    let mut names: Vec<&String> = state.tensors.keys().collect();
+    names.sort();
+    put_u32(&mut out, names.len() as u32);
+    for name in names {
+        let t = &state.tensors[name];
+        put_str(&mut out, name);
+        put_u32(&mut out, t.shape.len() as u32);
+        for &d in &t.shape {
+            put_u64(&mut out, d as u64);
+        }
+        put_f32s(&mut out, &t.data);
+    }
+    let entries = store.export();
+    put_u32(&mut out, entries.len() as u32);
+    for (name, width, values) in &entries {
+        put_str(&mut out, name);
+        put_u64(&mut out, *width as u64);
+        put_u64(&mut out, values.len() as u64);
+        put_f32s(&mut out, values);
+    }
+    std::fs::write(path.as_ref(), out)
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+fn load_binary_bytes(bytes: &[u8], state: &mut ModelState,
+                     store: &mut ParamStore) -> Result<String> {
+    let (mut c, freq, n_series) = parse_binary_header(bytes)?;
+    if n_series != store.n {
+        bail!("checkpoint has {n_series} series, store has {}", store.n);
+    }
+    parse_binary_tensors(&mut c, state)?;
+    let n_entries = c.u32()? as usize;
+    let mut entries = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let name = c.str()?;
+        let width = c.usize64()?;
+        let count = c.usize64()?;
+        entries.push((name, width, c.f32s(count)?));
+    }
+    store.import(&entries)?;
+    Ok(freq)
+}
+
+/// Validate magic + version, read the header fields; the returned cursor
+/// is positioned at the model tensor count.
+fn parse_binary_header(bytes: &[u8]) -> Result<(Cursor<'_>, String, usize)> {
+    if !bytes.starts_with(&BINARY_MAGIC) {
+        bail!("not a binary checkpoint (bad magic)");
+    }
+    let mut c = Cursor { b: bytes, i: BINARY_MAGIC.len() };
+    let version = c.u32()?;
+    if version != BINARY_VERSION {
+        bail!("unsupported binary checkpoint version {version} \
+               (this build reads version {BINARY_VERSION})");
+    }
+    let freq = c.str()?;
+    let n_series = c.usize64()?;
+    let _seasonality = c.usize64()?;
+    let _seasonality2 = c.usize64()?;
+    Ok((c, freq, n_series))
+}
+
+fn parse_binary_tensors(c: &mut Cursor<'_>, state: &mut ModelState)
+                        -> Result<()> {
+    let n_tensors = c.u32()? as usize;
+    for _ in 0..n_tensors {
+        let name = c.str()?;
+        let rank = c.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank.min(16));
+        for _ in 0..rank {
+            shape.push(c.usize64()?);
+        }
+        let count = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| anyhow!("tensor `{name}`: shape {shape:?} \
+                                    overflows"))?;
+        let data = c.f32s(count)?;
+        state.tensors.insert(name, HostTensor::new(shape, data)?);
+    }
+    Ok(())
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    out.reserve(4 * v.len());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader; every method errors (instead of
+/// panicking) on truncated or oversized input.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow!("truncated binary checkpoint at byte \
+                                    {} (wanted {n} more)", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize64(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| anyhow!("binary checkpoint field exceeds usize"))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)
+            .context("binary checkpoint string is not UTF-8")?
+            .to_string())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("f32 run of {n} overflows"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hw::Primer;
     use std::collections::HashMap;
 
-    #[test]
-    fn roundtrip() {
+    fn demo_pair() -> (ModelState, ParamStore) {
         let mut state = ModelState { tensors: HashMap::new() };
         state.tensors.insert(
             "params.rnn.w".into(),
@@ -97,15 +354,23 @@ mod tests {
                 log_s_init: vec![0.1, 0.2],
             })
             .collect();
-        let store = ParamStore::from_primers(&primers, 2).unwrap();
+        (state, ParamStore::from_primers(&primers, 2).unwrap())
+    }
 
+    fn fresh_pair() -> (ModelState, ParamStore) {
+        let (_, store) = demo_pair();
+        (ModelState { tensors: HashMap::new() }, store)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (state, store) = demo_pair();
         let dir = std::env::temp_dir().join("fast_esrnn_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("ckpt.json");
         save(&path, "quarterly", &state, &store).unwrap();
 
-        let mut state2 = ModelState { tensors: HashMap::new() };
-        let mut store2 = ParamStore::from_primers(&primers, 2).unwrap();
+        let (mut state2, mut store2) = fresh_pair();
         // clobber store2 so load must restore it
         let t = HostTensor::new(vec![1], vec![-9.0]).unwrap();
         store2.scatter("params.series.alpha_logit", &[1], &[true], &t).unwrap();
@@ -115,6 +380,76 @@ mod tests {
         assert_eq!(state2.tensors["params.rnn.w"].data, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(state2.step(), 7.0);
         assert_eq!(store2.series_params(1).0, 1.0); // restored, not -9
+    }
+
+    #[test]
+    fn binary_roundtrip_matches_json() {
+        let (state, store) = demo_pair();
+        let dir = std::env::temp_dir().join("fast_esrnn_ckpt_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("ckpt.json");
+        let bin_path = dir.join("ckpt.bin");
+        save(&json_path, "quarterly", &state, &store).unwrap();
+        save(&bin_path, "quarterly", &state, &store).unwrap();
+
+        // The .bin file really is the binary format, and it is smaller.
+        let raw = std::fs::read(&bin_path).unwrap();
+        assert!(raw.starts_with(&BINARY_MAGIC));
+        let json_len = std::fs::metadata(&json_path).unwrap().len();
+        assert!((raw.len() as u64) < json_len,
+                "binary ({} B) should beat JSON ({} B)", raw.len(), json_len);
+
+        // Both load back to identical state + store.
+        let (mut sj, mut stj) = fresh_pair();
+        let (mut sb, mut stb) = fresh_pair();
+        assert_eq!(load(&json_path, &mut sj, &mut stj).unwrap(), "quarterly");
+        assert_eq!(load(&bin_path, &mut sb, &mut stb).unwrap(), "quarterly");
+        assert_eq!(sj.tensors.len(), sb.tensors.len());
+        for (name, t) in &sj.tensors {
+            assert_eq!(t, &sb.tensors[name], "tensor `{name}` differs");
+        }
+        assert_eq!(stj.export(), stb.export());
+    }
+
+    #[test]
+    fn load_model_state_from_both_formats() {
+        let (state, store) = demo_pair();
+        let dir = std::env::temp_dir().join("fast_esrnn_ckpt_lms");
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["m.json", "m.bin"] {
+            let path = dir.join(name);
+            save(&path, "monthly", &state, &store).unwrap();
+            let (freq, loaded) = load_model_state(&path).unwrap();
+            assert_eq!(freq, "monthly");
+            assert_eq!(loaded.tensors["params.rnn.w"].data,
+                       vec![1.0, 2.0, 3.0, 4.0]);
+            assert_eq!(loaded.tensors.len(), state.tensors.len());
+        }
+    }
+
+    #[test]
+    fn binary_rejects_truncation_and_bad_version() {
+        let (state, store) = demo_pair();
+        let dir = std::env::temp_dir().join("fast_esrnn_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        save(&path, "yearly", &state, &store).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+
+        // Truncated: must error, not panic.
+        let cut = dir.join("cut.bin");
+        std::fs::write(&cut, &raw[..raw.len() / 2]).unwrap();
+        let (mut s, mut st) = fresh_pair();
+        assert!(load(&cut, &mut s, &mut st).is_err());
+
+        // Future version: descriptive error.
+        let mut bumped = raw.clone();
+        bumped[8] = 0xFF;
+        let vpath = dir.join("v255.bin");
+        std::fs::write(&vpath, &bumped).unwrap();
+        let (mut s, mut st) = fresh_pair();
+        let err = load(&vpath, &mut s, &mut st).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
     }
 
     #[test]
@@ -131,8 +466,6 @@ mod tests {
         let store = ParamStore::from_primers(&primers, 1).unwrap();
         let dir = std::env::temp_dir().join("fast_esrnn_ckpt_test2");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("ckpt.json");
-        save(&path, "yearly", &state, &store).unwrap();
 
         let bigger: Vec<Primer> = (0..5)
             .map(|_| Primer {
@@ -142,8 +475,13 @@ mod tests {
                 log_s_init: vec![0.0],
             })
             .collect();
-        let mut state2 = ModelState { tensors: HashMap::new() };
-        let mut store2 = ParamStore::from_primers(&bigger, 1).unwrap();
-        assert!(load(&path, &mut state2, &mut store2).is_err());
+        for name in ["ckpt.json", "ckpt.bin"] {
+            let path = dir.join(name);
+            save(&path, "yearly", &state, &store).unwrap();
+            let mut state2 = ModelState { tensors: HashMap::new() };
+            let mut store2 = ParamStore::from_primers(&bigger, 1).unwrap();
+            assert!(load(&path, &mut state2, &mut store2).is_err(),
+                    "{name} should reject a 5-series store");
+        }
     }
 }

@@ -13,6 +13,8 @@
 //!   breakdown is meaningful);
 //! * fully deterministic given a seed.
 
+use anyhow::{anyhow, Result};
+
 use crate::config::{Category, Frequency, ALL_CATEGORIES};
 use crate::data::types::{Corpus, Series};
 use crate::util::rng::Rng;
@@ -55,22 +57,31 @@ impl Default for GenOptions {
     }
 }
 
-fn length_params(freq: Frequency) -> (f64, f64, usize, usize) {
-    let row = TABLE3_LENGTHS.iter().find(|r| r.0 == freq).unwrap();
-    (row.1, row.2, row.3, row.4)
+/// Table 3 length statistics for `freq` — a descriptive error (instead
+/// of a panic) when the frequency has no row, so a [`TABLE2_COUNTS`] /
+/// [`TABLE3_LENGTHS`] drift (e.g. a new `Frequency` variant added to one
+/// table only) surfaces as a diagnosable failure.
+fn length_params(freq: Frequency) -> Result<(f64, f64, usize, usize)> {
+    TABLE3_LENGTHS
+        .iter()
+        .find(|r| r.0 == freq)
+        .map(|row| (row.1, row.2, row.3, row.4))
+        .ok_or_else(|| anyhow!("no Table 3 length statistics for frequency \
+                                `{}` — add a TABLE3_LENGTHS row for it",
+                               freq.name()))
 }
 
 /// Sample a series length approximating the Table 3 distribution
 /// (lognormal matched to mean/std, clamped to [min, max]).
-fn sample_length(rng: &mut Rng, freq: Frequency) -> usize {
-    let (mean, std, min, max) = length_params(freq);
+fn sample_length(rng: &mut Rng, freq: Frequency) -> Result<usize> {
+    let (mean, std, min, max) = length_params(freq)?;
     // Lognormal moment matching: if X ~ LN(mu, s), E=exp(mu+s²/2),
     // Var=(exp(s²)-1)E².
     let cv2 = (std / mean).powi(2);
     let s2 = (1.0 + cv2).ln();
     let mu = mean.ln() - s2 / 2.0;
     let x = (mu + s2.sqrt() * rng.normal()).exp();
-    (x.round() as usize).clamp(min, max)
+    Ok((x.round() as usize).clamp(min, max))
 }
 
 /// Category-specific structure. Tuned so categories *differ*: this is what
@@ -112,10 +123,10 @@ fn profile(cat: Category) -> CatProfile {
     }
 }
 
-/// Generate one series.
+/// Generate one series. Errors when `freq` has no Table 3 length row.
 pub fn gen_series(rng: &mut Rng, id: String, freq: Frequency,
-                  cat: Category) -> Series {
-    let n = sample_length(rng, freq);
+                  cat: Category) -> Result<Series> {
+    let n = sample_length(rng, freq)?;
     let p = profile(cat);
     let period = freq.seasonality();
 
@@ -166,11 +177,13 @@ pub fn gen_series(rng: &mut Rng, id: String, freq: Frequency,
         let v = (level * seas.max(0.05) * shock * eps.max(0.05)).max(1e-3);
         values.push(v as f32);
     }
-    Series { id, freq, category: cat, values }
+    Ok(Series { id, freq, category: cat, values })
 }
 
-/// Generate the whole corpus per `GenOptions`.
-pub fn generate(opts: &GenOptions) -> Corpus {
+/// Generate the whole corpus per `GenOptions`. Errors (instead of
+/// panicking mid-generation) when a requested frequency has no Table 3
+/// length statistics.
+pub fn generate(opts: &GenOptions) -> Result<Corpus> {
     let mut rng = Rng::new(opts.seed);
     let mut series = Vec::new();
     for (freq, counts) in TABLE2_COUNTS {
@@ -190,11 +203,11 @@ pub fn generate(opts: &GenOptions) -> Corpus {
                 let id = format!("{}-{}-{:05}",
                                  freq.name(), cat.name().to_lowercase(), k);
                 let mut srng = rng.fork((ci * 1_000_003 + k) as u64);
-                series.push(gen_series(&mut srng, id, freq, cat));
+                series.push(gen_series(&mut srng, id, freq, cat)?);
             }
         }
     }
-    Corpus::new(series)
+    Ok(Corpus::new(series))
 }
 
 #[cfg(test)]
@@ -204,8 +217,8 @@ mod tests {
     #[test]
     fn deterministic() {
         let opts = GenOptions { scale: 1000, ..Default::default() };
-        let a = generate(&opts);
-        let b = generate(&opts);
+        let a = generate(&opts).unwrap();
+        let b = generate(&opts).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.series.iter().zip(&b.series) {
             assert_eq!(x.id, y.id);
@@ -216,7 +229,7 @@ mod tests {
     #[test]
     fn counts_scale_from_table2() {
         let opts = GenOptions { scale: 100, ..Default::default() };
-        let c = generate(&opts);
+        let c = generate(&opts).unwrap();
         let t = c.count_table();
         // yearly demographic: ceil(1088/100) = 11
         assert_eq!(t[&(Frequency::Yearly, Category::Demographic)], 11);
@@ -230,10 +243,10 @@ mod tests {
     #[test]
     fn values_positive_and_lengths_in_range() {
         let opts = GenOptions { scale: 200, ..Default::default() };
-        let c = generate(&opts);
+        let c = generate(&opts).unwrap();
         assert!(!c.is_empty());
         for s in &c.series {
-            let (_, _, min, max) = length_params(s.freq);
+            let (_, _, min, max) = length_params(s.freq).unwrap();
             assert!(s.len() >= min && s.len() <= max,
                     "{}: len {} outside [{min}, {max}]", s.id, s.len());
             assert!(s.values.iter().all(|v| *v > 0.0), "{} has nonpositive", s.id);
@@ -243,8 +256,9 @@ mod tests {
     #[test]
     fn length_distribution_tracks_table3_roughly() {
         let mut rng = Rng::new(7);
-        let lens: Vec<usize> =
-            (0..4000).map(|_| sample_length(&mut rng, Frequency::Monthly)).collect();
+        let lens: Vec<usize> = (0..4000)
+            .map(|_| sample_length(&mut rng, Frequency::Monthly).unwrap())
+            .collect();
         let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
         // Clamping skews the moments; just require the right ballpark.
         assert!((120.0..280.0).contains(&mean), "mean {mean}");
@@ -257,7 +271,8 @@ mod tests {
         // much more than Finance-without-seasonality on average.
         let mut rng = Rng::new(99);
         let s = gen_series(&mut rng, "x".into(), Frequency::Monthly,
-                           Category::Industry);
+                           Category::Industry)
+            .unwrap();
         let v: Vec<f64> = s.values.iter().map(|x| (*x as f64).ln()).collect();
         let d: Vec<f64> = v.windows(2).map(|w| w[1] - w[0]).collect();
         let lag = 12;

@@ -1,0 +1,382 @@
+//! Zero-dependency HTTP/1.1 front-end over `std::net::TcpListener`,
+//! serving a [`ServingStack`] with `util::json` as the wire format (no
+//! async runtime, no frameworks — the offline build vendors nothing).
+//!
+//! Routes (all request/response bodies are JSON):
+//!
+//! * `POST /forecast` — `{"freq"?, "id"?, "category"?, "values": [..]}`
+//!   → `{"id", "freq", "generation", "forecast": [..]}`. `freq` may be
+//!   omitted when exactly one frequency is being served.
+//! * `GET /stats` — per-frequency [`ServiceStats`](super::ServiceStats)
+//!   (counters + p50/p95/p99 phase latencies in ms).
+//! * `GET /healthz` — `{"status": "ok", "frequencies": [..],
+//!   "generations": {..}}`.
+//! * `POST /reload` — `{"freq"?, "checkpoint": "<server-local path>"}`
+//!   → `{"freq", "generation"}`. Hot-swaps the model from a checkpoint
+//!   (JSON or compact binary, sniffed by magic) without dropping queued
+//!   requests. Operator-facing: the path is resolved on the server.
+//!
+//! Client errors → `400 {"error": ...}`; unknown routes → 404; wrong
+//! method → 405; faults while serving a valid forecast request (backend
+//! error, pool shut down) → 500. One thread per connection (requests are
+//! short-lived and
+//! the heavy lifting is already pooled behind the dynamic-batching
+//! queue); `Connection: close` semantics keep the loop simple.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Category, Frequency};
+use crate::util::json::Json;
+
+use super::router::ServingStack;
+use super::ForecastRequest;
+
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// A running HTTP front-end: an accept-loop thread dispatching each
+/// connection to a short-lived handler thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port —
+    /// read it back from [`Self::addr`]) and start serving `stack`.
+    pub fn start(stack: Arc<ServingStack>, addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let stack = Arc::clone(&stack);
+                    let _ = std::thread::Builder::new()
+                        .name("http-conn".into())
+                        .spawn(move || handle_connection(&stack, stream));
+                }
+            })?;
+        Ok(Self { addr: local, shutdown, accept: Some(accept) })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections. In-flight handlers finish on their
+    /// own threads (bounded by the per-connection read timeout).
+    pub fn shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            // Unblock the accept loop with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct ParsedRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn handle_connection(stack: &ServingStack, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let (code, body) = match read_request(&mut stream) {
+        Ok(req) => route(stack, &req),
+        Err(e) => (400, err_json(&format!("{e:#}"))),
+    };
+    let _ = write_response(&mut stream, code, &body.to_string());
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<ParsedRequest> {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subsequence(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            bail!("request headers too large");
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_ascii_uppercase();
+    let raw_path = parts.next().unwrap_or("/");
+    let path = raw_path.split('?').next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad Content-Length `{}`", v.trim()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body too large ({content_length} bytes)");
+    }
+    let body_start = (header_end + 4).min(buf.len());
+    let mut body = buf[body_start..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(ParsedRequest {
+        method,
+        path,
+        body: String::from_utf8(body).context("request body is not UTF-8")?,
+    })
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+fn route(stack: &ServingStack, req: &ParsedRequest) -> (u16, Json) {
+    let reply = |r: Result<Json>| match r {
+        Ok(j) => (200, j),
+        Err(e) => (400, err_json(&format!("{e:#}"))),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/forecast") => match handle_forecast(stack, &req.body) {
+            Ok(j) => (200, j),
+            Err(code_body) => code_body,
+        },
+        ("POST", "/reload") => reply(handle_reload(stack, &req.body)),
+        ("GET", "/stats") => (200, handle_stats(stack)),
+        ("GET", "/healthz") => (200, handle_healthz(stack)),
+        (_, "/forecast" | "/reload" | "/stats" | "/healthz") => {
+            (405, err_json(&format!("method {} not allowed for {}",
+                                    req.method, req.path)))
+        }
+        _ => (404, err_json(&format!("no route for {} {}", req.method,
+                                     req.path))),
+    }
+}
+
+fn resolve_freq(stack: &ServingStack, doc: &Json) -> Result<Frequency> {
+    match doc.opt("freq") {
+        Some(j) => Frequency::parse(j.as_str()?),
+        None => stack.single_frequency().ok_or_else(|| {
+            anyhow!("`freq` is required when serving multiple frequencies \
+                     ({})",
+                    stack
+                        .frequencies()
+                        .iter()
+                        .map(|f| f.name())
+                        .collect::<Vec<_>>()
+                        .join(", "))
+        }),
+    }
+}
+
+/// `Ok(json)` on success; `Err((status, body))` otherwise — malformed /
+/// unroutable / too-short requests are 400, faults *while serving* a
+/// valid request (backend error, pool shut down) are 500 so monitoring
+/// and load balancers see a server outage, not a client mistake.
+fn handle_forecast(stack: &ServingStack, body: &str)
+                   -> Result<Json, (u16, Json)> {
+    let (freq, req) = parse_forecast_request(stack, body)
+        .map_err(|e| (400, err_json(&format!("{e:#}"))))?;
+    let resp = stack
+        .forecast(freq, req)
+        .map_err(|e| (500, err_json(&format!("{e:#}"))))?;
+    Ok(Json::obj(vec![
+        ("id", Json::str(resp.id)),
+        ("freq", Json::str(freq.name())),
+        ("generation", Json::num(resp.generation as f64)),
+        ("forecast", Json::arr_f32(&resp.forecast)),
+    ]))
+}
+
+/// Validate everything client-controlled up front, including the history
+/// length (mirroring the pool's own submit-time check) so a short
+/// request is a clean 400 before it ever reaches the queue.
+fn parse_forecast_request(stack: &ServingStack, body: &str)
+                          -> Result<(Frequency, ForecastRequest)> {
+    let doc = Json::parse(body).context("request body")?;
+    let freq = resolve_freq(stack, &doc)?;
+    let values = doc.get("values")?.as_f32_vec()?;
+    let id = match doc.opt("id") {
+        Some(j) => j.as_str()?.to_string(),
+        None => "http".to_string(),
+    };
+    let category = match doc.opt("category") {
+        Some(j) => Category::parse(j.as_str()?)?,
+        None => Category::Other,
+    };
+    let need = stack.required_length(freq)?;
+    if values.len() < need {
+        bail!("request needs ≥ {need} history values for {}, got {}",
+              freq.name(), values.len());
+    }
+    Ok((freq, ForecastRequest { id, values, category }))
+}
+
+fn handle_reload(stack: &ServingStack, body: &str) -> Result<Json> {
+    let doc = Json::parse(body).context("request body")?;
+    let freq = resolve_freq(stack, &doc)?;
+    let path = doc.get("checkpoint")?.as_str()?;
+    let generation = stack.reload_checkpoint(freq, path)?;
+    Ok(Json::obj(vec![
+        ("freq", Json::str(freq.name())),
+        ("generation", Json::num(generation as f64)),
+    ]))
+}
+
+fn handle_stats(stack: &ServingStack) -> Json {
+    Json::Obj(
+        stack
+            .stats_all()
+            .iter()
+            .map(|(f, s)| (f.name().to_string(), s.to_json()))
+            .collect(),
+    )
+}
+
+fn handle_healthz(stack: &ServingStack) -> Json {
+    let freqs = stack.frequencies();
+    Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("frequencies",
+         Json::Arr(freqs.iter().map(|f| Json::str(f.name())).collect())),
+        ("generations",
+         Json::Obj(
+             freqs
+                 .iter()
+                 .map(|f| {
+                     (f.name().to_string(),
+                      Json::num(stack.generation(*f).unwrap_or(0) as f64))
+                 })
+                 .collect(),
+         )),
+    ])
+}
+
+fn write_response(stream: &mut TcpStream, code: u16, body: &str)
+                  -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len());
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal blocking HTTP client for the CLI demo and integration tests:
+/// one request per connection (`Connection: close`), returns
+/// `(status code, body)`.
+pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&str>)
+                    -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len());
+    stream.write_all(req.as_bytes())?;
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf)?;
+    parse_http_response(std::str::from_utf8(&buf).context("response UTF-8")?)
+}
+
+/// Split a raw HTTP/1.1 response into (status code, body).
+fn parse_http_response(text: &str) -> Result<(u16, String)> {
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response (no header end)"))?;
+    let code = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| anyhow!("malformed HTTP status line"))?;
+    Ok((code, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_parsing() {
+        let (code, body) = parse_http_response(
+            "HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "{}");
+        assert!(parse_http_response("garbage").is_err());
+        assert!(parse_http_response("HTTP/1.1 x\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn subsequence_search() {
+        assert_eq!(find_subsequence(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subsequence(b"abcd", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn error_body_shape() {
+        let j = err_json("boom");
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+}

@@ -1,30 +1,47 @@
-//! Forecast service: a vLLM-router-style request loop over the backend's
-//! predict program.
+//! The serving subsystem: dynamic-batching forecast pools, a
+//! multi-frequency router with generation-tagged model hot-swap, and a
+//! zero-dependency HTTP front-end.
 //!
-//! Clients submit single series; the service dynamically batches them
-//! (collect-until-deadline, like continuous batching in serving systems),
-//! splits the pending set into executions no larger than the biggest
-//! available batch program, pads each execution up to the smallest
-//! program that fits, runs the backend and fans the results back out.
+//! Three layers (one file each):
 //!
-//! Backends may be `!Send` (the PJRT client is), so the service owns its
-//! backend on a dedicated thread and *constructs it there* from a factory
-//! closure; the public [`ForecastHandle`] is a cheap clonable channel
-//! endpoint usable from any thread (no async runtime available offline —
-//! std threads + mpsc).
+//! * [`pool`] — [`FreqPool`]: N worker threads for one frequency, each
+//!   owning its own backend (backends may be `!Send`), pulling
+//!   drain-rounds from one shared dynamic-batching queue so executions
+//!   overlap instead of serializing. The pool holds the current model in
+//!   a generation-tagged swap slot: a reload publishes a new
+//!   [`coordinator::ModelState`](crate::coordinator::ModelState) which
+//!   workers adopt at batch boundaries — every response is produced from
+//!   exactly one generation and tagged with it, and the request queue is
+//!   never dropped.
+//! * [`router`] — [`ServingStack`]: one pool per trained frequency,
+//!   dispatching requests by frequency and exposing the hot-swap API
+//!   (including checkpoint reloads in either persistence format).
+//! * [`http`] — [`HttpServer`]: `POST /forecast`, `GET /stats`,
+//!   `GET /healthz`, `POST /reload` over `std::net::TcpListener` and
+//!   [`util::json`](crate::util::json) — no async runtime, no frameworks.
+//!
+//! [`ForecastService`] keeps the original single-frequency API as a thin
+//! wrapper over a one-pool stack: existing callers (tests, examples, the
+//! CLI demo path) keep working unchanged.
 
-use std::collections::HashMap;
+pub mod http;
+pub mod pool;
+pub mod router;
+
+pub use http::HttpServer;
+pub use pool::{ForecastHandle, FreqPool};
+pub use router::ServingStack;
+
 use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
-use crate::config::{Category, Frequency, NetworkConfig};
+use crate::config::{Category, Frequency};
 use crate::coordinator::ModelState;
-use crate::hw;
-use crate::runtime::{execute_with_maps, Backend, HostTensor, Manifest,
-                     NativeBackend};
+use crate::runtime::{Backend, NativeBackend};
+use crate::telemetry::LatencySummary;
+use crate::util::json::Json;
 
 /// A single forecast request: raw history (≥ C values) + category.
 #[derive(Debug, Clone)]
@@ -34,122 +51,143 @@ pub struct ForecastRequest {
     pub category: Category,
 }
 
-/// The H-step forecast for one request.
+/// The H-step forecast for one request, tagged with the model generation
+/// that produced it (every value comes from that one coherent state).
 #[derive(Debug, Clone)]
 pub struct ForecastResponse {
     pub id: String,
     pub forecast: Vec<f32>,
+    pub generation: u64,
 }
 
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceOptions {
-    /// How long to hold the first request while more arrive.
+    /// How long a worker holds the first request of a round while more
+    /// arrive.
     pub batch_window: Duration,
     /// Cap on requests drained per batching round. May exceed the largest
     /// available batch program: the round is split into multiple
     /// executions, each padded-accounted individually.
     pub max_batch: usize,
+    /// Worker threads per frequency, each with its own backend. 1 keeps
+    /// the original single-thread service behavior.
+    pub workers: usize,
 }
 
 impl Default for ServiceOptions {
     fn default() -> Self {
-        Self { batch_window: Duration::from_millis(4), max_batch: 256 }
+        Self {
+            batch_window: Duration::from_millis(4),
+            max_batch: 256,
+            workers: 1,
+        }
     }
 }
 
-/// Counters exposed for tests/benches.
+/// Counters + latency percentiles exposed for tests/benches and the
+/// `GET /stats` endpoint. Latencies are sliding-window percentiles from
+/// [`telemetry::Quantiles`](crate::telemetry::Quantiles), in seconds.
 #[derive(Debug, Default, Clone)]
 pub struct ServiceStats {
+    /// Requests accepted into the queue.
     pub requests: u64,
+    /// Requests rejected before enqueue (short history etc.).
+    pub rejected: u64,
     /// Executed batches (one per backend execution, not per drain round).
     pub batches: u64,
     pub padded_slots: u64,
+    /// Completed model hot-swaps.
+    pub reloads: u64,
+    /// Current model generation.
+    pub generation: u64,
+    /// Worker threads serving the pool.
+    pub workers: usize,
+    /// Enqueue → drain-round pickup.
+    pub queue_wait: LatencySummary,
+    /// Backend execution, per request (chunk time attributed to each
+    /// request in the chunk).
+    pub execute: LatencySummary,
+    /// Enqueue → response sent.
+    pub total: LatencySummary,
 }
 
-enum Msg {
-    Request(ForecastRequest, mpsc::Sender<Result<ForecastResponse>>),
-    Stats(mpsc::Sender<ServiceStats>),
-    Shutdown,
-}
-
-/// Clonable client handle to a running service.
-#[derive(Clone)]
-pub struct ForecastHandle {
-    tx: mpsc::Sender<Msg>,
-}
-
-impl ForecastHandle {
-    /// Blocking single forecast.
-    pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Request(req, tx))
-            .map_err(|_| anyhow!("forecast service is down"))?;
-        rx.recv().map_err(|_| anyhow!("forecast service dropped reply"))?
-    }
-
-    /// Submit without waiting; returns the reply receiver.
-    pub fn submit(&self, req: ForecastRequest)
-                  -> Result<mpsc::Receiver<Result<ForecastResponse>>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Request(req, tx))
-            .map_err(|_| anyhow!("forecast service is down"))?;
-        Ok(rx)
-    }
-
-    pub fn stats(&self) -> Result<ServiceStats> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Stats(tx))
-            .map_err(|_| anyhow!("forecast service is down"))?;
-        rx.recv().map_err(|_| anyhow!("forecast service dropped reply"))
-    }
-
-    pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
+impl ServiceStats {
+    /// JSON shape served by `GET /stats` (latencies in milliseconds).
+    pub fn to_json(&self) -> Json {
+        let lat = |s: &LatencySummary| {
+            Json::obj(vec![
+                ("count", Json::num(s.count as f64)),
+                ("p50_ms", Json::num(s.p50 * 1e3)),
+                ("p95_ms", Json::num(s.p95 * 1e3)),
+                ("p99_ms", Json::num(s.p99 * 1e3)),
+            ])
+        };
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("padded_slots", Json::num(self.padded_slots as f64)),
+            ("reloads", Json::num(self.reloads as f64)),
+            ("generation", Json::num(self.generation as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("queue_wait", lat(&self.queue_wait)),
+            ("execute", lat(&self.execute)),
+            ("total", lat(&self.total)),
+        ])
     }
 }
 
-/// A running forecast service (backend thread + request channel).
+/// Pick the smallest available batch that fits `n`; callers must have
+/// already split `n` to at most the largest available size.
+pub(crate) fn pick_batch(available: &[usize], n: usize) -> usize {
+    available
+        .iter()
+        .copied()
+        .filter(|b| *b >= n)
+        .min()
+        .unwrap_or_else(|| available.iter().copied().max().unwrap_or(1))
+}
+
+/// Split a pending set of `n` requests into per-execution real counts,
+/// each at most the largest available batch program. A drain round larger
+/// than the biggest program becomes several executions instead of
+/// silently truncating (the old behavior under-counted `padded_slots`
+/// and over-read the forecast buffer).
+pub(crate) fn plan_batches(available: &[usize], n: usize) -> Vec<usize> {
+    let cap = available.iter().copied().max().unwrap_or(1);
+    let mut plan = Vec::with_capacity(n.div_ceil(cap));
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(cap);
+        plan.push(take);
+        remaining -= take;
+    }
+    plan
+}
+
+/// A running single-frequency forecast service: the original API, now a
+/// wrapper over a one-frequency [`FreqPool`] (`opts.workers` threads).
 pub struct ForecastService {
     pub handle: ForecastHandle,
-    join: Option<JoinHandle<()>>,
+    _pool: FreqPool,
 }
 
 impl ForecastService {
-    /// Start the service for one frequency with a backend built by
-    /// `factory` *on the service thread* (backends may be `!Send`).
-    /// `state` is a trained [`ModelState`]; requests for series the model
-    /// was not trained on get classical primer parameters (the shared RNN
-    /// generalizes — paper §9's "generalization towards specific
-    /// problems").
+    /// Start the service for one frequency with backends built by
+    /// `factory` *on each worker thread* (backends may be `!Send`; the
+    /// factory is called once per worker). `state` is a trained
+    /// [`ModelState`]; requests for series the model was not trained on
+    /// get classical primer parameters (the shared RNN generalizes —
+    /// paper §9's "generalization towards specific problems").
     pub fn start<F>(factory: F, freq: Frequency, state: ModelState,
                     opts: ServiceOptions) -> Result<Self>
     where
-        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
-        let net = NetworkConfig::for_freq(freq)?;
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name(format!("forecast-{}", freq.name()))
-            .spawn(move || {
-                match factory() {
-                    Ok(backend) => {
-                        let _ = ready_tx.send(Ok(()));
-                        serve(backend.as_ref(), net, state, opts, rx);
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                    }
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("service thread died during startup"))??;
-        Ok(Self { handle: ForecastHandle { tx }, join: Some(join) })
+        let pool = FreqPool::start(std::sync::Arc::new(factory), freq, state,
+                                   opts)?;
+        Ok(Self { handle: pool.handle(), _pool: pool })
     }
 
     /// Start on the pure-Rust native backend (no artifacts needed).
@@ -173,177 +211,8 @@ impl ForecastService {
     }
 }
 
-impl Drop for ForecastService {
-    fn drop(&mut self) {
-        self.handle.shutdown();
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-/// Pick the smallest available batch that fits `n`; callers must have
-/// already split `n` to at most the largest available size.
-fn pick_batch(available: &[usize], n: usize) -> usize {
-    available
-        .iter()
-        .copied()
-        .filter(|b| *b >= n)
-        .min()
-        .unwrap_or_else(|| available.iter().copied().max().unwrap_or(1))
-}
-
-/// Split a pending set of `n` requests into per-execution real counts,
-/// each at most the largest available batch program. A drain round larger
-/// than the biggest program becomes several executions instead of
-/// silently truncating (the old behavior under-counted `padded_slots`
-/// and over-read the forecast buffer).
-fn plan_batches(available: &[usize], n: usize) -> Vec<usize> {
-    let cap = available.iter().copied().max().unwrap_or(1);
-    let mut plan = Vec::with_capacity(n.div_ceil(cap));
-    let mut remaining = n;
-    while remaining > 0 {
-        let take = remaining.min(cap);
-        plan.push(take);
-        remaining -= take;
-    }
-    plan
-}
-
-fn serve(backend: &dyn Backend, net: NetworkConfig, state: ModelState,
-         opts: ServiceOptions, rx: mpsc::Receiver<Msg>) {
-    let freq = net.freq.name().to_string();
-    let available = backend.manifest().available_batches(&freq, "predict");
-    let mut stats = ServiceStats::default();
-
-    loop {
-        // Block for the first message.
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => return,
-        };
-        let mut pending: Vec<(ForecastRequest,
-                              mpsc::Sender<Result<ForecastResponse>>)> = Vec::new();
-        match first {
-            Msg::Shutdown => return,
-            Msg::Stats(tx) => {
-                let _ = tx.send(stats.clone());
-                continue;
-            }
-            Msg::Request(r, tx) => pending.push((r, tx)),
-        }
-        // Dynamic batching window: gather more requests until deadline.
-        let deadline = Instant::now() + opts.batch_window;
-        while pending.len() < opts.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Request(r, tx)) => pending.push((r, tx)),
-                Ok(Msg::Stats(tx)) => {
-                    let _ = tx.send(stats.clone());
-                }
-                Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    // Serve what we have, then exit.
-                    run_round(backend, &net, &state, &available, &mut stats,
-                              &mut pending);
-                    return;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-            }
-        }
-        run_round(backend, &net, &state, &available, &mut stats, &mut pending);
-    }
-}
-
-/// Serve one drained round of requests, splitting it into as many backend
-/// executions as the available batch sizes require.
-fn run_round(backend: &dyn Backend, net: &NetworkConfig, state: &ModelState,
-             available: &[usize], stats: &mut ServiceStats,
-             pending: &mut Vec<(ForecastRequest,
-                                mpsc::Sender<Result<ForecastResponse>>)>) {
-    if pending.is_empty() {
-        return;
-    }
-    stats.requests += pending.len() as u64;
-    let mut start = 0usize;
-    for real in plan_batches(available, pending.len()) {
-        let chunk = &pending[start..start + real];
-        stats.batches += 1;
-        match execute_batch(backend, net, state, available, stats, chunk) {
-            Ok(forecasts) => {
-                for ((req, tx), fc) in chunk.iter().zip(forecasts) {
-                    let _ = tx.send(Ok(ForecastResponse {
-                        id: req.id.clone(),
-                        forecast: fc,
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for (_, tx) in chunk {
-                    let _ = tx.send(Err(anyhow!("{msg}")));
-                }
-            }
-        }
-        start += real;
-    }
-    pending.clear();
-}
-
-fn execute_batch(backend: &dyn Backend, net: &NetworkConfig,
-                 state: &ModelState, available: &[usize],
-                 stats: &mut ServiceStats,
-                 pending: &[(ForecastRequest,
-                             mpsc::Sender<Result<ForecastResponse>>)])
-                 -> Result<Vec<Vec<f32>>> {
-    let n = pending.len();
-    let b = pick_batch(available, n);
-    let c = net.length;
-    let h = net.horizon;
-    stats.padded_slots += (b - n.min(b)) as u64;
-
-    // Assemble y/cat plus per-request primer parameters.
-    let mut y = Vec::with_capacity(b * c);
-    let mut cat = vec![0.0f32; b * 6];
-    let mut inputs: HashMap<String, HostTensor> = HashMap::new();
-    let s_width = net.total_seasonality();
-    let mut alpha = Vec::with_capacity(b);
-    let mut gamma = Vec::with_capacity(b);
-    let mut gamma2 = Vec::with_capacity(b);
-    let mut s_init = Vec::with_capacity(b * s_width);
-    for slot in 0..b {
-        let (req, _) = &pending[slot.min(n - 1)];
-        if req.values.len() < c {
-            bail!("request `{}`: need ≥ {c} values, got {}", req.id,
-                  req.values.len());
-        }
-        let window = &req.values[req.values.len() - c..];
-        y.extend_from_slice(window);
-        cat[slot * 6 + req.category.index()] = 1.0;
-        let p = hw::primer_for(window, net.seasonality, net.seasonality2);
-        alpha.push(p.alpha_logit);
-        gamma.push(p.gamma_logit);
-        gamma2.push(p.gamma2_logit);
-        s_init.extend_from_slice(&p.log_s_init);
-    }
-    inputs.insert("data.y".into(), HostTensor::new(vec![b, c], y)?);
-    inputs.insert("data.cat".into(), HostTensor::new(vec![b, 6], cat)?);
-    inputs.insert("params.series.alpha_logit".into(),
-                  HostTensor::new(vec![b], alpha)?);
-    inputs.insert("params.series.gamma_logit".into(),
-                  HostTensor::new(vec![b], gamma)?);
-    inputs.insert("params.series.gamma2_logit".into(),
-                  HostTensor::new(vec![b], gamma2)?);
-    inputs.insert("params.series.log_s_init".into(),
-                  HostTensor::new(vec![b, s_width], s_init)?);
-
-    let name = Manifest::program_name(net.freq.name(), b, "predict");
-    let outs = execute_with_maps(backend, &name, &inputs, &state.tensors)?;
-    let fc = &outs[0].1;
-    Ok((0..n).map(|i| fc.data[i * h..(i + 1) * h].to_vec()).collect())
-}
+/// Convenience alias so callers can name the receiver type.
+pub type ResponseReceiver = mpsc::Receiver<Result<ForecastResponse>>;
 
 #[cfg(test)]
 mod tests {
@@ -391,6 +260,16 @@ mod tests {
     fn default_options_sane() {
         let o = ServiceOptions::default();
         assert!(o.max_batch >= 1);
+        assert!(o.workers >= 1);
         assert!(o.batch_window >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let st = ServiceStats { requests: 3, workers: 2, ..Default::default() };
+        let j = st.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 2);
+        assert!(j.get("queue_wait").unwrap().get("p99_ms").is_ok());
     }
 }

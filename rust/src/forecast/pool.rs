@@ -1,0 +1,463 @@
+//! Per-frequency worker pool with a shared dynamic-batching queue and
+//! generation-tagged model hot-swap.
+//!
+//! N worker threads serve one frequency. Each worker constructs its own
+//! backend *on its thread* via the shared factory (backends may be
+//! `!Send` — the PJRT client is), then loops: pull a drain-round from the
+//! shared queue (collect-until-deadline dynamic batching), snapshot the
+//! current model, execute, reply. Because every worker drains its own
+//! round, executions overlap instead of serializing behind one thread.
+//!
+//! Hot-swap invariants:
+//!
+//! * the published model lives in a generation-tagged swap slot
+//!   ([`reload`](FreqPool::reload) bumps the generation and replaces the
+//!   `Arc` atomically under a mutex held for nanoseconds);
+//! * a worker snapshots the slot once per drain-round, so every response
+//!   in a round is computed from one coherent `ModelState` and tagged
+//!   with its generation — a reload racing a round can never mix tensors
+//!   from two checkpoints into one answer;
+//! * the request queue is independent of the model slot: a reload drops
+//!   no queued or in-flight request, and shutdown drains the queue before
+//!   the workers exit.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Frequency, NetworkConfig};
+use crate::coordinator::ModelState;
+use crate::hw;
+use crate::runtime::{execute_with_maps, Backend, HostTensor, Manifest,
+                     NativeBackend};
+use crate::telemetry::Quantiles;
+
+use super::{pick_batch, plan_batches, ForecastRequest, ForecastResponse,
+            ResponseReceiver, ServiceOptions, ServiceStats};
+
+/// Backend constructor shared by all workers of a pool: called once per
+/// worker, on the worker's own thread.
+pub type BackendFactory =
+    Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
+
+/// A model state published under one generation tag. Workers hold the
+/// `Arc` for the duration of a drain-round; old generations are freed
+/// when the last in-flight round using them completes.
+struct VersionedModel {
+    generation: u64,
+    state: ModelState,
+}
+
+struct Job {
+    req: ForecastRequest,
+    tx: mpsc::Sender<Result<ForecastResponse>>,
+    enqueued: Instant,
+}
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    requests: u64,
+    rejected: u64,
+    batches: u64,
+    padded_slots: u64,
+    reloads: u64,
+    queue_wait: Quantiles,
+    execute: Quantiles,
+    total: Quantiles,
+}
+
+/// State shared between the pool handle(s) and the worker threads.
+///
+/// Lock discipline: `queue`, `model` and `stats` are three independent
+/// mutexes and no code path holds two at once (the queue lock is released
+/// before stats are recorded; the model lock only guards the `Arc` swap).
+pub(crate) struct PoolShared {
+    net: NetworkConfig,
+    opts: ServiceOptions,
+    queue: Mutex<QueueInner>,
+    cond: Condvar,
+    model: Mutex<Arc<VersionedModel>>,
+    stats: Mutex<StatsInner>,
+}
+
+impl PoolShared {
+    fn submit(&self, req: ForecastRequest) -> Result<ResponseReceiver> {
+        let (tx, rx) = mpsc::channel();
+        let c = self.net.length;
+        if req.values.len() < c {
+            // Reject at the door: a short request must not poison the
+            // batch it would have ridden in with its error.
+            self.stats.lock().unwrap().rejected += 1;
+            let _ = tx.send(Err(anyhow!(
+                "request `{}`: need ≥ {c} values, got {}", req.id,
+                req.values.len())));
+            return Ok(rx);
+        }
+        {
+            let mut q = self.queue.lock().unwrap();
+            if q.shutdown {
+                bail!("forecast service is down");
+            }
+            q.jobs.push_back(Job { req, tx, enqueued: Instant::now() });
+        }
+        self.stats.lock().unwrap().requests += 1;
+        self.cond.notify_one();
+        Ok(rx)
+    }
+
+    /// Block until a drain-round is available (dynamic batching: hold the
+    /// first request up to `batch_window` while more arrive, capped at
+    /// `max_batch`). Returns `None` only at shutdown *with an empty
+    /// queue* — pending requests are always served first.
+    fn next_round(&self) -> Option<(Vec<Job>, Instant)> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.jobs.is_empty() {
+                break;
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = self.cond.wait(q).unwrap();
+        }
+        let deadline = Instant::now() + self.opts.batch_window;
+        while q.jobs.len() < self.opts.max_batch && !q.shutdown {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) =
+                self.cond.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = q.jobs.len().min(self.opts.max_batch);
+        let jobs: Vec<Job> = q.jobs.drain(..take).collect();
+        let more = !q.jobs.is_empty();
+        drop(q);
+        if more {
+            // Work conservation: the submit-side notifications that
+            // accumulated while we collected this round may all have
+            // landed on us — wake a sibling for the remainder.
+            self.cond.notify_one();
+        }
+        Some((jobs, Instant::now()))
+    }
+
+    fn current_model(&self) -> Arc<VersionedModel> {
+        self.model.lock().unwrap().clone()
+    }
+
+    fn reload(&self, state: ModelState) -> u64 {
+        let mut slot = self.model.lock().unwrap();
+        let generation = slot.generation + 1;
+        *slot = Arc::new(VersionedModel { generation, state });
+        drop(slot);
+        self.stats.lock().unwrap().reloads += 1;
+        generation
+    }
+
+    fn begin_shutdown(&self) {
+        self.queue.lock().unwrap().shutdown = true;
+        self.cond.notify_all();
+    }
+
+    fn stats_snapshot(&self) -> ServiceStats {
+        let generation = self.current_model().generation;
+        let s = self.stats.lock().unwrap();
+        ServiceStats {
+            requests: s.requests,
+            rejected: s.rejected,
+            batches: s.batches,
+            padded_slots: s.padded_slots,
+            reloads: s.reloads,
+            generation,
+            workers: self.opts.workers,
+            queue_wait: s.queue_wait.summary(),
+            execute: s.execute.summary(),
+            total: s.total.summary(),
+        }
+    }
+}
+
+/// Clonable client handle to a running pool, usable from any thread.
+#[derive(Clone)]
+pub struct ForecastHandle {
+    shared: Arc<PoolShared>,
+}
+
+impl ForecastHandle {
+    /// Blocking single forecast.
+    pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("forecast service dropped reply"))?
+    }
+
+    /// Submit without waiting; returns the reply receiver.
+    pub fn submit(&self, req: ForecastRequest) -> Result<ResponseReceiver> {
+        self.shared.submit(req)
+    }
+
+    pub fn stats(&self) -> Result<ServiceStats> {
+        Ok(self.shared.stats_snapshot())
+    }
+
+    /// Publish a new model; workers adopt it at their next drain-round.
+    /// Returns the new generation tag.
+    pub fn reload(&self, state: ModelState) -> u64 {
+        self.shared.reload(state)
+    }
+
+    /// Generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.shared.current_model().generation
+    }
+
+    pub fn freq(&self) -> Frequency {
+        self.shared.net.freq
+    }
+
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+}
+
+/// N worker threads serving one frequency from a shared dynamic-batching
+/// queue, with generation-tagged model hot-swap.
+pub struct FreqPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FreqPool {
+    /// Start `opts.workers` threads, each constructing its own backend
+    /// via `factory` on its thread. Fails (and tears the pool down) if
+    /// any worker's backend fails to construct.
+    pub fn start(factory: BackendFactory, freq: Frequency, state: ModelState,
+                 opts: ServiceOptions) -> Result<Self> {
+        let net = NetworkConfig::for_freq(freq)?;
+        let n_workers = opts.workers.max(1);
+        let shared = Arc::new(PoolShared {
+            net,
+            opts: ServiceOptions { workers: n_workers, ..opts },
+            queue: Mutex::new(QueueInner {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+            model: Mutex::new(Arc::new(VersionedModel {
+                generation: 1,
+                state,
+            })),
+            stats: Mutex::new(StatsInner::default()),
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let shared_w = Arc::clone(&shared);
+            let factory_w = Arc::clone(&factory);
+            let ready_w = ready_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("forecast-{}-{w}", freq.name()))
+                .spawn(move || match (factory_w.as_ref())() {
+                    Ok(backend) => {
+                        let _ = ready_w.send(Ok(()));
+                        // Release the readiness channel before serving:
+                        // if a *sibling* worker's factory panics (sends
+                        // nothing), start() must see the channel
+                        // disconnect instead of blocking on a sender
+                        // parked here for the pool's whole lifetime.
+                        drop(ready_w);
+                        worker_loop(&shared_w, backend.as_ref());
+                    }
+                    Err(e) => {
+                        let _ = ready_w.send(Err(e));
+                    }
+                })?;
+            workers.push(join);
+        }
+        drop(ready_tx);
+        for _ in 0..n_workers {
+            let up = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker thread died during startup"))
+                .and_then(|r| r);
+            if let Err(e) = up {
+                shared.begin_shutdown();
+                for j in workers {
+                    let _ = j.join();
+                }
+                return Err(e);
+            }
+        }
+        Ok(Self { shared, workers })
+    }
+
+    /// Start on the pure-Rust native backend (no artifacts needed).
+    pub fn start_native(freq: Frequency, state: ModelState,
+                        opts: ServiceOptions) -> Result<Self> {
+        Self::start(
+            Arc::new(|| Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>)),
+            freq, state, opts,
+        )
+    }
+
+    pub fn handle(&self) -> ForecastHandle {
+        ForecastHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    pub fn freq(&self) -> Frequency {
+        self.shared.net.freq
+    }
+
+    pub fn net(&self) -> &NetworkConfig {
+        &self.shared.net
+    }
+
+    /// Publish a new model; returns the new generation tag.
+    pub fn reload(&self, state: ModelState) -> u64 {
+        self.shared.reload(state)
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.shared.current_model().generation
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.shared.stats_snapshot()
+    }
+}
+
+impl Drop for FreqPool {
+    fn drop(&mut self) {
+        self.shared.begin_shutdown();
+        for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One worker: pull drain-rounds until shutdown+empty, snapshot the model
+/// once per round, split the round into executions, reply per chunk.
+fn worker_loop(shared: &PoolShared, backend: &dyn Backend) {
+    let freq = shared.net.freq.name().to_string();
+    let available = backend.manifest().available_batches(&freq, "predict");
+    while let Some((jobs, drained_at)) = shared.next_round() {
+        let model = shared.current_model();
+        let mut round_batches = 0u64;
+        let mut round_padded = 0u64;
+        // (chunk length, execute secs, chunk completion) — stats are
+        // flushed under one lock after the round so the reply hot path
+        // never contends on the stats mutex.
+        let mut chunks: Vec<(usize, f64, Instant)> = Vec::new();
+        let mut start = 0usize;
+        for real in plan_batches(&available, jobs.len()) {
+            let chunk = &jobs[start..start + real];
+            round_batches += 1;
+            let t0 = Instant::now();
+            match execute_chunk(backend, &shared.net, &model.state,
+                                &available, chunk) {
+                Ok((forecasts, padded)) => {
+                    round_padded += padded as u64;
+                    for (job, fc) in chunk.iter().zip(forecasts) {
+                        let _ = job.tx.send(Ok(ForecastResponse {
+                            id: job.req.id.clone(),
+                            forecast: fc,
+                            generation: model.generation,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for job in chunk {
+                        let _ = job.tx.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+            chunks.push((real, t0.elapsed().as_secs_f64(), Instant::now()));
+            start += real;
+        }
+        let mut s = shared.stats.lock().unwrap();
+        s.batches += round_batches;
+        s.padded_slots += round_padded;
+        let mut job_i = 0usize;
+        for (len, exec_secs, done) in chunks {
+            for _ in 0..len {
+                let job = &jobs[job_i];
+                job_i += 1;
+                s.queue_wait.record(
+                    drained_at.duration_since(job.enqueued).as_secs_f64());
+                s.execute.record(exec_secs);
+                s.total.record(
+                    done.duration_since(job.enqueued).as_secs_f64());
+            }
+        }
+    }
+}
+
+/// Execute one chunk of a drain-round: pad up to the smallest fitting
+/// predict program, assemble `data.*` plus per-request primer parameters,
+/// run the backend, slice the forecasts back out. Returns the forecasts
+/// and the number of padded slots.
+fn execute_chunk(backend: &dyn Backend, net: &NetworkConfig,
+                 state: &ModelState, available: &[usize], jobs: &[Job])
+                 -> Result<(Vec<Vec<f32>>, usize)> {
+    let n = jobs.len();
+    let b = pick_batch(available, n);
+    let c = net.length;
+    let h = net.horizon;
+    let padded = b - n.min(b);
+
+    // Assemble y/cat plus per-request primer parameters.
+    let mut y = Vec::with_capacity(b * c);
+    let mut cat = vec![0.0f32; b * 6];
+    let mut inputs: HashMap<String, HostTensor> = HashMap::new();
+    let s_width = net.total_seasonality();
+    let mut alpha = Vec::with_capacity(b);
+    let mut gamma = Vec::with_capacity(b);
+    let mut gamma2 = Vec::with_capacity(b);
+    let mut s_init = Vec::with_capacity(b * s_width);
+    for slot in 0..b {
+        let req = &jobs[slot.min(n - 1)].req;
+        if req.values.len() < c {
+            // Defensive: submit() already rejects short histories.
+            bail!("request `{}`: need ≥ {c} values, got {}", req.id,
+                  req.values.len());
+        }
+        let window = &req.values[req.values.len() - c..];
+        y.extend_from_slice(window);
+        cat[slot * 6 + req.category.index()] = 1.0;
+        let p = hw::primer_for(window, net.seasonality, net.seasonality2);
+        alpha.push(p.alpha_logit);
+        gamma.push(p.gamma_logit);
+        gamma2.push(p.gamma2_logit);
+        s_init.extend_from_slice(&p.log_s_init);
+    }
+    inputs.insert("data.y".into(), HostTensor::new(vec![b, c], y)?);
+    inputs.insert("data.cat".into(), HostTensor::new(vec![b, 6], cat)?);
+    inputs.insert("params.series.alpha_logit".into(),
+                  HostTensor::new(vec![b], alpha)?);
+    inputs.insert("params.series.gamma_logit".into(),
+                  HostTensor::new(vec![b], gamma)?);
+    inputs.insert("params.series.gamma2_logit".into(),
+                  HostTensor::new(vec![b], gamma2)?);
+    inputs.insert("params.series.log_s_init".into(),
+                  HostTensor::new(vec![b, s_width], s_init)?);
+
+    let name = Manifest::program_name(net.freq.name(), b, "predict");
+    let outs = execute_with_maps(backend, &name, &inputs, &state.tensors)?;
+    let fc = &outs[0].1;
+    let forecasts =
+        (0..n).map(|i| fc.data[i * h..(i + 1) * h].to_vec()).collect();
+    Ok((forecasts, padded))
+}

@@ -1,0 +1,139 @@
+//! Multi-frequency router: one [`ServingStack`] owns a [`FreqPool`] per
+//! trained frequency, dispatches requests by frequency, and exposes the
+//! generation-tagged hot-swap API (including checkpoint reloads in either
+//! persistence format — see `coordinator::checkpoint`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Frequency;
+use crate::coordinator::{checkpoint, ModelState};
+
+use super::pool::{BackendFactory, ForecastHandle, FreqPool};
+use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
+            ServiceOptions, ServiceStats};
+
+/// The serving router: pools for all trained frequencies. Construct
+/// empty, [`start_pool`](Self::start_pool) each frequency, then share
+/// behind an `Arc` (all methods take `&self`; the pools' own locks do the
+/// synchronization).
+#[derive(Default)]
+pub struct ServingStack {
+    pools: BTreeMap<Frequency, FreqPool>,
+}
+
+impl ServingStack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a pool for `freq` serving `state`. One pool per frequency;
+    /// starting a second is an error (reload instead).
+    pub fn start_pool(&mut self, factory: BackendFactory, freq: Frequency,
+                      state: ModelState, opts: ServiceOptions) -> Result<()> {
+        if self.pools.contains_key(&freq) {
+            bail!("a {} pool is already running — use reload to swap its \
+                   model", freq.name());
+        }
+        let pool = FreqPool::start(factory, freq, state, opts)?;
+        self.pools.insert(freq, pool);
+        Ok(())
+    }
+
+    /// Start a native-backend pool (no artifacts needed).
+    pub fn start_pool_native(&mut self, freq: Frequency, state: ModelState,
+                             opts: ServiceOptions) -> Result<()> {
+        use crate::runtime::{Backend, NativeBackend};
+        self.start_pool(
+            std::sync::Arc::new(|| {
+                Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>)
+            }),
+            freq, state, opts,
+        )
+    }
+
+    pub fn frequencies(&self) -> Vec<Frequency> {
+        self.pools.keys().copied().collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pools.is_empty()
+    }
+
+    /// The stack's only frequency, when exactly one pool is running —
+    /// lets single-model deployments omit `freq` on the wire.
+    pub fn single_frequency(&self) -> Option<Frequency> {
+        if self.pools.len() == 1 {
+            self.pools.keys().next().copied()
+        } else {
+            None
+        }
+    }
+
+    fn pool(&self, freq: Frequency) -> Result<&FreqPool> {
+        self.pools.get(&freq).ok_or_else(|| {
+            anyhow!("no {} pool is running (serving: {})", freq.name(),
+                    self.pools
+                        .keys()
+                        .map(|f| f.name())
+                        .collect::<Vec<_>>()
+                        .join(", "))
+        })
+    }
+
+    /// Clonable handle to one frequency's pool.
+    pub fn handle(&self, freq: Frequency) -> Result<ForecastHandle> {
+        Ok(self.pool(freq)?.handle())
+    }
+
+    /// Blocking forecast, routed by frequency.
+    pub fn forecast(&self, freq: Frequency, req: ForecastRequest)
+                    -> Result<ForecastResponse> {
+        self.pool(freq)?.handle().forecast(req)
+    }
+
+    /// Non-blocking submit, routed by frequency.
+    pub fn submit(&self, freq: Frequency, req: ForecastRequest)
+                  -> Result<ResponseReceiver> {
+        self.pool(freq)?.handle().submit(req)
+    }
+
+    /// Hot-swap one frequency's model; workers adopt it at their next
+    /// batch boundary. Returns the new generation tag.
+    pub fn reload(&self, freq: Frequency, state: ModelState) -> Result<u64> {
+        Ok(self.pool(freq)?.reload(state))
+    }
+
+    /// Hot-swap from a checkpoint file (JSON or the compact binary
+    /// format — sniffed by magic). The checkpoint's recorded frequency
+    /// must match the pool it is being loaded into.
+    pub fn reload_checkpoint(&self, freq: Frequency, path: impl AsRef<Path>)
+                             -> Result<u64> {
+        let (ckpt_freq, state) = checkpoint::load_model_state(&path)?;
+        if ckpt_freq != freq.name() {
+            bail!("checkpoint {} was trained for `{}`, not `{}`",
+                  path.as_ref().display(), ckpt_freq, freq.name());
+        }
+        self.reload(freq, state)
+    }
+
+    pub fn generation(&self, freq: Frequency) -> Result<u64> {
+        Ok(self.pool(freq)?.generation())
+    }
+
+    pub fn stats(&self, freq: Frequency) -> Result<ServiceStats> {
+        Ok(self.pool(freq)?.stats())
+    }
+
+    /// Stats for every pool, keyed by frequency.
+    pub fn stats_all(&self) -> BTreeMap<Frequency, ServiceStats> {
+        self.pools.iter().map(|(f, p)| (*f, p.stats())).collect()
+    }
+
+    /// The equalized history length required of requests for `freq`.
+    pub fn required_length(&self, freq: Frequency) -> Result<usize> {
+        Ok(self.pool(freq)?.net().length)
+    }
+}

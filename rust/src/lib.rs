@@ -16,7 +16,8 @@
 //!   [`runtime::Backend`] trait under identical manifest contracts;
 //! * **L3** — this crate: dataset pipeline, per-series parameter store,
 //!   batch scheduler, training driver, evaluation, classical baselines,
-//!   forecast service and CLI — all backend-agnostic.
+//!   the serving stack (per-frequency worker pools, generation-tagged
+//!   model hot-swap, HTTP front-end) and CLI — all backend-agnostic.
 //!
 //! See `DESIGN.md` for the full system inventory, the `Backend` trait
 //! contract and the tensor naming scheme; `ROADMAP.md` tracks open items.

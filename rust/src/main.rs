@@ -5,23 +5,29 @@
 //!   train      train ES-RNN for one or more frequencies, save checkpoints
 //!   evaluate   score a checkpoint on the test holdout
 //!   baselines  run the classical baselines (incl. the M4 Comb benchmark)
-//!   serve      demo of the dynamic-batching forecast service
+//!   serve      the serving stack: per-frequency worker pools, model
+//!              hot-swap, optional HTTP front-end (`--http ADDR`)
 //!
 //! `--backend native` (the default) runs everything on the pure-Rust
 //! backend — no artifacts, no XLA, no Python. `--backend pjrt` runs from
 //! the AOT artifacts in `--artifacts` (requires `--features pjrt`).
 
+use std::path::PathBuf;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
-use fast_esrnn::baselines::{all_baselines, Comb, Forecaster};
+use fast_esrnn::baselines::{all_baselines, Forecaster};
 use fast_esrnn::config::{Category, Frequency, NetworkConfig, TrainConfig,
                          ALL_CATEGORIES, MODELED_FREQS};
-use fast_esrnn::coordinator::{checkpoint, EvalSplit, Trainer};
+use fast_esrnn::coordinator::{checkpoint, EvalSplit, ModelState, Trainer};
 use fast_esrnn::data::{self, stats, Corpus, GenOptions};
-use fast_esrnn::forecast::{ForecastRequest, ForecastService, ServiceOptions};
+use fast_esrnn::forecast::{http, ForecastRequest, HttpServer, ServiceOptions,
+                           ServingStack};
 use fast_esrnn::metrics::{mase, smape};
 use fast_esrnn::runtime::{backend_with_artifacts, Backend};
 use fast_esrnn::util::cli::{Args, Cli};
+use fast_esrnn::util::json::Json;
 
 /// Build the backend selected by `--backend` / `--artifacts`.
 fn backend_from_args(a: &Args) -> Result<Box<dyn Backend>> {
@@ -59,7 +65,22 @@ fn load_or_gen_corpus(corpus_path: &str, scale: usize, seed: u64) -> Result<Corp
         return data::csv::load(corpus_path);
     }
     println!("generating synthetic M4-like corpus (scale 1/{scale}, seed {seed})");
-    Ok(data::generate(&GenOptions { scale, seed, freqs: None }))
+    data::generate(&GenOptions { scale, seed, freqs: None })
+}
+
+/// Newest checkpoint for `freq` in `dir` by modification time (a retrain
+/// in the other format must win over a stale file); `load` sniffs the
+/// actual format by magic either way.
+fn find_checkpoint(dir: &str, freq: Frequency) -> Option<PathBuf> {
+    ["bin", "json"]
+        .iter()
+        .map(|ext| PathBuf::from(format!("{dir}/{}.{ext}", freq.name())))
+        .filter_map(|p| {
+            let modified = std::fs::metadata(&p).and_then(|m| m.modified()).ok()?;
+            Some((modified, p))
+        })
+        .max_by_key(|(modified, _)| *modified)
+        .map(|(_, p)| p)
 }
 
 fn parse_freqs(list: &[String]) -> Result<Vec<Frequency>> {
@@ -82,7 +103,7 @@ fn cmd_data_gen(args: &[String]) -> Result<()> {
         scale: a.get_usize("scale")?,
         seed: a.get_u64("seed")?,
         freqs: None,
-    });
+    })?;
     println!("generated {} series", corpus.len());
     if a.get_flag("report") {
         println!("\n== Table 2 analogue: counts by frequency × category ==");
@@ -112,8 +133,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("lr", "0.001", "Adam learning rate")
         .opt("seed", "42", "training seed")
         .opt("checkpoint-dir", "checkpoints", "save checkpoints here")
+        .opt("checkpoint-format", "json",
+             "checkpoint format: json or bin (compact binary)")
         .flag("quiet", "suppress per-epoch logs");
     let a = cli.parse(args)?;
+    let ckpt_ext = match a.get("checkpoint-format") {
+        "json" | "bin" => a.get("checkpoint-format"),
+        other => bail!("unknown checkpoint format `{other}` (json or bin)"),
+    };
     let backend = backend_from_args(&a)?;
     println!("backend: {}", backend.platform());
     let corpus = load_or_gen_corpus(a.get("corpus"), a.get_usize("scale")?,
@@ -140,7 +167,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
                   {} steps)",
                  freq.name(), test.smape, test.mase, test.count,
                  report.train_secs, report.steps);
-        let path = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
+        let path = format!("{}/{}.{ckpt_ext}", a.get("checkpoint-dir"),
+                           freq.name());
         checkpoint::save(&path, freq.name(), &trainer.state, &trainer.store)?;
         println!("  checkpoint → {path}");
         if !a.get_flag("quiet") {
@@ -175,7 +203,10 @@ fn cmd_evaluate(args: &[String]) -> Result<()> {
             ..Default::default()
         };
         let mut trainer = Trainer::new(backend.as_ref(), freq, &corpus, tc)?;
-        let path = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
+        let path = find_checkpoint(a.get("checkpoint-dir"), freq)
+            .ok_or_else(|| anyhow::anyhow!(
+                "no {0}.bin or {0}.json checkpoint in {1}", freq.name(),
+                a.get("checkpoint-dir")))?;
         checkpoint::load(&path, &mut trainer.state, &mut trainer.store)?;
         let test = trainer.evaluate(EvalSplit::Test)?;
         let cats: Vec<String> = ALL_CATEGORIES
@@ -223,95 +254,173 @@ fn cmd_baselines(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let cli = Cli::new("serve", "demo the dynamic-batching forecast service")
+    let cli = Cli::new("serve", "serve forecasts from per-frequency worker \
+                                 pools with model hot-swap")
         .opt("backend", "native", "execution backend: native or pjrt")
         .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
-        .opt("freq", "quarterly", "frequency to serve")
+        .opt("freqs", "quarterly",
+             "comma list of frequencies to serve, or `all`")
         .opt("checkpoint-dir", "checkpoints", "checkpoint directory")
-        .opt("requests", "64", "number of demo requests")
+        .opt("workers", "2", "worker threads per frequency")
+        .opt("http", "",
+             "also serve HTTP on this address (e.g. 127.0.0.1:8080)")
+        .opt("requests", "64",
+             "demo requests per frequency; 0 with --http serves until killed")
         .opt("scale", "200", "corpus scale for demo request data");
     let a = cli.parse(args)?;
-    let freq = Frequency::parse(a.get("freq"))?;
-    let net = NetworkConfig::for_freq(freq)?;
-
-    // Load a trained model if present; otherwise serve with fresh weights
-    // (still exercises the full service path).
-    let state = {
-        let backend = backend_from_args(&a)?;
-        let mut state = fast_esrnn::coordinator::ModelState::init(
-            backend.as_ref(), freq.name(), 42)?;
-        let ckpt = format!("{}/{}.json", a.get("checkpoint-dir"), freq.name());
-        if std::path::Path::new(&ckpt).exists() {
-            println!("serving RNN weights from {ckpt}");
-            let text = std::fs::read_to_string(&ckpt)?;
-            let doc = fast_esrnn::util::json::Json::parse(&text)?;
-            let n = doc.get("n_series")?.as_usize()?;
-            let primer = fast_esrnn::hw::Primer {
-                alpha_logit: 0.0,
-                gamma_logit: 0.0,
-                gamma2_logit: 0.0,
-                log_s_init: vec![0.0; net.total_seasonality()],
-            };
-            let mut store = fast_esrnn::coordinator::ParamStore::from_primers_dual(
-                &vec![primer; n], net.seasonality, net.seasonality2)?;
-            checkpoint::load(&ckpt, &mut state, &mut store)?;
-        }
-        state
-    }; // backend dropped: the service constructs its own on its thread
+    let freqs = parse_freqs(&a.get_str_list("freqs"))?;
+    let opts = ServiceOptions {
+        workers: a.get_usize("workers")?.max(1),
+        ..Default::default()
+    };
 
     let backend_name = a.get("backend").to_string();
-    let artifacts = std::path::PathBuf::from(a.get("artifacts"));
-    let service = ForecastService::start(
-        move || backend_with_artifacts(&backend_name, Some(&artifacts)),
-        freq, state, ServiceOptions::default())?;
+    let artifacts = PathBuf::from(a.get("artifacts"));
+    let mut stack = ServingStack::new();
+    for &freq in &freqs {
+        let state = match find_checkpoint(a.get("checkpoint-dir"), freq) {
+            Some(path) => {
+                let (ckpt_freq, state) = checkpoint::load_model_state(&path)?;
+                if ckpt_freq != freq.name() {
+                    bail!("{} was trained for `{ckpt_freq}`, not `{}`",
+                          path.display(), freq.name());
+                }
+                println!("[{}] serving weights from {}", freq.name(),
+                         path.display());
+                state
+            }
+            None => {
+                // Fresh weights still exercise the full serving path.
+                let backend = backend_from_args(&a)?;
+                println!("[{}] no checkpoint in {} — serving fresh weights",
+                         freq.name(), a.get("checkpoint-dir"));
+                ModelState::init(backend.as_ref(), freq.name(), 42)?
+            }
+        };
+        let (bn, art) = (backend_name.clone(), artifacts.clone());
+        stack.start_pool(
+            Arc::new(move || backend_with_artifacts(&bn, Some(&art))),
+            freq, state, opts.clone())?;
+    }
+    let stack = Arc::new(stack);
+    let n_req = a.get_usize("requests")?;
+    let scale = a.get_usize("scale")?;
 
-    // Fire demo requests from generated series.
+    if !a.get("http").is_empty() {
+        let server = HttpServer::start(Arc::clone(&stack), a.get("http"))?;
+        let addr = server.addr().to_string();
+        println!("HTTP front-end on http://{addr}  (POST /forecast · \
+                  GET /stats · GET /healthz · POST /reload)");
+        if n_req == 0 {
+            loop {
+                std::thread::park(); // serve until killed
+            }
+        }
+        for &freq in &freqs {
+            http_demo(&addr, freq, n_req, scale)?;
+        }
+        let (code, body) = http::http_request(&addr, "GET", "/stats", None)?;
+        println!("\nGET /stats → {code}\n{body}");
+        return Ok(());
+    }
+
+    for &freq in &freqs {
+        channel_demo(&stack, freq, n_req, scale)?;
+    }
+    Ok(())
+}
+
+/// Demo request series for one frequency (only those long enough).
+fn demo_series(freq: Frequency, scale: usize)
+               -> Result<(NetworkConfig, Vec<data::Series>)> {
+    let net = NetworkConfig::for_freq(freq)?;
     let corpus = data::generate(&GenOptions {
-        scale: a.get_usize("scale")?,
+        scale,
         seed: 7,
         freqs: Some(vec![freq]),
-    });
-    let n_req = a.get_usize("requests")?;
-    let mut receivers = Vec::new();
+    })?;
+    let candidates: Vec<data::Series> = corpus
+        .series
+        .into_iter()
+        .filter(|s| s.len() >= net.length)
+        .collect();
+    if candidates.is_empty() {
+        bail!("no {} demo series survive the length cut at scale {scale} — \
+               lower --scale", freq.name());
+    }
+    Ok((net, candidates))
+}
+
+/// Drive one frequency through the real HTTP wire: POST forecasts,
+/// report throughput.
+fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
+             -> Result<()> {
+    let (net, candidates) = demo_series(freq, scale)?;
     let t0 = std::time::Instant::now();
-    let mut sent = 0usize;
-    for s in corpus.series.iter().cycle() {
-        if sent >= n_req {
-            break;
+    let mut ok = 0usize;
+    for i in 0..n_req {
+        let s = &candidates[i % candidates.len()];
+        let body = Json::obj(vec![
+            ("freq", Json::str(freq.name())),
+            ("id", Json::str(s.id.clone())),
+            ("category", Json::str(s.category.name())),
+            ("values", Json::arr_f32(&s.values)),
+        ])
+        .to_string();
+        let (code, reply) =
+            http::http_request(addr, "POST", "/forecast", Some(&body))?;
+        if code == 200
+            && Json::parse(&reply)?.get("forecast")?.as_f32_vec()?.len()
+                == net.horizon
+        {
+            ok += 1;
         }
-        if s.len() < net.length {
-            continue;
-        }
-        receivers.push(service.handle.submit(ForecastRequest {
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("[{}] HTTP: {ok}/{n_req} ok in {secs:.3}s ({:.1} req/s)",
+             freq.name(), ok as f64 / secs);
+    Ok(())
+}
+
+/// Drive one frequency's pool through the in-process handle: burst
+/// submit, await all, print stats including latency percentiles.
+fn channel_demo(stack: &ServingStack, freq: Frequency, n_req: usize,
+                scale: usize) -> Result<()> {
+    let (net, candidates) = demo_series(freq, scale)?;
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let s = &candidates[i % candidates.len()];
+        receivers.push(stack.submit(freq, ForecastRequest {
             id: s.id.clone(),
             values: s.values.clone(),
             category: s.category,
         })?);
-        sent += 1;
     }
     let mut ok = 0usize;
     for rx in receivers {
         let resp = rx.recv()??;
-        assert_eq!(resp.forecast.len(), net.horizon);
-        ok += 1;
+        if resp.forecast.len() == net.horizon {
+            ok += 1;
+        }
     }
     let secs = t0.elapsed().as_secs_f64();
-    let st = service.handle.stats()?;
-    println!("served {ok}/{n_req} requests in {:.3}s \
-              ({:.1} req/s; {} batches, {} padded slots)",
-             secs, ok as f64 / secs, st.batches, st.padded_slots);
-
-    // Show one example forecast vs the Comb baseline for color.
-    if let Some(s) = corpus.series.iter().find(|s| s.len() >= net.length) {
-        let resp = service.handle.forecast(ForecastRequest {
-            id: s.id.clone(),
-            values: s.values.clone(),
-            category: Category::Other,
-        })?;
-        let comb = Comb.forecast(&s.values, net.seasonality, net.horizon);
-        println!("\nexample `{}`:\n  es-rnn: {:?}\n  comb:   {:?}", s.id,
-                 &resp.forecast[..4.min(resp.forecast.len())],
-                 &comb[..4.min(comb.len())]);
-    }
+    let st = stack.stats(freq)?;
+    println!("[{}] served {ok}/{n_req} in {secs:.3}s ({:.1} req/s; \
+              {} batches, {} padded slots, {} workers, generation {})",
+             freq.name(), ok as f64 / secs, st.batches, st.padded_slots,
+             st.workers, st.generation);
+    println!("    queue p50 {:.2}ms p95 {:.2}ms | exec p50 {:.2}ms \
+              p95 {:.2}ms | total p99 {:.2}ms",
+             st.queue_wait.p50 * 1e3, st.queue_wait.p95 * 1e3,
+             st.execute.p50 * 1e3, st.execute.p95 * 1e3, st.total.p99 * 1e3);
+    let s = &candidates[0];
+    let resp = stack.forecast(freq, ForecastRequest {
+        id: s.id.clone(),
+        values: s.values.clone(),
+        category: Category::Other,
+    })?;
+    println!("    example `{}` → {:?}", resp.id,
+             &resp.forecast[..4.min(resp.forecast.len())]);
     Ok(())
 }

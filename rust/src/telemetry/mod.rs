@@ -1,5 +1,7 @@
-//! Lightweight telemetry: phase timers and counters for the training loop
-//! and forecast service. The §Perf pass reads these to find hot phases.
+//! Lightweight telemetry: phase timers, counters and latency quantile
+//! recorders for the training loop and forecast service. The §Perf pass
+//! reads these to find hot phases; the serving stack's `/stats` endpoint
+//! reports the quantiles.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -50,7 +52,9 @@ impl Telemetry {
     /// Human-readable phase breakdown sorted by total time.
     pub fn report(&self) -> String {
         let mut rows: Vec<_> = self.phases.iter().collect();
-        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        // total_cmp: a NaN accumulation (e.g. from a poisoned timer) must
+        // not abort the report — same contract as util::bench.
+        rows.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0));
         let total: f64 = rows.iter().map(|(_, (s, _))| s).sum();
         let mut out = String::new();
         let _ = writeln!(out, "{:<28} {:>10} {:>8} {:>10} {:>6}",
@@ -69,6 +73,93 @@ impl Telemetry {
         }
         out
     }
+}
+
+/// Computed percentile snapshot of a [`Quantiles`] recorder, in seconds.
+/// `count` is the total number of samples ever recorded (the recorder
+/// itself keeps at most its ring capacity).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Bounded-memory latency quantile recorder: keeps the most recent
+/// `cap` samples in a ring and computes percentiles over that window.
+/// A sliding window (rather than a lossy sketch) is the right trade for
+/// serving stats: reloads and load shifts should show up in p99 quickly
+/// instead of being averaged into history.
+#[derive(Debug, Clone)]
+pub struct Quantiles {
+    samples: Vec<f64>,
+    cap: usize,
+    next: usize,
+    count: u64,
+}
+
+impl Quantiles {
+    pub fn new(cap: usize) -> Self {
+        Self { samples: Vec::new(), cap: cap.max(1), next: 0, count: 0 }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        if self.samples.len() < self.cap {
+            self.samples.push(secs);
+        } else {
+            self.samples[self.next] = secs;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Percentile over the retained window (nearest-rank on the sorted
+    /// samples); 0.0 when nothing has been recorded. `total_cmp` keeps a
+    /// NaN sample from aborting the stats endpoint.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        rank(&sorted, q)
+    }
+
+    /// One clone + one sort for all three ranks — `stats_snapshot` calls
+    /// this for three recorders while holding the pool's stats mutex, so
+    /// it must not re-sort per percentile.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary { count: self.count, ..Default::default() };
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        LatencySummary {
+            count: self.count,
+            p50: rank(&sorted, 0.50),
+            p95: rank(&sorted, 0.95),
+            p99: rank(&sorted, 0.99),
+        }
+    }
+}
+
+impl Default for Quantiles {
+    /// 4096-sample window: enough to make p99 meaningful, small enough
+    /// that one recorder costs 32 KiB.
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+/// Nearest-rank lookup in an already-sorted sample window.
+fn rank(sorted: &[f64], q: f64) -> f64 {
+    let pos = (sorted.len() as f64 - 1.0) * q.clamp(0.0, 1.0);
+    sorted[pos.round() as usize]
 }
 
 #[cfg(test)]
@@ -92,5 +183,42 @@ mod tests {
         let rep = t.report();
         assert!(rep.contains("work"));
         assert!(rep.contains("steps = 4"));
+    }
+
+    #[test]
+    fn quantiles_basic_percentiles() {
+        let mut q = Quantiles::new(1000);
+        assert_eq!(q.quantile(0.5), 0.0); // empty → 0
+        for i in 1..=100 {
+            q.record(i as f64);
+        }
+        assert_eq!(q.count(), 100);
+        let s = q.summary();
+        assert!((s.p50 - 50.0).abs() <= 1.0, "p50 {}", s.p50);
+        assert!((s.p95 - 95.0).abs() <= 1.0, "p95 {}", s.p95);
+        assert!((s.p99 - 99.0).abs() <= 1.0, "p99 {}", s.p99);
+        assert_eq!(s.count, 100);
+    }
+
+    #[test]
+    fn quantiles_ring_keeps_recent_window() {
+        let mut q = Quantiles::new(4);
+        for v in [100.0, 100.0, 100.0, 100.0, 1.0, 1.0, 1.0, 1.0] {
+            q.record(v);
+        }
+        // The four old 100.0 samples have been overwritten.
+        assert_eq!(q.quantile(0.99), 1.0);
+        assert_eq!(q.count(), 8);
+    }
+
+    #[test]
+    fn quantiles_survive_nan_samples() {
+        let mut q = Quantiles::new(8);
+        q.record(1.0);
+        q.record(f64::NAN);
+        q.record(2.0);
+        // Must not panic; NaN sorts last under total_cmp.
+        let _ = q.summary();
+        assert_eq!(q.quantile(0.0), 1.0);
     }
 }

@@ -21,7 +21,10 @@ pub struct BenchStats {
 impl BenchStats {
     pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a clock anomaly or a bad run
+        // being measured) sorts last and shows up in the report instead
+        // of aborting the whole bench gate.
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         let total: f64 = samples.iter().sum();
         let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
@@ -109,6 +112,15 @@ mod tests {
         let st = bench("inc", 2, 5, || count += 1);
         assert_eq!(count, 7);
         assert_eq!(st.iters, 5);
+    }
+
+    #[test]
+    fn nan_samples_report_instead_of_panicking() {
+        let st = BenchStats::from_samples("nan", vec![1.0, f64::NAN, 2.0]);
+        assert_eq!(st.min, 1.0);
+        // NaN sorts last under total_cmp, so p95 lands on it — the
+        // report shows the anomaly rather than the harness aborting.
+        assert!(st.p95.is_nan());
     }
 
     #[test]

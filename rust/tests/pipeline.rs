@@ -26,7 +26,7 @@ fn tiny_config(epochs: usize) -> TrainConfig {
 #[test]
 fn quarterly_train_loss_falls_and_eval_is_sane() {
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() }).unwrap();
     let mut trainer =
         Trainer::new(&backend, Frequency::Quarterly, &corpus, tiny_config(4))
             .unwrap();
@@ -55,7 +55,7 @@ fn quarterly_train_loss_falls_and_eval_is_sane() {
 #[test]
 fn yearly_nonseasonal_path_trains() {
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() }).unwrap();
     let mut trainer =
         Trainer::new(&backend, Frequency::Yearly, &corpus, tiny_config(2))
             .unwrap();
@@ -75,7 +75,7 @@ fn yearly_nonseasonal_path_trains() {
 #[test]
 fn monthly_smoke() {
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 800, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 800, ..Default::default() }).unwrap();
     let mut trainer =
         Trainer::new(&backend, Frequency::Monthly, &corpus, tiny_config(1))
             .unwrap();
@@ -89,7 +89,7 @@ fn monthly_smoke() {
 #[test]
 fn checkpoint_roundtrip_preserves_forecasts() {
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 400, ..Default::default() }).unwrap();
     let mut t1 =
         Trainer::new(&backend, Frequency::Quarterly, &corpus, tiny_config(2))
             .unwrap();
@@ -117,7 +117,7 @@ fn checkpoint_roundtrip_preserves_forecasts() {
 #[test]
 fn trained_model_beats_untrained_on_validation() {
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 300, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 300, ..Default::default() }).unwrap();
     let mut trainer =
         Trainer::new(&backend, Frequency::Quarterly, &corpus, tiny_config(6))
             .unwrap();
@@ -132,7 +132,7 @@ fn trained_model_beats_untrained_on_validation() {
 fn forecast_service_serves_batched_requests() {
     let state = {
         let backend = NativeBackend::new();
-        let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+        let corpus = generate(&GenOptions { scale: 400, ..Default::default() }).unwrap();
         let mut trainer = Trainer::new(&backend, Frequency::Quarterly, &corpus,
                                        tiny_config(1)).unwrap();
         trainer.train(false).unwrap();
@@ -143,7 +143,8 @@ fn forecast_service_serves_batched_requests() {
         ServiceOptions { max_batch: 16, ..Default::default() }).unwrap();
 
     let corpus = generate(&GenOptions { scale: 300, seed: 9,
-                                        freqs: Some(vec![Frequency::Quarterly]) });
+                                        freqs: Some(vec![Frequency::Quarterly]) })
+        .unwrap();
     let mut rxs = Vec::new();
     let mut sent = 0;
     for s in &corpus.series {
@@ -248,7 +249,7 @@ fn es_program_matches_rust_filter() {
 fn daily_extension_trains() {
     // §8.5: daily (quarterly-structured network, S = 7).
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 200, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 200, ..Default::default() }).unwrap();
     let tc = TrainConfig { epochs: 1, batch_size: 16, patience: 50,
                            ..Default::default() };
     let mut trainer =
@@ -268,7 +269,7 @@ fn hourly_dual_seasonality_trains_natively() {
     // train_step (coupled ES backward, gamma2 + packed [24|168] leaves)
     // → evaluation → refit forecasts — with no `--features pjrt`.
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 100, ..Default::default() }).unwrap();
     let tc = TrainConfig { epochs: 2, batch_size: 4, patience: 50,
                            ..Default::default() };
     let mut trainer =
@@ -302,7 +303,7 @@ fn hourly_dual_seasonality_trains_natively() {
 #[test]
 fn backend_stats_accumulate() {
     let backend = NativeBackend::new();
-    let corpus = generate(&GenOptions { scale: 800, ..Default::default() });
+    let corpus = generate(&GenOptions { scale: 800, ..Default::default() }).unwrap();
     let mut trainer =
         Trainer::new(&backend, Frequency::Quarterly, &corpus, tiny_config(1))
             .unwrap();
@@ -342,7 +343,7 @@ mod pjrt_artifacts {
     #[test]
     fn hourly_dual_seasonality_trains() {
         let Some(backend) = artifacts_backend() else { return };
-        let corpus = generate(&GenOptions { scale: 100, ..Default::default() });
+        let corpus = generate(&GenOptions { scale: 100, ..Default::default() }).unwrap();
         let tc = TrainConfig { epochs: 2, batch_size: 4, patience: 50,
                                ..Default::default() };
         let mut trainer =
@@ -360,7 +361,7 @@ mod pjrt_artifacts {
     #[test]
     fn penalties_variant_trains_via_model_key() {
         let Some(backend) = artifacts_backend() else { return };
-        let corpus = generate(&GenOptions { scale: 400, ..Default::default() });
+        let corpus = generate(&GenOptions { scale: 400, ..Default::default() }).unwrap();
         let tc = TrainConfig {
             model_key: Some("quarterly_pen".into()),
             epochs: 2,

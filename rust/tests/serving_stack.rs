@@ -1,0 +1,330 @@
+//! Serving-stack integration tests: per-frequency worker pools,
+//! generation-tagged model hot-swap under concurrent load, and the HTTP
+//! front-end — all on the pure-Rust native backend.
+//!
+//! The hot-swap invariant under test: while reloads race live traffic,
+//! **zero requests are dropped and every response is computed from one
+//! coherent model generation** — a response tagged generation g must
+//! equal the forecast that generation g's weights produce, never a blend
+//! of two checkpoints.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use fast_esrnn::config::{Category, Frequency, TrainConfig};
+use fast_esrnn::coordinator::{checkpoint, ModelState, ParamStore, Trainer};
+use fast_esrnn::data::{generate, GenOptions, Series};
+use fast_esrnn::forecast::{http, ForecastRequest, ForecastService,
+                           HttpServer, ServiceOptions, ServingStack};
+use fast_esrnn::hw::Primer;
+use fast_esrnn::runtime::NativeBackend;
+use fast_esrnn::util::json::Json;
+
+const FREQ: Frequency = Frequency::Quarterly;
+const HORIZON: usize = 8;
+
+/// Train a small quarterly model; return its state.
+fn trained_state() -> ModelState {
+    let backend = NativeBackend::new();
+    let corpus = generate(&GenOptions { scale: 600, ..Default::default() })
+        .unwrap();
+    let tc = TrainConfig {
+        epochs: 1,
+        batch_size: 16,
+        patience: 50,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&backend, FREQ, &corpus, tc).unwrap();
+    trainer.train(false).unwrap();
+    trainer.state.clone()
+}
+
+/// A deterministically different model: every shared RNN weight scaled
+/// by 10% — guaranteed to forecast differently from the original, so a
+/// response mixing tensors from the two states cannot match either.
+fn perturbed(state: &ModelState) -> ModelState {
+    let mut out = state.clone();
+    for (name, t) in out.tensors.iter_mut() {
+        if name.starts_with("params.rnn.") {
+            for v in t.data.iter_mut() {
+                *v *= 1.10;
+            }
+        }
+    }
+    out
+}
+
+/// A request series the model never saw, long enough for the C=72 cut.
+fn probe_series() -> Series {
+    let corpus = generate(&GenOptions {
+        scale: 600,
+        seed: 9,
+        freqs: Some(vec![FREQ]),
+    })
+    .unwrap();
+    corpus
+        .series
+        .into_iter()
+        .find(|s| s.len() >= 72)
+        .expect("need one quarterly series ≥ 72 values")
+}
+
+/// Ground truth: what `state` forecasts for `probe`, computed on a
+/// dedicated single-worker service.
+fn expected_forecast(state: &ModelState, probe: &Series) -> Vec<f32> {
+    let service =
+        ForecastService::start_native(FREQ, state.clone(),
+                                      ServiceOptions::default())
+            .unwrap();
+    let resp = service
+        .handle
+        .forecast(ForecastRequest {
+            id: "probe".into(),
+            values: probe.values.clone(),
+            category: Category::Other,
+        })
+        .unwrap();
+    resp.forecast
+}
+
+fn max_rel_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (x - y).abs() as f64;
+            d / (x.abs().max(y.abs()).max(1e-6) as f64)
+        })
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn hot_swap_under_load_keeps_every_response_coherent() {
+    let state_a = trained_state();
+    let state_b = perturbed(&state_a);
+    let probe = probe_series();
+    let expect_a = expected_forecast(&state_a, &probe);
+    let expect_b = expected_forecast(&state_b, &probe);
+    assert_eq!(expect_a.len(), HORIZON);
+    // The two generations must be clearly distinguishable, or the
+    // coherence check below would be vacuous.
+    assert!(max_rel_diff(&expect_a, &expect_b) > 1e-2,
+            "states A and B forecast too similarly to discriminate");
+
+    let mut stack = ServingStack::new();
+    stack
+        .start_pool_native(FREQ, state_a.clone(), ServiceOptions {
+            workers: 3,
+            batch_window: Duration::from_millis(1),
+            max_batch: 8,
+        })
+        .unwrap();
+    assert_eq!(stack.generation(FREQ).unwrap(), 1);
+
+    // 4 client threads × 30 sequential blocking forecasts of the probe.
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 30;
+    let (res_tx, res_rx) = mpsc::channel::<(u64, Vec<f32>)>();
+    let mut joins = Vec::new();
+    for _ in 0..CLIENTS {
+        let handle = stack.handle(FREQ).unwrap();
+        let tx = res_tx.clone();
+        let values = probe.values.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..PER_CLIENT {
+                let resp = handle
+                    .forecast(ForecastRequest {
+                        id: format!("probe-{i}"),
+                        values: values.clone(),
+                        category: Category::Other,
+                    })
+                    .expect("request dropped during hot-swap");
+                tx.send((resp.generation, resp.forecast)).unwrap();
+            }
+        }));
+    }
+    drop(res_tx);
+
+    // Meanwhile: hot-swap B, A, B, … racing the live traffic. Odd
+    // generations are A (the initial generation is 1), even are B.
+    const RELOADS: usize = 8;
+    for k in 0..RELOADS {
+        std::thread::sleep(Duration::from_millis(10));
+        let state = if k % 2 == 0 { state_b.clone() } else { state_a.clone() };
+        let generation = stack.reload(FREQ, state).unwrap();
+        assert_eq!(generation as usize, k + 2);
+    }
+
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Zero dropped: every submitted request came back Ok.
+    let responses: Vec<(u64, Vec<f32>)> = res_rx.iter().collect();
+    assert_eq!(responses.len(), CLIENTS * PER_CLIENT);
+
+    // Coherence: a response tagged generation g must exactly match what
+    // generation g's weights forecast — never a mix.
+    let mut seen = std::collections::BTreeSet::new();
+    for (generation, fc) in &responses {
+        seen.insert(*generation);
+        let expected = if generation % 2 == 1 { &expect_a } else { &expect_b };
+        let diff = max_rel_diff(fc, expected);
+        assert!(diff < 1e-4,
+                "generation {generation} response diverges from its \
+                 generation's forecast (rel diff {diff:.2e}) — incoherent \
+                 model state");
+    }
+    assert!(seen.len() >= 2,
+            "reloads never landed during traffic (only generations {seen:?} \
+             observed) — increase PER_CLIENT");
+
+    let st = stack.stats(FREQ).unwrap();
+    assert_eq!(st.requests, (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(st.rejected, 0);
+    assert_eq!(st.reloads, RELOADS as u64);
+    assert_eq!(st.generation, (RELOADS + 1) as u64);
+    assert_eq!(st.workers, 3);
+    assert!(st.total.count >= st.requests,
+            "latency recorder missed requests");
+}
+
+#[test]
+fn http_front_end_serves_forecasts_stats_health_and_reload() {
+    let state_a = trained_state();
+    let state_b = perturbed(&state_a);
+    let probe = probe_series();
+    let expect_a = expected_forecast(&state_a, &probe);
+    let expect_b = expected_forecast(&state_b, &probe);
+
+    // A binary checkpoint for B that the reload endpoint will load.
+    let dir = std::env::temp_dir().join("fast_esrnn_serving_http");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_b = dir.join("b.bin");
+    let store = dummy_store();
+    checkpoint::save(&ckpt_b, FREQ.name(), &state_b, &store).unwrap();
+    // A checkpoint labeled for another frequency: reload must refuse it.
+    let ckpt_wrong = dir.join("wrong.bin");
+    checkpoint::save(&ckpt_wrong, "monthly", &state_b, &store).unwrap();
+
+    let mut stack = ServingStack::new();
+    stack
+        .start_pool_native(FREQ, state_a, ServiceOptions {
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap();
+    let stack = std::sync::Arc::new(stack);
+    let server = HttpServer::start(stack.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    // POST /forecast — `freq` may be omitted with a single pool.
+    let body = Json::obj(vec![
+        ("id", Json::str("probe")),
+        ("category", Json::str("Other")),
+        ("values", Json::arr_f32(&probe.values)),
+    ])
+    .to_string();
+    let (code, reply) =
+        http::http_request(&addr, "POST", "/forecast", Some(&body)).unwrap();
+    assert_eq!(code, 200, "{reply}");
+    let doc = Json::parse(&reply).unwrap();
+    assert_eq!(doc.get("id").unwrap().as_str().unwrap(), "probe");
+    assert_eq!(doc.get("freq").unwrap().as_str().unwrap(), "quarterly");
+    assert_eq!(doc.get("generation").unwrap().as_usize().unwrap(), 1);
+    let fc = doc.get("forecast").unwrap().as_f32_vec().unwrap();
+    assert_eq!(fc.len(), HORIZON);
+    assert!(max_rel_diff(&fc, &expect_a) < 1e-4,
+            "HTTP forecast disagrees with the in-process service");
+
+    // GET /healthz
+    let (code, reply) =
+        http::http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&reply).unwrap();
+    assert_eq!(doc.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(doc.get("generations").unwrap().get("quarterly").unwrap()
+                   .as_usize().unwrap(), 1);
+
+    // POST /reload — hot-swap to B from the binary checkpoint.
+    let body = Json::obj(vec![
+        ("checkpoint", Json::str(ckpt_b.display().to_string())),
+    ])
+    .to_string();
+    let (code, reply) =
+        http::http_request(&addr, "POST", "/reload", Some(&body)).unwrap();
+    assert_eq!(code, 200, "{reply}");
+    let doc = Json::parse(&reply).unwrap();
+    assert_eq!(doc.get("generation").unwrap().as_usize().unwrap(), 2);
+
+    // The same request now answers from generation 2 with B's forecast.
+    let body = Json::obj(vec![
+        ("values", Json::arr_f32(&probe.values)),
+    ])
+    .to_string();
+    let (code, reply) =
+        http::http_request(&addr, "POST", "/forecast", Some(&body)).unwrap();
+    assert_eq!(code, 200, "{reply}");
+    let doc = Json::parse(&reply).unwrap();
+    assert_eq!(doc.get("generation").unwrap().as_usize().unwrap(), 2);
+    let fc = doc.get("forecast").unwrap().as_f32_vec().unwrap();
+    assert!(max_rel_diff(&fc, &expect_b) < 1e-4,
+            "post-reload forecast is not generation 2's");
+
+    // GET /stats
+    let (code, reply) =
+        http::http_request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&reply).unwrap();
+    let q = doc.get("quarterly").unwrap();
+    assert!(q.get("requests").unwrap().as_usize().unwrap() >= 2);
+    assert_eq!(q.get("reloads").unwrap().as_usize().unwrap(), 1);
+    assert!(q.get("total").unwrap().get("p95_ms").unwrap().as_f64().unwrap()
+            >= 0.0);
+
+    // Error paths: bad JSON, short history, wrong-frequency checkpoint,
+    // unknown route, wrong method.
+    let (code, reply) =
+        http::http_request(&addr, "POST", "/forecast", Some("{not json"))
+            .unwrap();
+    assert_eq!(code, 400);
+    assert!(Json::parse(&reply).unwrap().get("error").is_ok());
+
+    let body = Json::obj(vec![
+        ("values", Json::arr_f32(&[1.0, 2.0, 3.0])),
+    ])
+    .to_string();
+    let (code, _) =
+        http::http_request(&addr, "POST", "/forecast", Some(&body)).unwrap();
+    assert_eq!(code, 400, "short history must be rejected");
+
+    let body = Json::obj(vec![
+        ("checkpoint", Json::str(ckpt_wrong.display().to_string())),
+    ])
+    .to_string();
+    let (code, reply) =
+        http::http_request(&addr, "POST", "/reload", Some(&body)).unwrap();
+    assert_eq!(code, 400, "wrong-frequency checkpoint must be refused");
+    assert!(reply.contains("monthly"), "{reply}");
+    // The refused reload left the generation untouched.
+    assert_eq!(stack.generation(FREQ).unwrap(), 2);
+
+    let (code, _) = http::http_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(code, 404);
+    let (code, _) =
+        http::http_request(&addr, "DELETE", "/forecast", None).unwrap();
+    assert_eq!(code, 405);
+}
+
+/// Any store works for serving checkpoints: `load_model_state` reads
+/// only the shared model tensors.
+fn dummy_store() -> ParamStore {
+    let primers: Vec<Primer> = (0..2)
+        .map(|_| Primer {
+            alpha_logit: 0.0,
+            gamma_logit: 0.0,
+            gamma2_logit: 0.0,
+            log_s_init: vec![0.0; 4],
+        })
+        .collect();
+    ParamStore::from_primers(&primers, 4).unwrap()
+}

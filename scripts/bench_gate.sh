@@ -1,25 +1,30 @@
 #!/usr/bin/env bash
-# CI perf gate: run the quick benches, record the lane-vs-scalar speedup
-# trajectory, and fail on regression.
+# CI perf gate: run the quick benches, record the speedup trajectories,
+# and fail on regression.
 #
-#   scripts/bench_gate.sh [out.json]
+#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json]
 #
-# Runs `micro_hotpath` (and `table5_speedup`) in quick mode, writes the
-# scalar-vs-lane per-frequency summary to BENCH_3.json (or the given
-# path), then compares the measured max speedup against the committed
-# baseline (benches/bench3_baseline.json): the gate fails when the
-# vectorized train step regresses more than 10% below the baseline
-# speedup. The ratio is measured scalar-vs-lane on the same machine in
-# the same process, so it is stable across runner hardware generations
-# in a way absolute ns/step numbers are not.
+# Two gates, both measured as same-machine ratios (stable across runner
+# hardware generations in a way absolute numbers are not):
+#
+# * BENCH_3 — `micro_hotpath` (and `table5_speedup`) in quick mode:
+#   scalar vs lane-vectorized ns/step per frequency; fails when the
+#   vectorized train step regresses more than 10% below
+#   benches/bench3_baseline.json.
+# * BENCH_4 — `serving_throughput`: requests/sec of the N-worker forecast
+#   pool over the single-worker service; fails when the pool speedup
+#   drops more than 10% below benches/bench4_baseline.json.
 set -euo pipefail
 
 out="${1:-BENCH_3.json}"
+out4="${2:-BENCH_4.json}"
 baseline="benches/bench3_baseline.json"
+baseline4="benches/bench4_baseline.json"
 
 export FAST_ESRNN_QUICK=1
 FAST_ESRNN_BENCH_JSON="$out" cargo bench --bench micro_hotpath
 cargo bench --bench table5_speedup
+FAST_ESRNN_BENCH_JSON="$out4" cargo bench --bench serving_throughput
 
 python3 - "$out" "$baseline" <<'EOF'
 import json, sys
@@ -54,4 +59,28 @@ if got < floor:
 if failed:
     sys.exit(1)
 print("perf gate OK")
+EOF
+
+python3 - "$out4" "$baseline4" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+got = result["pool_speedup"]
+want = baseline["min_pool_speedup"]
+floor = want * 0.9
+single, pool = result["single"], result["pool"]
+print(f"serving pool speedup: {got:.2f}x requests/sec "
+      f"({int(pool['workers'])} workers {pool['rps']:.1f} rps "
+      f"p95 {pool['p95_ms']:.2f} ms vs 1 worker {single['rps']:.1f} rps "
+      f"p95 {single['p95_ms']:.2f} ms); "
+      f"baseline {want:.2f}x, gate floor {floor:.2f}x")
+if got < floor:
+    print(f"FAIL: worker pool regressed: {got:.2f}x < {floor:.2f}x")
+    sys.exit(1)
+print("serving gate OK")
 EOF
