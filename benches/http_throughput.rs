@@ -1,0 +1,215 @@
+//! BENCH_5 — HTTP front-end throughput: what the PR-5 serving work
+//! bought on the wire.
+//!
+//! Two comparisons, both same-machine ratios (stable across runner
+//! hardware generations in a way absolute req/s are not):
+//!
+//! * **keep-alive vs connection-per-request** — the same clients drive
+//!   the same server through one persistent connection each
+//!   (`HttpClient`) vs a fresh TCP connection per request
+//!   (`http_request`). Measured on `GET /healthz` (pure wire overhead —
+//!   the connection tax is the whole story) and on `POST /forecast`
+//!   (wire + model compute, informational).
+//! * **sharded vs single-stack** — the same total worker budget as one
+//!   stack (1×4 workers) vs four consistent-hash shards (4×1), same
+//!   keep-alive load; reports req/s and client-observed p95.
+//!
+//! Feeds the CI perf gate (`scripts/bench_gate.sh`): emitted as
+//! BENCH_5.json when `FAST_ESRNN_BENCH_JSON=<path>` is set; the gate
+//! fails when the keep-alive speedup drops below the committed floor
+//! (`benches/bench5_baseline.json`) or sharding blows up tail latency.
+//!
+//! Env:
+//!   FAST_ESRNN_QUICK=1        — CI mode: fewer requests
+//!   FAST_ESRNN_BENCH_JSON=p   — write the summary JSON to p
+//!
+//! Run with: `cargo bench --bench http_throughput`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fast_esrnn::config::Frequency;
+use fast_esrnn::coordinator::ModelState;
+use fast_esrnn::forecast::{http, HttpClient, HttpOptions, HttpServer,
+                           ServiceOptions, ServingStack, ShardedStack};
+use fast_esrnn::runtime::NativeBackend;
+use fast_esrnn::util::json::Json;
+
+const FREQ: Frequency = Frequency::Quarterly;
+const CLIENTS: usize = 4;
+
+fn fresh_state() -> ModelState {
+    let backend = NativeBackend::new();
+    ModelState::init(&backend, FREQ.name(), 42).unwrap()
+}
+
+/// A positive synthetic history long enough for the quarterly C=72 cut
+/// (weights are untrained — throughput does not depend on accuracy).
+fn forecast_body(id: &str) -> String {
+    let values: Vec<f32> = (0..80)
+        .map(|i| 100.0 + i as f32 * 0.5 + (i % 4) as f32 * 3.0)
+        .collect();
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("values", Json::arr_f32(&values)),
+    ])
+    .to_string()
+}
+
+/// Build a server over `shards` stacks × `workers` pool threads each.
+fn start_server(shards: usize, workers: usize)
+                -> anyhow::Result<(HttpServer, Arc<ShardedStack>)> {
+    let sharded = ShardedStack::new();
+    for s in 0..shards {
+        let mut stack = ServingStack::new();
+        stack.start_pool_native(FREQ, fresh_state(), ServiceOptions {
+            workers,
+            batch_window: Duration::from_millis(1),
+            max_batch: 8,
+            queue_limit: 0, // the bench measures throughput, not shedding
+        })?;
+        sharded.add_shard(&format!("shard-{s}"), stack)?;
+    }
+    let sharded = Arc::new(sharded);
+    let server = HttpServer::start_with(
+        Arc::clone(&sharded),
+        "127.0.0.1:0",
+        HttpOptions {
+            conn_workers: 8,
+            accept_backlog: 256,
+            ..Default::default()
+        },
+    )?;
+    Ok((server, sharded))
+}
+
+/// `CLIENTS` threads × `per` requests; returns (req/s, p95 secs).
+/// `keep_alive` picks one persistent connection per client vs a fresh
+/// connection per request; `forecast` picks `POST /forecast` (wire +
+/// compute) vs `GET /healthz` (pure wire).
+fn run_load(addr: &str, keep_alive: bool, per: usize,
+            forecast: bool) -> (f64, f64) {
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(CLIENTS);
+    for c in 0..CLIENTS {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(per);
+            let mut client = keep_alive
+                .then(|| HttpClient::connect(&addr).unwrap());
+            for i in 0..per {
+                let body =
+                    forecast.then(|| forecast_body(&format!("c{c}-r{i}")));
+                let (method, path) = if forecast {
+                    ("POST", "/forecast")
+                } else {
+                    ("GET", "/healthz")
+                };
+                let t = Instant::now();
+                let code = match &mut client {
+                    Some(cl) => cl
+                        .request(method, path, body.as_deref())
+                        .unwrap()
+                        .code,
+                    None => http::http_request(&addr, method, path,
+                                               body.as_deref())
+                        .unwrap()
+                        .0,
+                };
+                lat.push(t.elapsed().as_secs_f64());
+                assert_eq!(code, 200, "bench request failed");
+            }
+            lat
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::with_capacity(CLIENTS * per);
+    for j in joins {
+        lat.extend(j.join().expect("client thread panicked"));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let p95 = lat[(lat.len() * 95 / 100).min(lat.len() - 1)];
+    ((CLIENTS * per) as f64 / secs, p95)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("FAST_ESRNN_QUICK").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let wire_per = if quick { 400 } else { 1500 };
+    let fc_per = if quick { 60 } else { 150 };
+
+    // ---- keep-alive vs connection-per-request, one single-shard stack.
+    let (server, _stack) = start_server(1, 2)?;
+    let addr = server.addr().to_string();
+
+    println!("== wire overhead: GET /healthz, {CLIENTS} clients × \
+              {wire_per} ==");
+    let (wire_pc_rps, _) = run_load(&addr, false, wire_per, false);
+    let (wire_ka_rps, _) = run_load(&addr, true, wire_per, false);
+    let wire_speedup = wire_ka_rps / wire_pc_rps;
+    println!("{:<22} {:>10.0} req/s", "conn-per-request", wire_pc_rps);
+    println!("{:<22} {:>10.0} req/s", "keep-alive", wire_ka_rps);
+    println!("keep-alive speedup: {wire_speedup:.2}x\n");
+
+    println!("== forecast: POST /forecast, {CLIENTS} clients × {fc_per} ==");
+    let (fc_pc_rps, _) = run_load(&addr, false, fc_per, true);
+    let (fc_ka_rps, _) = run_load(&addr, true, fc_per, true);
+    let fc_speedup = fc_ka_rps / fc_pc_rps;
+    println!("{:<22} {:>10.0} req/s", "conn-per-request", fc_pc_rps);
+    println!("{:<22} {:>10.0} req/s", "keep-alive", fc_ka_rps);
+    println!("keep-alive speedup: {fc_speedup:.2}x\n");
+    drop(server);
+
+    // ---- sharded vs single stack, same total worker budget (4).
+    println!("== sharding: 1×4 workers vs 4×1, keep-alive, {CLIENTS} \
+              clients × {fc_per} ==");
+    let (server, _stack) = start_server(1, 4)?;
+    let addr = server.addr().to_string();
+    let (single_rps, single_p95) = run_load(&addr, true, fc_per, true);
+    drop(server);
+    let (server, _stack) = start_server(4, 1)?;
+    let addr = server.addr().to_string();
+    let (sharded_rps, sharded_p95) = run_load(&addr, true, fc_per, true);
+    drop(server);
+    let p95_ratio = sharded_p95 / single_p95.max(1e-9);
+    println!("{:<22} {:>10.0} req/s   p95 {:>8.2}ms", "single 1×4",
+             single_rps, single_p95 * 1e3);
+    println!("{:<22} {:>10.0} req/s   p95 {:>8.2}ms", "sharded 4×1",
+             sharded_rps, sharded_p95 * 1e3);
+    println!("sharded/single p95 ratio: {p95_ratio:.2}\n");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH_JSON") {
+        let mode = |pc: f64, ka: f64, n: usize| {
+            Json::obj(vec![
+                ("n_requests", Json::num(n as f64)),
+                ("per_conn_rps", Json::num(pc)),
+                ("keepalive_rps", Json::num(ka)),
+                ("keepalive_speedup", Json::num(ka / pc)),
+            ])
+        };
+        let stack_row = |shards: usize, workers: usize, rps: f64,
+                         p95: f64| {
+            Json::obj(vec![
+                ("shards", Json::num(shards as f64)),
+                ("workers", Json::num((shards * workers) as f64)),
+                ("rps", Json::num(rps)),
+                ("p95_ms", Json::num(p95 * 1e3)),
+            ])
+        };
+        let doc = Json::obj(vec![
+            ("bench", Json::str("http_throughput")),
+            ("quick", Json::Bool(quick)),
+            ("threads", Json::num(threads as f64)),
+            ("wire", mode(wire_pc_rps, wire_ka_rps, CLIENTS * wire_per)),
+            ("forecast", mode(fc_pc_rps, fc_ka_rps, CLIENTS * fc_per)),
+            ("single", stack_row(1, 4, single_rps, single_p95)),
+            ("sharded", stack_row(4, 1, sharded_rps, sharded_p95)),
+            ("sharded_p95_ratio", Json::num(p95_ratio)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

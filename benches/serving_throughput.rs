@@ -38,6 +38,7 @@ fn run_load(state: &ModelState, candidates: &[Series], workers: usize,
             workers,
             batch_window: Duration::from_millis(1),
             max_batch: 8,
+            queue_limit: 0,
         },
     )?;
     let per = n_req / CLIENTS;

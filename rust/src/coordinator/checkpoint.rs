@@ -79,6 +79,20 @@ pub fn load_model_state(path: impl AsRef<Path>) -> Result<(String, ModelState)> 
     }
 }
 
+/// [`load_model_state`] plus a frequency guard: bails when the
+/// checkpoint's recorded frequency differs from `freq`. The one place
+/// hot-swap frequency validation lives — the single-stack and sharded
+/// reload paths both call this, so they can never drift apart.
+pub fn load_model_state_for(path: impl AsRef<Path>, freq: &str)
+                            -> Result<ModelState> {
+    let (ckpt_freq, state) = load_model_state(&path)?;
+    if ckpt_freq != freq {
+        bail!("checkpoint {} was trained for `{ckpt_freq}`, not `{freq}`",
+              path.as_ref().display());
+    }
+    Ok(state)
+}
+
 // ------------------------------ JSON ------------------------------
 
 /// Serialize (state, store) to the JSON format.

@@ -1,78 +1,210 @@
 //! Zero-dependency HTTP/1.1 front-end over `std::net::TcpListener`,
-//! serving a [`ServingStack`] with `util::json` as the wire format (no
+//! serving a [`ShardedStack`] with `util::json` as the wire format (no
 //! async runtime, no frameworks — the offline build vendors nothing).
 //!
 //! Routes (all request/response bodies are JSON):
 //!
 //! * `POST /forecast` — `{"freq"?, "id"?, "category"?, "values": [..]}`
 //!   → `{"id", "freq", "generation", "forecast": [..]}`. `freq` may be
-//!   omitted when exactly one frequency is being served.
-//! * `GET /stats` — per-frequency [`ServiceStats`](super::ServiceStats)
-//!   (counters + p50/p95/p99 phase latencies in ms).
-//! * `GET /healthz` — `{"status": "ok", "frequencies": [..],
-//!   "generations": {..}}`.
+//!   omitted when exactly one frequency is being served; `id` is also
+//!   the consistent-hash shard key.
+//! * `GET /stats` — per-frequency aggregated
+//!   [`ServiceStats`](super::ServiceStats), an unaggregated `"shards"`
+//!   breakdown, and an `"http"` section with the front-end's 503 shed
+//!   counters.
+//! * `GET /healthz` — `{"status", "frequencies", "generations",
+//!   "shards"}`.
 //! * `POST /reload` — `{"freq"?, "checkpoint": "<server-local path>"}`
-//!   → `{"freq", "generation"}`. Hot-swaps the model from a checkpoint
-//!   (JSON or compact binary, sniffed by magic) without dropping queued
-//!   requests. Operator-facing: the path is resolved on the server.
+//!   → `{"freq", "generation"}`. Hot-swaps every shard's model from a
+//!   checkpoint (JSON or compact binary, sniffed by magic) without
+//!   dropping queued requests. Operator-facing: the path is resolved on
+//!   the server.
 //!
-//! Client errors → `400 {"error": ...}`; unknown routes → 404; wrong
-//! method → 405; faults while serving a valid forecast request (backend
-//! error, pool shut down) → 500. One thread per connection (requests are
-//! short-lived and
-//! the heavy lifting is already pooled behind the dynamic-batching
-//! queue); `Connection: close` semantics keep the loop simple.
+//! Connection model — built to survive overload and hostile clients:
+//!
+//! * **HTTP/1.1 keep-alive**: a connection serves many requests
+//!   (pipelined bytes are buffered and served in order). `Connection:
+//!   close` — or HTTP/1.0 without `Connection: keep-alive` — closes
+//!   after the response.
+//! * **Bounded workers**: a fixed pool of `conn_workers` handler
+//!   threads serves connections from an accept backlog of at most
+//!   `accept_backlog`; when the backlog is full the accept loop sheds
+//!   the connection with `503` + `Retry-After` instead of queueing or
+//!   spawning without bound.
+//! * **Request-size limits**: headers over `max_header_bytes` → `431`;
+//!   a `Content-Length` over `max_body_bytes` → `413` *before* any body
+//!   byte is buffered, so a hostile declared length cannot balloon
+//!   memory. Reads poll in short ticks, so an idle keep-alive
+//!   connection times out (`keep_alive`), a stalled mid-request client
+//!   gets `408` (`request_timeout`), and shutdown is observed promptly.
+//!
+//! Status contract: client mistakes → `400` (`{"error": ...}`),
+//! unknown route → `404`, wrong method → `405`, stalled request →
+//! `408`, oversized body → `413`, pool queue full (backpressure,
+//! [`QueueFull`](super::QueueFull)) → `429` + `Retry-After`, oversized
+//! headers → `431`, chunked transfer → `501`, faults while serving a
+//! valid forecast → `500`, accept backlog full → `503` + `Retry-After`.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Category, Frequency};
 use crate::util::json::Json;
 
+use super::pool::QueueFull;
 use super::router::ServingStack;
-use super::ForecastRequest;
+use super::shard::ShardedStack;
+use super::{ForecastRequest, ServiceStats};
 
-const MAX_HEADER_BYTES: usize = 64 * 1024;
-const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+/// How often blocking reads wake to re-check deadlines and shutdown.
+const POLL_TICK: Duration = Duration::from_millis(100);
 
-/// A running HTTP front-end: an accept-loop thread dispatching each
-/// connection to a short-lived handler thread.
+/// Connection-handling knobs. The defaults suit tests and single-node
+/// deployments; production front-ends size `conn_workers` ≈ expected
+/// concurrent connections and `accept_backlog` to the burst they are
+/// willing to absorb before shedding.
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// Connection-handler threads (each owns one connection at a time).
+    pub conn_workers: usize,
+    /// Accepted connections waiting for a worker before `503` shedding.
+    pub accept_backlog: usize,
+    /// Hard cap on one request's header section → `431`.
+    pub max_header_bytes: usize,
+    /// Hard cap on one request's `Content-Length` → `413`.
+    pub max_body_bytes: usize,
+    /// Idle time allowed between keep-alive requests before close.
+    pub keep_alive: Duration,
+    /// Time allowed to finish reading one request once started → `408`.
+    pub request_timeout: Duration,
+    /// Fairness rotation: after this many responses a keep-alive
+    /// connection is closed (`Connection: close` on the last one) so a
+    /// persistent client cannot pin a handler worker forever while
+    /// backlogged connections starve. [`HttpClient`] reconnects
+    /// transparently when rotated.
+    pub max_requests_per_conn: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        Self {
+            conn_workers: 8,
+            accept_backlog: 64,
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 16 * 1024 * 1024,
+            keep_alive: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(10),
+            max_requests_per_conn: 128,
+        }
+    }
+}
+
+/// State shared by the accept loop and the connection workers.
+struct ServerShared {
+    stack: Arc<ShardedStack>,
+    opts: HttpOptions,
+    shutdown: AtomicBool,
+    /// Accepted connections waiting for a worker, with enqueue time so
+    /// stale waiters can be shed instead of hanging answerless.
+    conns: Mutex<VecDeque<(TcpStream, Instant)>>,
+    cond: Condvar,
+    /// Shed at accept: backlog full. Remedy: bigger backlog / more
+    /// capacity.
+    sheds: AtomicU64,
+    /// Shed at dequeue: waited ≥ request_timeout for a worker. Remedy:
+    /// more conn workers / faster handlers.
+    stale_sheds: AtomicU64,
+}
+
+/// A running HTTP front-end: one accept thread feeding a bounded pool
+/// of connection-handler workers.
 pub struct HttpServer {
     addr: SocketAddr,
-    shutdown: Arc<AtomicBool>,
+    shared: Arc<ServerShared>,
     accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
-    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port —
-    /// read it back from [`Self::addr`]) and start serving `stack`.
+    /// Serve a single [`ServingStack`] (wrapped as a one-shard ring)
+    /// with default [`HttpOptions`]. Bind `addr` (e.g. `127.0.0.1:8080`;
+    /// port 0 picks a free port — read it back from [`Self::addr`]).
     pub fn start(stack: Arc<ServingStack>, addr: &str) -> Result<Self> {
+        Self::start_with(Arc::new(ShardedStack::single(stack)?), addr,
+                         HttpOptions::default())
+    }
+
+    /// Serve a sharded stack with default [`HttpOptions`].
+    pub fn start_sharded(stack: Arc<ShardedStack>, addr: &str)
+                         -> Result<Self> {
+        Self::start_with(stack, addr, HttpOptions::default())
+    }
+
+    /// Serve a sharded stack with explicit connection-handling knobs.
+    pub fn start_with(stack: Arc<ShardedStack>, addr: &str,
+                      opts: HttpOptions) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let flag = Arc::clone(&shutdown);
-        let accept = std::thread::Builder::new()
-            .name("http-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if flag.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    let stack = Arc::clone(&stack);
-                    let _ = std::thread::Builder::new()
-                        .name("http-conn".into())
-                        .spawn(move || handle_connection(&stack, stream));
+        let shared = Arc::new(ServerShared {
+            stack,
+            opts: HttpOptions {
+                conn_workers: opts.conn_workers.max(1),
+                accept_backlog: opts.accept_backlog.max(1),
+                max_requests_per_conn: opts.max_requests_per_conn.max(1),
+                ..opts
+            },
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            sheds: AtomicU64::new(0),
+            stale_sheds: AtomicU64::new(0),
+        });
+        // Any spawn failure below must not leak the threads already
+        // started (they'd block on the condvar forever with shutdown
+        // unset and no owner to join them).
+        let teardown = |workers: Vec<JoinHandle<()>>| {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let guard = shared.conns.lock().unwrap();
+            shared.cond.notify_all();
+            drop(guard);
+            for j in workers {
+                let _ = j.join();
+            }
+        };
+        let mut workers = Vec::with_capacity(shared.opts.conn_workers);
+        for w in 0..shared.opts.conn_workers {
+            let sh = Arc::clone(&shared);
+            match std::thread::Builder::new()
+                .name(format!("http-conn-{w}"))
+                .spawn(move || worker_loop(&sh))
+            {
+                Ok(j) => workers.push(j),
+                Err(e) => {
+                    teardown(workers);
+                    return Err(e.into());
                 }
-            })?;
-        Ok(Self { addr: local, shutdown, accept: Some(accept) })
+            }
+        }
+        let sh = Arc::clone(&shared);
+        let accept = match std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || accept_loop(&sh, listener))
+        {
+            Ok(j) => j,
+            Err(e) => {
+                teardown(workers);
+                return Err(e.into());
+            }
+        };
+        Ok(Self { addr: local, shared, accept: Some(accept), workers })
     }
 
     /// The actually-bound address (resolves port 0).
@@ -80,13 +212,37 @@ impl HttpServer {
         self.addr
     }
 
-    /// Stop accepting connections. In-flight handlers finish on their
-    /// own threads (bounded by the per-connection read timeout).
+    /// Connections shed with `503` because the accept backlog was full
+    /// (undersized backlog / too much traffic — distinct from
+    /// [`stale_sheds`](Self::stale_sheds)).
+    pub fn sheds(&self) -> u64 {
+        self.shared.sheds.load(Ordering::Relaxed)
+    }
+
+    /// Connections shed with `503` after waiting ≥ `request_timeout` in
+    /// the backlog for a worker (workers too few/slow for the accepted
+    /// load — distinct from [`sheds`](Self::sheds)).
+    pub fn stale_sheds(&self) -> u64 {
+        self.shared.stale_sheds.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting connections and wake the workers. Connections
+    /// already in the backlog are still picked up (workers drain the
+    /// queue before exiting) but get at most one response each — the
+    /// shutdown flag forces `Connection: close` — and idle keep-alive
+    /// connections close within [`POLL_TICK`]. Teardown is therefore
+    /// bounded by one in-flight request per backlogged connection;
+    /// shutdown is for teardown, not rolling restart.
     pub fn shutdown(&self) {
-        if !self.shutdown.swap(true, Ordering::SeqCst) {
+        if !self.shared.shutdown.swap(true, Ordering::SeqCst) {
             // Unblock the accept loop with a throwaway connection.
             let _ = TcpStream::connect(self.addr);
         }
+        // Notify while holding the queue mutex: a worker between its
+        // shutdown check and its wait would otherwise miss the wakeup
+        // and sleep forever (the flag is atomic, not mutex-guarded).
+        let _guard = self.shared.conns.lock().unwrap();
+        self.shared.cond.notify_all();
     }
 }
 
@@ -96,6 +252,134 @@ impl Drop for HttpServer {
         if let Some(j) = self.accept.take() {
             let _ = j.join();
         }
+        for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn accept_loop(sh: &ServerShared, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            // Give whatever connection accept() just handed us (the
+            // shutdown self-connect, or a real client that raced it) a
+            // definite 503 instead of a silent drop — consistent with
+            // the under-lock shutdown path below.
+            if let Ok(stream) = conn {
+                shed_connection(stream);
+            }
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                // accept() can fail persistently without blocking (e.g.
+                // EMFILE under fd exhaustion — exactly the overload this
+                // server sheds). Back off briefly instead of spinning a
+                // core on the error.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        let mut q = sh.conns.lock().unwrap();
+        // Re-check shutdown under the queue lock: if it is still false
+        // here, shutdown() has not yet taken this lock to notify, so
+        // the workers' wakeup will see this connection (next_conn pops
+        // before it checks the flag). Without this, a connection pushed
+        // after idle workers already exited would hang answerless.
+        if sh.shutdown.load(Ordering::SeqCst) {
+            drop(q);
+            shed_connection(stream);
+            break;
+        }
+        if q.len() >= sh.opts.accept_backlog {
+            // Load shedding: tell the client to back off instead of
+            // queueing unboundedly (which would degrade everyone).
+            drop(q);
+            sh.sheds.fetch_add(1, Ordering::Relaxed);
+            shed_connection(stream);
+            continue;
+        }
+        q.push_back((stream, Instant::now()));
+        drop(q);
+        sh.cond.notify_one();
+    }
+}
+
+/// Best-effort `503` on a connection we will not serve. Runs on the
+/// accept thread, so it must stay O(microseconds): the ~150-byte
+/// response always fits a fresh socket's empty send buffer (write_all
+/// returns without blocking; the timeout is a belt-and-suspenders cap),
+/// and we deliberately do NOT drain the client's unread bytes here —
+/// the close may RST the 503 away for a client mid-upload, but pinning
+/// the accept loop on hostile streamers would starve every future
+/// accept, which is strictly worse than a lost courtesy response.
+fn shed_connection(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let body = err_json("server is at capacity — retry later").to_string();
+    let _ = write_response(&mut stream, 503, &body, false, Some(1));
+}
+
+/// Closing a socket with unread bytes in its receive buffer makes the
+/// kernel send RST and discard any queued response — the client would
+/// see a connection reset instead of the `413`/`431`/`503` we just
+/// wrote. Discard what the client already sent (bounded in bytes and
+/// time, so a hostile streamer cannot pin us) before the drop, giving
+/// the error response a chance to be delivered.
+fn drain_before_close(stream: &mut TcpStream) {
+    const MAX_DRAIN_BYTES: usize = 256 * 1024;
+    let deadline = Instant::now() + Duration::from_millis(500);
+    let mut tmp = [0u8; 4096];
+    let mut drained = 0usize;
+    while drained < MAX_DRAIN_BYTES && Instant::now() < deadline {
+        match read_tick(stream, &mut tmp) {
+            Tick::Data(n) => drained += n,
+            // Timeout: the client paused — likely reading our response;
+            // one quiet tick is enough grace.
+            Tick::Eof | Tick::Broken | Tick::Timeout => break,
+        }
+    }
+}
+
+/// Worker-thread variant of [`shed_connection`]: same `503`, plus the
+/// bounded drain a worker can afford — a stale backlogged client has
+/// usually already sent its request, and closing without reading those
+/// bytes would RST the `503` away.
+fn shed_connection_draining(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let body = err_json("server is at capacity — retry later").to_string();
+    if write_response(&mut stream, 503, &body, false, Some(1)).is_ok() {
+        let _ = stream.set_read_timeout(Some(POLL_TICK));
+        drain_before_close(&mut stream);
+    }
+}
+
+fn worker_loop(sh: &ServerShared) {
+    while let Some(stream) = next_conn(sh) {
+        serve_connection(sh, stream);
+    }
+}
+
+fn next_conn(sh: &ServerShared) -> Option<TcpStream> {
+    let mut q = sh.conns.lock().unwrap();
+    loop {
+        if let Some((stream, queued_at)) = q.pop_front() {
+            if queued_at.elapsed() >= sh.opts.request_timeout {
+                // The client already waited a whole request budget for
+                // a worker; a definite "come back later" now beats a
+                // stale answer after its own timeout has likely fired.
+                drop(q);
+                sh.stale_sheds.fetch_add(1, Ordering::Relaxed);
+                shed_connection_draining(stream);
+                q = sh.conns.lock().unwrap();
+                continue;
+            }
+            return Some(stream);
+        }
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        q = sh.cond.wait(q).unwrap();
     }
 }
 
@@ -103,77 +387,305 @@ struct ParsedRequest {
     method: String,
     path: String,
     body: String,
+    keep_alive: bool,
 }
 
-fn handle_connection(stack: &ServingStack, mut stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+/// One attempt to read a request off a (possibly keep-alive) connection.
+enum RequestOutcome {
+    /// A complete request; leftover (pipelined) bytes stay in the buffer.
+    Ready(ParsedRequest),
+    /// Clean end of the connection (EOF / idle timeout / shutdown).
+    Closed,
+    /// Protocol or limit violation: respond with this status and close.
+    Fatal(u16, String),
+}
+
+/// Serve requests on one connection until it closes, errs, times out
+/// idle, asks to close, or the server shuts down.
+fn serve_connection(sh: &ServerShared, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
-    let (code, body) = match read_request(&mut stream) {
-        Ok(req) => route(stack, &req),
-        Err(e) => (400, err_json(&format!("{e:#}"))),
-    };
-    let _ = write_response(&mut stream, code, &body.to_string());
+    let _ = stream.set_read_timeout(Some(POLL_TICK));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut served = 0usize;
+    loop {
+        match read_request(&mut stream, &mut buf, &sh.opts, &sh.shutdown) {
+            RequestOutcome::Closed => break,
+            RequestOutcome::Fatal(code, msg) => {
+                if write_response(&mut stream, code,
+                                  &err_json(&msg).to_string(), false, None)
+                    .is_ok()
+                {
+                    // The client may still be streaming the request we
+                    // refused (oversized body, etc.) — discard it
+                    // (bounded) so the close doesn't RST the error
+                    // response out from under it.
+                    drain_before_close(&mut stream);
+                }
+                break;
+            }
+            RequestOutcome::Ready(req) => {
+                let (code, body, retry_after) = route(sh, &req);
+                served += 1;
+                // Rotation fairness: close after the per-connection
+                // request cap so one persistent client cannot pin this
+                // worker while backlogged connections wait.
+                let keep = req.keep_alive
+                    && served < sh.opts.max_requests_per_conn
+                    && !sh.shutdown.load(Ordering::SeqCst);
+                if write_response(&mut stream, code, &body.to_string(), keep,
+                                  retry_after)
+                    .is_err()
+                {
+                    break;
+                }
+                if !keep {
+                    break;
+                }
+            }
+        }
+    }
 }
 
 fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<ParsedRequest> {
-    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+/// One 100ms-bounded read step.
+enum Tick {
+    Data(usize),
+    Eof,
+    Timeout,
+    Broken,
+}
+
+fn read_tick(stream: &mut TcpStream, tmp: &mut [u8]) -> Tick {
+    match stream.read(tmp) {
+        Ok(0) => Tick::Eof,
+        Ok(n) => Tick::Data(n),
+        Err(e) if matches!(e.kind(),
+                           std::io::ErrorKind::WouldBlock
+                           | std::io::ErrorKind::TimedOut
+                           | std::io::ErrorKind::Interrupted) => Tick::Timeout,
+        Err(_) => Tick::Broken,
+    }
+}
+
+/// Read one request, leaving any pipelined surplus in `buf` for the
+/// next call. Limits are enforced incrementally: headers may never
+/// exceed `max_header_bytes` (431), a declared `Content-Length` beyond
+/// `max_body_bytes` is refused (413) before one body byte is buffered.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>,
+                opts: &HttpOptions, shutdown: &AtomicBool)
+                -> RequestOutcome {
+    let mut started = Instant::now();
+    // Pipelined surplus counts as the request having started: a client
+    // that pre-sends one byte of the next request must not earn a
+    // deadline reset on its second byte (that would stretch each
+    // request's read budget to ~2× request_timeout).
+    let mut saw_data = !buf.is_empty();
     let mut tmp = [0u8; 4096];
+
+    // Phase 1: headers.
     let header_end = loop {
-        if let Some(pos) = find_subsequence(&buf, b"\r\n\r\n") {
+        // RFC 9112 §2.2: ignore CRLF arriving before the request line.
+        // Stripped inside the loop (not just on entry) so a blank line
+        // counts no matter which read delivers it; once a non-CRLF byte
+        // leads the buffer this is a no-op.
+        let skip =
+            buf.iter().take_while(|&&b| b == b'\r' || b == b'\n').count();
+        buf.drain(..skip);
+        if let Some(pos) = find_subsequence(buf, b"\r\n\r\n") {
+            if pos > opts.max_header_bytes {
+                return RequestOutcome::Fatal(
+                    431,
+                    format!("request headers exceed {} bytes",
+                            opts.max_header_bytes));
+            }
             break pos;
         }
-        if buf.len() > MAX_HEADER_BYTES {
-            bail!("request headers too large");
+        // `+ 4`: a header section of exactly the cap plus a partial
+        // terminator may be in flight — without the slack, the verdict
+        // on a cap-sized request would depend on TCP chunk boundaries.
+        if buf.len() > opts.max_header_bytes + 4 {
+            return RequestOutcome::Fatal(
+                431,
+                format!("request headers exceed {} bytes",
+                        opts.max_header_bytes));
         }
-        let n = stream.read(&mut tmp)?;
-        if n == 0 {
-            bail!("connection closed mid-request");
+        // Deadlines are checked every iteration — not just on quiet
+        // ticks — so a slow-drip client feeding one byte per tick still
+        // hits the 408 wall and cannot pin a bounded worker.
+        if buf.is_empty() {
+            // Idle between keep-alive requests.
+            if started.elapsed() >= opts.keep_alive {
+                return RequestOutcome::Closed;
+            }
+        } else if started.elapsed() >= opts.request_timeout {
+            return RequestOutcome::Fatal(
+                408, "timed out reading request headers".into());
         }
-        buf.extend_from_slice(&tmp[..n]);
+        match read_tick(stream, &mut tmp) {
+            Tick::Data(n) => {
+                if !saw_data {
+                    // First byte of a new request: the deadline budget
+                    // starts here — keep-alive idle time before it must
+                    // not be charged against the 408 clock. Reset at
+                    // most ONCE per request: a client dripping bare
+                    // CRLFs (stripped above, so `buf` stays empty)
+                    // must not keep rewinding the clock, or it could
+                    // pin this worker forever; with one reset, such a
+                    // connection dies at the keep_alive deadline.
+                    saw_data = true;
+                    started = Instant::now();
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            Tick::Eof | Tick::Broken => {
+                return if buf.is_empty() {
+                    RequestOutcome::Closed
+                } else {
+                    RequestOutcome::Fatal(
+                        400, "connection closed mid-request".into())
+                };
+            }
+            Tick::Timeout => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return RequestOutcome::Closed;
+                }
+            }
+        }
     };
-    let head = std::str::from_utf8(&buf[..header_end])
-        .context("request head is not UTF-8")?;
-    let mut lines = head.split("\r\n");
+
+    let head = match parse_head(&buf[..header_end], opts.max_body_bytes) {
+        Ok(h) => h,
+        Err((code, msg)) => return RequestOutcome::Fatal(code, msg),
+    };
+
+    // Phase 2: exactly `content_length` body bytes (the cap was already
+    // enforced on the declared length, so this buffers at most
+    // `max_body_bytes`).
+    let body_start = header_end + 4;
+    let needed = body_start + head.content_length;
+    while buf.len() < needed {
+        // Same per-iteration deadline as phase 1: progress does not
+        // reset the clock, so drip-feeding a body cannot hold a worker
+        // past request_timeout.
+        if started.elapsed() >= opts.request_timeout {
+            return RequestOutcome::Fatal(
+                408, "timed out reading request body".into());
+        }
+        match read_tick(stream, &mut tmp) {
+            Tick::Data(n) => buf.extend_from_slice(&tmp[..n]),
+            Tick::Eof | Tick::Broken => {
+                return RequestOutcome::Fatal(
+                    400, "connection closed mid-body".into());
+            }
+            Tick::Timeout => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return RequestOutcome::Closed;
+                }
+            }
+        }
+    }
+    let body = match std::str::from_utf8(&buf[body_start..needed]) {
+        Ok(s) => s.to_string(),
+        Err(_) => {
+            return RequestOutcome::Fatal(
+                400, "request body is not UTF-8".into());
+        }
+    };
+    // Keep pipelined surplus for the next request on this connection —
+    // but not the capacity a large body grew: without the shrink, one
+    // max-sized POST would pin that allocation on this worker for the
+    // connection's whole remaining lifetime.
+    buf.drain(..needed);
+    if buf.capacity() > 64 * 1024 {
+        buf.shrink_to(4096.max(buf.len()));
+    }
+    RequestOutcome::Ready(ParsedRequest {
+        method: head.method,
+        path: head.path,
+        body,
+        keep_alive: head.keep_alive,
+    })
+}
+
+struct Head {
+    method: String,
+    path: String,
+    content_length: usize,
+    keep_alive: bool,
+}
+
+/// Parse the request line + headers. Errors carry the HTTP status that
+/// should reject them.
+fn parse_head(raw: &[u8], max_body: usize) -> Result<Head, (u16, String)> {
+    let text = std::str::from_utf8(raw)
+        .map_err(|_| (400, "request head is not UTF-8".to_string()))?;
+    let mut lines = text.split("\r\n");
     let request_line = lines.next().unwrap_or("");
     let mut parts = request_line.split_whitespace();
     let method = parts
         .next()
-        .ok_or_else(|| anyhow!("empty request line"))?
+        .ok_or_else(|| (400, "empty request line".to_string()))?
         .to_ascii_uppercase();
     let raw_path = parts.next().unwrap_or("/");
     let path = raw_path.split('?').next().unwrap_or("/").to_string();
-    let mut content_length = 0usize;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    // HTTP/1.1 defaults to keep-alive; 1.0 defaults to close.
+    let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
+    // RFC 9110 §7.6.1: once any Connection header says close, the
+    // connection closes — a later `keep-alive` token cannot revive it.
+    let mut saw_close = false;
+    let mut content_length: Option<u64> = None;
     for line in lines {
-        if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| anyhow!("bad Content-Length `{}`", v.trim()))?;
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let k = k.trim();
+        let v = v.trim();
+        if k.eq_ignore_ascii_case("content-length") {
+            // Digits only (RFC 9110 §8.6): Rust's u64 parser would also
+            // accept `+123`, which a stricter front proxy may reject or
+            // frame differently — the same desync vector as conflicting
+            // Content-Length values.
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err((400, format!("bad Content-Length `{v}`")));
             }
+            let n: u64 = v.parse().map_err(|_| {
+                (400, format!("bad Content-Length `{v}`"))
+            })?;
+            // RFC 9112 §6.3: conflicting Content-Length values are a
+            // framing ambiguity (request-smuggling vector on keep-alive
+            // connections) — reject, never pick one.
+            if content_length.is_some_and(|prev| prev != n) {
+                return Err((400,
+                            "conflicting Content-Length headers".to_string()));
+            }
+            if n > max_body as u64 {
+                return Err((413,
+                            format!("request body of {n} bytes exceeds the \
+                                     {max_body}-byte limit")));
+            }
+            content_length = Some(n);
+        } else if k.eq_ignore_ascii_case("connection") {
+            let v = v.to_ascii_lowercase();
+            if v.split(',').any(|t| t.trim() == "close") {
+                saw_close = true;
+            } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                keep_alive = true;
+            }
+        } else if k.eq_ignore_ascii_case("transfer-encoding") {
+            return Err((501,
+                        "transfer encodings are not supported — send a \
+                         Content-Length body"
+                            .to_string()));
         }
     }
-    if content_length > MAX_BODY_BYTES {
-        bail!("request body too large ({content_length} bytes)");
-    }
-    let body_start = (header_end + 4).min(buf.len());
-    let mut body = buf[body_start..].to_vec();
-    while body.len() < content_length {
-        let n = stream.read(&mut tmp)?;
-        if n == 0 {
-            bail!("connection closed mid-body");
-        }
-        body.extend_from_slice(&tmp[..n]);
-    }
-    body.truncate(content_length);
-    Ok(ParsedRequest {
+    Ok(Head {
         method,
         path,
-        body: String::from_utf8(body).context("request body is not UTF-8")?,
+        content_length: content_length.unwrap_or(0) as usize,
+        keep_alive: keep_alive && !saw_close,
     })
 }
 
@@ -181,29 +693,31 @@ fn err_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])
 }
 
-fn route(stack: &ServingStack, req: &ParsedRequest) -> (u16, Json) {
-    let reply = |r: Result<Json>| match r {
-        Ok(j) => (200, j),
-        Err(e) => (400, err_json(&format!("{e:#}"))),
-    };
+/// Dispatch one parsed request → (status, body, Retry-After seconds).
+fn route(sh: &ServerShared, req: &ParsedRequest)
+         -> (u16, Json, Option<u32>) {
+    let stack = &*sh.stack;
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/forecast") => match handle_forecast(stack, &req.body) {
-            Ok(j) => (200, j),
-            Err(code_body) => code_body,
+        ("POST", "/forecast") => handle_forecast(stack, &req.body),
+        ("POST", "/reload") => match handle_reload(stack, &req.body) {
+            Ok(j) => (200, j, None),
+            Err(e) => (400, err_json(&format!("{e:#}")), None),
         },
-        ("POST", "/reload") => reply(handle_reload(stack, &req.body)),
-        ("GET", "/stats") => (200, handle_stats(stack)),
-        ("GET", "/healthz") => (200, handle_healthz(stack)),
+        ("GET", "/stats") => (200, handle_stats(sh), None),
+        ("GET", "/healthz") => (200, handle_healthz(stack), None),
         (_, "/forecast" | "/reload" | "/stats" | "/healthz") => {
-            (405, err_json(&format!("method {} not allowed for {}",
-                                    req.method, req.path)))
+            (405,
+             err_json(&format!("method {} not allowed for {}", req.method,
+                               req.path)),
+             None)
         }
-        _ => (404, err_json(&format!("no route for {} {}", req.method,
-                                     req.path))),
+        _ => (404,
+              err_json(&format!("no route for {} {}", req.method, req.path)),
+              None),
     }
 }
 
-fn resolve_freq(stack: &ServingStack, doc: &Json) -> Result<Frequency> {
+fn resolve_freq(stack: &ShardedStack, doc: &Json) -> Result<Frequency> {
     match doc.opt("freq") {
         Some(j) => Frequency::parse(j.as_str()?),
         None => stack.single_frequency().ok_or_else(|| {
@@ -219,36 +733,52 @@ fn resolve_freq(stack: &ServingStack, doc: &Json) -> Result<Frequency> {
     }
 }
 
-/// `Ok(json)` on success; `Err((status, body))` otherwise — malformed /
-/// unroutable / too-short requests are 400, faults *while serving* a
-/// valid request (backend error, pool shut down) are 500 so monitoring
-/// and load balancers see a server outage, not a client mistake.
-fn handle_forecast(stack: &ServingStack, body: &str)
-                   -> Result<Json, (u16, Json)> {
-    let (freq, req) = parse_forecast_request(stack, body)
-        .map_err(|e| (400, err_json(&format!("{e:#}"))))?;
-    let resp = stack
-        .forecast(freq, req)
-        .map_err(|e| (500, err_json(&format!("{e:#}"))))?;
-    Ok(Json::obj(vec![
-        ("id", Json::str(resp.id)),
-        ("freq", Json::str(freq.name())),
-        ("generation", Json::num(resp.generation as f64)),
-        ("forecast", Json::arr_f32(&resp.forecast)),
-    ]))
+/// Status mapping: malformed / unroutable / too-short requests are 400;
+/// a queue-full backpressure rejection is 429 + `Retry-After` (the
+/// request was valid — the server is asking the client to slow down);
+/// faults *while serving* a valid request (backend error, pool shut
+/// down) are 500 so monitoring and load balancers see a server outage,
+/// not a client mistake.
+fn handle_forecast(stack: &ShardedStack, body: &str)
+                   -> (u16, Json, Option<u32>) {
+    let (freq, req) = match parse_forecast_request(stack, body) {
+        Ok(x) => x,
+        Err(e) => return (400, err_json(&format!("{e:#}")), None),
+    };
+    match stack.forecast(freq, req) {
+        Ok(resp) => (200,
+                     Json::obj(vec![
+                         ("id", Json::str(resp.id)),
+                         ("freq", Json::str(freq.name())),
+                         ("generation", Json::num(resp.generation as f64)),
+                         ("forecast", Json::arr_f32(&resp.forecast)),
+                     ]),
+                     None),
+        Err(e) if e.is::<QueueFull>() => {
+            (429, err_json(&format!("{e:#}")), Some(1))
+        }
+        Err(e) => (500, err_json(&format!("{e:#}")), None),
+    }
 }
+
+/// Round-robin discriminator for requests that omit `id`. A constant
+/// fallback would consistent-hash every anonymous request onto one
+/// shard (one fixed ring point), idling the rest of the fleet; a
+/// rotating synthetic id spreads them evenly, and placement stability
+/// only matters for *named* series anyway.
+static ANON_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Validate everything client-controlled up front, including the history
 /// length (mirroring the pool's own submit-time check) so a short
 /// request is a clean 400 before it ever reaches the queue.
-fn parse_forecast_request(stack: &ServingStack, body: &str)
+fn parse_forecast_request(stack: &ShardedStack, body: &str)
                           -> Result<(Frequency, ForecastRequest)> {
     let doc = Json::parse(body).context("request body")?;
     let freq = resolve_freq(stack, &doc)?;
     let values = doc.get("values")?.as_f32_vec()?;
     let id = match doc.opt("id") {
         Some(j) => j.as_str()?.to_string(),
-        None => "http".to_string(),
+        None => format!("http-{}", ANON_SEQ.fetch_add(1, Ordering::Relaxed)),
     };
     let category = match doc.opt("category") {
         Some(j) => Category::parse(j.as_str()?)?,
@@ -262,7 +792,7 @@ fn parse_forecast_request(stack: &ServingStack, body: &str)
     Ok((freq, ForecastRequest { id, values, category }))
 }
 
-fn handle_reload(stack: &ServingStack, body: &str) -> Result<Json> {
+fn handle_reload(stack: &ShardedStack, body: &str) -> Result<Json> {
     let doc = Json::parse(body).context("request body")?;
     let freq = resolve_freq(stack, &doc)?;
     let path = doc.get("checkpoint")?.as_str()?;
@@ -273,22 +803,67 @@ fn handle_reload(stack: &ServingStack, body: &str) -> Result<Json> {
     ]))
 }
 
-fn handle_stats(stack: &ServingStack) -> Json {
-    Json::Obj(
-        stack
-            .stats_all()
-            .iter()
-            .map(|(f, s)| (f.name().to_string(), s.to_json()))
+fn handle_stats(sh: &ServerShared) -> Json {
+    // One snapshot, folded twice: the aggregate is computed from the
+    // same per-shard view it is reported next to, so the top-level
+    // numbers always equal the sum of the `"shards"` breakdown (two
+    // separate snapshots could disagree under live traffic), and every
+    // pool's stats mutexes are taken once per /stats, not twice.
+    let per_shard = sh.stack.shard_stats();
+    let mut agg: BTreeMap<Frequency, ServiceStats> = BTreeMap::new();
+    for by_freq in per_shard.values() {
+        for (f, s) in by_freq {
+            agg.entry(*f).or_default().absorb(s);
+        }
+    }
+    let mut top: BTreeMap<String, Json> = agg
+        .iter()
+        .map(|(f, s)| (f.name().to_string(), s.to_json()))
+        .collect();
+    let shards = Json::Obj(
+        per_shard
+            .into_iter()
+            .map(|(label, by_freq)| {
+                (label,
+                 Json::Obj(by_freq
+                     .iter()
+                     .map(|(f, s)| (f.name().to_string(), s.to_json()))
+                     .collect()))
+            })
             .collect(),
-    )
+    );
+    top.insert("shards".to_string(), shards);
+    // Front-end connection health: which knob to turn when clients see
+    // 503s — `sheds_backlog_full` wants a bigger backlog / more
+    // capacity, `sheds_stale_in_backlog` wants more / faster
+    // connection workers. (No frequency is named "http", so the key
+    // cannot collide.)
+    top.insert(
+        "http".to_string(),
+        Json::obj(vec![
+            ("sheds_backlog_full",
+             Json::num(sh.sheds.load(Ordering::Relaxed) as f64)),
+            ("sheds_stale_in_backlog",
+             Json::num(sh.stale_sheds.load(Ordering::Relaxed) as f64)),
+            ("conn_workers", Json::num(sh.opts.conn_workers as f64)),
+            ("accept_backlog", Json::num(sh.opts.accept_backlog as f64)),
+        ]),
+    );
+    Json::Obj(top)
 }
 
-fn handle_healthz(stack: &ServingStack) -> Json {
+fn handle_healthz(stack: &ShardedStack) -> Json {
     let freqs = stack.frequencies();
     Json::obj(vec![
         ("status", Json::str("ok")),
         ("frequencies",
          Json::Arr(freqs.iter().map(|f| Json::str(f.name())).collect())),
+        ("shards",
+         Json::Arr(stack
+             .shard_labels()
+             .into_iter()
+             .map(Json::Str)
+             .collect())),
         ("generations",
          Json::Obj(
              freqs
@@ -302,28 +877,258 @@ fn handle_healthz(stack: &ServingStack) -> Json {
     ])
 }
 
-fn write_response(stream: &mut TcpStream, code: u16, body: &str)
+fn write_response(stream: &mut TcpStream, code: u16, body: &str,
+                  keep_alive: bool, retry_after: Option<u32>)
                   -> std::io::Result<()> {
     let reason = match code {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
         _ => "Error",
     };
-    let head = format!(
+    let mut head = format!(
         "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\n",
         body.len());
+    if let Some(secs) = retry_after {
+        head.push_str(&format!("Retry-After: {secs}\r\n"));
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
 }
 
-/// Minimal blocking HTTP client for the CLI demo and integration tests:
-/// one request per connection (`Connection: close`), returns
-/// `(status code, body)`.
+// ---------------------------------------------------------------------
+// Clients
+// ---------------------------------------------------------------------
+
+/// Whether an I/O error means the peer tore the connection down (vs a
+/// timeout or a local fault).
+fn is_conn_dead(e: &std::io::Error) -> bool {
+    matches!(e.kind(),
+             std::io::ErrorKind::ConnectionReset
+             | std::io::ErrorKind::ConnectionAborted
+             | std::io::ErrorKind::BrokenPipe)
+}
+
+/// Typed marker for "the keep-alive socket was already dead": EOF
+/// before a single response byte. The server cannot have sent anything,
+/// and with it almost certainly never processed the request (an idle
+/// close RSTs in-flight data) — the one failure [`HttpClient`] may
+/// safely retry without risking double execution. Read timeouts and
+/// mid-response EOFs are deliberately NOT this error: there the request
+/// may have executed server-side.
+#[derive(Debug)]
+struct StaleConnection;
+
+impl std::fmt::Display for StaleConnection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection closed before any response byte (stale \
+                   keep-alive socket)")
+    }
+}
+
+impl std::error::Error for StaleConnection {}
+
+/// One parsed HTTP response.
+#[derive(Debug, Clone)]
+pub struct HttpReply {
+    pub code: u16,
+    /// Header (name, value) pairs; names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpReply {
+    /// First header value for `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Minimal blocking keep-alive HTTP/1.1 client: one persistent
+/// connection serving many sequential requests — the cheap path the
+/// serving benches measure against connection-per-request
+/// [`http_request`]. Content-Length framed (which this server always
+/// emits).
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    addr: String,
+    /// The server advertised `Connection: close` on the last reply;
+    /// reconnect lazily before the next request (eager reconnection
+    /// could fail — e.g. server shutting down — and would throw away a
+    /// reply that was already successfully received).
+    dead: bool,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = Self::open(addr)?;
+        Ok(Self {
+            stream,
+            buf: Vec::with_capacity(4096),
+            addr: addr.into(),
+            dead: false,
+        })
+    }
+
+    fn open(addr: &str) -> Result<TcpStream> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(stream)
+    }
+
+    /// Send one request on the persistent connection and read its
+    /// reply. Server-initiated closes are handled transparently:
+    /// advertised ones (`Connection: close` — worker rotation at
+    /// `max_requests_per_conn`, shutdown) reconnect eagerly for the
+    /// next request, and a silent idle close (the server's `keep_alive`
+    /// timeout firing between calls) is recovered by one retry on a
+    /// fresh connection.
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&str>)
+                   -> Result<HttpReply> {
+        let body = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n\
+             {body}",
+            self.addr,
+            body.len());
+        if self.dead {
+            self.reconnect()?;
+        }
+        let reply = match self.try_request(&req) {
+            Ok(reply) => reply,
+            // Only the provably-unprocessed failure is retried: a
+            // timeout or mid-response EOF may mean the server already
+            // executed the (possibly non-idempotent) request.
+            Err(e) if e.is::<StaleConnection>() => {
+                self.reconnect()?;
+                self.try_request(&req)?
+            }
+            Err(e) => return Err(e),
+        };
+        // An advertised close (worker rotation, shutdown) marks the
+        // connection for lazy reconnection — the reply in hand is still
+        // returned even if the server is gone by now.
+        self.dead = reply.header("connection") == Some("close");
+        Ok(reply)
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        self.stream = Self::open(&self.addr)?;
+        self.buf.clear();
+        self.dead = false;
+        Ok(())
+    }
+
+    fn try_request(&mut self, req: &str) -> Result<HttpReply> {
+        if let Err(e) = self
+            .stream
+            .write_all(req.as_bytes())
+            .and_then(|()| self.stream.flush())
+        {
+            // A request whose write failed was never processed — if the
+            // failure smells like a dead socket, mark it retryable.
+            return Err(if is_conn_dead(&e) {
+                anyhow::Error::new(StaleConnection)
+            } else {
+                e.into()
+            });
+        }
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> Result<HttpReply> {
+        let mut tmp = [0u8; 4096];
+        let header_end = loop {
+            if let Some(pos) = find_subsequence(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            let n = match self.stream.read(&mut tmp) {
+                Ok(n) => n,
+                // On a low-RTT link a server idle-close usually shows
+                // up as ECONNRESET (our write drew an RST), not a clean
+                // EOF — with zero response bytes it is the same
+                // provably-unprocessed case, so equally retryable.
+                Err(e) if self.buf.is_empty() && is_conn_dead(&e) => {
+                    return Err(anyhow::Error::new(StaleConnection));
+                }
+                Err(e) => return Err(e.into()),
+            };
+            if n == 0 {
+                if self.buf.is_empty() {
+                    // Zero response bytes: the socket was dead before
+                    // we used it (server idle-close) — retryable.
+                    return Err(anyhow::Error::new(StaleConnection));
+                }
+                bail!("server closed the connection mid-response");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = std::str::from_utf8(&self.buf[..header_end])
+            .context("response head is not UTF-8")?;
+        let mut lines = head.split("\r\n");
+        let code = lines
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| anyhow!("malformed HTTP status line"))?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if k == "content-length" {
+                    content_length = v
+                        .parse()
+                        .map_err(|_| anyhow!("bad Content-Length `{v}`"))?;
+                }
+                headers.push((k, v));
+            }
+        }
+        let body_start = header_end + 4;
+        let needed = body_start + content_length;
+        while self.buf.len() < needed {
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                bail!("server closed the connection mid-response body");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+        let body = std::str::from_utf8(&self.buf[body_start..needed])
+            .context("response body is not UTF-8")?
+            .to_string();
+        self.buf.drain(..needed);
+        Ok(HttpReply { code, headers, body })
+    }
+}
+
+/// Minimal blocking one-shot HTTP client: one request per connection
+/// (`Connection: close`), returns `(status code, body)`. The expensive
+/// path — kept for one-off operator calls and as the bench's
+/// connection-per-request contender.
 pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&str>)
                     -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)
@@ -378,5 +1183,75 @@ mod tests {
     fn error_body_shape() {
         let j = err_json("boom");
         assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+
+    #[test]
+    fn head_parsing_keep_alive_defaults() {
+        // HTTP/1.1 defaults to keep-alive …
+        let h = parse_head(b"GET /x HTTP/1.1\r\nHost: a", 100).unwrap();
+        assert!(h.keep_alive);
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.path, "/x");
+        // … unless Connection: close; 1.0 defaults to close …
+        let h = parse_head(b"GET / HTTP/1.1\r\nConnection: close", 100)
+            .unwrap();
+        assert!(!h.keep_alive);
+        let h = parse_head(b"GET / HTTP/1.0\r\nHost: a", 100).unwrap();
+        assert!(!h.keep_alive);
+        // … unless it opts back in.
+        let h = parse_head(b"GET / HTTP/1.0\r\nConnection: keep-alive", 100)
+            .unwrap();
+        assert!(h.keep_alive);
+        // RFC 9110: close is sticky — a later keep-alive cannot revive
+        // a connection an earlier header already asked to close.
+        let h = parse_head(
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\
+              Connection: keep-alive", 100)
+            .unwrap();
+        assert!(!h.keep_alive);
+    }
+
+    #[test]
+    fn head_parsing_enforces_body_cap_before_buffering() {
+        let h = parse_head(b"POST / HTTP/1.1\r\nContent-Length: 99", 100)
+            .unwrap();
+        assert_eq!(h.content_length, 99);
+        // One byte over the cap → 413, even though no body was sent.
+        let e = parse_head(b"POST / HTTP/1.1\r\nContent-Length: 101", 100)
+            .unwrap_err();
+        assert_eq!(e.0, 413);
+        // A hostile declared length cannot trigger a huge allocation.
+        let e = parse_head(
+            b"POST / HTTP/1.1\r\nContent-Length: 999999999999999", 100)
+            .unwrap_err();
+        assert_eq!(e.0, 413);
+        let e = parse_head(b"POST / HTTP/1.1\r\nContent-Length: nope", 100)
+            .unwrap_err();
+        assert_eq!(e.0, 400);
+    }
+
+    #[test]
+    fn head_parsing_rejects_conflicting_content_lengths() {
+        // RFC 9112 §6.3: conflicting values are a request-smuggling
+        // vector on keep-alive connections — refuse to pick one.
+        let e = parse_head(
+            b"POST / HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 44",
+            100)
+            .unwrap_err();
+        assert_eq!(e.0, 400);
+        // Duplicated-but-agreeing values are fine (some proxies do this).
+        let h = parse_head(
+            b"POST / HTTP/1.1\r\nContent-Length: 7\r\nContent-Length: 7",
+            100)
+            .unwrap();
+        assert_eq!(h.content_length, 7);
+    }
+
+    #[test]
+    fn head_parsing_rejects_chunked() {
+        let e = parse_head(
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked", 100)
+            .unwrap_err();
+        assert_eq!(e.0, 501);
     }
 }

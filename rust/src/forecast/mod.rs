@@ -1,8 +1,9 @@
-//! The serving subsystem: dynamic-batching forecast pools, a
-//! multi-frequency router with generation-tagged model hot-swap, and a
-//! zero-dependency HTTP front-end.
+//! The serving subsystem: dynamic-batching forecast pools with
+//! backpressure, a multi-frequency router with generation-tagged model
+//! hot-swap, consistent-hash sharding, and a zero-dependency HTTP
+//! front-end.
 //!
-//! Three layers (one file each):
+//! Four layers (one file each):
 //!
 //! * [`pool`] — [`FreqPool`]: N worker threads for one frequency, each
 //!   owning its own backend (backends may be `!Send`), pulling
@@ -16,9 +17,17 @@
 //! * [`router`] — [`ServingStack`]: one pool per trained frequency,
 //!   dispatching requests by frequency and exposing the hot-swap API
 //!   (including checkpoint reloads in either persistence format).
+//! * [`shard`] — [`ShardedStack`]: N `ServingStack` shards behind a
+//!   consistent-hash ring keyed by series id — stable assignment across
+//!   restarts, ≈1/N key movement on shard add/remove, live drain, and
+//!   aggregated per-frequency stats.
 //! * [`http`] — [`HttpServer`]: `POST /forecast`, `GET /stats`,
 //!   `GET /healthz`, `POST /reload` over `std::net::TcpListener` and
-//!   [`util::json`](crate::util::json) — no async runtime, no frameworks.
+//!   [`util::json`](crate::util::json) — no async runtime, no
+//!   frameworks. HTTP/1.1 keep-alive on a bounded pool of
+//!   connection-handler workers with an accept backlog; overload is shed
+//!   as `429` (pool queue full, [`QueueFull`]) or `503` (backlog full),
+//!   never an unbounded queue.
 //!
 //! [`ForecastService`] keeps the original single-frequency API as a thin
 //! wrapper over a one-pool stack: existing callers (tests, examples, the
@@ -27,10 +36,12 @@
 pub mod http;
 pub mod pool;
 pub mod router;
+pub mod shard;
 
-pub use http::HttpServer;
-pub use pool::{ForecastHandle, FreqPool};
+pub use http::{HttpClient, HttpOptions, HttpReply, HttpServer};
+pub use pool::{ForecastHandle, FreqPool, QueueFull};
 pub use router::ServingStack;
+pub use shard::{HashRing, ShardedStack};
 
 use std::sync::mpsc;
 use std::time::Duration;
@@ -73,6 +84,13 @@ pub struct ServiceOptions {
     /// Worker threads per frequency, each with its own backend. 1 keeps
     /// the original single-thread service behavior.
     pub workers: usize,
+    /// Backpressure: maximum accepted-but-undrained requests the pool
+    /// will queue. A submit beyond this depth is rejected with a typed
+    /// [`QueueFull`] error (the HTTP layer maps it to `429` +
+    /// `Retry-After`) instead of growing the queue without bound — under
+    /// a traffic spike the excess is shed instead of degrading every
+    /// queued request. `0` disables the limit.
+    pub queue_limit: usize,
 }
 
 impl Default for ServiceOptions {
@@ -81,6 +99,7 @@ impl Default for ServiceOptions {
             batch_window: Duration::from_millis(4),
             max_batch: 256,
             workers: 1,
+            queue_limit: 1024,
         }
     }
 }
@@ -94,6 +113,9 @@ pub struct ServiceStats {
     pub requests: u64,
     /// Requests rejected before enqueue (short history etc.).
     pub rejected: u64,
+    /// Requests shed with [`QueueFull`] because the queue was at
+    /// `queue_limit` (HTTP 429).
+    pub rejected_overload: u64,
     /// Executed batches (one per backend execution, not per drain round).
     pub batches: u64,
     pub padded_slots: u64,
@@ -103,6 +125,10 @@ pub struct ServiceStats {
     pub generation: u64,
     /// Worker threads serving the pool.
     pub workers: usize,
+    /// Accepted-but-undrained requests at snapshot time (gauge).
+    pub queue_depth: usize,
+    /// The configured backpressure limit (0 = unbounded).
+    pub queue_limit: usize,
     /// Enqueue → drain-round pickup.
     pub queue_wait: LatencySummary,
     /// Backend execution, per request (chunk time attributed to each
@@ -126,15 +152,55 @@ impl ServiceStats {
         Json::obj(vec![
             ("requests", Json::num(self.requests as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("rejected_overload", Json::num(self.rejected_overload as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("padded_slots", Json::num(self.padded_slots as f64)),
             ("reloads", Json::num(self.reloads as f64)),
             ("generation", Json::num(self.generation as f64)),
             ("workers", Json::num(self.workers as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("queue_limit", Json::num(self.queue_limit as f64)),
             ("queue_wait", lat(&self.queue_wait)),
             ("execute", lat(&self.execute)),
             ("total", lat(&self.total)),
         ])
+    }
+
+    /// Fold another pool's stats into this one — how [`ShardedStack`]
+    /// aggregates across shards. Counters, worker counts and queue
+    /// depths sum (the aggregate is the fleet's capacity); limits sum
+    /// too, except that the `0 = unbounded` sentinel is sticky (one
+    /// unbounded shard makes the fleet unbounded); `generation` takes
+    /// the max (shards reload independently; the max is the newest
+    /// model any shard serves); latency percentiles take the worst
+    /// shard (see
+    /// [`LatencySummary::absorb_worst`](crate::telemetry::LatencySummary::absorb_worst)).
+    pub fn absorb(&mut self, other: &ServiceStats) {
+        // `queue_limit: 0` means *unbounded* — that sentinel must be
+        // sticky under aggregation, or a fleet with one unbounded shard
+        // would report a finite capacity it does not have. A live pool
+        // always has workers ≥ 1, so `workers == 0` identifies a
+        // fresh accumulator (adopt the first shard's limit verbatim).
+        // Computed before `workers` is summed below.
+        self.queue_limit = if self.workers == 0 {
+            other.queue_limit
+        } else if self.queue_limit == 0 || other.queue_limit == 0 {
+            0
+        } else {
+            self.queue_limit + other.queue_limit
+        };
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.rejected_overload += other.rejected_overload;
+        self.batches += other.batches;
+        self.padded_slots += other.padded_slots;
+        self.reloads += other.reloads;
+        self.generation = self.generation.max(other.generation);
+        self.workers += other.workers;
+        self.queue_depth += other.queue_depth;
+        self.queue_wait.absorb_worst(&other.queue_wait);
+        self.execute.absorb_worst(&other.execute);
+        self.total.absorb_worst(&other.total);
     }
 }
 
@@ -266,10 +332,77 @@ mod tests {
 
     #[test]
     fn stats_json_shape() {
-        let st = ServiceStats { requests: 3, workers: 2, ..Default::default() };
+        let st = ServiceStats { requests: 3, workers: 2, queue_depth: 5,
+                                rejected_overload: 1,
+                                ..Default::default() };
         let j = st.to_json();
         assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("rejected_overload").unwrap().as_usize().unwrap(), 1);
         assert!(j.get("queue_wait").unwrap().get("p99_ms").is_ok());
+    }
+
+    #[test]
+    fn stats_absorb_sums_counters_and_takes_worst_latency() {
+        let mut a = ServiceStats {
+            requests: 10,
+            rejected: 1,
+            rejected_overload: 2,
+            batches: 4,
+            padded_slots: 3,
+            reloads: 1,
+            generation: 2,
+            workers: 2,
+            queue_depth: 1,
+            queue_limit: 8,
+            ..Default::default()
+        };
+        a.total.p95 = 0.010;
+        let mut b = ServiceStats {
+            requests: 5,
+            rejected_overload: 7,
+            generation: 5,
+            workers: 2,
+            queue_depth: 3,
+            queue_limit: 8,
+            ..Default::default()
+        };
+        b.total.p95 = 0.030;
+        a.absorb(&b);
+        assert_eq!(a.requests, 15);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.rejected_overload, 9);
+        assert_eq!(a.generation, 5, "generation is the max, not a sum");
+        assert_eq!(a.workers, 4);
+        assert_eq!(a.queue_depth, 4);
+        assert_eq!(a.queue_limit, 16);
+        assert_eq!(a.total.p95, 0.030, "latency takes the worst shard");
+    }
+
+    #[test]
+    fn stats_absorb_keeps_unbounded_queue_sentinel_sticky() {
+        // Folding into a fresh accumulator adopts the first shard's
+        // limit verbatim (including a real 0).
+        let bounded = ServiceStats { workers: 2, queue_limit: 8,
+                                     ..Default::default() };
+        let unbounded = ServiceStats { workers: 2, queue_limit: 0,
+                                       ..Default::default() };
+        let mut agg = ServiceStats::default();
+        agg.absorb(&bounded);
+        assert_eq!(agg.queue_limit, 8);
+        agg.absorb(&bounded);
+        assert_eq!(agg.queue_limit, 16, "bounded shards sum");
+        agg.absorb(&unbounded);
+        assert_eq!(agg.queue_limit, 0,
+                   "one unbounded shard makes the fleet unbounded");
+        agg.absorb(&bounded);
+        assert_eq!(agg.queue_limit, 0, "the sentinel is sticky");
+
+        let mut agg = ServiceStats::default();
+        agg.absorb(&unbounded);
+        assert_eq!(agg.queue_limit, 0);
+        agg.absorb(&bounded);
+        assert_eq!(agg.queue_limit, 0);
     }
 }

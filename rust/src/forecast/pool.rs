@@ -20,6 +20,11 @@
 //! * the request queue is independent of the model slot: a reload drops
 //!   no queued or in-flight request, and shutdown drains the queue before
 //!   the workers exit.
+//!
+//! Backpressure: the queue is bounded by `ServiceOptions::queue_limit`.
+//! A submit that would exceed it returns a typed [`QueueFull`] error
+//! immediately (never blocks, never queues) so overload is shed at the
+//! door — the HTTP layer maps it to `429` + `Retry-After`.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -42,6 +47,27 @@ use super::{pick_batch, plan_batches, ForecastRequest, ForecastResponse,
 /// worker, on the worker's own thread.
 pub type BackendFactory =
     Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
+
+/// Typed backpressure rejection: the pool's queue is at
+/// `ServiceOptions::queue_limit`, so this submit was shed instead of
+/// queued. Carried as the payload of the returned `anyhow::Error`
+/// (`err.is::<QueueFull>()`), which the HTTP layer maps to
+/// `429 Too Many Requests` + `Retry-After` — distinct from client
+/// mistakes (400) and server faults (500).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull {
+    /// The configured queue depth limit that was hit.
+    pub limit: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "forecast queue is full ({} pending requests) — retry \
+                   later", self.limit)
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 /// A model state published under one generation tag. Workers hold the
 /// `Arc` for the duration of a drain-round; old generations are freed
@@ -66,6 +92,7 @@ struct QueueInner {
 struct StatsInner {
     requests: u64,
     rejected: u64,
+    rejected_overload: u64,
     batches: u64,
     padded_slots: u64,
     reloads: u64,
@@ -105,6 +132,16 @@ impl PoolShared {
             let mut q = self.queue.lock().unwrap();
             if q.shutdown {
                 bail!("forecast service is down");
+            }
+            let limit = self.opts.queue_limit;
+            if limit > 0 && q.jobs.len() >= limit {
+                // Backpressure: shed this request instead of queueing it
+                // behind work we cannot keep up with — the caller gets a
+                // typed QueueFull (HTTP 429) immediately, and the
+                // requests already queued keep their latency budget.
+                drop(q);
+                self.stats.lock().unwrap().rejected_overload += 1;
+                return Err(QueueFull { limit }.into());
             }
             q.jobs.push_back(Job { req, tx, enqueued: Instant::now() });
         }
@@ -174,15 +211,22 @@ impl PoolShared {
 
     fn stats_snapshot(&self) -> ServiceStats {
         let generation = self.current_model().generation;
+        // Sequential acquisitions — the lock discipline (never two locks
+        // at once) holds; the depth gauge and the counters may be one
+        // submit apart, which is fine for monitoring.
+        let queue_depth = self.queue.lock().unwrap().jobs.len();
         let s = self.stats.lock().unwrap();
         ServiceStats {
             requests: s.requests,
             rejected: s.rejected,
+            rejected_overload: s.rejected_overload,
             batches: s.batches,
             padded_slots: s.padded_slots,
             reloads: s.reloads,
             generation,
             workers: self.opts.workers,
+            queue_depth,
+            queue_limit: self.opts.queue_limit,
             queue_wait: s.queue_wait.summary(),
             execute: s.execute.summary(),
             total: s.total.summary(),

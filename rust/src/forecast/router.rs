@@ -111,11 +111,7 @@ impl ServingStack {
     /// must match the pool it is being loaded into.
     pub fn reload_checkpoint(&self, freq: Frequency, path: impl AsRef<Path>)
                              -> Result<u64> {
-        let (ckpt_freq, state) = checkpoint::load_model_state(&path)?;
-        if ckpt_freq != freq.name() {
-            bail!("checkpoint {} was trained for `{}`, not `{}`",
-                  path.as_ref().display(), ckpt_freq, freq.name());
-        }
+        let state = checkpoint::load_model_state_for(path, freq.name())?;
         self.reload(freq, state)
     }
 

@@ -22,8 +22,8 @@ use fast_esrnn::config::{Category, Frequency, NetworkConfig, TrainConfig,
                          ALL_CATEGORIES, MODELED_FREQS};
 use fast_esrnn::coordinator::{checkpoint, EvalSplit, ModelState, Trainer};
 use fast_esrnn::data::{self, stats, Corpus, GenOptions};
-use fast_esrnn::forecast::{http, ForecastRequest, HttpServer, ServiceOptions,
-                           ServingStack};
+use fast_esrnn::forecast::{http, ForecastRequest, HttpServer, QueueFull,
+                           ServiceOptions, ServingStack, ShardedStack};
 use fast_esrnn::metrics::{mase, smape};
 use fast_esrnn::runtime::{backend_with_artifacts, Backend};
 use fast_esrnn::util::cli::{Args, Cli};
@@ -254,14 +254,20 @@ fn cmd_baselines(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let cli = Cli::new("serve", "serve forecasts from per-frequency worker \
-                                 pools with model hot-swap")
+    let cli = Cli::new("serve", "serve forecasts from sharded per-frequency \
+                                 worker pools with model hot-swap")
         .opt("backend", "native", "execution backend: native or pjrt")
         .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("freqs", "quarterly",
              "comma list of frequencies to serve, or `all`")
         .opt("checkpoint-dir", "checkpoints", "checkpoint directory")
-        .opt("workers", "2", "worker threads per frequency")
+        .opt("workers", "2", "worker threads per frequency, per shard")
+        .opt("shards", "1",
+             "serving shards; requests route by a consistent hash of the \
+              series id")
+        .opt("queue-limit", "1024",
+             "per-pool backpressure: queued requests beyond this are shed \
+              with 429 (0 = unbounded)")
         .opt("http", "",
              "also serve HTTP on this address (e.g. 127.0.0.1:8080)")
         .opt("requests", "64",
@@ -269,22 +275,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("scale", "200", "corpus scale for demo request data");
     let a = cli.parse(args)?;
     let freqs = parse_freqs(&a.get_str_list("freqs"))?;
+    let n_shards = a.get_usize("shards")?.max(1);
     let opts = ServiceOptions {
         workers: a.get_usize("workers")?.max(1),
+        queue_limit: a.get_usize("queue-limit")?,
         ..Default::default()
     };
 
-    let backend_name = a.get("backend").to_string();
-    let artifacts = PathBuf::from(a.get("artifacts"));
-    let mut stack = ServingStack::new();
+    // Load (or init) each frequency's weights once; every shard serves a
+    // clone of the same state.
+    let mut states: Vec<(Frequency, ModelState)> = Vec::new();
     for &freq in &freqs {
         let state = match find_checkpoint(a.get("checkpoint-dir"), freq) {
             Some(path) => {
-                let (ckpt_freq, state) = checkpoint::load_model_state(&path)?;
-                if ckpt_freq != freq.name() {
-                    bail!("{} was trained for `{ckpt_freq}`, not `{}`",
-                          path.display(), freq.name());
-                }
+                let state =
+                    checkpoint::load_model_state_for(&path, freq.name())?;
                 println!("[{}] serving weights from {}", freq.name(),
                          path.display());
                 state
@@ -297,17 +302,31 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 ModelState::init(backend.as_ref(), freq.name(), 42)?
             }
         };
-        let (bn, art) = (backend_name.clone(), artifacts.clone());
-        stack.start_pool(
-            Arc::new(move || backend_with_artifacts(&bn, Some(&art))),
-            freq, state, opts.clone())?;
+        states.push((freq, state));
     }
-    let stack = Arc::new(stack);
+
+    let backend_name = a.get("backend").to_string();
+    let artifacts = PathBuf::from(a.get("artifacts"));
+    let sharded = ShardedStack::new();
+    for s in 0..n_shards {
+        let mut stack = ServingStack::new();
+        for (freq, state) in &states {
+            let (bn, art) = (backend_name.clone(), artifacts.clone());
+            stack.start_pool(
+                Arc::new(move || backend_with_artifacts(&bn, Some(&art))),
+                *freq, state.clone(), opts.clone())?;
+        }
+        sharded.add_shard(&format!("shard-{s}"), stack)?;
+    }
+    let sharded = Arc::new(sharded);
+    println!("{} shard(s) × {} worker(s)/frequency, queue limit {}",
+             n_shards, opts.workers, opts.queue_limit);
     let n_req = a.get_usize("requests")?;
     let scale = a.get_usize("scale")?;
 
     if !a.get("http").is_empty() {
-        let server = HttpServer::start(Arc::clone(&stack), a.get("http"))?;
+        let server = HttpServer::start_sharded(Arc::clone(&sharded),
+                                               a.get("http"))?;
         let addr = server.addr().to_string();
         println!("HTTP front-end on http://{addr}  (POST /forecast · \
                   GET /stats · GET /healthz · POST /reload)");
@@ -325,7 +344,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
 
     for &freq in &freqs {
-        channel_demo(&stack, freq, n_req, scale)?;
+        channel_demo(&sharded, freq, n_req, scale)?;
     }
     Ok(())
 }
@@ -351,11 +370,12 @@ fn demo_series(freq: Frequency, scale: usize)
     Ok((net, candidates))
 }
 
-/// Drive one frequency through the real HTTP wire: POST forecasts,
-/// report throughput.
+/// Drive one frequency through the real HTTP wire on a single
+/// keep-alive connection: POST forecasts, report throughput.
 fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
              -> Result<()> {
     let (net, candidates) = demo_series(freq, scale)?;
+    let mut client = http::HttpClient::connect(addr)?;
     let t0 = std::time::Instant::now();
     let mut ok = 0usize;
     for i in 0..n_req {
@@ -367,35 +387,43 @@ fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
             ("values", Json::arr_f32(&s.values)),
         ])
         .to_string();
-        let (code, reply) =
-            http::http_request(addr, "POST", "/forecast", Some(&body))?;
-        if code == 200
-            && Json::parse(&reply)?.get("forecast")?.as_f32_vec()?.len()
+        let reply = client.request("POST", "/forecast", Some(&body))?;
+        if reply.code == 200
+            && Json::parse(&reply.body)?.get("forecast")?.as_f32_vec()?.len()
                 == net.horizon
         {
             ok += 1;
         }
     }
     let secs = t0.elapsed().as_secs_f64();
-    println!("[{}] HTTP: {ok}/{n_req} ok in {secs:.3}s ({:.1} req/s)",
+    println!("[{}] HTTP keep-alive: {ok}/{n_req} ok in {secs:.3}s \
+              ({:.1} req/s)",
              freq.name(), ok as f64 / secs);
     Ok(())
 }
 
-/// Drive one frequency's pool through the in-process handle: burst
-/// submit, await all, print stats including latency percentiles.
-fn channel_demo(stack: &ServingStack, freq: Frequency, n_req: usize,
+/// Drive one frequency's pools through the in-process sharded router:
+/// burst submit, await all, print stats including latency percentiles.
+fn channel_demo(stack: &ShardedStack, freq: Frequency, n_req: usize,
                 scale: usize) -> Result<()> {
     let (net, candidates) = demo_series(freq, scale)?;
     let t0 = std::time::Instant::now();
     let mut receivers = Vec::with_capacity(n_req);
+    let mut shed = 0usize;
     for i in 0..n_req {
         let s = &candidates[i % candidates.len()];
-        receivers.push(stack.submit(freq, ForecastRequest {
+        let req = ForecastRequest {
             id: s.id.clone(),
             values: s.values.clone(),
             category: s.category,
-        })?);
+        };
+        match stack.submit(freq, req) {
+            Ok(rx) => receivers.push(rx),
+            // A burst bigger than --queue-limit is *supposed* to shed
+            // the excess — count it instead of aborting the demo.
+            Err(e) if e.is::<QueueFull>() => shed += 1,
+            Err(e) => return Err(e),
+        }
     }
     let mut ok = 0usize;
     for rx in receivers {
@@ -406,8 +434,9 @@ fn channel_demo(stack: &ServingStack, freq: Frequency, n_req: usize,
     }
     let secs = t0.elapsed().as_secs_f64();
     let st = stack.stats(freq)?;
-    println!("[{}] served {ok}/{n_req} in {secs:.3}s ({:.1} req/s; \
-              {} batches, {} padded slots, {} workers, generation {})",
+    println!("[{}] served {ok}/{n_req} ({shed} shed by backpressure) in \
+              {secs:.3}s ({:.1} req/s; {} batches, {} padded slots, \
+              {} workers, generation {})",
              freq.name(), ok as f64 / secs, st.batches, st.padded_slots,
              st.workers, st.generation);
     println!("    queue p50 {:.2}ms p95 {:.2}ms | exec p50 {:.2}ms \

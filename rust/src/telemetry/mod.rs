@@ -86,6 +86,20 @@ pub struct LatencySummary {
     pub p99: f64,
 }
 
+impl LatencySummary {
+    /// Fold another summary into this one for shard aggregation: counts
+    /// sum, each percentile takes the worse (larger) shard. Percentiles
+    /// cannot be merged exactly without the underlying samples, so the
+    /// aggregate is deliberately conservative — an SLO judged on it can
+    /// only be stricter than reality, never laxer.
+    pub fn absorb_worst(&mut self, other: &LatencySummary) {
+        self.count += other.count;
+        self.p50 = self.p50.max(other.p50);
+        self.p95 = self.p95.max(other.p95);
+        self.p99 = self.p99.max(other.p99);
+    }
+}
+
 /// Bounded-memory latency quantile recorder: keeps the most recent
 /// `cap` samples in a ring and computes percentiles over that window.
 /// A sliding window (rather than a lossy sketch) is the right trade for
@@ -209,6 +223,19 @@ mod tests {
         // The four old 100.0 samples have been overwritten.
         assert_eq!(q.quantile(0.99), 1.0);
         assert_eq!(q.count(), 8);
+    }
+
+    #[test]
+    fn summary_absorb_takes_worst_percentiles_and_sums_counts() {
+        let mut a = LatencySummary { count: 10, p50: 0.002, p95: 0.010,
+                                     p99: 0.020 };
+        let b = LatencySummary { count: 4, p50: 0.003, p95: 0.008,
+                                 p99: 0.050 };
+        a.absorb_worst(&b);
+        assert_eq!(a.count, 14);
+        assert_eq!(a.p50, 0.003);
+        assert_eq!(a.p95, 0.010);
+        assert_eq!(a.p99, 0.050);
     }
 
     #[test]

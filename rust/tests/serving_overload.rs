@@ -1,0 +1,475 @@
+//! Overload / soak suite for the sharded, backpressured HTTP serving
+//! stack — the contract under test:
+//!
+//! * under saturating concurrent load with a tiny queue limit, **every
+//!   request completes with `200` or `429`** — zero hangs, zero drops,
+//!   and accepted + shed exactly accounts for every submit;
+//! * HTTP/1.1 keep-alive conformance: many requests per connection,
+//!   pipelined sequential requests, `Connection: close` honored;
+//! * request-size limits enforced *before* buffering: oversized bodies
+//!   → `413`, oversized headers → `431` — a hostile `Content-Length`
+//!   cannot balloon memory;
+//! * the consistent-hash shard router splits real HTTP traffic by
+//!   series id, aggregates stats as the exact sum of shard stats, and
+//!   drains a removed shard without dropping anything.
+//!
+//! All tests run on the native backend with freshly-initialized weights
+//! (`ModelState::init`) — overload behavior does not depend on trained
+//! weights, and skipping training keeps the suite fast enough to run on
+//! every CI push.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fast_esrnn::config::Frequency;
+use fast_esrnn::coordinator::ModelState;
+use fast_esrnn::forecast::{http, HttpClient, HttpOptions, HttpServer,
+                           ServiceOptions, ServingStack, ShardedStack};
+use fast_esrnn::runtime::NativeBackend;
+use fast_esrnn::util::json::Json;
+
+const FREQ: Frequency = Frequency::Quarterly;
+const HORIZON: usize = 8;
+
+fn fresh_state() -> ModelState {
+    let backend = NativeBackend::new();
+    ModelState::init(&backend, FREQ.name(), 42).unwrap()
+}
+
+/// A positive synthetic history long enough for the quarterly C=72 cut.
+fn probe_values() -> Vec<f32> {
+    (0..80)
+        .map(|i| 100.0 + i as f32 * 0.5 + (i % 4) as f32 * 3.0)
+        .collect()
+}
+
+fn forecast_body(id: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("values", Json::arr_f32(&probe_values())),
+    ])
+    .to_string()
+}
+
+/// Start a single-shard server with the given pool + HTTP options;
+/// returns (server, the stack for in-process stats).
+fn start_server(opts: ServiceOptions, http_opts: HttpOptions)
+                -> (HttpServer, Arc<ServingStack>) {
+    let mut stack = ServingStack::new();
+    stack.start_pool_native(FREQ, fresh_state(), opts).unwrap();
+    let stack = Arc::new(stack);
+    let sharded =
+        Arc::new(ShardedStack::single(Arc::clone(&stack)).unwrap());
+    let server =
+        HttpServer::start_with(sharded, "127.0.0.1:0", http_opts).unwrap();
+    (server, stack)
+}
+
+#[test]
+fn overload_sheds_load_with_429_and_never_hangs_or_drops() {
+    // A deliberately starved pool: one worker, queue depth 1 — any
+    // concurrency at all must overflow into 429s, never into an
+    // unbounded queue or a hang.
+    let (server, stack) = start_server(
+        ServiceOptions {
+            workers: 1,
+            queue_limit: 1,
+            batch_window: Duration::from_millis(1),
+            max_batch: 1,
+            ..Default::default()
+        },
+        HttpOptions {
+            conn_workers: 16,
+            accept_backlog: 64,
+            ..Default::default()
+        },
+    );
+    let addr = server.addr().to_string();
+
+    const CLIENTS: usize = 12;
+    const PER_CLIENT: usize = 15;
+    let mut total_ok = 0u64;
+    let mut total_shed = 0u64;
+    // A couple of rounds so the test cannot flake on a scheduler that
+    // briefly serializes the clients: invariants hold every round; we
+    // stop once both outcomes (200 and 429) have been observed.
+    for _round in 0..5 {
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&addr).unwrap();
+                let (mut ok, mut shed) = (0u64, 0u64);
+                for i in 0..PER_CLIENT {
+                    let body = forecast_body(&format!("load-{c}-{i}"));
+                    let reply = client
+                        .request("POST", "/forecast", Some(&body))
+                        .expect("request hung or connection died");
+                    match reply.code {
+                        200 => {
+                            let doc = Json::parse(&reply.body).unwrap();
+                            assert_eq!(
+                                doc.get("forecast")
+                                    .unwrap()
+                                    .as_f32_vec()
+                                    .unwrap()
+                                    .len(),
+                                HORIZON);
+                            ok += 1;
+                        }
+                        429 => {
+                            assert_eq!(reply.header("retry-after"),
+                                       Some("1"),
+                                       "429 must carry Retry-After");
+                            shed += 1;
+                        }
+                        other => panic!(
+                            "got {other} — overload must answer 200 or \
+                             429, body: {}",
+                            reply.body),
+                    }
+                }
+                (ok, shed)
+            }));
+        }
+        let mut round_ok = 0u64;
+        let mut round_shed = 0u64;
+        for j in joins {
+            let (ok, shed) = j.join().expect("client thread panicked");
+            round_ok += ok;
+            round_shed += shed;
+        }
+        // Zero drops: every request got exactly one definite answer.
+        assert_eq!(round_ok + round_shed, (CLIENTS * PER_CLIENT) as u64);
+        total_ok += round_ok;
+        total_shed += round_shed;
+        if total_ok > 0 && total_shed > 0 {
+            break;
+        }
+    }
+    assert!(total_ok > 0, "nothing was served under overload");
+    assert!(total_shed > 0,
+            "queue_limit=1 under {CLIENTS} concurrent clients never shed — \
+             backpressure is not engaging");
+    assert_eq!(server.sheds(), 0,
+               "accept backlog should not have shed (only the pool queue)");
+    assert_eq!(server.stale_sheds(), 0,
+               "no connection should have gone stale in the backlog");
+
+    // Accounting closes exactly: accepted + shed == submitted.
+    let st = stack.stats(FREQ).unwrap();
+    assert_eq!(st.requests + st.rejected_overload, total_ok + total_shed);
+    assert_eq!(st.requests, total_ok);
+    assert_eq!(st.rejected_overload, total_shed);
+    assert_eq!(st.queue_limit, 1);
+}
+
+#[test]
+fn keep_alive_serves_sequential_and_pipelined_requests() {
+    let (server, _stack) = start_server(
+        ServiceOptions { workers: 1, ..Default::default() },
+        HttpOptions::default(),
+    );
+    let addr = server.addr().to_string();
+
+    // Many sequential requests on ONE connection, mixed routes.
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for i in 0..4 {
+        let reply = client.request("GET", "/healthz", None).unwrap();
+        assert_eq!(reply.code, 200, "request {i} on the shared connection");
+        assert_eq!(reply.header("connection"), Some("keep-alive"));
+        let body = forecast_body(&format!("ka-{i}"));
+        let reply =
+            client.request("POST", "/forecast", Some(&body)).unwrap();
+        assert_eq!(reply.code, 200, "{}", reply.body);
+    }
+    // Errors must not poison the connection: a 404 keeps it alive.
+    let reply = client.request("GET", "/nope", None).unwrap();
+    assert_eq!(reply.code, 404);
+    let reply = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(reply.code, 200, "connection unusable after a 404");
+
+    // Pipelined: two requests written back-to-back before reading —
+    // both must come back, in order, on the same connection.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let two = "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n\
+               GET /stats HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n";
+    stream.write_all(two.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    let (code, body) = read_one_response(&mut stream, &mut buf);
+    assert_eq!(code, 200);
+    assert_eq!(Json::parse(&body).unwrap().get("status").unwrap()
+                   .as_str().unwrap(), "ok");
+    let (code, body) = read_one_response(&mut stream, &mut buf);
+    assert_eq!(code, 200);
+    assert!(Json::parse(&body).unwrap().get(FREQ.name()).is_ok(),
+            "second pipelined response should be /stats");
+
+    // Connection: close honored — response says close, then EOF.
+    let req = "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+               Connection: close\r\n\r\n";
+    stream.write_all(req.as_bytes()).unwrap();
+    let head = read_headers_raw(&mut stream, &mut buf);
+    assert!(head.to_ascii_lowercase().contains("connection: close"),
+            "close request must be answered with Connection: close: \
+             {head}");
+    // Drain the body, then expect EOF.
+    let _ = read_one_response_from(&head, &mut stream, &mut buf);
+    let mut probe = [0u8; 16];
+    assert_eq!(stream.read(&mut probe).unwrap_or(0), 0,
+               "server did not close after Connection: close");
+}
+
+#[test]
+fn rotation_caps_requests_per_connection_and_clients_reconnect() {
+    let (server, _stack) = start_server(
+        ServiceOptions { workers: 1, ..Default::default() },
+        HttpOptions { max_requests_per_conn: 2, ..Default::default() },
+    );
+    let addr = server.addr().to_string();
+
+    // Raw socket: request 1 keeps the connection, request 2 hits the
+    // rotation cap — `Connection: close` then EOF, freeing the worker.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let req = "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n";
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    let head = read_headers_raw(&mut stream, &mut buf);
+    assert!(head.to_ascii_lowercase().contains("connection: keep-alive"),
+            "{head}");
+    let _ = read_one_response_from(&head, &mut stream, &mut buf);
+    stream.write_all(req.as_bytes()).unwrap();
+    let head = read_headers_raw(&mut stream, &mut buf);
+    assert!(head.to_ascii_lowercase().contains("connection: close"),
+            "rotation cap must close the connection: {head}");
+    let _ = read_one_response_from(&head, &mut stream, &mut buf);
+    let mut probe = [0u8; 8];
+    assert_eq!(stream.read(&mut probe).unwrap_or(0), 0,
+               "server must close after the rotation cap");
+
+    // HttpClient rides through rotations transparently.
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for i in 0..7 {
+        let reply = client.request("GET", "/healthz", None).unwrap();
+        assert_eq!(reply.code, 200, "request {i} across rotations");
+    }
+}
+
+#[test]
+fn oversized_requests_rejected_413_431_not_buffered() {
+    let (server, _stack) = start_server(
+        ServiceOptions { workers: 1, ..Default::default() },
+        HttpOptions {
+            max_body_bytes: 512,
+            max_header_bytes: 512,
+            ..Default::default()
+        },
+    );
+    let addr = server.addr().to_string();
+
+    // An actual body over the cap → 413.
+    let big = "x".repeat(600);
+    let (code, body) =
+        http::http_request(&addr, "POST", "/forecast", Some(&big)).unwrap();
+    assert_eq!(code, 413, "{body}");
+
+    // A hostile declared Content-Length with no body at all: refused
+    // from the headers alone — nothing is read or allocated for it.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream
+        .write_all(b"POST /forecast HTTP/1.1\r\nHost: t\r\n\
+                     Content-Length: 999999999999\r\n\r\n")
+        .unwrap();
+    let mut buf = Vec::new();
+    let (code, _) = read_one_response(&mut stream, &mut buf);
+    assert_eq!(code, 413);
+
+    // Oversized header section → 431.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let junk = "j".repeat(2000);
+    stream
+        .write_all(
+            format!("GET /healthz HTTP/1.1\r\nHost: t\r\nX-Junk: {junk}\r\n\
+                     \r\n")
+                .as_bytes())
+        .unwrap();
+    let mut buf = Vec::new();
+    let (code, _) = read_one_response(&mut stream, &mut buf);
+    assert_eq!(code, 431);
+
+    // Unparseable Content-Length → 400, not a hang.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream
+        .write_all(b"POST /forecast HTTP/1.1\r\nHost: t\r\n\
+                     Content-Length: nope\r\n\r\n")
+        .unwrap();
+    let mut buf = Vec::new();
+    let (code, _) = read_one_response(&mut stream, &mut buf);
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn sharded_stack_routes_by_hash_and_aggregates_stats() {
+    let sharded = ShardedStack::new();
+    for label in ["alpha", "beta"] {
+        let mut stack = ServingStack::new();
+        stack
+            .start_pool_native(FREQ, fresh_state(), ServiceOptions {
+                workers: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        sharded.add_shard(label, stack).unwrap();
+    }
+    let sharded = Arc::new(sharded);
+    let server =
+        HttpServer::start_sharded(Arc::clone(&sharded), "127.0.0.1:0")
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    // /healthz reports the ring.
+    let (code, body) =
+        http::http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).unwrap();
+    let shards: Vec<String> = doc.get("shards").unwrap().as_arr().unwrap()
+        .iter().map(|j| j.as_str().unwrap().to_string()).collect();
+    assert_eq!(shards, vec!["alpha", "beta"]);
+
+    // Route 40 distinct series ids; the router must agree with its own
+    // published placement, and placement must be stable across calls.
+    const N: usize = 40;
+    let ids: Vec<String> = (0..N).map(|i| format!("series-{i}")).collect();
+    let mut expect_alpha = 0u64;
+    let mut expect_beta = 0u64;
+    for id in &ids {
+        let shard = sharded.shard_for(id).unwrap();
+        assert_eq!(shard, sharded.shard_for(id).unwrap(),
+                   "placement must be deterministic");
+        match shard.as_str() {
+            "alpha" => expect_alpha += 1,
+            "beta" => expect_beta += 1,
+            other => panic!("unknown shard {other}"),
+        }
+    }
+    assert!(expect_alpha > 0 && expect_beta > 0,
+            "40 keys all landed on one shard — ring is degenerate \
+             (alpha={expect_alpha}, beta={expect_beta})");
+
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for id in &ids {
+        let reply = client
+            .request("POST", "/forecast", Some(&forecast_body(id)))
+            .unwrap();
+        assert_eq!(reply.code, 200, "{}", reply.body);
+    }
+
+    // Aggregate == exact sum of per-shard stats, and the per-shard split
+    // matches the hash placement computed above.
+    let agg = sharded.stats(FREQ).unwrap();
+    assert_eq!(agg.requests, N as u64);
+    let per_shard = sharded.shard_stats();
+    let alpha = per_shard["alpha"][&FREQ].requests;
+    let beta = per_shard["beta"][&FREQ].requests;
+    assert_eq!(alpha + beta, agg.requests,
+               "aggregate must equal the sum of shard stats");
+    assert_eq!(alpha, expect_alpha);
+    assert_eq!(beta, expect_beta);
+    assert_eq!(agg.workers, 2, "worker counts sum across shards");
+
+    // /stats exposes the same aggregation over the wire.
+    let reply = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(reply.code, 200);
+    let doc = Json::parse(&reply.body).unwrap();
+    assert_eq!(doc.get(FREQ.name()).unwrap().get("requests").unwrap()
+                   .as_usize().unwrap(), N);
+    assert_eq!(doc.get("shards").unwrap().get("alpha").unwrap()
+                   .get(FREQ.name()).unwrap().get("requests").unwrap()
+                   .as_usize().unwrap() as u64,
+               expect_alpha);
+
+    // Drain protocol: removing a shard stops routing to it; traffic
+    // keeps flowing to the survivor and the drained shard's accepted
+    // work was already answered (we hold no pending requests here, so
+    // dropping the Arc shuts it down cleanly).
+    let drained = sharded.remove_shard("alpha").unwrap();
+    drop(drained);
+    assert_eq!(sharded.shard_labels(), vec!["beta"]);
+    for id in ids.iter().take(10) {
+        assert_eq!(sharded.shard_for(id).unwrap(), "beta");
+        let reply = client
+            .request("POST", "/forecast", Some(&forecast_body(id)))
+            .unwrap();
+        assert_eq!(reply.code, 200,
+                   "traffic must keep flowing after a shard drain: {}",
+                   reply.body);
+    }
+    // The last shard is protected.
+    assert!(sharded.remove_shard("beta").is_err());
+}
+
+// ---------------------------------------------------------------------
+// Raw-socket response helpers (Content-Length framed, like the server).
+// ---------------------------------------------------------------------
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read exactly the raw header section (through `\r\n\r\n`) into a
+/// string, leaving any surplus (body bytes) in `buf`.
+fn read_headers_raw(stream: &mut TcpStream, buf: &mut Vec<u8>) -> String {
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subsequence(buf, b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut tmp).expect("read");
+        assert!(n > 0, "EOF before response headers completed");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8(buf[..header_end].to_vec()).unwrap();
+    buf.drain(..header_end + 4);
+    head
+}
+
+/// Finish reading one response whose headers are already in `head`;
+/// returns (status, body).
+fn read_one_response_from(head: &str, stream: &mut TcpStream,
+                          buf: &mut Vec<u8>) -> (u16, String) {
+    let code: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let content_length: usize = head
+        .lines()
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse().ok())
+        .expect("Content-Length");
+    let mut tmp = [0u8; 4096];
+    while buf.len() < content_length {
+        let n = stream.read(&mut tmp).expect("read");
+        assert!(n > 0, "EOF mid-body");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body = String::from_utf8(buf[..content_length].to_vec()).unwrap();
+    buf.drain(..content_length);
+    (code, body)
+}
+
+/// Read one full Content-Length-framed response; surplus (the next
+/// pipelined response) stays in `buf`.
+fn read_one_response(stream: &mut TcpStream, buf: &mut Vec<u8>)
+                     -> (u16, String) {
+    let head = read_headers_raw(stream, buf);
+    read_one_response_from(&head, stream, buf)
+}

@@ -116,6 +116,7 @@ fn hot_swap_under_load_keeps_every_response_coherent() {
             workers: 3,
             batch_window: Duration::from_millis(1),
             max_batch: 8,
+            ..Default::default()
         })
         .unwrap();
     assert_eq!(stack.generation(FREQ).unwrap(), 1);

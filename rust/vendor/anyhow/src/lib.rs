@@ -3,32 +3,67 @@
 //! The build environment has no network access, so instead of the real
 //! `anyhow` crate this path dependency provides the subset of its API the
 //! `fast-esrnn` codebase uses: a string-backed [`Error`] with a context
-//! chain, the [`Result`] alias, the [`anyhow!`]/[`bail!`] macros and the
-//! [`Context`] extension trait. Swapping back to the real crate is a
-//! one-line change in the root `Cargo.toml`; no call site would change.
+//! chain and a typed root-cause payload ([`Error::new`] /
+//! [`Error::downcast_ref`], used by the serving layer to recognize
+//! `QueueFull` rejections), the [`Result`] alias, the
+//! [`anyhow!`]/[`bail!`] macros and the [`Context`] extension trait.
+//! Swapping back to the real crate is a one-line change in the root
+//! `Cargo.toml`; no call site would change.
 
+use std::any::Any;
 use std::fmt;
 
-/// A string-backed error with a chain of context frames.
+/// A string-backed error with a chain of context frames and an optional
+/// typed root-cause payload.
 ///
 /// `chain[0]` is the outermost (most recently attached) context; the last
 /// entry is the root cause. `Display` shows the outermost frame, `{:#}`
 /// (alternate) shows the whole chain joined by `": "` — mirroring the real
-/// crate's formatting contract.
+/// crate's formatting contract. Errors built from a concrete
+/// `std::error::Error` (via [`Error::new`] or `?` conversion) retain the
+/// original value, recoverable through [`Error::downcast_ref`] no matter
+/// how many context frames were stacked on top — same contract as the
+/// real crate.
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a displayable message (root cause).
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Self { chain: vec![message.to_string()] }
+        Self { chain: vec![message.to_string()], payload: None }
     }
 
-    /// Attach an outer context frame.
+    /// Build an error from a concrete error value, keeping the value as a
+    /// typed payload so callers can [`downcast_ref`](Self::downcast_ref)
+    /// it back out (the serving layer maps `QueueFull` to HTTP 429 this
+    /// way).
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Self {
+            chain: vec![error.to_string()],
+            payload: Some(Box::new(error)),
+        }
+    }
+
+    /// Attach an outer context frame (the payload is preserved).
     pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// The typed root cause, if this error was built from a concrete
+    /// error value of type `E`.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
+    }
+
+    /// Whether the root cause is a value of type `E`.
+    pub fn is<E: 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// The context chain, outermost first.
@@ -70,7 +105,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Self {
-        Error::msg(e)
+        Error::new(e)
     }
 }
 
@@ -112,7 +147,7 @@ mod private {
         E: std::error::Error + Send + Sync + 'static,
     {
         fn into_error(self) -> crate::Error {
-            crate::Error::msg(self)
+            crate::Error::new(self)
         }
     }
 }
@@ -190,5 +225,38 @@ mod tests {
         let r: Result<()> = Err(anyhow!("inner"));
         let e = r.context("outer").unwrap_err();
         assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Marker(u32);
+
+    impl fmt::Display for Marker {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "marker {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Marker {}
+
+    #[test]
+    fn downcast_recovers_typed_root_cause() {
+        let e = Error::new(Marker(7));
+        assert!(e.is::<Marker>());
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(!e.is::<std::io::Error>());
+        // A plain message error has no payload.
+        assert!(!anyhow!("plain").is::<Marker>());
+    }
+
+    #[test]
+    fn payload_survives_context_and_question_mark() {
+        fn inner() -> Result<()> {
+            let r: std::result::Result<(), Marker> = Err(Marker(9));
+            r?; // `?` converts via From, keeping the payload
+            Ok(())
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: marker 9");
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(9)));
     }
 }

@@ -2,9 +2,9 @@
 # CI perf gate: run the quick benches, record the speedup trajectories,
 # and fail on regression.
 #
-#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json]
+#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json]
 #
-# Two gates, both measured as same-machine ratios (stable across runner
+# Three gates, all measured as same-machine ratios (stable across runner
 # hardware generations in a way absolute numbers are not):
 #
 # * BENCH_3 — `micro_hotpath` (and `table5_speedup`) in quick mode:
@@ -14,17 +14,27 @@
 # * BENCH_4 — `serving_throughput`: requests/sec of the N-worker forecast
 #   pool over the single-worker service; fails when the pool speedup
 #   drops more than 10% below benches/bench4_baseline.json.
+# * BENCH_5 — `http_throughput`: keep-alive vs connection-per-request
+#   req/s on the HTTP front-end, and sharded-vs-single-stack p95; fails
+#   when the keep-alive speedup drops more than 10% below
+#   benches/bench5_baseline.json or sharding blows up tail latency.
+#
+# Every cargo invocation is --locked: the committed Cargo.lock is the
+# only dependency resolution CI may use.
 set -euo pipefail
 
 out="${1:-BENCH_3.json}"
 out4="${2:-BENCH_4.json}"
+out5="${3:-BENCH_5.json}"
 baseline="benches/bench3_baseline.json"
 baseline4="benches/bench4_baseline.json"
+baseline5="benches/bench5_baseline.json"
 
 export FAST_ESRNN_QUICK=1
-FAST_ESRNN_BENCH_JSON="$out" cargo bench --bench micro_hotpath
-cargo bench --bench table5_speedup
-FAST_ESRNN_BENCH_JSON="$out4" cargo bench --bench serving_throughput
+FAST_ESRNN_BENCH_JSON="$out" cargo bench --locked --bench micro_hotpath
+cargo bench --locked --bench table5_speedup
+FAST_ESRNN_BENCH_JSON="$out4" cargo bench --locked --bench serving_throughput
+FAST_ESRNN_BENCH_JSON="$out5" cargo bench --locked --bench http_throughput
 
 python3 - "$out" "$baseline" <<'EOF'
 import json, sys
@@ -83,4 +93,45 @@ if got < floor:
     print(f"FAIL: worker pool regressed: {got:.2f}x < {floor:.2f}x")
     sys.exit(1)
 print("serving gate OK")
+EOF
+
+python3 - "$out5" "$baseline5" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+wire, fc = result["wire"], result["forecast"]
+got = wire["keepalive_speedup"]
+want = baseline["min_keepalive_speedup"]
+floor = want * 0.9
+print(f"HTTP keep-alive speedup (wire, GET /healthz): {got:.2f}x "
+      f"({wire['per_conn_rps']:.0f} -> {wire['keepalive_rps']:.0f} req/s); "
+      f"baseline {want:.2f}x, gate floor {floor:.2f}x")
+print(f"  forecast endpoint: {fc['keepalive_speedup']:.2f}x "
+      f"({fc['per_conn_rps']:.0f} -> {fc['keepalive_rps']:.0f} req/s, "
+      f"informational)")
+single, sharded = result["single"], result["sharded"]
+ratio = result["sharded_p95_ratio"]
+max_ratio = baseline.get("max_sharded_p95_ratio", 0.0)
+print(f"  sharding: single 1x{int(single['workers'])} "
+      f"{single['rps']:.0f} req/s p95 {single['p95_ms']:.2f} ms vs "
+      f"sharded {int(sharded['shards'])}x1 {sharded['rps']:.0f} req/s "
+      f"p95 {sharded['p95_ms']:.2f} ms (ratio {ratio:.2f}, "
+      f"cap {max_ratio:.2f})")
+failed = False
+if got < floor:
+    print(f"FAIL: keep-alive throughput regressed: {got:.2f}x < "
+          f"{floor:.2f}x connection-per-request")
+    failed = True
+if max_ratio > 0 and ratio > max_ratio:
+    print(f"FAIL: sharded p95 is {ratio:.2f}x the single-stack p95 "
+          f"(cap {max_ratio:.2f}x) — shard routing is hurting tail latency")
+    failed = True
+if failed:
+    sys.exit(1)
+print("http gate OK")
 EOF

@@ -18,7 +18,7 @@ fi
 target="$1"
 filter="$2"
 
-if ! out=$(cargo test -q --test "$target" "$filter" 2>&1); then
+if ! out=$(cargo test -q --locked --test "$target" "$filter" 2>&1); then
   echo "$out"
   exit 1
 fi
