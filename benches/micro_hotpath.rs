@@ -6,6 +6,10 @@
 //!   * scalar vs. lane-vectorized train step, per Table-1 frequency —
 //!     the PR-3 SIMD speedup trajectory; emitted as BENCH_3.json when
 //!     `FAST_ESRNN_BENCH_JSON=<path>` is set
+//!   * persistent-pool vs. spawn-per-call train step (PR-6), with
+//!     steady-state allocations/step and spawns/step measured by the
+//!     counting allocator; emitted as BENCH_6.json when
+//!     `FAST_ESRNN_BENCH6_JSON=<path>` is set
 //!   * batch assembly / store gather / primer / end-to-end train and
 //!     predict on the default backend (skipped in quick mode)
 //!
@@ -13,17 +17,29 @@
 //!   FAST_ESRNN_QUICK=1        — CI mode: fewer steps, smaller batches,
 //!                               kernel comparison only
 //!   FAST_ESRNN_BENCH_JSON=p   — write the kernel-comparison summary to p
+//!   FAST_ESRNN_BENCH6_JSON=p  — write the pool/steady-state summary to p
 //!
 //! Run with: `cargo bench --bench micro_hotpath`
+
+use std::collections::HashMap;
 
 use fast_esrnn::config::{Frequency, TrainConfig};
 use fast_esrnn::coordinator::{Batcher, Trainer};
 use fast_esrnn::data::{generate, GenOptions};
 use fast_esrnn::hw;
 use fast_esrnn::runtime::{default_backend, Backend, ComputeMode,
-                          NativeBackend};
+                          HostTensor, Manifest, NativeBackend};
+use fast_esrnn::util::allocmeter::{self, CountingAlloc};
 use fast_esrnn::util::bench::{bench, fmt_secs, header};
 use fast_esrnn::util::json::Json;
+use fast_esrnn::util::prop::gen_positive_series_dual;
+use fast_esrnn::util::rng::Rng;
+
+// Counts every heap allocation in the process so the BENCH_6 section can
+// report allocations/step on the steady-state hot path. Pass-through to
+// the system allocator otherwise (one relaxed atomic add per alloc).
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 /// Largest manifest batch size ≤ both `cap` and the series count.
 fn pick_batch(n_series: usize, cap: usize) -> usize {
@@ -32,6 +48,57 @@ fn pick_batch(n_series: usize, cap: usize) -> usize {
         b *= 2;
     }
     b
+}
+
+/// Synthetic batch + initial state for direct `train_step_inplace`
+/// benchmarking (the zero-allocation entry point — `Trainer` goes
+/// through `execute_named`, which hands back freshly allocated output
+/// tensors by contract).
+fn steady_scenario(backend: &NativeBackend, freq: &str, b: usize, seed: u64)
+                   -> anyhow::Result<(String, HashMap<String, HostTensor>,
+                                      HashMap<String, HostTensor>)> {
+    let cfg = backend.manifest().config(freq)?.clone();
+    let w = cfg.seasonality + cfg.seasonality2;
+    let mut rng = Rng::new(seed);
+    let mut y = Vec::new();
+    for _ in 0..b {
+        y.extend(gen_positive_series_dual(&mut rng, cfg.length,
+                                          cfg.seasonality,
+                                          cfg.seasonality2));
+    }
+    let mut cat = vec![0.0f32; b * 6];
+    for i in 0..b {
+        cat[i * 6 + i % 6] = 1.0;
+    }
+    let data = HashMap::from([
+        ("data.y".to_string(), HostTensor::new(vec![b, cfg.length], y)?),
+        ("data.cat".to_string(), HostTensor::new(vec![b, 6], cat)?),
+        ("data.mask".to_string(),
+         HostTensor::new(vec![b], vec![1.0; b])?),
+        ("lr".to_string(), HostTensor::scalar(1e-3)),
+    ]);
+
+    let rnn = backend.execute_init(freq, seed)?;
+    let mut state: HashMap<String, HostTensor> =
+        rnn.into_iter().map(|(n, t)| (format!("params.{n}"), t)).collect();
+    state.insert("params.series.alpha_logit".into(),
+                 HostTensor::new(vec![b], vec![-0.5; b])?);
+    state.insert("params.series.gamma_logit".into(),
+                 HostTensor::new(vec![b], vec![-1.0; b])?);
+    if cfg.seasonality2 > 0 {
+        state.insert("params.series.gamma2_logit".into(),
+                     HostTensor::new(vec![b], vec![-1.0; b])?);
+    }
+    state.insert("params.series.log_s_init".into(),
+                 HostTensor::new(vec![b, w], vec![0.0; b * w])?);
+    let keys: Vec<String> = state.keys().cloned().collect();
+    for k in &keys {
+        let z = HostTensor::zeros(state[k].shape.clone());
+        state.insert(k.replace("params.", "opt.m."), z.clone());
+        state.insert(k.replace("params.", "opt.v."), z);
+    }
+    state.insert("opt.step".into(), HostTensor::scalar(0.0));
+    Ok((Manifest::program_name(freq, b, "train_step"), data, state))
 }
 
 /// Median seconds per train step for one backend mode.
@@ -118,6 +185,95 @@ fn main() -> anyhow::Result<()> {
             ("frequencies", Json::obj(freq_objs)),
             ("max_speedup", Json::num(best)),
             ("max_speedup_freq", Json::str(best_freq)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+
+    // ---- persistent pool vs spawn-per-call steady state (PR 6) ----
+    // Clamp so the comparison exercises the pool even on 1-core runners
+    // without oversubscribing wide ones: b=16 is only 2 lane groups.
+    let pool_threads = threads.clamp(2, 8);
+    let (p_warm, p_iters) = if quick { (3, 8) } else { (3, 30) };
+    println!("\n== persistent pool vs spawn-per-call train step ==");
+    println!("{pool_threads} pool threads | batch 16 | {p_iters} timed \
+              steps (train_step_inplace)\n");
+    println!("{:<10} {:>14} {:>14} {:>9} {:>12} {:>12}",
+             "freq", "spawn/step", "pooled/step", "speedup",
+             "allocs/step", "spawns/step");
+    let pooled_backend =
+        NativeBackend::with_threads_mode(pool_threads, ComputeMode::Lanes);
+    let spawn_backend =
+        NativeBackend::with_threads_mode_spawn(pool_threads,
+                                               ComputeMode::Lanes);
+    let mut pool_rows: Vec<(&'static str, f64, f64, f64, f64, f64)> =
+        Vec::new();
+    for freq in freqs {
+        let name = freq.name();
+        let (prog, data, mut st_pool) =
+            steady_scenario(&pooled_backend, name, 16, 11)?;
+        let mut st_spawn = st_pool.clone();
+        for _ in 0..p_warm {
+            pooled_backend.train_step_inplace(&prog, &data, &mut st_pool)?;
+            spawn_backend.train_step_inplace(&prog, &data, &mut st_spawn)?;
+        }
+        let t = bench("pooled", 0, p_iters, || {
+            pooled_backend
+                .train_step_inplace(&prog, &data, &mut st_pool)
+                .unwrap();
+        });
+        let pooled_s = t.median;
+        let t = bench("spawn", 0, p_iters, || {
+            spawn_backend
+                .train_step_inplace(&prog, &data, &mut st_spawn)
+                .unwrap();
+        });
+        let spawn_s = t.median;
+        // Allocation/spawn counting in a bare loop: `bench` keeps its own
+        // sample vector, which would otherwise be charged to the step.
+        let a0 = allocmeter::allocations();
+        let s0 = pooled_backend.stats().spawns;
+        for _ in 0..p_iters {
+            pooled_backend.train_step_inplace(&prog, &data, &mut st_pool)?;
+        }
+        let allocs_per_step =
+            (allocmeter::allocations() - a0) as f64 / p_iters as f64;
+        let spawns_per_step = (pooled_backend.stats().spawns - s0) as f64
+            / p_iters as f64;
+        let speedup = spawn_s / pooled_s;
+        println!("{:<10} {:>14} {:>14} {:>8.2}x {:>12.1} {:>12.1}",
+                 name, fmt_secs(spawn_s), fmt_secs(pooled_s), speedup,
+                 allocs_per_step, spawns_per_step);
+        pool_rows.push((name, spawn_s, pooled_s, speedup, allocs_per_step,
+                        spawns_per_step));
+    }
+    let max_pooled = pool_rows
+        .iter()
+        .map(|r| r.3)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!("\nmax pooled speedup: {max_pooled:.2}x");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH6_JSON") {
+        let freq_objs: Vec<(&str, Json)> = pool_rows
+            .iter()
+            .map(|(name, sp, po, su, al, th)| {
+                (*name,
+                 Json::obj(vec![
+                     ("batch", Json::num(16.0)),
+                     ("spawn_ns_per_step", Json::num(sp * 1e9)),
+                     ("pooled_ns_per_step", Json::num(po * 1e9)),
+                     ("pooled_speedup", Json::num(*su)),
+                     ("allocs_per_step", Json::num(*al)),
+                     ("spawns_per_step", Json::num(*th)),
+                 ]))
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::str("micro_hotpath/steady_state")),
+            ("quick", Json::Bool(quick)),
+            ("pool_threads", Json::num(pool_threads as f64)),
+            ("frequencies", Json::obj(freq_objs)),
+            ("max_pooled_speedup", Json::num(max_pooled)),
         ]);
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("wrote {path}");

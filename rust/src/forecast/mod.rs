@@ -136,6 +136,14 @@ pub struct ServiceStats {
     pub execute: LatencySummary,
     /// Enqueue → response sent.
     pub total: LatencySummary,
+    /// OS threads the backend spawned (a persistent compute pool
+    /// plateaus at its worker count).
+    pub backend_spawns: u64,
+    /// Post-warmup steady-state heap allocations charged by the backend
+    /// (nonzero only under the counting allocator).
+    pub backend_steady_allocs: u64,
+    /// Bytes pinned by the backend's reusable compute arenas.
+    pub backend_scratch_bytes: u64,
 }
 
 impl ServiceStats {
@@ -163,6 +171,13 @@ impl ServiceStats {
             ("queue_wait", lat(&self.queue_wait)),
             ("execute", lat(&self.execute)),
             ("total", lat(&self.total)),
+            ("backend", Json::obj(vec![
+                ("spawns", Json::num(self.backend_spawns as f64)),
+                ("steady_allocs",
+                 Json::num(self.backend_steady_allocs as f64)),
+                ("scratch_bytes",
+                 Json::num(self.backend_scratch_bytes as f64)),
+            ])),
         ])
     }
 
@@ -201,6 +216,9 @@ impl ServiceStats {
         self.queue_wait.absorb_worst(&other.queue_wait);
         self.execute.absorb_worst(&other.execute);
         self.total.absorb_worst(&other.total);
+        self.backend_spawns += other.backend_spawns;
+        self.backend_steady_allocs += other.backend_steady_allocs;
+        self.backend_scratch_bytes += other.backend_scratch_bytes;
     }
 }
 

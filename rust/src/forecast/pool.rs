@@ -99,6 +99,13 @@ struct StatsInner {
     queue_wait: Quantiles,
     execute: Quantiles,
     total: Quantiles,
+    // Backend-global cumulative gauges (spawns / steady allocs /
+    // scratch bytes). Workers overwrite these with the backend's latest
+    // snapshot after each round — the backend is shared, so summing
+    // per-worker deltas would double count.
+    backend_spawns: u64,
+    backend_steady_allocs: u64,
+    backend_scratch_bytes: u64,
 }
 
 /// State shared between the pool handle(s) and the worker threads.
@@ -230,6 +237,9 @@ impl PoolShared {
             queue_wait: s.queue_wait.summary(),
             execute: s.execute.summary(),
             total: s.total.summary(),
+            backend_spawns: s.backend_spawns,
+            backend_steady_allocs: s.backend_steady_allocs,
+            backend_scratch_bytes: s.backend_scratch_bytes,
         }
     }
 }
@@ -431,7 +441,13 @@ fn worker_loop(shared: &PoolShared, backend: &dyn Backend) {
             chunks.push((real, t0.elapsed().as_secs_f64(), Instant::now()));
             start += real;
         }
+        // Snapshot the backend's steady-state gauges before taking the
+        // pool stats lock (the snapshot touches the backend's own locks).
+        let bstats = backend.stats();
         let mut s = shared.stats.lock().unwrap();
+        s.backend_spawns = bstats.spawns;
+        s.backend_steady_allocs = bstats.steady_allocs;
+        s.backend_scratch_bytes = bstats.scratch_bytes;
         s.batches += round_batches;
         s.padded_slots += round_padded;
         let mut job_i = 0usize;

@@ -150,13 +150,29 @@ pub fn primer_jittered(y: &[f32], s1: usize, s2: usize, rng: &mut Rng)
 pub fn es_dual_filter(y: &[f32], alpha: f32, gamma1: f32, gamma2: f32,
                       s1_init: &[f32], s2_init: &[f32])
                       -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mut levels, mut seas1, mut seas2) = (Vec::new(), Vec::new(), Vec::new());
+    es_dual_filter_into(y, alpha, gamma1, gamma2, s1_init, s2_init,
+                        &mut levels, &mut seas1, &mut seas2);
+    (levels, seas1, seas2)
+}
+
+/// [`es_dual_filter`] writing into caller-owned buffers (cleared and
+/// refilled) so a steady-state hot path can reuse its arenas.
+#[allow(clippy::too_many_arguments)]
+pub fn es_dual_filter_into(y: &[f32], alpha: f32, gamma1: f32, gamma2: f32,
+                           s1_init: &[f32], s2_init: &[f32],
+                           levels: &mut Vec<f32>, seas1: &mut Vec<f32>,
+                           seas2: &mut Vec<f32>) {
     let c = y.len();
     let (s1, s2) = (s1_init.len(), s2_init.len());
-    let mut seas1 = Vec::with_capacity(c + s1);
-    let mut seas2 = Vec::with_capacity(c + s2);
+    seas1.clear();
+    seas1.reserve(c + s1);
     seas1.extend_from_slice(s1_init);
+    seas2.clear();
+    seas2.reserve(c + s2);
     seas2.extend_from_slice(s2_init);
-    let mut levels = Vec::with_capacity(c);
+    levels.clear();
+    levels.reserve(c);
     let mut l_prev = 0.0f32;
     for t in 0..c {
         let s1_t = seas1[t];
@@ -172,7 +188,6 @@ pub fn es_dual_filter(y: &[f32], alpha: f32, gamma1: f32, gamma2: f32,
         levels.push(l_t);
         l_prev = l_t;
     }
-    (levels, seas1, seas2)
 }
 
 /// Lane-vectorized mirror of [`es_filter`]: one recurrence step updates
@@ -186,12 +201,26 @@ pub fn es_dual_filter(y: &[f32], alpha: f32, gamma1: f32, gamma2: f32,
 /// on that series to f32 rounding.
 pub fn es_filter_lanes(y: &[f32], c: usize, alpha: Lanes, gamma: Lanes,
                        s_init: &[f32], s: usize) -> (Vec<f32>, Vec<f32>) {
+    let (mut levels, mut seas) = (Vec::new(), Vec::new());
+    es_filter_lanes_into(y, c, alpha, gamma, s_init, s, &mut levels,
+                         &mut seas);
+    (levels, seas)
+}
+
+/// [`es_filter_lanes`] writing into caller-owned buffers (resized and
+/// fully overwritten) for the steady-state arena path.
+#[allow(clippy::too_many_arguments)]
+pub fn es_filter_lanes_into(y: &[f32], c: usize, alpha: Lanes, gamma: Lanes,
+                            s_init: &[f32], s: usize, levels: &mut Vec<f32>,
+                            seas: &mut Vec<f32>) {
     debug_assert_eq!(y.len(), c * LANES);
     debug_assert_eq!(s_init.len(), s * LANES);
     let one = Lanes::ONE;
-    let mut seas = vec![0.0f32; (c + s) * LANES];
+    // Every element is stored by the recurrence below, so a plain resize
+    // (no re-zeroing) is safe on reuse.
+    seas.resize((c + s) * LANES, 0.0);
     seas[..s * LANES].copy_from_slice(s_init);
-    let mut levels = vec![0.0f32; c * LANES];
+    levels.resize(c * LANES, 0.0);
     let mut l_prev = Lanes::ZERO;
     for t in 0..c {
         let y_t = Lanes::load(&y[t * LANES..]);
@@ -206,7 +235,6 @@ pub fn es_filter_lanes(y: &[f32], c: usize, alpha: Lanes, gamma: Lanes,
         l_t.store(&mut levels[t * LANES..]);
         l_prev = l_t;
     }
-    (levels, seas)
 }
 
 /// Lane-vectorized mirror of [`es_dual_filter`] (§8.2 coupled 24h×168h
@@ -216,15 +244,30 @@ pub fn es_dual_filter_lanes(y: &[f32], c: usize, alpha: Lanes, gamma1: Lanes,
                             gamma2: Lanes, s1_init: &[f32], s1: usize,
                             s2_init: &[f32], s2: usize)
                             -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mut levels, mut seas1, mut seas2) = (Vec::new(), Vec::new(), Vec::new());
+    es_dual_filter_lanes_into(y, c, alpha, gamma1, gamma2, s1_init, s1,
+                              s2_init, s2, &mut levels, &mut seas1,
+                              &mut seas2);
+    (levels, seas1, seas2)
+}
+
+/// [`es_dual_filter_lanes`] writing into caller-owned buffers (resized
+/// and fully overwritten) for the steady-state arena path.
+#[allow(clippy::too_many_arguments)]
+pub fn es_dual_filter_lanes_into(y: &[f32], c: usize, alpha: Lanes,
+                                 gamma1: Lanes, gamma2: Lanes,
+                                 s1_init: &[f32], s1: usize, s2_init: &[f32],
+                                 s2: usize, levels: &mut Vec<f32>,
+                                 seas1: &mut Vec<f32>, seas2: &mut Vec<f32>) {
     debug_assert_eq!(y.len(), c * LANES);
     debug_assert_eq!(s1_init.len(), s1 * LANES);
     debug_assert_eq!(s2_init.len(), s2 * LANES);
     let one = Lanes::ONE;
-    let mut seas1 = vec![0.0f32; (c + s1) * LANES];
+    seas1.resize((c + s1) * LANES, 0.0);
     seas1[..s1 * LANES].copy_from_slice(s1_init);
-    let mut seas2 = vec![0.0f32; (c + s2) * LANES];
+    seas2.resize((c + s2) * LANES, 0.0);
     seas2[..s2 * LANES].copy_from_slice(s2_init);
-    let mut levels = vec![0.0f32; c * LANES];
+    levels.resize(c * LANES, 0.0);
     let mut l_prev = Lanes::ZERO;
     for t in 0..c {
         let y_t = Lanes::load(&y[t * LANES..]);
@@ -243,7 +286,6 @@ pub fn es_dual_filter_lanes(y: &[f32], c: usize, alpha: Lanes, gamma1: Lanes,
         l_t.store(&mut levels[t * LANES..]);
         l_prev = l_t;
     }
-    (levels, seas1, seas2)
 }
 
 /// Output of the ES filter (mirror of the Pallas kernel contract).
@@ -260,11 +302,22 @@ pub struct EsOutput {
 /// `python/compile/kernels/ref.py::es_smoothing_ref` — the integration
 /// tests compare artifact output against this.
 pub fn es_filter(y: &[f32], alpha: f32, gamma: f32, s_init: &[f32]) -> EsOutput {
+    let (mut levels, mut seas) = (Vec::new(), Vec::new());
+    es_filter_into(y, alpha, gamma, s_init, &mut levels, &mut seas);
+    EsOutput { levels, seas }
+}
+
+/// [`es_filter`] writing into caller-owned buffers (cleared and refilled)
+/// for the steady-state arena path.
+pub fn es_filter_into(y: &[f32], alpha: f32, gamma: f32, s_init: &[f32],
+                      levels: &mut Vec<f32>, seas: &mut Vec<f32>) {
     let c = y.len();
     let s_len = s_init.len().max(1);
-    let mut seas = Vec::with_capacity(c + s_len);
+    seas.clear();
+    seas.reserve(c + s_len);
     seas.extend_from_slice(s_init);
-    let mut levels = Vec::with_capacity(c);
+    levels.clear();
+    levels.reserve(c);
     let mut l_prev = 0.0f32;
     for t in 0..c {
         let s_t = seas[t];
@@ -278,7 +331,6 @@ pub fn es_filter(y: &[f32], alpha: f32, gamma: f32, s_init: &[f32]) -> EsOutput 
         levels.push(l_t);
         l_prev = l_t;
     }
-    EsOutput { levels, seas }
 }
 
 /// Holt-Winters point forecast from filter state (Eq. 4 with b ≡ 1, i.e.

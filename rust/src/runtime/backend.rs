@@ -52,7 +52,10 @@ impl HostTensor {
 }
 
 /// Timing/counter totals the telemetry layer scrapes. `compiles` /
-/// `compile_secs` stay zero for backends with no compilation step.
+/// `compile_secs` stay zero for backends with no compilation step;
+/// the steady-state counters (`spawns`, `steady_allocs`,
+/// `scratch_bytes`) stay zero for backends without a persistent
+/// compute pool.
 #[derive(Debug, Default, Clone)]
 pub struct BackendStats {
     pub compiles: u64,
@@ -61,6 +64,17 @@ pub struct BackendStats {
     pub execute_secs: f64,
     pub pack_secs: f64,
     pub unpack_secs: f64,
+    /// OS threads spawned since construction. For a persistent pool this
+    /// plateaus at `threads - 1` no matter how many steps run.
+    pub spawns: u64,
+    /// Heap allocations charged to post-warmup steady-state train steps
+    /// (counted only when the process installs the counting allocator —
+    /// `rust/tests/steady_state.rs` and the BENCH_6 harness; zero
+    /// otherwise).
+    pub steady_allocs: u64,
+    /// Approximate bytes pinned by the backend's reusable arenas
+    /// (worker kernel scratch + step/predict scratch).
+    pub scratch_bytes: u64,
 }
 
 /// A pluggable execution backend.

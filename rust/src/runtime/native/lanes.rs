@@ -56,6 +56,30 @@ pub struct LaneGroup {
     pub mask: Lanes,
 }
 
+impl LaneGroup {
+    /// Placeholder group for pooled marshal buffers;
+    /// [`marshal_groups_into`] refills every field before use.
+    pub fn empty() -> Self {
+        Self {
+            start: 0,
+            fill: 0,
+            y: Vec::new(),
+            cat: Vec::new(),
+            alpha_logit: Lanes::ZERO,
+            gamma_logit: Lanes::ZERO,
+            gamma2_logit: Lanes::ZERO,
+            log_s: Vec::new(),
+            mask: Lanes::ZERO,
+        }
+    }
+
+    /// Retained heap footprint (for `BackendStats::scratch_bytes`).
+    pub fn bytes(&self) -> u64 {
+        (4 * (self.y.capacity() + self.cat.capacity()
+              + self.log_s.capacity())) as u64
+    }
+}
+
 /// Split a batch of `b` AoS series rows into `ceil(b / LANES)` SoA lane
 /// groups. `y` is `[b, C]`, `cat` `[b, 6]`, `log_s` `[b, s_total]`;
 /// `gamma2_logit` may be empty for single-seasonality configs. A slot is
@@ -66,19 +90,37 @@ pub fn marshal_groups(shape: &Shape, b: usize, y: &[f32], cat: &[f32],
                       mask: Option<&[f32]>, alpha_logit: &[f32],
                       gamma_logit: &[f32], gamma2_logit: &[f32],
                       log_s: &[f32]) -> Vec<LaneGroup> {
+    let mut groups = Vec::new();
+    marshal_groups_into(&mut groups, shape, b, y, cat, mask, alpha_logit,
+                        gamma_logit, gamma2_logit, log_s);
+    groups
+}
+
+/// [`marshal_groups`] overwriting pooled group buffers instead of
+/// reallocating: each [`LaneGroup`]'s SoA vectors are refilled in place,
+/// so a steady-state caller with a fixed batch shape performs zero heap
+/// allocations here. Bit-identical fill to [`marshal_groups`].
+#[allow(clippy::too_many_arguments)]
+pub fn marshal_groups_into(groups: &mut Vec<LaneGroup>, shape: &Shape,
+                           b: usize, y: &[f32], cat: &[f32],
+                           mask: Option<&[f32]>, alpha_logit: &[f32],
+                           gamma_logit: &[f32], gamma2_logit: &[f32],
+                           log_s: &[f32]) {
     let c = shape.c;
     let w = shape.s_total();
     let n_groups = b.div_ceil(LANES);
-    let mut groups = Vec::with_capacity(n_groups);
-    for g in 0..n_groups {
+    groups.resize_with(n_groups, LaneGroup::empty);
+    for (g, grp) in groups.iter_mut().enumerate() {
         let start = g * LANES;
         let fill = LANES.min(b - start);
-        let mut gy = vec![1.0f32; c * LANES];
-        let mut gcat = vec![0.0f32; 6 * LANES];
+        // Padding baseline: benign y ≡ 1.0, zeroed logits/log_s/mask —
+        // live lanes overwrite below.
+        model::set_filled(&mut grp.y, c * LANES, 1.0);
+        model::set_zeroed(&mut grp.cat, 6 * LANES);
+        model::set_zeroed(&mut grp.log_s, w * LANES);
         let mut ga = [0.0f32; LANES];
         let mut gg = [0.0f32; LANES];
         let mut gg2 = [0.0f32; LANES];
-        let mut gls = vec![0.0f32; w * LANES];
         let mut gm = [0.0f32; LANES];
         for l in 0..fill {
             let i = start + l;
@@ -91,10 +133,10 @@ pub fn marshal_groups(shape: &Shape, b: usize, y: &[f32], cat: &[f32],
             }
             gm[l] = m;
             for t in 0..c {
-                gy[t * LANES + l] = y[i * c + t];
+                grp.y[t * LANES + l] = y[i * c + t];
             }
             for j in 0..6 {
-                gcat[j * LANES + l] = cat[i * 6 + j];
+                grp.cat[j * LANES + l] = cat[i * 6 + j];
             }
             ga[l] = alpha_logit[i];
             gg[l] = gamma_logit[i];
@@ -102,22 +144,16 @@ pub fn marshal_groups(shape: &Shape, b: usize, y: &[f32], cat: &[f32],
                 gg2[l] = gamma2_logit[i];
             }
             for k in 0..w {
-                gls[k * LANES + l] = log_s[i * w + k];
+                grp.log_s[k * LANES + l] = log_s[i * w + k];
             }
         }
-        groups.push(LaneGroup {
-            start,
-            fill,
-            y: gy,
-            cat: gcat,
-            alpha_logit: Lanes(ga),
-            gamma_logit: Lanes(gg),
-            gamma2_logit: Lanes(gg2),
-            log_s: gls,
-            mask: Lanes(gm),
-        });
+        grp.start = start;
+        grp.fill = fill;
+        grp.alpha_logit = Lanes(ga);
+        grp.gamma_logit = Lanes(gg);
+        grp.gamma2_logit = Lanes(gg2);
+        grp.mask = Lanes(gm);
     }
-    groups
 }
 
 /// `out[j] += Σ_i x[i] · w[(row_offset+i), j]` with `x` SoA `[n_rows][L]`
@@ -228,45 +264,152 @@ pub struct ForwardLanes {
     din_max: usize,
 }
 
+impl ForwardLanes {
+    /// Empty record for pooled scratch; [`LaneScratch::forward`] sizes
+    /// and fills every buffer before any read.
+    pub fn empty() -> Self {
+        Self {
+            levels: Vec::new(),
+            seas: Vec::new(),
+            seas2: Vec::new(),
+            seas_ext: Vec::new(),
+            alpha: Lanes::ZERO,
+            gamma: Lanes::ZERO,
+            gamma2: Lanes::ZERO,
+            s_init: Vec::new(),
+            s2_init: Vec::new(),
+            x: Vec::new(),
+            z: Vec::new(),
+            x_ok: Vec::new(),
+            z_ok: Vec::new(),
+            out: Vec::new(),
+            x_in: Vec::new(),
+            h_prev: Vec::new(),
+            c_prev: Vec::new(),
+            si: Vec::new(),
+            sf: Vec::new(),
+            tg: Vec::new(),
+            so: Vec::new(),
+            tanh_c: Vec::new(),
+            h_seq: Vec::new(),
+            act: Vec::new(),
+            din_max: 0,
+        }
+    }
+
+    /// Approximate bytes pinned by this record's buffers.
+    fn bytes(&self) -> u64 {
+        let caps = self.levels.capacity() + self.seas.capacity()
+            + self.seas2.capacity() + self.seas_ext.capacity()
+            + self.s_init.capacity() + self.s2_init.capacity()
+            + self.x.capacity() + self.z.capacity() + self.x_ok.capacity()
+            + self.z_ok.capacity() + self.out.capacity()
+            + self.x_in.capacity() + self.h_prev.capacity()
+            + self.c_prev.capacity() + self.si.capacity()
+            + self.sf.capacity() + self.tg.capacity() + self.so.capacity()
+            + self.tanh_c.capacity() + self.h_seq.capacity()
+            + self.act.capacity();
+        (caps * 4) as u64
+    }
+}
+
+impl Default for ForwardLanes {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+/// Reusable temporaries of the lane forward pass.
+#[derive(Default)]
+struct ForwardTmp {
+    h_ring: Vec<Vec<f32>>,
+    c_ring: Vec<Vec<f32>>,
+    zbuf: Vec<f32>,
+    h_in: Vec<f32>,
+    block_in: Vec<f32>,
+    pre: Vec<f32>,
+    head: Vec<f32>,
+}
+
+impl ForwardTmp {
+    fn bytes(&self) -> u64 {
+        let rings: usize = self.h_ring.iter().chain(&self.c_ring)
+            .map(|r| r.capacity())
+            .sum();
+        ((rings + self.zbuf.capacity() + self.h_in.capacity()
+          + self.block_in.capacity() + self.pre.capacity()
+          + self.head.capacity()) * 4) as u64
+    }
+}
+
 /// Full forward pass for one lane group (mirror of
 /// [`model::forward_series`], all [`LANES`] series advancing together).
+/// Allocating convenience wrapper over [`LaneScratch::forward`].
 pub fn forward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
                      want_targets: bool) -> ForwardLanes {
+    let mut scratch = LaneScratch::new();
+    scratch.forward(shape, grp, rnn, want_targets);
+    scratch.fwd
+}
+
+/// The forward body: identical floating-point schedule to the historical
+/// allocating version, but every buffer comes from `fwd`/`tmp` (resized
+/// in place; grown once per shape, then reused allocation-free).
+///
+/// Reuse-safety: buffers that carry accumulations or sparse writes are
+/// re-zeroed ([`model::set_zeroed`] / [`model::ring_reset`]); buffers
+/// whose every read position is stored first on each call keep stale
+/// contents and are merely resized ([`model::set_len`]) — the per-buffer
+/// classification is in DESIGN.md §Steady-state memory & thread reuse.
+fn forward_lanes_core(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
+                      want_targets: bool, fwd: &mut ForwardLanes,
+                      tmp: &mut ForwardTmp) {
     let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
     let s2 = shape.s2;
     let dual = shape.dual();
     let hid = shape.hidden;
     let n_l = shape.n_layers();
     let din_max = shape.din0.max(hid);
+    fwd.din_max = din_max;
 
-    let alpha = grp.alpha_logit.sigmoid();
-    let (gamma, s_init): (Lanes, Vec<f32>) = if shape.seasonal {
-        let mut si = grp.log_s[..s * LANES].to_vec();
-        exp_slice(&mut si);
-        (grp.gamma_logit.sigmoid(), si)
+    fwd.alpha = grp.alpha_logit.sigmoid();
+    if shape.seasonal {
+        fwd.s_init.clear();
+        fwd.s_init.extend_from_slice(&grp.log_s[..s * LANES]);
+        exp_slice(&mut fwd.s_init);
+        fwd.gamma = grp.gamma_logit.sigmoid();
     } else {
-        (Lanes::ZERO, vec![1.0; s * LANES])
-    };
-    let (gamma2, s2_init): (Lanes, Vec<f32>) = if dual {
-        let mut si = grp.log_s[s * LANES..(s + s2) * LANES].to_vec();
-        exp_slice(&mut si);
-        (grp.gamma2_logit.sigmoid(), si)
+        model::set_filled(&mut fwd.s_init, s * LANES, 1.0);
+        fwd.gamma = Lanes::ZERO;
+    }
+    if dual {
+        fwd.s2_init.clear();
+        fwd.s2_init.extend_from_slice(&grp.log_s[s * LANES..(s + s2) * LANES]);
+        exp_slice(&mut fwd.s2_init);
+        fwd.gamma2 = grp.gamma2_logit.sigmoid();
     } else {
-        (Lanes::ZERO, Vec::new())
-    };
+        fwd.s2_init.clear();
+        fwd.gamma2 = Lanes::ZERO;
+    }
+    let (alpha, gamma, gamma2) = (fwd.alpha, fwd.gamma, fwd.gamma2);
 
     // 1. ES recurrence, one lane per series.
-    let (levels, seas, seas2) = if dual {
-        hw::es_dual_filter_lanes(&grp.y[..c * LANES], c, alpha, gamma,
-                                 gamma2, &s_init, s, &s2_init, s2)
+    if dual {
+        hw::es_dual_filter_lanes_into(
+            &grp.y[..c * LANES], c, alpha, gamma, gamma2, &fwd.s_init, s,
+            &fwd.s2_init, s2, &mut fwd.levels, &mut fwd.seas,
+            &mut fwd.seas2);
     } else {
-        let (levels, seas) = hw::es_filter_lanes(&grp.y[..c * LANES], c,
-                                                 alpha, gamma, &s_init, s);
-        (levels, seas, Vec::new())
-    };
+        hw::es_filter_lanes_into(&grp.y[..c * LANES], c, alpha, gamma,
+                                 &fwd.s_init, s, &mut fwd.levels,
+                                 &mut fwd.seas);
+        fwd.seas2.clear();
+    }
 
     // 2. Seasonality extension past C (per-component tail tiling).
-    let mut seas_ext = vec![0.0f32; (c + h) * LANES];
+    model::set_len(&mut fwd.seas_ext, (c + h) * LANES);
+    let (levels, seas, seas2, seas_ext) =
+        (&fwd.levels, &fwd.seas, &fwd.seas2, &mut fwd.seas_ext);
     if dual {
         for t in 0..c {
             (Lanes::load(&seas[t * LANES..])
@@ -287,74 +430,74 @@ pub fn forward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
     }
 
     // 3. Log-normalized windows and (optionally) targets.
-    let mut x = vec![0.0f32; p_n * in_w * LANES];
-    let mut x_ok = vec![0.0f32; p_n * in_w * LANES];
-    let (mut z, mut z_ok) = if want_targets {
-        (vec![0.0f32; p_n * h * LANES], vec![0.0f32; p_n * h * LANES])
+    model::set_len(&mut fwd.x, p_n * in_w * LANES);
+    model::set_len(&mut fwd.x_ok, p_n * in_w * LANES);
+    if want_targets {
+        model::set_len(&mut fwd.z, p_n * h * LANES);
+        model::set_len(&mut fwd.z_ok, p_n * h * LANES);
     } else {
-        (Vec::new(), Vec::new())
-    };
-    for p in 0..p_n {
-        let lvl = Lanes::load(&levels[(p + in_w - 1) * LANES..]);
-        for j in 0..in_w {
-            let u = Lanes::load(&grp.y[(p + j) * LANES..])
-                / (lvl * Lanes::load(&seas_ext[(p + j) * LANES..]));
-            let (xv, ok) = ln_gate(u);
-            xv.store(&mut x[(p * in_w + j) * LANES..]);
-            ok.store(&mut x_ok[(p * in_w + j) * LANES..]);
-        }
-        if want_targets {
-            for k in 0..h {
-                let ty = (p + in_w + k).min(c - 1);
-                let u = Lanes::load(&grp.y[ty * LANES..])
-                    / (lvl * Lanes::load(&seas_ext[(p + in_w + k) * LANES..]));
-                let (zv, ok) = ln_gate(u);
-                zv.store(&mut z[(p * h + k) * LANES..]);
-                ok.store(&mut z_ok[(p * h + k) * LANES..]);
+        fwd.z.clear();
+        fwd.z_ok.clear();
+    }
+    {
+        let x = &mut fwd.x;
+        let x_ok = &mut fwd.x_ok;
+        let z = &mut fwd.z;
+        let z_ok = &mut fwd.z_ok;
+        let seas_ext = &fwd.seas_ext;
+        for p in 0..p_n {
+            let lvl = Lanes::load(&fwd.levels[(p + in_w - 1) * LANES..]);
+            for j in 0..in_w {
+                let u = Lanes::load(&grp.y[(p + j) * LANES..])
+                    / (lvl * Lanes::load(&seas_ext[(p + j) * LANES..]));
+                let (xv, ok) = ln_gate(u);
+                xv.store(&mut x[(p * in_w + j) * LANES..]);
+                ok.store(&mut x_ok[(p * in_w + j) * LANES..]);
+            }
+            if want_targets {
+                for k in 0..h {
+                    let ty = (p + in_w + k).min(c - 1);
+                    let u = Lanes::load(&grp.y[ty * LANES..])
+                        / (lvl
+                           * Lanes::load(&seas_ext[(p + in_w + k) * LANES..]));
+                    let (zv, ok) = ln_gate(u);
+                    zv.store(&mut z[(p * h + k) * LANES..]);
+                    ok.store(&mut z_ok[(p * h + k) * LANES..]);
+                }
             }
         }
     }
 
-    // 4. Dilated-residual LSTM stack, ring buffers now SoA per slot.
-    let mut h_ring: Vec<Vec<f32>> =
-        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
-    let mut c_ring: Vec<Vec<f32>> =
-        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
+    // 4. Dilated-residual LSTM stack, ring buffers now SoA per slot
+    // (rings carry recurrent state, so they must restart at zero).
+    model::ring_reset(&mut tmp.h_ring, &shape.flat, hid * LANES);
+    model::ring_reset(&mut tmp.c_ring, &shape.flat, hid * LANES);
+    let h_ring = &mut tmp.h_ring;
+    let c_ring = &mut tmp.c_ring;
 
     let tape_len = p_n * n_l * hid * LANES;
-    let mut fwd = ForwardLanes {
-        levels,
-        seas,
-        seas2,
-        seas_ext,
-        alpha,
-        gamma,
-        gamma2,
-        s_init,
-        s2_init,
-        x,
-        z,
-        x_ok,
-        z_ok,
-        out: vec![0.0; p_n * h * LANES],
-        x_in: vec![0.0; p_n * n_l * din_max * LANES],
-        h_prev: vec![0.0; tape_len],
-        c_prev: vec![0.0; tape_len],
-        si: vec![0.0; tape_len],
-        sf: vec![0.0; tape_len],
-        tg: vec![0.0; tape_len],
-        so: vec![0.0; tape_len],
-        tanh_c: vec![0.0; tape_len],
-        h_seq: vec![0.0; p_n * hid * LANES],
-        act: vec![0.0; p_n * hid * LANES],
-        din_max,
-    };
+    model::set_len(&mut fwd.out, p_n * h * LANES);
+    model::set_len(&mut fwd.x_in, p_n * n_l * din_max * LANES);
+    model::set_len(&mut fwd.h_prev, tape_len);
+    model::set_len(&mut fwd.c_prev, tape_len);
+    model::set_len(&mut fwd.si, tape_len);
+    model::set_len(&mut fwd.sf, tape_len);
+    model::set_len(&mut fwd.tg, tape_len);
+    model::set_len(&mut fwd.so, tape_len);
+    model::set_len(&mut fwd.tanh_c, tape_len);
+    model::set_len(&mut fwd.h_seq, p_n * hid * LANES);
+    model::set_len(&mut fwd.act, p_n * hid * LANES);
 
-    let mut zbuf = vec![0.0f32; 4 * hid * LANES];
-    let mut h_in = vec![0.0f32; din_max * LANES];
-    let mut block_in = vec![0.0f32; din_max * LANES];
-    let mut pre = vec![0.0f32; hid * LANES];
-    let mut head = vec![0.0f32; h * LANES];
+    model::set_len(&mut tmp.zbuf, 4 * hid * LANES);
+    model::set_len(&mut tmp.h_in, din_max * LANES);
+    model::set_len(&mut tmp.block_in, din_max * LANES);
+    model::set_len(&mut tmp.pre, hid * LANES);
+    model::set_len(&mut tmp.head, h * LANES);
+    let zbuf = &mut tmp.zbuf;
+    let h_in = &mut tmp.h_in;
+    let block_in = &mut tmp.block_in;
+    let pre = &mut tmp.pre;
+    let head = &mut tmp.head;
     for p in 0..p_n {
         h_in[..in_w * LANES]
             .copy_from_slice(&fwd.x[p * in_w * LANES..(p + 1) * in_w * LANES]);
@@ -432,22 +575,28 @@ pub fn forward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
                           hid, rnn.out_w, 0, h, &mut head);
         fwd.out[p * h * LANES..(p + 1) * h * LANES].copy_from_slice(&head);
     }
-    fwd
 }
 
 /// Point forecasts from a completed lane forward, `[H][LANES]` SoA
 /// (mirror of [`model::forecast_from`]).
 pub fn forecast_from_lanes(shape: &Shape, fwd: &ForwardLanes) -> Vec<f32> {
+    let mut out = vec![0.0f32; shape.h * LANES];
+    forecast_from_lanes_into(shape, fwd, &mut out);
+    out
+}
+
+/// [`forecast_from_lanes`] writing into a caller-owned `[H][LANES]`
+/// slice (every element is stored).
+pub fn forecast_from_lanes_into(shape: &Shape, fwd: &ForwardLanes,
+                                out: &mut [f32]) {
     let (c, h, p_n) = (shape.c, shape.h, shape.p);
     let l_c = Lanes::load(&fwd.levels[(c - 1) * LANES..]);
-    let mut out = vec![0.0f32; h * LANES];
     for k in 0..h {
         (Lanes::load(&fwd.out[((p_n - 1) * h + k) * LANES..]).exp()
          * l_c
          * Lanes::load(&fwd.seas_ext[(c + k) * LANES..]))
             .store(&mut out[k * LANES..]);
     }
-    out
 }
 
 /// Pinball loss numerator plus `dout`/`dz` seeds for one lane group
@@ -456,12 +605,24 @@ pub fn forecast_from_lanes(shape: &Shape, fwd: &ForwardLanes) -> Vec<f32> {
 pub fn pinball_seeds_lanes(shape: &Shape, fwd: &ForwardLanes, tau: f32,
                            smask: Lanes, denom: f32)
                            -> (f64, Vec<f32>, Vec<f32>) {
+    let (mut dout, mut dz) = (Vec::new(), Vec::new());
+    let loss_num = pinball_seeds_lanes_into(shape, fwd, tau, smask, denom,
+                                            &mut dout, &mut dz);
+    (loss_num, dout, dz)
+}
+
+/// [`pinball_seeds_lanes`] writing the seed buffers in place (re-zeroed
+/// each call: positions past `valid_positions` must stay zero).
+pub fn pinball_seeds_lanes_into(shape: &Shape, fwd: &ForwardLanes, tau: f32,
+                                smask: Lanes, denom: f32,
+                                dout: &mut Vec<f32>, dz: &mut Vec<f32>)
+                                -> f64 {
     let (h, p_n) = (shape.h, shape.p);
     let mut loss_num = 0.0f64;
-    let mut dout = vec![0.0f32; p_n * h * LANES];
-    let mut dz = vec![0.0f32; p_n * h * LANES];
+    model::set_zeroed(dout, p_n * h * LANES);
+    model::set_zeroed(dz, p_n * h * LANES);
     if smask.0.iter().all(|v| *v == 0.0) {
-        return (0.0, dout, dz);
+        return 0.0;
     }
     let tau_l = Lanes::splat(tau);
     let wv = smask / Lanes::splat(denom);
@@ -482,7 +643,7 @@ pub fn pinball_seeds_lanes(shape: &Shape, fwd: &ForwardLanes, tau: f32,
             d.select_ge_zero(dz_ge, dz_lt).store(&mut dz[idx..]);
         }
     }
-    (loss_num, dout, dz)
+    loss_num
 }
 
 /// Per-lane Holt-Winters gradients for one group; `log_s_init` is SoA
@@ -506,13 +667,69 @@ impl SeriesGradsLanes {
     }
 }
 
+impl Default for SeriesGradsLanes {
+    /// Width-0 placeholder for pooled scratch;
+    /// [`LaneScratch::backward`] sizes `log_s_init` before any read.
+    fn default() -> Self {
+        Self::zeros(0)
+    }
+}
+
+/// Reusable temporaries of the lane backward pass.
+#[derive(Default)]
+struct BackwardTmp {
+    dh_seq: Vec<f32>,
+    dpre: Vec<f32>,
+    dh_ring: Vec<Vec<f32>>,
+    dc_ring: Vec<Vec<f32>>,
+    dx: Vec<f32>,
+    g_h: Vec<f32>,
+    g_resid: Vec<f32>,
+    dzz: Vec<f32>,
+    dinp: Vec<f32>,
+    dlev: Vec<f32>,
+    dseas_ext: Vec<f32>,
+    gseas: Vec<f32>,
+    gseas2: Vec<f32>,
+}
+
+impl BackwardTmp {
+    fn bytes(&self) -> u64 {
+        let rings: usize = self.dh_ring.iter().chain(&self.dc_ring)
+            .map(|r| r.capacity())
+            .sum();
+        ((rings + self.dh_seq.capacity() + self.dpre.capacity()
+          + self.dx.capacity() + self.g_h.capacity()
+          + self.g_resid.capacity() + self.dzz.capacity()
+          + self.dinp.capacity() + self.dlev.capacity()
+          + self.dseas_ext.capacity() + self.gseas.capacity()
+          + self.gseas2.capacity()) * 4) as u64
+    }
+}
+
 /// Hand-written backward for one lane group (mirror of
 /// [`model::backward_series`]; see that function and DESIGN.md for the
 /// recurrence-ordering invariants, which are unchanged — lanes never
 /// exchange data except in the shared-weight reductions).
+/// Allocating convenience wrapper over [`LaneScratch::backward`]'s core.
 pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
                       fwd: &ForwardLanes, dout: &[f32], dz: &[f32],
                       grads: &mut RnnGrads) -> SeriesGradsLanes {
+    let mut tmp = BackwardTmp::default();
+    let mut sg = SeriesGradsLanes::zeros(shape.s_total());
+    backward_lanes_core(shape, grp, rnn, fwd, dout, dz, grads, &mut tmp,
+                        &mut sg);
+    sg
+}
+
+/// The backward body over pooled temporaries (same reuse-safety
+/// classification as [`forward_lanes_core`]): identical floating-point
+/// schedule to the historical allocating version.
+#[allow(clippy::too_many_arguments)]
+fn backward_lanes_core(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
+                       fwd: &ForwardLanes, dout: &[f32], dz: &[f32],
+                       grads: &mut RnnGrads, tmp: &mut BackwardTmp,
+                       sg: &mut SeriesGradsLanes) {
     let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
     let s2 = shape.s2;
     let dual = shape.dual();
@@ -520,10 +737,14 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
     let n_l = shape.n_layers();
     let din_max = fwd.din_max;
     let one = Lanes::ONE;
+    let BackwardTmp {
+        dh_seq, dpre, dh_ring, dc_ring, dx, g_h, g_resid, dzz, dinp, dlev,
+        dseas_ext, gseas, gseas2,
+    } = tmp;
 
     // ---- head backward, collecting dL/dh_seq ----
-    let mut dh_seq = vec![0.0f32; p_n * hid * LANES];
-    let mut dpre = vec![0.0f32; hid * LANES];
+    model::set_len(dh_seq, p_n * hid * LANES);
+    model::set_len(dpre, hid * LANES);
     for p in 0..p_n {
         let dop = &dout[p * h * LANES..(p + 1) * h * LANES];
         let a = &fwd.act[p * hid * LANES..(p + 1) * hid * LANES];
@@ -548,16 +769,14 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
     }
 
     // ---- BPTT through the dilated stack (SoA gradient rings) ----
-    let mut dh_ring: Vec<Vec<f32>> =
-        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
-    let mut dc_ring: Vec<Vec<f32>> =
-        shape.flat.iter().map(|&d| vec![0.0; d * hid * LANES]).collect();
-    let mut dx = vec![0.0f32; p_n * in_w * LANES];
+    model::ring_reset(dh_ring, &shape.flat, hid * LANES);
+    model::ring_reset(dc_ring, &shape.flat, hid * LANES);
+    model::set_len(dx, p_n * in_w * LANES);
 
-    let mut g_h = vec![0.0f32; din_max * LANES];
-    let mut g_resid = vec![0.0f32; hid * LANES];
-    let mut dzz = vec![0.0f32; 4 * hid * LANES];
-    let mut dinp = vec![0.0f32; (din_max + hid) * LANES];
+    model::set_len(g_h, din_max * LANES);
+    model::set_len(g_resid, hid * LANES);
+    model::set_len(dzz, 4 * hid * LANES);
+    model::set_len(dinp, (din_max + hid) * LANES);
     for p in (0..p_n).rev() {
         g_h[..hid * LANES]
             .copy_from_slice(&dh_seq[p * hid * LANES..(p + 1) * hid * LANES]);
@@ -624,8 +843,8 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
     }
 
     // ---- window backward: d levels, d seas_ext (gate by multiply) ----
-    let mut dlev = vec![0.0f32; c * LANES];
-    let mut dseas_ext = vec![0.0f32; (c + h) * LANES];
+    model::set_zeroed(dlev, c * LANES);
+    model::set_zeroed(dseas_ext, (c + h) * LANES);
     for p in 0..p_n {
         let lvl = Lanes::load(&fwd.levels[(p + in_w - 1) * LANES..]);
         let mut dlvl = Lanes::ZERO;
@@ -652,8 +871,8 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
     }
 
     // ---- seas_ext → per-component seasonality gradients ----
-    let mut gseas = vec![0.0f32; (c + s) * LANES];
-    let mut gseas2 = vec![0.0f32; if dual { (c + s2) * LANES } else { 0 }];
+    model::set_zeroed(gseas, (c + s) * LANES);
+    model::set_zeroed(gseas2, if dual { (c + s2) * LANES } else { 0 });
     if dual {
         for t in 0..c {
             let dse = Lanes::load(&dseas_ext[t * LANES..]);
@@ -687,7 +906,8 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
     // and DESIGN.md §Dual-recurrence backward ordering invariant); every
     // lane runs the scalar schedule independently.
     let (alpha, gamma, gamma2) = (fwd.alpha, fwd.gamma, fwd.gamma2);
-    let mut glev = dlev;
+    // dlev doubles as the running level gradient (mutated in place).
+    let glev = dlev;
     let mut d_alpha = Lanes::ZERO;
     let mut d_gamma = Lanes::ZERO;
     let mut d_gamma2 = Lanes::ZERO;
@@ -752,10 +972,11 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
         gs1_t.store(&mut gseas[t * LANES..]);
     }
 
-    let d_alpha_logit = d_alpha * alpha * (one - alpha);
-    let (d_gamma_logit, d_gamma2_logit, d_log_s) = if shape.seasonal {
+    sg.alpha_logit = d_alpha * alpha * (one - alpha);
+    if shape.seasonal {
         // d log s_init = d s_init * s_init (chain through exp), per block.
-        let mut d_log_s = vec![0.0f32; (s + s2) * LANES];
+        let d_log_s = &mut sg.log_s_init;
+        model::set_len(d_log_s, (s + s2) * LANES);
         for k in 0..s {
             (Lanes::load(&gseas[k * LANES..])
              * Lanes::load(&fwd.s_init[k * LANES..]))
@@ -766,22 +987,76 @@ pub fn backward_lanes(shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
              * Lanes::load(&fwd.s2_init[k * LANES..]))
                 .store(&mut d_log_s[(s + k) * LANES..]);
         }
-        (d_gamma * gamma * (one - gamma),
-         if dual {
-             d_gamma2 * gamma2 * (one - gamma2)
-         } else {
-             Lanes::ZERO
-         },
-         d_log_s)
+        sg.gamma_logit = d_gamma * gamma * (one - gamma);
+        sg.gamma2_logit = if dual {
+            d_gamma2 * gamma2 * (one - gamma2)
+        } else {
+            Lanes::ZERO
+        };
     } else {
         // Non-seasonal: gamma pinned to 0 in-graph, no gradient flows.
-        (Lanes::ZERO, Lanes::ZERO, vec![0.0f32; (s + s2) * LANES])
-    };
-    SeriesGradsLanes {
-        alpha_logit: d_alpha_logit,
-        gamma_logit: d_gamma_logit,
-        gamma2_logit: d_gamma2_logit,
-        log_s_init: d_log_s,
+        model::set_zeroed(&mut sg.log_s_init, (s + s2) * LANES);
+        sg.gamma_logit = Lanes::ZERO;
+        sg.gamma2_logit = Lanes::ZERO;
+    }
+}
+
+/// Per-thread arena for the lane hot path: forward record + tape, loss
+/// seeds, backward temporaries and the per-series gradient output, all
+/// grown once to their high-water shape and reused across steps. One
+/// instance lives per pool participant in the native backend, so no
+/// locking or cross-thread sharing happens on the compute path.
+#[derive(Default)]
+pub struct LaneScratch {
+    /// Forward outputs + activation tape of the most recent
+    /// [`LaneScratch::forward`] call.
+    pub fwd: ForwardLanes,
+    ftmp: ForwardTmp,
+    btmp: BackwardTmp,
+    /// Loss seeds from [`LaneScratch::pinball`].
+    pub dout: Vec<f32>,
+    pub dz: Vec<f32>,
+    /// Per-series gradients from [`LaneScratch::backward`].
+    pub sg: SeriesGradsLanes,
+}
+
+impl LaneScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// [`forward_lanes`] into the pooled record (`self.fwd`).
+    pub fn forward(&mut self, shape: &Shape, grp: &LaneGroup, rnn: &RnnView,
+                   want_targets: bool) {
+        forward_lanes_core(shape, grp, rnn, want_targets, &mut self.fwd,
+                           &mut self.ftmp);
+    }
+
+    /// [`pinball_seeds_lanes`] over `self.fwd` into the pooled seed
+    /// buffers; returns the loss numerator.
+    pub fn pinball(&mut self, shape: &Shape, tau: f32, smask: Lanes,
+                   denom: f32) -> f64 {
+        pinball_seeds_lanes_into(shape, &self.fwd, tau, smask, denom,
+                                 &mut self.dout, &mut self.dz)
+    }
+
+    /// [`backward_lanes`] over `self.fwd` and the pooled seeds,
+    /// accumulating shared-weight gradients into `grads` and leaving the
+    /// per-series gradients in `self.sg`.
+    pub fn backward(&mut self, shape: &Shape, grp: &LaneGroup,
+                    rnn: &RnnView, grads: &mut RnnGrads) {
+        backward_lanes_core(shape, grp, rnn, &self.fwd, &self.dout,
+                            &self.dz, grads, &mut self.btmp, &mut self.sg);
+    }
+
+    /// Approximate bytes pinned by this arena
+    /// ([`BackendStats::scratch_bytes`] feeds from this).
+    ///
+    /// [`BackendStats::scratch_bytes`]: crate::runtime::backend::BackendStats
+    pub fn bytes(&self) -> u64 {
+        self.fwd.bytes() + self.ftmp.bytes() + self.btmp.bytes()
+            + ((self.dout.capacity() + self.dz.capacity()
+                + self.sg.log_s_init.capacity()) * 4) as u64
     }
 }
 

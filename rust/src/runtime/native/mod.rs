@@ -21,15 +21,32 @@
 //! [`ComputeMode::Lanes`] marshals the batch into structure-of-arrays
 //! lane groups of [`crate::simd::LANES`] series and runs the
 //! lane-vectorized kernels in [`lanes`] (the paper's §5 vectorization,
-//! natively); `std::thread` scoped workers then split the *groups*
-//! (thread × lane two-level parallelism). [`ComputeMode::Scalar`] keeps
-//! the original one-series-at-a-time core in [`model`] — the oracle the
-//! lane kernels are property-tested against — and splits the batch
-//! across threads per series. Per-series gradients are independent;
-//! shared-weight gradients are reduced across chunks in batch order, so
-//! results are deterministic for a given thread count and vary only at
-//! float-association level across thread counts (chunk boundaries move,
-//! so the f32 summation parenthesization differs).
+//! natively); a persistent [`pool::ComputePool`] then splits the *groups*
+//! across parked worker threads (thread × lane two-level parallelism).
+//! [`ComputeMode::Scalar`] keeps the original one-series-at-a-time core
+//! in [`model`] — the oracle the lane kernels are property-tested
+//! against — and splits the batch across threads per series. Per-series
+//! gradients are independent; shared-weight gradients are reduced across
+//! chunks in ascending batch order, so results are deterministic for a
+//! given thread count and vary only at float-association level across
+//! thread counts (chunk boundaries move, so the f32 summation
+//! parenthesization differs).
+//!
+//! ## Steady-state hot path
+//!
+//! Every buffer the per-step compute touches lives in arenas owned by
+//! the backend: per-participant [`lanes::LaneScratch`] /
+//! [`model::ScalarScratch`] kernel arenas, a step-level scratch for the
+//! marshalled lane groups and per-chunk gradient accumulators, and
+//! per-program dispatch caches (Adam leaf plan + output plan, resolved
+//! once). After a warmup step grows everything to its high-water shape,
+//! [`NativeBackend::train_step_inplace`] — which updates params and Adam
+//! state in place inside a caller-owned state map — performs **zero heap
+//! allocations and zero thread spawns** per step (gated by
+//! `rust/tests/steady_state.rs` and BENCH_6). The allocating
+//! [`Backend::execute_named`] entry point stays as the compatibility
+//! path and parity reference; it shares the same pooled compute core and
+//! differs only in emitting fresh output tensors.
 //!
 //! Scope: every Table-1 frequency — yearly/quarterly/monthly/daily
 //! (single seasonality) and the §8.2 hourly dual-seasonality (24h×168h)
@@ -41,9 +58,10 @@
 
 pub mod lanes;
 pub mod model;
+pub mod pool;
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -55,7 +73,7 @@ use crate::util::rng::Rng;
 use super::backend::{Backend, BackendStats, HostTensor};
 use super::manifest::{FreqManifest, Manifest, ProgramSpec, TensorSpec};
 
-use model::{RnnGrads, RnnView, SeriesGrads, Shape};
+use model::{RnnGrads, RnnView, Shape};
 
 /// Batch sizes the native manifest advertises. Native programs have no
 /// compile cost, so the ladder is denser than the artifact sweep — the
@@ -268,6 +286,21 @@ pub struct NativeBackend {
     threads: usize,
     mode: ComputeMode,
     stats: Mutex<BackendStats>,
+    /// Persistent worker pool (spawned lazily, parked between calls).
+    pool: pool::ComputePool,
+    /// Per-frequency compute shapes, resolved once at construction so
+    /// dispatch never re-derives them.
+    shapes: HashMap<String, Shape>,
+    /// Per-program dispatch caches (Adam leaf plan + output plan), built
+    /// lazily on first execution of each program name.
+    dispatch: Mutex<HashMap<String, Arc<ProgramCache>>>,
+    /// Per-participant kernel arenas, indexed by pool participant id.
+    worker_scratch: Vec<Mutex<WorkerScratch>>,
+    /// Step-level scratch (lane groups, chunk ranges, gradient
+    /// accumulators) for `train_step`.
+    step: Mutex<StepScratch>,
+    /// Step-level scratch for `predict`.
+    predict: Mutex<PredictScratch>,
 }
 
 impl NativeBackend {
@@ -296,11 +329,47 @@ impl NativeBackend {
 
     /// Backend with an explicit thread cap and kernel mode.
     pub fn with_threads_mode(threads: usize, mode: ComputeMode) -> Self {
+        Self::build(threads, mode, pool::PoolMode::Persistent)
+    }
+
+    /// Like [`Self::with_threads_mode`] but spawning fresh workers every
+    /// call (the pre-pool behavior) — the BENCH_6 A/B baseline.
+    pub fn with_threads_mode_spawn(threads: usize, mode: ComputeMode)
+                                   -> Self {
+        Self::build(threads, mode, pool::PoolMode::SpawnPerCall)
+    }
+
+    fn build(threads: usize, mode: ComputeMode, pmode: pool::PoolMode)
+             -> Self {
+        let threads = threads.max(1);
+        let manifest = native_manifest();
+        let mut shapes = HashMap::with_capacity(NATIVE_FREQS.len());
+        for freq in NATIVE_FREQS {
+            let name = freq.name();
+            let cfg = manifest
+                .config(name)
+                .expect("native manifest covers its own frequencies");
+            shapes.insert(
+                name.to_string(),
+                Shape::new(cfg.seasonality, cfg.seasonality2, cfg.horizon,
+                           cfg.input_window, cfg.length, cfg.hidden,
+                           &cfg.dilations, 6)
+                    .expect("Table-1 configs produce valid shapes"),
+            );
+        }
         Self {
-            manifest: native_manifest(),
-            threads: threads.max(1),
+            manifest,
+            threads,
             mode,
             stats: Mutex::new(BackendStats::default()),
+            pool: pool::ComputePool::with_mode(threads, pmode),
+            shapes,
+            dispatch: Mutex::new(HashMap::new()),
+            worker_scratch: (0..threads)
+                .map(|_| Mutex::new(WorkerScratch::default()))
+                .collect(),
+            step: Mutex::new(StepScratch::default()),
+            predict: Mutex::new(PredictScratch::default()),
         }
     }
 
@@ -312,10 +381,24 @@ impl NativeBackend {
         self.mode
     }
 
-    fn shape_for(&self, freq: &str) -> Result<Shape> {
-        let cfg = self.manifest.config(freq)?;
-        Shape::new(cfg.seasonality, cfg.seasonality2, cfg.horizon,
-                   cfg.input_window, cfg.length, cfg.hidden, &cfg.dilations, 6)
+    fn shape_for(&self, freq: &str) -> Result<&Shape> {
+        self.shapes
+            .get(freq)
+            .ok_or_else(|| anyhow!("no native shape for frequency `{freq}`"))
+    }
+
+    /// Dispatch cache for `name`: resolved Adam leaf plan + output plan.
+    /// Built once per program name, lookup-only afterwards.
+    fn program_cache(&self, name: &str, spec: &ProgramSpec)
+                     -> Result<Arc<ProgramCache>> {
+        let mut map = self.dispatch.lock().unwrap();
+        if let Some(cache) = map.get(name) {
+            return Ok(Arc::clone(cache));
+        }
+        let cache = Arc::new(ProgramCache::for_train_spec(
+            spec, self.manifest.per_series_lr_mult)?);
+        map.insert(name.to_string(), Arc::clone(&cache));
+        Ok(cache)
     }
 }
 
@@ -339,35 +422,119 @@ fn get_data<'x>(inputs: &HashMap<&str, &'x HostTensor>, name: &str)
     Ok(get_in(inputs, name)?.data.as_slice())
 }
 
-/// Resolve the per-series parameter slices for one batch slot.
-/// `gamma2_logit` is present only for §8.2 dual configs (empty otherwise).
-struct SeriesView<'a> {
+/// Upper bound on dilated-LSTM layers a native program may carry. The
+/// fixed-size array lets [`TrainInputs`] resolve cell leaves without any
+/// heap allocation (Table-1 maxes out at 4 layers; 16 is headroom).
+const MAX_LAYERS: usize = 16;
+
+/// Warmup executions before [`NativeBackend::train_step_inplace`] starts
+/// charging `BackendStats::steady_allocs`: the first steps grow arenas to
+/// their high-water shapes, which is expected allocation.
+const STEADY_WARMUP: u64 = 3;
+
+/// All input slices a train/predict step consumes, resolved by tensor
+/// name with zero heap allocation (no format!-built keys, no per-call
+/// Vec). `mask`/`lr`/`opt.step` stay empty/zero for predict programs;
+/// `gamma2_logit` is present only for §8.2 dual configs.
+struct TrainInputs<'a> {
+    y: &'a [f32],
+    cat: &'a [f32],
+    mask: &'a [f32],
+    lr: f32,
+    step_old: f32,
+    cells: [(&'a [f32], &'a [f32]); MAX_LAYERS],
+    n_layers: usize,
+    dense_w: &'a [f32],
+    dense_b: &'a [f32],
+    out_w: &'a [f32],
+    out_b: &'a [f32],
     alpha_logit: &'a [f32],
     gamma_logit: &'a [f32],
     gamma2_logit: &'a [f32],
-    log_s_init: &'a [f32],
-    s_width: usize,
+    log_s: &'a [f32],
 }
 
-impl<'a> SeriesView<'a> {
-    fn from_inputs(inputs: &HashMap<&str, &'a HostTensor>, shape: &Shape)
-                   -> Result<Self> {
-        let gamma2_logit: &'a [f32] = if shape.dual() {
-            get_data(inputs, "params.series.gamma2_logit")?
-        } else {
-            &[]
-        };
-        Ok(Self {
-            alpha_logit: get_data(inputs, "params.series.alpha_logit")?,
-            gamma_logit: get_data(inputs, "params.series.gamma_logit")?,
-            gamma2_logit,
-            log_s_init: get_data(inputs, "params.series.log_s_init")?,
-            s_width: shape.s_total(),
-        })
+impl<'a> TrainInputs<'a> {
+    fn empty() -> Self {
+        Self {
+            y: &[],
+            cat: &[],
+            mask: &[],
+            lr: 0.0,
+            step_old: 0.0,
+            cells: [(&[] as &[f32], &[] as &[f32]); MAX_LAYERS],
+            n_layers: 0,
+            dense_w: &[],
+            dense_b: &[],
+            out_w: &[],
+            out_b: &[],
+            alpha_logit: &[],
+            gamma_logit: &[],
+            gamma2_logit: &[],
+            log_s: &[],
+        }
     }
 
-    /// Bundle slot `i`'s parameters for the compute core.
-    fn hw(&self, i: usize) -> model::HwView<'a> {
+    /// Route one named tensor into its slot. Adam state (`opt.m.*` /
+    /// `opt.v.*`) is resolved per leaf by the update loop, not here;
+    /// unknown names are ignored (the manifest spec is the gatekeeper).
+    fn assign(&mut self, name: &str, t: &'a HostTensor) -> Result<()> {
+        fn scalar_of(name: &str, d: &[f32]) -> Result<f32> {
+            d.first()
+                .copied()
+                .ok_or_else(|| anyhow!("scalar input `{name}` is empty"))
+        }
+        let d = t.data.as_slice();
+        match name {
+            "data.y" => self.y = d,
+            "data.cat" => self.cat = d,
+            "data.mask" => self.mask = d,
+            "lr" => self.lr = scalar_of(name, d)?,
+            "opt.step" => self.step_old = scalar_of(name, d)?,
+            "params.rnn.dense_w" => self.dense_w = d,
+            "params.rnn.dense_b" => self.dense_b = d,
+            "params.rnn.out_w" => self.out_w = d,
+            "params.rnn.out_b" => self.out_b = d,
+            "params.series.alpha_logit" => self.alpha_logit = d,
+            "params.series.gamma_logit" => self.gamma_logit = d,
+            "params.series.gamma2_logit" => self.gamma2_logit = d,
+            "params.series.log_s_init" => self.log_s = d,
+            other => {
+                if let Some(rest) = other.strip_prefix("params.rnn.cells.") {
+                    let (idx, leaf) = rest.split_once('.').ok_or_else(
+                        || anyhow!("unparseable cell leaf `{other}`"))?;
+                    let i: usize = idx.parse().map_err(
+                        |_| anyhow!("bad cell index in `{other}`"))?;
+                    if i >= MAX_LAYERS {
+                        bail!("cell layer {i} exceeds the native layer \
+                               bound {MAX_LAYERS}");
+                    }
+                    match leaf {
+                        "w" => self.cells[i].0 = d,
+                        "b" => self.cells[i].1 = d,
+                        _ => bail!("unknown cell leaf `{other}`"),
+                    }
+                    self.n_layers = self.n_layers.max(i + 1);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared-weight view for the compute core.
+    fn rnn_view(&self) -> RnnView<'_> {
+        RnnView {
+            cells: &self.cells[..self.n_layers],
+            dense_w: self.dense_w,
+            dense_b: self.dense_b,
+            out_w: self.out_w,
+            out_b: self.out_b,
+        }
+    }
+
+    /// Bundle slot `i`'s per-series parameters (`w` = packed `[S1|S2]`
+    /// width).
+    fn hw(&self, i: usize, w: usize) -> model::HwView<'a> {
         model::HwView {
             alpha_logit: self.alpha_logit[i],
             gamma_logit: self.gamma_logit[i],
@@ -376,60 +543,315 @@ impl<'a> SeriesView<'a> {
             } else {
                 self.gamma2_logit[i]
             },
-            log_s_init: &self.log_s_init[i * self.s_width
-                                         ..(i + 1) * self.s_width],
+            log_s_init: &self.log_s[i * w..(i + 1) * w],
         }
+    }
+
+    /// Bounds-check every resolved slice against `shape`/`b` so the
+    /// compute core can index without surprises. `train` additionally
+    /// requires the mask.
+    fn validate(&self, shape: &Shape, b: usize, train: bool) -> Result<()> {
+        let (hid, w) = (shape.hidden, shape.s_total());
+        if self.y.len() != b * shape.c {
+            bail!("data.y has {} elems, want {}", self.y.len(), b * shape.c);
+        }
+        if self.cat.len() != b * 6 {
+            bail!("data.cat has {} elems, want {}", self.cat.len(), b * 6);
+        }
+        if train && self.mask.len() != b {
+            bail!("data.mask has {} elems, want {b}", self.mask.len());
+        }
+        if self.alpha_logit.len() != b || self.gamma_logit.len() != b {
+            bail!("per-series logits not sized [{b}]");
+        }
+        if shape.dual() && self.gamma2_logit.len() != b {
+            bail!("dual config without a [{b}] gamma2_logit");
+        }
+        if self.log_s.len() != b * w {
+            bail!("log_s_init has {} elems, want {}", self.log_s.len(), b * w);
+        }
+        if self.n_layers != shape.n_layers() {
+            bail!("resolved {} cell layers, shape has {}", self.n_layers,
+                  shape.n_layers());
+        }
+        for (li, &din) in shape.layer_din.iter().enumerate() {
+            let (wt, bt) = self.cells[li];
+            if wt.len() != (din + hid) * 4 * hid || bt.len() != 4 * hid {
+                bail!("cell {li} weights not sized for din {din}, hid {hid}");
+            }
+        }
+        if self.dense_w.len() != hid * hid || self.dense_b.len() != hid
+            || self.out_w.len() != hid * shape.h
+            || self.out_b.len() != shape.h
+        {
+            bail!("head weights not sized for hid {hid}, h {}", shape.h);
+        }
+        Ok(())
     }
 }
 
-/// Owned collection of RNN weight slices; [`RnnParts::view`] borrows it
-/// into the [`RnnView`] the compute core consumes.
-struct RnnParts<'a> {
-    cells: Vec<(&'a [f32], &'a [f32])>,
-    dense_w: &'a [f32],
-    dense_b: &'a [f32],
-    out_w: &'a [f32],
-    out_b: &'a [f32],
+/// Which gradient buffer in [`StepScratch`] feeds a parameter leaf's Adam
+/// update — parsed from the leaf name once per program, so the hot path
+/// never string-matches.
+enum GradKey {
+    CellW(usize),
+    CellB(usize),
+    DenseW,
+    DenseB,
+    OutW,
+    OutB,
+    Alpha,
+    Gamma,
+    Gamma2,
+    LogS,
 }
 
-impl<'a> RnnParts<'a> {
-    fn from_inputs(inputs: &HashMap<&str, &'a HostTensor>, n_layers: usize)
-                   -> Result<Self> {
-        let mut cells = Vec::with_capacity(n_layers);
-        for i in 0..n_layers {
-            cells.push((
-                get_data(inputs, &format!("params.rnn.cells.{i}.w"))?,
-                get_data(inputs, &format!("params.rnn.cells.{i}.b"))?,
-            ));
+fn parse_grad_key(leaf: &str) -> Result<GradKey> {
+    Ok(match leaf {
+        "rnn.dense_w" => GradKey::DenseW,
+        "rnn.dense_b" => GradKey::DenseB,
+        "rnn.out_w" => GradKey::OutW,
+        "rnn.out_b" => GradKey::OutB,
+        "series.alpha_logit" => GradKey::Alpha,
+        "series.gamma_logit" => GradKey::Gamma,
+        "series.gamma2_logit" => GradKey::Gamma2,
+        "series.log_s_init" => GradKey::LogS,
+        other => {
+            let rest = other.strip_prefix("rnn.cells.").ok_or_else(
+                || anyhow!("unknown parameter leaf `{other}`"))?;
+            let (idx, kind) = rest.split_once('.').ok_or_else(
+                || anyhow!("unparseable cell leaf `{other}`"))?;
+            let i: usize = idx
+                .parse()
+                .map_err(|_| anyhow!("bad cell index in `{other}`"))?;
+            match kind {
+                "w" => GradKey::CellW(i),
+                "b" => GradKey::CellB(i),
+                _ => bail!("unknown cell leaf `{other}`"),
+            }
         }
-        Ok(Self {
-            cells,
-            dense_w: get_data(inputs, "params.rnn.dense_w")?,
-            dense_b: get_data(inputs, "params.rnn.dense_b")?,
-            out_w: get_data(inputs, "params.rnn.out_w")?,
-            out_b: get_data(inputs, "params.rnn.out_b")?,
-        })
-    }
+    })
+}
 
-    fn view(&self) -> RnnView<'_> {
-        RnnView {
-            cells: &self.cells,
-            dense_w: self.dense_w,
-            dense_b: self.dense_b,
-            out_w: self.out_w,
-            out_b: self.out_b,
+/// One Adam-updated parameter leaf with its pre-resolved tensor names
+/// (`params.*` / `opt.m.*` / `opt.v.*`), gradient source and LR
+/// multiplier.
+struct AdamLeaf {
+    pname: String,
+    mname: String,
+    vname: String,
+    key: GradKey,
+    mult: f32,
+    shape: Vec<usize>,
+}
+
+/// Where each program output comes from, aligned with `spec.outputs`.
+enum OutSlot {
+    Loss,
+    Step,
+    Param(usize),
+    M(usize),
+    V(usize),
+}
+
+/// Per-program dispatch cache: everything `run_train_step` used to
+/// re-derive from strings every call (leaf list, gradient routing,
+/// output ordering), resolved once.
+struct ProgramCache {
+    adam: Vec<AdamLeaf>,
+    out_plan: Vec<OutSlot>,
+}
+
+impl ProgramCache {
+    fn for_train_spec(spec: &ProgramSpec, per_series_mult: f32)
+                      -> Result<Self> {
+        let mut adam = Vec::new();
+        let mut index: HashMap<&str, usize> = HashMap::new();
+        for ospec in &spec.outputs {
+            let Some(leaf) = ospec.name.strip_prefix("params.") else {
+                continue;
+            };
+            index.insert(leaf, adam.len());
+            adam.push(AdamLeaf {
+                pname: ospec.name.clone(),
+                mname: format!("opt.m.{leaf}"),
+                vname: format!("opt.v.{leaf}"),
+                key: parse_grad_key(leaf)?,
+                mult: if leaf.starts_with("series.") {
+                    per_series_mult
+                } else {
+                    1.0
+                },
+                shape: ospec.shape.clone(),
+            });
         }
+        let leaf_idx = |leaf: &str| -> Result<usize> {
+            index
+                .get(leaf)
+                .copied()
+                .ok_or_else(|| anyhow!("output leaf `{leaf}` has no \
+                                        matching params output"))
+        };
+        let mut out_plan = Vec::with_capacity(spec.outputs.len());
+        for ospec in &spec.outputs {
+            let slot = match ospec.name.as_str() {
+                "loss" => OutSlot::Loss,
+                "opt.step" => OutSlot::Step,
+                n => {
+                    if let Some(leaf) = n.strip_prefix("params.") {
+                        OutSlot::Param(leaf_idx(leaf)?)
+                    } else if let Some(leaf) = n.strip_prefix("opt.m.") {
+                        OutSlot::M(leaf_idx(leaf)?)
+                    } else if let Some(leaf) = n.strip_prefix("opt.v.") {
+                        OutSlot::V(leaf_idx(leaf)?)
+                    } else {
+                        bail!("unroutable train_step output `{n}`");
+                    }
+                }
+            };
+            out_plan.push(slot);
+        }
+        Ok(Self { adam, out_plan })
     }
 }
 
-/// Split `0..n` into at most `threads` contiguous chunks.
+/// Per-participant kernel arenas (one per pool participant id; workers
+/// lock only their own entry, so there is no contention on the compute
+/// path).
+#[derive(Default)]
+struct WorkerScratch {
+    lane: lanes::LaneScratch,
+    scalar: model::ScalarScratch,
+}
+
+impl WorkerScratch {
+    fn bytes(&self) -> u64 {
+        self.lane.bytes() + self.scalar.bytes()
+    }
+}
+
+/// One chunk's gradient accumulators. Pre-zeroed before every round so
+/// chunks whose groups are entirely masked contribute exact zeros
+/// without writing; the slot-gradient buffers are chunk-local (offset by
+/// the chunk's first batch slot) and copied into [`StepScratch`]'s
+/// global buffers during the ascending-order merge.
+#[derive(Default)]
+struct ChunkOut {
+    loss: f64,
+    rnn_grads: RnnGrads,
+    d_alpha: Vec<f32>,
+    d_gamma: Vec<f32>,
+    d_gamma2: Vec<f32>,
+    d_log_s: Vec<f32>,
+}
+
+impl ChunkOut {
+    fn bytes(&self) -> u64 {
+        self.rnn_grads.bytes()
+            + (4 * (self.d_alpha.capacity() + self.d_gamma.capacity()
+                    + self.d_gamma2.capacity()
+                    + self.d_log_s.capacity())) as u64
+    }
+}
+
+/// Step-level scratch for `train_step`: marshalled lane groups, chunk
+/// ranges, per-chunk accumulators and the merged global gradients. The
+/// `chunk_outs` vec only grows; rounds use the first `ranges.len()`
+/// entries.
+#[derive(Default)]
+struct StepScratch {
+    groups: Vec<lanes::LaneGroup>,
+    ranges: Vec<(usize, usize)>,
+    chunk_outs: Vec<Mutex<ChunkOut>>,
+    rnn_grads: RnnGrads,
+    d_alpha: Vec<f32>,
+    d_gamma: Vec<f32>,
+    d_gamma2: Vec<f32>,
+    d_log_s: Vec<f32>,
+}
+
+impl StepScratch {
+    fn bytes(&self) -> u64 {
+        let groups: u64 = self.groups.iter().map(|g| g.bytes()).sum();
+        let chunks: u64 = self
+            .chunk_outs
+            .iter()
+            .map(|c| c.lock().unwrap().bytes())
+            .sum();
+        groups + chunks + self.rnn_grads.bytes()
+            + (16 * self.ranges.capacity()) as u64
+            + (4 * (self.d_alpha.capacity() + self.d_gamma.capacity()
+                    + self.d_gamma2.capacity()
+                    + self.d_log_s.capacity())) as u64
+    }
+}
+
+/// Step-level scratch for `predict`: lane groups, chunk ranges and
+/// per-chunk forecast rows (SoA `[H][LANES]` per group for the lane
+/// path, `[H]` per series for the scalar path).
+#[derive(Default)]
+struct PredictScratch {
+    groups: Vec<lanes::LaneGroup>,
+    ranges: Vec<(usize, usize)>,
+    chunk_rows: Vec<Mutex<Vec<f32>>>,
+}
+
+impl PredictScratch {
+    fn bytes(&self) -> u64 {
+        let groups: u64 = self.groups.iter().map(|g| g.bytes()).sum();
+        let rows: usize = self
+            .chunk_rows
+            .iter()
+            .map(|r| r.lock().unwrap().capacity())
+            .sum();
+        groups + (4 * rows) as u64 + (16 * self.ranges.capacity()) as u64
+    }
+}
+
+/// Gradient slice for one Adam leaf out of the merged step scratch.
+fn grad_slice<'s>(key: &GradKey, st: &'s StepScratch) -> &'s [f32] {
+    match key {
+        GradKey::CellW(i) => &st.rnn_grads.cells[*i].0,
+        GradKey::CellB(i) => &st.rnn_grads.cells[*i].1,
+        GradKey::DenseW => &st.rnn_grads.dense_w,
+        GradKey::DenseB => &st.rnn_grads.dense_b,
+        GradKey::OutW => &st.rnn_grads.out_w,
+        GradKey::OutB => &st.rnn_grads.out_b,
+        GradKey::Alpha => &st.d_alpha,
+        GradKey::Gamma => &st.d_gamma,
+        GradKey::Gamma2 => &st.d_gamma2,
+        GradKey::LogS => &st.d_log_s,
+    }
+}
+
+/// Split `0..n` into `min(threads, n)` contiguous near-equal chunks
+/// (sizes differ by at most one), writing into a pooled buffer.
+///
+/// This replaces a `div_ceil`-based split that could *under-fill* the
+/// thread budget: ceil(9/8)=2 elements per chunk yields only 5 chunks
+/// for 8 threads, idling 3 of them. The quotient/remainder split always
+/// produces exactly `min(threads, n)` chunks.
+fn chunks_into(n: usize, threads: usize, out: &mut Vec<(usize, usize)>) {
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    let k = threads.min(n).max(1);
+    let (base, rem) = (n / k, n % k);
+    let mut lo = 0;
+    for i in 0..k {
+        let hi = lo + base + usize::from(i < rem);
+        out.push((lo, hi));
+        lo = hi;
+    }
+}
+
+/// Allocating wrapper over [`chunks_into`] (tests and one-shot callers).
+#[cfg(test)]
 fn chunks(n: usize, threads: usize) -> Vec<(usize, usize)> {
-    let t = threads.min(n).max(1);
-    let per = n.div_ceil(t);
-    (0..t)
-        .map(|i| (i * per, ((i + 1) * per).min(n)))
-        .filter(|(lo, hi)| lo < hi)
-        .collect()
+    let mut out = Vec::new();
+    chunks_into(n, threads, &mut out);
+    out
 }
 
 impl Backend for NativeBackend {
@@ -438,7 +860,10 @@ impl Backend for NativeBackend {
         name: &str,
         lookup: &mut dyn FnMut(&TensorSpec) -> Result<&'a HostTensor>,
     ) -> Result<Vec<(String, HostTensor)>> {
-        let spec = self.manifest.program(name)?.clone();
+        // Borrow the spec straight out of the manifest — the pre-pool
+        // code cloned the whole ProgramSpec (inputs + outputs vectors)
+        // on every dispatch.
+        let spec = self.manifest.program(name)?;
         let t0 = Instant::now();
         let mut inputs: HashMap<&str, &'a HostTensor> =
             HashMap::with_capacity(spec.inputs.len());
@@ -460,9 +885,9 @@ impl Backend for NativeBackend {
         let t1 = Instant::now();
         let shape = self.shape_for(&spec.freq)?;
         let out = match spec.kind.as_str() {
-            "train_step" => self.run_train_step(&spec, &shape, &inputs)?,
-            "predict" => self.run_predict(&spec, &shape, &inputs)?,
-            "es" => run_es(&spec, &shape, &inputs)?,
+            "train_step" => self.run_train_step(name, spec, shape, &inputs)?,
+            "predict" => self.run_predict(spec, shape, &inputs)?,
+            "es" => run_es(spec, shape, &inputs)?,
             other => bail!("native backend cannot execute kind `{other}`"),
         };
         let exec = t1.elapsed().as_secs_f64();
@@ -476,7 +901,7 @@ impl Backend for NativeBackend {
 
     fn execute_init(&self, freq: &str, seed: u64) -> Result<Vec<(String, HostTensor)>> {
         let name = Manifest::program_name(freq, 0, "init");
-        let spec = self.manifest.program(&name)?.clone();
+        let spec = self.manifest.program(&name)?;
         // Per-frequency stream: fold the frequency name into the seed so
         // identically-seeded frequencies don't share weights.
         let mut salted = seed ^ 0x9E37_79B9_7F4A_7C15;
@@ -516,312 +941,471 @@ impl Backend for NativeBackend {
     }
 
     fn stats(&self) -> BackendStats {
-        self.stats.lock().unwrap().clone()
+        // Clone under the stats lock, then augment from the pool and
+        // scratch arenas (the statement-temporary guard drops before the
+        // scratch locks are taken, so there is no nested-lock ordering).
+        let mut st = self.stats.lock().unwrap().clone();
+        st.spawns = self.pool.spawns();
+        let mut scratch: u64 = self
+            .worker_scratch
+            .iter()
+            .map(|w| w.lock().unwrap().bytes())
+            .sum();
+        scratch += self.step.lock().unwrap().bytes();
+        scratch += self.predict.lock().unwrap().bytes();
+        st.scratch_bytes = scratch;
+        st
     }
 }
 
 impl NativeBackend {
+    /// Resolve and bounds-check every input of `spec` out of the
+    /// execute_named input table.
+    fn resolve_inputs<'a>(&self, spec: &ProgramSpec,
+                          inputs: &HashMap<&str, &'a HostTensor>, b: usize,
+                          shape: &Shape, train: bool)
+                          -> Result<TrainInputs<'a>> {
+        let mut ti = TrainInputs::empty();
+        for ispec in &spec.inputs {
+            ti.assign(&ispec.name, get_in(inputs, &ispec.name)?)?;
+        }
+        ti.validate(shape, b, train)?;
+        Ok(ti)
+    }
+
     fn run_predict(&self, spec: &ProgramSpec, shape: &Shape,
                    inputs: &HashMap<&str, &HostTensor>)
                    -> Result<Vec<(String, HostTensor)>> {
         let b = spec.batch;
-        let y = get_data(inputs, "data.y")?;
-        let cat = get_data(inputs, "data.cat")?;
-        let parts = RnnParts::from_inputs(inputs, shape.n_layers())?;
-        let rnn = parts.view();
-        let series = SeriesView::from_inputs(inputs, shape)?;
-        let (c, h) = (shape.c, shape.h);
+        let ti = self.resolve_inputs(spec, inputs, b, shape, false)?;
+        let rnn = ti.rnn_view();
+        let (c, h, w) = (shape.c, shape.h, shape.s_total());
 
+        // The forecast tensor is handed to the caller, so it is a fresh
+        // allocation by design; all intermediate storage is pooled.
         let mut forecast = vec![0.0f32; b * h];
+        let mut prp = self.predict.lock().unwrap();
         if self.mode == ComputeMode::Lanes {
-            let groups = lanes::marshal_groups(
-                shape, b, y, cat, None, series.alpha_logit,
-                series.gamma_logit, series.gamma2_logit, series.log_s_init);
-            let ranges = chunks(groups.len(), self.threads);
-            std::thread::scope(|sc| {
-                let groups = &groups;
-                let mut handles = Vec::with_capacity(ranges.len());
-                for &(lo, hi) in &ranges {
-                    let handle = sc.spawn(move || {
-                        let mut out = Vec::with_capacity(hi - lo);
-                        for grp in &groups[lo..hi] {
-                            let fwd = lanes::forward_lanes(shape, grp, &rnn,
-                                                           false);
-                            out.push((grp.start, grp.fill,
-                                      lanes::forecast_from_lanes(shape, &fwd)));
-                        }
-                        out
-                    });
-                    handles.push(handle);
+            {
+                let pr = &mut *prp;
+                lanes::marshal_groups_into(
+                    &mut pr.groups, shape, b, ti.y, ti.cat, None,
+                    ti.alpha_logit, ti.gamma_logit, ti.gamma2_logit,
+                    ti.log_s);
+                chunks_into(pr.groups.len(), self.threads, &mut pr.ranges);
+                while pr.chunk_rows.len() < pr.ranges.len() {
+                    pr.chunk_rows.push(Mutex::new(Vec::new()));
                 }
-                for handle in handles {
-                    let worker = handle.join().expect("predict worker panicked");
-                    for (start, fill, fc) in worker {
-                        // De-marshal: lane l of the SoA forecast is batch
-                        // slot start + l; padding lanes are dropped.
-                        for l in 0..fill {
-                            for k in 0..h {
-                                forecast[(start + l) * h + k] =
-                                    fc[k * LANES + l];
-                            }
+                for (ci, &(lo, hi)) in pr.ranges.iter().enumerate() {
+                    let mut rows = pr.chunk_rows[ci].lock().unwrap();
+                    // Fully overwritten below: every [k][lane] slot is
+                    // stored by forecast_from_lanes_into.
+                    model::set_len(&mut rows, (hi - lo) * h * LANES);
+                }
+            }
+            let n_chunks = prp.ranges.len();
+            let prv: &PredictScratch = &*prp;
+            let task = |ci: usize, pid: usize| {
+                let (lo, hi) = prv.ranges[ci];
+                let mut scr = self.worker_scratch[pid].lock().unwrap();
+                let mut rows = prv.chunk_rows[ci].lock().unwrap();
+                for gi in lo..hi {
+                    scr.lane.forward(shape, &prv.groups[gi], &rnn, false);
+                    let off = (gi - lo) * h * LANES;
+                    lanes::forecast_from_lanes_into(
+                        shape, &scr.lane.fwd,
+                        &mut rows[off..off + h * LANES]);
+                }
+            };
+            self.pool.run(n_chunks, &task);
+            let pr = &mut *prp;
+            for (ci, &(lo, hi)) in pr.ranges.iter().enumerate() {
+                let rows = pr.chunk_rows[ci].get_mut().unwrap();
+                for gi in lo..hi {
+                    let grp = &pr.groups[gi];
+                    let off = (gi - lo) * h * LANES;
+                    // De-marshal: lane l of the SoA forecast is batch
+                    // slot start + l; padding lanes are dropped.
+                    for l in 0..grp.fill {
+                        for k in 0..h {
+                            forecast[(grp.start + l) * h + k] =
+                                rows[off + k * LANES + l];
                         }
                     }
                 }
-            });
+            }
         } else {
-            let ranges = chunks(b, self.threads);
-            std::thread::scope(|sc| {
-                let mut handles = Vec::with_capacity(ranges.len());
-                for &(lo, hi) in &ranges {
-                    let series = &series;
-                    let handle = sc.spawn(move || {
-                        let mut rows = Vec::with_capacity((hi - lo) * h);
-                        for i in lo..hi {
-                            let fwd = model::forward_series(
-                                shape, &y[i * c..(i + 1) * c],
-                                &cat[i * 6..(i + 1) * 6], &rnn,
-                                series.hw(i), false);
-                            rows.extend(model::forecast_from(shape, &fwd));
-                        }
-                        rows
-                    });
-                    handles.push((lo, hi, handle));
+            {
+                let pr = &mut *prp;
+                pr.groups.clear();
+                chunks_into(b, self.threads, &mut pr.ranges);
+                while pr.chunk_rows.len() < pr.ranges.len() {
+                    pr.chunk_rows.push(Mutex::new(Vec::new()));
                 }
-                for (lo, hi, handle) in handles {
-                    let rows = handle.join().expect("predict worker panicked");
-                    forecast[lo * h..hi * h].copy_from_slice(&rows);
+                for (ci, &(lo, hi)) in pr.ranges.iter().enumerate() {
+                    let mut rows = pr.chunk_rows[ci].lock().unwrap();
+                    model::set_len(&mut rows, (hi - lo) * h);
                 }
-            });
+            }
+            let n_chunks = prp.ranges.len();
+            let prv: &PredictScratch = &*prp;
+            let task = |ci: usize, pid: usize| {
+                let (lo, hi) = prv.ranges[ci];
+                let mut scr = self.worker_scratch[pid].lock().unwrap();
+                let mut rows = prv.chunk_rows[ci].lock().unwrap();
+                for i in lo..hi {
+                    scr.scalar.forward(
+                        shape, &ti.y[i * c..(i + 1) * c],
+                        &ti.cat[i * 6..(i + 1) * 6], &rnn, ti.hw(i, w),
+                        false);
+                    let o = (i - lo) * h;
+                    model::forecast_into(shape, &scr.scalar.fwd,
+                                         &mut rows[o..o + h]);
+                }
+            };
+            self.pool.run(n_chunks, &task);
+            let pr = &mut *prp;
+            for (ci, &(lo, hi)) in pr.ranges.iter().enumerate() {
+                let rows = pr.chunk_rows[ci].get_mut().unwrap();
+                forecast[lo * h..hi * h]
+                    .copy_from_slice(&rows[..(hi - lo) * h]);
+            }
         }
+        drop(prp);
         Ok(vec![("forecast".into(),
                  HostTensor::new(vec![b, h], forecast)?)])
     }
 
-    fn run_train_step(&self, spec: &ProgramSpec, shape: &Shape,
-                      inputs: &HashMap<&str, &HostTensor>)
-                      -> Result<Vec<(String, HostTensor)>> {
-        let b = spec.batch;
-        let c = shape.c;
-        let y = get_data(inputs, "data.y")?;
-        let cat = get_data(inputs, "data.cat")?;
-        let mask = get_data(inputs, "data.mask")?;
-        let lr = get_data(inputs, "lr")?[0];
-        let step_old = get_data(inputs, "opt.step")?[0];
-        let parts = RnnParts::from_inputs(inputs, shape.n_layers())?;
-        let rnn = parts.view();
-        let series = SeriesView::from_inputs(inputs, shape)?;
-        let tau = self.manifest.tau;
-
+    /// Forward + backward for one batch: pooled compute over the
+    /// persistent worker pool, gradients merged into the step scratch in
+    /// ascending chunk order (the determinism contract — results are
+    /// bitwise-stable for a given thread count). Returns the scalar loss
+    /// and the guard on the scratch holding the merged gradients.
+    fn train_grads<'s>(&'s self, shape: &Shape, ti: &TrainInputs, b: usize,
+                       tau: f32)
+                       -> Result<(f32, MutexGuard<'s, StepScratch>)> {
+        let w = shape.s_total();
         // Global loss denominator (pinball_ref): Σ mask over (P, B) × H.
-        let mask_sum: f32 = mask.iter().sum();
+        let mask_sum: f32 = ti.mask.iter().sum();
         let denom = ((shape.valid_positions as f32) * mask_sum
                      * shape.h as f32).max(1.0);
+        let rnn = ti.rnn_view();
 
-        // ---- batch-parallel forward + backward ----
-        let w = shape.s_total();
-        let mut rnn_grads = RnnGrads::zeros(shape);
+        let mut stp = self.step.lock().unwrap();
+        {
+            let st = &mut *stp;
+            st.rnn_grads.reset(shape);
+            model::set_zeroed(&mut st.d_alpha, b);
+            model::set_zeroed(&mut st.d_gamma, b);
+            model::set_zeroed(&mut st.d_gamma2, b);
+            model::set_zeroed(&mut st.d_log_s, b * w);
+        }
         let mut loss = 0.0f64;
-        let mut d_alpha = vec![0.0f32; b];
-        let mut d_gamma = vec![0.0f32; b];
-        let mut d_gamma2 = vec![0.0f32; b];
-        let mut d_log_s = vec![0.0f32; b * w];
         if self.mode == ComputeMode::Lanes {
-            // Lane path: marshal into SoA groups, thread over groups;
-            // each worker advances LANES series per kernel step.
-            struct GroupChunk {
-                loss_num: f64,
-                rnn_grads: RnnGrads,
-                lane_grads: Vec<(usize, usize, lanes::SeriesGradsLanes)>,
+            // Lane path: marshal into SoA groups, chunk over groups; each
+            // worker advances LANES series per kernel step. Chunk ci
+            // covers groups [lo, hi) = batch slots [lo*LANES,
+            // min(hi*LANES, b)); its gradient buffers are chunk-local at
+            // that offset.
+            {
+                let st = &mut *stp;
+                lanes::marshal_groups_into(
+                    &mut st.groups, shape, b, ti.y, ti.cat, Some(ti.mask),
+                    ti.alpha_logit, ti.gamma_logit, ti.gamma2_logit,
+                    ti.log_s);
+                chunks_into(st.groups.len(), self.threads, &mut st.ranges);
+                while st.chunk_outs.len() < st.ranges.len() {
+                    st.chunk_outs.push(Mutex::new(ChunkOut::default()));
+                }
+                for (ci, &(lo, hi)) in st.ranges.iter().enumerate() {
+                    let mut co = st.chunk_outs[ci].lock().unwrap();
+                    co.loss = 0.0;
+                    co.rnn_grads.reset(shape);
+                    let n = (hi * LANES).min(b) - lo * LANES;
+                    // Zero-REQUIRED: masked/padded series must
+                    // contribute exact-zero gradients without writing.
+                    model::set_zeroed(&mut co.d_alpha, n);
+                    model::set_zeroed(&mut co.d_gamma, n);
+                    model::set_zeroed(&mut co.d_gamma2, n);
+                    model::set_zeroed(&mut co.d_log_s, n * w);
+                }
             }
-            let groups = lanes::marshal_groups(
-                shape, b, y, cat, Some(mask), series.alpha_logit,
-                series.gamma_logit, series.gamma2_logit, series.log_s_init);
-            let ranges = chunks(groups.len(), self.threads);
-            let mut chunks_out: Vec<(usize, GroupChunk)> =
-                Vec::with_capacity(ranges.len());
-            std::thread::scope(|sc| {
-                let groups = &groups;
-                let mut handles = Vec::with_capacity(ranges.len());
-                for &(lo, hi) in &ranges {
-                    let handle = sc.spawn(move || {
-                        let mut acc = GroupChunk {
-                            loss_num: 0.0,
-                            rnn_grads: RnnGrads::zeros(shape),
-                            lane_grads: Vec::with_capacity(hi - lo),
-                        };
-                        for grp in &groups[lo..hi] {
-                            if grp.mask.0.iter().all(|v| *v == 0.0) {
-                                // Entirely padded group: zero loss and
-                                // gradients by construction.
-                                acc.lane_grads.push((
-                                    grp.start, grp.fill,
-                                    lanes::SeriesGradsLanes::zeros(w)));
-                                continue;
-                            }
-                            let fwd = lanes::forward_lanes(shape, grp, &rnn,
-                                                           true);
-                            let (loss_num, dout, dz) =
-                                lanes::pinball_seeds_lanes(
-                                    shape, &fwd, tau, grp.mask, denom);
-                            acc.loss_num += loss_num;
-                            let sg = lanes::backward_lanes(
-                                shape, grp, &rnn, &fwd, &dout, &dz,
-                                &mut acc.rnn_grads);
-                            acc.lane_grads.push((grp.start, grp.fill, sg));
-                        }
-                        acc
-                    });
-                    handles.push((lo, handle));
-                }
-                for (lo, handle) in handles {
-                    chunks_out.push(
-                        (lo, handle.join().expect("train worker panicked")));
-                }
-            });
-            chunks_out.sort_by_key(|(lo, _)| *lo);
-            for (_, chunk) in &chunks_out {
-                rnn_grads.merge(&chunk.rnn_grads);
-                loss += chunk.loss_num;
-                for (start, fill, sg) in &chunk.lane_grads {
+            let n_chunks = stp.ranges.len();
+            let stv: &StepScratch = &*stp;
+            let task = |ci: usize, pid: usize| {
+                let (lo, hi) = stv.ranges[ci];
+                let mut scr = self.worker_scratch[pid].lock().unwrap();
+                let mut co = stv.chunk_outs[ci].lock().unwrap();
+                let co = &mut *co;
+                let slot_lo = lo * LANES;
+                for gi in lo..hi {
+                    let grp = &stv.groups[gi];
+                    if grp.mask.0.iter().all(|v| *v == 0.0) {
+                        // Entirely padded group: the pre-zeroed buffers
+                        // already hold the exact-zero contribution.
+                        continue;
+                    }
+                    scr.lane.forward(shape, grp, &rnn, true);
+                    co.loss += scr.lane.pinball(shape, tau, grp.mask, denom);
+                    scr.lane.backward(shape, grp, &rnn, &mut co.rnn_grads);
                     // De-marshal lane l → batch slot start + l (padding
                     // and masked lanes hold exact zeros).
-                    for l in 0..*fill {
-                        let i = start + l;
-                        d_alpha[i] = sg.alpha_logit.0[l];
-                        d_gamma[i] = sg.gamma_logit.0[l];
-                        d_gamma2[i] = sg.gamma2_logit.0[l];
+                    let sg = &scr.lane.sg;
+                    for l in 0..grp.fill {
+                        let i = grp.start + l - slot_lo;
+                        co.d_alpha[i] = sg.alpha_logit.0[l];
+                        co.d_gamma[i] = sg.gamma_logit.0[l];
+                        co.d_gamma2[i] = sg.gamma2_logit.0[l];
                         for k in 0..w {
-                            d_log_s[i * w + k] = sg.log_s_init[k * LANES + l];
+                            co.d_log_s[i * w + k] =
+                                sg.log_s_init[k * LANES + l];
                         }
                     }
                 }
+            };
+            self.pool.run(n_chunks, &task);
+            // Merge in ascending chunk order — fixed f32 association for
+            // a given thread count regardless of completion order.
+            let st = &mut *stp;
+            for (ci, &(lo, hi)) in st.ranges.iter().enumerate() {
+                let co = st.chunk_outs[ci].get_mut().unwrap();
+                loss += co.loss;
+                st.rnn_grads.merge(&co.rnn_grads);
+                let (slot_lo, slot_hi) = (lo * LANES, (hi * LANES).min(b));
+                let n = slot_hi - slot_lo;
+                st.d_alpha[slot_lo..slot_hi]
+                    .copy_from_slice(&co.d_alpha[..n]);
+                st.d_gamma[slot_lo..slot_hi]
+                    .copy_from_slice(&co.d_gamma[..n]);
+                st.d_gamma2[slot_lo..slot_hi]
+                    .copy_from_slice(&co.d_gamma2[..n]);
+                st.d_log_s[slot_lo * w..slot_hi * w]
+                    .copy_from_slice(&co.d_log_s[..n * w]);
             }
         } else {
-            struct Chunk {
-                loss_num: f64,
-                rnn_grads: RnnGrads,
-                series_grads: Vec<SeriesGrads>,
+            // Scalar oracle path: chunk directly over batch slots. The
+            // per-series kernels (`pinball_seeds`, `backward_series`)
+            // intentionally keep their original allocating signatures —
+            // this is the reference path the lane kernels are
+            // property-tested against, not the steady-state hot path.
+            let c = shape.c;
+            {
+                let st = &mut *stp;
+                st.groups.clear();
+                chunks_into(b, self.threads, &mut st.ranges);
+                while st.chunk_outs.len() < st.ranges.len() {
+                    st.chunk_outs.push(Mutex::new(ChunkOut::default()));
+                }
+                for (ci, &(lo, hi)) in st.ranges.iter().enumerate() {
+                    let mut co = st.chunk_outs[ci].lock().unwrap();
+                    co.loss = 0.0;
+                    co.rnn_grads.reset(shape);
+                    let n = hi - lo;
+                    model::set_zeroed(&mut co.d_alpha, n);
+                    model::set_zeroed(&mut co.d_gamma, n);
+                    model::set_zeroed(&mut co.d_gamma2, n);
+                    model::set_zeroed(&mut co.d_log_s, n * w);
+                }
             }
-            let ranges = chunks(b, self.threads);
-            let mut chunks_out: Vec<(usize, Chunk)> =
-                Vec::with_capacity(ranges.len());
-            std::thread::scope(|sc| {
-                let mut handles = Vec::with_capacity(ranges.len());
-                for &(lo, hi) in &ranges {
-                    let series = &series;
-                    let handle = sc.spawn(move || {
-                        let mut acc = Chunk {
-                            loss_num: 0.0,
-                            rnn_grads: RnnGrads::zeros(shape),
-                            series_grads: Vec::with_capacity(hi - lo),
-                        };
-                        for i in lo..hi {
-                            if mask[i] == 0.0 {
-                                // Padded slot: zero loss and gradient by
-                                // construction (the scatter drops the update
-                                // anyway), so skip its forward entirely.
-                                acc.series_grads
-                                    .push(SeriesGrads::zeros(shape.s_total()));
-                                continue;
-                            }
-                            let yi = &y[i * c..(i + 1) * c];
-                            let fwd = model::forward_series(
-                                shape, yi, &cat[i * 6..(i + 1) * 6], &rnn,
-                                series.hw(i), true);
-                            let (loss_num, dout, dz) = model::pinball_seeds(
-                                shape, &fwd, tau, mask[i], denom);
-                            acc.loss_num += loss_num;
-                            acc.series_grads.push(model::backward_series(
-                                shape, yi, &rnn, &fwd, &dout, &dz,
-                                &mut acc.rnn_grads));
-                        }
-                        acc
-                    });
-                    handles.push((lo, handle));
-                }
-                for (lo, handle) in handles {
-                    chunks_out.push(
-                        (lo, handle.join().expect("train worker panicked")));
-                }
-            });
-            chunks_out.sort_by_key(|(lo, _)| *lo);
-            for (lo, chunk) in &chunks_out {
-                rnn_grads.merge(&chunk.rnn_grads);
-                loss += chunk.loss_num;
-                for (off, sg) in chunk.series_grads.iter().enumerate() {
-                    let i = lo + off;
-                    d_alpha[i] = sg.alpha_logit;
-                    d_gamma[i] = sg.gamma_logit;
-                    d_gamma2[i] = sg.gamma2_logit;
-                    d_log_s[i * w..(i + 1) * w]
+            let n_chunks = stp.ranges.len();
+            let stv: &StepScratch = &*stp;
+            let task = |ci: usize, pid: usize| {
+                let (lo, hi) = stv.ranges[ci];
+                let mut scr = self.worker_scratch[pid].lock().unwrap();
+                let mut co = stv.chunk_outs[ci].lock().unwrap();
+                let co = &mut *co;
+                for i in lo..hi {
+                    if ti.mask[i] == 0.0 {
+                        // Padded slot: zero loss and gradient by
+                        // construction, so skip its forward entirely.
+                        continue;
+                    }
+                    let yi = &ti.y[i * c..(i + 1) * c];
+                    scr.scalar.forward(shape, yi,
+                                       &ti.cat[i * 6..(i + 1) * 6], &rnn,
+                                       ti.hw(i, w), true);
+                    let (loss_num, dout, dz) = model::pinball_seeds(
+                        shape, &scr.scalar.fwd, tau, ti.mask[i], denom);
+                    co.loss += loss_num;
+                    let sg = model::backward_series(
+                        shape, yi, &rnn, &scr.scalar.fwd, &dout, &dz,
+                        &mut co.rnn_grads);
+                    let o = i - lo;
+                    co.d_alpha[o] = sg.alpha_logit;
+                    co.d_gamma[o] = sg.gamma_logit;
+                    co.d_gamma2[o] = sg.gamma2_logit;
+                    co.d_log_s[o * w..(o + 1) * w]
                         .copy_from_slice(&sg.log_s_init);
                 }
+            };
+            self.pool.run(n_chunks, &task);
+            let st = &mut *stp;
+            for (ci, &(lo, hi)) in st.ranges.iter().enumerate() {
+                let co = st.chunk_outs[ci].get_mut().unwrap();
+                loss += co.loss;
+                st.rnn_grads.merge(&co.rnn_grads);
+                let n = hi - lo;
+                st.d_alpha[lo..hi].copy_from_slice(&co.d_alpha[..n]);
+                st.d_gamma[lo..hi].copy_from_slice(&co.d_gamma[..n]);
+                st.d_gamma2[lo..hi].copy_from_slice(&co.d_gamma2[..n]);
+                st.d_log_s[lo * w..hi * w]
+                    .copy_from_slice(&co.d_log_s[..n * w]);
             }
         }
         let loss = (loss / denom as f64) as f32;
+        Ok((loss, stp))
+    }
 
-        // ---- gradient table keyed by parameter leaf name ----
-        let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
-        for (i, (gw, gb)) in rnn_grads.cells.iter().enumerate() {
-            grads.insert(format!("rnn.cells.{i}.w"), gw.clone());
-            grads.insert(format!("rnn.cells.{i}.b"), gb.clone());
-        }
-        grads.insert("rnn.dense_w".into(), rnn_grads.dense_w);
-        grads.insert("rnn.dense_b".into(), rnn_grads.dense_b);
-        grads.insert("rnn.out_w".into(), rnn_grads.out_w);
-        grads.insert("rnn.out_b".into(), rnn_grads.out_b);
-        grads.insert("series.alpha_logit".into(), d_alpha);
-        grads.insert("series.gamma_logit".into(), d_gamma);
-        grads.insert("series.gamma2_logit".into(), d_gamma2);
-        grads.insert("series.log_s_init".into(), d_log_s);
+    fn run_train_step(&self, name: &str, spec: &ProgramSpec, shape: &Shape,
+                      inputs: &HashMap<&str, &HostTensor>)
+                      -> Result<Vec<(String, HostTensor)>> {
+        let cache = self.program_cache(name, spec)?;
+        let b = spec.batch;
+        let ti = self.resolve_inputs(spec, inputs, b, shape, true)?;
+        let (lr, step_old) = (ti.lr, ti.step_old);
+        let (loss, st) = self.train_grads(shape, &ti, b, self.manifest.tau)?;
 
-        // ---- Adam (model.py::_adam_update) ----
+        // ---- Adam (model.py::_adam_update) on fresh output copies ----
         let step_new = step_old + 1.0;
         let bc1 = 1.0 - model::ADAM_B1.powf(step_new);
         let bc2 = 1.0 - model::ADAM_B2.powf(step_new);
-        let mut out_map: HashMap<String, HostTensor> = HashMap::new();
-        out_map.insert("loss".into(), HostTensor::scalar(loss));
-        out_map.insert("opt.step".into(), HostTensor::scalar(step_new));
-        for ospec in &spec.outputs {
-            let Some(leaf) = ospec.name.strip_prefix("params.") else {
-                continue;
-            };
-            let g = grads
-                .get(leaf)
-                .ok_or_else(|| anyhow!("no gradient for `{leaf}`"))?;
-            let mut p = get_data(inputs, &ospec.name)?.to_vec();
-            let mut m = get_data(inputs, &format!("opt.m.{leaf}"))?.to_vec();
-            let mut v = get_data(inputs, &format!("opt.v.{leaf}"))?.to_vec();
-            let mult = if leaf.starts_with("series.") {
-                self.manifest.per_series_lr_mult
-            } else {
-                1.0
-            };
+        let mut ps = Vec::with_capacity(cache.adam.len());
+        let mut ms = Vec::with_capacity(cache.adam.len());
+        let mut vs = Vec::with_capacity(cache.adam.len());
+        for leaf in &cache.adam {
+            let g = grad_slice(&leaf.key, &st);
+            let mut p = get_data(inputs, &leaf.pname)?.to_vec();
+            let mut m = get_data(inputs, &leaf.mname)?.to_vec();
+            let mut v = get_data(inputs, &leaf.vname)?.to_vec();
             // Same operation sequence per element either way (the lane
             // update is bit-identical to the scalar one).
             match self.mode {
                 ComputeMode::Lanes => lanes::adam_update_lanes(
-                    &mut p, g, &mut m, &mut v, lr, mult, bc1, bc2),
+                    &mut p, g, &mut m, &mut v, lr, leaf.mult, bc1, bc2),
                 ComputeMode::Scalar => model::adam_update(
-                    &mut p, g, &mut m, &mut v, lr, mult, bc1, bc2),
+                    &mut p, g, &mut m, &mut v, lr, leaf.mult, bc1, bc2),
             }
-            out_map.insert(ospec.name.clone(),
-                           HostTensor::new(ospec.shape.clone(), p)?);
-            out_map.insert(format!("opt.m.{leaf}"),
-                           HostTensor::new(ospec.shape.clone(), m)?);
-            out_map.insert(format!("opt.v.{leaf}"),
-                           HostTensor::new(ospec.shape.clone(), v)?);
+            ps.push(Some(p));
+            ms.push(Some(m));
+            vs.push(Some(v));
         }
+        drop(st);
 
-        spec.outputs
-            .iter()
-            .map(|ospec| {
-                out_map
-                    .remove(&ospec.name)
-                    .map(|t| (ospec.name.clone(), t))
-                    .ok_or_else(|| anyhow!("missing output `{}`", ospec.name))
-            })
-            .collect()
+        // ---- emit in spec output order via the cached plan ----
+        let taken = |slot: &mut Option<Vec<f32>>, name: &str|
+                     -> Result<Vec<f32>> {
+            slot.take()
+                .ok_or_else(|| anyhow!("output `{name}` routed twice"))
+        };
+        let mut out = Vec::with_capacity(spec.outputs.len());
+        for (slot, ospec) in cache.out_plan.iter().zip(&spec.outputs) {
+            let tensor = match slot {
+                OutSlot::Loss => HostTensor::scalar(loss),
+                OutSlot::Step => HostTensor::scalar(step_new),
+                OutSlot::Param(i) => HostTensor::new(
+                    cache.adam[*i].shape.clone(),
+                    taken(&mut ps[*i], &ospec.name)?)?,
+                OutSlot::M(i) => HostTensor::new(
+                    cache.adam[*i].shape.clone(),
+                    taken(&mut ms[*i], &ospec.name)?)?,
+                OutSlot::V(i) => HostTensor::new(
+                    cache.adam[*i].shape.clone(),
+                    taken(&mut vs[*i], &ospec.name)?)?,
+            };
+            out.push((ospec.name.clone(), tensor));
+        }
+        Ok(out)
+    }
+
+    /// Steady-state training entry point: one train step of program
+    /// `name`, reading the batch from `data` and updating parameters,
+    /// Adam moments and `opt.step` **in place** inside the caller-owned
+    /// `state` map. Numerically identical to executing the same program
+    /// through [`Backend::execute_named`] and writing the outputs back —
+    /// but after [`STEADY_WARMUP`] executions have grown the arenas,
+    /// each call performs zero heap allocations and zero thread spawns
+    /// (gated by `rust/tests/steady_state.rs` and BENCH_6). Returns the
+    /// step's pinball loss.
+    pub fn train_step_inplace(&self, name: &str,
+                              data: &HashMap<String, HostTensor>,
+                              state: &mut HashMap<String, HostTensor>)
+                              -> Result<f32> {
+        let spec = self.manifest.program(name)?;
+        if spec.kind != "train_step" {
+            bail!("`{name}` is a {} program, not train_step", spec.kind);
+        }
+        let a0 = crate::util::allocmeter::allocations();
+        let t0 = Instant::now();
+        let shape = self.shape_for(&spec.freq)?;
+        let cache = self.program_cache(name, spec)?;
+        let b = spec.batch;
+
+        let mut ti = TrainInputs::empty();
+        for ispec in &spec.inputs {
+            let t = data
+                .get(&ispec.name)
+                .or_else(|| state.get(&ispec.name))
+                .ok_or_else(|| anyhow!("missing input `{}`", ispec.name))?;
+            if t.shape != ispec.shape {
+                bail!("tensor `{}`: host shape {:?} != manifest shape {:?}",
+                      ispec.name, t.shape, ispec.shape);
+            }
+            ti.assign(&ispec.name, t)?;
+        }
+        ti.validate(shape, b, true)?;
+        let (lr, step_old) = (ti.lr, ti.step_old);
+        let (loss, st) = self.train_grads(shape, &ti, b, self.manifest.tau)?;
+        // The input view borrows `state`; release it before mutating.
+        drop(ti);
+
+        // ---- Adam in place: each leaf's tensors leave the map, update
+        // against the pooled gradients, and return — the key Strings and
+        // map capacity are moved back, so no allocation happens. ----
+        let step_new = step_old + 1.0;
+        let bc1 = 1.0 - model::ADAM_B1.powf(step_new);
+        let bc2 = 1.0 - model::ADAM_B2.powf(step_new);
+        for leaf in &cache.adam {
+            let g = grad_slice(&leaf.key, &st);
+            let (pk, mut pt) = state
+                .remove_entry(leaf.pname.as_str())
+                .ok_or_else(|| anyhow!("state missing `{}`", leaf.pname))?;
+            let (mk, mut mt) = state
+                .remove_entry(leaf.mname.as_str())
+                .ok_or_else(|| anyhow!("state missing `{}`", leaf.mname))?;
+            let (vk, mut vt) = state
+                .remove_entry(leaf.vname.as_str())
+                .ok_or_else(|| anyhow!("state missing `{}`", leaf.vname))?;
+            match self.mode {
+                ComputeMode::Lanes => lanes::adam_update_lanes(
+                    &mut pt.data, g, &mut mt.data, &mut vt.data, lr,
+                    leaf.mult, bc1, bc2),
+                ComputeMode::Scalar => model::adam_update(
+                    &mut pt.data, g, &mut mt.data, &mut vt.data, lr,
+                    leaf.mult, bc1, bc2),
+            }
+            state.insert(pk, pt);
+            state.insert(mk, mt);
+            state.insert(vk, vt);
+        }
+        drop(st);
+        state
+            .get_mut("opt.step")
+            .ok_or_else(|| anyhow!("state missing `opt.step`"))?
+            .data[0] = step_new;
+
+        let elapsed = t0.elapsed().as_secs_f64();
+        let allocs = crate::util::allocmeter::allocations()
+            .saturating_sub(a0);
+        let mut bs = self.stats.lock().unwrap();
+        // Warmup check precedes the increment: execution 0..STEADY_WARMUP
+        // may grow arenas without charging the steady-state counter.
+        let warm = bs.executions >= STEADY_WARMUP;
+        bs.executions += 1;
+        bs.execute_secs += elapsed;
+        if warm {
+            bs.steady_allocs += allocs;
+        }
+        Ok(loss)
     }
 }
 
@@ -990,12 +1574,49 @@ mod tests {
 
     #[test]
     fn chunks_partition_exactly() {
-        assert_eq!(chunks(10, 3), vec![(0, 4), (4, 8), (8, 10)]);
+        // Quotient/remainder split: the remainder spreads one element
+        // each over the leading chunks.
+        assert_eq!(chunks(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
         assert_eq!(chunks(2, 8), vec![(0, 1), (1, 2)]);
         assert_eq!(chunks(1, 1), vec![(0, 1)]);
+        // The case the old div_ceil split got wrong: 9 items on 8
+        // threads must fill all 8 chunks, not 5.
+        assert_eq!(chunks(9, 8).len(), 8);
         let parts = chunks(257, 16);
+        assert_eq!(parts.len(), 16);
         assert_eq!(parts.iter().map(|(lo, hi)| hi - lo).sum::<usize>(), 257);
         assert_eq!(parts.first().unwrap().0, 0);
         assert_eq!(parts.last().unwrap().1, 257);
+    }
+
+    #[test]
+    fn chunks_grid_is_balanced_ordered_and_exact() {
+        for n in 0..=40usize {
+            for t in 1..=10usize {
+                let parts = chunks(n, t);
+                if n == 0 {
+                    assert!(parts.is_empty(), "chunks(0, {t}) not empty");
+                    continue;
+                }
+                // Exactly min(n, t) chunks — the thread budget is never
+                // under-filled.
+                assert_eq!(parts.len(), n.min(t), "chunks({n}, {t}) count");
+                // Contiguous ordered partition of 0..n.
+                let mut expect_lo = 0;
+                for &(lo, hi) in &parts {
+                    assert_eq!(lo, expect_lo, "chunks({n}, {t}) gap at {lo}");
+                    assert!(hi > lo, "chunks({n}, {t}) empty chunk");
+                    expect_lo = hi;
+                }
+                assert_eq!(expect_lo, n, "chunks({n}, {t}) doesn't end at n");
+                // Near-equal: sizes differ by at most one.
+                let sizes: Vec<usize> =
+                    parts.iter().map(|(lo, hi)| hi - lo).collect();
+                let (min, max) = (sizes.iter().min().unwrap(),
+                                  sizes.iter().max().unwrap());
+                assert!(max - min <= 1,
+                        "chunks({n}, {t}) imbalance: {sizes:?}");
+            }
+        }
     }
 }

@@ -34,6 +34,57 @@ pub const ADAM_EPS: f32 = 1e-8;
 /// Shared with the lane-vectorized kernels in [`super::lanes`].
 pub(crate) const EPS: f32 = 1e-8;
 
+// ---- buffer-reuse helpers (shared with `super::lanes`) ----
+//
+// The distinction between these is load-bearing for the zero-allocation
+// arenas. `set_len` keeps stale contents and is only sound for buffers
+// where every read is preceded by a store at the same index this call;
+// `set_zeroed` is for accumulators and sparse-write buffers where stale
+// data from a previous step would leak into the numerics. Each call site
+// in this module and in `super::lanes` picked one of the two based on an
+// audit of the buffer's read/write pattern (see DESIGN.md §Steady-state
+// memory & thread reuse).
+
+/// Resize without clearing: grows with zeros, keeps existing (stale)
+/// prefix. Only for fully-overwritten buffers.
+pub(crate) fn set_len(v: &mut Vec<f32>, n: usize) {
+    v.resize(n, 0.0);
+}
+
+/// Clear and refill with zeros (accumulators, sparse writes).
+pub(crate) fn set_zeroed(v: &mut Vec<f32>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
+}
+
+/// Clear and refill with `val` (e.g. padding-lane `y ≡ 1.0`).
+pub(crate) fn set_filled(v: &mut Vec<f32>, n: usize, val: f32) {
+    v.clear();
+    v.resize(n, val);
+}
+
+/// Reset per-layer ring buffers to `dims[i] * inner` zeros each. Grows the
+/// outer vec but never shrinks it, so a worker alternating between
+/// frequencies with different layer counts keeps every ring's capacity;
+/// rings past `dims.len()` are simply unused.
+pub(crate) fn ring_reset(rings: &mut Vec<Vec<f32>>, dims: &[usize],
+                         inner: usize) {
+    while rings.len() < dims.len() {
+        rings.push(Vec::new());
+    }
+    for (r, &d) in rings.iter_mut().zip(dims) {
+        r.clear();
+        r.resize(d * inner, 0.0);
+    }
+}
+
+/// Clear and refill with `true` (the log-clamp OK flags default to true
+/// and are flipped to false where the clamp fires).
+pub(crate) fn refill_bool(v: &mut Vec<bool>, n: usize) {
+    v.clear();
+    v.resize(n, true);
+}
+
 /// Static shape of one frequency's compute graph.
 #[derive(Debug, Clone)]
 pub struct Shape {
@@ -129,20 +180,53 @@ pub struct RnnGrads {
 }
 
 impl RnnGrads {
-    pub fn zeros(shape: &Shape) -> Self {
-        let hid = shape.hidden;
-        let cells = shape
-            .layer_din
-            .iter()
-            .map(|&din| (vec![0.0; (din + hid) * 4 * hid], vec![0.0; 4 * hid]))
-            .collect();
+    /// Unsized accumulator; call [`RnnGrads::reset`] before use.
+    pub fn empty() -> Self {
         Self {
-            cells,
-            dense_w: vec![0.0; hid * hid],
-            dense_b: vec![0.0; hid],
-            out_w: vec![0.0; hid * shape.h],
-            out_b: vec![0.0; shape.h],
+            cells: Vec::new(),
+            dense_w: Vec::new(),
+            dense_b: Vec::new(),
+            out_w: Vec::new(),
+            out_b: Vec::new(),
         }
+    }
+
+    /// Size for `shape` and zero every leaf, reusing existing capacity.
+    /// The outer `cells` vec only grows (a worker alternating between
+    /// frequencies keeps each layer's capacity); layers past the current
+    /// shape's count are stale and never read — every consumer indexes by
+    /// the current shape's layers.
+    pub fn reset(&mut self, shape: &Shape) {
+        let hid = shape.hidden;
+        while self.cells.len() < shape.n_layers() {
+            self.cells.push((Vec::new(), Vec::new()));
+        }
+        for (li, &din) in shape.layer_din.iter().enumerate() {
+            let (gw, gb) = &mut self.cells[li];
+            set_zeroed(gw, (din + hid) * 4 * hid);
+            set_zeroed(gb, 4 * hid);
+        }
+        set_zeroed(&mut self.dense_w, hid * hid);
+        set_zeroed(&mut self.dense_b, hid);
+        set_zeroed(&mut self.out_w, hid * shape.h);
+        set_zeroed(&mut self.out_b, shape.h);
+    }
+
+    pub fn zeros(shape: &Shape) -> Self {
+        let mut g = Self::empty();
+        g.reset(shape);
+        g
+    }
+
+    /// Retained heap footprint (for `BackendStats::scratch_bytes`).
+    pub fn bytes(&self) -> u64 {
+        let cells: usize = self
+            .cells
+            .iter()
+            .map(|(w, b)| w.capacity() + b.capacity())
+            .sum();
+        4 * (cells + self.dense_w.capacity() + self.dense_b.capacity()
+             + self.out_w.capacity() + self.out_b.capacity()) as u64
     }
 
     pub fn merge(&mut self, other: &RnnGrads) {
@@ -159,6 +243,12 @@ impl RnnGrads {
         add(&mut self.dense_b, &other.dense_b);
         add(&mut self.out_w, &other.out_w);
         add(&mut self.out_b, &other.out_b);
+    }
+}
+
+impl Default for RnnGrads {
+    fn default() -> Self {
+        Self::empty()
     }
 }
 
@@ -236,6 +326,59 @@ pub struct Forward {
     din_max: usize,
 }
 
+impl Forward {
+    /// Unsized tape; populated by [`ScalarScratch::forward`].
+    pub fn empty() -> Self {
+        Self {
+            levels: Vec::new(),
+            seas: Vec::new(),
+            seas2: Vec::new(),
+            seas_ext: Vec::new(),
+            alpha: 0.0,
+            gamma: 0.0,
+            gamma2: 0.0,
+            s_init: Vec::new(),
+            s2_init: Vec::new(),
+            x: Vec::new(),
+            z: Vec::new(),
+            x_ok: Vec::new(),
+            z_ok: Vec::new(),
+            out: Vec::new(),
+            x_in: Vec::new(),
+            h_prev: Vec::new(),
+            c_prev: Vec::new(),
+            si: Vec::new(),
+            sf: Vec::new(),
+            tg: Vec::new(),
+            so: Vec::new(),
+            tanh_c: Vec::new(),
+            h_seq: Vec::new(),
+            act: Vec::new(),
+            din_max: 0,
+        }
+    }
+
+    /// Retained heap footprint (for `BackendStats::scratch_bytes`).
+    pub fn bytes(&self) -> u64 {
+        let f32s = self.levels.capacity() + self.seas.capacity()
+            + self.seas2.capacity() + self.seas_ext.capacity()
+            + self.s_init.capacity() + self.s2_init.capacity()
+            + self.x.capacity() + self.z.capacity() + self.out.capacity()
+            + self.x_in.capacity() + self.h_prev.capacity()
+            + self.c_prev.capacity() + self.si.capacity()
+            + self.sf.capacity() + self.tg.capacity() + self.so.capacity()
+            + self.tanh_c.capacity() + self.h_seq.capacity()
+            + self.act.capacity();
+        (4 * f32s + self.x_ok.capacity() + self.z_ok.capacity()) as u64
+    }
+}
+
+impl Default for Forward {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
@@ -289,201 +432,281 @@ fn mat_t_vec(w: &[f32], dz: &[f32], row_offset: usize, rows: usize,
 /// packed `[S1 | S2]` seasonality block).
 pub fn forward_series(shape: &Shape, y: &[f32], cat: &[f32], rnn: &RnnView,
                       hwp: HwView, want_targets: bool) -> Forward {
-    let (c, s, h, in_w, p_n) = (shape.c, shape.s, shape.h, shape.in_w, shape.p);
-    let s2 = shape.s2;
-    let dual = shape.dual();
-    let hid = shape.hidden;
-    let n_l = shape.n_layers();
-    let din_max = shape.din0.max(hid);
+    let mut scratch = ScalarScratch::new();
+    scratch.forward(shape, y, cat, rnn, hwp, want_targets);
+    scratch.fwd
+}
 
-    let alpha = sigmoid(hwp.alpha_logit);
-    let (gamma, s_init): (f32, Vec<f32>) = if shape.seasonal {
-        (sigmoid(hwp.gamma_logit),
-         hwp.log_s_init[..s].iter().map(|v| v.exp()).collect())
-    } else {
-        (0.0, vec![1.0; s])
-    };
-    let (gamma2, s2_init): (f32, Vec<f32>) = if dual {
-        (sigmoid(hwp.gamma2_logit),
-         hwp.log_s_init[s..s + s2].iter().map(|v| v.exp()).collect())
-    } else {
-        (0.0, Vec::new())
-    };
+/// Reusable per-worker arena for the scalar path: owns a [`Forward`] tape
+/// plus every temporary [`forward_series`] needs, so a warm worker runs
+/// the whole forward pass without touching the heap. Buffers are grown on
+/// first use (or on a shape change) and reused thereafter; the numeric
+/// sequence is identical to the fresh-allocation path.
+#[derive(Default)]
+pub struct ScalarScratch {
+    /// The forward tape, readable after [`ScalarScratch::forward`].
+    pub fwd: Forward,
+    h_ring: Vec<Vec<f32>>,
+    c_ring: Vec<Vec<f32>>,
+    feat: Vec<f32>,
+    zbuf: Vec<f32>,
+    h_in: Vec<f32>,
+    block_in: Vec<f32>,
+    pre: Vec<f32>,
+    obuf: Vec<f32>,
+}
 
-    // 1. ES recurrence — the pure-Rust Holt-Winters mirror IS the kernel
-    //    (coupled dual recurrence for §8.2 configs).
-    let (levels, seas, seas2) = if dual {
-        hw::es_dual_filter(y, alpha, gamma, gamma2, &s_init, &s2_init)
-    } else {
-        let es = hw::es_filter(y, alpha, gamma, &s_init);
-        (es.levels, es.seas, Vec::new())
-    };
-
-    // 2. Seasonality extension past C: tile each component's final period
-    //    (§3.4); dual configs multiply the two tracks (Gould et al. 2008).
-    let mut seas_ext = Vec::with_capacity(c + h);
-    if dual {
-        for t in 0..c {
-            seas_ext.push(seas[t] * seas2[t]);
-        }
-        for k in 0..h {
-            seas_ext.push(seas[c + (k % s)] * seas2[c + (k % s2)]);
-        }
-    } else {
-        seas_ext.extend_from_slice(&seas[..c]);
-        for k in 0..h {
-            seas_ext.push(seas[c + (k % s)]);
-        }
+impl ScalarScratch {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    // 3. Windows: log-normalized inputs and (optionally) targets (Fig. 2).
-    let mut x = vec![0.0f32; p_n * in_w];
-    let mut x_ok = vec![true; p_n * in_w];
-    let (mut z, mut z_ok) = if want_targets {
-        (vec![0.0f32; p_n * h], vec![true; p_n * h])
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    for p in 0..p_n {
-        let lvl = levels[p + in_w - 1];
-        for j in 0..in_w {
-            let u = y[p + j] / (lvl * seas_ext[p + j]);
-            if u <= EPS {
-                x[p * in_w + j] = EPS.ln();
-                x_ok[p * in_w + j] = false;
+    /// [`forward_series`] against pooled storage; results land in
+    /// `self.fwd`. Buffers classified `set_len` are fully overwritten
+    /// below (or have every read bounded by a preceding store, like the
+    /// `din..din_max` tail of `x_in`); accumulator-like buffers use
+    /// `set_zeroed`/`refill_bool`.
+    pub fn forward(&mut self, shape: &Shape, y: &[f32], cat: &[f32],
+                   rnn: &RnnView, hwp: HwView, want_targets: bool) {
+        let (c, s, h, in_w, p_n) =
+            (shape.c, shape.s, shape.h, shape.in_w, shape.p);
+        let s2 = shape.s2;
+        let dual = shape.dual();
+        let hid = shape.hidden;
+        let n_l = shape.n_layers();
+        let din_max = shape.din0.max(hid);
+
+        let fwd = &mut self.fwd;
+        fwd.din_max = din_max;
+        fwd.alpha = sigmoid(hwp.alpha_logit);
+        if shape.seasonal {
+            fwd.gamma = sigmoid(hwp.gamma_logit);
+            fwd.s_init.clear();
+            fwd.s_init.extend(hwp.log_s_init[..s].iter().map(|v| v.exp()));
+        } else {
+            fwd.gamma = 0.0;
+            set_filled(&mut fwd.s_init, s, 1.0);
+        }
+        if dual {
+            fwd.gamma2 = sigmoid(hwp.gamma2_logit);
+            fwd.s2_init.clear();
+            fwd.s2_init
+                .extend(hwp.log_s_init[s..s + s2].iter().map(|v| v.exp()));
+        } else {
+            fwd.gamma2 = 0.0;
+            fwd.s2_init.clear();
+        }
+
+        // 1. ES recurrence — the pure-Rust Holt-Winters mirror IS the
+        //    kernel (coupled dual recurrence for §8.2 configs).
+        if dual {
+            hw::es_dual_filter_into(y, fwd.alpha, fwd.gamma, fwd.gamma2,
+                                    &fwd.s_init, &fwd.s2_init,
+                                    &mut fwd.levels, &mut fwd.seas,
+                                    &mut fwd.seas2);
+        } else {
+            hw::es_filter_into(y, fwd.alpha, fwd.gamma, &fwd.s_init,
+                               &mut fwd.levels, &mut fwd.seas);
+            fwd.seas2.clear();
+        }
+
+        // 2. Seasonality extension past C: tile each component's final
+        //    period (§3.4); dual configs multiply the two tracks (Gould
+        //    et al. 2008).
+        {
+            let Forward { seas, seas2, seas_ext, .. } = fwd;
+            seas_ext.clear();
+            seas_ext.reserve(c + h);
+            if dual {
+                for t in 0..c {
+                    seas_ext.push(seas[t] * seas2[t]);
+                }
+                for k in 0..h {
+                    seas_ext.push(seas[c + (k % s)] * seas2[c + (k % s2)]);
+                }
             } else {
-                x[p * in_w + j] = u.ln();
+                seas_ext.extend_from_slice(&seas[..c]);
+                for k in 0..h {
+                    seas_ext.push(seas[c + (k % s)]);
+                }
             }
         }
+
+        // 3. Windows: log-normalized inputs and (optionally) targets
+        //    (Fig. 2).
+        set_len(&mut fwd.x, p_n * in_w);
+        refill_bool(&mut fwd.x_ok, p_n * in_w);
         if want_targets {
-            for k in 0..h {
-                let ty = (p + in_w + k).min(c - 1);
-                let u = y[ty] / (lvl * seas_ext[p + in_w + k]);
-                if u <= EPS {
-                    z[p * h + k] = EPS.ln();
-                    z_ok[p * h + k] = false;
-                } else {
-                    z[p * h + k] = u.ln();
+            set_len(&mut fwd.z, p_n * h);
+            refill_bool(&mut fwd.z_ok, p_n * h);
+        } else {
+            fwd.z.clear();
+            fwd.z_ok.clear();
+        }
+        {
+            let Forward { levels, seas_ext, x, x_ok, z, z_ok, .. } = fwd;
+            for p in 0..p_n {
+                let lvl = levels[p + in_w - 1];
+                for j in 0..in_w {
+                    let u = y[p + j] / (lvl * seas_ext[p + j]);
+                    if u <= EPS {
+                        x[p * in_w + j] = EPS.ln();
+                        x_ok[p * in_w + j] = false;
+                    } else {
+                        x[p * in_w + j] = u.ln();
+                    }
+                }
+                if want_targets {
+                    for k in 0..h {
+                        let ty = (p + in_w + k).min(c - 1);
+                        let u = y[ty] / (lvl * seas_ext[p + in_w + k]);
+                        if u <= EPS {
+                            z[p * h + k] = EPS.ln();
+                            z_ok[p * h + k] = false;
+                        } else {
+                            z[p * h + k] = u.ln();
+                        }
+                    }
                 }
             }
+        }
+
+        // 4. Dilated-residual LSTM stack with per-layer ring buffers:
+        //    slot p % d holds the state from position p - d (Chang et
+        //    al.). Rings must start zeroed — the first `d` positions read
+        //    the zero state.
+        ring_reset(&mut self.h_ring, &shape.flat, hid);
+        ring_reset(&mut self.c_ring, &shape.flat, hid);
+
+        let tape_len = p_n * n_l * hid;
+        set_len(&mut fwd.out, p_n * h);
+        set_len(&mut fwd.x_in, p_n * n_l * din_max);
+        set_len(&mut fwd.h_prev, tape_len);
+        set_len(&mut fwd.c_prev, tape_len);
+        set_len(&mut fwd.si, tape_len);
+        set_len(&mut fwd.sf, tape_len);
+        set_len(&mut fwd.tg, tape_len);
+        set_len(&mut fwd.so, tape_len);
+        set_len(&mut fwd.tanh_c, tape_len);
+        set_len(&mut fwd.h_seq, p_n * hid);
+        set_len(&mut fwd.act, p_n * hid);
+
+        set_len(&mut self.feat, shape.din0);
+        set_len(&mut self.zbuf, 4 * hid);
+        set_len(&mut self.h_in, din_max);
+        set_len(&mut self.block_in, din_max);
+        let feat = &mut self.feat;
+        let zbuf = &mut self.zbuf;
+        let h_in = &mut self.h_in;
+        let block_in = &mut self.block_in;
+        let h_ring = &mut self.h_ring;
+        let c_ring = &mut self.c_ring;
+        let pre = &mut self.pre;
+        let obuf = &mut self.obuf;
+        for p in 0..p_n {
+            feat[..in_w].copy_from_slice(&fwd.x[p * in_w..(p + 1) * in_w]);
+            feat[in_w..].copy_from_slice(cat);
+            let mut cur_dim = shape.din0;
+            h_in[..cur_dim].copy_from_slice(feat);
+
+            let mut li = 0usize;
+            for (bi, block) in shape.blocks.iter().enumerate() {
+                let block_dim = cur_dim;
+                block_in[..block_dim].copy_from_slice(&h_in[..block_dim]);
+                for &d in block {
+                    let slot = p % d;
+                    let din = shape.layer_din[li];
+                    let (w, b) = rnn.cells[li];
+                    let t = (p * n_l + li) * hid;
+                    let ti = (p * n_l + li) * din_max;
+                    fwd.x_in[ti..ti + din].copy_from_slice(&h_in[..din]);
+                    let h_prev = &h_ring[li][slot * hid..(slot + 1) * hid];
+                    let c_prev = &c_ring[li][slot * hid..(slot + 1) * hid];
+                    fwd.h_prev[t..t + hid].copy_from_slice(h_prev);
+                    fwd.c_prev[t..t + hid].copy_from_slice(c_prev);
+
+                    zbuf.copy_from_slice(b);
+                    vec_mat_acc(&h_in[..din], w, 0, 4 * hid, zbuf);
+                    vec_mat_acc(h_prev, w, din, 4 * hid, zbuf);
+
+                    // Gate order i, f, g, o; forget-gate bias +1.0
+                    // (ref.py).
+                    for k in 0..hid {
+                        let si = sigmoid(zbuf[k]);
+                        let sf = sigmoid(zbuf[hid + k] + 1.0);
+                        let tg = zbuf[2 * hid + k].tanh();
+                        let so = sigmoid(zbuf[3 * hid + k]);
+                        let c_new = sf * fwd.c_prev[t + k] + si * tg;
+                        let tanh_c = c_new.tanh();
+                        let h_new = so * tanh_c;
+                        fwd.si[t + k] = si;
+                        fwd.sf[t + k] = sf;
+                        fwd.tg[t + k] = tg;
+                        fwd.so[t + k] = so;
+                        fwd.tanh_c[t + k] = tanh_c;
+                        h_ring[li][slot * hid + k] = h_new;
+                        c_ring[li][slot * hid + k] = c_new;
+                        h_in[k] = h_new;
+                    }
+                    cur_dim = hid;
+                    li += 1;
+                }
+                if bi > 0 {
+                    // Residual connection over non-first blocks (Fig. 1).
+                    for k in 0..hid {
+                        h_in[k] += block_in[k];
+                    }
+                }
+            }
+            fwd.h_seq[p * hid..(p + 1) * hid].copy_from_slice(&h_in[..hid]);
+
+            // 5. Output head (§3.4): tanh dense, then linear adapter to H.
+            pre.clear();
+            pre.extend_from_slice(rnn.dense_b);
+            vec_mat_acc(&h_in[..hid], rnn.dense_w, 0, hid, pre);
+            for (k, v) in pre.iter().enumerate() {
+                fwd.act[p * hid + k] = v.tanh();
+            }
+            obuf.clear();
+            obuf.extend_from_slice(rnn.out_b);
+            vec_mat_acc(&fwd.act[p * hid..(p + 1) * hid], rnn.out_w, 0, h,
+                        obuf);
+            fwd.out[p * h..(p + 1) * h].copy_from_slice(obuf);
         }
     }
 
-    // 4. Dilated-residual LSTM stack with per-layer ring buffers: slot
-    //    p % d holds the state from position p - d (Chang et al.).
-    let mut h_ring: Vec<Vec<f32>> = shape.flat.iter().map(|&d| vec![0.0; d * hid]).collect();
-    let mut c_ring: Vec<Vec<f32>> = shape.flat.iter().map(|&d| vec![0.0; d * hid]).collect();
-
-    let tape_len = p_n * n_l * hid;
-    let mut fwd = Forward {
-        levels,
-        seas,
-        seas2,
-        seas_ext,
-        alpha,
-        gamma,
-        gamma2,
-        s_init,
-        s2_init,
-        x,
-        z,
-        x_ok,
-        z_ok,
-        out: vec![0.0; p_n * h],
-        x_in: vec![0.0; p_n * n_l * din_max],
-        h_prev: vec![0.0; tape_len],
-        c_prev: vec![0.0; tape_len],
-        si: vec![0.0; tape_len],
-        sf: vec![0.0; tape_len],
-        tg: vec![0.0; tape_len],
-        so: vec![0.0; tape_len],
-        tanh_c: vec![0.0; tape_len],
-        h_seq: vec![0.0; p_n * hid],
-        act: vec![0.0; p_n * hid],
-        din_max,
-    };
-
-    let mut feat = vec![0.0f32; shape.din0];
-    let mut zbuf = vec![0.0f32; 4 * hid];
-    let mut h_in = vec![0.0f32; din_max];
-    let mut block_in = vec![0.0f32; din_max];
-    for p in 0..p_n {
-        feat[..in_w].copy_from_slice(&fwd.x[p * in_w..(p + 1) * in_w]);
-        feat[in_w..].copy_from_slice(cat);
-        let mut cur_dim = shape.din0;
-        h_in[..cur_dim].copy_from_slice(&feat);
-
-        let mut li = 0usize;
-        for (bi, block) in shape.blocks.iter().enumerate() {
-            let block_dim = cur_dim;
-            block_in[..block_dim].copy_from_slice(&h_in[..block_dim]);
-            for &d in block {
-                let slot = p % d;
-                let din = shape.layer_din[li];
-                let (w, b) = rnn.cells[li];
-                let t = (p * n_l + li) * hid;
-                let ti = (p * n_l + li) * din_max;
-                fwd.x_in[ti..ti + din].copy_from_slice(&h_in[..din]);
-                let h_prev = &h_ring[li][slot * hid..(slot + 1) * hid];
-                let c_prev = &c_ring[li][slot * hid..(slot + 1) * hid];
-                fwd.h_prev[t..t + hid].copy_from_slice(h_prev);
-                fwd.c_prev[t..t + hid].copy_from_slice(c_prev);
-
-                zbuf.copy_from_slice(b);
-                vec_mat_acc(&h_in[..din], w, 0, 4 * hid, &mut zbuf);
-                vec_mat_acc(h_prev, w, din, 4 * hid, &mut zbuf);
-
-                // Gate order i, f, g, o; forget-gate bias +1.0 (ref.py).
-                for k in 0..hid {
-                    let si = sigmoid(zbuf[k]);
-                    let sf = sigmoid(zbuf[hid + k] + 1.0);
-                    let tg = zbuf[2 * hid + k].tanh();
-                    let so = sigmoid(zbuf[3 * hid + k]);
-                    let c_new = sf * fwd.c_prev[t + k] + si * tg;
-                    let tanh_c = c_new.tanh();
-                    let h_new = so * tanh_c;
-                    fwd.si[t + k] = si;
-                    fwd.sf[t + k] = sf;
-                    fwd.tg[t + k] = tg;
-                    fwd.so[t + k] = so;
-                    fwd.tanh_c[t + k] = tanh_c;
-                    h_ring[li][slot * hid + k] = h_new;
-                    c_ring[li][slot * hid + k] = c_new;
-                    h_in[k] = h_new;
-                }
-                cur_dim = hid;
-                li += 1;
-            }
-            if bi > 0 {
-                // Residual connection over non-first blocks (Fig. 1).
-                for k in 0..hid {
-                    h_in[k] += block_in[k];
-                }
-            }
-        }
-        fwd.h_seq[p * hid..(p + 1) * hid].copy_from_slice(&h_in[..hid]);
-
-        // 5. Output head (§3.4): tanh dense, then linear adapter to H.
-        let mut pre = rnn.dense_b.to_vec();
-        vec_mat_acc(&h_in[..hid], rnn.dense_w, 0, hid, &mut pre);
-        for (k, v) in pre.iter().enumerate() {
-            fwd.act[p * hid + k] = v.tanh();
-        }
-        let mut o = rnn.out_b.to_vec();
-        vec_mat_acc(&fwd.act[p * hid..(p + 1) * hid], rnn.out_w, 0, h, &mut o);
-        fwd.out[p * h..(p + 1) * h].copy_from_slice(&o);
+    /// Retained heap footprint (for `BackendStats::scratch_bytes`).
+    pub fn bytes(&self) -> u64 {
+        let rings: usize = self
+            .h_ring
+            .iter()
+            .chain(&self.c_ring)
+            .map(|r| r.capacity())
+            .sum();
+        self.fwd.bytes()
+            + 4 * (rings + self.feat.capacity() + self.zbuf.capacity()
+                   + self.h_in.capacity() + self.block_in.capacity()
+                   + self.pre.capacity() + self.obuf.capacity())
+                as u64
     }
-    fwd
 }
 
 /// Point forecast from a completed forward pass (§3.4): take the final
 /// window position, de-normalize and re-seasonalize.
 pub fn forecast_from(shape: &Shape, fwd: &Forward) -> Vec<f32> {
+    let mut out = vec![0.0f32; shape.h];
+    forecast_into(shape, fwd, &mut out);
+    out
+}
+
+/// [`forecast_from`] writing into a caller-owned `[H]` slice (the pooled
+/// predict path).
+pub fn forecast_into(shape: &Shape, fwd: &Forward, out: &mut [f32]) {
     let (c, h, p_n) = (shape.c, shape.h, shape.p);
     let l_c = fwd.levels[c - 1];
-    (0..h)
-        .map(|k| fwd.out[(p_n - 1) * h + k].exp() * l_c * fwd.seas_ext[c + k])
-        .collect()
+    for (k, o) in out.iter_mut().enumerate().take(h) {
+        *o = fwd.out[(p_n - 1) * h + k].exp() * l_c * fwd.seas_ext[c + k];
+    }
 }
 
 /// Hand-written backward for one series.

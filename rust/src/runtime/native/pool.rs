@@ -1,0 +1,425 @@
+//! Persistent compute pool for the native backend's batch parallelism.
+//!
+//! Before this module, `run_train_step`/`run_predict` paid a fresh
+//! `std::thread::scope` spawn (clone + stack map + join) on *every* call —
+//! measurable overhead at small batches, exactly where the paper's §7
+//! speedup-vs-batch-size curve says per-step costs dominate. The pool
+//! spawns its workers once (lazily, on the first parallel call) and parks
+//! them on a Mutex+Condvar — the same discipline as
+//! [`crate::forecast::pool`] — so the steady-state hot path performs zero
+//! thread spawns.
+//!
+//! ## Handoff protocol
+//!
+//! A call to [`ComputePool::run`] publishes one *task* — a borrowed
+//! `Fn(chunk, participant)` closure — plus a chunk count `total` and a
+//! participant count `stride = min(threads, total)` under the shared
+//! mutex, bumps a generation counter (`epoch`) and wakes every worker.
+//! Chunk assignment is **static**: participant `p` executes chunks
+//! `p, p + stride, p + 2·stride, …` (participant 0 is the caller itself —
+//! it never idles while workers compute). Each completed chunk increments
+//! `done`; the caller sleeps on a second condvar until `done == total`,
+//! then unpublishes the task. The closure reference is type-erased to a
+//! raw pointer so it can sit in the shared state without infecting the
+//! pool with a lifetime; this is sound because `run` does not return
+//! until `done == total`, and `done` is incremented strictly *after* the
+//! closure call returns — no worker can hold the pointer past the `run`
+//! stack frame that owns the closure. Workers snapshot the task pointer
+//! and the epoch in the same lock acquisition, so a straggler that slept
+//! through a chunk-less round cannot re-enter a later round twice.
+//!
+//! Static assignment (rather than a work-stealing cursor) is a deliberate
+//! trade: the backend's chunks are near-equal by construction
+//! (`chunks_into`), so stealing buys little, and a *deterministic*
+//! participant set is what makes the zero-allocation steady state
+//! provable — every per-participant scratch arena reaches its high-water
+//! mark on the first call with a given shape, instead of whenever the
+//! scheduler happens to let that worker win a claim race.
+//!
+//! ## Determinism
+//!
+//! Chunk `i` is always the same slice of the batch *and* always runs on
+//! participant `i % stride` (same scratch arena); the caller merges chunk
+//! results in ascending chunk order after `run` returns. Numerics are
+//! therefore invariant to thread scheduling — bit-identical to the old
+//! scoped-spawn path for a given thread count.
+//!
+//! ## Panic containment
+//!
+//! Worker closures run under `catch_unwind`; the first panic payload is
+//! stashed in the shared state and re-raised on the *caller* after the
+//! round drains. Workers themselves never unwind out of their park loop,
+//! so one poisoned step cannot deadlock or kill the pool for subsequent
+//! calls (covered by `rust/tests/steady_state.rs`).
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// How the pool executes a parallel round — [`PoolMode::Persistent`] is
+/// the production path; [`PoolMode::SpawnPerCall`] reproduces the old
+/// scope-per-call behavior so BENCH_6 can measure the spawn overhead as a
+/// same-binary A/B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Workers are spawned once and parked between calls (zero spawns in
+    /// steady state).
+    Persistent,
+    /// Every call spawns scoped workers and joins them (the pre-pool
+    /// behavior, kept for benchmarking the difference).
+    SpawnPerCall,
+}
+
+/// Type-erased reference to the caller's task closure. Only ever
+/// dereferenced between task publication and `done == total` — i.e.
+/// strictly within the lifetime of the `run` call that owns the closure.
+struct TaskRef(*const (dyn Fn(usize, usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared &-calls from many threads are
+// fine) and the pointer is only dereferenced while the owning `run` frame
+// is blocked waiting for `done == total` (see module docs).
+unsafe impl Send for TaskRef {}
+
+struct State {
+    /// Generation counter: workers sleep until `epoch` moves past the
+    /// last round they participated in.
+    epoch: u64,
+    /// The published task for the current round, if any.
+    task: Option<TaskRef>,
+    /// Total chunks in the current round.
+    total: usize,
+    /// Participants this round (`min(threads, total)`); the static
+    /// chunk→participant stride.
+    stride: usize,
+    /// Chunks whose closure call has returned (or panicked).
+    done: usize,
+    /// First panic payload captured this round.
+    panic: Option<Box<dyn Any + Send>>,
+    /// Set once on drop; wakes workers for exit.
+    shutdown: bool,
+    /// Worker threads actually spawned (lazy).
+    spawned: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch (or shutdown).
+    work: Condvar,
+    /// The caller waits here for `done == total`.
+    done: Condvar,
+}
+
+/// Persistent worker pool executing chunked data-parallel rounds.
+pub struct ComputePool {
+    threads: usize,
+    mode: PoolMode,
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Worker threads spawned since construction ([`BackendStats::spawns`]
+    /// feeds from this; steady state must not move it).
+    ///
+    /// [`BackendStats::spawns`]: crate::runtime::backend::BackendStats
+    spawns: AtomicU64,
+    /// Serializes concurrent `run` callers: the epoch/stride protocol
+    /// handles one round at a time. Uncontended in every current caller
+    /// (the backend's step/predict scratch mutexes already serialize).
+    run_lock: Mutex<()>,
+}
+
+impl ComputePool {
+    /// Pool that will use up to `threads` participants per round (the
+    /// caller plus `threads - 1` parked workers), in persistent mode.
+    pub fn new(threads: usize) -> Self {
+        Self::with_mode(threads, PoolMode::Persistent)
+    }
+
+    /// Pool with an explicit execution mode (benches construct
+    /// [`PoolMode::SpawnPerCall`] for the A/B).
+    pub fn with_mode(threads: usize, mode: PoolMode) -> Self {
+        Self {
+            threads: threads.max(1),
+            mode,
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    epoch: 0,
+                    task: None,
+                    total: 0,
+                    stride: 0,
+                    done: 0,
+                    panic: None,
+                    shutdown: false,
+                    spawned: 0,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            spawns: AtomicU64::new(0),
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Participant budget (caller + parked workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn mode(&self) -> PoolMode {
+        self.mode
+    }
+
+    /// Worker threads spawned over the pool's lifetime. Persistent mode
+    /// plateaus at `threads - 1` after the first parallel call; spawn
+    /// mode grows on every call — the gap is what BENCH_6 gates on.
+    pub fn spawns(&self) -> u64 {
+        self.spawns.load(Ordering::Relaxed)
+    }
+
+    /// Execute `f(chunk, participant)` for every `chunk in 0..n`.
+    ///
+    /// `participant` identifies the executing thread (0 = caller,
+    /// `1..threads` = pool workers), indexes the backend's per-thread
+    /// scratch arenas, and is a *static* function of the chunk:
+    /// `participant = chunk % min(threads, n)`. Chunks may complete in
+    /// any order; callers must merge per-chunk results in ascending chunk
+    /// order afterwards for deterministic numerics.
+    ///
+    /// Panics from `f` are captured and re-raised on the caller after the
+    /// round completes; the pool remains usable.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.threads == 1 || n == 1 {
+            // Sequential fast path — both modes agree, nothing to hand off.
+            for i in 0..n {
+                f(i, 0);
+            }
+            return;
+        }
+        match self.mode {
+            PoolMode::Persistent => self.run_pooled(n, f),
+            PoolMode::SpawnPerCall => self.run_spawning(n, f),
+        }
+    }
+
+    fn run_pooled(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        let _round = self.run_lock.lock().unwrap();
+        self.ensure_spawned();
+        let stride = self.threads.min(n);
+        let task: *const (dyn Fn(usize, usize) + Sync) = f;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.task = Some(TaskRef(task));
+            st.total = n;
+            st.stride = stride;
+            st.done = 0;
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // The caller is participant 0: execute its strided share rather
+        // than blocking immediately.
+        run_strided(&self.shared, task, n, stride, 0);
+        let payload = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.done < st.total {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.task = None;
+            st.panic.take()
+        };
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    /// The pre-pool behavior: scoped spawn + join per call, same static
+    /// chunk assignment so the two modes stay numerically identical and
+    /// use the same per-participant scratch arenas.
+    fn run_spawning(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        let _round = self.run_lock.lock().unwrap();
+        let stride = self.threads.min(n);
+        self.spawns
+            .fetch_add(stride.saturating_sub(1) as u64, Ordering::Relaxed);
+        std::thread::scope(|sc| {
+            for participant in 1..stride {
+                sc.spawn(move || {
+                    let mut i = participant;
+                    while i < n {
+                        f(i, participant);
+                        i += stride;
+                    }
+                });
+            }
+            let mut i = 0;
+            while i < n {
+                f(i, 0);
+                i += stride;
+            }
+        });
+    }
+
+    /// Spawn the parked workers on first use (participants `1..threads`).
+    fn ensure_spawned(&self) {
+        let need = {
+            let st = self.shared.state.lock().unwrap();
+            st.spawned < self.threads - 1
+        };
+        if !need {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.spawned < self.threads - 1 {
+            st.spawned += 1;
+            let participant = st.spawned;
+            let shared = Arc::clone(&self.shared);
+            self.spawns.fetch_add(1, Ordering::Relaxed);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("native-compute-{participant}"))
+                    .spawn(move || worker_loop(&shared, participant))
+                    .expect("spawn native compute worker"),
+            );
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for handle in self.handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Parked worker: wake on a new epoch, run the strided share, park again.
+/// The task pointer and the epoch are snapshotted under one lock
+/// acquisition, so a worker can never observe round N's epoch with round
+/// N+1's task (or vice versa) and double-execute.
+fn worker_loop(shared: &Shared, participant: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (task, total, stride) = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && (st.epoch == seen_epoch || st.task.is_none()) {
+                st = shared.work.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen_epoch = st.epoch;
+            let ptr = match &st.task {
+                Some(TaskRef(p)) => *p,
+                None => unreachable!("wait loop requires a published task"),
+            };
+            (ptr, st.total, st.stride)
+        };
+        run_strided(shared, task, total, stride, participant);
+    }
+}
+
+/// Execute participant `p`'s static share of the round: chunks
+/// `p, p + stride, …` below `total`. Shared by pool workers and the
+/// caller (participant 0).
+fn run_strided(shared: &Shared, task: *const (dyn Fn(usize, usize) + Sync),
+               total: usize, stride: usize, participant: usize) {
+    if participant >= stride {
+        return;
+    }
+    let mut i = participant;
+    while i < total {
+        // SAFETY: `task` was published by a `run` frame that cannot return
+        // until `done == total`, and this chunk's `done` increment happens
+        // only below, after the call returns — the pointee is alive here.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (*task)(i, participant)
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            // Keep the first payload; later panics in the same round are
+            // almost certainly the same root cause.
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.done += 1;
+        if st.done >= st.total {
+            shared.done.notify_all();
+        }
+        drop(st);
+        i += stride;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = ComputePool::new(4);
+        let hits = (0..37).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        pool.run(37, &|i, _p| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn spawns_plateau_in_persistent_mode() {
+        let pool = ComputePool::new(3);
+        assert_eq!(pool.spawns(), 0, "lazy: no spawns before first run");
+        for _ in 0..5 {
+            pool.run(8, &|_i, _p| {});
+        }
+        assert_eq!(pool.spawns(), 2, "threads-1 workers, spawned once");
+    }
+
+    #[test]
+    fn spawn_per_call_mode_counts_every_round() {
+        let pool = ComputePool::with_mode(3, PoolMode::SpawnPerCall);
+        for _ in 0..4 {
+            pool.run(8, &|_i, _p| {});
+        }
+        assert_eq!(pool.spawns(), 8, "2 workers per round x 4 rounds");
+    }
+
+    #[test]
+    fn sequential_paths_never_spawn() {
+        let single = ComputePool::new(1);
+        single.run(16, &|_i, _p| {});
+        assert_eq!(single.spawns(), 0);
+        let pool = ComputePool::new(8);
+        pool.run(1, &|_i, _p| {});
+        assert_eq!(pool.spawns(), 0, "n == 1 runs inline on the caller");
+    }
+
+    #[test]
+    fn chunk_assignment_is_static_and_in_range() {
+        // Both modes must map chunk i to participant i % min(threads, n):
+        // the backend's per-participant arenas rely on this for
+        // deterministic growth (and bitwise-stable scratch assignment).
+        for mode in [PoolMode::Persistent, PoolMode::SpawnPerCall] {
+            let pool = ComputePool::with_mode(4, mode);
+            let owner: Vec<AtomicUsize> =
+                (0..64).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            pool.run(64, &|i, p| {
+                owner[i].store(p, Ordering::Relaxed);
+            });
+            for (i, o) in owner.iter().enumerate() {
+                assert_eq!(o.load(Ordering::Relaxed), i % 4,
+                           "chunk {i} ran on the wrong participant \
+                            ({mode:?})");
+            }
+        }
+    }
+}

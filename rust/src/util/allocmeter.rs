@@ -1,0 +1,83 @@
+//! Counting global allocator for the zero-allocation steady-state gate.
+//!
+//! [`CountingAlloc`] wraps the system allocator and bumps two relaxed
+//! atomic counters on every allocation. It is *not* installed in the
+//! library — production binaries keep the plain system allocator and pay
+//! nothing. Test and bench binaries that need to measure allocations per
+//! step install it themselves:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: fast_esrnn::util::allocmeter::CountingAlloc =
+//!     fast_esrnn::util::allocmeter::CountingAlloc::new();
+//! ```
+//!
+//! `rust/tests/steady_state.rs` and `benches/micro_hotpath.rs` do exactly
+//! this; the BENCH_6 gate then asserts that a warm lanes-mode
+//! `train_step` moves [`allocations`] by zero. Deallocations are not
+//! counted — the gate is about *new* heap traffic, and a free-only path
+//! would still indicate a buffer being dropped that should have been
+//! pooled (it would show up as a matching allocation on the next step).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide allocation count since start (0 unless a binary installed
+/// [`CountingAlloc`] as its `#[global_allocator]`).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Process-wide bytes requested since start (same caveat as
+/// [`allocations`]).
+pub fn allocated_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// System-allocator wrapper that counts allocations. Zero overhead unless
+/// a binary opts in via `#[global_allocator]`.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// SAFETY: defers every contract-bearing operation to `System`; the
+// counter updates have no effect on the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        // A realloc that grows is exactly the churn the steady-state gate
+        // exists to catch; count it like a fresh allocation.
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

@@ -2,6 +2,7 @@
 //! crates beyond `xla`/`anyhow`, so JSON, CLI parsing, RNG, the bench
 //! harness and the property-test driver live here (DESIGN.md §Substitutions).
 
+pub mod allocmeter;
 pub mod bench;
 pub mod cli;
 pub mod json;

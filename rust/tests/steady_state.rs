@@ -1,0 +1,301 @@
+//! Steady-state guarantees of the native backend's persistent compute
+//! pool and arena hot path (PR 6):
+//!
+//! * **Reuse safety** — the pooled/arena path must be *bit-identical* to
+//!   a fresh-allocation path across 50 train steps for every Table-1
+//!   frequency, including the §8.2 hourly dual-seasonality model, a
+//!   ragged mask (padded slots mid-batch and in the tail) and a
+//!   multi-group monthly batch (b=32 → 4 lane groups). Three paths are
+//!   compared: (A) one warm backend stepped via `execute_named` with
+//!   output write-back, (B) one warm backend stepped via
+//!   `train_step_inplace`, and (C) a **fresh backend per step** — brand
+//!   new arenas every call. Any stale-buffer leak in the arenas shows up
+//!   as an A/C divergence; any in-place-update bug as an A/B divergence.
+//! * **Zero allocation / zero spawn** — with the counting allocator
+//!   installed, a post-warmup lanes-mode train step performs no heap
+//!   allocation and no thread spawn (the ISSUE 6 acceptance gate).
+//! * **Panic containment** — a worker panic inside a pooled task
+//!   propagates to the caller without deadlocking subsequent rounds.
+//!
+//! All tests serialize on a process-wide gate: the allocation counter is
+//! global, so concurrently running tests would pollute the measured
+//! windows.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use fast_esrnn::runtime::native::pool::ComputePool;
+use fast_esrnn::runtime::native::{ComputeMode, NativeBackend};
+use fast_esrnn::runtime::{Backend, HostTensor, Manifest};
+use fast_esrnn::util::allocmeter::{self, CountingAlloc};
+use fast_esrnn::util::prop::gen_positive_series_dual;
+use fast_esrnn::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Serializes the tests in this binary (poison-tolerant: a failing test
+/// must not cascade into every later one).
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const THREADS: usize = 3;
+
+/// Synthetic batch + initial model/optimizer state for `freq`,
+/// deterministic in `seed`. `mask` must have length `b`.
+struct Scenario {
+    name: String,
+    data: HashMap<String, HostTensor>,
+    state: HashMap<String, HostTensor>,
+}
+
+fn scenario(backend: &NativeBackend, freq: &str, b: usize, mask: Vec<f32>,
+            seed: u64) -> Scenario {
+    let cfg = backend.manifest().config(freq).unwrap().clone();
+    let w = cfg.seasonality + cfg.seasonality2;
+    let dual = cfg.seasonality2 > 0;
+    let mut rng = Rng::new(seed);
+    let mut y = Vec::new();
+    for _ in 0..b {
+        // Plants both cycles for the hourly dual model; degenerates to
+        // the single-season generator when seasonality2 == 0.
+        y.extend(gen_positive_series_dual(&mut rng, cfg.length,
+                                          cfg.seasonality,
+                                          cfg.seasonality2));
+    }
+
+    let rnn = backend.execute_init(freq, seed ^ 0xA5A5).unwrap();
+    let mut state: HashMap<String, HostTensor> =
+        rnn.into_iter().map(|(n, t)| (format!("params.{n}"), t)).collect();
+    state.insert("params.series.alpha_logit".into(),
+                 HostTensor::new(vec![b], vec![-0.5; b]).unwrap());
+    state.insert("params.series.gamma_logit".into(),
+                 HostTensor::new(vec![b], vec![-1.0; b]).unwrap());
+    if dual {
+        state.insert("params.series.gamma2_logit".into(),
+                     HostTensor::new(vec![b], vec![-1.0; b]).unwrap());
+    }
+    state.insert("params.series.log_s_init".into(),
+                 HostTensor::new(vec![b, w], vec![0.0; b * w]).unwrap());
+    let keys: Vec<String> = state.keys().cloned().collect();
+    for k in &keys {
+        let z = HostTensor::zeros(state[k].shape.clone());
+        state.insert(k.replace("params.", "opt.m."), z.clone());
+        state.insert(k.replace("params.", "opt.v."), z);
+    }
+    state.insert("opt.step".into(), HostTensor::scalar(0.0));
+
+    let mut cat = vec![0.0f32; b * 6];
+    for i in 0..b {
+        cat[i * 6 + i % 6] = 1.0;
+    }
+    let data = HashMap::from([
+        ("data.y".to_string(),
+         HostTensor::new(vec![b, cfg.length], y).unwrap()),
+        ("data.cat".to_string(), HostTensor::new(vec![b, 6], cat).unwrap()),
+        ("data.mask".to_string(), HostTensor::new(vec![b], mask).unwrap()),
+        ("lr".to_string(), HostTensor::scalar(1e-3)),
+    ]);
+    Scenario { name: Manifest::program_name(freq, b, "train_step"),
+               data, state }
+}
+
+/// One `execute_named` step with output write-back; returns the loss.
+fn step_named(backend: &NativeBackend, sc: &mut Scenario) -> f32 {
+    let outs = backend
+        .execute_named(&sc.name, &mut |spec| {
+            sc.data
+                .get(&spec.name)
+                .or_else(|| sc.state.get(&spec.name))
+                .ok_or_else(|| anyhow::anyhow!("missing `{}`", spec.name))
+        })
+        .unwrap();
+    let mut loss = f32::NAN;
+    for (n, t) in outs {
+        if n == "loss" {
+            loss = t.data[0];
+        } else {
+            sc.state.insert(n, t);
+        }
+    }
+    loss
+}
+
+fn assert_states_bitwise_equal(a: &HashMap<String, HostTensor>,
+                               b: &HashMap<String, HostTensor>,
+                               la: &str, lb: &str) {
+    assert_eq!(a.len(), b.len(), "{la} vs {lb}: different state keys");
+    for (k, ta) in a {
+        let tb = &b[k];
+        assert_eq!(ta.shape, tb.shape, "{la} vs {lb}: `{k}` shape");
+        for (i, (va, vb)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(),
+                       "{la} vs {lb}: `{k}`[{i}] {va} != {vb}");
+        }
+    }
+}
+
+/// The reuse-safety triangle: warm execute_named (A) vs warm
+/// train_step_inplace (B) vs fresh-backend-per-step (C), 50 steps,
+/// bitwise loss and state equality.
+fn run_parity(freq: &str, b: usize, mask: Vec<f32>, mode: ComputeMode,
+              steps: usize) {
+    let warm_a = NativeBackend::with_threads_mode(THREADS, mode);
+    let warm_b = NativeBackend::with_threads_mode(THREADS, mode);
+    let seed = 4242;
+    let mut sc_a = scenario(&warm_a, freq, b, mask.clone(), seed);
+    let mut sc_b = scenario(&warm_a, freq, b, mask.clone(), seed);
+    let mut sc_c = scenario(&warm_a, freq, b, mask, seed);
+    assert_states_bitwise_equal(&sc_a.state, &sc_b.state, "init A", "init B");
+
+    for step in 0..steps {
+        let la = step_named(&warm_a, &mut sc_a);
+        let lb = warm_b
+            .train_step_inplace(&sc_b.name, &sc_b.data, &mut sc_b.state)
+            .unwrap();
+        // Path C: brand-new backend (fresh arenas, fresh pool) every
+        // step — the no-reuse reference.
+        let fresh = NativeBackend::with_threads_mode(THREADS, mode);
+        let lc = step_named(&fresh, &mut sc_c);
+        assert!(la.is_finite(), "{freq} step {step}: non-finite loss");
+        assert_eq!(la.to_bits(), lb.to_bits(),
+                   "{freq} step {step}: warm-named {la} != inplace {lb}");
+        assert_eq!(la.to_bits(), lc.to_bits(),
+                   "{freq} step {step}: warm {la} != fresh-backend {lc}");
+    }
+    assert_states_bitwise_equal(&sc_a.state, &sc_b.state,
+                                "warm execute_named", "train_step_inplace");
+    assert_states_bitwise_equal(&sc_a.state, &sc_c.state,
+                                "warm execute_named", "fresh-per-step");
+}
+
+/// Ragged mask for batch `b`: slot 1 padded mid-batch plus a padded
+/// tail of `tail` slots.
+fn ragged_mask(b: usize, tail: usize) -> Vec<f32> {
+    let mut m = vec![1.0f32; b];
+    if b > 1 {
+        m[1] = 0.0;
+    }
+    for slot in m.iter_mut().rev().take(tail) {
+        *slot = 0.0;
+    }
+    m
+}
+
+#[test]
+fn pooled_path_is_bit_identical_yearly() {
+    let _g = gate();
+    run_parity("yearly", 4, ragged_mask(4, 1), ComputeMode::Lanes, 50);
+}
+
+#[test]
+fn pooled_path_is_bit_identical_quarterly() {
+    let _g = gate();
+    run_parity("quarterly", 4, ragged_mask(4, 1), ComputeMode::Lanes, 50);
+}
+
+#[test]
+fn pooled_path_is_bit_identical_monthly_multigroup() {
+    let _g = gate();
+    // b=32 → four lane groups across three pool chunks, with padded
+    // slots both mid-group and in the ragged tail.
+    run_parity("monthly", 32, ragged_mask(32, 5), ComputeMode::Lanes, 50);
+}
+
+#[test]
+fn pooled_path_is_bit_identical_daily() {
+    let _g = gate();
+    run_parity("daily", 4, ragged_mask(4, 1), ComputeMode::Lanes, 50);
+}
+
+#[test]
+fn pooled_path_is_bit_identical_hourly_dual() {
+    let _g = gate();
+    run_parity("hourly", 4, ragged_mask(4, 1), ComputeMode::Lanes, 50);
+}
+
+#[test]
+fn pooled_path_is_bit_identical_scalar_oracle() {
+    let _g = gate();
+    // The scalar path shares the arena machinery (ScalarScratch) — guard
+    // its buffer reuse the same way.
+    run_parity("yearly", 4, ragged_mask(4, 1), ComputeMode::Scalar, 50);
+}
+
+#[test]
+fn steady_state_train_step_allocates_and_spawns_nothing() {
+    let _g = gate();
+    // b=32 → 4 lane groups over 4 threads: the persistent pool is
+    // actually exercised (n_chunks > 1), not the sequential inline path.
+    let backend = NativeBackend::with_threads_mode(4, ComputeMode::Lanes);
+    let mut sc = scenario(&backend, "yearly", 32, vec![1.0; 32], 7);
+
+    // Warmup: grow every arena to its high-water shape. STEADY_WARMUP
+    // in the backend is 3; one extra step for margin.
+    for _ in 0..4 {
+        backend
+            .train_step_inplace(&sc.name, &sc.data, &mut sc.state)
+            .unwrap();
+    }
+
+    let s0 = backend.stats();
+    assert_eq!(s0.spawns, 3,
+               "persistent pool should have spawned exactly threads-1 \
+                workers during warmup");
+
+    // Measure rounds of 2 steps each. Under the gate the only allocating
+    // threads are ours, so every round must be exactly zero — the min
+    // guards against incidental runtime noise (e.g. lazy stdlib init).
+    let mut min_allocs = u64::MAX;
+    for _ in 0..5 {
+        let a0 = allocmeter::allocations();
+        for _ in 0..2 {
+            let loss = backend
+                .train_step_inplace(&sc.name, &sc.data, &mut sc.state)
+                .unwrap();
+            assert!(loss.is_finite());
+        }
+        min_allocs = min_allocs.min(allocmeter::allocations() - a0);
+    }
+    assert_eq!(min_allocs, 0,
+               "steady-state train_step_inplace must not allocate");
+
+    let s1 = backend.stats();
+    assert_eq!(s1.spawns, s0.spawns,
+               "steady-state steps must not spawn threads");
+    assert_eq!(s1.steady_allocs, 0,
+               "backend charged steady-state allocations: {}",
+               s1.steady_allocs);
+    assert!(s1.scratch_bytes > 0,
+            "arenas should report pinned scratch bytes");
+}
+
+#[test]
+fn compute_pool_survives_worker_panic() {
+    let _g = gate();
+    let pool = ComputePool::new(4);
+
+    // A panicking chunk must propagate to the caller as a panic...
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(4, &|i, _pid| {
+            if i == 2 {
+                panic!("injected chunk failure");
+            }
+        });
+    }));
+    assert!(result.is_err(), "worker panic should reach the caller");
+
+    // ...and the pool must keep serving rounds afterwards (no dead
+    // worker, no stuck epoch, no poisoned handoff).
+    let sum = AtomicUsize::new(0);
+    pool.run(8, &|i, _pid| {
+        sum.fetch_add(i + 1, Ordering::Relaxed);
+    });
+    assert_eq!(sum.load(Ordering::Relaxed), 36,
+               "pool did not run every chunk after a panic round");
+}

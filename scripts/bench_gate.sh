@@ -2,9 +2,9 @@
 # CI perf gate: run the quick benches, record the speedup trajectories,
 # and fail on regression.
 #
-#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json]
+#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json]
 #
-# Three gates, all measured as same-machine ratios (stable across runner
+# Four gates, all measured as same-machine ratios (stable across runner
 # hardware generations in a way absolute numbers are not):
 #
 # * BENCH_3 — `micro_hotpath` (and `table5_speedup`) in quick mode:
@@ -18,6 +18,11 @@
 #   req/s on the HTTP front-end, and sharded-vs-single-stack p95; fails
 #   when the keep-alive speedup drops more than 10% below
 #   benches/bench5_baseline.json or sharding blows up tail latency.
+# * BENCH_6 — `micro_hotpath` steady-state section: persistent-pool vs
+#   spawn-per-call ns/step per frequency plus allocations/step and
+#   spawns/step from the counting allocator; fails when the pooled
+#   speedup drops more than 10% below benches/bench6_baseline.json or
+#   when any frequency's steady-state step allocates or spawns at all.
 #
 # Every cargo invocation is --locked: the committed Cargo.lock is the
 # only dependency resolution CI may use.
@@ -26,12 +31,15 @@ set -euo pipefail
 out="${1:-BENCH_3.json}"
 out4="${2:-BENCH_4.json}"
 out5="${3:-BENCH_5.json}"
+out6="${4:-BENCH_6.json}"
 baseline="benches/bench3_baseline.json"
 baseline4="benches/bench4_baseline.json"
 baseline5="benches/bench5_baseline.json"
+baseline6="benches/bench6_baseline.json"
 
 export FAST_ESRNN_QUICK=1
-FAST_ESRNN_BENCH_JSON="$out" cargo bench --locked --bench micro_hotpath
+FAST_ESRNN_BENCH_JSON="$out" FAST_ESRNN_BENCH6_JSON="$out6" \
+    cargo bench --locked --bench micro_hotpath
 cargo bench --locked --bench table5_speedup
 FAST_ESRNN_BENCH_JSON="$out4" cargo bench --locked --bench serving_throughput
 FAST_ESRNN_BENCH_JSON="$out5" cargo bench --locked --bench http_throughput
@@ -134,4 +142,45 @@ if max_ratio > 0 and ratio > max_ratio:
 if failed:
     sys.exit(1)
 print("http gate OK")
+EOF
+
+python3 - "$out6" "$baseline6" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+got = result["max_pooled_speedup"]
+want = baseline["min_pooled_speedup"]
+floor = want * 0.9
+print(f"pooled-vs-spawn max train-step speedup: {got:.2f}x "
+      f"({int(result['pool_threads'])} pool threads); "
+      f"baseline {want:.2f}x, gate floor {floor:.2f}x")
+failed = False
+for freq, row in sorted(result["frequencies"].items()):
+    print(f"  {freq:<10} b{int(row['batch']):<4} "
+          f"spawn {row['spawn_ns_per_step']/1e6:9.2f} ms/step   "
+          f"pooled {row['pooled_ns_per_step']/1e6:9.2f} ms/step   "
+          f"{row['pooled_speedup']:.2f}x   "
+          f"allocs/step {row['allocs_per_step']:.1f}   "
+          f"spawns/step {row['spawns_per_step']:.1f}")
+    # The zero-cost invariants are absolute: one stray allocation per
+    # step means a pooled buffer is growing again.
+    if row["allocs_per_step"] != 0:
+        print(f"FAIL: {freq} steady-state step allocates "
+              f"({row['allocs_per_step']:.1f}/step, want 0)")
+        failed = True
+    if row["spawns_per_step"] != 0:
+        print(f"FAIL: {freq} steady-state step spawns threads "
+              f"({row['spawns_per_step']:.1f}/step, want 0)")
+        failed = True
+if got < floor:
+    print(f"FAIL: persistent pool regressed: {got:.2f}x < {floor:.2f}x")
+    failed = True
+if failed:
+    sys.exit(1)
+print("steady-state gate OK")
 EOF
