@@ -161,7 +161,7 @@ fn main() -> anyhow::Result<()> {
     let (best_freq, _, _, _, best) = freq_rows
         .iter()
         .copied()
-        .max_by(|a, b| a.4.partial_cmp(&b.4).unwrap())
+        .max_by(|a, b| a.4.total_cmp(&b.4))
         .unwrap();
     println!("\nmax speedup: {best:.2}x ({best_freq})");
 

@@ -142,8 +142,18 @@ impl Category {
         }
     }
 
+    /// Position in [`ALL_CATEGORIES`] (the one-hot slot). A match rather
+    /// than `position().unwrap()`: the compiler now proves exhaustiveness
+    /// instead of the array search proving it at runtime.
     pub fn index(&self) -> usize {
-        ALL_CATEGORIES.iter().position(|c| c == self).unwrap()
+        match self {
+            Category::Demographic => 0,
+            Category::Finance => 1,
+            Category::Industry => 2,
+            Category::Macro => 3,
+            Category::Micro => 4,
+            Category::Other => 5,
+        }
     }
 
     pub fn from_index(i: usize) -> Result<Self> {

@@ -316,11 +316,14 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6],
+                               b[7]]))
     }
 
     fn usize64(&mut self) -> Result<usize> {
@@ -342,7 +345,7 @@ impl<'a> Cursor<'a> {
         let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 }
@@ -464,6 +467,49 @@ mod tests {
         let (mut s, mut st) = fresh_pair();
         let err = load(&vpath, &mut s, &mut st).unwrap_err();
         assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn binary_decoder_survives_256_byte_mutations() {
+        let (state, store) = demo_pair();
+        let dir = std::env::temp_dir().join("fast_esrnn_ckpt_fuzz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        save_binary(&path, "quarterly", &state, &store).unwrap();
+        let valid = std::fs::read(&path).unwrap();
+
+        // Sanity: the unmutated bytes decode.
+        let (mut s0, mut p0) = fresh_pair();
+        assert!(load_binary_bytes(&valid, &mut s0, &mut p0).is_ok());
+
+        let mut rng = crate::util::rng::Rng::new(4242);
+        for case in 0..256 {
+            let mutant: Vec<u8> = if case % 2 == 0 {
+                // Truncation: every proper prefix must fail cleanly —
+                // the parser consumes exactly the declared lengths, so a
+                // shorter buffer always leaves some field unreadable.
+                valid[..rng.below(valid.len())].to_vec()
+            } else {
+                // Header corruption: flip a byte of the version or
+                // freq-length field. The decoder must reject these
+                // (wrong version / shifted reads), never trust them.
+                let mut m = valid.clone();
+                m[8 + rng.below(8)] ^= (1 + rng.below(255)) as u8;
+                m
+            };
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let (mut state2, mut store2) = fresh_pair();
+                    load_binary_bytes(&mutant, &mut state2, &mut store2)
+                        .map(|_| ())
+                }));
+            match outcome {
+                Ok(r) => assert!(
+                    r.is_err(),
+                    "mutation case {case} decoded successfully"),
+                Err(_) => panic!("decoder panicked on mutation case {case}"),
+            }
+        }
     }
 
     #[test]

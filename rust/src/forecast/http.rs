@@ -113,6 +113,7 @@ struct ServerShared {
     shutdown: AtomicBool,
     /// Accepted connections waiting for a worker, with enqueue time so
     /// stale waiters can be shed instead of hanging answerless.
+    // lint:lock-name(http.conns)
     conns: Mutex<VecDeque<(TcpStream, Instant)>>,
     cond: Condvar,
     /// Shed at accept: backlog full. Remedy: bigger backlog / more

@@ -116,9 +116,12 @@ struct StatsInner {
 pub(crate) struct PoolShared {
     net: NetworkConfig,
     opts: ServiceOptions,
+    // lint:lock-name(fcpool.queue)
     queue: Mutex<QueueInner>,
     cond: Condvar,
+    // lint:lock-name(fcpool.model)
     model: Mutex<Arc<VersionedModel>>,
+    // lint:lock-name(fcpool.stats)
     stats: Mutex<StatsInner>,
 }
 

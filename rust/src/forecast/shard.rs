@@ -162,6 +162,7 @@ struct Shards {
 /// methods take `&self` (membership sits under one `RwLock`; request
 /// dispatch takes the read side only, so routing scales with shards).
 pub struct ShardedStack {
+    // lint:lock-name(shard.inner)
     inner: RwLock<Shards>,
 }
 

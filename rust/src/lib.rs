@@ -22,6 +22,12 @@
 //! See `DESIGN.md` for the full system inventory, the `Backend` trait
 //! contract and the tensor naming scheme; `ROADMAP.md` tracks open items.
 
+// Every `unsafe` operation inside an `unsafe fn` needs its own block (and
+// per DESIGN.md §"Static analysis" its own `// SAFETY:` comment — rule R4
+// of fesrnn-lint, plus clippy's `undocumented_unsafe_blocks` in CI).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

@@ -585,6 +585,7 @@ pub fn forecast_from_lanes(shape: &Shape, fwd: &ForwardLanes) -> Vec<f32> {
     out
 }
 
+// lint:hot-path-begin — steady-state predict kernel (no allocation).
 /// [`forecast_from_lanes`] writing into a caller-owned `[H][LANES]`
 /// slice (every element is stored).
 pub fn forecast_from_lanes_into(shape: &Shape, fwd: &ForwardLanes,
@@ -598,6 +599,7 @@ pub fn forecast_from_lanes_into(shape: &Shape, fwd: &ForwardLanes,
             .store(&mut out[k * LANES..]);
     }
 }
+// lint:hot-path-end
 
 /// Pinball loss numerator plus `dout`/`dz` seeds for one lane group
 /// (mirror of [`model::pinball_seeds`]; `smask` carries the per-lane
@@ -611,6 +613,8 @@ pub fn pinball_seeds_lanes(shape: &Shape, fwd: &ForwardLanes, tau: f32,
     (loss_num, dout, dz)
 }
 
+// lint:hot-path-begin — steady-state loss/seed kernel: `set_zeroed` only
+// rewrites warm capacity, so no allocation after the first shaped call.
 /// [`pinball_seeds_lanes`] writing the seed buffers in place (re-zeroed
 /// each call: positions past `valid_positions` must stay zero).
 pub fn pinball_seeds_lanes_into(shape: &Shape, fwd: &ForwardLanes, tau: f32,
@@ -645,6 +649,7 @@ pub fn pinball_seeds_lanes_into(shape: &Shape, fwd: &ForwardLanes, tau: f32,
     }
     loss_num
 }
+// lint:hot-path-end
 
 /// Per-lane Holt-Winters gradients for one group; `log_s_init` is SoA
 /// `[s_total][LANES]`. Padding lanes hold exact zeros.
@@ -1060,6 +1065,7 @@ impl LaneScratch {
     }
 }
 
+// lint:hot-path-begin — steady-state optimizer kernel (pure in-place).
 /// Lane-vectorized Adam leaf update: bit-identical to
 /// [`model::adam_update`] (same operation sequence per element), with a
 /// scalar tail for the `len % LANES` remainder.
@@ -1089,6 +1095,7 @@ pub fn adam_update_lanes(p: &mut [f32], g: &[f32], m: &mut [f32],
     model::adam_update(&mut p[main..], &g[main..], &mut m[main..],
                        &mut v[main..], lr, mult, bc1, bc2);
 }
+// lint:hot-path-end
 
 #[cfg(test)]
 mod tests {

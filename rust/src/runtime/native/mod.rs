@@ -285,6 +285,7 @@ pub struct NativeBackend {
     manifest: Manifest,
     threads: usize,
     mode: ComputeMode,
+    // lint:lock-name(native.stats)
     stats: Mutex<BackendStats>,
     /// Persistent worker pool (spawned lazily, parked between calls).
     pool: pool::ComputePool,
@@ -293,13 +294,17 @@ pub struct NativeBackend {
     shapes: HashMap<String, Shape>,
     /// Per-program dispatch caches (Adam leaf plan + output plan), built
     /// lazily on first execution of each program name.
+    // lint:lock-name(native.dispatch)
     dispatch: Mutex<HashMap<String, Arc<ProgramCache>>>,
     /// Per-participant kernel arenas, indexed by pool participant id.
+    // lint:lock-name(native.worker_scratch)
     worker_scratch: Vec<Mutex<WorkerScratch>>,
     /// Step-level scratch (lane groups, chunk ranges, gradient
     /// accumulators) for `train_step`.
+    // lint:lock-name(native.step)
     step: Mutex<StepScratch>,
     /// Step-level scratch for `predict`.
+    // lint:lock-name(native.predict)
     predict: Mutex<PredictScratch>,
 }
 
@@ -762,6 +767,7 @@ impl ChunkOut {
 struct StepScratch {
     groups: Vec<lanes::LaneGroup>,
     ranges: Vec<(usize, usize)>,
+    // lint:lock-name(native.chunk_outs)
     chunk_outs: Vec<Mutex<ChunkOut>>,
     rnn_grads: RnnGrads,
     d_alpha: Vec<f32>,
@@ -793,6 +799,7 @@ impl StepScratch {
 struct PredictScratch {
     groups: Vec<lanes::LaneGroup>,
     ranges: Vec<(usize, usize)>,
+    // lint:lock-name(native.chunk_rows)
     chunk_rows: Vec<Mutex<Vec<f32>>>,
 }
 
@@ -1102,6 +1109,9 @@ impl NativeBackend {
         }
         let mut loss = 0.0f64;
         if self.mode == ComputeMode::Lanes {
+            // lint:hot-path-begin — steady-state training kernel: once the
+            // scratch arenas are warm this branch must not allocate (the
+            // static twin of the CountingAlloc gate in steady_state.rs).
             // Lane path: marshal into SoA groups, chunk over groups; each
             // worker advances LANES series per kernel step. Chunk ci
             // covers groups [lo, hi) = batch slots [lo*LANES,
@@ -1182,6 +1192,8 @@ impl NativeBackend {
                 st.d_log_s[slot_lo * w..slot_hi * w]
                     .copy_from_slice(&co.d_log_s[..n * w]);
             }
+            // lint:hot-path-end — the scalar oracle branch below keeps its
+            // allocating reference signatures by design.
         } else {
             // Scalar oracle path: chunk directly over batch slots. The
             // per-series kernels (`pinball_seeds`, `backward_series`)
@@ -1358,6 +1370,9 @@ impl NativeBackend {
         // The input view borrows `state`; release it before mutating.
         drop(ti);
 
+        // lint:hot-path-begin — steady-state optimizer update; must stay
+        // allocation-free (CountingAlloc gates it at runtime, rule R3
+        // statically).
         // ---- Adam in place: each leaf's tensors leave the map, update
         // against the pooled gradients, and return — the key Strings and
         // map capacity are moved back, so no allocation happens. ----
@@ -1392,6 +1407,7 @@ impl NativeBackend {
             .get_mut("opt.step")
             .ok_or_else(|| anyhow!("state missing `opt.step`"))?
             .data[0] = step_new;
+        // lint:hot-path-end
 
         let elapsed = t0.elapsed().as_secs_f64();
         let allocs = crate::util::allocmeter::allocations()

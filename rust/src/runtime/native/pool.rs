@@ -77,9 +77,20 @@ pub enum PoolMode {
 /// strictly within the lifetime of the `run` call that owns the closure.
 struct TaskRef(*const (dyn Fn(usize, usize) + Sync));
 
-// SAFETY: the pointee is `Sync` (shared &-calls from many threads are
-// fine) and the pointer is only dereferenced while the owning `run` frame
-// is blocked waiting for `done == total` (see module docs).
+// SAFETY: sending `TaskRef` to worker threads is sound because
+// (1) the pointee is `Sync`, so shared `&`-calls from any number of
+//     threads are permitted — the pool only ever calls through
+//     `&dyn Fn`, it never moves out of or mutates the closure;
+// (2) every dereference is bracketed by the publishing `run_pooled`
+//     frame: `run_strided` increments `done` strictly *after* the call
+//     through the pointer returns, and `run_pooled` blocks on the `done`
+//     condvar until `done == total` before unpublishing the task and
+//     returning — so no worker can touch the pointer once the closure's
+//     owning stack frame is gone;
+// (3) a straggler from an earlier round cannot observe a stale pointer:
+//     `worker_loop` snapshots the task pointer and the epoch under one
+//     lock acquisition, and the publish in `run_pooled` writes both in
+//     one critical section.
 unsafe impl Send for TaskRef {}
 
 struct State {
@@ -104,6 +115,7 @@ struct State {
 }
 
 struct Shared {
+    // lint:lock-name(pool.state)
     state: Mutex<State>,
     /// Workers wait here for a new epoch (or shutdown).
     work: Condvar,
@@ -116,6 +128,7 @@ pub struct ComputePool {
     threads: usize,
     mode: PoolMode,
     shared: Arc<Shared>,
+    // lint:lock-name(pool.handles)
     handles: Mutex<Vec<JoinHandle<()>>>,
     /// Worker threads spawned since construction ([`BackendStats::spawns`]
     /// feeds from this; steady state must not move it).
@@ -125,6 +138,7 @@ pub struct ComputePool {
     /// Serializes concurrent `run` callers: the epoch/stride protocol
     /// handles one round at a time. Uncontended in every current caller
     /// (the backend's step/predict scratch mutexes already serialize).
+    // lint:lock-name(pool.run_lock)
     run_lock: Mutex<()>,
 }
 
@@ -336,12 +350,14 @@ fn run_strided(shared: &Shared, task: *const (dyn Fn(usize, usize) + Sync),
     }
     let mut i = participant;
     while i < total {
-        // SAFETY: `task` was published by a `run` frame that cannot return
-        // until `done == total`, and this chunk's `done` increment happens
-        // only below, after the call returns — the pointee is alive here.
-        let result = catch_unwind(AssertUnwindSafe(|| unsafe {
-            (*task)(i, participant)
-        }));
+        // SAFETY: `task` was published by a `run_pooled` frame that cannot
+        // return until `done == total`, and this chunk's `done` increment
+        // happens only below, strictly after the call returns — the
+        // pointee (the caller's borrowed closure) is alive for the whole
+        // call. The pointee is `Sync`, so concurrent `&`-calls from other
+        // participants are fine.
+        let call = || unsafe { (*task)(i, participant) };
+        let result = catch_unwind(AssertUnwindSafe(call));
         let mut st = shared.state.lock().unwrap();
         if let Err(payload) = result {
             // Keep the first payload; later panics in the same round are

@@ -53,19 +53,28 @@ impl Default for CountingAlloc {
     }
 }
 
-// SAFETY: defers every contract-bearing operation to `System`; the
-// counter updates have no effect on the returned memory.
+// SAFETY: every method forwards to `System` with its arguments unchanged,
+// so the `GlobalAlloc` contract — layout fidelity across
+// alloc/realloc/dealloc, no unwinding, valid-or-null returns — is
+// inherited wholesale from the system allocator. The only added behavior
+// is two relaxed atomic counter bumps, which touch no allocator state and
+// have no effect on the returned memory; the type itself is a stateless
+// unit struct, so concurrent use as `#[global_allocator]` from any number
+// of threads adds no synchronization hazards beyond `System`'s own.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: forwarded verbatim — our caller's obligations (non-zero
+        // `layout` size) are exactly `System.alloc`'s.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: forwarded verbatim; same contract as `alloc` above.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
@@ -74,10 +83,54 @@ unsafe impl GlobalAlloc for CountingAlloc {
         // exists to catch; count it like a fresh allocation.
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: forwarded verbatim — `ptr`/`layout` pairing and the
+        // non-zero `new_size` requirement are the caller's obligations,
+        // passed through unchanged.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: forwarded verbatim; `ptr` was produced by this allocator
+        // (i.e. by `System`) with this `layout`, per the caller's contract.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One combined test rather than one per method: the counters are
+    // process-global, so splitting these asserts across parallel test
+    // threads would race. This is also the Miri target for the allocator
+    // wrapper (`cargo miri test --lib allocmeter`).
+    #[test]
+    fn counts_alloc_realloc_and_zeroing() {
+        let a = CountingAlloc::new();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        let grown = Layout::from_size_align(128, 8).unwrap();
+        let before = (allocations(), allocated_bytes());
+        // SAFETY: both layouts are non-zero-sized; each pointer is used
+        // only with the layout it was (re)allocated with and freed exactly
+        // once; writes stay inside the 64 bytes just allocated.
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            p.write_bytes(0xAB, layout.size());
+            let q = a.realloc(p, layout, grown.size());
+            assert!(!q.is_null());
+            a.dealloc(q, grown);
+            let z = a.alloc_zeroed(layout);
+            assert!(!z.is_null());
+            for off in 0..layout.size() {
+                assert_eq!(*z.add(off), 0, "alloc_zeroed must zero");
+            }
+            a.dealloc(z, layout);
+        }
+        let after = (allocations(), allocated_bytes());
+        // alloc + realloc + alloc_zeroed; deallocs are deliberately not
+        // counted (see module docs).
+        assert_eq!(after.0 - before.0, 3);
+        assert_eq!(after.1 - before.1, 64 + 128 + 64);
     }
 }

@@ -6,11 +6,14 @@
 //! per-series store's gather/scatter discipline, batching coverage, and
 //! JSON round-trips.
 
+use std::collections::HashMap;
+
 use fast_esrnn::baselines::{all_baselines, Comb, Forecaster, SeasonalNaive};
 use fast_esrnn::coordinator::{Batcher, ParamStore};
 use fast_esrnn::hw::{self, es_filter, seasonal_indices};
 use fast_esrnn::metrics::{mase, pinball, smape};
-use fast_esrnn::runtime::HostTensor;
+use fast_esrnn::runtime::native::{ComputeMode, NativeBackend};
+use fast_esrnn::runtime::{Backend, HostTensor, Manifest};
 use fast_esrnn::util::json::Json;
 use fast_esrnn::util::prop::{forall, gen_positive_series};
 use fast_esrnn::util::rng::Rng;
@@ -397,6 +400,171 @@ fn prop_dual_store_rotation_per_component() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------- pathological series
+//
+// ROADMAP's adversarial-correctness backstop, part (a): chutoro-style
+// pathological inputs — constant, bursty, near-zero and
+// subnormal-adjacent series — run through full scalar-vs-lanes
+// `train_step` + `predict` equivalence on a real Table-1 shape. The model
+// normalizes in log space (x = log(y / (level · seas))), so it is scale
+// invariant; these series probe the f32 edges where that invariance could
+// silently break in one kernel implementation but not the other.
+
+const PATH_FREQ: &str = "quarterly";
+const PATH_B: usize = 5; // ragged: one partial lane group + a masked slot
+
+fn path_len() -> usize {
+    NativeBackend::with_threads_mode(1, ComputeMode::Scalar)
+        .manifest()
+        .config(PATH_FREQ)
+        .unwrap()
+        .length
+}
+
+/// Full train_step/predict input map with the given batch values
+/// (mirrors the simd_parity suite's `train_state`, with `y` injected).
+fn pathological_state(backend: &NativeBackend, y: &[f32])
+                      -> HashMap<String, HostTensor> {
+    let cfg = backend.manifest().config(PATH_FREQ).unwrap().clone();
+    let b = PATH_B;
+    assert_eq!(y.len(), b * cfg.length);
+    let w = cfg.seasonality + cfg.seasonality2;
+    let rnn = backend.execute_init(PATH_FREQ, 42).unwrap();
+    let mut state: HashMap<String, HostTensor> =
+        rnn.into_iter().map(|(n, t)| (format!("params.{n}"), t)).collect();
+    state.insert("params.series.alpha_logit".into(),
+                 HostTensor::new(vec![b], vec![-0.5; b]).unwrap());
+    state.insert("params.series.gamma_logit".into(),
+                 HostTensor::new(vec![b], vec![-1.0; b]).unwrap());
+    state.insert("params.series.log_s_init".into(),
+                 HostTensor::new(vec![b, w], vec![0.0; b * w]).unwrap());
+    let keys: Vec<String> = state.keys().cloned().collect();
+    for k in &keys {
+        let z = HostTensor::zeros(state[k].shape.clone());
+        state.insert(k.replace("params.", "opt.m."), z.clone());
+        state.insert(k.replace("params.", "opt.v."), z);
+    }
+    state.insert("opt.step".into(), HostTensor::scalar(0.0));
+    state.insert("data.y".into(),
+                 HostTensor::new(vec![b, cfg.length], y.to_vec()).unwrap());
+    let mut cat = vec![0.0f32; b * 6];
+    for i in 0..b {
+        cat[i * 6 + i % 6] = 1.0;
+    }
+    state.insert("data.cat".into(),
+                 HostTensor::new(vec![b, 6], cat).unwrap());
+    let mut mask = vec![1.0f32; b];
+    mask[b - 1] = 0.0; // masked-slot zero-gradient contract rides along
+    state.insert("data.mask".into(),
+                 HostTensor::new(vec![b], mask).unwrap());
+    state.insert("lr".into(), HostTensor::scalar(1e-3));
+    state
+}
+
+fn run_pathological(backend: &NativeBackend, pname: &str,
+                    state: &HashMap<String, HostTensor>)
+                    -> Result<Vec<(String, HostTensor)>, String> {
+    backend
+        .execute_named(pname, &mut |spec| {
+            state.get(&spec.name).ok_or_else(
+                || anyhow::anyhow!("missing `{}`", spec.name))
+        })
+        .map_err(|e| format!("{pname}: {e:#}"))
+}
+
+/// Scalar (2 threads) vs lanes (3 threads) on one pathological batch:
+/// finite losses/forecasts, agreement within the simd_parity tolerances,
+/// and non-negative point forecasts (the model is multiplicative).
+fn check_scalar_lane_equivalence(label: &str, y: &[f32])
+                                 -> Result<(), String> {
+    let scalar = NativeBackend::with_threads_mode(2, ComputeMode::Scalar);
+    let lane = NativeBackend::with_threads_mode(3, ComputeMode::Lanes);
+    let state = pathological_state(&scalar, y);
+    let tname = Manifest::program_name(PATH_FREQ, PATH_B, "train_step");
+    let s_out = run_pathological(&scalar, &tname, &state)?;
+    let l_out = run_pathological(&lane, &tname, &state)?;
+    let (ls, ll) = (s_out[0].1.data[0], l_out[0].1.data[0]);
+    if !ls.is_finite() || !ll.is_finite() {
+        return Err(format!("{label}: non-finite loss ({ls} / {ll})"));
+    }
+    if (ls - ll).abs() > 5e-4 * ls.abs().max(1e-2) {
+        return Err(format!("{label}: scalar loss {ls} != lane loss {ll}"));
+    }
+    let pname = Manifest::program_name(PATH_FREQ, PATH_B, "predict");
+    let s_fc = run_pathological(&scalar, &pname, &state)?;
+    let l_fc = run_pathological(&lane, &pname, &state)?;
+    for (k, (sv, lv)) in
+        s_fc[0].1.data.iter().zip(&l_fc[0].1.data).enumerate()
+    {
+        if !sv.is_finite() || !lv.is_finite() {
+            return Err(format!(
+                "{label}: non-finite forecast[{k}] ({sv} / {lv})"));
+        }
+        if *sv < 0.0 || *lv < 0.0 {
+            return Err(format!(
+                "{label}: negative forecast[{k}] ({sv} / {lv})"));
+        }
+        if (sv - lv).abs() > 1e-3 * sv.abs().max(1.0) {
+            return Err(format!(
+                "{label}: forecast[{k}] scalar {sv} vs lane {lv}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pathological_constant() {
+    forall(117, 3, |r| {
+        // Dead-flat series at three decades of scale: zero variance must
+        // not produce NaN normalized windows or divergent kernels.
+        let level = [1e-3f32, 1.0, 1e4][r.below(3)];
+        vec![level; PATH_B * path_len()]
+    }, |y| check_scalar_lane_equivalence("constant", y));
+}
+
+#[test]
+fn prop_pathological_bursty() {
+    forall(118, 3, |r| {
+        // Calm baseline with 10x–1000x spikes at ~10% of positions: the
+        // log transform must tame the dynamic range identically in both
+        // kernel modes.
+        (0..PATH_B * path_len())
+            .map(|_| {
+                let base = r.uniform(0.5, 2.0) as f32;
+                if r.chance(0.1) {
+                    base * r.uniform(10.0, 1000.0) as f32
+                } else {
+                    base
+                }
+            })
+            .collect::<Vec<f32>>()
+    }, |y| check_scalar_lane_equivalence("bursty", y));
+}
+
+#[test]
+fn prop_pathological_near_zero() {
+    forall(119, 3, |r| {
+        // Positive but ~30 decades below 1: levels and seasonal indices
+        // follow the series scale, so intermediate ratios stay O(1) —
+        // unless a kernel sneaks in an absolute epsilon.
+        (0..PATH_B * path_len())
+            .map(|_| (r.uniform(1.0, 9.0) * 1e-30) as f32)
+            .collect::<Vec<f32>>()
+    }, |y| check_scalar_lane_equivalence("near_zero", y));
+}
+
+#[test]
+fn prop_pathological_subnormal_adjacent() {
+    forall(120, 3, |r| {
+        // Just above f32::MIN_POSITIVE (~1.18e-38): the edge where
+        // products of level × seasonality flirt with the subnormal range
+        // without handing the kernels actual subnormal inputs.
+        (0..PATH_B * path_len())
+            .map(|_| (r.uniform(2.0, 9.0) * 1e-37) as f32)
+            .collect::<Vec<f32>>()
+    }, |y| check_scalar_lane_equivalence("subnormal_adjacent", y));
 }
 
 #[test]

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Static-analysis gate: fesrnn-lint self-tests, then a full-tree scan.
+#
+#   scripts/lint_gate.sh [report-file]
+#
+# Runs the zero-dependency repo linter (tools/lint) as a required CI
+# job. The self-test suite first proves every rule still trips on its
+# embedded fixtures (a linter that silently stopped detecting anything
+# would pass an empty scan); the tree scan then enforces R1..R7 on the
+# real sources. The violation report is written to the given file
+# (default LINT_REPORT.txt) so CI can upload it as an artifact even on
+# failure.
+set -euo pipefail
+
+report="${1:-LINT_REPORT.txt}"
+
+echo "== fesrnn-lint self-tests (fixtures must trip every rule) =="
+cargo test -q --locked -p fesrnn-lint
+
+echo "== fesrnn-lint full-tree scan =="
+cargo run -q --locked -p fesrnn-lint -- --report "$report"

@@ -1,0 +1,1480 @@
+//! fesrnn-lint — token-level repo linter for the fast-esrnn workspace.
+//!
+//! The linter walks `rust/src` (plus `rust/tests`, `benches`, `examples`
+//! for the file-agnostic rules) with its own lexer — strings, raw
+//! strings, char literals and comments are handled, no `syn` — and
+//! enforces the repo invariants as machine-checked rules:
+//!
+//! * **R1** — no `.unwrap()` / `.expect(` / `panic!` in the serving
+//!   request path (`forecast/{http,pool,shard,router}.rs`) outside
+//!   `#[cfg(test)]`. Unwraps whose receiver is a lock-family call
+//!   (`lock()`, `read()`, `write()`, `wait(..)`, `join()`, …) are
+//!   exempt: propagating lock poisoning by crashing is deliberate
+//!   policy (a poisoned lock means a worker already panicked mid-update
+//!   and the shared state can no longer be trusted).
+//! * **R2** — no `thread::spawn` / `thread::scope` / `thread::Builder`
+//!   outside `runtime/native/pool.rs` and `forecast/{pool,http}.rs`:
+//!   every production thread belongs to one of the two pools.
+//! * **R3** — no allocation-prone calls (`Vec::new`, `vec!`, `to_vec`,
+//!   `clone`, `format!`, `Box::new`, `collect`) inside regions fenced
+//!   by `// lint:hot-path-begin` / `// lint:hot-path-end` — the static
+//!   twin of the `CountingAlloc` runtime gate over the PR-6
+//!   `train_step_inplace` steady-state kernels.
+//! * **R4** — every `unsafe` block / `unsafe impl` carries a
+//!   `// SAFETY:` comment directly above (or trailing on) its line.
+//! * **R5** — a per-function lock-acquisition extractor builds a
+//!   cross-file lock-order graph over the mutexes/rwlocks annotated
+//!   with `// lint:lock-name(<name>)` and fails on cycles (static
+//!   deadlock detection). Guard liveness follows `let`-bound guards to
+//!   `drop(g)` / end of scope; statement temporaries die at `;`.
+//!   Limited interprocedural propagation: a method call resolving to a
+//!   uniquely-named function in the scanned set contributes that
+//!   function's transitive acquisition set as edges from every lock
+//!   held at the call site.
+//! * **R6** — every file in `rust/tests/` must be registered as a
+//!   `[[test]]` target in `Cargo.toml` *and* named in
+//!   `.github/workflows/ci.yml`, so suites cannot silently drop out of
+//!   CI.
+//! * **R7** — no NaN-unsafe `.partial_cmp(..).unwrap()` comparators
+//!   anywhere (use `total_cmp`); R1's sibling rule.
+//!
+//! Violations are suppressible only via
+//! `// lint:allow(<rule>) — <reason>` on (or directly above) the
+//! offending line; an allow without a reason is itself a violation.
+//! The linter self-tests against embedded fixture snippets that trip
+//! every rule (`cargo test -p fesrnn-lint`).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+// ------------------------------------------------------------------ model
+
+#[derive(Debug, Clone)]
+struct Tok {
+    text: String,
+    line: usize,
+}
+
+#[derive(Debug, Default)]
+struct Scan {
+    path: String,
+    toks: Vec<Tok>,
+    /// line -> rules suppressed on that line via lint:allow.
+    allow: HashMap<usize, Vec<String>>,
+    /// lint:allow comments missing the mandatory reason text.
+    bad_allows: Vec<usize>,
+    comment_lines: HashSet<usize>,
+    safety_lines: HashSet<usize>,
+    hot_begin: Vec<usize>,
+    hot_end: Vec<usize>,
+    /// (annotation line, lock name) from lint:lock-name comments.
+    lock_names: Vec<(usize, String)>,
+    /// Line ranges covered by `#[cfg(test)]` items / `#[test]` fns.
+    test_ranges: Vec<(usize, usize)>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Violation {
+    rule: &'static str,
+    path: String,
+    line: usize,
+    msg: String,
+}
+
+impl Violation {
+    fn render(&self) -> String {
+        format!("{} {}:{} {}", self.rule, self.path, self.line, self.msg)
+    }
+}
+
+// ------------------------------------------------------------------ lexer
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize one source file; comments feed the directive side tables.
+fn lex(path: &str, src: &str) -> Scan {
+    let mut s = Scan { path: path.to_string(), ..Scan::default() };
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut code_on_line = false;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            code_on_line = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            note_line_comment(&mut s, &text, line, code_on_line);
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            i += 2;
+            let mut depth = 1usize;
+            let mut text = String::new();
+            while i < n && depth > 0 {
+                if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                text.push(b[i]);
+                i += 1;
+            }
+            for l in start_line..=line {
+                s.comment_lines.insert(l);
+            }
+            if text.contains("SAFETY:") {
+                s.safety_lines.insert(start_line);
+            }
+            continue;
+        }
+        // Raw (and raw-byte) string literals: r"..", r#".."#, br#".."#.
+        if c == 'r' || c == 'b' {
+            if let Some((next_i, newlines)) = raw_string_span(&b, i) {
+                let start_line = line;
+                i = next_i;
+                line += newlines;
+                s.toks.push(Tok { text: "\u{1}str".into(), line: start_line });
+                code_on_line = true;
+                continue;
+            }
+        }
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            s.toks.push(Tok { text: "\u{1}str".into(), line: start_line });
+            code_on_line = true;
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime (`'a`) vs char literal (`'x'`, `'\n'`).
+            let c1 = if i + 1 < n { b[i + 1] } else { '\0' };
+            let c2 = if i + 2 < n { b[i + 2] } else { '\0' };
+            if is_ident_start(c1) && c2 != '\'' {
+                i += 1;
+                while i < n && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                s.toks.push(Tok { text: "\u{1}life".into(), line });
+            } else {
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '\'' {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                s.toks.push(Tok { text: "\u{1}char".into(), line });
+            }
+            code_on_line = true;
+            continue;
+        }
+        if is_ident_start(c) || c.is_ascii_digit() {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            s.toks.push(Tok { text, line });
+            code_on_line = true;
+            continue;
+        }
+        s.toks.push(Tok { text: c.to_string(), line });
+        code_on_line = true;
+        i += 1;
+    }
+    s.test_ranges = find_test_ranges(&s.toks);
+    s
+}
+
+/// `r"…"`, `r#"…"#`, `br#"…"#` — returns (index past literal, newlines).
+fn raw_string_span(b: &[char], at: usize) -> Option<(usize, usize)> {
+    let mut j = at;
+    if b[j] == 'b' {
+        j += 1;
+        if j >= b.len() || b[j] != 'r' {
+            return None;
+        }
+    }
+    if b[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != '"' {
+        return None;
+    }
+    j += 1;
+    let mut newlines = 0usize;
+    while j < b.len() {
+        if b[j] == '\n' {
+            newlines += 1;
+        }
+        if b[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < b.len() && b[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some((j + 1 + hashes, newlines));
+            }
+        }
+        j += 1;
+    }
+    Some((b.len(), newlines))
+}
+
+fn note_line_comment(s: &mut Scan, text: &str, line: usize, trailing: bool) {
+    s.comment_lines.insert(line);
+    if text.contains("SAFETY:") {
+        s.safety_lines.insert(line);
+    }
+    // A trailing comment suppresses its own line; a standalone comment
+    // suppresses the line below it.
+    let target = if trailing { line } else { line + 1 };
+    if let Some(pos) = text.find("lint:allow(") {
+        let rest = &text[pos + "lint:allow(".len()..];
+        if let Some(close) = rest.find(')') {
+            let rules: Vec<String> = rest[..close]
+                .split(',')
+                .map(|r| r.trim().to_string())
+                .filter(|r| !r.is_empty())
+                .collect();
+            let reason = rest[close + 1..]
+                .trim_start_matches([' ', '\t', '—', '–', '-', ':']);
+            if reason.trim().is_empty() || rules.is_empty() {
+                s.bad_allows.push(line);
+            } else {
+                s.allow.entry(target).or_default().extend(rules);
+            }
+        } else {
+            s.bad_allows.push(line);
+        }
+    }
+    if text.contains("lint:hot-path-begin") {
+        s.hot_begin.push(line);
+    }
+    if text.contains("lint:hot-path-end") {
+        s.hot_end.push(line);
+    }
+    if let Some(pos) = text.find("lint:lock-name(") {
+        let rest = &text[pos + "lint:lock-name(".len()..];
+        if let Some(close) = rest.find(')') {
+            s.lock_names.push((line, rest[..close].trim().to_string()));
+        }
+    }
+}
+
+fn tok<'a>(toks: &'a [Tok], i: usize) -> &'a str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut i = open;
+    while i < toks.len() {
+        match tok(toks, i) {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Line ranges under `#[cfg(test)]` items and `#[test]` functions.
+fn find_test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_cfg_test = tok(toks, i) == "#"
+            && tok(toks, i + 1) == "["
+            && tok(toks, i + 2) == "cfg"
+            && tok(toks, i + 3) == "("
+            && tok(toks, i + 4) == "test"
+            && tok(toks, i + 5) == ")"
+            && tok(toks, i + 6) == "]";
+        let is_test_attr = tok(toks, i) == "#"
+            && tok(toks, i + 1) == "["
+            && tok(toks, i + 2) == "test"
+            && tok(toks, i + 3) == "]";
+        if is_cfg_test || is_test_attr {
+            let mut j = i + if is_cfg_test { 7 } else { 4 };
+            while j < toks.len() && tok(toks, j) != "{" {
+                j += 1;
+            }
+            if j < toks.len() {
+                let close = match_brace(toks, j);
+                ranges.push((toks[i].line, toks[close].line));
+                i = close + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], line: usize) -> bool {
+    ranges.iter().any(|&(lo, hi)| line >= lo && line <= hi)
+}
+
+fn allowed(scan: &Scan, rule: &str, line: usize) -> bool {
+    scan.allow
+        .get(&line)
+        .is_some_and(|rs| rs.iter().any(|r| r == rule))
+}
+
+fn push(out: &mut Vec<Violation>, scan: &Scan, rule: &'static str,
+        line: usize, msg: String) {
+    if !allowed(scan, rule, line) {
+        out.push(Violation { rule, path: scan.path.clone(), line, msg });
+    }
+}
+
+// ------------------------------------------------------------- rules R1/R7
+
+const SERVING_FILES: [&str; 4] = [
+    "forecast/http.rs",
+    "forecast/pool.rs",
+    "forecast/shard.rs",
+    "forecast/router.rs",
+];
+
+const LOCK_FAMILY: [&str; 9] = [
+    "lock", "read", "write", "wait", "wait_timeout", "wait_while", "join",
+    "get_mut", "into_inner",
+];
+
+fn is_serving_file(path: &str) -> bool {
+    SERVING_FILES.iter().any(|f| path.ends_with(f))
+}
+
+/// `.unwrap()` / `.expect(` whose receiver is a lock-family call — the
+/// deliberate crash-on-poison pattern R1 exempts.
+fn is_poison_unwrap(toks: &[Tok], dot: usize) -> bool {
+    if dot == 0 || tok(toks, dot - 1) != ")" {
+        return false;
+    }
+    let mut depth = 0i64;
+    let mut j = dot - 1;
+    loop {
+        match tok(toks, j) {
+            ")" => depth += 1,
+            "(" => depth -= 1,
+            _ => {}
+        }
+        if depth == 0 {
+            break;
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j > 0 && LOCK_FAMILY.contains(&tok(toks, j - 1))
+}
+
+fn rule_r1(scan: &Scan, out: &mut Vec<Violation>) {
+    if !is_serving_file(&scan.path) {
+        return;
+    }
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        if in_ranges(&scan.test_ranges, line) {
+            continue;
+        }
+        if tok(toks, i) == "."
+            && tok(toks, i + 1) == "unwrap"
+            && tok(toks, i + 2) == "("
+            && tok(toks, i + 3) == ")"
+            && !is_poison_unwrap(toks, i)
+        {
+            push(out, scan, "R1", line,
+                 "`.unwrap()` in the serving request path (use typed \
+                  errors; only lock-poison unwraps are exempt)"
+                     .into());
+        }
+        if tok(toks, i) == "."
+            && tok(toks, i + 1) == "expect"
+            && tok(toks, i + 2) == "("
+            && !is_poison_unwrap(toks, i)
+        {
+            push(out, scan, "R1", line,
+                 "`.expect(..)` in the serving request path".into());
+        }
+        if tok(toks, i) == "panic" && tok(toks, i + 1) == "!" {
+            push(out, scan, "R1", line,
+                 "`panic!` in the serving request path".into());
+        }
+    }
+}
+
+fn rule_r7(scan: &Scan, out: &mut Vec<Violation>) {
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        if tok(toks, i) == "."
+            && tok(toks, i + 1) == "partial_cmp"
+            && tok(toks, i + 2) == "("
+        {
+            let mut depth = 0i64;
+            let mut j = i + 2;
+            while j < toks.len() {
+                match tok(toks, j) {
+                    "(" => depth += 1,
+                    ")" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if tok(toks, j + 1) == "." && tok(toks, j + 2) == "unwrap" {
+                push(out, scan, "R7", toks[i].line,
+                     "NaN-unsafe `partial_cmp(..).unwrap()` comparator \
+                      (use `total_cmp`)"
+                         .into());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule R2
+
+const SPAWN_FILES: [&str; 3] =
+    ["runtime/native/pool.rs", "forecast/pool.rs", "forecast/http.rs"];
+
+fn rule_r2(scan: &Scan, out: &mut Vec<Violation>) {
+    if SPAWN_FILES.iter().any(|f| scan.path.ends_with(f)) {
+        return;
+    }
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        if in_ranges(&scan.test_ranges, line) {
+            continue;
+        }
+        if tok(toks, i) == "thread"
+            && tok(toks, i + 1) == ":"
+            && tok(toks, i + 2) == ":"
+            && matches!(tok(toks, i + 3), "spawn" | "scope" | "Builder")
+        {
+            push(out, scan, "R2", line,
+                 format!("`thread::{}` outside the compute/serving pools",
+                         tok(toks, i + 3)));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule R3
+
+fn hot_ranges(scan: &Scan, out: &mut Vec<Violation>) -> Vec<(usize, usize)> {
+    if scan.hot_begin.len() != scan.hot_end.len() {
+        out.push(Violation {
+            rule: "R3",
+            path: scan.path.clone(),
+            line: *scan
+                .hot_begin
+                .last()
+                .or(scan.hot_end.last())
+                .unwrap_or(&0),
+            msg: "unbalanced lint:hot-path-begin/end fences".into(),
+        });
+        return Vec::new();
+    }
+    scan.hot_begin
+        .iter()
+        .zip(&scan.hot_end)
+        .map(|(&b, &e)| (b, e))
+        .collect()
+}
+
+fn rule_r3(scan: &Scan, out: &mut Vec<Violation>) {
+    let ranges = hot_ranges(scan, out);
+    if ranges.is_empty() {
+        return;
+    }
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        if !in_ranges(&ranges, line) {
+            continue;
+        }
+        let hit: Option<&str> = if tok(toks, i) == "Vec"
+            && tok(toks, i + 1) == ":"
+            && tok(toks, i + 2) == ":"
+            && tok(toks, i + 3) == "new"
+        {
+            Some("Vec::new")
+        } else if tok(toks, i) == "Box"
+            && tok(toks, i + 1) == ":"
+            && tok(toks, i + 2) == ":"
+            && tok(toks, i + 3) == "new"
+        {
+            Some("Box::new")
+        } else if tok(toks, i) == "vec" && tok(toks, i + 1) == "!" {
+            Some("vec!")
+        } else if tok(toks, i) == "format" && tok(toks, i + 1) == "!" {
+            Some("format!")
+        } else if matches!(tok(toks, i + 1), "clone" | "to_vec" | "collect"
+                           | "to_string" | "to_owned")
+            && (tok(toks, i) == "." || tok(toks, i) == ":")
+            && (tok(toks, i + 2) == "(" || tok(toks, i + 2) == ":")
+        {
+            Some(match tok(toks, i + 1) {
+                "clone" => "clone",
+                "to_vec" => "to_vec",
+                "collect" => "collect",
+                "to_string" => "to_string",
+                _ => "to_owned",
+            })
+        } else {
+            None
+        };
+        if let Some(name) = hit {
+            push(out, scan, "R3", line,
+                 format!("allocation-prone `{name}` inside a \
+                          lint:hot-path fence"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule R4
+
+fn rule_r4(scan: &Scan, out: &mut Vec<Violation>) {
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        if tok(toks, i) != "unsafe" {
+            continue;
+        }
+        let next = tok(toks, i + 1);
+        if next != "{" && next != "impl" {
+            continue; // `unsafe fn` declarations are R4-exempt (clippy
+                      // semantics: the body, not the signature, needs
+                      // justification at the call site).
+        }
+        let line = toks[i].line;
+        let mut ok = scan.safety_lines.contains(&line);
+        let mut l = line.saturating_sub(1);
+        while !ok && l > 0 && scan.comment_lines.contains(&l) {
+            ok = scan.safety_lines.contains(&l);
+            l -= 1;
+        }
+        if !ok {
+            push(out, scan, "R4", line,
+                 format!("`unsafe {}` without a `// SAFETY:` comment",
+                         if next == "{" { "block" } else { "impl" }));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule R5
+
+#[derive(Debug, Clone)]
+struct GuardSlot {
+    /// Binding name; `None` for statement temporaries.
+    name: Option<String>,
+    lock: String,
+    depth: i64,
+}
+
+#[derive(Debug, Default)]
+struct FnInfo {
+    /// Locks this function acquires directly.
+    direct: BTreeSet<String>,
+    /// Method/function names it calls with the locks held at that call.
+    calls: Vec<(Vec<String>, String)>,
+    /// Direct (held -> acquired) edges with the acquisition line.
+    edges: Vec<(String, String, usize)>,
+}
+
+/// Registered locks: field ident -> [(file, qualified name)].
+fn build_registry(scans: &[Scan], out: &mut Vec<Violation>)
+                  -> HashMap<String, Vec<(String, String)>> {
+    let mut reg: HashMap<String, Vec<(String, String)>> = HashMap::new();
+    for scan in scans {
+        for (line, qual) in &scan.lock_names {
+            // The annotation binds to the field ident on its own line
+            // (trailing comment) or the next line.
+            let mut field = None;
+            for i in 0..scan.toks.len() {
+                let l = scan.toks[i].line;
+                if (l == *line || l == line + 1)
+                    && tok(&scan.toks, i + 1) == ":"
+                    && tok(&scan.toks, i + 2) != ":"
+                    && is_ident_start(
+                        scan.toks[i].text.chars().next().unwrap_or(' '))
+                {
+                    field = Some(scan.toks[i].text.clone());
+                    break;
+                }
+            }
+            match field {
+                Some(f) => reg
+                    .entry(f)
+                    .or_default()
+                    .push((scan.path.clone(), qual.clone())),
+                None => out.push(Violation {
+                    rule: "R5",
+                    path: scan.path.clone(),
+                    line: *line,
+                    msg: format!("lint:lock-name({qual}) is not attached \
+                                  to a field declaration"),
+                }),
+            }
+        }
+    }
+    reg
+}
+
+/// Resolve the receiver of a `.lock()/.read()/.write()` chain ending at
+/// the `.` token `dot` to a registered lock (file-local first).
+fn resolve_receiver(toks: &[Tok], dot: usize, file: &str,
+                    reg: &HashMap<String, Vec<(String, String)>>)
+                    -> Option<String> {
+    let mut j = dot;
+    if j == 0 {
+        return None;
+    }
+    j -= 1;
+    if tok(toks, j) == "]" {
+        let mut depth = 0i64;
+        loop {
+            match tok(toks, j) {
+                "]" => depth += 1,
+                "[" => depth -= 1,
+                _ => {}
+            }
+            if depth == 0 {
+                break;
+            }
+            if j == 0 {
+                return None;
+            }
+            j -= 1;
+        }
+        if j == 0 {
+            return None;
+        }
+        j -= 1;
+    }
+    let field = tok(toks, j);
+    let entries = reg.get(field)?;
+    if let Some((_, q)) = entries.iter().find(|(f, _)| f == file) {
+        return Some(q.clone());
+    }
+    if entries.len() == 1 {
+        return Some(entries[0].1.clone());
+    }
+    None
+}
+
+/// Is `toks[at..]` the start of a statement binding (`let [mut] x = …`)?
+/// Walks backwards from the receiver chain start.
+fn binding_name(toks: &[Tok], chain_start: usize) -> Option<String> {
+    let mut j = chain_start;
+    if j == 0 || tok(toks, j - 1) != "=" {
+        return None;
+    }
+    j -= 1; // at '='
+    if j == 0 {
+        return None;
+    }
+    let name = tok(toks, j - 1).to_string();
+    if !name.chars().next().map(is_ident_start).unwrap_or(false) {
+        return None;
+    }
+    let mut k = j - 1;
+    if k > 0 && tok(toks, k - 1) == "mut" {
+        k -= 1;
+    }
+    if k > 0 && tok(toks, k - 1) == "let" {
+        return Some(name);
+    }
+    None
+}
+
+/// Start of the receiver chain for the method call whose `.` is at `dot`
+/// (walks back over `ident`, `.`, `self`, and balanced `[..]`).
+fn chain_start(toks: &[Tok], dot: usize) -> usize {
+    let mut j = dot;
+    loop {
+        if j == 0 {
+            return 0;
+        }
+        let prev = tok(toks, j - 1);
+        if prev == "]" {
+            let mut depth = 0i64;
+            let mut k = j - 1;
+            loop {
+                match tok(toks, k) {
+                    "]" => depth += 1,
+                    "[" => depth -= 1,
+                    _ => {}
+                }
+                if depth == 0 {
+                    break;
+                }
+                if k == 0 {
+                    return 0;
+                }
+                k -= 1;
+            }
+            j = k;
+            continue;
+        }
+        if prev == "."
+            || prev
+                .chars()
+                .next()
+                .map(|c| is_ident_start(c) || c.is_ascii_digit())
+                .unwrap_or(false)
+        {
+            j -= 1;
+            continue;
+        }
+        return j;
+    }
+}
+
+/// Extract per-function acquisition info for one file.
+fn extract_fns(scan: &Scan,
+               reg: &HashMap<String, Vec<(String, String)>>)
+               -> BTreeMap<String, FnInfo> {
+    let toks = &scan.toks;
+    let mut fns: BTreeMap<String, FnInfo> = BTreeMap::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if tok(toks, i) != "fn" {
+            i += 1;
+            continue;
+        }
+        let name = tok(toks, i + 1).to_string();
+        // Find the body `{`, skipping the parameter list and any
+        // parenthesized groups in the return type.
+        let mut j = i + 2;
+        let mut paren = 0i64;
+        while j < toks.len() {
+            match tok(toks, j) {
+                "(" => paren += 1,
+                ")" => paren -= 1,
+                "{" if paren == 0 => break,
+                ";" if paren == 0 => break, // trait method, no body
+                "}" if paren == 0 => break, // `fn(..)` pointer type, not a def
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= toks.len() || tok(toks, j) != "{" {
+            i = j;
+            continue;
+        }
+        let close = match_brace(toks, j);
+        let info = scan_body(scan, j, close, reg);
+        fns.entry(name).or_default().merge(info);
+        i = close + 1;
+    }
+    fns
+}
+
+impl FnInfo {
+    fn merge(&mut self, other: FnInfo) {
+        self.direct.extend(other.direct);
+        self.calls.extend(other.calls);
+        self.edges.extend(other.edges);
+    }
+}
+
+fn scan_body(scan: &Scan, open: usize, close: usize,
+             reg: &HashMap<String, Vec<(String, String)>>) -> FnInfo {
+    let toks = &scan.toks;
+    let mut info = FnInfo::default();
+    let mut depth = 0i64;
+    let mut live: Vec<GuardSlot> = Vec::new();
+    let mut i = open;
+    while i <= close {
+        match tok(toks, i) {
+            "{" => {
+                depth += 1;
+                // A block opener ends the current statement: temporaries
+                // created in the statement head are (approximately)
+                // dead once the body runs.
+                live.retain(|g| g.name.is_some() || g.depth != depth - 1);
+            }
+            "}" => {
+                depth -= 1;
+                live.retain(|g| g.depth <= depth);
+            }
+            ";" => {
+                live.retain(|g| g.name.is_some() || g.depth != depth);
+            }
+            "drop" if tok(toks, i + 1) == "("
+                && tok(toks, i + 3) == ")" =>
+            {
+                let victim = tok(toks, i + 2).to_string();
+                live.retain(|g| g.name.as_deref() != Some(victim.as_str()));
+            }
+            "." => {
+                let m = tok(toks, i + 1);
+                if tok(toks, i + 2) == "(" {
+                    if matches!(m, "lock" | "read" | "write") {
+                        if let Some(lockname) =
+                            resolve_receiver(toks, i, &scan.path, reg)
+                        {
+                            let line = toks[i].line;
+                            for g in &live {
+                                if g.lock != lockname {
+                                    info.edges.push((g.lock.clone(),
+                                                     lockname.clone(),
+                                                     line));
+                                }
+                            }
+                            info.direct.insert(lockname.clone());
+                            let start = chain_start(toks, i);
+                            live.push(GuardSlot {
+                                name: binding_name(toks, start),
+                                lock: lockname,
+                                depth,
+                            });
+                        }
+                    } else if !matches!(m, "unwrap" | "expect" | "wait"
+                                        | "wait_timeout" | "wait_while"
+                                        | "notify_all" | "notify_one")
+                        && !live.is_empty()
+                    {
+                        let held: Vec<String> =
+                            live.iter().map(|g| g.lock.clone()).collect();
+                        info.calls.push((held, m.to_string()));
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    info
+}
+
+/// Build the cross-file lock graph and fail on cycles.
+fn rule_r5(scans: &[Scan], out: &mut Vec<Violation>)
+           -> BTreeMap<String, BTreeSet<String>> {
+    let reg = build_registry(scans, out);
+    let mut all_fns: BTreeMap<String, Vec<FnInfo>> = BTreeMap::new();
+    for scan in scans {
+        if scan.lock_names.is_empty() {
+            continue;
+        }
+        for (name, info) in extract_fns(scan, &reg) {
+            all_fns.entry(name).or_default().push(info);
+        }
+    }
+    // Transitive acquisition sets, propagated only through call targets
+    // whose name is defined exactly once in the scanned set (ambiguous
+    // names are skipped — conservative, documented).
+    let mut totals: BTreeMap<String, BTreeSet<String>> = all_fns
+        .iter()
+        .map(|(n, infos)| {
+            let mut s = BTreeSet::new();
+            for i in infos {
+                s.extend(i.direct.iter().cloned());
+            }
+            (n.clone(), s)
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for (name, infos) in &all_fns {
+            let mut add = BTreeSet::new();
+            for info in infos {
+                for (_, callee) in &info.calls {
+                    if all_fns.get(callee).map(Vec::len) == Some(1) {
+                        if let Some(t) = totals.get(callee) {
+                            add.extend(t.iter().cloned());
+                        }
+                    }
+                }
+            }
+            let t = totals.entry(name.clone()).or_default();
+            for l in add {
+                changed |= t.insert(l);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Edges: direct + (held at call site -> callee's transitive set).
+    let mut graph: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for infos in all_fns.values() {
+        for info in infos {
+            for (from, to, _line) in &info.edges {
+                graph.entry(from.clone()).or_default().insert(to.clone());
+            }
+            for (held, callee) in &info.calls {
+                if all_fns.get(callee).map(Vec::len) != Some(1) {
+                    continue;
+                }
+                if let Some(t) = totals.get(callee) {
+                    for h in held {
+                        for l in t {
+                            if l != h {
+                                graph
+                                    .entry(h.clone())
+                                    .or_default()
+                                    .insert(l.clone());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Cycle detection: color DFS (0 unvisited, 1 on stack, 2 done).
+    // Graphs here are a dozen nodes, so recursion depth is a non-issue.
+    fn dfs(n: &str, graph: &BTreeMap<String, BTreeSet<String>>,
+           color: &mut HashMap<String, u8>) -> Option<(String, String)> {
+        color.insert(n.to_string(), 1);
+        if let Some(succs) = graph.get(n) {
+            for s in succs {
+                match color.get(s.as_str()).copied().unwrap_or(0) {
+                    1 => return Some((n.to_string(), s.clone())),
+                    0 => {
+                        if let Some(cyc) = dfs(s, graph, color) {
+                            return Some(cyc);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        color.insert(n.to_string(), 2);
+        None
+    }
+    let mut color: HashMap<String, u8> = HashMap::new();
+    let roots: Vec<String> = graph.keys().cloned().collect();
+    for r in roots {
+        if color.get(r.as_str()).copied().unwrap_or(0) == 0 {
+            if let Some((a, b)) = dfs(&r, &graph, &mut color) {
+                out.push(Violation {
+                    rule: "R5",
+                    path: "(lock graph)".into(),
+                    line: 0,
+                    msg: format!("lock-order cycle: acquiring `{b}` while \
+                                  holding `{a}` closes a loop"),
+                });
+                break;
+            }
+        }
+    }
+    graph
+}
+
+// ---------------------------------------------------------------- rule R6
+
+fn word_in(text: &str, word: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !text[..at]
+                .chars()
+                .next_back()
+                .map(is_ident_char)
+                .unwrap_or(false);
+        let after = at + word.len();
+        let after_ok = after >= text.len()
+            || !text[after..]
+                .chars()
+                .next()
+                .map(is_ident_char)
+                .unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+fn rule_r6_strings(stems: &[String], cargo_toml: &str, ci_yml: &str)
+                   -> Vec<Violation> {
+    let mut out = Vec::new();
+    for stem in stems {
+        if !cargo_toml.contains(&format!("name = \"{stem}\"")) {
+            out.push(Violation {
+                rule: "R6",
+                path: format!("rust/tests/{stem}.rs"),
+                line: 0,
+                msg: format!("test file has no `[[test]] name = \
+                              \"{stem}\"` entry in Cargo.toml"),
+            });
+        }
+        if !word_in(ci_yml, stem) {
+            out.push(Violation {
+                rule: "R6",
+                path: format!("rust/tests/{stem}.rs"),
+                line: 0,
+                msg: format!("suite `{stem}` is never named in \
+                              .github/workflows/ci.yml"),
+            });
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------- driver
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> =
+        rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, files);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            files.push(p);
+        }
+    }
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+fn lint_tree(root: &Path) -> (Vec<Violation>,
+                              BTreeMap<String, BTreeSet<String>>, usize) {
+    let mut out = Vec::new();
+    let mut src_scans = Vec::new();
+    let mut other_scans = Vec::new();
+    for (dir, is_src) in [("rust/src", true), ("rust/tests", false),
+                          ("benches", false), ("examples", false)] {
+        let mut files = Vec::new();
+        walk(&root.join(dir), &mut files);
+        for f in files {
+            let Ok(src) = fs::read_to_string(&f) else { continue };
+            let scan = lex(&rel(root, &f), &src);
+            if is_src {
+                src_scans.push(scan);
+            } else {
+                other_scans.push(scan);
+            }
+        }
+    }
+    for scan in &src_scans {
+        rule_r1(scan, &mut out);
+        rule_r2(scan, &mut out);
+        rule_r3(scan, &mut out);
+    }
+    let graph = rule_r5(&src_scans, &mut out);
+    for scan in src_scans.iter().chain(&other_scans) {
+        rule_r4(scan, &mut out);
+        rule_r7(scan, &mut out);
+        for &line in &scan.bad_allows {
+            out.push(Violation {
+                rule: "ALLOW",
+                path: scan.path.clone(),
+                line,
+                msg: "lint:allow without a rule list or reason \
+                      (`// lint:allow(<rule>) — <reason>`)"
+                    .into(),
+            });
+        }
+    }
+    // R6 against the real manifest + workflow.
+    let mut stems = Vec::new();
+    let mut tests = Vec::new();
+    walk(&root.join("rust/tests"), &mut tests);
+    for t in tests {
+        if let Some(stem) = t.file_stem() {
+            stems.push(stem.to_string_lossy().to_string());
+        }
+    }
+    let cargo = fs::read_to_string(root.join("Cargo.toml"))
+        .unwrap_or_default();
+    let ci = fs::read_to_string(root.join(".github/workflows/ci.yml"))
+        .unwrap_or_default();
+    out.extend(rule_r6_strings(&stems, &cargo, &ci));
+    let n_files = src_scans.len() + other_scans.len();
+    out.sort_by(|a, b| {
+        (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
+    });
+    (out, graph, n_files)
+}
+
+fn main() {
+    let mut root = PathBuf::from(".");
+    let mut report: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                if let Some(v) = args.next() {
+                    root = PathBuf::from(v);
+                }
+            }
+            "--report" => report = args.next().map(PathBuf::from),
+            other => {
+                eprintln!("fesrnn-lint: unknown argument `{other}`");
+                eprintln!("usage: fesrnn-lint [--root DIR] [--report FILE]");
+                std::process::exit(2);
+            }
+        }
+    }
+    let (violations, graph, n_files) = lint_tree(&root);
+    let mut text = String::new();
+    for v in &violations {
+        let _ = writeln!(text, "{}", v.render());
+    }
+    let _ = writeln!(text, "lock-order graph ({} edges):",
+                     graph.values().map(BTreeSet::len).sum::<usize>());
+    for (from, tos) in &graph {
+        for to in tos {
+            let _ = writeln!(text, "  {from} -> {to}");
+        }
+    }
+    let _ = writeln!(text, "{} violation(s) across {} files",
+                     violations.len(), n_files);
+    print!("{text}");
+    if let Some(path) = report {
+        if let Err(e) = fs::write(&path, &text) {
+            eprintln!("fesrnn-lint: cannot write {}: {e}", path.display());
+            std::process::exit(2);
+        }
+    }
+    if !violations.is_empty() {
+        std::process::exit(1);
+    }
+}
+
+// ------------------------------------------------------------- self-tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Violation> {
+        let scan = lex(path, src);
+        let mut out = Vec::new();
+        rule_r1(&scan, &mut out);
+        rule_r2(&scan, &mut out);
+        rule_r3(&scan, &mut out);
+        rule_r4(&scan, &mut out);
+        rule_r7(&scan, &mut out);
+        rule_r5(std::slice::from_ref(&scan), &mut out);
+        for &line in &scan.bad_allows {
+            out.push(Violation {
+                rule: "ALLOW",
+                path: scan.path.clone(),
+                line,
+                msg: String::new(),
+            });
+        }
+        out
+    }
+
+    fn rules(vs: &[Violation]) -> Vec<&str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn r1_flags_unwrap_expect_panic_in_serving_path() {
+        let fixture = r#"
+fn handle(x: Option<u32>) -> u32 {
+    let v = x.unwrap();
+    let w = x.expect("boom");
+    if v + w == 0 { panic!("zero"); }
+    v
+}
+"#;
+        let vs = lint_one("rust/src/forecast/http.rs", fixture);
+        assert_eq!(rules(&vs), ["R1", "R1", "R1"], "{vs:?}");
+        // Same source outside the serving path: no R1.
+        let vs = lint_one("rust/src/hw/mod.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn r1_exempts_lock_poison_unwraps_and_tests() {
+        let fixture = r#"
+fn poisoned(m: &std::sync::Mutex<u32>) -> u32 {
+    let g = m.lock().unwrap();
+    let h = handle.join().unwrap();
+    *g + h
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let x: Option<u32> = None;
+        x.unwrap();
+    }
+}
+"#;
+        let vs = lint_one("rust/src/forecast/pool.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn r1_respects_allow_with_reason_only() {
+        let with_reason = "fn f(x: Option<u32>) {\n    \
+             x.unwrap(); // lint:allow(R1) — startup path, cannot race\n}\n";
+        let vs = lint_one("rust/src/forecast/shard.rs", with_reason);
+        assert!(vs.is_empty(), "{vs:?}");
+        let no_reason = "fn f(x: Option<u32>) {\n    \
+             x.unwrap(); // lint:allow(R1)\n}\n";
+        let vs = lint_one("rust/src/forecast/shard.rs", no_reason);
+        assert_eq!(rules(&vs), ["R1", "ALLOW"], "{vs:?}");
+    }
+
+    #[test]
+    fn r2_flags_spawn_outside_pools() {
+        let fixture = "fn f() { std::thread::spawn(|| {}); }\n";
+        let vs = lint_one("rust/src/coordinator/trainer.rs", fixture);
+        assert_eq!(rules(&vs), ["R2"], "{vs:?}");
+        let vs = lint_one("rust/src/runtime/native/pool.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+        let scoped = "fn f() { std::thread::scope(|s| {}); }\n";
+        let vs = lint_one("rust/src/runtime/native/mod.rs", scoped);
+        assert_eq!(rules(&vs), ["R2"], "{vs:?}");
+    }
+
+    #[test]
+    fn r3_flags_allocation_inside_fence_only() {
+        let fixture = r#"
+fn cold() -> Vec<u32> {
+    let v: Vec<u32> = (0..4).collect();
+    v
+}
+// lint:hot-path-begin
+fn hot(xs: &[f32], out: &mut Vec<f32>) {
+    let a = Vec::new();
+    let b = vec![0.0f32; 4];
+    let c = xs.to_vec();
+    let d = out.clone();
+    let e = format!("{a:?}{b:?}{c:?}{d:?}");
+    let f = Box::new(e);
+    let g: Vec<f32> = xs.iter().copied().collect();
+}
+// lint:hot-path-end
+"#;
+        let vs = lint_one("rust/src/runtime/native/mod.rs", fixture);
+        assert_eq!(rules(&vs), ["R3"; 7], "{vs:?}");
+    }
+
+    #[test]
+    fn r3_reports_unbalanced_fence() {
+        let fixture = "// lint:hot-path-begin\nfn f() {}\n";
+        let vs = lint_one("rust/src/runtime/native/lanes.rs", fixture);
+        assert_eq!(rules(&vs), ["R3"], "{vs:?}");
+    }
+
+    #[test]
+    fn r4_requires_safety_comments() {
+        let bad = "fn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        let vs = lint_one("rust/src/util/allocmeter.rs", bad);
+        assert_eq!(rules(&vs), ["R4"], "{vs:?}");
+        let good = "fn f(p: *const u32) -> u32 {\n    \
+             // SAFETY: caller guarantees p is valid.\n    \
+             unsafe { *p }\n}\n";
+        let vs = lint_one("rust/src/util/allocmeter.rs", good);
+        assert!(vs.is_empty(), "{vs:?}");
+        let bad_impl = "struct T(*const u32);\nunsafe impl Send for T {}\n";
+        let vs = lint_one("rust/src/runtime/native/pool.rs", bad_impl);
+        assert_eq!(rules(&vs), ["R4"], "{vs:?}");
+    }
+
+    #[test]
+    fn r4_ignores_unsafe_keywords_in_strings_and_comments() {
+        let fixture = "fn f() -> &'static str {\n    \
+             // unsafe { not real code }\n    \
+             \"unsafe { also not code }\"\n}\n";
+        let vs = lint_one("rust/src/util/json.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn r5_detects_lock_order_cycles() {
+        let fixture = r#"
+use std::sync::Mutex;
+struct S {
+    // lint:lock-name(a)
+    a: Mutex<u32>,
+    // lint:lock-name(b)
+    b: Mutex<u32>,
+}
+impl S {
+    fn ab(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+    fn ba(&self) {
+        let g = self.b.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}
+"#;
+        let vs = lint_one("rust/src/forecast/pool.rs", fixture);
+        assert!(rules(&vs).contains(&"R5"), "{vs:?}");
+    }
+
+    #[test]
+    fn r5_accepts_consistent_order_and_temporaries() {
+        let fixture = r#"
+use std::sync::Mutex;
+struct S {
+    // lint:lock-name(a)
+    a: Mutex<u32>,
+    // lint:lock-name(b)
+    b: Mutex<u32>,
+}
+impl S {
+    fn ab(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+    fn b_then_a_released(&self) {
+        *self.b.lock().unwrap() += 1;
+        let g = self.a.lock().unwrap();
+        drop(g);
+    }
+}
+"#;
+        let vs = lint_one("rust/src/forecast/pool.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn r5_guard_dropped_before_second_lock_is_clean() {
+        let fixture = r#"
+use std::sync::Mutex;
+struct S {
+    // lint:lock-name(x)
+    x: Mutex<u32>,
+    // lint:lock-name(y)
+    y: Mutex<u32>,
+}
+impl S {
+    fn xy(&self) {
+        let g = self.x.lock().unwrap();
+        drop(g);
+        let h = self.y.lock().unwrap();
+        drop(h);
+    }
+    fn yx(&self) {
+        let h = self.y.lock().unwrap();
+        drop(h);
+        let g = self.x.lock().unwrap();
+        drop(g);
+    }
+}
+"#;
+        let vs = lint_one("rust/src/forecast/shard.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn r6_flags_unregistered_and_unnamed_suites() {
+        let stems = vec!["pipeline".to_string(), "ghost".to_string()];
+        let cargo = "[[test]]\nname = \"pipeline\"\n";
+        let ci = "run: scripts/run_named_tests.sh pipeline hourly\n";
+        let vs = rule_r6_strings(&stems, cargo, ci);
+        assert_eq!(rules(&vs), ["R6", "R6"], "{vs:?}");
+        assert!(vs.iter().all(|v| v.path.contains("ghost")), "{vs:?}");
+    }
+
+    #[test]
+    fn r7_flags_partial_cmp_unwrap() {
+        let fixture = "fn f(v: &[f32]) -> f32 {\n    \
+             *v.iter().max_by(|a, b| a.partial_cmp(b).unwrap()).unwrap()\n}\n";
+        let vs = lint_one("benches/micro_hotpath.rs", fixture);
+        assert_eq!(rules(&vs), ["R7"], "{vs:?}");
+        let good = "fn f(v: &[f32]) -> f32 {\n    \
+             *v.iter().max_by(|a, b| a.total_cmp(b)).unwrap()\n}\n";
+        let vs = lint_one("benches/micro_hotpath.rs", good);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_chars() {
+        let fixture = "fn f() -> u32 {\n    \
+             let s = r#\"panic!(\"in a raw string\")\"#;\n    \
+             let c = '\\'';\n    let lt: &'static str = \"x\";\n    \
+             s.len() as u32 + c as u32 + lt.len() as u32\n}\n";
+        let vs = lint_one("rust/src/forecast/http.rs", fixture);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+}
