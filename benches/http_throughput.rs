@@ -7,21 +7,29 @@
 //! * **keep-alive vs connection-per-request** — the same clients drive
 //!   the same server through one persistent connection each
 //!   (`HttpClient`) vs a fresh TCP connection per request
-//!   (`http_request`). Measured on `GET /healthz` (pure wire overhead —
-//!   the connection tax is the whole story) and on `POST /forecast`
-//!   (wire + model compute, informational).
+//!   (`http_request`). Measured on `GET /v1/healthz` (pure wire
+//!   overhead — the connection tax is the whole story) and on
+//!   `POST /v1/forecast` (wire + model compute, informational).
 //! * **sharded vs single-stack** — the same total worker budget as one
 //!   stack (1×4 workers) vs four consistent-hash shards (4×1), same
 //!   keep-alive load; reports req/s and client-observed p95.
 //!
+//! A third section measures **BENCH_8 — metrics scrape overhead**: the
+//! same keep-alive forecast load with and without a 10 Hz `/v1/metrics`
+//! scraper running, reporting the p95 overhead ratio. Observability
+//! must be cheap enough to leave on.
+//!
 //! Feeds the CI perf gate (`scripts/bench_gate.sh`): emitted as
-//! BENCH_5.json when `FAST_ESRNN_BENCH_JSON=<path>` is set; the gate
-//! fails when the keep-alive speedup drops below the committed floor
-//! (`benches/bench5_baseline.json`) or sharding blows up tail latency.
+//! BENCH_5.json when `FAST_ESRNN_BENCH_JSON=<path>` is set (and
+//! BENCH_8.json via `FAST_ESRNN_BENCH8_JSON=<path>`); the gate fails
+//! when the keep-alive speedup drops below the committed floor
+//! (`benches/bench5_baseline.json`), sharding blows up tail latency, or
+//! scraping costs more than `benches/bench8_baseline.json` allows.
 //!
 //! Env:
 //!   FAST_ESRNN_QUICK=1        — CI mode: fewer requests
-//!   FAST_ESRNN_BENCH_JSON=p   — write the summary JSON to p
+//!   FAST_ESRNN_BENCH_JSON=p   — write the BENCH_5 summary JSON to p
+//!   FAST_ESRNN_BENCH8_JSON=p  — write the BENCH_8 summary JSON to p
 //!
 //! Run with: `cargo bench --bench http_throughput`
 
@@ -85,8 +93,8 @@ fn start_server(shards: usize, workers: usize)
 
 /// `CLIENTS` threads × `per` requests; returns (req/s, p95 secs).
 /// `keep_alive` picks one persistent connection per client vs a fresh
-/// connection per request; `forecast` picks `POST /forecast` (wire +
-/// compute) vs `GET /healthz` (pure wire).
+/// connection per request; `forecast` picks `POST /v1/forecast` (wire
+/// + compute) vs `GET /v1/healthz` (pure wire).
 fn run_load(addr: &str, keep_alive: bool, per: usize,
             forecast: bool) -> (f64, f64) {
     let t0 = Instant::now();
@@ -101,9 +109,9 @@ fn run_load(addr: &str, keep_alive: bool, per: usize,
                 let body =
                     forecast.then(|| forecast_body(&format!("c{c}-r{i}")));
                 let (method, path) = if forecast {
-                    ("POST", "/forecast")
+                    ("POST", "/v1/forecast")
                 } else {
-                    ("GET", "/healthz")
+                    ("GET", "/v1/healthz")
                 };
                 let t = Instant::now();
                 let code = match &mut client {
@@ -144,7 +152,7 @@ fn main() -> anyhow::Result<()> {
     let (server, _stack) = start_server(1, 2)?;
     let addr = server.addr().to_string();
 
-    println!("== wire overhead: GET /healthz, {CLIENTS} clients × \
+    println!("== wire overhead: GET /v1/healthz, {CLIENTS} clients × \
               {wire_per} ==");
     let (wire_pc_rps, _) = run_load(&addr, false, wire_per, false);
     let (wire_ka_rps, _) = run_load(&addr, true, wire_per, false);
@@ -153,7 +161,8 @@ fn main() -> anyhow::Result<()> {
     println!("{:<22} {:>10.0} req/s", "keep-alive", wire_ka_rps);
     println!("keep-alive speedup: {wire_speedup:.2}x\n");
 
-    println!("== forecast: POST /forecast, {CLIENTS} clients × {fc_per} ==");
+    println!("== forecast: POST /v1/forecast, {CLIENTS} clients × \
+              {fc_per} ==");
     let (fc_pc_rps, _) = run_load(&addr, false, fc_per, true);
     let (fc_ka_rps, _) = run_load(&addr, true, fc_per, true);
     let fc_speedup = fc_ka_rps / fc_pc_rps;
@@ -207,6 +216,61 @@ fn main() -> anyhow::Result<()> {
             ("single", stack_row(1, 4, single_rps, single_p95)),
             ("sharded", stack_row(4, 1, sharded_rps, sharded_p95)),
             ("sharded_p95_ratio", Json::num(p95_ratio)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+
+    // ---- BENCH_8: /v1/metrics scrape overhead under forecast load.
+    println!("== metrics scrape overhead: POST /v1/forecast, {CLIENTS} \
+              clients × {fc_per}, ± 10 Hz /v1/metrics scraper ==");
+    let (server, _stack) = start_server(2, 1)?;
+    let addr = server.addr().to_string();
+    let (base_rps, base_p95) = run_load(&addr, true, fc_per, true);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let scraper = {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr).unwrap();
+            let mut scrapes = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let reply =
+                    client.request("GET", "/v1/metrics", None).unwrap();
+                assert_eq!(reply.code, 200, "scrape failed mid-bench");
+                scrapes += 1;
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            scrapes
+        })
+    };
+    let (scr_rps, scr_p95) = run_load(&addr, true, fc_per, true);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread panicked");
+    drop(server);
+    let scrape_overhead = scr_p95 / base_p95.max(1e-9);
+    println!("{:<22} {:>10.0} req/s   p95 {:>8.2}ms", "no scraper",
+             base_rps, base_p95 * 1e3);
+    println!("{:<22} {:>10.0} req/s   p95 {:>8.2}ms   ({scrapes} scrapes)",
+             "10 Hz scraper", scr_rps, scr_p95 * 1e3);
+    println!("scrape p95 overhead ratio: {scrape_overhead:.2}\n");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH8_JSON") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("metrics_scrape_overhead")),
+            ("quick", Json::Bool(quick)),
+            ("threads", Json::num(threads as f64)),
+            ("n_requests", Json::num((CLIENTS * fc_per) as f64)),
+            ("baseline", Json::obj(vec![
+                ("rps", Json::num(base_rps)),
+                ("p95_ms", Json::num(base_p95 * 1e3)),
+            ])),
+            ("scraped", Json::obj(vec![
+                ("rps", Json::num(scr_rps)),
+                ("p95_ms", Json::num(scr_p95 * 1e3)),
+                ("scrapes", Json::num(scrapes as f64)),
+            ])),
+            ("p95_overhead_ratio", Json::num(scrape_overhead)),
         ]);
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("wrote {path}");

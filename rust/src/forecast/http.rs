@@ -2,23 +2,40 @@
 //! serving a [`ShardedStack`] with `util::json` as the wire format (no
 //! async runtime, no frameworks — the offline build vendors nothing).
 //!
-//! Routes (all request/response bodies are JSON):
+//! Routes live under the versioned `/v1/` prefix; the original
+//! unversioned paths remain as **deprecated aliases** serving
+//! byte-identical payloads plus a `Deprecation: true` header and a
+//! `Link: </v1/...>; rel="successor-version"` pointer. New clients
+//! (including [`HttpClient`] callers in this repo) speak `/v1`.
 //!
-//! * `POST /forecast` — `{"freq"?, "id"?, "category"?, "values": [..]}`
-//!   → `{"id", "freq", "generation", "forecast": [..]}`. `freq` may be
-//!   omitted when exactly one frequency is being served; `id` is also
-//!   the consistent-hash shard key.
-//! * `GET /stats` — per-frequency aggregated
-//!   [`ServiceStats`](super::ServiceStats), an unaggregated `"shards"`
-//!   breakdown, and an `"http"` section with the front-end's 503 shed
-//!   counters.
-//! * `GET /healthz` — `{"status", "frequencies", "generations",
+//! * `POST /v1/forecast` — `{"freq"?, "id"?, "category"?,
+//!   "values": [..]}` → `{"id", "freq", "generation",
+//!   "forecast": [..]}`. `freq` may be omitted when exactly one
+//!   frequency is being served; `id` is also the consistent-hash shard
+//!   key.
+//! * `GET /v1/stats` — `{"schema_version": 1, "serving": {...},
+//!   "http": {...}, "backend": {...}, "shards": [...]}` — see
+//!   [`ServiceStats::to_json`](super::ServiceStats::to_json). Field
+//!   names match the `/v1/metrics` metric names one-for-one so
+//!   dashboards can join the two.
+//! * `GET /v1/metrics` — the stack's
+//!   [`Registry`](crate::telemetry::registry::Registry) in Prometheus
+//!   text exposition format 0.0.4 (`Content-Type: text/plain;
+//!   version=0.0.4`): per-`{shard, freq}` queue depth, accepted/shed
+//!   counters, latency histograms, backend gauges, plus the front-end's
+//!   own connection metrics.
+//! * `GET /v1/healthz` — `{"status", "frequencies", "generations",
 //!   "shards"}`.
-//! * `POST /reload` — `{"freq"?, "checkpoint": "<server-local path>"}`
-//!   → `{"freq", "generation"}`. Hot-swaps every shard's model from a
-//!   checkpoint (JSON or compact binary, sniffed by magic) without
-//!   dropping queued requests. Operator-facing: the path is resolved on
-//!   the server.
+//! * `POST /v1/reload` — `{"freq"?, "checkpoint": "<server-local
+//!   path>"}` → `{"freq", "generation"}`. Hot-swaps every shard's model
+//!   from a checkpoint (JSON or compact binary, sniffed by magic)
+//!   without dropping queued requests. Operator-facing: the path is
+//!   resolved on the server.
+//!
+//! Every non-2xx response carries the unified error envelope
+//! `{"error": {"code": "<machine-readable>", "message": "...",
+//! "retry_after_ms": <only with Retry-After>}}`; see [`error_code`] for
+//! the status → code table.
 //!
 //! Connection model — built to survive overload and hostile clients:
 //!
@@ -38,12 +55,13 @@
 //!   connection times out (`keep_alive`), a stalled mid-request client
 //!   gets `408` (`request_timeout`), and shutdown is observed promptly.
 //!
-//! Status contract: client mistakes → `400` (`{"error": ...}`),
-//! unknown route → `404`, wrong method → `405`, stalled request →
-//! `408`, oversized body → `413`, pool queue full (backpressure,
-//! [`QueueFull`](super::QueueFull)) → `429` + `Retry-After`, oversized
-//! headers → `431`, chunked transfer → `501`, faults while serving a
-//! valid forecast → `500`, accept backlog full → `503` + `Retry-After`.
+//! Status contract: client mistakes → `400`, unknown route → `404`,
+//! wrong method → `405`, stalled request → `408`, oversized body →
+//! `413`, pool queue full (backpressure, [`QueueFull`](super::QueueFull))
+//! → `429` + `Retry-After`, oversized headers → `431`, chunked transfer
+//! → `501`, faults while serving a valid forecast → `500`, accept
+//! backlog full → `503` + `Retry-After` — each with the error envelope
+//! as its body.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
@@ -56,6 +74,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Category, Frequency};
+use crate::telemetry::registry::{Counter, Gauge, Registry};
 use crate::util::json::Json;
 
 use super::pool::QueueFull;
@@ -65,6 +84,13 @@ use super::{ForecastRequest, ServiceStats};
 
 /// How often blocking reads wake to re-check deadlines and shutdown.
 const POLL_TICK: Duration = Duration::from_millis(100);
+
+/// `Content-Type` for JSON bodies (every route except `/v1/metrics`).
+const CT_JSON: &str = "application/json";
+
+/// `Content-Type` for the Prometheus text exposition format served at
+/// `/v1/metrics`.
+const CT_PROM: &str = "text/plain; version=0.0.4";
 
 /// Connection-handling knobs. The defaults suit tests and single-node
 /// deployments; production front-ends size `conn_workers` ≈ expected
@@ -116,12 +142,111 @@ struct ServerShared {
     // lint:lock-name(http.conns)
     conns: Mutex<VecDeque<(TcpStream, Instant)>>,
     cond: Condvar,
+    /// Front-end connection metrics, bound into the stack's registry
+    /// (also the source for the [`HttpServer::sheds`] /
+    /// [`HttpServer::stale_sheds`] accessors).
+    metrics: HttpMetrics,
+}
+
+/// Statuses an error response can carry, pre-registered under
+/// `fesrnn_http_responses_total{code=...}` so every code's series
+/// exists (at zero) from the very first scrape.
+const ERROR_STATUSES: [u16; 10] =
+    [400, 404, 405, 408, 413, 429, 431, 500, 501, 503];
+
+/// The HTTP front-end's own instruments, registered into the stack's
+/// [`Registry`] at server start (idempotent: a second server on the
+/// same stack rebinds the same names).
+struct HttpMetrics {
+    /// Error responses by status code, in [`ERROR_STATUSES`] order.
+    by_code: Vec<(u16, Counter)>,
     /// Shed at accept: backlog full. Remedy: bigger backlog / more
     /// capacity.
-    sheds: AtomicU64,
+    sheds_backlog: Counter,
     /// Shed at dequeue: waited ≥ request_timeout for a worker. Remedy:
     /// more conn workers / faster handlers.
-    stale_sheds: AtomicU64,
+    sheds_stale: Counter,
+    /// Keep-alive connections closed by the fairness rotation cap.
+    rotations: Counter,
+    /// Connections accepted into the worker backlog.
+    connections: Counter,
+    /// Requests served via a legacy unversioned path alias.
+    deprecated: Counter,
+}
+
+impl HttpMetrics {
+    fn register(reg: &Registry, opts: &HttpOptions) -> Self {
+        let mut by_code = Vec::with_capacity(ERROR_STATUSES.len());
+        for code in ERROR_STATUSES {
+            let c = Counter::new();
+            let code_str = code.to_string();
+            reg.register_counter(
+                "fesrnn_http_responses_total",
+                "Error responses sent, by status code. 2xx responses \
+                 ride the request hot path and are deliberately \
+                 unmetered here — count successes via \
+                 fesrnn_queue_accepted_total.",
+                &[("code", code_str.as_str())],
+                &c,
+            );
+            by_code.push((code, c));
+        }
+        let shed_help =
+            "Connections shed with 503, by cause: backlog_full wants a \
+             bigger accept backlog or more capacity; stale_in_backlog \
+             wants more or faster connection workers.";
+        let sheds_backlog = Counter::new();
+        reg.register_counter("fesrnn_http_sheds_total", shed_help,
+                             &[("kind", "backlog_full")], &sheds_backlog);
+        let sheds_stale = Counter::new();
+        reg.register_counter("fesrnn_http_sheds_total", shed_help,
+                             &[("kind", "stale_in_backlog")], &sheds_stale);
+        let rotations = Counter::new();
+        reg.register_counter(
+            "fesrnn_http_keepalive_rotations_total",
+            "Keep-alive connections closed by the per-connection \
+             request cap (fairness rotation).",
+            &[], &rotations);
+        let connections = Counter::new();
+        reg.register_counter(
+            "fesrnn_http_connections_total",
+            "Connections accepted into the worker backlog.",
+            &[], &connections);
+        let deprecated = Counter::new();
+        reg.register_counter(
+            "fesrnn_http_deprecated_requests_total",
+            "Requests that arrived via a legacy unversioned path alias \
+             — migrate callers to the /v1 routes.",
+            &[], &deprecated);
+        let workers = Gauge::new();
+        workers.set(opts.conn_workers as u64);
+        reg.register_gauge("fesrnn_http_conn_workers",
+                           "Configured connection-handler workers.",
+                           &[], &workers);
+        let backlog = Gauge::new();
+        backlog.set(opts.accept_backlog as u64);
+        reg.register_gauge("fesrnn_http_accept_backlog",
+                           "Configured accept-backlog capacity.",
+                           &[], &backlog);
+        Self {
+            by_code,
+            sheds_backlog,
+            sheds_stale,
+            rotations,
+            connections,
+            deprecated,
+        }
+    }
+
+    /// Count one error response; 2xx are unmetered by design.
+    fn response(&self, code: u16) {
+        for (c, counter) in &self.by_code {
+            if *c == code {
+                counter.inc();
+                return;
+            }
+        }
+    }
 }
 
 /// A running HTTP front-end: one accept thread feeding a bounded pool
@@ -154,19 +279,23 @@ impl HttpServer {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
+        let opts = HttpOptions {
+            conn_workers: opts.conn_workers.max(1),
+            accept_backlog: opts.accept_backlog.max(1),
+            max_requests_per_conn: opts.max_requests_per_conn.max(1),
+            ..opts
+        };
+        // Bind the front-end's instruments into the same registry the
+        // shards' pool metrics live in, so one /v1/metrics scrape covers
+        // the whole serving path.
+        let metrics = HttpMetrics::register(stack.registry(), &opts);
         let shared = Arc::new(ServerShared {
             stack,
-            opts: HttpOptions {
-                conn_workers: opts.conn_workers.max(1),
-                accept_backlog: opts.accept_backlog.max(1),
-                max_requests_per_conn: opts.max_requests_per_conn.max(1),
-                ..opts
-            },
+            opts,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(VecDeque::new()),
             cond: Condvar::new(),
-            sheds: AtomicU64::new(0),
-            stale_sheds: AtomicU64::new(0),
+            metrics,
         });
         // Any spawn failure below must not leak the threads already
         // started (they'd block on the condvar forever with shutdown
@@ -215,16 +344,18 @@ impl HttpServer {
 
     /// Connections shed with `503` because the accept backlog was full
     /// (undersized backlog / too much traffic — distinct from
-    /// [`stale_sheds`](Self::stale_sheds)).
+    /// [`stale_sheds`](Self::stale_sheds)). Same counter as
+    /// `fesrnn_http_sheds_total{kind="backlog_full"}`.
     pub fn sheds(&self) -> u64 {
-        self.shared.sheds.load(Ordering::Relaxed)
+        self.shared.metrics.sheds_backlog.get()
     }
 
     /// Connections shed with `503` after waiting ≥ `request_timeout` in
     /// the backlog for a worker (workers too few/slow for the accepted
-    /// load — distinct from [`sheds`](Self::sheds)).
+    /// load — distinct from [`sheds`](Self::sheds)). Same counter as
+    /// `fesrnn_http_sheds_total{kind="stale_in_backlog"}`.
     pub fn stale_sheds(&self) -> u64 {
-        self.shared.stale_sheds.load(Ordering::Relaxed)
+        self.shared.metrics.sheds_stale.get()
     }
 
     /// Stop accepting connections and wake the workers. Connections
@@ -267,6 +398,7 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
             // definite 503 instead of a silent drop — consistent with
             // the under-lock shutdown path below.
             if let Ok(stream) = conn {
+                sh.metrics.response(503);
                 shed_connection(stream);
             }
             break;
@@ -290,6 +422,7 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
         // after idle workers already exited would hang answerless.
         if sh.shutdown.load(Ordering::SeqCst) {
             drop(q);
+            sh.metrics.response(503);
             shed_connection(stream);
             break;
         }
@@ -297,12 +430,14 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
             // Load shedding: tell the client to back off instead of
             // queueing unboundedly (which would degrade everyone).
             drop(q);
-            sh.sheds.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.sheds_backlog.inc();
+            sh.metrics.response(503);
             shed_connection(stream);
             continue;
         }
         q.push_back((stream, Instant::now()));
         drop(q);
+        sh.metrics.connections.inc();
         sh.cond.notify_one();
     }
 }
@@ -317,8 +452,10 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
 /// accept, which is strictly worse than a lost courtesy response.
 fn shed_connection(mut stream: TcpStream) {
     let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-    let body = err_json("server is at capacity — retry later").to_string();
-    let _ = write_response(&mut stream, 503, &body, false, Some(1));
+    let body = err_json(503, "server is at capacity — retry later", Some(1))
+        .to_string();
+    let _ = write_response(&mut stream, 503, &body, CT_JSON, false, Some(1),
+                           None);
 }
 
 /// Closing a socket with unread bytes in its receive buffer makes the
@@ -348,8 +485,11 @@ fn drain_before_close(stream: &mut TcpStream) {
 /// bytes would RST the `503` away.
 fn shed_connection_draining(mut stream: TcpStream) {
     let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-    let body = err_json("server is at capacity — retry later").to_string();
-    if write_response(&mut stream, 503, &body, false, Some(1)).is_ok() {
+    let body = err_json(503, "server is at capacity — retry later", Some(1))
+        .to_string();
+    if write_response(&mut stream, 503, &body, CT_JSON, false, Some(1), None)
+        .is_ok()
+    {
         let _ = stream.set_read_timeout(Some(POLL_TICK));
         drain_before_close(&mut stream);
     }
@@ -370,7 +510,8 @@ fn next_conn(sh: &ServerShared) -> Option<TcpStream> {
                 // a worker; a definite "come back later" now beats a
                 // stale answer after its own timeout has likely fired.
                 drop(q);
-                sh.stale_sheds.fetch_add(1, Ordering::Relaxed);
+                sh.metrics.sheds_stale.inc();
+                sh.metrics.response(503);
                 shed_connection_draining(stream);
                 q = sh.conns.lock().unwrap();
                 continue;
@@ -413,8 +554,10 @@ fn serve_connection(sh: &ServerShared, mut stream: TcpStream) {
         match read_request(&mut stream, &mut buf, &sh.opts, &sh.shutdown) {
             RequestOutcome::Closed => break,
             RequestOutcome::Fatal(code, msg) => {
+                sh.metrics.response(code);
                 if write_response(&mut stream, code,
-                                  &err_json(&msg).to_string(), false, None)
+                                  &err_json(code, &msg, None).to_string(),
+                                  CT_JSON, false, None, None)
                     .is_ok()
                 {
                     // The client may still be streaming the request we
@@ -426,16 +569,23 @@ fn serve_connection(sh: &ServerShared, mut stream: TcpStream) {
                 break;
             }
             RequestOutcome::Ready(req) => {
-                let (code, body, retry_after) = route(sh, &req);
+                let reply = route(sh, &req);
+                if reply.code >= 400 {
+                    sh.metrics.response(reply.code);
+                }
                 served += 1;
                 // Rotation fairness: close after the per-connection
                 // request cap so one persistent client cannot pin this
                 // worker while backlogged connections wait.
-                let keep = req.keep_alive
-                    && served < sh.opts.max_requests_per_conn
+                let rotated = served >= sh.opts.max_requests_per_conn;
+                if req.keep_alive && rotated {
+                    sh.metrics.rotations.inc();
+                }
+                let keep = req.keep_alive && !rotated
                     && !sh.shutdown.load(Ordering::SeqCst);
-                if write_response(&mut stream, code, &body.to_string(), keep,
-                                  retry_after)
+                if write_response(&mut stream, reply.code, &reply.body,
+                                  reply.content_type, keep,
+                                  reply.retry_after, reply.successor)
                     .is_err()
                 {
                     break;
@@ -690,32 +840,135 @@ fn parse_head(raw: &[u8], max_body: usize) -> Result<Head, (u16, String)> {
     })
 }
 
-fn err_json(msg: &str) -> Json {
-    Json::obj(vec![("error", Json::str(msg))])
+/// The machine-readable `code` carried in the error envelope for each
+/// status this server emits:
+///
+/// | status | code |
+/// |--------|------|
+/// | 400 | `bad_request` |
+/// | 404 | `not_found` |
+/// | 405 | `method_not_allowed` |
+/// | 408 | `request_timeout` |
+/// | 413 | `body_too_large` |
+/// | 429 | `queue_full` |
+/// | 431 | `headers_too_large` |
+/// | 500 | `internal` |
+/// | 501 | `not_implemented` |
+/// | 503 | `overloaded` |
+///
+/// Any other status maps to `error`. Clients should branch on these
+/// strings, never on `message` text.
+pub fn error_code(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        408 => "request_timeout",
+        413 => "body_too_large",
+        429 => "queue_full",
+        431 => "headers_too_large",
+        500 => "internal",
+        501 => "not_implemented",
+        503 => "overloaded",
+        _ => "error",
+    }
 }
 
-/// Dispatch one parsed request → (status, body, Retry-After seconds).
-fn route(sh: &ServerShared, req: &ParsedRequest)
-         -> (u16, Json, Option<u32>) {
+/// The unified error envelope every non-2xx body carries:
+/// `{"error": {"code", "message", "retry_after_ms"?}}`. The
+/// `retry_after_ms` field appears exactly when the response also
+/// carries a `Retry-After` header (same duration, in milliseconds).
+fn err_json(code: u16, msg: &str, retry_after: Option<u32>) -> Json {
+    let mut fields = vec![
+        ("code", Json::str(error_code(code))),
+        ("message", Json::str(msg)),
+    ];
+    if let Some(secs) = retry_after {
+        fields.push(("retry_after_ms", Json::num(secs as f64 * 1000.0)));
+    }
+    Json::obj(vec![("error", Json::obj(fields))])
+}
+
+/// One routed response: status, serialized body, content type, and the
+/// optional backpressure / deprecation response headers.
+struct Reply {
+    code: u16,
+    body: String,
+    content_type: &'static str,
+    retry_after: Option<u32>,
+    successor: Option<&'static str>,
+}
+
+impl Reply {
+    fn json(code: u16, body: Json, retry_after: Option<u32>) -> Self {
+        Self {
+            code,
+            body: body.to_string(),
+            content_type: CT_JSON,
+            retry_after,
+            successor: None,
+        }
+    }
+
+    fn error(code: u16, msg: &str, retry_after: Option<u32>) -> Self {
+        Self::json(code, err_json(code, msg, retry_after), retry_after)
+    }
+}
+
+/// Map a request path to its normalized route. Legacy unversioned
+/// paths resolve to the same handlers but report their `/v1` successor
+/// so the response can carry `Deprecation` + `Link` headers; `/v1/...`
+/// paths are served natively.
+fn split_alias(path: &str) -> (&str, Option<&'static str>) {
+    match path {
+        "/forecast" => ("/forecast", Some("/v1/forecast")),
+        "/reload" => ("/reload", Some("/v1/reload")),
+        "/stats" => ("/stats", Some("/v1/stats")),
+        "/healthz" => ("/healthz", Some("/v1/healthz")),
+        "/metrics" => ("/metrics", Some("/v1/metrics")),
+        p => (p.strip_prefix("/v1").unwrap_or(p), None),
+    }
+}
+
+/// Dispatch one parsed request. The legacy-alias counter is bumped
+/// *before* the handler runs so an alias `/metrics` scrape already
+/// includes its own deprecation hit — a legacy scrape followed by a
+/// `/v1` scrape therefore returns byte-identical payloads (modulo live
+/// traffic), which the conformance test relies on.
+fn route(sh: &ServerShared, req: &ParsedRequest) -> Reply {
     let stack = &*sh.stack;
-    match (req.method.as_str(), req.path.as_str()) {
+    let (path, successor) = split_alias(&req.path);
+    if successor.is_some() {
+        sh.metrics.deprecated.inc();
+    }
+    let mut reply = match (req.method.as_str(), path) {
         ("POST", "/forecast") => handle_forecast(stack, &req.body),
         ("POST", "/reload") => match handle_reload(stack, &req.body) {
-            Ok(j) => (200, j, None),
-            Err(e) => (400, err_json(&format!("{e:#}")), None),
+            Ok(j) => Reply::json(200, j, None),
+            Err(e) => Reply::error(400, &format!("{e:#}"), None),
         },
-        ("GET", "/stats") => (200, handle_stats(sh), None),
-        ("GET", "/healthz") => (200, handle_healthz(stack), None),
-        (_, "/forecast" | "/reload" | "/stats" | "/healthz") => {
-            (405,
-             err_json(&format!("method {} not allowed for {}", req.method,
-                               req.path)),
-             None)
+        ("GET", "/stats") => Reply::json(200, handle_stats(sh), None),
+        ("GET", "/healthz") => Reply::json(200, handle_healthz(stack), None),
+        ("GET", "/metrics") => Reply {
+            code: 200,
+            body: stack.registry().render(),
+            content_type: CT_PROM,
+            retry_after: None,
+            successor: None,
+        },
+        (_, "/forecast" | "/reload" | "/stats" | "/healthz" | "/metrics") => {
+            Reply::error(405,
+                         &format!("method {} not allowed for {}", req.method,
+                                  req.path),
+                         None)
         }
-        _ => (404,
-              err_json(&format!("no route for {} {}", req.method, req.path)),
-              None),
-    }
+        _ => Reply::error(404,
+                          &format!("no route for {} {}", req.method,
+                                   req.path),
+                          None),
+    };
+    reply.successor = successor;
+    reply
 }
 
 fn resolve_freq(stack: &ShardedStack, doc: &Json) -> Result<Frequency> {
@@ -740,25 +993,25 @@ fn resolve_freq(stack: &ShardedStack, doc: &Json) -> Result<Frequency> {
 /// faults *while serving* a valid request (backend error, pool shut
 /// down) are 500 so monitoring and load balancers see a server outage,
 /// not a client mistake.
-fn handle_forecast(stack: &ShardedStack, body: &str)
-                   -> (u16, Json, Option<u32>) {
+fn handle_forecast(stack: &ShardedStack, body: &str) -> Reply {
     let (freq, req) = match parse_forecast_request(stack, body) {
         Ok(x) => x,
-        Err(e) => return (400, err_json(&format!("{e:#}")), None),
+        Err(e) => return Reply::error(400, &format!("{e:#}"), None),
     };
     match stack.forecast(freq, req) {
-        Ok(resp) => (200,
-                     Json::obj(vec![
-                         ("id", Json::str(resp.id)),
-                         ("freq", Json::str(freq.name())),
-                         ("generation", Json::num(resp.generation as f64)),
-                         ("forecast", Json::arr_f32(&resp.forecast)),
-                     ]),
-                     None),
+        Ok(resp) => Reply::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::str(resp.id)),
+                ("freq", Json::str(freq.name())),
+                ("generation", Json::num(resp.generation as f64)),
+                ("forecast", Json::arr_f32(&resp.forecast)),
+            ]),
+            None),
         Err(e) if e.is::<QueueFull>() => {
-            (429, err_json(&format!("{e:#}")), Some(1))
+            Reply::error(429, &format!("{e:#}"), Some(1))
         }
-        Err(e) => (500, err_json(&format!("{e:#}")), None),
+        Err(e) => Reply::error(500, &format!("{e:#}"), None),
     }
 }
 
@@ -804,6 +1057,10 @@ fn handle_reload(stack: &ShardedStack, body: &str) -> Result<Json> {
     ]))
 }
 
+/// `GET /v1/stats`: schema version 1 — `{"schema_version", "serving",
+/// "http", "backend", "shards"}` with field names matching the
+/// `/v1/metrics` metric names one-for-one (minus the `fesrnn_` prefix)
+/// so the two surfaces join without a translation table.
 fn handle_stats(sh: &ServerShared) -> Json {
     // One snapshot, folded twice: the aggregate is computed from the
     // same per-shard view it is reported next to, so the top-level
@@ -817,40 +1074,71 @@ fn handle_stats(sh: &ServerShared) -> Json {
             agg.entry(*f).or_default().absorb(s);
         }
     }
-    let mut top: BTreeMap<String, Json> = agg
-        .iter()
-        .map(|(f, s)| (f.name().to_string(), s.to_json()))
-        .collect();
-    let shards = Json::Obj(
+    let serving_json = |by_freq: &BTreeMap<Frequency, ServiceStats>| {
+        Json::Obj(by_freq
+            .iter()
+            .map(|(f, s)| (f.name().to_string(), s.to_json()))
+            .collect())
+    };
+    let serving = serving_json(&agg);
+    // Backend gauges summed over frequencies (shards already summed by
+    // absorb above).
+    let (mut spawns, mut steady, mut scratch) = (0u64, 0u64, 0u64);
+    for s in agg.values() {
+        spawns += s.backend_spawns;
+        steady += s.backend_steady_allocs;
+        scratch += s.backend_scratch_bytes;
+    }
+    let backend = Json::obj(vec![
+        ("backend_spawns", Json::num(spawns as f64)),
+        ("backend_steady_allocs", Json::num(steady as f64)),
+        ("backend_scratch_bytes", Json::num(scratch as f64)),
+    ]);
+    let shards = Json::Arr(
         per_shard
-            .into_iter()
+            .iter()
             .map(|(label, by_freq)| {
-                (label,
-                 Json::Obj(by_freq
-                     .iter()
-                     .map(|(f, s)| (f.name().to_string(), s.to_json()))
-                     .collect()))
+                Json::obj(vec![
+                    ("shard", Json::str(label.as_str())),
+                    ("serving", serving_json(by_freq)),
+                ])
             })
             .collect(),
     );
-    top.insert("shards".to_string(), shards);
     // Front-end connection health: which knob to turn when clients see
-    // 503s — `sheds_backlog_full` wants a bigger backlog / more
-    // capacity, `sheds_stale_in_backlog` wants more / faster
-    // connection workers. (No frequency is named "http", so the key
-    // cannot collide.)
-    top.insert(
-        "http".to_string(),
-        Json::obj(vec![
-            ("sheds_backlog_full",
-             Json::num(sh.sheds.load(Ordering::Relaxed) as f64)),
-            ("sheds_stale_in_backlog",
-             Json::num(sh.stale_sheds.load(Ordering::Relaxed) as f64)),
-            ("conn_workers", Json::num(sh.opts.conn_workers as f64)),
-            ("accept_backlog", Json::num(sh.opts.accept_backlog as f64)),
-        ]),
+    // 503s — `backlog_full` wants a bigger backlog / more capacity,
+    // `stale_in_backlog` wants more / faster connection workers.
+    let m = &sh.metrics;
+    let responses = Json::Obj(
+        m.by_code
+            .iter()
+            .map(|(c, counter)| {
+                (c.to_string(), Json::num(counter.get() as f64))
+            })
+            .collect(),
     );
-    Json::Obj(top)
+    let http = Json::obj(vec![
+        ("http_accept_backlog", Json::num(sh.opts.accept_backlog as f64)),
+        ("http_conn_workers", Json::num(sh.opts.conn_workers as f64)),
+        ("http_connections_total", Json::num(m.connections.get() as f64)),
+        ("http_deprecated_requests_total",
+         Json::num(m.deprecated.get() as f64)),
+        ("http_keepalive_rotations_total",
+         Json::num(m.rotations.get() as f64)),
+        ("http_responses_total", responses),
+        ("http_sheds_total",
+         Json::obj(vec![
+             ("backlog_full", Json::num(m.sheds_backlog.get() as f64)),
+             ("stale_in_backlog", Json::num(m.sheds_stale.get() as f64)),
+         ])),
+    ]);
+    Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("serving", serving),
+        ("http", http),
+        ("backend", backend),
+        ("shards", shards),
+    ])
 }
 
 fn handle_healthz(stack: &ShardedStack) -> Json {
@@ -879,7 +1167,8 @@ fn handle_healthz(stack: &ShardedStack) -> Json {
 }
 
 fn write_response(stream: &mut TcpStream, code: u16, body: &str,
-                  keep_alive: bool, retry_after: Option<u32>)
+                  content_type: &str, keep_alive: bool,
+                  retry_after: Option<u32>, successor: Option<&str>)
                   -> std::io::Result<()> {
     let reason = match code {
         200 => "OK",
@@ -896,11 +1185,18 @@ fn write_response(stream: &mut TcpStream, code: u16, body: &str,
         _ => "Error",
     };
     let mut head = format!(
-        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\n",
         body.len());
     if let Some(secs) = retry_after {
         head.push_str(&format!("Retry-After: {secs}\r\n"));
+    }
+    if let Some(succ) = successor {
+        // Deprecation signal on legacy path aliases (RFC 9745 style):
+        // the request worked, and here is where it should go instead.
+        head.push_str("Deprecation: true\r\n");
+        head.push_str(
+            &format!("Link: <{succ}>; rel=\"successor-version\"\r\n"));
     }
     head.push_str(if keep_alive {
         "Connection: keep-alive\r\n\r\n"
@@ -1181,9 +1477,55 @@ mod tests {
     }
 
     #[test]
-    fn error_body_shape() {
-        let j = err_json("boom");
-        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    fn error_envelope_shape() {
+        let j = err_json(429, "boom", Some(2));
+        let e = j.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "queue_full");
+        assert_eq!(e.get("message").unwrap().as_str().unwrap(), "boom");
+        assert_eq!(e.get("retry_after_ms").unwrap().as_f64().unwrap(),
+                   2000.0);
+        // No Retry-After header → no retry_after_ms field.
+        let plain = err_json(400, "nope", None);
+        let e = plain.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "bad_request");
+        assert!(e.opt("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn every_emitted_status_has_a_machine_readable_code() {
+        for (status, code) in [
+            (400, "bad_request"),
+            (404, "not_found"),
+            (405, "method_not_allowed"),
+            (408, "request_timeout"),
+            (413, "body_too_large"),
+            (429, "queue_full"),
+            (431, "headers_too_large"),
+            (500, "internal"),
+            (501, "not_implemented"),
+            (503, "overloaded"),
+        ] {
+            assert_eq!(error_code(status), code, "status {status}");
+        }
+        assert_eq!(error_code(418), "error");
+    }
+
+    #[test]
+    fn alias_normalization_maps_legacy_paths_onto_v1_routes() {
+        assert_eq!(split_alias("/forecast"),
+                   ("/forecast", Some("/v1/forecast")));
+        assert_eq!(split_alias("/reload"), ("/reload", Some("/v1/reload")));
+        assert_eq!(split_alias("/stats"), ("/stats", Some("/v1/stats")));
+        assert_eq!(split_alias("/healthz"),
+                   ("/healthz", Some("/v1/healthz")));
+        assert_eq!(split_alias("/metrics"),
+                   ("/metrics", Some("/v1/metrics")));
+        // Native /v1 paths normalize without a deprecation successor …
+        assert_eq!(split_alias("/v1/forecast"), ("/forecast", None));
+        assert_eq!(split_alias("/v1/metrics"), ("/metrics", None));
+        // … and unknown paths pass through untouched (→ 404).
+        assert_eq!(split_alias("/nope"), ("/nope", None));
+        assert_eq!(split_alias("/v2/forecast"), ("/v2/forecast", None));
     }
 
     #[test]

@@ -21,13 +21,16 @@
 //!   consistent-hash ring keyed by series id — stable assignment across
 //!   restarts, ≈1/N key movement on shard add/remove, live drain, and
 //!   aggregated per-frequency stats.
-//! * [`http`] — [`HttpServer`]: `POST /forecast`, `GET /stats`,
-//!   `GET /healthz`, `POST /reload` over `std::net::TcpListener` and
+//! * [`http`] — [`HttpServer`]: `POST /v1/forecast`, `GET /v1/stats`,
+//!   `GET /v1/metrics` (Prometheus text), `GET /v1/healthz`,
+//!   `POST /v1/reload` over `std::net::TcpListener` and
 //!   [`util::json`](crate::util::json) — no async runtime, no
-//!   frameworks. HTTP/1.1 keep-alive on a bounded pool of
-//!   connection-handler workers with an accept backlog; overload is shed
-//!   as `429` (pool queue full, [`QueueFull`]) or `503` (backlog full),
-//!   never an unbounded queue.
+//!   frameworks (the unversioned paths remain as deprecated aliases).
+//!   HTTP/1.1 keep-alive on a bounded pool of connection-handler
+//!   workers with an accept backlog; overload is shed as `429` (pool
+//!   queue full, [`QueueFull`]) or `503` (backlog full), never an
+//!   unbounded queue, and every non-2xx body is the
+//!   `{"error": {"code", "message", ...}}` envelope.
 //!
 //! [`ForecastService`] keeps the original single-frequency API as a thin
 //! wrapper over a one-pool stack: existing callers (tests, examples, the
@@ -105,9 +108,10 @@ impl Default for ServiceOptions {
 }
 
 /// Counters + latency percentiles exposed for tests/benches and the
-/// `GET /stats` endpoint. Latencies are sliding-window percentiles from
-/// [`telemetry::Quantiles`](crate::telemetry::Quantiles), in seconds.
-#[derive(Debug, Default, Clone)]
+/// `GET /v1/stats` endpoint. Latencies are sliding-window percentiles
+/// from [`telemetry::Quantiles`](crate::telemetry::Quantiles), in
+/// seconds.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct ServiceStats {
     /// Requests accepted into the queue.
     pub requests: u64,
@@ -147,38 +151,79 @@ pub struct ServiceStats {
 }
 
 impl ServiceStats {
-    /// JSON shape served by `GET /stats` (latencies in milliseconds).
+    /// JSON shape served inside `GET /v1/stats` (`schema_version` 1).
+    /// Every field name matches its `/v1/metrics` metric name (minus
+    /// the `fesrnn_` prefix) one-for-one so dashboards can join the
+    /// two; latencies are `{count, p50, p95, p99}` in **seconds**, like
+    /// the `_seconds` histograms.
     pub fn to_json(&self) -> Json {
         let lat = |s: &LatencySummary| {
             Json::obj(vec![
                 ("count", Json::num(s.count as f64)),
-                ("p50_ms", Json::num(s.p50 * 1e3)),
-                ("p95_ms", Json::num(s.p95 * 1e3)),
-                ("p99_ms", Json::num(s.p99 * 1e3)),
+                ("p50", Json::num(s.p50)),
+                ("p95", Json::num(s.p95)),
+                ("p99", Json::num(s.p99)),
             ])
         };
         Json::obj(vec![
-            ("requests", Json::num(self.requests as f64)),
-            ("rejected", Json::num(self.rejected as f64)),
-            ("rejected_overload", Json::num(self.rejected_overload as f64)),
-            ("batches", Json::num(self.batches as f64)),
-            ("padded_slots", Json::num(self.padded_slots as f64)),
-            ("reloads", Json::num(self.reloads as f64)),
-            ("generation", Json::num(self.generation as f64)),
-            ("workers", Json::num(self.workers as f64)),
+            ("queue_submitted_total",
+             Json::num((self.requests + self.rejected_overload) as f64)),
+            ("queue_accepted_total", Json::num(self.requests as f64)),
+            ("queue_shed_total",
+             Json::num(self.rejected_overload as f64)),
+            ("queue_rejected_total", Json::num(self.rejected as f64)),
+            ("batches_total", Json::num(self.batches as f64)),
+            ("padded_slots_total", Json::num(self.padded_slots as f64)),
+            ("reloads_total", Json::num(self.reloads as f64)),
+            ("model_generation", Json::num(self.generation as f64)),
+            ("pool_workers", Json::num(self.workers as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("queue_limit", Json::num(self.queue_limit as f64)),
-            ("queue_wait", lat(&self.queue_wait)),
-            ("execute", lat(&self.execute)),
-            ("total", lat(&self.total)),
-            ("backend", Json::obj(vec![
-                ("spawns", Json::num(self.backend_spawns as f64)),
-                ("steady_allocs",
-                 Json::num(self.backend_steady_allocs as f64)),
-                ("scratch_bytes",
-                 Json::num(self.backend_scratch_bytes as f64)),
-            ])),
+            ("queue_wait_seconds", lat(&self.queue_wait)),
+            ("execute_seconds", lat(&self.execute)),
+            ("request_total_seconds", lat(&self.total)),
+            ("backend_spawns", Json::num(self.backend_spawns as f64)),
+            ("backend_steady_allocs",
+             Json::num(self.backend_steady_allocs as f64)),
+            ("backend_scratch_bytes",
+             Json::num(self.backend_scratch_bytes as f64)),
         ])
+    }
+
+    /// Parse the [`to_json`](Self::to_json) shape back — the round-trip
+    /// contract a dashboard consuming `/v1/stats` relies on.
+    /// (`queue_submitted_total` is derived, so it is validated as
+    /// redundant rather than stored.)
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let lat = |j: &Json| -> Result<LatencySummary> {
+            Ok(LatencySummary {
+                count: j.get("count")?.as_f64()? as u64,
+                p50: j.get("p50")?.as_f64()?,
+                p95: j.get("p95")?.as_f64()?,
+                p99: j.get("p99")?.as_f64()?,
+            })
+        };
+        let n = |key: &str| -> Result<u64> {
+            Ok(j.get(key)?.as_f64()? as u64)
+        };
+        Ok(ServiceStats {
+            requests: n("queue_accepted_total")?,
+            rejected: n("queue_rejected_total")?,
+            rejected_overload: n("queue_shed_total")?,
+            batches: n("batches_total")?,
+            padded_slots: n("padded_slots_total")?,
+            reloads: n("reloads_total")?,
+            generation: n("model_generation")?,
+            workers: j.get("pool_workers")?.as_usize()?,
+            queue_depth: j.get("queue_depth")?.as_usize()?,
+            queue_limit: j.get("queue_limit")?.as_usize()?,
+            queue_wait: lat(j.get("queue_wait_seconds")?)?,
+            execute: lat(j.get("execute_seconds")?)?,
+            total: lat(j.get("request_total_seconds")?)?,
+            backend_spawns: n("backend_spawns")?,
+            backend_steady_allocs: n("backend_steady_allocs")?,
+            backend_scratch_bytes: n("backend_scratch_bytes")?,
+        })
     }
 
     /// Fold another pool's stats into this one — how [`ShardedStack`]
@@ -354,11 +399,47 @@ mod tests {
                                 rejected_overload: 1,
                                 ..Default::default() };
         let j = st.to_json();
-        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 3);
-        assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 2);
+        // Field names mirror the /v1/metrics names minus the prefix.
+        assert_eq!(
+            j.get("queue_accepted_total").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            j.get("queue_shed_total").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            j.get("queue_submitted_total").unwrap().as_usize().unwrap(),
+            4, "submitted = accepted + shed");
+        assert_eq!(j.get("pool_workers").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 5);
-        assert_eq!(j.get("rejected_overload").unwrap().as_usize().unwrap(), 1);
-        assert!(j.get("queue_wait").unwrap().get("p99_ms").is_ok());
+        assert!(j.get("queue_wait_seconds").unwrap().get("p99").is_ok());
+        assert!(j.get("request_total_seconds").unwrap().get("p50").is_ok());
+        assert!(j.get("backend_spawns").is_ok());
+    }
+
+    #[test]
+    fn stats_json_round_trips() {
+        let mut st = ServiceStats {
+            requests: 10,
+            rejected: 2,
+            rejected_overload: 3,
+            batches: 4,
+            padded_slots: 5,
+            reloads: 1,
+            generation: 7,
+            workers: 2,
+            queue_depth: 1,
+            queue_limit: 64,
+            backend_spawns: 8,
+            backend_steady_allocs: 0,
+            backend_scratch_bytes: 123_456,
+            ..Default::default()
+        };
+        st.total = LatencySummary {
+            count: 10, p50: 0.002, p95: 0.0105, p99: 0.02,
+        };
+        st.queue_wait.p95 = 0.001;
+        let text = st.to_json().to_string();
+        let back =
+            ServiceStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(st, back);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::coordinator::ModelState;
 use crate::hw;
 use crate::runtime::{execute_with_maps, Backend, HostTensor, Manifest,
                      NativeBackend};
+use crate::telemetry::registry::{Counter, Gauge, Histogram, Registry};
 use crate::telemetry::Quantiles;
 
 use super::{pick_batch, plan_batches, ForecastRequest, ForecastResponse,
@@ -108,6 +109,111 @@ struct StatsInner {
     backend_scratch_bytes: u64,
 }
 
+/// Registry-facing instruments for one pool, updated on the same code
+/// paths as `StatsInner` but with single relaxed atomics — no extra
+/// lock traffic on the hot paths. Created unbound at pool start; the
+/// sharding layer binds clones into its [`Registry`] under
+/// `{shard, freq}` labels when the pool's stack joins the ring.
+#[derive(Default)]
+struct PoolMetrics {
+    submitted: Counter,
+    accepted: Counter,
+    shed: Counter,
+    rejected: Counter,
+    batches: Counter,
+    padded_slots: Counter,
+    reloads: Counter,
+    queue_depth: Gauge,
+    queue_limit: Gauge,
+    workers: Gauge,
+    generation: Gauge,
+    backend_spawns: Gauge,
+    backend_steady_allocs: Gauge,
+    backend_scratch_bytes: Gauge,
+    queue_wait: Histogram,
+    execute: Histogram,
+    total: Histogram,
+}
+
+impl PoolMetrics {
+    /// Bind every instrument under `{shard, freq}`. Idempotent:
+    /// re-binding the same pool replaces its series in place.
+    fn bind(&self, reg: &Registry, shard: &str, freq: &str) {
+        let l = [("freq", freq), ("shard", shard)];
+        reg.register_counter(
+            "fesrnn_queue_submitted_total",
+            "Validated submits that reached the queue gate (accepted \
+             plus shed).",
+            &l, &self.submitted);
+        reg.register_counter(
+            "fesrnn_queue_accepted_total",
+            "Requests accepted into the pool queue.",
+            &l, &self.accepted);
+        reg.register_counter(
+            "fesrnn_queue_shed_total",
+            "Requests shed at the queue gate with QueueFull (HTTP 429).",
+            &l, &self.shed);
+        reg.register_counter(
+            "fesrnn_queue_rejected_total",
+            "Requests rejected before the queue gate (e.g. history \
+             shorter than the input window).",
+            &l, &self.rejected);
+        reg.register_counter(
+            "fesrnn_batches_total",
+            "Backend executions (one per padded chunk of a drain-round).",
+            &l, &self.batches);
+        reg.register_counter(
+            "fesrnn_padded_slots_total",
+            "Batch slots padded to reach a compiled batch size.",
+            &l, &self.padded_slots);
+        reg.register_counter(
+            "fesrnn_reloads_total",
+            "Completed model hot-swaps.",
+            &l, &self.reloads);
+        reg.register_gauge(
+            "fesrnn_queue_depth",
+            "Accepted-but-undrained requests in the pool queue.",
+            &l, &self.queue_depth);
+        reg.register_gauge(
+            "fesrnn_queue_limit",
+            "Configured backpressure limit (0 = unbounded).",
+            &l, &self.queue_limit);
+        reg.register_gauge(
+            "fesrnn_pool_workers",
+            "Worker threads serving the pool.",
+            &l, &self.workers);
+        reg.register_gauge(
+            "fesrnn_model_generation",
+            "Generation tag of the model currently served.",
+            &l, &self.generation);
+        reg.register_gauge(
+            "fesrnn_backend_spawns",
+            "OS threads the backend has spawned since start.",
+            &l, &self.backend_spawns);
+        reg.register_gauge(
+            "fesrnn_backend_steady_allocs",
+            "Post-warmup steady-state heap allocations charged to the \
+             backend.",
+            &l, &self.backend_steady_allocs);
+        reg.register_gauge(
+            "fesrnn_backend_scratch_bytes",
+            "Bytes pinned by the backend's reusable compute arenas.",
+            &l, &self.backend_scratch_bytes);
+        reg.register_histogram(
+            "fesrnn_queue_wait_seconds",
+            "Enqueue to drain-round pickup.",
+            &l, &self.queue_wait);
+        reg.register_histogram(
+            "fesrnn_execute_seconds",
+            "Backend execution time attributed to each request.",
+            &l, &self.execute);
+        reg.register_histogram(
+            "fesrnn_request_total_seconds",
+            "Enqueue to response sent.",
+            &l, &self.total);
+    }
+}
+
 /// State shared between the pool handle(s) and the worker threads.
 ///
 /// Lock discipline: `queue`, `model` and `stats` are three independent
@@ -123,6 +229,7 @@ pub(crate) struct PoolShared {
     model: Mutex<Arc<VersionedModel>>,
     // lint:lock-name(fcpool.stats)
     stats: Mutex<StatsInner>,
+    metrics: PoolMetrics,
 }
 
 impl PoolShared {
@@ -133,6 +240,7 @@ impl PoolShared {
             // Reject at the door: a short request must not poison the
             // batch it would have ridden in with its error.
             self.stats.lock().unwrap().rejected += 1;
+            self.metrics.rejected.inc();
             let _ = tx.send(Err(anyhow!(
                 "request `{}`: need ≥ {c} values, got {}", req.id,
                 req.values.len())));
@@ -151,11 +259,16 @@ impl PoolShared {
                 // requests already queued keep their latency budget.
                 drop(q);
                 self.stats.lock().unwrap().rejected_overload += 1;
+                self.metrics.submitted.inc();
+                self.metrics.shed.inc();
                 return Err(QueueFull { limit }.into());
             }
             q.jobs.push_back(Job { req, tx, enqueued: Instant::now() });
+            self.metrics.queue_depth.set(q.jobs.len() as u64);
         }
         self.stats.lock().unwrap().requests += 1;
+        self.metrics.submitted.inc();
+        self.metrics.accepted.inc();
         self.cond.notify_one();
         Ok(rx)
     }
@@ -191,6 +304,7 @@ impl PoolShared {
         let take = q.jobs.len().min(self.opts.max_batch);
         let jobs: Vec<Job> = q.jobs.drain(..take).collect();
         let more = !q.jobs.is_empty();
+        self.metrics.queue_depth.set(q.jobs.len() as u64);
         drop(q);
         if more {
             // Work conservation: the submit-side notifications that
@@ -211,6 +325,8 @@ impl PoolShared {
         *slot = Arc::new(VersionedModel { generation, state });
         drop(slot);
         self.stats.lock().unwrap().reloads += 1;
+        self.metrics.reloads.inc();
+        self.metrics.generation.set(generation);
         generation
     }
 
@@ -317,7 +433,11 @@ impl FreqPool {
                 state,
             })),
             stats: Mutex::new(StatsInner::default()),
+            metrics: PoolMetrics::default(),
         });
+        shared.metrics.queue_limit.set(shared.opts.queue_limit as u64);
+        shared.metrics.workers.set(n_workers as u64);
+        shared.metrics.generation.set(1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
@@ -393,6 +513,13 @@ impl FreqPool {
     pub fn stats(&self) -> ServiceStats {
         self.shared.stats_snapshot()
     }
+
+    /// Bind this pool's registry instruments under `{shard, freq}`
+    /// labels — called by the sharding layer when the pool's stack
+    /// joins a ring (and again, idempotently, if it rejoins).
+    pub fn bind_metrics(&self, reg: &Registry, shard: &str) {
+        self.shared.metrics.bind(reg, shard, self.shared.net.freq.name());
+    }
 }
 
 impl Drop for FreqPool {
@@ -447,6 +574,12 @@ fn worker_loop(shared: &PoolShared, backend: &dyn Backend) {
         // Snapshot the backend's steady-state gauges before taking the
         // pool stats lock (the snapshot touches the backend's own locks).
         let bstats = backend.stats();
+        let m = &shared.metrics;
+        m.backend_spawns.set(bstats.spawns);
+        m.backend_steady_allocs.set(bstats.steady_allocs);
+        m.backend_scratch_bytes.set(bstats.scratch_bytes);
+        m.batches.add(round_batches);
+        m.padded_slots.add(round_padded);
         let mut s = shared.stats.lock().unwrap();
         s.backend_spawns = bstats.spawns;
         s.backend_steady_allocs = bstats.steady_allocs;
@@ -458,11 +591,16 @@ fn worker_loop(shared: &PoolShared, backend: &dyn Backend) {
             for _ in 0..len {
                 let job = &jobs[job_i];
                 job_i += 1;
-                s.queue_wait.record(
-                    drained_at.duration_since(job.enqueued).as_secs_f64());
+                let wait =
+                    drained_at.duration_since(job.enqueued).as_secs_f64();
+                let total =
+                    done.duration_since(job.enqueued).as_secs_f64();
+                s.queue_wait.record(wait);
                 s.execute.record(exec_secs);
-                s.total.record(
-                    done.duration_since(job.enqueued).as_secs_f64());
+                s.total.record(total);
+                m.queue_wait.observe(wait);
+                m.execute.observe(exec_secs);
+                m.total.observe(total);
             }
         }
     }

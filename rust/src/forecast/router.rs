@@ -10,6 +10,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::Frequency;
 use crate::coordinator::{checkpoint, ModelState};
+use crate::telemetry::registry::Registry;
 
 use super::pool::{BackendFactory, ForecastHandle, FreqPool};
 use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
@@ -131,5 +132,14 @@ impl ServingStack {
     /// The equalized history length required of requests for `freq`.
     pub fn required_length(&self, freq: Frequency) -> Result<usize> {
         Ok(self.pool(freq)?.net().length)
+    }
+
+    /// Bind every pool's registry instruments under `{shard, freq}`
+    /// labels — called by the sharding layer when this stack joins a
+    /// ring as `shard`. Idempotent per pool.
+    pub fn bind_metrics(&self, reg: &Registry, shard: &str) {
+        for pool in self.pools.values() {
+            pool.bind_metrics(reg, shard);
+        }
     }
 }

@@ -33,6 +33,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::Frequency;
 use crate::coordinator::{checkpoint, ModelState};
+use crate::telemetry::registry::Registry;
 
 use super::router::ServingStack;
 use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
@@ -161,9 +162,15 @@ struct Shards {
 /// N [`ServingStack`] shards behind a consistent-hash router. All
 /// methods take `&self` (membership sits under one `RwLock`; request
 /// dispatch takes the read side only, so routing scales with shards).
+///
+/// The router also owns the ring's metrics [`Registry`]: every shard's
+/// pool instruments are bound into it (under `{shard, freq}` labels)
+/// as the shard joins and unbound as it leaves, so `GET /v1/metrics`
+/// always reflects the current membership.
 pub struct ShardedStack {
     // lint:lock-name(shard.inner)
     inner: RwLock<Shards>,
+    registry: Arc<Registry>,
 }
 
 impl Default for ShardedStack {
@@ -180,7 +187,15 @@ impl ShardedStack {
                 ring: HashRing::new(),
                 stacks: BTreeMap::new(),
             }),
+            registry: Arc::new(Registry::new()),
         }
+    }
+
+    /// The metrics registry every shard's pool instruments are bound
+    /// into; the HTTP front-end renders it at `GET /v1/metrics` and
+    /// binds its own connection metrics here too.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Wrap one existing stack as a single-shard router (what the
@@ -205,16 +220,22 @@ impl ShardedStack {
         if stack.is_empty() {
             bail!("shard `{label}` has no running pools");
         }
-        let mut inner = self.inner.write().unwrap();
-        if let Some(first) = inner.stacks.values().next() {
-            if first.frequencies() != stack.frequencies() {
-                bail!("shard `{label}` serves {:?} but the ring serves \
-                       {:?} — every shard must serve the same frequencies",
-                      stack.frequencies(), first.frequencies());
+        {
+            let mut inner = self.inner.write().unwrap();
+            if let Some(first) = inner.stacks.values().next() {
+                if first.frequencies() != stack.frequencies() {
+                    bail!("shard `{label}` serves {:?} but the ring \
+                           serves {:?} — every shard must serve the same \
+                           frequencies",
+                          stack.frequencies(), first.frequencies());
+                }
             }
+            inner.ring.insert(label)?;
+            inner.stacks.insert(label.to_string(), Arc::clone(&stack));
         }
-        inner.ring.insert(label)?;
-        inner.stacks.insert(label.to_string(), stack);
+        // Bind after the membership lock is released: registration takes
+        // the registry's own mutex, and no path may hold both locks.
+        stack.bind_metrics(&self.registry, label);
         Ok(())
     }
 
@@ -225,15 +246,21 @@ impl ShardedStack {
     /// *drain their queues before the workers exit* — an accepted
     /// request is never dropped by a removal.
     pub fn remove_shard(&self, label: &str) -> Result<Arc<ServingStack>> {
-        let mut inner = self.inner.write().unwrap();
-        if inner.stacks.len() == 1 && inner.stacks.contains_key(label) {
-            bail!("cannot remove `{label}` — it is the last shard");
-        }
-        inner.ring.remove(label)?;
-        inner
-            .stacks
-            .remove(label)
-            .ok_or_else(|| anyhow!("shard `{label}` not found"))
+        let removed = {
+            let mut inner = self.inner.write().unwrap();
+            if inner.stacks.len() == 1 && inner.stacks.contains_key(label) {
+                bail!("cannot remove `{label}` — it is the last shard");
+            }
+            inner.ring.remove(label)?;
+            inner
+                .stacks
+                .remove(label)
+                .ok_or_else(|| anyhow!("shard `{label}` not found"))?
+        };
+        // The departed shard's series leave the exposition with it
+        // (unbind outside the membership lock, mirroring add_shard_arc).
+        self.registry.unregister("shard", label);
+        Ok(removed)
     }
 
     pub fn shard_count(&self) -> usize {

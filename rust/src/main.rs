@@ -7,6 +7,8 @@
 //!   baselines  run the classical baselines (incl. the M4 Comb benchmark)
 //!   serve      the serving stack: per-frequency worker pools, model
 //!              hot-swap, optional HTTP front-end (`--http ADDR`)
+//!   top        live terminal dashboard over a running front-end's
+//!              `/v1/metrics` (queue depth, shed rate, latency quantiles)
 //!
 //! `--backend native` (the default) runs everything on the pure-Rust
 //! backend — no artifacts, no XLA, no Python. `--backend pjrt` runs from
@@ -26,6 +28,7 @@ use fast_esrnn::forecast::{http, ForecastRequest, HttpServer, QueueFull,
                            ServiceOptions, ServingStack, ShardedStack};
 use fast_esrnn::metrics::{mase, smape};
 use fast_esrnn::runtime::{backend_with_artifacts, Backend};
+use fast_esrnn::telemetry::promtext::{self, Sample};
 use fast_esrnn::util::cli::{Args, Cli};
 use fast_esrnn::util::json::Json;
 
@@ -45,7 +48,8 @@ fn main() {
 
 fn run(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
-        bail!("usage: fast-esrnn <data-gen|train|evaluate|baselines|serve> \
+        bail!("usage: fast-esrnn \
+               <data-gen|train|evaluate|baselines|serve|top> \
                [options]\n       fast-esrnn <cmd> --help for details");
     };
     let rest = &args[1..];
@@ -55,6 +59,7 @@ fn run(args: &[String]) -> Result<()> {
         "evaluate" => cmd_evaluate(rest),
         "baselines" => cmd_baselines(rest),
         "serve" => cmd_serve(rest),
+        "top" => cmd_top(rest),
         other => bail!("unknown command `{other}`"),
     }
 }
@@ -328,8 +333,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let server = HttpServer::start_sharded(Arc::clone(&sharded),
                                                a.get("http"))?;
         let addr = server.addr().to_string();
-        println!("HTTP front-end on http://{addr}  (POST /forecast · \
-                  GET /stats · GET /healthz · POST /reload)");
+        println!("HTTP front-end on http://{addr}  (POST /v1/forecast · \
+                  GET /v1/stats · GET /v1/metrics · GET /v1/healthz · \
+                  POST /v1/reload)");
         if n_req == 0 {
             loop {
                 std::thread::park(); // serve until killed
@@ -338,8 +344,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for &freq in &freqs {
             http_demo(&addr, freq, n_req, scale)?;
         }
-        let (code, body) = http::http_request(&addr, "GET", "/stats", None)?;
-        println!("\nGET /stats → {code}\n{body}");
+        let (code, body) =
+            http::http_request(&addr, "GET", "/v1/stats", None)?;
+        println!("\nGET /v1/stats → {code}\n{body}");
         return Ok(());
     }
 
@@ -387,7 +394,7 @@ fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
             ("values", Json::arr_f32(&s.values)),
         ])
         .to_string();
-        let reply = client.request("POST", "/forecast", Some(&body))?;
+        let reply = client.request("POST", "/v1/forecast", Some(&body))?;
         if reply.code == 200
             && Json::parse(&reply.body)?.get("forecast")?.as_f32_vec()?.len()
                 == net.horizon
@@ -400,6 +407,129 @@ fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
               ({:.1} req/s)",
              freq.name(), ok as f64 / secs);
     Ok(())
+}
+
+/// `ttop`-style live dashboard: poll a running front-end's
+/// `/v1/metrics`, redraw in place. One keep-alive connection, no server
+/// cooperation beyond the scrape endpoint.
+fn cmd_top(args: &[String]) -> Result<()> {
+    let cli = Cli::new("top", "live dashboard over a serving front-end's \
+                               /v1/metrics")
+        .opt("url", "http://127.0.0.1:8080",
+             "base URL of the serving front-end")
+        .opt("interval-ms", "1000",
+             "refresh interval in milliseconds (min 100)")
+        .opt("iterations", "0",
+             "refreshes before exiting (0 = run until killed)");
+    let a = cli.parse(args)?;
+    let addr = a
+        .get("url")
+        .trim_start_matches("http://")
+        .trim_end_matches('/')
+        .to_string();
+    let interval = std::time::Duration::from_millis(
+        a.get_usize("interval-ms")?.max(100) as u64);
+    let iterations = a.get_usize("iterations")?;
+    let mut client = http::HttpClient::connect(&addr)?;
+    let mut prev: Option<(std::time::Instant, Vec<Sample>)> = None;
+    let mut frames = 0usize;
+    loop {
+        let reply = client.request("GET", "/v1/metrics", None)?;
+        if reply.code != 200 {
+            bail!("GET /v1/metrics → HTTP {}", reply.code);
+        }
+        let samples = promtext::parse(&reply.body)?;
+        let now = std::time::Instant::now();
+        let frame = render_top(
+            &addr,
+            &samples,
+            prev.as_ref().map(|(t, s)| {
+                (now.duration_since(*t).as_secs_f64(), s.as_slice())
+            }),
+        );
+        {
+            use std::io::Write as _;
+            let mut out = std::io::stdout();
+            let _ = out.write_all(frame.as_bytes());
+            let _ = out.flush();
+        }
+        prev = Some((now, samples));
+        frames += 1;
+        if iterations != 0 && frames >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// Render one dashboard frame: a row per `{shard, freq}` pool plus a
+/// front-end footer. `prev` is `(elapsed seconds, previous scrape)` and
+/// enables the shed-rate column from the second frame on.
+fn render_top(addr: &str, samples: &[Sample],
+              prev: Option<(f64, &[Sample])>) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    // ANSI clear screen + home cursor: redraw in place like `top`.
+    out.push_str("\x1b[2J\x1b[H");
+    let _ = writeln!(out, "fast-esrnn top — {addr}");
+    let _ = writeln!(
+        out,
+        "{:<10} {:<10} {:>6} {:>6} {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "SHARD", "FREQ", "DEPTH", "LIMIT", "ACCEPTED", "SHED/S", "P50MS",
+        "P95MS", "P99MS");
+    // Every bound pool exposes fesrnn_queue_accepted_total, so its
+    // {shard, freq} pairs enumerate the rows.
+    let mut keys: Vec<(String, String)> = samples
+        .iter()
+        .filter(|s| s.name == "fesrnn_queue_accepted_total")
+        .filter_map(|s| {
+            Some((s.label("shard")?.to_string(),
+                  s.label("freq")?.to_string()))
+        })
+        .collect();
+    keys.sort();
+    keys.dedup();
+    for (shard, freq) in &keys {
+        let l = [("shard", shard.as_str()), ("freq", freq.as_str())];
+        let val = |name| promtext::value(samples, name, &l);
+        let shed = val("fesrnn_queue_shed_total");
+        let shed_rate = match prev {
+            Some((dt, old)) if dt > 0.0 => {
+                let before =
+                    promtext::value(old, "fesrnn_queue_shed_total", &l);
+                (shed - before).max(0.0) / dt
+            }
+            _ => 0.0,
+        };
+        let quant = |q| {
+            1e3 * promtext::histogram_quantile(
+                samples, "fesrnn_request_total_seconds", &l, q)
+        };
+        let _ = writeln!(
+            out,
+            "{:<10} {:<10} {:>6} {:>6} {:>10} {:>8.1} {:>8.2} {:>8.2} \
+             {:>8.2}",
+            shard, freq,
+            val("fesrnn_queue_depth") as u64,
+            val("fesrnn_queue_limit") as u64,
+            val("fesrnn_queue_accepted_total") as u64,
+            shed_rate, quant(0.50), quant(0.95), quant(0.99));
+    }
+    let conns =
+        promtext::value(samples, "fesrnn_http_connections_total", &[]);
+    let sheds = promtext::value(samples, "fesrnn_http_sheds_total",
+                                &[("kind", "backlog_full")])
+        + promtext::value(samples, "fesrnn_http_sheds_total",
+                          &[("kind", "stale_in_backlog")]);
+    let rotations = promtext::value(
+        samples, "fesrnn_http_keepalive_rotations_total", &[]);
+    let deprecated = promtext::value(
+        samples, "fesrnn_http_deprecated_requests_total", &[]);
+    let _ = writeln!(
+        out,
+        "connections {conns:.0} · http sheds {sheds:.0} · keep-alive \
+         rotations {rotations:.0} · legacy-path requests {deprecated:.0}");
+    out
 }
 
 /// Drive one frequency's pools through the in-process sharded router:

@@ -1,7 +1,13 @@
 //! Lightweight telemetry: phase timers, counters and latency quantile
 //! recorders for the training loop and forecast service. The §Perf pass
-//! reads these to find hot phases; the serving stack's `/stats` endpoint
-//! reports the quantiles.
+//! reads these to find hot phases; the serving stack's `/v1/stats`
+//! endpoint reports the quantiles. The [`registry`] submodule adds the
+//! lock-cheap counters/gauges/histograms behind `GET /v1/metrics`
+//! (Prometheus text exposition), and [`promtext`] parses that format
+//! back for the `fast-esrnn top` dashboard and the conformance test.
+
+pub mod promtext;
+pub mod registry;
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

@@ -1,0 +1,394 @@
+//! Strict parser for the Prometheus text exposition format (0.0.4)
+//! plus a `histogram_quantile` helper.
+//!
+//! Shared by the `fast-esrnn top` live dashboard and the
+//! `metrics_conformance` integration test, so "every `/v1/metrics`
+//! line is valid Prometheus text" means exactly one thing in both
+//! places. The parser is stricter than real scrapers: every sample
+//! must follow a `# TYPE` line for its family (histogram samples may
+//! carry the `_bucket` / `_sum` / `_count` suffix), metric and label
+//! names must match the Prometheus charset, label values must use the
+//! `\\` / `\"` / `\n` escapes, and counter samples must be finite and
+//! non-negative.
+
+use anyhow::{anyhow, bail, Result};
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Name as written on the sample line (histogram samples keep
+    /// their `_bucket` / `_sum` / `_count` suffix).
+    pub name: String,
+    /// The family the sample belongs to (the `# TYPE` line's name).
+    pub family: String,
+    /// Family kind from the `# TYPE` line (`counter`, `gauge`,
+    /// `histogram`, ...).
+    pub kind: String,
+    /// Label pairs in line order (`le` included for buckets).
+    pub labels: Vec<(String, String)>,
+    /// Sample value (`+Inf` / `-Inf` / `NaN` parse to the f64 specials).
+    pub value: f64,
+}
+
+impl Sample {
+    /// Value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse a full exposition. Fails (with a line number) on the first
+/// malformed line.
+pub fn parse(text: &str) -> Result<Vec<Sample>> {
+    let mut out = Vec::new();
+    // (family name, kind) of the most recent # TYPE line.
+    let mut family: Option<(String, String)> = None;
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, _help) = rest
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("line {n}: # HELP without text"))?;
+            if !valid_name(name) {
+                bail!("line {n}: invalid metric name `{name}` in # HELP");
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("line {n}: # TYPE without kind"))?;
+            if !valid_name(name) {
+                bail!("line {n}: invalid metric name `{name}` in # TYPE");
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram"
+                               | "summary" | "untyped")
+            {
+                bail!("line {n}: unknown metric type `{kind}`");
+            }
+            family = Some((name.to_string(), kind.to_string()));
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        let sample = parse_sample(line, family.as_ref())
+            .map_err(|e| anyhow!("line {n}: {e}"))?;
+        out.push(sample);
+    }
+    Ok(out)
+}
+
+fn parse_sample(
+    line: &str,
+    family: Option<&(String, String)>,
+) -> Result<Sample> {
+    let (name, labels, rest) = if let Some(brace) = line.find('{') {
+        let (labels, after) = parse_labels(&line[brace + 1..])?;
+        (&line[..brace], labels, after)
+    } else {
+        let sp = line
+            .find(' ')
+            .ok_or_else(|| anyhow!("sample line has no value"))?;
+        (&line[..sp], Vec::new(), &line[sp..])
+    };
+    if !valid_name(name) {
+        bail!("invalid metric name `{name}`");
+    }
+    let mut fields = rest.split_whitespace();
+    let value_tok =
+        fields.next().ok_or_else(|| anyhow!("missing sample value"))?;
+    let value = parse_value(value_tok)?;
+    // An optional integer timestamp is tolerated; anything else is not.
+    if let Some(ts) = fields.next() {
+        if ts.parse::<i64>().is_err() || fields.next().is_some() {
+            bail!("trailing garbage after sample value");
+        }
+    }
+    let (fam_name, kind) = family
+        .ok_or_else(|| anyhow!("sample `{name}` before any # TYPE line"))?;
+    let member = if kind == "histogram" {
+        name == fam_name
+            || name.strip_prefix(fam_name.as_str()).is_some_and(|suffix| {
+                matches!(suffix, "_bucket" | "_sum" | "_count")
+            })
+    } else {
+        name == fam_name
+    };
+    if !member {
+        bail!("sample `{name}` does not belong to the preceding # TYPE \
+               family `{fam_name}`");
+    }
+    if kind == "counter" && !(value.is_finite() && value >= 0.0) {
+        bail!("counter `{name}` has invalid value {value}");
+    }
+    Ok(Sample {
+        name: name.to_string(),
+        family: fam_name.clone(),
+        kind: kind.clone(),
+        labels,
+        value,
+    })
+}
+
+/// Parse `k="v",...}` (the text after the opening `{`); returns the
+/// label pairs and the remainder of the line after the closing `}`.
+fn parse_labels(s: &str) -> Result<(Vec<(String, String)>, &str)> {
+    let mut labels = Vec::new();
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    loop {
+        if i < b.len() && b[i] == b'}' {
+            return Ok((labels, &s[i + 1..]));
+        }
+        let start = i;
+        while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+        {
+            i += 1;
+        }
+        if i == start {
+            bail!("empty label name");
+        }
+        let key = s[start..i].to_string();
+        if i + 1 >= b.len() || b[i] != b'=' || b[i + 1] != b'"' {
+            bail!("label `{key}` is not followed by =\"");
+        }
+        i += 2;
+        let mut val = String::new();
+        loop {
+            if i >= b.len() {
+                bail!("unterminated label value");
+            }
+            match b[i] {
+                b'"' => {
+                    i += 1;
+                    break;
+                }
+                b'\\' => {
+                    let esc = *b
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("dangling escape"))?;
+                    match esc {
+                        b'\\' => val.push('\\'),
+                        b'"' => val.push('"'),
+                        b'n' => val.push('\n'),
+                        other => {
+                            bail!("unknown escape \\{}", other as char)
+                        }
+                    }
+                    i += 2;
+                }
+                _ => {
+                    let ch = s[i..]
+                        .chars()
+                        .next()
+                        .ok_or_else(|| anyhow!("invalid UTF-8"))?;
+                    val.push(ch);
+                    i += ch.len_utf8();
+                }
+            }
+        }
+        labels.push((key, val));
+        if i < b.len() && b[i] == b',' {
+            i += 1;
+            continue;
+        }
+        if i < b.len() && b[i] == b'}' {
+            return Ok((labels, &s[i + 1..]));
+        }
+        bail!("expected `,` or `}}` after label value");
+    }
+}
+
+fn parse_value(tok: &str) -> Result<f64> {
+    match tok {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        t => t
+            .parse::<f64>()
+            .map_err(|_| anyhow!("bad sample value `{t}`")),
+    }
+}
+
+fn valid_name(name: &str) -> bool {
+    let mut cs = name.chars();
+    match cs.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    cs.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Value of the unique sample `name` whose labels include every pair
+/// in `labels`; 0.0 when absent.
+pub fn value(samples: &[Sample], name: &str, labels: &[(&str, &str)]) -> f64 {
+    samples
+        .iter()
+        .find(|s| {
+            s.name == name
+                && labels.iter().all(|(k, v)| s.label(k) == Some(*v))
+        })
+        .map_or(0.0, |s| s.value)
+}
+
+/// Prometheus-style `histogram_quantile(q, ...)` over the
+/// `<family>_bucket` samples matching `labels`: linear interpolation
+/// inside the bucket that crosses rank `q`; the highest finite bound
+/// when the crossing bucket is `+Inf`; 0.0 with no observations.
+pub fn histogram_quantile(
+    samples: &[Sample],
+    family: &str,
+    labels: &[(&str, &str)],
+    q: f64,
+) -> f64 {
+    let bucket_name = format!("{family}_bucket");
+    let mut buckets: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|s| {
+            s.name == bucket_name
+                && labels.iter().all(|(k, v)| s.label(k) == Some(*v))
+        })
+        .filter_map(|s| {
+            let le = s.label("le")?;
+            let bound = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse().ok()?
+            };
+            Some((bound, s.value))
+        })
+        .collect();
+    buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let total = match buckets.last() {
+        Some((_, t)) if *t > 0.0 => *t,
+        _ => return 0.0,
+    };
+    let rank = q.clamp(0.0, 1.0) * total;
+    let mut prev_bound = 0.0;
+    let mut prev_cum = 0.0;
+    for (bound, cum) in &buckets {
+        if *cum >= rank {
+            if bound.is_infinite() {
+                return prev_bound;
+            }
+            let in_bucket = cum - prev_cum;
+            if in_bucket <= 0.0 {
+                return *bound;
+            }
+            return prev_bound
+                + (bound - prev_bound) * ((rank - prev_cum) / in_bucket);
+        }
+        prev_bound = *bound;
+        prev_cum = *cum;
+    }
+    prev_bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{Counter, Histogram, Registry};
+
+    #[test]
+    fn parses_counters_gauges_and_histograms() {
+        let text = "\
+# HELP req_total Requests.\n\
+# TYPE req_total counter\n\
+req_total{shard=\"a\",freq=\"monthly\"} 12\n\
+req_total{shard=\"b\",freq=\"monthly\"} 3\n\
+# TYPE depth gauge\n\
+depth 7\n\
+# TYPE lat_seconds histogram\n\
+lat_seconds_bucket{le=\"0.1\"} 2\n\
+lat_seconds_bucket{le=\"+Inf\"} 3\n\
+lat_seconds_sum 0.25\n\
+lat_seconds_count 3\n";
+        let samples = parse(text).unwrap();
+        assert_eq!(samples.len(), 7);
+        assert_eq!(value(&samples, "req_total", &[("shard", "a")]), 12.0);
+        assert_eq!(value(&samples, "depth", &[]), 7.0);
+        let inf = samples
+            .iter()
+            .find(|s| s.name == "lat_seconds_bucket"
+                      && s.label("le") == Some("+Inf"))
+            .unwrap();
+        assert_eq!(inf.value, 3.0);
+        assert_eq!(inf.family, "lat_seconds");
+        assert_eq!(inf.kind, "histogram");
+        // Escapes round-trip.
+        let esc = parse("# TYPE g gauge\ng{k=\"a\\\\b\\\"c\\nd\"} 1\n")
+            .unwrap();
+        assert_eq!(esc[0].label("k").unwrap(), "a\\b\"c\nd");
+    }
+
+    #[test]
+    fn rejects_malformed_expositions() {
+        // Sample before any # TYPE line.
+        assert!(parse("x_total 1\n").is_err());
+        // Name outside the declared family.
+        assert!(parse("# TYPE a counter\nb_total 1\n").is_err());
+        // Negative counter.
+        assert!(parse("# TYPE a counter\na -1\n").is_err());
+        // Missing value.
+        assert!(parse("# TYPE a gauge\na\n").is_err());
+        // Unterminated label value.
+        assert!(parse("# TYPE a gauge\na{k=\"v} 1\n").is_err());
+        // Trailing garbage after the value.
+        assert!(parse("# TYPE a gauge\na 1 2 3\n").is_err());
+        // Bad metric type.
+        assert!(parse("# TYPE a enum\na 1\n").is_err());
+        // Histograms accept exactly the three suffixes.
+        assert!(parse("# TYPE h histogram\nh_min 1\n").is_err());
+        assert!(parse("# TYPE h histogram\nh_count 1\n").is_ok());
+    }
+
+    #[test]
+    fn registry_render_round_trips_through_parse() {
+        let reg = Registry::new();
+        let c = Counter::new();
+        c.add(5);
+        reg.register_counter("rt_total", "T.", &[("shard", "s")], &c);
+        let h = Histogram::new();
+        h.observe(0.003);
+        h.observe(0.2);
+        reg.register_histogram("rt_seconds", "L.",
+                               &[("shard", "s")], &h);
+        let samples = parse(&reg.render()).unwrap();
+        assert_eq!(value(&samples, "rt_total", &[("shard", "s")]), 5.0);
+        assert_eq!(value(&samples, "rt_seconds_count",
+                         &[("shard", "s")]), 2.0);
+        let p50 =
+            histogram_quantile(&samples, "rt_seconds", &[("shard", "s")],
+                               0.5);
+        assert!(p50 > 0.0 && p50 <= 0.0032, "p50 = {p50}");
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let text = "\
+# TYPE h histogram\n\
+h_bucket{le=\"1\"} 0\n\
+h_bucket{le=\"2\"} 10\n\
+h_bucket{le=\"4\"} 10\n\
+h_bucket{le=\"+Inf\"} 10\n";
+        let samples = parse(text).unwrap();
+        let p50 = histogram_quantile(&samples, "h", &[], 0.5);
+        assert!((p50 - 1.5).abs() < 1e-12, "p50 = {p50}");
+        // Rank falls in +Inf -> highest finite bound.
+        let text = "\
+# TYPE h histogram\n\
+h_bucket{le=\"1\"} 1\n\
+h_bucket{le=\"+Inf\"} 4\n";
+        let samples = parse(text).unwrap();
+        assert_eq!(histogram_quantile(&samples, "h", &[], 0.99), 1.0);
+        // Empty histogram.
+        assert_eq!(histogram_quantile(&samples, "nope", &[], 0.5), 0.0);
+    }
+}

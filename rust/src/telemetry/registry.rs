@@ -1,0 +1,457 @@
+//! Zero-dependency metrics registry with Prometheus text rendering.
+//!
+//! The instruments are deliberately minimal and lock-free on the hot
+//! path: a [`Counter`] / [`Gauge`] is one relaxed atomic, a
+//! [`Histogram`] is a fixed array of log-spaced buckets plus a
+//! nanosecond sum — no locks, no allocation, no floating-point math
+//! beyond the bucket search. Layers that keep stats create their
+//! instruments up front and hand clones to the [`Registry`], which
+//! only stores the mapping `family name → labeled series`; the scrape
+//! path (`GET /v1/metrics`) walks that mapping and renders the
+//! Prometheus text exposition format (0.0.4) into a single `String` —
+//! the response buffer is the only allocation a scrape performs.
+//!
+//! Series are keyed by their (sorted) label pairs, so re-registering
+//! the same name+labels replaces the instrument in place (idempotent
+//! shard re-add), and [`Registry::unregister`] drops every series of a
+//! departing shard by its `shard="..."` label pair.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of finite histogram buckets (the `+Inf` overflow bucket is
+/// tracked separately).
+pub const BUCKETS: usize = 20;
+
+/// Upper bounds (seconds) of the finite histogram buckets: log-spaced
+/// ×2 from 100µs to ~52s, which brackets everything from a cache-warm
+/// native forecast to a pathologically stalled queue. Literal values
+/// so they render exactly the same way they are written here.
+pub const BUCKET_BOUNDS: [f64; BUCKETS] = [
+    1e-4, 2e-4, 4e-4, 8e-4, 1.6e-3, 3.2e-3, 6.4e-3, 1.28e-2, 2.56e-2,
+    5.12e-2, 1.024e-1, 2.048e-1, 4.096e-1, 8.192e-1, 1.6384, 3.2768,
+    6.5536, 13.1072, 26.2144, 52.4288,
+];
+
+/// Monotonically increasing event count. Clones share the same cell,
+/// so a layer keeps one copy for its hot path and registers another.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A fresh counter at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, generation, …).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// A fresh gauge at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistogramInner {
+    /// Per-bucket (non-cumulative) observation counts; rendering
+    /// accumulates them into the cumulative `_bucket{le=...}` form.
+    counts: [AtomicU64; BUCKETS],
+    /// Observations above the largest finite bound (`+Inf` bucket).
+    overflow: AtomicU64,
+    /// Sum of observations in integer nanoseconds, so `observe` needs
+    /// no float atomics; rendered back as seconds.
+    sum_nanos: AtomicU64,
+}
+
+/// Fixed log-bucketed latency histogram (seconds). Complements the
+/// exact-quantile [`Quantiles`](super::Quantiles) ring: the ring feeds
+/// `/v1/stats` p50/p95/p99, the histogram feeds `/v1/metrics` so
+/// scrapers can aggregate across shards and compute rates.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    inner: Arc<HistogramInner>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// A fresh, empty histogram over [`BUCKET_BOUNDS`].
+    pub fn new() -> Self {
+        Histogram {
+            inner: Arc::new(HistogramInner {
+                counts: std::array::from_fn(|_| AtomicU64::new(0)),
+                overflow: AtomicU64::new(0),
+                sum_nanos: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Record one observation in seconds. Negative and NaN inputs
+    /// contribute zero to the sum; NaN lands in the `+Inf` bucket.
+    pub fn observe(&self, secs: f64) {
+        let nanos = (secs.max(0.0) * 1e9) as u64;
+        self.inner.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        match BUCKET_BOUNDS.iter().position(|b| secs <= *b) {
+            Some(i) => {
+                self.inner.counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.inner.overflow.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        let inner = &self.inner;
+        let mut total = inner.overflow.load(Ordering::Relaxed);
+        for c in &inner.counts {
+            total += c.load(Ordering::Relaxed);
+        }
+        total
+    }
+
+    /// One pass over the atomics: per-bucket counts with the `+Inf`
+    /// overflow appended last, plus the sum in seconds.
+    fn snapshot(&self) -> ([u64; BUCKETS + 1], f64) {
+        let mut counts = [0u64; BUCKETS + 1];
+        for (i, c) in self.inner.counts.iter().enumerate() {
+            counts[i] = c.load(Ordering::Relaxed);
+        }
+        counts[BUCKETS] = self.inner.overflow.load(Ordering::Relaxed);
+        let sum = self.inner.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        (counts, sum)
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Instrument {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Debug)]
+struct Family {
+    help: &'static str,
+    kind: &'static str,
+    /// Labeled series, kept sorted by label set for a deterministic
+    /// exposition order.
+    series: Vec<(Vec<(String, String)>, Instrument)>,
+}
+
+/// The metric catalog (one per sharded serving stack): family
+/// metadata plus every bound labeled series. Registration is rare
+/// (shard add/remove, server start); scrapes take the one mutex
+/// briefly and never touch the instruments' hot paths.
+#[derive(Debug, Default)]
+pub struct Registry {
+    // Leaf lock: held only while mutating/walking the catalog, never
+    // while acquiring another lock.
+    // lint:lock-name(telemetry.registry)
+    families: Mutex<BTreeMap<&'static str, Family>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn register(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        inst: Instrument,
+    ) {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        let mut families = self.families.lock().unwrap();
+        let fam = families.entry(name).or_insert_with(|| Family {
+            help,
+            kind,
+            series: Vec::new(),
+        });
+        match fam.series.iter_mut().find(|(l, _)| *l == labels) {
+            Some(slot) => slot.1 = inst,
+            None => {
+                fam.series.push((labels, inst));
+                fam.series.sort_by(|a, b| a.0.cmp(&b.0));
+            }
+        }
+    }
+
+    /// Bind `counter` as `name{labels}`. Idempotent: the same
+    /// name+labels replaces the previous instrument.
+    pub fn register_counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        counter: &Counter,
+    ) {
+        self.register(name, help, "counter", labels,
+                      Instrument::Counter(counter.clone()));
+    }
+
+    /// Bind `gauge` as `name{labels}`; idempotent like
+    /// [`Registry::register_counter`].
+    pub fn register_gauge(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        gauge: &Gauge,
+    ) {
+        self.register(name, help, "gauge", labels,
+                      Instrument::Gauge(gauge.clone()));
+    }
+
+    /// Bind `hist` as `name{labels}`; idempotent like
+    /// [`Registry::register_counter`].
+    pub fn register_histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        hist: &Histogram,
+    ) {
+        self.register(name, help, "histogram", labels,
+                      Instrument::Histogram(hist.clone()));
+    }
+
+    /// Drop every series carrying the label pair `key="value"` — e.g.
+    /// `unregister("shard", "alpha")` removes a drained shard's whole
+    /// slice of the exposition. Families left empty disappear with it.
+    pub fn unregister(&self, key: &str, value: &str) {
+        let mut families = self.families.lock().unwrap();
+        for fam in families.values_mut() {
+            fam.series.retain(|(labels, _)| {
+                !labels.iter().any(|(k, v)| k == key && v == value)
+            });
+        }
+        families.retain(|_, fam| !fam.series.is_empty());
+    }
+
+    /// Render the whole catalog in the Prometheus text exposition
+    /// format (0.0.4): `# HELP` / `# TYPE` per family, then each
+    /// labeled series; histograms expand to cumulative
+    /// `_bucket{le=...}` samples plus `_sum` / `_count`. The returned
+    /// `String` is the only allocation.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        let families = self.families.lock().unwrap();
+        for (name, fam) in families.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for (labels, inst) in &fam.series {
+                match inst {
+                    Instrument::Counter(c) => {
+                        write_plain(&mut out, name, labels, c.get());
+                    }
+                    Instrument::Gauge(g) => {
+                        write_plain(&mut out, name, labels, g.get());
+                    }
+                    Instrument::Histogram(h) => {
+                        let (counts, sum) = h.snapshot();
+                        let mut cum = 0u64;
+                        for (i, c) in counts.iter().enumerate() {
+                            cum += c;
+                            out.push_str(name);
+                            out.push_str("_bucket{");
+                            for (k, v) in labels {
+                                push_label(&mut out, k, v);
+                                out.push(',');
+                            }
+                            if i < BUCKETS {
+                                let _ = writeln!(
+                                    out, "le=\"{}\"}} {cum}",
+                                    BUCKET_BOUNDS[i]
+                                );
+                            } else {
+                                let _ =
+                                    writeln!(out, "le=\"+Inf\"}} {cum}");
+                            }
+                        }
+                        out.push_str(name);
+                        out.push_str("_sum");
+                        write_label_block(&mut out, labels);
+                        let _ = writeln!(out, " {sum}");
+                        out.push_str(name);
+                        out.push_str("_count");
+                        write_label_block(&mut out, labels);
+                        let _ = writeln!(out, " {cum}");
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn push_label(out: &mut String, key: &str, value: &str) {
+    out.push_str(key);
+    out.push_str("=\"");
+    for ch in value.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_label_block(out: &mut String, labels: &[(String, String)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_label(out, k, v);
+    }
+    out.push('}');
+}
+
+fn write_plain(
+    out: &mut String,
+    name: &str,
+    labels: &[(String, String)],
+    value: u64,
+) {
+    use std::fmt::Write as _;
+    out.push_str(name);
+    write_label_block(out, labels);
+    let _ = writeln!(out, " {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_render_with_sorted_labels() {
+        let reg = Registry::new();
+        let c = Counter::new();
+        c.add(3);
+        reg.register_counter("t_requests_total", "Requests.",
+                             &[("shard", "s0"), ("freq", "monthly")], &c);
+        let g = Gauge::new();
+        g.set(7);
+        reg.register_gauge("t_depth", "Depth.", &[], &g);
+        let text = reg.render();
+        assert!(text.contains("# HELP t_requests_total Requests."));
+        assert!(text.contains("# TYPE t_requests_total counter"));
+        assert!(text.contains(
+            "t_requests_total{freq=\"monthly\",shard=\"s0\"} 3"
+        ));
+        assert!(text.contains("# TYPE t_depth gauge"));
+        assert!(text.contains("\nt_depth 7\n"));
+        c.inc();
+        assert!(reg.render().contains("shard=\"s0\"} 4"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_sum_in_seconds() {
+        let reg = Registry::new();
+        let h = Histogram::new();
+        h.observe(0.00005); // below first bound -> bucket 0
+        h.observe(0.0003); // bucket le=0.0004
+        h.observe(1000.0); // +Inf overflow
+        h.observe(f64::NAN); // +Inf, zero sum contribution
+        h.observe(-1.0); // bucket 0 (<= first bound), zero sum
+        reg.register_histogram("t_lat_seconds", "Latency.", &[], &h);
+        assert_eq!(h.count(), 5);
+        let text = reg.render();
+        assert!(text.contains("# TYPE t_lat_seconds histogram"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"0.0001\"} 2"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"0.0002\"} 2"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"0.0004\"} 3"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"52.4288\"} 3"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("t_lat_seconds_count 5"));
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("t_lat_seconds_sum "))
+            .unwrap();
+        let sum: f64 = sum_line.split(' ').nth(1).unwrap().parse().unwrap();
+        assert!((sum - 1000.00035).abs() < 1e-6, "sum = {sum}");
+    }
+
+    #[test]
+    fn rebind_replaces_and_unregister_drops_by_label() {
+        let reg = Registry::new();
+        let a = Counter::new();
+        a.add(10);
+        reg.register_counter("t_total", "T.", &[("shard", "a")], &a);
+        let b = Counter::new();
+        b.add(2);
+        // Same name+labels: replaces instrument `a` in place.
+        reg.register_counter("t_total", "T.", &[("shard", "a")], &b);
+        let c = Counter::new();
+        c.add(5);
+        reg.register_counter("t_total", "T.", &[("shard", "b")], &c);
+        let text = reg.render();
+        assert!(text.contains("t_total{shard=\"a\"} 2"));
+        assert!(text.contains("t_total{shard=\"b\"} 5"));
+        reg.unregister("shard", "a");
+        let text = reg.render();
+        assert!(!text.contains("shard=\"a\""));
+        assert!(text.contains("t_total{shard=\"b\"} 5"));
+        reg.unregister("shard", "b");
+        assert_eq!(reg.render(), "");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        let g = Gauge::new();
+        reg.register_gauge("t_esc", "E.", &[("k", "a\\b\"c\nd")], &g);
+        assert!(reg.render().contains("t_esc{k=\"a\\\\b\\\"c\\nd\"} 0"));
+    }
+}

@@ -1,0 +1,248 @@
+//! `/v1/metrics` conformance under live traffic — the observability
+//! contract:
+//!
+//! * every scrape parses as valid Prometheus text exposition format
+//!   (strict parser: `# TYPE` discipline, name charset, label escapes);
+//! * counters (including histogram `_bucket`/`_count` series) are
+//!   monotonically non-decreasing across scrapes taken while load is in
+//!   flight;
+//! * accounting closes exactly between the two surfaces:
+//!   `accepted + shed == submitted` per `{shard, freq}`, and the
+//!   `/v1/metrics` values equal the `/v1/stats` values;
+//! * legacy unversioned paths are aliases: byte-identical payloads plus
+//!   `Deprecation` / `Link` headers that the `/v1` routes do not carry.
+//!
+//! Runs on the native backend with fresh weights (metric plumbing does
+//! not depend on trained weights), one starved pool per shard so both
+//! the accepted and the shed paths are exercised.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fast_esrnn::config::Frequency;
+use fast_esrnn::coordinator::ModelState;
+use fast_esrnn::forecast::{HttpClient, HttpOptions, HttpServer,
+                           ServiceOptions, ServingStack, ShardedStack};
+use fast_esrnn::runtime::NativeBackend;
+use fast_esrnn::telemetry::promtext::{self, Sample};
+use fast_esrnn::util::json::Json;
+
+const FREQ: Frequency = Frequency::Quarterly;
+const SHARDS: [&str; 2] = ["alpha", "beta"];
+
+fn fresh_state() -> ModelState {
+    let backend = NativeBackend::new();
+    ModelState::init(&backend, FREQ.name(), 42).unwrap()
+}
+
+/// A positive synthetic history long enough for the quarterly C=72 cut.
+fn forecast_body(id: &str) -> String {
+    let values: Vec<f32> = (0..80)
+        .map(|i| 100.0 + i as f32 * 0.5 + (i % 4) as f32 * 3.0)
+        .collect();
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("values", Json::arr_f32(&values)),
+    ])
+    .to_string()
+}
+
+/// Two starved shards behind one front-end: tiny queue so concurrent
+/// clients force both 200s and 429s.
+fn start_ring() -> (HttpServer, Arc<ShardedStack>) {
+    let sharded = ShardedStack::new();
+    for label in SHARDS {
+        let mut stack = ServingStack::new();
+        stack
+            .start_pool_native(FREQ, fresh_state(), ServiceOptions {
+                workers: 1,
+                queue_limit: 2,
+                batch_window: Duration::from_millis(1),
+                max_batch: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        sharded.add_shard(label, stack).unwrap();
+    }
+    let sharded = Arc::new(sharded);
+    let server = HttpServer::start_with(
+        Arc::clone(&sharded),
+        "127.0.0.1:0",
+        HttpOptions { conn_workers: 16, ..Default::default() },
+    )
+    .unwrap();
+    (server, sharded)
+}
+
+/// Counter-valued samples (plain counters plus histogram `_bucket` /
+/// `_count` series) keyed by name + sorted labels — the monotonicity
+/// domain.
+fn counter_map(samples: &[Sample]) -> BTreeMap<String, f64> {
+    samples
+        .iter()
+        .filter(|s| {
+            s.kind == "counter"
+                || (s.kind == "histogram" && !s.name.ends_with("_sum"))
+        })
+        .map(|s| {
+            let mut labels = s.labels.clone();
+            labels.sort();
+            (format!("{}{labels:?}", s.name), s.value)
+        })
+        .collect()
+}
+
+fn metric(samples: &[Sample], name: &str, shard: &str) -> f64 {
+    promtext::value(samples, name,
+                    &[("shard", shard), ("freq", FREQ.name())])
+}
+
+#[test]
+fn metrics_scrapes_are_valid_monotonic_and_agree_with_stats() {
+    let (server, _sharded) = start_ring();
+    let addr = server.addr().to_string();
+
+    // Saturating traffic until both outcomes (accept and shed) have
+    // been observed on the wire.
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 15;
+    let mut total_ok = 0u64;
+    let mut total_shed = 0u64;
+    let mut scrapes: Vec<Vec<Sample>> = Vec::new();
+    let mut scraper = HttpClient::connect(&addr).unwrap();
+    for round in 0..5 {
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&addr).unwrap();
+                let (mut ok, mut shed) = (0u64, 0u64);
+                for i in 0..PER_CLIENT {
+                    let body =
+                        forecast_body(&format!("series-{}", (c * 5 + i) % 40));
+                    let reply = client
+                        .request("POST", "/v1/forecast", Some(&body))
+                        .expect("request hung or connection died");
+                    match reply.code {
+                        200 => ok += 1,
+                        429 => shed += 1,
+                        other => panic!("got {other}: {}", reply.body),
+                    }
+                }
+                (ok, shed)
+            }));
+        }
+        // Scrape while that load is in flight: every line must parse,
+        // and counters must never move backwards.
+        for _ in 0..3 {
+            let reply = scraper.request("GET", "/v1/metrics", None).unwrap();
+            assert_eq!(reply.code, 200);
+            assert_eq!(reply.header("content-type"),
+                       Some("text/plain; version=0.0.4"));
+            let samples = promtext::parse(&reply.body)
+                .expect("scrape is not valid Prometheus text");
+            scrapes.push(samples);
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for j in joins {
+            let (ok, shed) = j.join().expect("client thread panicked");
+            total_ok += ok;
+            total_shed += shed;
+        }
+        if total_ok > 0 && total_shed > 0 {
+            break;
+        }
+        assert!(round < 4, "never observed both 200s and 429s");
+    }
+    assert!(total_ok > 0 && total_shed > 0);
+
+    // A final quiescent scrape joins the monotonicity chain and anchors
+    // the accounting checks below.
+    let reply = scraper.request("GET", "/v1/metrics", None).unwrap();
+    let final_samples = promtext::parse(&reply.body).unwrap();
+    scrapes.push(final_samples);
+    let last = scrapes.last().unwrap();
+
+    for pair in scrapes.windows(2) {
+        let (before, after) = (counter_map(&pair[0]), counter_map(&pair[1]));
+        for (key, prev) in &before {
+            let now = after.get(key).unwrap_or_else(|| {
+                panic!("counter {key} disappeared between scrapes")
+            });
+            assert!(now >= prev,
+                    "counter {key} went backwards: {prev} -> {now}");
+        }
+    }
+
+    // Coverage: every surface ISSUE names must be present.
+    for name in [
+        "fesrnn_queue_depth",
+        "fesrnn_queue_accepted_total",
+        "fesrnn_queue_shed_total",
+        "fesrnn_backend_spawns",
+        "fesrnn_backend_scratch_bytes",
+        "fesrnn_http_connections_total",
+    ] {
+        assert!(last.iter().any(|s| s.family == name),
+                "metric family {name} missing from the exposition");
+    }
+    assert!(last.iter()
+                .any(|s| s.name == "fesrnn_request_total_seconds_bucket"),
+            "latency histogram buckets missing");
+
+    // Accounting closes exactly, per shard and in total, and the two
+    // surfaces agree. Traffic has fully drained (every client got its
+    // response before join), so stats and the final scrape are stable.
+    let reply = scraper.request("GET", "/v1/stats", None).unwrap();
+    assert_eq!(reply.code, 200);
+    let stats = Json::parse(&reply.body).unwrap();
+    let (mut accepted_sum, mut shed_sum) = (0u64, 0u64);
+    let shard_rows = stats.get("shards").unwrap().as_arr().unwrap();
+    for shard in SHARDS {
+        let submitted = metric(last, "fesrnn_queue_submitted_total", shard);
+        let accepted = metric(last, "fesrnn_queue_accepted_total", shard);
+        let shed = metric(last, "fesrnn_queue_shed_total", shard);
+        assert_eq!(accepted + shed, submitted,
+                   "[{shard}] accepted + shed != submitted");
+        let row = shard_rows
+            .iter()
+            .find(|r| r.get("shard").unwrap().as_str().unwrap() == shard)
+            .unwrap_or_else(|| panic!("shard {shard} missing from stats"));
+        let serving = row.get("serving").unwrap().get(FREQ.name()).unwrap();
+        assert_eq!(serving.get("queue_accepted_total").unwrap()
+                       .as_f64().unwrap(),
+                   accepted,
+                   "[{shard}] /v1/stats disagrees with /v1/metrics");
+        assert_eq!(serving.get("queue_shed_total").unwrap()
+                       .as_f64().unwrap(),
+                   shed);
+        accepted_sum += accepted as u64;
+        shed_sum += shed as u64;
+    }
+    assert_eq!(accepted_sum, total_ok);
+    assert_eq!(shed_sum, total_shed);
+
+    // Legacy paths are aliases: byte-identical payloads, plus the
+    // deprecation headers only the legacy spelling carries. Legacy goes
+    // FIRST: its own deprecation hit is counted before rendering, so
+    // the /v1 follow-up sees the same counter values.
+    for (legacy, v1) in [("/stats", "/v1/stats"),
+                         ("/metrics", "/v1/metrics"),
+                         ("/healthz", "/v1/healthz")] {
+        let old = scraper.request("GET", legacy, None).unwrap();
+        let new = scraper.request("GET", v1, None).unwrap();
+        assert_eq!(old.code, 200);
+        assert_eq!(new.code, 200);
+        assert_eq!(old.body, new.body,
+                   "{legacy} and {v1} must serve identical payloads");
+        assert_eq!(old.header("deprecation"), Some("true"),
+                   "{legacy} must be marked deprecated");
+        assert_eq!(old.header("link"),
+                   Some(format!("<{v1}>; rel=\"successor-version\"")
+                            .as_str()),
+                   "{legacy} must link its successor");
+        assert_eq!(new.header("deprecation"), None,
+                   "{v1} must not be marked deprecated");
+    }
+}

@@ -105,7 +105,7 @@ fn overload_sheds_load_with_429_and_never_hangs_or_drops() {
                 for i in 0..PER_CLIENT {
                     let body = forecast_body(&format!("load-{c}-{i}"));
                     let reply = client
-                        .request("POST", "/forecast", Some(&body))
+                        .request("POST", "/v1/forecast", Some(&body))
                         .expect("request hung or connection died");
                     match reply.code {
                         200 => {
@@ -177,26 +177,26 @@ fn keep_alive_serves_sequential_and_pipelined_requests() {
     // Many sequential requests on ONE connection, mixed routes.
     let mut client = HttpClient::connect(&addr).unwrap();
     for i in 0..4 {
-        let reply = client.request("GET", "/healthz", None).unwrap();
+        let reply = client.request("GET", "/v1/healthz", None).unwrap();
         assert_eq!(reply.code, 200, "request {i} on the shared connection");
         assert_eq!(reply.header("connection"), Some("keep-alive"));
         let body = forecast_body(&format!("ka-{i}"));
         let reply =
-            client.request("POST", "/forecast", Some(&body)).unwrap();
+            client.request("POST", "/v1/forecast", Some(&body)).unwrap();
         assert_eq!(reply.code, 200, "{}", reply.body);
     }
     // Errors must not poison the connection: a 404 keeps it alive.
     let reply = client.request("GET", "/nope", None).unwrap();
     assert_eq!(reply.code, 404);
-    let reply = client.request("GET", "/healthz", None).unwrap();
+    let reply = client.request("GET", "/v1/healthz", None).unwrap();
     assert_eq!(reply.code, 200, "connection unusable after a 404");
 
     // Pipelined: two requests written back-to-back before reading —
     // both must come back, in order, on the same connection.
     let mut stream = TcpStream::connect(&addr).unwrap();
     stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-    let two = "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n\
-               GET /stats HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n";
+    let two = "GET /v1/healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n\
+               GET /v1/stats HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n";
     stream.write_all(two.as_bytes()).unwrap();
     let mut buf = Vec::new();
     let (code, body) = read_one_response(&mut stream, &mut buf);
@@ -205,11 +205,12 @@ fn keep_alive_serves_sequential_and_pipelined_requests() {
                    .as_str().unwrap(), "ok");
     let (code, body) = read_one_response(&mut stream, &mut buf);
     assert_eq!(code, 200);
-    assert!(Json::parse(&body).unwrap().get(FREQ.name()).is_ok(),
-            "second pipelined response should be /stats");
+    assert!(Json::parse(&body).unwrap().get("serving").unwrap()
+                .get(FREQ.name()).is_ok(),
+            "second pipelined response should be /v1/stats");
 
     // Connection: close honored — response says close, then EOF.
-    let req = "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+    let req = "GET /v1/healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
                Connection: close\r\n\r\n";
     stream.write_all(req.as_bytes()).unwrap();
     let head = read_headers_raw(&mut stream, &mut buf);
@@ -235,7 +236,7 @@ fn rotation_caps_requests_per_connection_and_clients_reconnect() {
     // rotation cap — `Connection: close` then EOF, freeing the worker.
     let mut stream = TcpStream::connect(&addr).unwrap();
     stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-    let req = "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n";
+    let req = "GET /v1/healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n";
     stream.write_all(req.as_bytes()).unwrap();
     let mut buf = Vec::new();
     let head = read_headers_raw(&mut stream, &mut buf);
@@ -254,7 +255,7 @@ fn rotation_caps_requests_per_connection_and_clients_reconnect() {
     // HttpClient rides through rotations transparently.
     let mut client = HttpClient::connect(&addr).unwrap();
     for i in 0..7 {
-        let reply = client.request("GET", "/healthz", None).unwrap();
+        let reply = client.request("GET", "/v1/healthz", None).unwrap();
         assert_eq!(reply.code, 200, "request {i} across rotations");
     }
 }
@@ -274,7 +275,7 @@ fn oversized_requests_rejected_413_431_not_buffered() {
     // An actual body over the cap → 413.
     let big = "x".repeat(600);
     let (code, body) =
-        http::http_request(&addr, "POST", "/forecast", Some(&big)).unwrap();
+        http::http_request(&addr, "POST", "/v1/forecast", Some(&big)).unwrap();
     assert_eq!(code, 413, "{body}");
 
     // A hostile declared Content-Length with no body at all: refused
@@ -282,7 +283,7 @@ fn oversized_requests_rejected_413_431_not_buffered() {
     let mut stream = TcpStream::connect(&addr).unwrap();
     stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
     stream
-        .write_all(b"POST /forecast HTTP/1.1\r\nHost: t\r\n\
+        .write_all(b"POST /v1/forecast HTTP/1.1\r\nHost: t\r\n\
                      Content-Length: 999999999999\r\n\r\n")
         .unwrap();
     let mut buf = Vec::new();
@@ -295,7 +296,7 @@ fn oversized_requests_rejected_413_431_not_buffered() {
     let junk = "j".repeat(2000);
     stream
         .write_all(
-            format!("GET /healthz HTTP/1.1\r\nHost: t\r\nX-Junk: {junk}\r\n\
+            format!("GET /v1/healthz HTTP/1.1\r\nHost: t\r\nX-Junk: {junk}\r\n\
                      \r\n")
                 .as_bytes())
         .unwrap();
@@ -307,7 +308,7 @@ fn oversized_requests_rejected_413_431_not_buffered() {
     let mut stream = TcpStream::connect(&addr).unwrap();
     stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
     stream
-        .write_all(b"POST /forecast HTTP/1.1\r\nHost: t\r\n\
+        .write_all(b"POST /v1/forecast HTTP/1.1\r\nHost: t\r\n\
                      Content-Length: nope\r\n\r\n")
         .unwrap();
     let mut buf = Vec::new();
@@ -336,7 +337,7 @@ fn sharded_stack_routes_by_hash_and_aggregates_stats() {
 
     // /healthz reports the ring.
     let (code, body) =
-        http::http_request(&addr, "GET", "/healthz", None).unwrap();
+        http::http_request(&addr, "GET", "/v1/healthz", None).unwrap();
     assert_eq!(code, 200);
     let doc = Json::parse(&body).unwrap();
     let shards: Vec<String> = doc.get("shards").unwrap().as_arr().unwrap()
@@ -366,7 +367,7 @@ fn sharded_stack_routes_by_hash_and_aggregates_stats() {
     let mut client = HttpClient::connect(&addr).unwrap();
     for id in &ids {
         let reply = client
-            .request("POST", "/forecast", Some(&forecast_body(id)))
+            .request("POST", "/v1/forecast", Some(&forecast_body(id)))
             .unwrap();
         assert_eq!(reply.code, 200, "{}", reply.body);
     }
@@ -384,14 +385,27 @@ fn sharded_stack_routes_by_hash_and_aggregates_stats() {
     assert_eq!(beta, expect_beta);
     assert_eq!(agg.workers, 2, "worker counts sum across shards");
 
-    // /stats exposes the same aggregation over the wire.
-    let reply = client.request("GET", "/stats", None).unwrap();
+    // /v1/stats exposes the same aggregation over the wire: the
+    // "serving" section is the fleet total, and the "shards" array
+    // breaks it down per shard label.
+    let reply = client.request("GET", "/v1/stats", None).unwrap();
     assert_eq!(reply.code, 200);
     let doc = Json::parse(&reply.body).unwrap();
-    assert_eq!(doc.get(FREQ.name()).unwrap().get("requests").unwrap()
-                   .as_usize().unwrap(), N);
-    assert_eq!(doc.get("shards").unwrap().get("alpha").unwrap()
-                   .get(FREQ.name()).unwrap().get("requests").unwrap()
+    assert_eq!(doc.get("schema_version").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(doc.get("serving").unwrap().get(FREQ.name()).unwrap()
+                   .get("queue_accepted_total").unwrap()
+                   .as_usize().unwrap(),
+               N);
+    let shard_rows = doc.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shard_rows.len(), 2);
+    let alpha_row = shard_rows
+        .iter()
+        .find(|row| {
+            row.get("shard").unwrap().as_str().unwrap() == "alpha"
+        })
+        .expect("alpha shard missing from /v1/stats shards");
+    assert_eq!(alpha_row.get("serving").unwrap().get(FREQ.name()).unwrap()
+                   .get("queue_accepted_total").unwrap()
                    .as_usize().unwrap() as u64,
                expect_alpha);
 
@@ -405,7 +419,7 @@ fn sharded_stack_routes_by_hash_and_aggregates_stats() {
     for id in ids.iter().take(10) {
         assert_eq!(sharded.shard_for(id).unwrap(), "beta");
         let reply = client
-            .request("POST", "/forecast", Some(&forecast_body(id)))
+            .request("POST", "/v1/forecast", Some(&forecast_body(id)))
             .unwrap();
         assert_eq!(reply.code, 200,
                    "traffic must keep flowing after a shard drain: {}",

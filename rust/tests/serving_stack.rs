@@ -218,7 +218,7 @@ fn http_front_end_serves_forecasts_stats_health_and_reload() {
     let server = HttpServer::start(stack.clone(), "127.0.0.1:0").unwrap();
     let addr = server.addr().to_string();
 
-    // POST /forecast — `freq` may be omitted with a single pool.
+    // POST /v1/forecast — `freq` may be omitted with a single pool.
     let body = Json::obj(vec![
         ("id", Json::str("probe")),
         ("category", Json::str("Other")),
@@ -226,7 +226,8 @@ fn http_front_end_serves_forecasts_stats_health_and_reload() {
     ])
     .to_string();
     let (code, reply) =
-        http::http_request(&addr, "POST", "/forecast", Some(&body)).unwrap();
+        http::http_request(&addr, "POST", "/v1/forecast", Some(&body))
+            .unwrap();
     assert_eq!(code, 200, "{reply}");
     let doc = Json::parse(&reply).unwrap();
     assert_eq!(doc.get("id").unwrap().as_str().unwrap(), "probe");
@@ -237,22 +238,23 @@ fn http_front_end_serves_forecasts_stats_health_and_reload() {
     assert!(max_rel_diff(&fc, &expect_a) < 1e-4,
             "HTTP forecast disagrees with the in-process service");
 
-    // GET /healthz
+    // GET /v1/healthz
     let (code, reply) =
-        http::http_request(&addr, "GET", "/healthz", None).unwrap();
+        http::http_request(&addr, "GET", "/v1/healthz", None).unwrap();
     assert_eq!(code, 200);
     let doc = Json::parse(&reply).unwrap();
     assert_eq!(doc.get("status").unwrap().as_str().unwrap(), "ok");
     assert_eq!(doc.get("generations").unwrap().get("quarterly").unwrap()
                    .as_usize().unwrap(), 1);
 
-    // POST /reload — hot-swap to B from the binary checkpoint.
+    // POST /v1/reload — hot-swap to B from the binary checkpoint.
     let body = Json::obj(vec![
         ("checkpoint", Json::str(ckpt_b.display().to_string())),
     ])
     .to_string();
     let (code, reply) =
-        http::http_request(&addr, "POST", "/reload", Some(&body)).unwrap();
+        http::http_request(&addr, "POST", "/v1/reload", Some(&body))
+            .unwrap();
     assert_eq!(code, 200, "{reply}");
     let doc = Json::parse(&reply).unwrap();
     assert_eq!(doc.get("generation").unwrap().as_usize().unwrap(), 2);
@@ -263,7 +265,8 @@ fn http_front_end_serves_forecasts_stats_health_and_reload() {
     ])
     .to_string();
     let (code, reply) =
-        http::http_request(&addr, "POST", "/forecast", Some(&body)).unwrap();
+        http::http_request(&addr, "POST", "/v1/forecast", Some(&body))
+            .unwrap();
     assert_eq!(code, 200, "{reply}");
     let doc = Json::parse(&reply).unwrap();
     assert_eq!(doc.get("generation").unwrap().as_usize().unwrap(), 2);
@@ -271,31 +274,39 @@ fn http_front_end_serves_forecasts_stats_health_and_reload() {
     assert!(max_rel_diff(&fc, &expect_b) < 1e-4,
             "post-reload forecast is not generation 2's");
 
-    // GET /stats
+    // GET /v1/stats — schema version 1, metric-named fields.
     let (code, reply) =
-        http::http_request(&addr, "GET", "/stats", None).unwrap();
+        http::http_request(&addr, "GET", "/v1/stats", None).unwrap();
     assert_eq!(code, 200);
     let doc = Json::parse(&reply).unwrap();
-    let q = doc.get("quarterly").unwrap();
-    assert!(q.get("requests").unwrap().as_usize().unwrap() >= 2);
-    assert_eq!(q.get("reloads").unwrap().as_usize().unwrap(), 1);
-    assert!(q.get("total").unwrap().get("p95_ms").unwrap().as_f64().unwrap()
-            >= 0.0);
+    assert_eq!(doc.get("schema_version").unwrap().as_usize().unwrap(), 1);
+    let q = doc.get("serving").unwrap().get("quarterly").unwrap();
+    assert!(q.get("queue_accepted_total").unwrap().as_usize().unwrap() >= 2);
+    assert_eq!(q.get("reloads_total").unwrap().as_usize().unwrap(), 1);
+    assert!(q.get("request_total_seconds").unwrap().get("p95").unwrap()
+                .as_f64().unwrap() >= 0.0);
+    assert!(doc.get("http").unwrap().get("http_connections_total").unwrap()
+                .as_usize().unwrap() >= 1);
+    assert_eq!(doc.get("shards").unwrap().as_arr().unwrap().len(), 1);
 
     // Error paths: bad JSON, short history, wrong-frequency checkpoint,
-    // unknown route, wrong method.
+    // unknown route, wrong method — all carrying the error envelope.
     let (code, reply) =
-        http::http_request(&addr, "POST", "/forecast", Some("{not json"))
+        http::http_request(&addr, "POST", "/v1/forecast", Some("{not json"))
             .unwrap();
     assert_eq!(code, 400);
-    assert!(Json::parse(&reply).unwrap().get("error").is_ok());
+    let err = Json::parse(&reply).unwrap();
+    assert_eq!(err.get("error").unwrap().get("code").unwrap()
+                   .as_str().unwrap(),
+               "bad_request");
 
     let body = Json::obj(vec![
         ("values", Json::arr_f32(&[1.0, 2.0, 3.0])),
     ])
     .to_string();
     let (code, _) =
-        http::http_request(&addr, "POST", "/forecast", Some(&body)).unwrap();
+        http::http_request(&addr, "POST", "/v1/forecast", Some(&body))
+            .unwrap();
     assert_eq!(code, 400, "short history must be rejected");
 
     let body = Json::obj(vec![
@@ -303,17 +314,25 @@ fn http_front_end_serves_forecasts_stats_health_and_reload() {
     ])
     .to_string();
     let (code, reply) =
-        http::http_request(&addr, "POST", "/reload", Some(&body)).unwrap();
+        http::http_request(&addr, "POST", "/v1/reload", Some(&body))
+            .unwrap();
     assert_eq!(code, 400, "wrong-frequency checkpoint must be refused");
     assert!(reply.contains("monthly"), "{reply}");
     // The refused reload left the generation untouched.
     assert_eq!(stack.generation(FREQ).unwrap(), 2);
 
-    let (code, _) = http::http_request(&addr, "GET", "/nope", None).unwrap();
+    let (code, reply) =
+        http::http_request(&addr, "GET", "/nope", None).unwrap();
     assert_eq!(code, 404);
-    let (code, _) =
-        http::http_request(&addr, "DELETE", "/forecast", None).unwrap();
+    assert_eq!(Json::parse(&reply).unwrap().get("error").unwrap()
+                   .get("code").unwrap().as_str().unwrap(),
+               "not_found");
+    let (code, reply) =
+        http::http_request(&addr, "DELETE", "/v1/forecast", None).unwrap();
     assert_eq!(code, 405);
+    assert_eq!(Json::parse(&reply).unwrap().get("error").unwrap()
+                   .get("code").unwrap().as_str().unwrap(),
+               "method_not_allowed");
 }
 
 /// Any store works for serving checkpoints: `load_model_state` reads

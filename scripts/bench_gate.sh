@@ -2,9 +2,9 @@
 # CI perf gate: run the quick benches, record the speedup trajectories,
 # and fail on regression.
 #
-#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json]
+#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json] [bench8_out.json]
 #
-# Four gates, all measured as same-machine ratios (stable across runner
+# Five gates, all measured as same-machine ratios (stable across runner
 # hardware generations in a way absolute numbers are not):
 #
 # * BENCH_3 — `micro_hotpath` (and `table5_speedup`) in quick mode:
@@ -23,6 +23,10 @@
 #   spawns/step from the counting allocator; fails when the pooled
 #   speedup drops more than 10% below benches/bench6_baseline.json or
 #   when any frequency's steady-state step allocates or spawns at all.
+# * BENCH_8 — `http_throughput` scrape-overhead section: forecast p95
+#   with a 10 Hz `GET /v1/metrics` scraper running vs without; fails
+#   when the p95 overhead ratio exceeds the cap in
+#   benches/bench8_baseline.json (a scrape must never stall serving).
 #
 # Every cargo invocation is --locked: the committed Cargo.lock is the
 # only dependency resolution CI may use.
@@ -32,17 +36,20 @@ out="${1:-BENCH_3.json}"
 out4="${2:-BENCH_4.json}"
 out5="${3:-BENCH_5.json}"
 out6="${4:-BENCH_6.json}"
+out8="${5:-BENCH_8.json}"
 baseline="benches/bench3_baseline.json"
 baseline4="benches/bench4_baseline.json"
 baseline5="benches/bench5_baseline.json"
 baseline6="benches/bench6_baseline.json"
+baseline8="benches/bench8_baseline.json"
 
 export FAST_ESRNN_QUICK=1
 FAST_ESRNN_BENCH_JSON="$out" FAST_ESRNN_BENCH6_JSON="$out6" \
     cargo bench --locked --bench micro_hotpath
 cargo bench --locked --bench table5_speedup
 FAST_ESRNN_BENCH_JSON="$out4" cargo bench --locked --bench serving_throughput
-FAST_ESRNN_BENCH_JSON="$out5" cargo bench --locked --bench http_throughput
+FAST_ESRNN_BENCH_JSON="$out5" FAST_ESRNN_BENCH8_JSON="$out8" \
+    cargo bench --locked --bench http_throughput
 
 python3 - "$out" "$baseline" <<'EOF'
 import json, sys
@@ -116,7 +123,7 @@ wire, fc = result["wire"], result["forecast"]
 got = wire["keepalive_speedup"]
 want = baseline["min_keepalive_speedup"]
 floor = want * 0.9
-print(f"HTTP keep-alive speedup (wire, GET /healthz): {got:.2f}x "
+print(f"HTTP keep-alive speedup (wire, GET /v1/healthz): {got:.2f}x "
       f"({wire['per_conn_rps']:.0f} -> {wire['keepalive_rps']:.0f} req/s); "
       f"baseline {want:.2f}x, gate floor {floor:.2f}x")
 print(f"  forecast endpoint: {fc['keepalive_speedup']:.2f}x "
@@ -183,4 +190,28 @@ if got < floor:
 if failed:
     sys.exit(1)
 print("steady-state gate OK")
+EOF
+
+python3 - "$out8" "$baseline8" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+base, scraped = result["baseline"], result["scraped"]
+ratio = result["p95_overhead_ratio"]
+cap = baseline["max_p95_overhead_ratio"]
+print(f"metrics scrape overhead: forecast p95 {base['p95_ms']:.2f} ms "
+      f"alone vs {scraped['p95_ms']:.2f} ms with a 10 Hz /v1/metrics "
+      f"scraper ({int(scraped['scrapes'])} scrapes); "
+      f"ratio {ratio:.2f}, cap {cap:.2f}")
+print(f"  throughput: {base['rps']:.0f} -> {scraped['rps']:.0f} req/s")
+if ratio > cap:
+    print(f"FAIL: scraping inflates forecast p95 {ratio:.2f}x "
+          f"(cap {cap:.2f}x) — the registry render is blocking serving")
+    sys.exit(1)
+print("observability gate OK")
 EOF
