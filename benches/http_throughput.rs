@@ -19,28 +19,48 @@
 //! scraper running, reporting the p95 overhead ratio. Observability
 //! must be cheap enough to leave on.
 //!
+//! A fourth section measures **BENCH_9 — hedged reads vs a slow
+//! replica**: a 3-shard ring where one shard serves every forecast
+//! 50 ms late (an injected [`ShardClient`] wrapper — the distributed
+//! layer cannot tell it from a remote with a sick disk). Unhedged
+//! (R = 1), every key owned by the slow shard pays the full delay and
+//! p99 *is* the delay; hedged (R = 2, timer at the rolling p95), the
+//! same traffic escapes to the key's healthy replica and p99 collapses
+//! to the hedge delay. The gate requires hedging to beat unhedged p99
+//! by the committed factor.
+//!
 //! Feeds the CI perf gate (`scripts/bench_gate.sh`): emitted as
 //! BENCH_5.json when `FAST_ESRNN_BENCH_JSON=<path>` is set (and
-//! BENCH_8.json via `FAST_ESRNN_BENCH8_JSON=<path>`); the gate fails
-//! when the keep-alive speedup drops below the committed floor
-//! (`benches/bench5_baseline.json`), sharding blows up tail latency, or
-//! scraping costs more than `benches/bench8_baseline.json` allows.
+//! BENCH_8.json via `FAST_ESRNN_BENCH8_JSON=<path>`, BENCH_9.json via
+//! `FAST_ESRNN_BENCH9_JSON=<path>`); the gate fails when the keep-alive
+//! speedup drops below the committed floor
+//! (`benches/bench5_baseline.json`), sharding blows up tail latency,
+//! scraping costs more than `benches/bench8_baseline.json` allows, or
+//! hedging stops rescuing the tail
+//! (`benches/bench9_baseline.json`).
 //!
 //! Env:
 //!   FAST_ESRNN_QUICK=1        — CI mode: fewer requests
 //!   FAST_ESRNN_BENCH_JSON=p   — write the BENCH_5 summary JSON to p
 //!   FAST_ESRNN_BENCH8_JSON=p  — write the BENCH_8 summary JSON to p
+//!   FAST_ESRNN_BENCH9_JSON=p  — write the BENCH_9 summary JSON to p
 //!
 //! Run with: `cargo bench --bench http_throughput`
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use fast_esrnn::config::Frequency;
+use fast_esrnn::config::{Category, Frequency};
 use fast_esrnn::coordinator::ModelState;
-use fast_esrnn::forecast::{http, HttpClient, HttpOptions, HttpServer,
-                           ServiceOptions, ServingStack, ShardedStack};
+use fast_esrnn::forecast::{http, ForecastRequest, ForecastResponse,
+                           HttpClient, HttpOptions, HttpServer,
+                           ResponseReceiver, ServiceOptions, ServiceStats,
+                           ServingStack, ShardClient, ShardHealth,
+                           ShardedStack};
 use fast_esrnn::runtime::NativeBackend;
+use fast_esrnn::telemetry::registry::Registry;
 use fast_esrnn::util::json::Json;
 
 const FREQ: Frequency = Frequency::Quarterly;
@@ -89,6 +109,125 @@ fn start_server(shards: usize, workers: usize)
         },
     )?;
     Ok((server, sharded))
+}
+
+/// A [`ShardClient`] that serves correctly but late: every forecast
+/// pays an injected delay before the real in-process stack answers.
+/// The ring cannot tell it from a remote replica with a sick disk —
+/// which is exactly the failure mode hedged reads exist for.
+struct DelayedClient {
+    inner: Arc<ServingStack>,
+    delay: Duration,
+}
+
+impl ShardClient for DelayedClient {
+    fn forecast(&self, freq: Frequency, req: ForecastRequest)
+                -> anyhow::Result<ForecastResponse> {
+        std::thread::sleep(self.delay);
+        self.inner.forecast(freq, req)
+    }
+
+    fn submit(&self, freq: Frequency, req: ForecastRequest)
+              -> anyhow::Result<ResponseReceiver> {
+        self.inner.submit(freq, req)
+    }
+
+    fn stats_snapshot(&self)
+                      -> anyhow::Result<BTreeMap<Frequency, ServiceStats>> {
+        Ok(self.inner.stats_all())
+    }
+
+    fn reload(&self, freq: Frequency, state: ModelState)
+              -> anyhow::Result<u64> {
+        self.inner.reload(freq, state)
+    }
+
+    fn reload_checkpoint(&self, freq: Frequency, path: &Path)
+                         -> anyhow::Result<u64> {
+        self.inner.reload_checkpoint(freq, path)
+    }
+
+    fn generation(&self, freq: Frequency) -> anyhow::Result<u64> {
+        self.inner.generation(freq)
+    }
+
+    fn frequencies(&self) -> Vec<Frequency> {
+        self.inner.frequencies()
+    }
+
+    fn required_length(&self, freq: Frequency) -> anyhow::Result<usize> {
+        self.inner.required_length(freq)
+    }
+
+    fn healthz(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn health(&self) -> ShardHealth {
+        ShardHealth {
+            kind: "local",
+            addr: None,
+            healthy: true,
+            probe_failures: 0,
+            ejections: 0,
+        }
+    }
+
+    fn bind_metrics(&self, reg: &Registry, shard: &str) {
+        self.inner.bind_metrics(reg, shard);
+    }
+}
+
+/// BENCH_9 topology: two healthy in-process shards plus one shard that
+/// answers every forecast `delay` late.
+fn start_slow_replica_ring(delay: Duration)
+                           -> anyhow::Result<Arc<ShardedStack>> {
+    let opts = ServiceOptions {
+        workers: 1,
+        batch_window: Duration::from_millis(1),
+        max_batch: 8,
+        queue_limit: 0,
+    };
+    let sharded = ShardedStack::new();
+    for s in 0..2 {
+        let mut stack = ServingStack::new();
+        stack.start_pool_native(FREQ, fresh_state(), opts.clone())?;
+        sharded.add_shard(&format!("fast-{s}"), stack)?;
+    }
+    let mut slow = ServingStack::new();
+    slow.start_pool_native(FREQ, fresh_state(), opts)?;
+    sharded.add_shard_client(
+        "slow",
+        Arc::new(DelayedClient { inner: Arc::new(slow), delay }))?;
+    Ok(Arc::new(sharded))
+}
+
+fn bench9_request(id: &str) -> ForecastRequest {
+    let values: Vec<f32> = (0..80)
+        .map(|i| 100.0 + i as f32 * 0.5 + (i % 4) as f32 * 3.0)
+        .collect();
+    ForecastRequest {
+        id: id.to_string(),
+        values,
+        category: Category::Other,
+    }
+}
+
+/// Sequential in-process load over distinct ids; returns
+/// (rps, p50, p95, p99) in seconds.
+fn run_ring_load(sharded: &ShardedStack, n: usize)
+                 -> anyhow::Result<(f64, f64, f64, f64)> {
+    let t0 = Instant::now();
+    let mut lat = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = Instant::now();
+        sharded.forecast(FREQ, bench9_request(&format!("b9-{i}")))?;
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let q = |p: usize| lat[(lat.len() * p / 100).min(lat.len() - 1)];
+    Ok((n as f64 / secs, q(50), q(95), q(99)))
 }
 
 /// `CLIENTS` threads × `per` requests; returns (req/s, p95 secs).
@@ -271,6 +410,84 @@ fn main() -> anyhow::Result<()> {
                 ("scrapes", Json::num(scrapes as f64)),
             ])),
             ("p95_overhead_ratio", Json::num(scrape_overhead)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+
+    // ---- BENCH_9: hedged vs unhedged p99 with one 50 ms-slow replica.
+    let b9_n = if quick { 300 } else { 1000 };
+    let delay = Duration::from_millis(50);
+    println!("== hedged reads: 3-shard ring, one replica +{}ms, \
+              {b9_n} sequential requests ==",
+             delay.as_millis());
+
+    // Unhedged (R = 1): keys owned by the slow shard pay the full
+    // delay, and at ~1/3 ownership the delay IS the p99.
+    let ring = start_slow_replica_ring(delay)?;
+    ring.set_replicas(1);
+    let (un_rps, un_p50, un_p95, un_p99) = run_ring_load(&ring, b9_n)?;
+    drop(ring);
+
+    // Hedged (R = 2) on a fresh ring (fresh hedge clock — the unhedged
+    // phase must not teach the timer that 50 ms is normal). Warm the
+    // clock with healthy-primary traffic first so the rolling p95
+    // reflects the healthy fleet, exactly as it would in production
+    // where slow replicas are the exception.
+    let ring = start_slow_replica_ring(delay)?;
+    ring.set_replicas(2);
+    let mut warmed = 0usize;
+    let mut probe = 0usize;
+    while warmed < 64 {
+        let id = format!("warm-{probe}");
+        probe += 1;
+        if ring.shard_for(&id)? != "slow" {
+            ring.forecast(FREQ, bench9_request(&id))?;
+            warmed += 1;
+        }
+    }
+    let (he_rps, he_p50, he_p95, he_p99) = run_ring_load(&ring, b9_n)?;
+    let hedges = ring.hedges();
+    let hedge_wins = ring.hedge_wins();
+    drop(ring);
+
+    let hedge_speedup = un_p99 / he_p99.max(1e-9);
+    println!("{:<22} {:>10.0} req/s   p50 {:>7.2}ms p95 {:>7.2}ms \
+              p99 {:>7.2}ms",
+             "unhedged (R=1)", un_rps, un_p50 * 1e3, un_p95 * 1e3,
+             un_p99 * 1e3);
+    println!("{:<22} {:>10.0} req/s   p50 {:>7.2}ms p95 {:>7.2}ms \
+              p99 {:>7.2}ms   ({hedges} hedges, {hedge_wins} wins)",
+             "hedged (R=2)", he_rps, he_p50 * 1e3, he_p95 * 1e3,
+             he_p99 * 1e3);
+    println!("hedged p99 speedup: {hedge_speedup:.2}x\n");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH9_JSON") {
+        let row = |rps: f64, p50: f64, p95: f64, p99: f64| {
+            Json::obj(vec![
+                ("rps", Json::num(rps)),
+                ("p50_ms", Json::num(p50 * 1e3)),
+                ("p95_ms", Json::num(p95 * 1e3)),
+                ("p99_ms", Json::num(p99 * 1e3)),
+            ])
+        };
+        let hedged = match row(he_rps, he_p50, he_p95, he_p99) {
+            Json::Obj(mut m) => {
+                m.insert("hedges".into(), Json::num(hedges as f64));
+                m.insert("hedge_wins".into(), Json::num(hedge_wins as f64));
+                Json::Obj(m)
+            }
+            other => other,
+        };
+        let doc = Json::obj(vec![
+            ("bench", Json::str("hedged_reads")),
+            ("quick", Json::Bool(quick)),
+            ("threads", Json::num(threads as f64)),
+            ("n_requests", Json::num(b9_n as f64)),
+            ("delay_ms", Json::num(delay.as_millis() as f64)),
+            ("unhedged", row(un_rps, un_p50, un_p95, un_p99)),
+            ("hedged", hedged),
+            ("hedge_p99_speedup", Json::num(hedge_speedup)),
         ]);
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("wrote {path}");

@@ -65,7 +65,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -1132,11 +1132,40 @@ fn handle_stats(sh: &ServerShared) -> Json {
              ("stale_in_backlog", Json::num(m.sheds_stale.get() as f64)),
          ])),
     ]);
+    // Distributed-serving view: replication factor, hedge counters,
+    // and per-shard health (local shards are trivially healthy; remote
+    // ones carry their prober's verdict).
+    let shard_health = Json::Obj(
+        sh.stack
+            .shard_health()
+            .into_iter()
+            .map(|(label, h)| {
+                let mut fields = vec![
+                    ("kind", Json::str(h.kind)),
+                    ("healthy", Json::Bool(h.healthy)),
+                    ("probe_failures_total",
+                     Json::num(h.probe_failures as f64)),
+                    ("ejections_total", Json::num(h.ejections as f64)),
+                ];
+                if let Some(addr) = &h.addr {
+                    fields.push(("addr", Json::str(addr.as_str())));
+                }
+                (label, Json::obj(fields))
+            })
+            .collect(),
+    );
+    let remote = Json::obj(vec![
+        ("replicas", Json::num(sh.stack.replicas() as f64)),
+        ("hedges_total", Json::num(sh.stack.hedges() as f64)),
+        ("hedge_wins_total", Json::num(sh.stack.hedge_wins() as f64)),
+        ("shards", shard_health),
+    ]);
     Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("serving", serving),
         ("http", http),
         ("backend", backend),
+        ("remote", remote),
         ("shards", shards),
     ])
 }
@@ -1160,6 +1189,20 @@ fn handle_healthz(stack: &ShardedStack) -> Json {
                  .map(|f| {
                      (f.name().to_string(),
                       Json::num(stack.generation(*f).unwrap_or(0) as f64))
+                 })
+                 .collect(),
+         )),
+        // Input-window lengths per frequency, so a RemoteShard joining
+        // this server can validate request lengths client-side without
+        // a round-trip per forecast.
+        ("required_lengths",
+         Json::Obj(
+             freqs
+                 .iter()
+                 .filter_map(|f| {
+                     stack.required_length(*f).ok().map(|n| {
+                         (f.name().to_string(), Json::num(n as f64))
+                     })
                  })
                  .collect(),
          )),
@@ -1260,6 +1303,26 @@ impl HttpReply {
     }
 }
 
+/// Deadlines for [`HttpClient`] connections. A dead peer must cost a
+/// bounded timeout, never a hang: `connect_timeout` caps the TCP dial
+/// (the default `TcpStream::connect` can block for minutes on a
+/// blackholed address) and `read_timeout` caps each socket read while
+/// waiting for a reply.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientOptions {
+    pub connect_timeout: Duration,
+    pub read_timeout: Duration,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
 /// Minimal blocking keep-alive HTTP/1.1 client: one persistent
 /// connection serving many sequential requests — the cheap path the
 /// serving benches measure against connection-per-request
@@ -1269,30 +1332,75 @@ pub struct HttpClient {
     stream: TcpStream,
     buf: Vec<u8>,
     addr: String,
+    opts: ClientOptions,
     /// The server advertised `Connection: close` on the last reply;
     /// reconnect lazily before the next request (eager reconnection
     /// could fail — e.g. server shutting down — and would throw away a
     /// reply that was already successfully received).
     dead: bool,
+    /// A request is in flight or died mid-flight. Set on entry to
+    /// [`request`](Self::request), cleared only when a reply was fully
+    /// parsed — so after a timeout or mid-response error the connection
+    /// admits its read buffer may hold a partial reply. A poisoned
+    /// client must not be returned to a [`ClientPool`]: the next
+    /// request would misparse the leftover bytes as its own reply.
+    poisoned: bool,
 }
 
 impl HttpClient {
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = Self::open(addr)?;
+        Self::connect_with(addr, ClientOptions::default())
+    }
+
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<Self> {
+        let stream = Self::open(addr, &opts)?;
         Ok(Self {
             stream,
             buf: Vec::with_capacity(4096),
             addr: addr.into(),
+            opts,
             dead: false,
+            poisoned: false,
         })
     }
 
-    fn open(addr: &str) -> Result<TcpStream> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting {addr}"))?;
+    fn open(addr: &str, opts: &ClientOptions) -> Result<TcpStream> {
+        // `TcpStream::connect(&str)` has no timeout variant, so resolve
+        // first and dial each candidate address under the deadline.
+        let resolved = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?;
+        let mut last_err: Option<std::io::Error> = None;
+        let mut stream = None;
+        for sock in resolved {
+            match TcpStream::connect_timeout(&sock, opts.connect_timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => {
+                let cause = last_err
+                    .map(|e| e.to_string())
+                    .unwrap_or_else(|| "no addresses resolved".into());
+                bail!("connecting {addr}: {cause}");
+            }
+        };
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_read_timeout(Some(opts.read_timeout))?;
         Ok(stream)
+    }
+
+    /// `false` once a request failed mid-flight: the read buffer may
+    /// hold a partial reply, so the connection must be discarded rather
+    /// than reused. (`dead` is not unhealthy — an advertised
+    /// `Connection: close` reconnects lazily and cleanly.)
+    pub fn healthy(&self) -> bool {
+        !self.poisoned
     }
 
     /// Send one request on the persistent connection and read its
@@ -1314,6 +1422,7 @@ impl HttpClient {
         if self.dead {
             self.reconnect()?;
         }
+        self.poisoned = true;
         let reply = match self.try_request(&req) {
             Ok(reply) => reply,
             // Only the provably-unprocessed failure is retried: a
@@ -1325,6 +1434,7 @@ impl HttpClient {
             }
             Err(e) => return Err(e),
         };
+        self.poisoned = false;
         // An advertised close (worker rotation, shutdown) marks the
         // connection for lazy reconnection — the reply in hand is still
         // returned even if the server is gone by now.
@@ -1333,7 +1443,7 @@ impl HttpClient {
     }
 
     fn reconnect(&mut self) -> Result<()> {
-        self.stream = Self::open(&self.addr)?;
+        self.stream = Self::open(&self.addr, &self.opts)?;
         self.buf.clear();
         self.dead = false;
         Ok(())
@@ -1419,6 +1529,100 @@ impl HttpClient {
             .to_string();
         self.buf.drain(..needed);
         Ok(HttpReply { code, headers, body })
+    }
+}
+
+/// A small pool of idle keep-alive connections to one address, shared
+/// across threads (hedged reads hit the same remote from concurrent
+/// threads). [`get`](Self::get) pops an idle connection or dials a
+/// fresh one; the [`PooledClient`] guard returns it on drop — but only
+/// if [`HttpClient::healthy`] still holds, so a connection whose
+/// request died mid-response is discarded instead of poisoning the
+/// next caller with its partial read buffer.
+pub struct ClientPool {
+    addr: String,
+    opts: ClientOptions,
+    max_idle: usize,
+    // lint:lock-name(http.client_pool)
+    idle: Mutex<Vec<HttpClient>>,
+}
+
+impl ClientPool {
+    pub fn new(addr: &str, opts: ClientOptions, max_idle: usize) -> Self {
+        Self {
+            addr: addr.into(),
+            opts,
+            max_idle,
+            idle: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Check out a connection: reuse an idle one when available,
+    /// otherwise dial fresh (bounded by `opts.connect_timeout`). The
+    /// pool never blocks waiting for a checkout to come back — a burst
+    /// beyond `max_idle` simply dials extra connections that won't all
+    /// be retained.
+    pub fn get(&self) -> Result<PooledClient<'_>> {
+        let reused = self.idle.lock().unwrap().pop();
+        let client = match reused {
+            Some(c) => c,
+            None => HttpClient::connect_with(&self.addr, self.opts)?,
+        };
+        Ok(PooledClient { pool: self, client: Some(client) })
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    fn put_back(&self, client: HttpClient) {
+        if !client.healthy() {
+            return;
+        }
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < self.max_idle {
+            idle.push(client);
+        }
+    }
+}
+
+/// RAII checkout from a [`ClientPool`]: derefs to [`HttpClient`], and
+/// on drop hands the connection back (or discards it if unhealthy).
+pub struct PooledClient<'a> {
+    pool: &'a ClientPool,
+    client: Option<HttpClient>,
+}
+
+impl std::ops::Deref for PooledClient<'_> {
+    type Target = HttpClient;
+
+    fn deref(&self) -> &HttpClient {
+        match &self.client {
+            Some(c) => c,
+            // Only `drop` takes the client, and it runs last.
+            None => unreachable!("pooled client used after drop"),
+        }
+    }
+}
+
+impl std::ops::DerefMut for PooledClient<'_> {
+    fn deref_mut(&mut self) -> &mut HttpClient {
+        match &mut self.client {
+            Some(c) => c,
+            None => unreachable!("pooled client used after drop"),
+        }
+    }
+}
+
+impl Drop for PooledClient<'_> {
+    fn drop(&mut self) {
+        if let Some(client) = self.client.take() {
+            self.pool.put_back(client);
+        }
     }
 }
 
@@ -1596,5 +1800,143 @@ mod tests {
             b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked", 100)
             .unwrap_err();
         assert_eq!(e.0, 501);
+    }
+
+    /// Raw single-connection server: accepts exactly one connection and
+    /// answers `replies` keep-alive requests on it with `200 ok`, then
+    /// holds the socket open. Because it never accepts a second
+    /// connection, any request that succeeds after the first *must*
+    /// have reused the pooled connection.
+    fn serve_one_connection(listener: TcpListener, replies: usize)
+                            -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            let mut tmp = [0u8; 1024];
+            for _ in 0..replies {
+                while find_subsequence(&buf, b"\r\n\r\n").is_none() {
+                    let n = s.read(&mut tmp).unwrap();
+                    if n == 0 {
+                        return;
+                    }
+                    buf.extend_from_slice(&tmp[..n]);
+                }
+                let end = find_subsequence(&buf, b"\r\n\r\n").unwrap();
+                buf.drain(..end + 4);
+                s.write_all(
+                    b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                    .unwrap();
+            }
+            // Hold the connection until the client side is done.
+            let _ = s.read(&mut tmp);
+        })
+    }
+
+    #[test]
+    fn connect_timeout_bounds_the_dial_to_a_dead_address() {
+        // 192.0.2.0/24 is TEST-NET-1 (RFC 5737): never routable. The
+        // default TcpStream::connect can block for minutes here; the
+        // configured deadline must cap it (an instant network-unreachable
+        // error also passes — the invariant is the bound, not the path).
+        let opts = ClientOptions {
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(200),
+        };
+        let t0 = Instant::now();
+        let got = HttpClient::connect_with("192.0.2.1:9", opts);
+        assert!(got.is_err(), "TEST-NET dial cannot succeed");
+        assert!(t0.elapsed() < Duration::from_secs(3),
+                "connect_timeout did not bound the dial: {:?}",
+                t0.elapsed());
+    }
+
+    #[test]
+    fn read_timeout_bounds_a_silent_server_and_poisons_the_client() {
+        // The listener completes the TCP handshake (kernel backlog) but
+        // never writes a byte: the request must fail within the read
+        // deadline, and the connection must come back unhealthy — its
+        // socket may still receive a late reply that would corrupt the
+        // next request's framing.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ClientOptions {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_millis(300),
+        };
+        let mut client = HttpClient::connect_with(&addr, opts).unwrap();
+        assert!(client.healthy());
+        let t0 = Instant::now();
+        assert!(client.request("GET", "/v1/healthz", None).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(3),
+                "read_timeout did not bound the wait: {:?}", t0.elapsed());
+        assert!(!client.healthy(),
+                "a timed-out request must poison the connection");
+        drop(listener);
+    }
+
+    #[test]
+    fn pool_returns_clean_connections_and_reuses_them() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = serve_one_connection(listener, 2);
+        let opts = ClientOptions {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(2),
+        };
+        let pool = ClientPool::new(&addr, opts, 4);
+        assert_eq!(pool.idle_count(), 0);
+        {
+            let mut client = pool.get().unwrap();
+            let reply = client.request("GET", "/x", None).unwrap();
+            assert_eq!(reply.code, 200);
+            assert_eq!(reply.body, "ok");
+            assert!(client.healthy());
+            assert_eq!(pool.idle_count(), 0, "still checked out");
+        }
+        assert_eq!(pool.idle_count(), 1,
+                   "a healthy connection returns to the pool on drop");
+        {
+            // The server accepts exactly one connection, so this request
+            // can only succeed over the pooled socket.
+            let mut client = pool.get().unwrap();
+            assert_eq!(pool.idle_count(), 0, "idle connection was reused");
+            let reply = client.request("GET", "/x", None).unwrap();
+            assert_eq!(reply.code, 200);
+        }
+        assert_eq!(pool.idle_count(), 1);
+        drop(pool);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn pool_discards_a_connection_poisoned_mid_response() {
+        // The server advertises a 10-byte body, sends 2 bytes, and
+        // slams the connection: the request errs mid-response, and the
+        // guard's Drop must discard the connection instead of handing
+        // its half-read buffer to the next caller.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut tmp = [0u8; 1024];
+            let _ = s.read(&mut tmp);
+            s.write_all(
+                b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\n\r\nab")
+                .unwrap();
+            // Drop closes the socket mid-body.
+        });
+        let opts = ClientOptions {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(2),
+        };
+        let pool = ClientPool::new(&addr, opts, 4);
+        {
+            let mut client = pool.get().unwrap();
+            assert!(client.request("GET", "/x", None).is_err());
+            assert!(!client.healthy());
+        }
+        assert_eq!(pool.idle_count(), 0,
+                   "a poisoned connection must not re-enter the pool");
+        server.join().unwrap();
     }
 }

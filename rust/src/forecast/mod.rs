@@ -3,7 +3,7 @@
 //! hot-swap, consistent-hash sharding, and a zero-dependency HTTP
 //! front-end.
 //!
-//! Four layers (one file each):
+//! Five layers (one file each):
 //!
 //! * [`pool`] — [`FreqPool`]: N worker threads for one frequency, each
 //!   owning its own backend (backends may be `!Send`), pulling
@@ -17,10 +17,16 @@
 //! * [`router`] — [`ServingStack`]: one pool per trained frequency,
 //!   dispatching requests by frequency and exposing the hot-swap API
 //!   (including checkpoint reloads in either persistence format).
-//! * [`shard`] — [`ShardedStack`]: N `ServingStack` shards behind a
-//!   consistent-hash ring keyed by series id — stable assignment across
-//!   restarts, ≈1/N key movement on shard add/remove, live drain, and
-//!   aggregated per-frequency stats.
+//! * [`shard`] — [`ShardedStack`]: N shards behind a consistent-hash
+//!   ring keyed by series id — stable assignment across restarts, ≈1/N
+//!   key movement on shard add/remove, live drain, aggregated
+//!   per-frequency stats, R-way replication (`set_replicas`) with
+//!   hedged reads, and health-masked routing.
+//! * [`remote`] — [`ShardClient`]: the dispatch trait the ring routes
+//!   through. In-process `ServingStack`s are one impl; [`RemoteShard`]
+//!   is the other — a keep-alive connection pool speaking the `/v1`
+//!   wire format to another machine, with per-request deadlines and a
+//!   background health prober driving ejection/readmission.
 //! * [`http`] — [`HttpServer`]: `POST /v1/forecast`, `GET /v1/stats`,
 //!   `GET /v1/metrics` (Prometheus text), `GET /v1/healthz`,
 //!   `POST /v1/reload` over `std::net::TcpListener` and
@@ -38,11 +44,14 @@
 
 pub mod http;
 pub mod pool;
+pub mod remote;
 pub mod router;
 pub mod shard;
 
-pub use http::{HttpClient, HttpOptions, HttpReply, HttpServer};
+pub use http::{ClientOptions, ClientPool, HttpClient, HttpOptions,
+               HttpReply, HttpServer};
 pub use pool::{ForecastHandle, FreqPool, QueueFull};
+pub use remote::{RemoteOptions, RemoteShard, ShardClient, ShardHealth};
 pub use router::ServingStack;
 pub use shard::{HashRing, ShardedStack};
 

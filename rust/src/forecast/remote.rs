@@ -1,0 +1,1001 @@
+//! Cross-machine shard transport: the [`ShardClient`] dispatch trait,
+//! the [`RemoteShard`] HTTP proxy, and the hedged-read machinery the
+//! ring uses to keep one slow replica from becoming a p99 cliff.
+//!
+//! Three pieces:
+//!
+//! * [`ShardClient`] — what the consistent-hash ring actually routes
+//!   to. The in-process [`ServingStack`] implements it by plain
+//!   forwarding; [`RemoteShard`] implements it by speaking the existing
+//!   `/v1` wire format over a keep-alive
+//!   [`ClientPool`](super::http::ClientPool), with per-request
+//!   connect/read deadlines so a dead peer costs a bounded timeout, not
+//!   a hang. The ring cannot tell the two apart — which is the point:
+//!   every later scale-out (GPU shards behind a remote, M4-scale state)
+//!   slots in behind this trait.
+//! * [`RemoteShard`]'s background prober — one thread per remote,
+//!   probing `GET /v1/healthz` on a short deadline. After
+//!   `eject_after` consecutive failures the shard's `healthy` flag
+//!   drops and the router stops *preferring* it; after `readmit_after`
+//!   consecutive successes (probation) the flag restores. Ejection is
+//!   a routing mask, never a ring mutation: the shard keeps its ring
+//!   points, so readmission restores the exact pre-ejection placement
+//!   and no keys move in either direction.
+//! * [`HedgeClock`] + [`hedged_forecast`] — replicated reads. The
+//!   primary replica is fired immediately; a timer starts at the
+//!   rolling p95 of recent forecast latencies; on expiry the next
+//!   replica is fired too and the first non-error response wins. The
+//!   loser's thread drains its response and discards it (its channel
+//!   send fails silently). A primary that fails *fast* (connection
+//!   refused, queue full) fails over to the next replica immediately —
+//!   that is failover, not a hedge, and is not counted as one.
+//!
+//! Instrumented through the PR 8 registry: per-remote
+//! `fesrnn_remote_{inflight,request_seconds,probe_failures_total,
+//! ejections_total}` under `{shard, addr}` labels (unregistered with
+//! the shard's whole slice on removal), plus ring-level
+//! `fesrnn_remote_{hedges,hedge_wins}_total`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Frequency;
+use crate::coordinator::ModelState;
+use crate::telemetry::registry::{Counter, Gauge, Histogram, Registry};
+use crate::telemetry::Quantiles;
+use crate::util::json::Json;
+
+use super::http::{ClientOptions, ClientPool, HttpClient, HttpReply};
+use super::pool::QueueFull;
+use super::router::ServingStack;
+use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
+            ServiceStats};
+
+/// What the consistent-hash ring routes to: one shard's worth of
+/// serving capacity, local or remote. Every method is the shard-shaped
+/// subset of [`ServingStack`]'s API; [`RemoteShard`] adds health.
+pub trait ShardClient: Send + Sync {
+    /// Blocking forecast, dispatched by frequency inside the shard.
+    fn forecast(&self, freq: Frequency, req: ForecastRequest)
+                -> Result<ForecastResponse>;
+
+    /// Non-blocking submit. A remote shard executes synchronously and
+    /// delivers through a pre-filled channel; backpressure
+    /// ([`QueueFull`]) still surfaces synchronously, matching the
+    /// local pool's contract.
+    fn submit(&self, freq: Frequency, req: ForecastRequest)
+              -> Result<ResponseReceiver>;
+
+    /// Per-frequency serving stats (a remote's own aggregate).
+    fn stats_snapshot(&self) -> Result<BTreeMap<Frequency, ServiceStats>>;
+
+    /// Hot-swap `freq`'s model from an in-memory state. Remote shards
+    /// refuse this (a `ModelState` is not wire-shippable) — use
+    /// [`reload_checkpoint`](Self::reload_checkpoint), whose path is
+    /// resolved on the shard's own filesystem.
+    fn reload(&self, freq: Frequency, state: ModelState) -> Result<u64>;
+
+    /// Hot-swap from a checkpoint path resolved *on the shard* (local:
+    /// this process; remote: the remote server via `POST /v1/reload`).
+    fn reload_checkpoint(&self, freq: Frequency, path: &Path) -> Result<u64>;
+
+    /// Newest generation serving `freq`.
+    fn generation(&self, freq: Frequency) -> Result<u64>;
+
+    /// Frequencies this shard serves (ring invariant: identical on
+    /// every member).
+    fn frequencies(&self) -> Vec<Frequency>;
+
+    /// The equalized history length required of requests for `freq`.
+    fn required_length(&self, freq: Frequency) -> Result<usize>;
+
+    /// Liveness check (remote: one `GET /v1/healthz` round-trip).
+    fn healthz(&self) -> Result<()>;
+
+    /// Routing mask: `false` while the prober has the shard ejected.
+    /// Local shards are always healthy (their failures are synchronous
+    /// errors, not silence).
+    fn healthy(&self) -> bool {
+        true
+    }
+
+    /// Health summary for `/v1/stats` and `fast-esrnn top`.
+    fn health(&self) -> ShardHealth;
+
+    /// Bind this shard's instruments into `reg` under a `shard` label
+    /// (plus `addr` for remotes) as it joins a ring.
+    fn bind_metrics(&self, reg: &Registry, shard: &str);
+}
+
+/// One shard's health row in `/v1/stats` (`"remote"."shards"`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardHealth {
+    /// `"local"` (in-process [`ServingStack`]) or `"remote"`.
+    pub kind: &'static str,
+    /// Peer address, remotes only.
+    pub addr: Option<String>,
+    /// `false` while ejected by the prober.
+    pub healthy: bool,
+    /// Cumulative failed probes (a flapping peer shows up here long
+    /// before it trips a full ejection).
+    pub probe_failures: u64,
+    /// Healthy→ejected transitions (counted once per transition).
+    pub ejections: u64,
+}
+
+impl ShardHealth {
+    fn local() -> Self {
+        Self {
+            kind: "local",
+            addr: None,
+            healthy: true,
+            probe_failures: 0,
+            ejections: 0,
+        }
+    }
+}
+
+impl ShardClient for ServingStack {
+    fn forecast(&self, freq: Frequency, req: ForecastRequest)
+                -> Result<ForecastResponse> {
+        ServingStack::forecast(self, freq, req)
+    }
+
+    fn submit(&self, freq: Frequency, req: ForecastRequest)
+              -> Result<ResponseReceiver> {
+        ServingStack::submit(self, freq, req)
+    }
+
+    fn stats_snapshot(&self) -> Result<BTreeMap<Frequency, ServiceStats>> {
+        Ok(ServingStack::stats_all(self))
+    }
+
+    fn reload(&self, freq: Frequency, state: ModelState) -> Result<u64> {
+        ServingStack::reload(self, freq, state)
+    }
+
+    fn reload_checkpoint(&self, freq: Frequency, path: &Path) -> Result<u64> {
+        ServingStack::reload_checkpoint(self, freq, path)
+    }
+
+    fn generation(&self, freq: Frequency) -> Result<u64> {
+        ServingStack::generation(self, freq)
+    }
+
+    fn frequencies(&self) -> Vec<Frequency> {
+        ServingStack::frequencies(self)
+    }
+
+    fn required_length(&self, freq: Frequency) -> Result<usize> {
+        ServingStack::required_length(self, freq)
+    }
+
+    fn healthz(&self) -> Result<()> {
+        if ServingStack::is_empty(self) {
+            bail!("no pools are running");
+        }
+        Ok(())
+    }
+
+    fn health(&self) -> ShardHealth {
+        ShardHealth::local()
+    }
+
+    fn bind_metrics(&self, reg: &Registry, shard: &str) {
+        ServingStack::bind_metrics(self, reg, shard);
+    }
+}
+
+/// Knobs for one remote shard. The defaults suit a LAN peer; the
+/// distributed integration test tightens the probe knobs to make
+/// ejection observable in test time.
+#[derive(Debug, Clone)]
+pub struct RemoteOptions {
+    /// TCP dial deadline for request connections.
+    pub connect_timeout: Duration,
+    /// Per-request read deadline — a dead peer costs this, not a hang.
+    pub read_timeout: Duration,
+    /// Keep-alive connections retained for reuse (concurrency above
+    /// this dials extra connections that are dropped when idle).
+    pub pool_size: usize,
+    /// Pause between health probes.
+    pub probe_interval: Duration,
+    /// Dial+read deadline for one probe (deliberately tighter than the
+    /// request deadlines: probes exist to notice silence quickly).
+    pub probe_timeout: Duration,
+    /// Consecutive probe failures before ejection.
+    pub eject_after: u32,
+    /// Consecutive probe successes before an ejected shard is
+    /// readmitted (probation — one lucky probe must not readmit a
+    /// flapping peer).
+    pub readmit_after: u32,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(10),
+            pool_size: 4,
+            probe_interval: Duration::from_secs(1),
+            probe_timeout: Duration::from_secs(1),
+            eject_after: 3,
+            readmit_after: 2,
+        }
+    }
+}
+
+/// Health state shared between a [`RemoteShard`] and its prober
+/// thread. The counters are the registry instruments themselves
+/// (clones share the cell), so the prober increments what `/v1/metrics`
+/// renders.
+struct RemoteHealth {
+    healthy: AtomicBool,
+    probe_failures: Counter,
+    ejections: Counter,
+}
+
+/// The prober thread's handle; stopping is a flag flip + join (the
+/// loop sleeps in short ticks, so drop latency is ≤ ~50 ms).
+struct Prober {
+    stop: Arc<AtomicBool>,
+    handle: thread::JoinHandle<()>,
+}
+
+/// A [`ServingStack`]-shaped client for a shard living in another
+/// process: every call is a request to the remote's `/v1` API over a
+/// pooled keep-alive [`HttpClient`].
+///
+/// Construction is eager: [`connect`](Self::connect) round-trips
+/// `GET /v1/healthz` to learn the remote's frequencies and required
+/// history lengths (cached — the front-end validates request length on
+/// every forecast and must not pay a network hop for it), then starts
+/// the prober.
+pub struct RemoteShard {
+    addr: String,
+    pool: ClientPool,
+    frequencies: Vec<Frequency>,
+    required: BTreeMap<Frequency, usize>,
+    health: Arc<RemoteHealth>,
+    /// In-flight requests; mirrored into `inflight` (a [`Gauge`] has no
+    /// arithmetic — the atomic is the source of truth).
+    inflight_n: AtomicU64,
+    inflight: Gauge,
+    latency: Histogram,
+    prober: Option<Prober>,
+}
+
+impl RemoteShard {
+    /// Dial `addr` (`host:port`), learn its identity from
+    /// `GET /v1/healthz`, and start the health prober. Fails fast if
+    /// the peer is unreachable or serves nothing.
+    pub fn connect(addr: &str, opts: RemoteOptions) -> Result<Self> {
+        let pool = ClientPool::new(
+            addr,
+            ClientOptions {
+                connect_timeout: opts.connect_timeout,
+                read_timeout: opts.read_timeout,
+            },
+            opts.pool_size.max(1),
+        );
+        let doc = {
+            let mut client = pool.get()?;
+            let reply = client
+                .request("GET", "/v1/healthz", None)
+                .with_context(|| format!("probing remote shard {addr}"))?;
+            if reply.code != 200 {
+                bail!("remote shard {addr} healthz returned {}", reply.code);
+            }
+            Json::parse(&reply.body)
+                .with_context(|| format!("remote shard {addr} healthz body"))?
+        };
+        let mut frequencies = Vec::new();
+        for f in doc.get("frequencies")?.as_arr()? {
+            frequencies.push(Frequency::parse(f.as_str()?)?);
+        }
+        if frequencies.is_empty() {
+            bail!("remote shard {addr} serves no frequencies");
+        }
+        let mut required = BTreeMap::new();
+        // Older servers predate `required_lengths`; the map stays empty
+        // and required_length() reports the gap explicitly.
+        if let Some(req) = doc.opt("required_lengths") {
+            for (name, v) in req.as_obj()? {
+                required.insert(Frequency::parse(name)?, v.as_usize()?);
+            }
+        }
+        let health = Arc::new(RemoteHealth {
+            healthy: AtomicBool::new(true),
+            probe_failures: Counter::new(),
+            ejections: Counter::new(),
+        });
+        let prober = Prober::start(addr, &opts, Arc::clone(&health));
+        Ok(Self {
+            addr: addr.to_string(),
+            pool,
+            frequencies,
+            required,
+            health,
+            inflight_n: AtomicU64::new(0),
+            inflight: Gauge::new(),
+            latency: Histogram::new(),
+            prober: Some(prober),
+        })
+    }
+
+    /// The peer address this shard proxies to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One instrumented request on a pooled connection. The guard
+    /// returns the connection to the pool on drop — unless the request
+    /// left it mid-response (poisoned), in which case it is discarded.
+    fn request(&self, method: &str, path: &str, body: Option<&str>)
+               -> Result<HttpReply> {
+        let mut client = self.pool.get()?;
+        let n = self.inflight_n.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inflight.set(n);
+        let start = Instant::now();
+        let out = client.request(method, path, body);
+        let n = self.inflight_n.fetch_sub(1, Ordering::Relaxed) - 1;
+        self.inflight.set(n);
+        if out.is_ok() {
+            self.latency.observe(start.elapsed().as_secs_f64());
+        }
+        out.with_context(
+            || format!("remote shard {}: {method} {path}", self.addr))
+    }
+
+    /// Pull `error.message` out of the unified error envelope, falling
+    /// back to the raw body for non-envelope responses.
+    fn error_message(reply: &HttpReply) -> String {
+        Json::parse(&reply.body)
+            .ok()
+            .and_then(|doc| {
+                Some(doc.get("error").ok()?.get("message").ok()?.as_str()
+                        .ok()?.to_string())
+            })
+            .unwrap_or_else(|| reply.body.clone())
+    }
+
+    fn fetch_healthz(&self) -> Result<Json> {
+        let reply = self.request("GET", "/v1/healthz", None)?;
+        if reply.code != 200 {
+            bail!("remote shard {} healthz returned {}", self.addr,
+                  reply.code);
+        }
+        Json::parse(&reply.body)
+    }
+}
+
+impl Drop for RemoteShard {
+    fn drop(&mut self) {
+        if let Some(p) = self.prober.take() {
+            p.stop.store(true, Ordering::Relaxed);
+            let _ = p.handle.join();
+        }
+    }
+}
+
+impl ShardClient for RemoteShard {
+    /// `POST /v1/forecast`. A remote `429` maps back to a typed
+    /// [`QueueFull`] so the local front-end re-emits it as its own
+    /// `429` — backpressure propagates across machines instead of
+    /// flattening into a generic `500`.
+    fn forecast(&self, freq: Frequency, req: ForecastRequest)
+                -> Result<ForecastResponse> {
+        let body = Json::obj(vec![
+            ("freq", Json::str(freq.name())),
+            ("id", Json::str(req.id.as_str())),
+            ("category", Json::str(req.category.name())),
+            ("values", Json::arr_f32(&req.values)),
+        ])
+        .to_string();
+        let reply = self.request("POST", "/v1/forecast", Some(&body))?;
+        match reply.code {
+            200 => {
+                let doc = Json::parse(&reply.body)?;
+                Ok(ForecastResponse {
+                    id: doc.get("id")?.as_str()?.to_string(),
+                    forecast: doc.get("forecast")?.as_f32_vec()?,
+                    generation: doc.get("generation")?.as_f64()? as u64,
+                })
+            }
+            // The remote does not echo its queue limit; 0 is the
+            // "unknown/unbounded" sentinel the type already defines.
+            429 => Err(anyhow::Error::new(QueueFull { limit: 0 })),
+            code => bail!("remote shard {} rejected the forecast ({code}): \
+                           {}",
+                          self.addr, Self::error_message(&reply)),
+        }
+    }
+
+    fn submit(&self, freq: Frequency, req: ForecastRequest)
+              -> Result<ResponseReceiver> {
+        let out = ShardClient::forecast(self, freq, req);
+        match out {
+            // Backpressure surfaces synchronously, like the local pool.
+            Err(e) if e.is::<QueueFull>() => Err(e),
+            other => {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(other);
+                Ok(rx)
+            }
+        }
+    }
+
+    fn stats_snapshot(&self) -> Result<BTreeMap<Frequency, ServiceStats>> {
+        let reply = self.request("GET", "/v1/stats", None)?;
+        if reply.code != 200 {
+            bail!("remote shard {} stats returned {}", self.addr, reply.code);
+        }
+        let doc = Json::parse(&reply.body)?;
+        let mut out = BTreeMap::new();
+        for (name, j) in doc.get("serving")?.as_obj()? {
+            out.insert(Frequency::parse(name)?, ServiceStats::from_json(j)?);
+        }
+        Ok(out)
+    }
+
+    fn reload(&self, freq: Frequency, _state: ModelState) -> Result<u64> {
+        bail!("remote shard {}: an in-memory ModelState cannot be shipped \
+               over the wire — use reload_checkpoint, whose {} checkpoint \
+               path is resolved on the remote's own filesystem",
+              self.addr, freq.name())
+    }
+
+    fn reload_checkpoint(&self, freq: Frequency, path: &Path) -> Result<u64> {
+        let body = Json::obj(vec![
+            ("freq", Json::str(freq.name())),
+            ("checkpoint", Json::str(path.to_string_lossy().as_ref())),
+        ])
+        .to_string();
+        let reply = self.request("POST", "/v1/reload", Some(&body))?;
+        if reply.code != 200 {
+            bail!("remote shard {} reload failed ({}): {}", self.addr,
+                  reply.code, Self::error_message(&reply));
+        }
+        let doc = Json::parse(&reply.body)?;
+        Ok(doc.get("generation")?.as_f64()? as u64)
+    }
+
+    fn generation(&self, freq: Frequency) -> Result<u64> {
+        let doc = self.fetch_healthz()?;
+        Ok(doc.get("generations")?.get(freq.name())?.as_f64()? as u64)
+    }
+
+    fn frequencies(&self) -> Vec<Frequency> {
+        self.frequencies.clone()
+    }
+
+    fn required_length(&self, freq: Frequency) -> Result<usize> {
+        self.required.get(&freq).copied().ok_or_else(|| {
+            anyhow!("remote shard {} did not advertise a required length \
+                     for {} (not served, or the remote predates \
+                     `required_lengths` in /v1/healthz)",
+                    self.addr, freq.name())
+        })
+    }
+
+    fn healthz(&self) -> Result<()> {
+        self.fetch_healthz().map(|_| ())
+    }
+
+    fn healthy(&self) -> bool {
+        self.health.healthy.load(Ordering::Relaxed)
+    }
+
+    fn health(&self) -> ShardHealth {
+        ShardHealth {
+            kind: "remote",
+            addr: Some(self.addr.clone()),
+            healthy: self.health.healthy.load(Ordering::Relaxed),
+            probe_failures: self.health.probe_failures.get(),
+            ejections: self.health.ejections.get(),
+        }
+    }
+
+    /// Per-remote series carry both the ring `shard` label (so
+    /// [`Registry::unregister`]`("shard", label)` drops them with the
+    /// shard's whole slice on removal) and the peer `addr` (what an
+    /// operator actually greps for).
+    fn bind_metrics(&self, reg: &Registry, shard: &str) {
+        let labels = [("shard", shard), ("addr", self.addr.as_str())];
+        reg.register_gauge(
+            "fesrnn_remote_inflight",
+            "Requests currently in flight to this remote shard.",
+            &labels, &self.inflight);
+        reg.register_histogram(
+            "fesrnn_remote_request_seconds",
+            "Round-trip latency of requests to this remote shard \
+             (successful requests only).",
+            &labels, &self.latency);
+        reg.register_counter(
+            "fesrnn_remote_probe_failures_total",
+            "Failed health probes against this remote shard (a flapping \
+             peer accumulates these without necessarily tripping a full \
+             ejection).",
+            &labels, &self.health.probe_failures);
+        reg.register_counter(
+            "fesrnn_remote_ejections_total",
+            "Healthy-to-ejected transitions for this remote shard \
+             (consecutive probe failures reached eject_after).",
+            &labels, &self.health.ejections);
+    }
+}
+
+impl Prober {
+    fn start(addr: &str, opts: &RemoteOptions, health: Arc<RemoteHealth>)
+             -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let addr = addr.to_string();
+        let probe_opts = ClientOptions {
+            connect_timeout: opts.probe_timeout,
+            read_timeout: opts.probe_timeout,
+        };
+        let interval = opts.probe_interval.max(Duration::from_millis(1));
+        let eject_after = opts.eject_after.max(1);
+        let readmit_after = opts.readmit_after.max(1);
+        let handle = thread::spawn(move || {
+            probe_loop(&addr, &probe_opts, interval, eject_after,
+                       readmit_after, &health, &flag);
+        });
+        Self { stop, handle }
+    }
+}
+
+/// One probe: a fresh connection (deliberately not pooled — the dial
+/// path is exactly what a dead peer fails first) and one healthz
+/// round-trip under the probe deadline.
+fn probe_once(addr: &str, opts: &ClientOptions) -> bool {
+    match HttpClient::connect_with(addr, opts.clone()) {
+        Ok(mut client) => matches!(
+            client.request("GET", "/v1/healthz", None),
+            Ok(reply) if reply.code == 200),
+        Err(_) => false,
+    }
+}
+
+/// Consecutive-failure ejection, probation readmission. Sleeps in
+/// ≤50 ms ticks so a stop request (shard drop) is honored promptly.
+fn probe_loop(addr: &str, opts: &ClientOptions, interval: Duration,
+              eject_after: u32, readmit_after: u32, health: &RemoteHealth,
+              stop: &AtomicBool) {
+    let tick = Duration::from_millis(50).min(interval);
+    let mut fails = 0u32;
+    let mut oks = 0u32;
+    'outer: loop {
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::Relaxed) {
+                break 'outer;
+            }
+            let d = tick.min(interval - slept);
+            thread::sleep(d);
+            slept += d;
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if probe_once(addr, opts) {
+            fails = 0;
+            if health.healthy.load(Ordering::Relaxed) {
+                continue;
+            }
+            oks += 1;
+            if oks >= readmit_after {
+                // Probation served: restore the routing mask. The ring
+                // points never moved, so placement is exactly what it
+                // was before the ejection.
+                health.healthy.store(true, Ordering::Relaxed);
+                oks = 0;
+            }
+        } else {
+            health.probe_failures.inc();
+            oks = 0;
+            fails = fails.saturating_add(1);
+            if fails >= eject_after && health.healthy.load(Ordering::Relaxed)
+            {
+                health.healthy.store(false, Ordering::Relaxed);
+                health.ejections.inc();
+            }
+        }
+    }
+}
+
+/// Hedge timer below this many recorded latencies falls back to
+/// [`HEDGE_DEFAULT_DELAY`] — a p95 over a handful of samples is noise.
+const HEDGE_MIN_SAMPLES: u64 = 32;
+
+/// Cold-start hedge delay, used until the rolling window warms up.
+const HEDGE_DEFAULT_DELAY: Duration = Duration::from_millis(25);
+
+/// The rolling hedge timer: a sliding window of recent successful
+/// forecast latencies whose p95 decides how long the primary replica
+/// gets before the next one is fired. Self-tuning both ways — a fleet
+/// that speeds up hedges sooner, one that slows down stops hedging —
+/// and clamped to [1 ms, 1 s] so a pathological window cannot disable
+/// hedging entirely or turn it into a duplicate-everything storm.
+pub struct HedgeClock {
+    // lint:lock-name(remote.hedge)
+    window: Mutex<Quantiles>,
+    pub(crate) hedges: Counter,
+    pub(crate) hedge_wins: Counter,
+}
+
+impl Default for HedgeClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HedgeClock {
+    pub fn new() -> Self {
+        Self {
+            window: Mutex::new(Quantiles::new(4096)),
+            hedges: Counter::new(),
+            hedge_wins: Counter::new(),
+        }
+    }
+
+    /// How long the primary gets before a hedge fires: the rolling p95
+    /// once warmed up, [`HEDGE_DEFAULT_DELAY`] before.
+    pub fn delay(&self) -> Duration {
+        let w = self.window.lock().unwrap();
+        if w.count() < HEDGE_MIN_SAMPLES {
+            return HEDGE_DEFAULT_DELAY;
+        }
+        Duration::from_secs_f64(w.quantile(0.95).clamp(1e-3, 1.0))
+    }
+
+    /// Record one end-to-end forecast latency (winners only — a loser's
+    /// latency is not what a client observed).
+    pub fn record(&self, secs: f64) {
+        self.window.lock().unwrap().record(secs);
+    }
+
+    /// Hedges fired (timer expiries, not failovers).
+    pub fn hedges(&self) -> u64 {
+        self.hedges.get()
+    }
+
+    /// Hedges where a non-primary replica answered first.
+    pub fn hedge_wins(&self) -> u64 {
+        self.hedge_wins.get()
+    }
+}
+
+fn spawn_replica(idx: usize, client: Arc<dyn ShardClient>, freq: Frequency,
+                 req: ForecastRequest,
+                 tx: mpsc::Sender<(usize, Result<ForecastResponse>)>) {
+    thread::spawn(move || {
+        // A loser's send fails once the winner has returned and dropped
+        // the receiver; its response is drained here and discarded.
+        let _ = tx.send((idx, client.forecast(freq, req)));
+    });
+}
+
+/// Replicated dispatch: fire `replicas[0]`, start the hedge timer, fire
+/// the next replica on expiry (or immediately on a fast failure —
+/// failover, not counted as a hedge); first non-error response wins.
+/// With one replica this is a plain synchronous call — no thread is
+/// spawned, preserving the unreplicated hot path.
+pub(crate) fn hedged_forecast(clock: &HedgeClock,
+                              replicas: &[Arc<dyn ShardClient>],
+                              freq: Frequency, req: ForecastRequest)
+                              -> Result<ForecastResponse> {
+    let Some(primary) = replicas.first() else {
+        bail!("no shards are running");
+    };
+    let start = Instant::now();
+    if replicas.len() == 1 {
+        let out = primary.forecast(freq, req);
+        if out.is_ok() {
+            clock.record(start.elapsed().as_secs_f64());
+        }
+        return out;
+    }
+    let (tx, rx) = mpsc::channel::<(usize, Result<ForecastResponse>)>();
+    spawn_replica(0, Arc::clone(primary), freq, req.clone(), tx.clone());
+    let mut next = 1usize;
+    let mut outstanding = 1usize;
+    let mut last_err: Option<anyhow::Error> = None;
+    while outstanding > 0 {
+        let msg = if next < replicas.len() {
+            match rx.recv_timeout(clock.delay()) {
+                Ok(m) => m,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    clock.hedges.inc();
+                    spawn_replica(next, Arc::clone(&replicas[next]), freq,
+                                  req.clone(), tx.clone());
+                    next += 1;
+                    outstanding += 1;
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        };
+        outstanding -= 1;
+        let (idx, out) = msg;
+        match out {
+            Ok(resp) => {
+                if idx > 0 {
+                    clock.hedge_wins.inc();
+                }
+                clock.record(start.elapsed().as_secs_f64());
+                return Ok(resp);
+            }
+            Err(e) => {
+                // Keep the most informative error: a typed QueueFull
+                // (a saturated replica → the client should back off)
+                // beats a transport error from the other one.
+                let keep_old = matches!(&last_err,
+                                        Some(p) if p.is::<QueueFull>())
+                    && !e.is::<QueueFull>();
+                if !keep_old {
+                    last_err = Some(e);
+                }
+                if outstanding == 0 && next < replicas.len() {
+                    // Fast failure with replicas to spare: synchronous
+                    // failover (the primary's answer is already known
+                    // to be an error — nothing to hedge against).
+                    spawn_replica(next, Arc::clone(&replicas[next]), freq,
+                                  req.clone(), tx.clone());
+                    next += 1;
+                    outstanding += 1;
+                }
+            }
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow!("every replica failed without a report")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FREQ: Frequency = Frequency::Quarterly;
+
+    /// A scriptable in-process ShardClient for hedging tests.
+    struct Stub {
+        delay: Duration,
+        outcome: StubOutcome,
+        calls: AtomicU64,
+    }
+
+    enum StubOutcome {
+        Ok(&'static str),
+        Fail,
+        QueueFull,
+    }
+
+    impl Stub {
+        fn new(delay_ms: u64, outcome: StubOutcome) -> Arc<Self> {
+            Arc::new(Self {
+                delay: Duration::from_millis(delay_ms),
+                outcome,
+                calls: AtomicU64::new(0),
+            })
+        }
+    }
+
+    impl ShardClient for Stub {
+        fn forecast(&self, _freq: Frequency, req: ForecastRequest)
+                    -> Result<ForecastResponse> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            thread::sleep(self.delay);
+            match self.outcome {
+                StubOutcome::Ok(tag) => Ok(ForecastResponse {
+                    id: format!("{}:{}", tag, req.id),
+                    forecast: vec![1.0],
+                    generation: 7,
+                }),
+                StubOutcome::Fail => bail!("stub is down"),
+                StubOutcome::QueueFull => {
+                    Err(anyhow::Error::new(QueueFull { limit: 4 }))
+                }
+            }
+        }
+
+        fn submit(&self, freq: Frequency, req: ForecastRequest)
+                  -> Result<ResponseReceiver> {
+            let (tx, rx) = mpsc::channel();
+            let _ = tx.send(ShardClient::forecast(self, freq, req));
+            Ok(rx)
+        }
+
+        fn stats_snapshot(&self)
+                          -> Result<BTreeMap<Frequency, ServiceStats>> {
+            Ok(BTreeMap::new())
+        }
+
+        fn reload(&self, _freq: Frequency, _state: ModelState)
+                  -> Result<u64> {
+            bail!("stub")
+        }
+
+        fn reload_checkpoint(&self, _freq: Frequency, _path: &Path)
+                             -> Result<u64> {
+            bail!("stub")
+        }
+
+        fn generation(&self, _freq: Frequency) -> Result<u64> {
+            Ok(7)
+        }
+
+        fn frequencies(&self) -> Vec<Frequency> {
+            vec![FREQ]
+        }
+
+        fn required_length(&self, _freq: Frequency) -> Result<usize> {
+            Ok(1)
+        }
+
+        fn healthz(&self) -> Result<()> {
+            Ok(())
+        }
+
+        fn health(&self) -> ShardHealth {
+            ShardHealth::local()
+        }
+
+        fn bind_metrics(&self, _reg: &Registry, _shard: &str) {}
+    }
+
+    fn req(id: &str) -> ForecastRequest {
+        ForecastRequest {
+            id: id.to_string(),
+            values: vec![1.0; 8],
+            category: crate::config::Category::Other,
+        }
+    }
+
+    #[test]
+    fn hedge_clock_uses_default_until_warm() {
+        let clock = HedgeClock::new();
+        assert_eq!(clock.delay(), HEDGE_DEFAULT_DELAY);
+        for _ in 0..(HEDGE_MIN_SAMPLES - 1) {
+            clock.record(0.004);
+        }
+        assert_eq!(clock.delay(), HEDGE_DEFAULT_DELAY,
+                   "one sample short of warm must still use the default");
+        clock.record(0.004);
+        let d = clock.delay();
+        assert!(d >= Duration::from_millis(3) && d <= Duration::from_millis(6),
+                "warmed delay should track the recorded p95, got {d:?}");
+    }
+
+    #[test]
+    fn hedge_clock_clamps_pathological_windows() {
+        let clock = HedgeClock::new();
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            clock.record(0.000_001);
+        }
+        assert_eq!(clock.delay(), Duration::from_millis(1),
+                   "sub-ms p95 clamps to the 1 ms floor");
+        let clock = HedgeClock::new();
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            clock.record(30.0);
+        }
+        assert_eq!(clock.delay(), Duration::from_secs(1),
+                   "a stalled fleet clamps to the 1 s ceiling");
+    }
+
+    #[test]
+    fn single_replica_is_a_plain_call() {
+        let clock = HedgeClock::new();
+        let a = Stub::new(0, StubOutcome::Ok("a"));
+        let reps: Vec<Arc<dyn ShardClient>> = vec![a.clone()];
+        let resp = hedged_forecast(&clock, &reps, FREQ, req("k")).unwrap();
+        assert_eq!(resp.id, "a:k");
+        assert_eq!(clock.hedges(), 0);
+        assert_eq!(a.calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn slow_primary_is_hedged_and_secondary_wins() {
+        let clock = HedgeClock::new();
+        // Warm the clock to a ~4 ms hedge delay so the test is quick.
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            clock.record(0.004);
+        }
+        let slow = Stub::new(300, StubOutcome::Ok("slow"));
+        let fast = Stub::new(0, StubOutcome::Ok("fast"));
+        let reps: Vec<Arc<dyn ShardClient>> = vec![slow.clone(), fast.clone()];
+        let t0 = Instant::now();
+        let resp = hedged_forecast(&clock, &reps, FREQ, req("k")).unwrap();
+        assert_eq!(resp.id, "fast:k", "the hedge must win");
+        assert!(t0.elapsed() < Duration::from_millis(200),
+                "hedged latency must not wait out the slow primary");
+        assert_eq!(clock.hedges(), 1);
+        assert_eq!(clock.hedge_wins(), 1);
+    }
+
+    #[test]
+    fn fast_primary_never_hedges() {
+        let clock = HedgeClock::new();
+        // Warm the clock to a generous 500 ms hedge delay so scheduler
+        // jitter on a loaded CI machine cannot fire a spurious hedge.
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            clock.record(0.5);
+        }
+        let fast = Stub::new(0, StubOutcome::Ok("fast"));
+        let slow = Stub::new(50, StubOutcome::Ok("slow"));
+        let reps: Vec<Arc<dyn ShardClient>> = vec![fast, slow.clone()];
+        let resp = hedged_forecast(&clock, &reps, FREQ, req("k")).unwrap();
+        assert_eq!(resp.id, "fast:k");
+        assert_eq!(clock.hedges(), 0, "no timer expiry, no hedge");
+        assert_eq!(slow.calls.load(Ordering::Relaxed), 0,
+                   "the secondary must not even be contacted");
+    }
+
+    #[test]
+    fn fast_primary_failure_fails_over_without_counting_a_hedge() {
+        let clock = HedgeClock::new();
+        // Generous delay: the failure must beat the hedge timer.
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            clock.record(0.5);
+        }
+        let dead = Stub::new(0, StubOutcome::Fail);
+        let ok = Stub::new(0, StubOutcome::Ok("b"));
+        let reps: Vec<Arc<dyn ShardClient>> = vec![dead, ok];
+        let resp = hedged_forecast(&clock, &reps, FREQ, req("k")).unwrap();
+        assert_eq!(resp.id, "b:k");
+        assert_eq!(clock.hedges(), 0,
+                   "failover on a known error is not a hedge");
+        assert_eq!(clock.hedge_wins(), 1,
+                   "a non-primary response still counts as a win");
+    }
+
+    #[test]
+    fn all_replicas_failing_reports_an_error() {
+        let clock = HedgeClock::new();
+        let reps: Vec<Arc<dyn ShardClient>> = vec![
+            Stub::new(0, StubOutcome::Fail),
+            Stub::new(0, StubOutcome::Fail),
+        ];
+        let err = hedged_forecast(&clock, &reps, FREQ, req("k")).unwrap_err();
+        assert!(format!("{err:#}").contains("stub is down"));
+    }
+
+    #[test]
+    fn queue_full_from_every_replica_stays_typed() {
+        let clock = HedgeClock::new();
+        let reps: Vec<Arc<dyn ShardClient>> = vec![
+            Stub::new(0, StubOutcome::QueueFull),
+            Stub::new(0, StubOutcome::Fail),
+        ];
+        let err = hedged_forecast(&clock, &reps, FREQ, req("k")).unwrap_err();
+        assert!(err.is::<QueueFull>(),
+                "a saturated replica's QueueFull must win the error \
+                 triage so the front-end sheds with 429, got: {err:#}");
+    }
+
+    #[test]
+    fn empty_replica_set_errors() {
+        let clock = HedgeClock::new();
+        let reps: Vec<Arc<dyn ShardClient>> = Vec::new();
+        assert!(hedged_forecast(&clock, &reps, FREQ, req("k")).is_err());
+    }
+
+    #[test]
+    fn local_stack_health_is_static() {
+        let h = ShardHealth::local();
+        assert_eq!(h.kind, "local");
+        assert!(h.healthy && h.addr.is_none());
+    }
+}

@@ -21,20 +21,31 @@
 //! down *after* their queues drain (`FreqPool` drains before its workers
 //! exit), so removal never drops an accepted request.
 //!
-//! Today every shard lives in-process; the ring + drain protocol are the
-//! routing layer a cross-machine deployment reuses unchanged (a remote
-//! shard is a `ServingStack` behind a TCP transport — see ROADMAP).
+//! The ring routes to [`ShardClient`]s, not concrete stacks: an
+//! in-process [`ServingStack`] and a [`RemoteShard`](super::remote)
+//! proxying another machine over TCP are interchangeable members. With
+//! `--replicas R` each key maps to its R distinct ring successors
+//! ([`HashRing::route_n`]) and reads are *hedged* (see
+//! [`remote::hedged_forecast`](super::remote)): the primary gets the
+//! rolling p95 to answer before the next replica is fired too, so one
+//! slow replica is a near-miss instead of a p99 cliff. An ejected
+//! remote (failed health probes) keeps its ring points but loses
+//! routing *preference* — healthy replicas are tried first, and
+//! readmission restores the exact pre-ejection placement.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::Frequency;
-use crate::coordinator::{checkpoint, ModelState};
+use crate::coordinator::ModelState;
 use crate::telemetry::registry::Registry;
 
+use super::remote::{hedged_forecast, HedgeClock, RemoteShard, ShardClient,
+                    ShardHealth};
 use super::router::ServingStack;
 use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
             ServiceStats};
@@ -152,25 +163,58 @@ impl HashRing {
         let (_, label) = &self.points[i % self.points.len()];
         Some(label)
     }
+
+    /// The `n` *distinct* shards owning `key`'s replica set: the first
+    /// point clockwise from `hash(key)` and then the next points whose
+    /// labels have not been seen yet, wrapping. Fewer than `n` shards on
+    /// the ring returns them all. `route_n(key, 1)` agrees with
+    /// [`route`](Self::route) on every key, and — same argument as for
+    /// single routing — membership changes elsewhere on the ring cannot
+    /// reorder a key's surviving successors (points never move, so the
+    /// clockwise scan meets them in the same order).
+    pub fn route_n(&self, key: &str, n: usize) -> Vec<&str> {
+        if self.points.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        let h = fnv1a64(key.as_bytes());
+        let start = self.points.partition_point(|(p, _)| *p < h);
+        let mut out: Vec<&str> = Vec::new();
+        for i in 0..self.points.len() {
+            let (_, label) = &self.points[(start + i) % self.points.len()];
+            if !out.iter().any(|l| l == label) {
+                out.push(label.as_str());
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        out
+    }
 }
 
 struct Shards {
     ring: HashRing,
-    stacks: BTreeMap<String, Arc<ServingStack>>,
+    clients: BTreeMap<String, Arc<dyn ShardClient>>,
 }
 
-/// N [`ServingStack`] shards behind a consistent-hash router. All
+/// N shards — in-process [`ServingStack`]s and/or
+/// [`RemoteShard`] proxies — behind a consistent-hash router. All
 /// methods take `&self` (membership sits under one `RwLock`; request
 /// dispatch takes the read side only, so routing scales with shards).
 ///
 /// The router also owns the ring's metrics [`Registry`]: every shard's
-/// pool instruments are bound into it (under `{shard, freq}` labels)
-/// as the shard joins and unbound as it leaves, so `GET /v1/metrics`
-/// always reflects the current membership.
+/// instruments are bound into it (under `{shard, freq}` / `{shard,
+/// addr}` labels) as the shard joins and unbound as it leaves, so
+/// `GET /v1/metrics` always reflects the current membership.
 pub struct ShardedStack {
     // lint:lock-name(shard.inner)
     inner: RwLock<Shards>,
     registry: Arc<Registry>,
+    /// Replicas per key (R-way): each key routes to its R distinct
+    /// ring successors; reads are hedged across them.
+    replicas: AtomicUsize,
+    /// The rolling-p95 hedge timer + ring-level hedge counters.
+    hedge: HedgeClock,
 }
 
 impl Default for ShardedStack {
@@ -182,12 +226,28 @@ impl Default for ShardedStack {
 impl ShardedStack {
     /// An empty router: [`add_shard`](Self::add_shard) before serving.
     pub fn new() -> Self {
+        let registry = Arc::new(Registry::new());
+        let hedge = HedgeClock::new();
+        // Ring-level (unlabeled) hedge counters: hedging is a property
+        // of the replicated read path, not of any one shard.
+        registry.register_counter(
+            "fesrnn_remote_hedges_total",
+            "Hedged (duplicate) reads fired after the primary replica \
+             outlived the rolling-p95 hedge timer.",
+            &[], &hedge.hedges);
+        registry.register_counter(
+            "fesrnn_remote_hedge_wins_total",
+            "Hedged or failed-over reads answered first by a non-primary \
+             replica.",
+            &[], &hedge.hedge_wins);
         Self {
             inner: RwLock::new(Shards {
                 ring: HashRing::new(),
-                stacks: BTreeMap::new(),
+                clients: BTreeMap::new(),
             }),
-            registry: Arc::new(Registry::new()),
+            registry,
+            replicas: AtomicUsize::new(1),
+            hedge,
         }
     }
 
@@ -217,59 +277,110 @@ impl ShardedStack {
     /// [`add_shard`](Self::add_shard) for a stack the caller also holds.
     pub fn add_shard_arc(&self, label: &str, stack: Arc<ServingStack>)
                          -> Result<()> {
-        if stack.is_empty() {
+        self.add_shard_client(label, stack)
+    }
+
+    /// Splice a [`RemoteShard`] — a shard living in another process —
+    /// into the ring. The ring treats it exactly like a local stack.
+    pub fn add_remote_shard(&self, label: &str, remote: RemoteShard)
+                            -> Result<()> {
+        self.add_shard_client(label, Arc::new(remote))
+    }
+
+    /// The general form both of the above lower to: any
+    /// [`ShardClient`] joins the ring under `label`.
+    pub fn add_shard_client(&self, label: &str, client: Arc<dyn ShardClient>)
+                            -> Result<()> {
+        if client.frequencies().is_empty() {
             bail!("shard `{label}` has no running pools");
         }
         {
             let mut inner = self.inner.write().unwrap();
-            if let Some(first) = inner.stacks.values().next() {
-                if first.frequencies() != stack.frequencies() {
+            if let Some(first) = inner.clients.values().next() {
+                if first.frequencies() != client.frequencies() {
                     bail!("shard `{label}` serves {:?} but the ring \
                            serves {:?} — every shard must serve the same \
                            frequencies",
-                          stack.frequencies(), first.frequencies());
+                          client.frequencies(), first.frequencies());
                 }
             }
             inner.ring.insert(label)?;
-            inner.stacks.insert(label.to_string(), Arc::clone(&stack));
+            inner.clients.insert(label.to_string(), Arc::clone(&client));
         }
         // Bind after the membership lock is released: registration takes
         // the registry's own mutex, and no path may hold both locks.
-        stack.bind_metrics(&self.registry, label);
+        client.bind_metrics(&self.registry, label);
         Ok(())
     }
 
     /// Drain protocol, step 1+2 in one atomic move: stop routing to
-    /// `label` and return its stack. The shard keeps serving whatever it
-    /// already accepted; when the caller drops the returned `Arc` (and
-    /// in-flight requests release theirs), the pools shut down and
-    /// *drain their queues before the workers exit* — an accepted
-    /// request is never dropped by a removal.
-    pub fn remove_shard(&self, label: &str) -> Result<Arc<ServingStack>> {
+    /// `label` and return its client. A local shard keeps serving
+    /// whatever it already accepted; when the caller drops the returned
+    /// `Arc` (and in-flight requests release theirs), the pools shut
+    /// down and *drain their queues before the workers exit* — an
+    /// accepted request is never dropped by a removal. (A remote
+    /// shard's process keeps running; removal only stops routing to it
+    /// and stops its health prober.)
+    pub fn remove_shard(&self, label: &str) -> Result<Arc<dyn ShardClient>> {
         let removed = {
             let mut inner = self.inner.write().unwrap();
-            if inner.stacks.len() == 1 && inner.stacks.contains_key(label) {
+            if inner.clients.len() == 1 && inner.clients.contains_key(label) {
                 bail!("cannot remove `{label}` — it is the last shard");
             }
             inner.ring.remove(label)?;
             inner
-                .stacks
+                .clients
                 .remove(label)
                 .ok_or_else(|| anyhow!("shard `{label}` not found"))?
         };
         // The departed shard's series leave the exposition with it
-        // (unbind outside the membership lock, mirroring add_shard_arc).
+        // (unbind outside the membership lock, mirroring
+        // add_shard_client).
         self.registry.unregister("shard", label);
         Ok(removed)
     }
 
     pub fn shard_count(&self) -> usize {
-        self.inner.read().unwrap().stacks.len()
+        self.inner.read().unwrap().clients.len()
     }
 
     /// Shard labels, sorted.
     pub fn shard_labels(&self) -> Vec<String> {
-        self.inner.read().unwrap().stacks.keys().cloned().collect()
+        self.inner.read().unwrap().clients.keys().cloned().collect()
+    }
+
+    /// Set the replication factor R: every key maps to its R distinct
+    /// ring successors and reads are hedged across them. Clamped to
+    /// ≥ 1; values above the shard count degrade gracefully (a key
+    /// simply gets every shard). Takes effect for the *next* request —
+    /// no lock, no drain.
+    pub fn set_replicas(&self, n: usize) {
+        self.replicas.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// The configured replication factor.
+    pub fn replicas(&self) -> usize {
+        self.replicas.load(Ordering::Relaxed)
+    }
+
+    /// Hedged reads fired (rolling-p95 timer expiries).
+    pub fn hedges(&self) -> u64 {
+        self.hedge.hedges()
+    }
+
+    /// Hedged/failed-over reads a non-primary replica answered first.
+    pub fn hedge_wins(&self) -> u64 {
+        self.hedge.hedge_wins()
+    }
+
+    /// Per-shard health (kind, address, ejection state, probe
+    /// counters), keyed by shard label — the `/v1/stats` `"remote"`
+    /// section and `fast-esrnn top` read this.
+    pub fn shard_health(&self) -> BTreeMap<String, ShardHealth> {
+        self.all()
+            .into_iter()
+            .map(|(label, c)| (label, c.health()))
+            .collect()
     }
 
     /// Which shard `key` (a series id) routes to — exposed so operators
@@ -283,32 +394,73 @@ impl ShardedStack {
             .ok_or_else(|| anyhow!("no shards are running"))
     }
 
-    /// Route `key` to its shard's stack, holding the read lock only for
-    /// the lookup — the returned `Arc` keeps the shard alive even if it
-    /// is removed from the ring mid-request.
-    fn route(&self, key: &str) -> Result<Arc<ServingStack>> {
+    /// `key`'s replica set, ready to dispatch: up to R clients in
+    /// routing-preference order, the read lock held only for the
+    /// lookup — the returned `Arc`s keep the shards alive even if they
+    /// are removed from the ring mid-request.
+    ///
+    /// Ejection is a *mask*, not a membership change: an unhealthy
+    /// shard keeps its ring points but loses preference — the set is
+    /// the healthy successors in ring order first, then (only when too
+    /// few shards are healthy) the ejected ones as a last resort. With
+    /// R = 1 this is automatic failover; readmission restores the
+    /// exact pre-ejection placement because the points never moved.
+    fn route_replicas(&self, key: &str)
+                      -> Result<Vec<Arc<dyn ShardClient>>> {
+        let want = self.replicas.load(Ordering::Relaxed).max(1);
         let inner = self.inner.read().unwrap();
-        let label = inner
-            .ring
-            .route(key)
-            .ok_or_else(|| anyhow!("no shards are running"))?;
-        Ok(Arc::clone(&inner.stacks[label]))
+        if inner.ring.is_empty() {
+            bail!("no shards are running");
+        }
+        let quick = inner.ring.route_n(key, want);
+        let clients: Vec<Arc<dyn ShardClient>> = quick
+            .iter()
+            .map(|l| Arc::clone(&inner.clients[*l]))
+            .collect();
+        // Fast path (the common, fully-healthy case): the first R
+        // successors are the replica set, no full-ring walk.
+        if clients.iter().all(|c| c.healthy()) {
+            return Ok(clients);
+        }
+        let order = inner.ring.route_n(key, inner.ring.len());
+        let mut picked: Vec<Arc<dyn ShardClient>> = Vec::new();
+        let mut ejected: Vec<Arc<dyn ShardClient>> = Vec::new();
+        for label in order {
+            let c = Arc::clone(&inner.clients[label]);
+            if c.healthy() {
+                picked.push(c);
+            } else {
+                ejected.push(c);
+            }
+        }
+        picked.extend(ejected);
+        picked.truncate(want);
+        Ok(picked)
     }
 
-    /// Every running stack, for operations that fan out (reload, stats).
-    fn all(&self) -> Vec<(String, Arc<ServingStack>)> {
+    /// Route `key` to its primary (first healthy) shard.
+    fn route(&self, key: &str) -> Result<Arc<dyn ShardClient>> {
+        self.route_replicas(key)?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no shards are running"))
+    }
+
+    /// Every running shard client, for operations that fan out
+    /// (reload, stats).
+    fn all(&self) -> Vec<(String, Arc<dyn ShardClient>)> {
         let inner = self.inner.read().unwrap();
         inner
-            .stacks
+            .clients
             .iter()
             .map(|(l, s)| (l.clone(), Arc::clone(s)))
             .collect()
     }
 
-    fn first(&self) -> Result<Arc<ServingStack>> {
+    fn first(&self) -> Result<Arc<dyn ShardClient>> {
         let inner = self.inner.read().unwrap();
         inner
-            .stacks
+            .clients
             .values()
             .next()
             .cloned()
@@ -322,7 +474,12 @@ impl ShardedStack {
 
     /// The ring's only frequency, when exactly one is served.
     pub fn single_frequency(&self) -> Option<Frequency> {
-        self.first().ok()?.single_frequency()
+        let freqs = self.first().ok()?.frequencies();
+        if freqs.len() == 1 {
+            Some(freqs[0])
+        } else {
+            None
+        }
     }
 
     /// The equalized history length required of requests for `freq`.
@@ -330,14 +487,20 @@ impl ShardedStack {
         self.first()?.required_length(freq)
     }
 
-    /// Blocking forecast: consistent-hash route by `req.id`, then
-    /// dispatch by frequency inside the shard.
+    /// Blocking forecast: consistent-hash route by `req.id` to the
+    /// key's replica set, hedge across it (primary first; next replica
+    /// fired at the rolling p95 or on a fast failure), then dispatch by
+    /// frequency inside the winning shard. With R = 1 (the default)
+    /// this is a plain synchronous call to the key's shard.
     pub fn forecast(&self, freq: Frequency, req: ForecastRequest)
                     -> Result<ForecastResponse> {
-        self.route(&req.id)?.forecast(freq, req)
+        let replicas = self.route_replicas(&req.id)?;
+        hedged_forecast(&self.hedge, &replicas, freq, req)
     }
 
-    /// Non-blocking submit, same routing as [`forecast`](Self::forecast).
+    /// Non-blocking submit to the key's primary shard (hedging needs a
+    /// blocking rendezvous; replicated dispatch is the
+    /// [`forecast`](Self::forecast) path).
     pub fn submit(&self, freq: Frequency, req: ForecastRequest)
                   -> Result<ResponseReceiver> {
         self.route(&req.id)?.submit(freq, req)
@@ -348,67 +511,103 @@ impl ShardedStack {
     /// converges to the same weights even though tags may differ).
     /// Errs on an empty ring — "reloaded nowhere" must not look like
     /// success.
+    /// Requires every shard to accept the state — a remote shard
+    /// cannot (a `ModelState` is not wire-shippable) and will fail the
+    /// whole reload; mixed rings use
+    /// [`reload_checkpoint`](Self::reload_checkpoint), where each shard
+    /// resolves the path on its own filesystem.
     pub fn reload(&self, freq: Frequency, state: ModelState) -> Result<u64> {
         let all = self.all();
         if all.is_empty() {
             bail!("no shards are running");
         }
         let mut newest = 0;
-        for (_, stack) in all {
-            newest = newest.max(stack.reload(freq, state.clone())?);
+        for (_, client) in all {
+            newest = newest.max(client.reload(freq, state.clone())?);
         }
         Ok(newest)
     }
 
     /// [`reload`](Self::reload) from a checkpoint file (JSON or binary,
     /// magic-sniffed); the checkpoint's recorded frequency must match.
+    /// Fans the *path* out to every shard — a local stack loads it
+    /// here, a remote shard resolves it on its own filesystem via
+    /// `POST /v1/reload` — so every member of a mixed ring converges on
+    /// the same weights.
     pub fn reload_checkpoint(&self, freq: Frequency, path: impl AsRef<Path>)
                              -> Result<u64> {
-        let state = checkpoint::load_model_state_for(path, freq.name())?;
-        self.reload(freq, state)
-    }
-
-    /// Newest generation serving `freq` on any shard; errs on an empty
-    /// ring.
-    pub fn generation(&self, freq: Frequency) -> Result<u64> {
         let all = self.all();
         if all.is_empty() {
             bail!("no shards are running");
         }
         let mut newest = 0;
-        for (_, stack) in all {
-            newest = newest.max(stack.generation(freq)?);
+        for (_, client) in all {
+            newest = newest.max(client.reload_checkpoint(freq,
+                                                         path.as_ref())?);
         }
         Ok(newest)
     }
 
+    /// Newest generation serving `freq` on any *reachable* shard; errs
+    /// on an empty ring or when no shard answers (an ejected remote
+    /// must not take `/v1/healthz` down with it).
+    pub fn generation(&self, freq: Frequency) -> Result<u64> {
+        let all = self.all();
+        if all.is_empty() {
+            bail!("no shards are running");
+        }
+        let mut newest: Option<u64> = None;
+        let mut last_err = None;
+        for (_, client) in all {
+            match client.generation(freq) {
+                Ok(g) => newest = Some(newest.unwrap_or(0).max(g)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match (newest, last_err) {
+            (Some(g), _) => Ok(g),
+            (None, Some(e)) => Err(e),
+            (None, None) => bail!("no shards are running"),
+        }
+    }
+
     /// Aggregated stats for one frequency (see [`ServiceStats::absorb`]).
+    /// Unreachable shards are skipped — a dead remote must not turn
+    /// `/v1/stats` into a 500.
     pub fn stats(&self, freq: Frequency) -> Result<ServiceStats> {
         let mut agg = ServiceStats::default();
-        for (_, stack) in self.all() {
-            agg.absorb(&stack.stats(freq)?);
+        for (_, by_freq) in self.shard_stats() {
+            if let Some(st) = by_freq.get(&freq) {
+                agg.absorb(st);
+            }
         }
         Ok(agg)
     }
 
     /// Aggregated stats for every frequency: counters sum over shards,
     /// generation takes the max, latencies take the worst shard.
+    /// Unreachable shards are skipped.
     pub fn stats_all(&self) -> BTreeMap<Frequency, ServiceStats> {
         let mut out: BTreeMap<Frequency, ServiceStats> = BTreeMap::new();
-        for (_, stack) in self.all() {
-            for (freq, st) in stack.stats_all() {
+        for (_, by_freq) in self.shard_stats() {
+            for (freq, st) in by_freq {
                 out.entry(freq).or_default().absorb(&st);
             }
         }
         out
     }
 
-    /// Unaggregated per-shard stats, keyed by shard label.
+    /// Unaggregated per-shard stats, keyed by shard label. A shard
+    /// whose snapshot fails (dead remote) is omitted — its absence
+    /// from the breakdown plus its `"remote"` health row is the
+    /// operator's signal, not a 500.
     pub fn shard_stats(&self)
                        -> BTreeMap<String, BTreeMap<Frequency, ServiceStats>> {
         self.all()
             .into_iter()
-            .map(|(label, stack)| (label, stack.stats_all()))
+            .filter_map(|(label, client)| {
+                client.stats_snapshot().ok().map(|s| (label, s))
+            })
             .collect()
     }
 }
@@ -530,6 +729,127 @@ mod tests {
         ring.remove("s0").unwrap();
         assert!(ring.is_empty());
         assert_eq!(ring.len(), 0);
+    }
+
+    // ------------------------------------------------------- route_n
+
+    #[test]
+    fn route_n_of_one_agrees_with_route_on_every_key() {
+        let ks = keys(2000);
+        let mut ring = HashRing::new();
+        for l in ["s0", "s1", "s2", "s3"] {
+            ring.insert(l).unwrap();
+        }
+        for k in &ks {
+            assert_eq!(ring.route_n(k, 1), vec![ring.route(k).unwrap()],
+                       "route_n(_, 1) must be the single-route answer");
+        }
+    }
+
+    #[test]
+    fn route_n_returns_distinct_shards_capped_at_membership() {
+        let ks = keys(1000);
+        let mut ring = HashRing::new();
+        for l in ["s0", "s1", "s2", "s3"] {
+            ring.insert(l).unwrap();
+        }
+        for k in &ks {
+            for n in 0..=6 {
+                let reps = ring.route_n(k, n);
+                assert_eq!(reps.len(), n.min(4),
+                           "want min(n, shards) replicas for n={n}");
+                let mut uniq: Vec<&str> = reps.clone();
+                uniq.sort();
+                uniq.dedup();
+                assert_eq!(uniq.len(), reps.len(),
+                           "replica set for {k} repeats a shard: {reps:?}");
+            }
+        }
+        assert!(HashRing::new().route_n("anything", 2).is_empty());
+    }
+
+    #[test]
+    fn route_n_is_stable_across_insertion_order() {
+        let ks = keys(1000);
+        let mut a = HashRing::new();
+        for l in ["s0", "s1", "s2", "s3"] {
+            a.insert(l).unwrap();
+        }
+        let mut b = HashRing::new();
+        for l in ["s3", "s1", "s0", "s2"] {
+            b.insert(l).unwrap();
+        }
+        for k in &ks {
+            assert_eq!(a.route_n(k, 2), b.route_n(k, 2),
+                       "replica sets must not depend on build order");
+        }
+    }
+
+    #[test]
+    fn unrelated_insert_keeps_surviving_replica_order() {
+        // Adding a shard may interpose itself into some keys' replica
+        // chains, but the *relative order of the surviving shards*
+        // must never change (points do not move), so replica sets
+        // stay warm across unrelated membership churn.
+        let ks = keys(2000);
+        let mut ring = HashRing::new();
+        for l in ["s0", "s1", "s2", "s3"] {
+            ring.insert(l).unwrap();
+        }
+        let before: Vec<Vec<String>> = ks
+            .iter()
+            .map(|k| {
+                ring.route_n(k, 2).iter().map(|s| s.to_string()).collect()
+            })
+            .collect();
+        ring.insert("s4").unwrap();
+        for (k, old) in ks.iter().zip(&before) {
+            let new = ring.route_n(k, 3);
+            let survivors: Vec<&str> = new
+                .iter()
+                .copied()
+                .filter(|l| *l != "s4")
+                .take(2)
+                .collect();
+            assert_eq!(survivors, old.iter().map(String::as_str)
+                                      .collect::<Vec<_>>(),
+                       "key {k}: surviving replica order changed on an \
+                        unrelated insert (old {old:?}, new {new:?})");
+        }
+    }
+
+    #[test]
+    fn unrelated_remove_keeps_other_replica_sets() {
+        // Removing a shard must only splice it out of the chains it was
+        // in; keys whose replica set never contained it are untouched.
+        let ks = keys(2000);
+        let mut ring = HashRing::new();
+        for l in ["s0", "s1", "s2", "s3", "s4"] {
+            ring.insert(l).unwrap();
+        }
+        let before: Vec<Vec<String>> = ks
+            .iter()
+            .map(|k| {
+                ring.route_n(k, 2).iter().map(|s| s.to_string()).collect()
+            })
+            .collect();
+        ring.remove("s4").unwrap();
+        let mut untouched = 0usize;
+        for (k, old) in ks.iter().zip(&before) {
+            let new = ring.route_n(k, 2);
+            if old.iter().all(|l| l != "s4") {
+                assert_eq!(new, old.as_slice(),
+                           "key {k}: replica set changed although s4 was \
+                            not in it");
+                untouched += 1;
+            } else {
+                assert!(new.iter().all(|l| *l != "s4"),
+                        "key {k} still lists the removed shard");
+            }
+        }
+        assert!(untouched > 500,
+                "almost every replica set contained s4 — ring is \
+                 degenerate ({untouched}/2000 untouched)");
     }
 
     #[test]

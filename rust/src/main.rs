@@ -17,7 +17,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use fast_esrnn::baselines::{all_baselines, Forecaster};
 use fast_esrnn::config::{Category, Frequency, NetworkConfig, TrainConfig,
@@ -25,7 +25,8 @@ use fast_esrnn::config::{Category, Frequency, NetworkConfig, TrainConfig,
 use fast_esrnn::coordinator::{checkpoint, EvalSplit, ModelState, Trainer};
 use fast_esrnn::data::{self, stats, Corpus, GenOptions};
 use fast_esrnn::forecast::{http, ForecastRequest, HttpServer, QueueFull,
-                           ServiceOptions, ServingStack, ShardedStack};
+                           RemoteOptions, RemoteShard, ServiceOptions,
+                           ServingStack, ShardedStack};
 use fast_esrnn::metrics::{mase, smape};
 use fast_esrnn::runtime::{backend_with_artifacts, Backend};
 use fast_esrnn::telemetry::promtext::{self, Sample};
@@ -268,8 +269,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("checkpoint-dir", "checkpoints", "checkpoint directory")
         .opt("workers", "2", "worker threads per frequency, per shard")
         .opt("shards", "1",
-             "serving shards; requests route by a consistent hash of the \
-              series id")
+             "local serving shards; requests route by a consistent hash of \
+              the series id (0 is allowed with --join: serve purely from \
+              remotes)")
+        .opt("join", "",
+             "comma list of remote shard addresses (host:port, each a \
+              running `serve --http` front-end) to splice into the ring \
+              alongside the local shards")
+        .opt("replicas", "1",
+             "replication factor R: every key maps to R distinct shards \
+              and reads are hedged at the rolling p95")
         .opt("queue-limit", "1024",
              "per-pool backpressure: queued requests beyond this are shed \
               with 429 (0 = unbounded)")
@@ -280,34 +289,52 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("scale", "200", "corpus scale for demo request data");
     let a = cli.parse(args)?;
     let freqs = parse_freqs(&a.get_str_list("freqs"))?;
-    let n_shards = a.get_usize("shards")?.max(1);
+    let joins: Vec<String> = a
+        .get("join")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    // With remotes to join, zero local shards is a valid topology (a
+    // pure router/front-end box); without them at least one local shard
+    // must exist.
+    let n_shards = if joins.is_empty() {
+        a.get_usize("shards")?.max(1)
+    } else {
+        a.get_usize("shards")?
+    };
     let opts = ServiceOptions {
         workers: a.get_usize("workers")?.max(1),
         queue_limit: a.get_usize("queue-limit")?,
         ..Default::default()
     };
 
-    // Load (or init) each frequency's weights once; every shard serves a
-    // clone of the same state.
+    // Load (or init) each frequency's weights once; every local shard
+    // serves a clone of the same state. A pure-remote topology loads
+    // nothing — the weights live on the peers.
     let mut states: Vec<(Frequency, ModelState)> = Vec::new();
-    for &freq in &freqs {
-        let state = match find_checkpoint(a.get("checkpoint-dir"), freq) {
-            Some(path) => {
-                let state =
-                    checkpoint::load_model_state_for(&path, freq.name())?;
-                println!("[{}] serving weights from {}", freq.name(),
-                         path.display());
-                state
-            }
-            None => {
-                // Fresh weights still exercise the full serving path.
-                let backend = backend_from_args(&a)?;
-                println!("[{}] no checkpoint in {} — serving fresh weights",
-                         freq.name(), a.get("checkpoint-dir"));
-                ModelState::init(backend.as_ref(), freq.name(), 42)?
-            }
-        };
-        states.push((freq, state));
+    if n_shards > 0 {
+        for &freq in &freqs {
+            let state = match find_checkpoint(a.get("checkpoint-dir"), freq) {
+                Some(path) => {
+                    let state =
+                        checkpoint::load_model_state_for(&path, freq.name())?;
+                    println!("[{}] serving weights from {}", freq.name(),
+                             path.display());
+                    state
+                }
+                None => {
+                    // Fresh weights still exercise the full serving path.
+                    let backend = backend_from_args(&a)?;
+                    println!("[{}] no checkpoint in {} — serving fresh \
+                              weights",
+                             freq.name(), a.get("checkpoint-dir"));
+                    ModelState::init(backend.as_ref(), freq.name(), 42)?
+                }
+            };
+            states.push((freq, state));
+        }
     }
 
     let backend_name = a.get("backend").to_string();
@@ -323,9 +350,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         sharded.add_shard(&format!("shard-{s}"), stack)?;
     }
+    for addr in &joins {
+        let remote = RemoteShard::connect(addr, RemoteOptions::default())
+            .with_context(|| format!("joining remote shard {addr}"))?;
+        sharded.add_remote_shard(&format!("remote-{addr}"), remote)?;
+        println!("joined remote shard {addr}");
+    }
+    let replicas = a.get_usize("replicas")?.max(1);
+    sharded.set_replicas(replicas);
     let sharded = Arc::new(sharded);
-    println!("{} shard(s) × {} worker(s)/frequency, queue limit {}",
-             n_shards, opts.workers, opts.queue_limit);
+    println!("{} local shard(s) + {} remote(s) × {} worker(s)/frequency, \
+              queue limit {}, replication R={}",
+             n_shards, joins.len(), opts.workers, opts.queue_limit,
+             replicas);
     let n_req = a.get_usize("requests")?;
     let scale = a.get_usize("scale")?;
 
@@ -529,6 +566,31 @@ fn render_top(addr: &str, samples: &[Sample],
         out,
         "connections {conns:.0} · http sheds {sheds:.0} · keep-alive \
          rotations {rotations:.0} · legacy-path requests {deprecated:.0}");
+    // Distributed footer, only when remote shards are in the ring.
+    // `promtext::value` matches one exact label set, and the remote
+    // families carry {shard, addr} — sum the samples by name instead.
+    let sum = |name: &str| -> f64 {
+        samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.value)
+            .sum()
+    };
+    let inflight = sum("fesrnn_remote_inflight");
+    let remotes = samples
+        .iter()
+        .filter(|s| s.name == "fesrnn_remote_inflight")
+        .count();
+    if remotes > 0 {
+        let _ = writeln!(
+            out,
+            "remotes {remotes} · in-flight {inflight:.0} · hedges \
+             {:.0} (wins {:.0}) · probe failures {:.0} · ejections {:.0}",
+            sum("fesrnn_remote_hedges_total"),
+            sum("fesrnn_remote_hedge_wins_total"),
+            sum("fesrnn_remote_probe_failures_total"),
+            sum("fesrnn_remote_ejections_total"));
+    }
     out
 }
 

@@ -1,0 +1,263 @@
+//! Multi-process distributed-serving suite — the contract under test:
+//!
+//! * N real `HttpServer` *processes* joined into one ring as
+//!   [`RemoteShard`]s serve real traffic through the replicated,
+//!   hedged dispatch path;
+//! * killing one shard process mid-traffic loses **nothing**: with
+//!   R = 2 every request still completes Ok-or-[`QueueFull`] (the PR 5
+//!   exact-accounting invariant, now across machines), and the health
+//!   prober ejects the dead shard — the ejection counter fires;
+//! * an ejected remote is readmitted after probation once its peer
+//!   comes back, with placement unchanged (ejection is a routing mask,
+//!   not a ring mutation).
+//!
+//! The shard processes are this same test binary re-executed with a
+//! libtest filter selecting [`dist_shard_server_child`], which serves
+//! until killed when `FESRNN_DIST_ADDR_FILE` names a file to publish
+//! its listen address in (and is a no-op in a normal test run).
+
+use std::process::{Child as OsChild, Command, Stdio};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use fast_esrnn::config::{Category, Frequency};
+use fast_esrnn::coordinator::ModelState;
+use fast_esrnn::forecast::{ForecastRequest, HttpOptions, HttpServer,
+                           QueueFull, RemoteOptions, RemoteShard,
+                           ServiceOptions, ServingStack, ShardClient,
+                           ShardedStack};
+use fast_esrnn::runtime::NativeBackend;
+
+const FREQ: Frequency = Frequency::Quarterly;
+const HORIZON: usize = 8;
+
+fn fresh_state() -> ModelState {
+    let backend = NativeBackend::new();
+    ModelState::init(&backend, FREQ.name(), 42).unwrap()
+}
+
+/// A positive synthetic history long enough for the quarterly C=72 cut.
+fn probe_values() -> Vec<f32> {
+    (0..80)
+        .map(|i| 100.0 + i as f32 * 0.5 + (i % 4) as f32 * 3.0)
+        .collect()
+}
+
+fn request_for(id: &str) -> ForecastRequest {
+    ForecastRequest {
+        id: id.to_string(),
+        values: probe_values(),
+        category: Category::Other,
+    }
+}
+
+/// Probe knobs tightened so ejection (2 failures × 50 ms) and
+/// readmission (2 successes) are observable in test time.
+fn fast_opts() -> RemoteOptions {
+    RemoteOptions {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(10),
+        pool_size: 4,
+        probe_interval: Duration::from_millis(50),
+        probe_timeout: Duration::from_millis(250),
+        eject_after: 2,
+        readmit_after: 2,
+    }
+}
+
+fn start_local_server(addr: &str) -> anyhow::Result<HttpServer> {
+    let mut stack = ServingStack::new();
+    stack.start_pool_native(FREQ, fresh_state(), ServiceOptions {
+        workers: 2,
+        queue_limit: 256,
+        ..Default::default()
+    })?;
+    let sharded = Arc::new(ShardedStack::single(Arc::new(stack))?);
+    HttpServer::start_with(sharded, addr, HttpOptions::default())
+}
+
+/// The shard-process entrypoint: a no-op under a normal `cargo test`
+/// run; when re-executed with `FESRNN_DIST_ADDR_FILE` set it starts a
+/// real single-shard HTTP server, publishes its address, and serves
+/// until the parent kills the process.
+#[test]
+fn dist_shard_server_child() {
+    let Ok(path) = std::env::var("FESRNN_DIST_ADDR_FILE") else {
+        return;
+    };
+    let server = start_local_server("127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    // Write to a sibling then rename: the parent polls the file and
+    // must never observe a half-written address.
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, &addr).unwrap();
+    std::fs::rename(&tmp, &path).unwrap();
+    loop {
+        thread::park(); // serve until killed
+    }
+}
+
+/// A spawned shard process, killed (not leaked) on every test exit path.
+struct ShardProc {
+    proc: OsChild,
+    addr: String,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        let _ = self.proc.kill();
+        let _ = self.proc.wait();
+    }
+}
+
+fn spawn_shard_process(tag: &str) -> ShardProc {
+    let exe = std::env::current_exe().unwrap();
+    let file = std::env::temp_dir()
+        .join(format!("fesrnn-dist-{}-{tag}.addr", std::process::id()));
+    let _ = std::fs::remove_file(&file);
+    let proc = Command::new(exe)
+        .args(["dist_shard_server_child", "--exact"])
+        .env("FESRNN_DIST_ADDR_FILE", &file)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&file) {
+            let s = s.trim().to_string();
+            if s.contains(':') {
+                break s;
+            }
+        }
+        assert!(Instant::now() < deadline,
+                "shard child `{tag}` never published an address");
+        thread::sleep(Duration::from_millis(20));
+    };
+    let _ = std::fs::remove_file(&file);
+    ShardProc { proc, addr }
+}
+
+fn wait_for<F: FnMut() -> bool>(what: &str, timeout: Duration, mut cond: F) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn kill_one_shard_mid_traffic_loses_nothing_and_ejects() {
+    let mut shards: Vec<ShardProc> =
+        (0..3).map(|i| spawn_shard_process(&format!("kill{i}"))).collect();
+
+    let sharded = Arc::new(ShardedStack::new());
+    for (i, sp) in shards.iter().enumerate() {
+        let remote = RemoteShard::connect(&sp.addr, fast_opts()).unwrap();
+        sharded.add_remote_shard(&format!("remote-{i}"), remote).unwrap();
+    }
+    sharded.set_replicas(2);
+
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 40;
+    const KILL_AT: usize = 8; // requests per client before the kill
+
+    let barrier = Arc::new(std::sync::Barrier::new(CLIENTS + 1));
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let sharded = Arc::clone(&sharded);
+        let barrier = Arc::clone(&barrier);
+        joins.push(thread::spawn(move || {
+            let (mut ok, mut shed) = (0u64, 0u64);
+            for i in 0..PER_CLIENT {
+                if i == KILL_AT {
+                    barrier.wait(); // all clients mid-stream → kill fires
+                }
+                let req = request_for(&format!("dist-{c}-{i}"));
+                match sharded.forecast(FREQ, req) {
+                    Ok(resp) => {
+                        assert_eq!(resp.forecast.len(), HORIZON);
+                        ok += 1;
+                    }
+                    // Backpressure is the one acceptable refusal — and
+                    // it is *accounted*, exactly like single-process
+                    // overload.
+                    Err(e) if e.is::<QueueFull>() => shed += 1,
+                    Err(e) => panic!(
+                        "request dist-{c}-{i} was lost (neither served \
+                         nor shed): {e:#}"),
+                }
+            }
+            (ok, shed)
+        }));
+    }
+
+    // Kill shard 0 while every client is mid-traffic. R = 2 means each
+    // key has a live replica; failover + hedging must absorb the loss.
+    // (The other two ShardProcs stay alive until the test ends.)
+    barrier.wait();
+    let _ = shards[0].proc.kill();
+    let _ = shards[0].proc.wait();
+
+    let (mut total_ok, mut total_shed) = (0u64, 0u64);
+    for j in joins {
+        let (ok, shed) = j.join().unwrap();
+        total_ok += ok;
+        total_shed += shed;
+    }
+    // The PR 5 exact-accounting invariant, across a process kill: every
+    // submitted request was served or explicitly shed — zero lost.
+    assert_eq!(total_ok + total_shed, (CLIENTS * PER_CLIENT) as u64);
+    assert!(total_ok > 0, "no request succeeded at all");
+
+    // The prober must notice the dead peer and fire the ejection
+    // counter (2 consecutive failures at 50 ms probes → well inside
+    // the deadline even on a loaded CI box).
+    wait_for("the dead shard's ejection", Duration::from_secs(10), || {
+        sharded
+            .shard_health()
+            .values()
+            .any(|h| !h.healthy && h.ejections >= 1)
+    });
+    let rendered = sharded.registry().render();
+    assert!(rendered.contains("fesrnn_remote_ejections_total"),
+            "ejection counter missing from the registry render");
+}
+
+#[test]
+fn ejected_remote_is_readmitted_after_probation() {
+    let server = start_local_server("127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let remote = RemoteShard::connect(&addr, fast_opts()).unwrap();
+    assert!(ShardClient::healthy(&remote), "fresh remote must be healthy");
+
+    // Peer goes away → consecutive probe failures → ejection.
+    server.shutdown();
+    drop(server);
+    wait_for("ejection of the dead peer", Duration::from_secs(10),
+             || !ShardClient::healthy(&remote));
+    let h = ShardClient::health(&remote);
+    assert_eq!(h.kind, "remote");
+    assert!(h.ejections >= 1, "ejection transition was not counted");
+    assert!(h.probe_failures >= 2, "consecutive failures not recorded");
+
+    // Peer comes back on the *same* address → probation (2 clean
+    // probes) → readmission. The listen port may sit in TIME_WAIT
+    // briefly after the shutdown, so the rebind retries.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let _server2 = loop {
+        match start_local_server(&addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                assert!(Instant::now() < deadline,
+                        "could not rebind {addr}: {e:#}");
+                thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    wait_for("readmission after probation", Duration::from_secs(10),
+             || ShardClient::healthy(&remote));
+    assert!(ShardClient::health(&remote).healthy);
+}

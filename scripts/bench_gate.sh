@@ -2,9 +2,9 @@
 # CI perf gate: run the quick benches, record the speedup trajectories,
 # and fail on regression.
 #
-#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json] [bench8_out.json]
+#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json] [bench8_out.json] [bench9_out.json]
 #
-# Five gates, all measured as same-machine ratios (stable across runner
+# Six gates, all measured as same-machine ratios (stable across runner
 # hardware generations in a way absolute numbers are not):
 #
 # * BENCH_3 — `micro_hotpath` (and `table5_speedup`) in quick mode:
@@ -27,6 +27,11 @@
 #   with a 10 Hz `GET /v1/metrics` scraper running vs without; fails
 #   when the p95 overhead ratio exceeds the cap in
 #   benches/bench8_baseline.json (a scrape must never stall serving).
+# * BENCH_9 — `http_throughput` hedged-reads section: forecast p99 on a
+#   3-shard ring with one 50 ms-delayed replica, hedged (R=2) vs
+#   unhedged (R=1); fails when the hedged p99 speedup drops more than
+#   10% below benches/bench9_baseline.json (hedging must keep rescuing
+#   the tail).
 #
 # Every cargo invocation is --locked: the committed Cargo.lock is the
 # only dependency resolution CI may use.
@@ -37,11 +42,13 @@ out4="${2:-BENCH_4.json}"
 out5="${3:-BENCH_5.json}"
 out6="${4:-BENCH_6.json}"
 out8="${5:-BENCH_8.json}"
+out9="${6:-BENCH_9.json}"
 baseline="benches/bench3_baseline.json"
 baseline4="benches/bench4_baseline.json"
 baseline5="benches/bench5_baseline.json"
 baseline6="benches/bench6_baseline.json"
 baseline8="benches/bench8_baseline.json"
+baseline9="benches/bench9_baseline.json"
 
 export FAST_ESRNN_QUICK=1
 FAST_ESRNN_BENCH_JSON="$out" FAST_ESRNN_BENCH6_JSON="$out6" \
@@ -49,6 +56,7 @@ FAST_ESRNN_BENCH_JSON="$out" FAST_ESRNN_BENCH6_JSON="$out6" \
 cargo bench --locked --bench table5_speedup
 FAST_ESRNN_BENCH_JSON="$out4" cargo bench --locked --bench serving_throughput
 FAST_ESRNN_BENCH_JSON="$out5" FAST_ESRNN_BENCH8_JSON="$out8" \
+    FAST_ESRNN_BENCH9_JSON="$out9" \
     cargo bench --locked --bench http_throughput
 
 python3 - "$out" "$baseline" <<'EOF'
@@ -214,4 +222,32 @@ if ratio > cap:
           f"(cap {cap:.2f}x) — the registry render is blocking serving")
     sys.exit(1)
 print("observability gate OK")
+EOF
+
+python3 - "$out9" "$baseline9" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+un, he = result["unhedged"], result["hedged"]
+got = result["hedge_p99_speedup"]
+want = baseline["min_hedge_p99_speedup"]
+floor = want * 0.9
+print(f"hedged-read p99 rescue ({result['delay_ms']:.0f} ms slow replica): "
+      f"{got:.2f}x (unhedged p99 {un['p99_ms']:.2f} ms -> hedged "
+      f"{he['p99_ms']:.2f} ms, {int(he['hedges'])} hedges, "
+      f"{int(he['hedge_wins'])} wins); "
+      f"baseline {want:.2f}x, gate floor {floor:.2f}x")
+print(f"  p50: {un['p50_ms']:.2f} -> {he['p50_ms']:.2f} ms   "
+      f"p95: {un['p95_ms']:.2f} -> {he['p95_ms']:.2f} ms   "
+      f"throughput: {un['rps']:.0f} -> {he['rps']:.0f} req/s")
+if got < floor:
+    print(f"FAIL: hedging stopped rescuing the tail: {got:.2f}x < "
+          f"{floor:.2f}x — one slow replica is a p99 cliff again")
+    sys.exit(1)
+print("hedging gate OK")
 EOF

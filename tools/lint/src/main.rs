@@ -6,15 +6,18 @@
 //! enforces the repo invariants as machine-checked rules:
 //!
 //! * **R1** — no `.unwrap()` / `.expect(` / `panic!` in the serving
-//!   request path (`forecast/{http,pool,shard,router}.rs`) outside
+//!   request path (`forecast/{http,pool,shard,router,remote}.rs`)
+//!   outside
 //!   `#[cfg(test)]`. Unwraps whose receiver is a lock-family call
 //!   (`lock()`, `read()`, `write()`, `wait(..)`, `join()`, …) are
 //!   exempt: propagating lock poisoning by crashing is deliberate
 //!   policy (a poisoned lock means a worker already panicked mid-update
 //!   and the shared state can no longer be trusted).
 //! * **R2** — no `thread::spawn` / `thread::scope` / `thread::Builder`
-//!   outside `runtime/native/pool.rs` and `forecast/{pool,http}.rs`:
-//!   every production thread belongs to one of the two pools.
+//!   outside `runtime/native/pool.rs` and
+//!   `forecast/{pool,http,remote}.rs`: every production thread belongs
+//!   to one of the pools (remote.rs owns the health prober and the
+//!   short-lived hedged-read replica threads).
 //! * **R3** — no allocation-prone calls (`Vec::new`, `vec!`, `to_vec`,
 //!   `clone`, `format!`, `Box::new`, `collect`) inside regions fenced
 //!   by `// lint:hot-path-begin` / `// lint:hot-path-end` — the static
@@ -394,11 +397,12 @@ fn push(out: &mut Vec<Violation>, scan: &Scan, rule: &'static str,
 
 // ------------------------------------------------------------- rules R1/R7
 
-const SERVING_FILES: [&str; 4] = [
+const SERVING_FILES: [&str; 5] = [
     "forecast/http.rs",
     "forecast/pool.rs",
     "forecast/shard.rs",
     "forecast/router.rs",
+    "forecast/remote.rs",
 ];
 
 const LOCK_FAMILY: [&str; 9] = [
@@ -505,8 +509,15 @@ fn rule_r7(scan: &Scan, out: &mut Vec<Violation>) {
 
 // ---------------------------------------------------------------- rule R2
 
-const SPAWN_FILES: [&str; 3] =
-    ["runtime/native/pool.rs", "forecast/pool.rs", "forecast/http.rs"];
+// `forecast/remote.rs` spawns the per-remote health prober and the
+// hedged-read replica threads — both deliberate, both joined/detached
+// by design.
+const SPAWN_FILES: [&str; 4] = [
+    "runtime/native/pool.rs",
+    "forecast/pool.rs",
+    "forecast/http.rs",
+    "forecast/remote.rs",
+];
 
 fn rule_r2(scan: &Scan, out: &mut Vec<Violation>) {
     if SPAWN_FILES.iter().any(|f| scan.path.ends_with(f)) {
