@@ -29,21 +29,33 @@
 //! to the hedge delay. The gate requires hedging to beat unhedged p99
 //! by the committed factor.
 //!
+//! A fifth section measures **BENCH_10 — stateful series routes**: the
+//! observe throughput of `POST /v1/series/{id}/observe` (a µs-scale ES
+//! update, no RNN), the p95 of `GET /v1/series/{id}/forecast` on a
+//! pure read load (every read after the first is a forecast-cache
+//! hit), and the same read p95 under a 50% observe mix (every write
+//! invalidates the series' cached forecast, so half the reads
+//! recompute). The gate caps how much the write mix may inflate the
+//! read tail — live updates must not make stateful reads expensive.
+//!
 //! Feeds the CI perf gate (`scripts/bench_gate.sh`): emitted as
 //! BENCH_5.json when `FAST_ESRNN_BENCH_JSON=<path>` is set (and
 //! BENCH_8.json via `FAST_ESRNN_BENCH8_JSON=<path>`, BENCH_9.json via
-//! `FAST_ESRNN_BENCH9_JSON=<path>`); the gate fails when the keep-alive
-//! speedup drops below the committed floor
+//! `FAST_ESRNN_BENCH9_JSON=<path>`, BENCH_10.json via
+//! `FAST_ESRNN_BENCH10_JSON=<path>`); the gate fails when the
+//! keep-alive speedup drops below the committed floor
 //! (`benches/bench5_baseline.json`), sharding blows up tail latency,
-//! scraping costs more than `benches/bench8_baseline.json` allows, or
-//! hedging stops rescuing the tail
-//! (`benches/bench9_baseline.json`).
+//! scraping costs more than `benches/bench8_baseline.json` allows,
+//! hedging stops rescuing the tail (`benches/bench9_baseline.json`),
+//! or the observe mix inflates the stateful read p95 past
+//! `benches/bench10_baseline.json`.
 //!
 //! Env:
-//!   FAST_ESRNN_QUICK=1        — CI mode: fewer requests
-//!   FAST_ESRNN_BENCH_JSON=p   — write the BENCH_5 summary JSON to p
-//!   FAST_ESRNN_BENCH8_JSON=p  — write the BENCH_8 summary JSON to p
-//!   FAST_ESRNN_BENCH9_JSON=p  — write the BENCH_9 summary JSON to p
+//!   FAST_ESRNN_QUICK=1         — CI mode: fewer requests
+//!   FAST_ESRNN_BENCH_JSON=p    — write the BENCH_5 summary JSON to p
+//!   FAST_ESRNN_BENCH8_JSON=p   — write the BENCH_8 summary JSON to p
+//!   FAST_ESRNN_BENCH9_JSON=p   — write the BENCH_9 summary JSON to p
+//!   FAST_ESRNN_BENCH10_JSON=p  — write the BENCH_10 summary JSON to p
 //!
 //! Run with: `cargo bench --bench http_throughput`
 
@@ -65,6 +77,8 @@ use fast_esrnn::util::json::Json;
 
 const FREQ: Frequency = Frequency::Quarterly;
 const CLIENTS: usize = 4;
+/// BENCH_10: stateful series owned by each client thread.
+const B10_SERIES: usize = 8;
 
 fn fresh_state() -> ModelState {
     let backend = NativeBackend::new();
@@ -95,6 +109,7 @@ fn start_server(shards: usize, workers: usize)
             batch_window: Duration::from_millis(1),
             max_batch: 8,
             queue_limit: 0, // the bench measures throughput, not shedding
+            ..Default::default()
         })?;
         sharded.add_shard(&format!("shard-{s}"), stack)?;
     }
@@ -187,6 +202,7 @@ fn start_slow_replica_ring(delay: Duration)
         batch_window: Duration::from_millis(1),
         max_batch: 8,
         queue_limit: 0,
+        ..Default::default()
     };
     let sharded = ShardedStack::new();
     for s in 0..2 {
@@ -277,6 +293,95 @@ fn run_load(addr: &str, keep_alive: bool, per: usize,
     lat.sort_by(|a, b| a.total_cmp(b));
     let p95 = lat[(lat.len() * 95 / 100).min(lat.len() - 1)];
     ((CLIENTS * per) as f64 / secs, p95)
+}
+
+/// Seed every BENCH_10 series with a first observe batch: the seed is
+/// write-path work too, but the rings must exist before the read
+/// phases can forecast.
+fn seed_series(addr: &str, tag: &str) {
+    let mut client = HttpClient::connect(addr).unwrap();
+    let vals: Vec<f32> =
+        (0..16).map(|i| 100.0 + (i % 4) as f32 * 3.0).collect();
+    let body =
+        Json::obj(vec![("values", Json::arr_f32(&vals))]).to_string();
+    for c in 0..CLIENTS {
+        for s in 0..B10_SERIES {
+            let reply = client
+                .request("POST",
+                         &format!("/v1/series/b10-{tag}-{c}-{s}/observe"),
+                         Some(&body))
+                .unwrap();
+            assert_eq!(reply.code, 200, "seed observe failed: {}",
+                       reply.body);
+        }
+    }
+}
+
+/// BENCH_10 load over the stateful series routes: `CLIENTS` threads ×
+/// `per` ops, each thread cycling through its own `B10_SERIES`
+/// pre-seeded series. `observe_every == 0` is a pure forecast-read
+/// phase; `k > 0` makes every k-th op a `POST .../observe` batch
+/// (`k == 1` → all writes, `k == 2` → the 50% read/write mix).
+/// Returns (ops/s, observes issued, forecast p95 secs — 0.0 when the
+/// phase had no reads).
+fn run_series_load(addr: &str, tag: &str, per: usize,
+                   observe_every: usize) -> (f64, u64, f64) {
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(CLIENTS);
+    for c in 0..CLIENTS {
+        let addr = addr.to_string();
+        let tag = tag.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr).unwrap();
+            let mut lat = Vec::with_capacity(per);
+            let mut observes = 0u64;
+            for i in 0..per {
+                let id = format!("b10-{tag}-{c}-{}", i % B10_SERIES);
+                if observe_every > 0 && i % observe_every == 0 {
+                    let vals: Vec<f32> = (0..4)
+                        .map(|k| 100.0 + ((i + k) % 4) as f32 * 3.0)
+                        .collect();
+                    let body =
+                        Json::obj(vec![("values", Json::arr_f32(&vals))])
+                            .to_string();
+                    let reply = client
+                        .request("POST",
+                                 &format!("/v1/series/{id}/observe"),
+                                 Some(&body))
+                        .unwrap();
+                    assert_eq!(reply.code, 200, "observe failed: {}",
+                               reply.body);
+                    observes += 1;
+                } else {
+                    let t = Instant::now();
+                    let reply = client
+                        .request("GET",
+                                 &format!("/v1/series/{id}/forecast"),
+                                 None)
+                        .unwrap();
+                    lat.push(t.elapsed().as_secs_f64());
+                    assert_eq!(reply.code, 200,
+                               "stateful forecast failed: {}", reply.body);
+                }
+            }
+            (lat, observes)
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::with_capacity(CLIENTS * per);
+    let mut observes = 0u64;
+    for j in joins {
+        let (l, o) = j.join().expect("client thread panicked");
+        lat.extend(l);
+        observes += o;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let p95 = if lat.is_empty() {
+        0.0
+    } else {
+        lat[(lat.len() * 95 / 100).min(lat.len() - 1)]
+    };
+    ((CLIENTS * per) as f64 / secs, observes, p95)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -488,6 +593,61 @@ fn main() -> anyhow::Result<()> {
             ("unhedged", row(un_rps, un_p50, un_p95, un_p99)),
             ("hedged", hedged),
             ("hedge_p99_speedup", Json::num(hedge_speedup)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+
+    // ---- BENCH_10: stateful series routes — observe throughput, and
+    // what a 50% write mix does to the forecast-read tail. Observes
+    // bypass the batching queue (µs-scale ES updates) but invalidate
+    // the per-series forecast cache, so mixed reads recompute where
+    // pure reads hit the cache.
+    let b10_per = if quick { 300 } else { 1200 };
+    println!("== stateful series routes: {CLIENTS} clients × {b10_per} \
+              ops over {B10_SERIES} series each ==");
+    let (server, _stack) = start_server(2, 1)?;
+    let addr = server.addr().to_string();
+    seed_series(&addr, "s");
+    let (obs_rps, obs_n, _) = run_series_load(&addr, "s", b10_per, 1);
+    let (pure_rps, _, pure_p95) = run_series_load(&addr, "s", b10_per, 0);
+    let (mix_rps, mix_obs, mix_p95) =
+        run_series_load(&addr, "s", b10_per, 2);
+    drop(server);
+    let mixed_ratio = mix_p95 / pure_p95.max(1e-9);
+    let observe_rps_ratio = obs_rps / pure_rps.max(1e-9);
+    println!("{:<22} {:>10.0} obs/s", "observe (all writes)", obs_rps);
+    println!("{:<22} {:>10.0} req/s   p95 {:>8.2}ms",
+             "forecast (pure reads)", pure_rps, pure_p95 * 1e3);
+    println!("{:<22} {:>10.0} ops/s   p95 {:>8.2}ms   ({mix_obs} \
+              observes)",
+             "forecast (50% mix)", mix_rps, mix_p95 * 1e3);
+    println!("mixed/pure read p95 ratio: {mixed_ratio:.2}   \
+              observe/read rps ratio: {observe_rps_ratio:.2}\n");
+
+    if let Ok(path) = std::env::var("FAST_ESRNN_BENCH10_JSON") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("stateful_series_routes")),
+            ("quick", Json::Bool(quick)),
+            ("threads", Json::num(threads as f64)),
+            ("series", Json::num((CLIENTS * B10_SERIES) as f64)),
+            ("observe", Json::obj(vec![
+                ("ops", Json::num(obs_n as f64)),
+                ("rps", Json::num(obs_rps)),
+            ])),
+            ("forecast_pure", Json::obj(vec![
+                ("ops", Json::num((CLIENTS * b10_per) as f64)),
+                ("rps", Json::num(pure_rps)),
+                ("p95_ms", Json::num(pure_p95 * 1e3)),
+            ])),
+            ("forecast_mixed", Json::obj(vec![
+                ("ops", Json::num((CLIENTS * b10_per) as f64)),
+                ("observes", Json::num(mix_obs as f64)),
+                ("rps", Json::num(mix_rps)),
+                ("p95_ms", Json::num(mix_p95 * 1e3)),
+            ])),
+            ("mixed_p95_ratio", Json::num(mixed_ratio)),
+            ("observe_rps_ratio", Json::num(observe_rps_ratio)),
         ]);
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("wrote {path}");

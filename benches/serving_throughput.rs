@@ -39,6 +39,7 @@ fn run_load(state: &ModelState, candidates: &[Series], workers: usize,
             batch_window: Duration::from_millis(1),
             max_batch: 8,
             queue_limit: 0,
+            ..Default::default()
         },
     )?;
     let per = n_req / CLIENTS;

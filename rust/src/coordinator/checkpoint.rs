@@ -93,6 +93,18 @@ pub fn load_model_state_for(path: impl AsRef<Path>, freq: &str)
     Ok(state)
 }
 
+/// The per-series ES-state sidecar path for a checkpoint: the same file
+/// name with `.state` appended (`ckpt.bin` → `ckpt.bin.state`), so the
+/// pair travels together through copies/renames that keep extensions.
+/// Written by `ServingStack::export_state_sidecar`, merged on
+/// `reload_checkpoint` when present; a checkpoint without one reloads
+/// exactly as before.
+pub fn state_sidecar_path(ckpt: &Path) -> std::path::PathBuf {
+    let mut os = ckpt.as_os_str().to_os_string();
+    os.push(".state");
+    std::path::PathBuf::from(os)
+}
+
 // ------------------------------ JSON ------------------------------
 
 /// Serialize (state, store) to the JSON format.

@@ -1,11 +1,24 @@
-//! Corpus persistence: a simple CSV-ish line format
-//! (`id,freq,category,v1,v2,...`) so generated corpora can be saved,
-//! inspected and re-loaded without regeneration.
+//! Corpus persistence.
+//!
+//! Two formats live here:
+//!
+//! * The repo's own line format (`id,freq,category,v1,v2,...`) via
+//!   [`save`]/[`load`] — compact, self-describing, used for generated
+//!   corpora.
+//! * The **real M4 competition layout** via [`M4CsvReader`]: one CSV
+//!   per frequency (`Monthly-train.csv`, `Hourly-test.csv`, …) with a
+//!   `V1,V2,...` header, a quoted series id in the first cell, and
+//!   ragged series lengths padded with trailing empty cells. At M4
+//!   scale (100k series, ~400 MB of monthly training data) whole-file
+//!   `Vec` materialization is the wrong shape — the reader streams one
+//!   [`Series`] at a time, so callers can feed a store or a pool
+//!   without ever holding the corpus in memory.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Category, Frequency};
 use crate::data::types::{Corpus, Series};
@@ -52,6 +65,182 @@ pub fn load(path: impl AsRef<Path>) -> Result<Corpus> {
     Ok(Corpus::new(series))
 }
 
+/// Streaming reader over one M4-layout CSV: yields each row as a
+/// [`Series`] without materializing the file.
+///
+/// Layout rules enforced (each violation is a descriptive error naming
+/// the source and 1-based line):
+///
+/// * A header row (`V1,V2,...`) fixes the column budget; a data row
+///   with more cells than the header is **ragged**.
+/// * The first cell is the series id (M4 quotes it — quotes are
+///   stripped); a repeated id is a **duplicate-id** error, caught
+///   streaming via an id set (bounded: ids only, never values).
+/// * Values run until the first empty cell; a non-empty cell *after*
+///   an empty one is a hole — also reported as ragged, since
+///   downstream ES seeding assumes contiguous history.
+/// * A row with no values at all is an error.
+///
+/// M4 CSVs carry no category column (that lives in `M4-info.csv`), so
+/// every yielded series gets [`Category::Other`].
+pub struct M4CsvReader<R> {
+    lines: Lines<R>,
+    /// Display name for errors (path, or a caller-supplied tag).
+    source: String,
+    freq: Frequency,
+    /// Cell budget fixed by the header row.
+    columns: usize,
+    /// 1-based line of the most recently read row.
+    line: usize,
+    seen: HashSet<String>,
+}
+
+impl M4CsvReader<BufReader<std::fs::File>> {
+    /// Open an M4 CSV, inferring the frequency from the file name
+    /// (`Monthly-train.csv` → [`Frequency::Monthly`] — the M4
+    /// convention of `<Frequency>-<split>.csv`).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow!("{}: not a named file", path.display()))?;
+        let freq_name = stem.split('-').next().unwrap_or(stem);
+        let freq = Frequency::parse(freq_name).with_context(|| {
+            format!("{}: cannot infer the frequency from the file name \
+                     (expected `<Frequency>-<split>.csv`, e.g. \
+                     Monthly-train.csv)", path.display())
+        })?;
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::from_reader(BufReader::new(f), freq,
+                          path.display().to_string())
+    }
+}
+
+impl<R: BufRead> M4CsvReader<R> {
+    /// Wrap an already-open reader (tests, decompression pipes). Reads
+    /// and validates the header row immediately.
+    pub fn from_reader(reader: R, freq: Frequency, source: String)
+                       -> Result<Self> {
+        let mut lines = reader.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow!("{source}: empty file — expected a \
+                                    V1,V2,... header row"))?
+            .with_context(|| format!("{source}: reading the header row"))?;
+        let cells: Vec<&str> = split_cells(&header).collect();
+        // The id column header is `V1` in the official files; accept
+        // anything non-numeric so hand-rolled fixtures work too, but
+        // insist on at least one value column.
+        if cells.len() < 2 {
+            bail!("{source}: header row has {} column(s) — an M4 file \
+                   needs an id column plus value columns", cells.len());
+        }
+        Ok(Self {
+            lines,
+            source,
+            freq,
+            columns: cells.len(),
+            line: 1,
+            seen: HashSet::new(),
+        })
+    }
+
+    pub fn freq(&self) -> Frequency {
+        self.freq
+    }
+
+    /// Parse one data row into a [`Series`].
+    fn parse_row(&mut self, row: &str) -> Result<Series> {
+        let (source, line) = (&self.source, self.line);
+        let mut cells = split_cells(row);
+        let id = cells
+            .next()
+            .filter(|c| !c.is_empty())
+            .ok_or_else(|| anyhow!("{source} line {line}: row has no \
+                                    series id"))?
+            .to_string();
+        if !self.seen.insert(id.clone()) {
+            bail!("{source} line {line}: duplicate series id `{id}` — \
+                   each M4 row must be a distinct series");
+        }
+        let mut values = Vec::new();
+        let mut padding = false;
+        let mut cell_count = 1usize;
+        for cell in cells {
+            cell_count += 1;
+            if cell_count > self.columns {
+                bail!("{source} line {line}: series `{id}` has {cell_count} \
+                       cells but the header declares {} columns — ragged \
+                       row", self.columns);
+            }
+            if cell.is_empty() {
+                padding = true;
+                continue;
+            }
+            if padding {
+                bail!("{source} line {line}: series `{id}` has a value \
+                       after an empty cell — ragged row (history must be \
+                       contiguous)");
+            }
+            let v: f32 = cell.parse().map_err(|_| {
+                anyhow!("{source} line {line}: series `{id}` has a \
+                         non-numeric value `{cell}`")
+            })?;
+            values.push(v);
+        }
+        if values.is_empty() {
+            bail!("{source} line {line}: series `{id}` has no values");
+        }
+        Ok(Series {
+            id,
+            freq: self.freq,
+            category: Category::Other,
+            values,
+        })
+    }
+}
+
+impl<R: BufRead> Iterator for M4CsvReader<R> {
+    type Item = Result<Series>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            let row = match self.lines.next()? {
+                Ok(r) => r,
+                Err(e) => {
+                    return Some(Err(anyhow::Error::new(e).context(format!(
+                        "{} line {}: read error", self.source,
+                        self.line + 1))));
+                }
+            };
+            self.line += 1;
+            if row.trim().is_empty() {
+                continue;
+            }
+            return Some(self.parse_row(&row));
+        }
+    }
+}
+
+/// Split one CSV row into cells, trimming the CR of CRLF files and the
+/// double quotes M4 wraps ids (and sometimes values) in. M4 cells never
+/// contain embedded commas, so a plain split is exact here.
+fn split_cells(row: &str) -> impl Iterator<Item = &str> {
+    row.trim_end_matches('\r')
+        .split(',')
+        .map(|c| c.trim().trim_matches('"'))
+}
+
+/// Convenience for small files: stream [`M4CsvReader::open`] into a
+/// [`Corpus`]. At full M4 scale prefer iterating the reader directly.
+pub fn load_m4(path: impl AsRef<Path>) -> Result<Corpus> {
+    let series: Vec<Series> =
+        M4CsvReader::open(path)?.collect::<Result<_>>()?;
+    Ok(Corpus::new(series))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +281,76 @@ mod tests {
         assert!(load(&path).is_err());
         std::fs::write(&path, "id,blah,Micro,1.0\n").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn m4_reader_streams_the_competition_layout() {
+        // Quoted ids, CRLF line endings, ragged lengths padded with
+        // trailing empty cells — the shape of the official files.
+        let csv = "\"V1\",\"V2\",\"V3\",\"V4\",\"V5\"\r\n\
+                   \"Q1\",1.0,2.0,3.0,4.0\r\n\
+                   \r\n\
+                   \"Q2\",5.5,6.5,,\r\n";
+        let mut r = M4CsvReader::from_reader(
+            std::io::Cursor::new(csv), Frequency::Quarterly,
+            "test".to_string())
+            .unwrap();
+        assert_eq!(r.freq(), Frequency::Quarterly);
+        let a = r.next().unwrap().unwrap();
+        assert_eq!(a.id, "Q1");
+        assert_eq!(a.values, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.freq, Frequency::Quarterly);
+        assert_eq!(a.category, Category::Other);
+        let b = r.next().unwrap().unwrap();
+        assert_eq!(b.id, "Q2");
+        assert_eq!(b.values, vec![5.5, 6.5]);
+        assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn m4_reader_rejects_ragged_and_duplicate_rows() {
+        let open = |csv: &str| {
+            M4CsvReader::from_reader(
+                std::io::Cursor::new(csv.to_string()), Frequency::Monthly,
+                "m.csv".to_string())
+                .unwrap()
+        };
+        // Duplicate id, named with its line.
+        let mut r = open("V1,V2,V3\nM1,1,2\nM1,3,4\n");
+        assert!(r.next().unwrap().is_ok());
+        let e = format!("{:#}", r.next().unwrap().unwrap_err());
+        assert!(e.contains("duplicate series id `M1`")
+                && e.contains("line 3"), "{e}");
+        // More cells than the header declares.
+        let mut r = open("V1,V2,V3\nM3,1,2,3\n");
+        let e = format!("{:#}", r.next().unwrap().unwrap_err());
+        assert!(e.contains("ragged"), "{e}");
+        // A value after an empty cell (a hole in the history).
+        let mut r = open("V1,V2,V3,V4\nM4,1,,2\n");
+        let e = format!("{:#}", r.next().unwrap().unwrap_err());
+        assert!(e.contains("ragged") && e.contains("empty cell"), "{e}");
+        // Non-numeric value / empty series.
+        let mut r = open("V1,V2\nM5,abc\n");
+        assert!(r.next().unwrap().is_err());
+        let mut r = open("V1,V2\nM6,,\n");
+        let e = format!("{:#}", r.next().unwrap().unwrap_err());
+        assert!(e.contains("no values"), "{e}");
+    }
+
+    #[test]
+    fn m4_open_infers_frequency_from_the_file_name() {
+        let dir = std::env::temp_dir().join("fast_esrnn_m4_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("Yearly-train.csv");
+        std::fs::write(&path, "V1,V2,V3\nY1,10,20\nY2,30,\n").unwrap();
+        let corpus = load_m4(&path).unwrap();
+        assert_eq!(corpus.len(), 2);
+        assert_eq!(corpus.series[0].freq, Frequency::Yearly);
+        assert_eq!(corpus.series[1].values, vec![30.0]);
+        // A name that encodes no frequency is a descriptive error.
+        let bad = dir.join("notes.csv");
+        std::fs::write(&bad, "V1,V2\nY1,1\n").unwrap();
+        let e = format!("{:#}", load_m4(&bad).unwrap_err());
+        assert!(e.contains("cannot infer the frequency"), "{e}");
     }
 }

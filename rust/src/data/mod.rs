@@ -8,6 +8,7 @@ pub mod stats;
 pub mod synthetic;
 pub mod types;
 
+pub use csv::{load_m4, M4CsvReader};
 pub use split::{split_corpus, split_series, SplitSeries, SplitSet};
 pub use synthetic::{generate, GenOptions};
 pub use types::{Corpus, Series};

@@ -1,0 +1,422 @@
+//! Typed wire DTOs for the `/v1` serving API.
+//!
+//! One definition per request/response shape, shared by the HTTP server
+//! handlers, `RemoteShard` (the internal client), the CLI demo, benches
+//! and integration tests — replacing the hand-rolled `Json::obj` /
+//! `doc.get(..)` sites that had drifted apart since PR 4. Each DTO owns
+//! both directions (`to_json` / `from_json`), so a shape change is one
+//! edit and every producer/consumer moves together.
+//!
+//! Field names here ARE the wire contract: `util::json` serializes
+//! objects in sorted key order, so `to_json(..).to_string()` is
+//! byte-deterministic — which the PR-8 alias conformance checks
+//! (byte-identical legacy vs `/v1` payloads) rely on.
+
+use std::fmt;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Category, Frequency};
+use crate::util::json::Json;
+
+/// `POST /v1/series/{id}/forecast` (and the deprecated `/v1/forecast`
+/// alias) request body. `id` is optional only on the alias — the
+/// resource route carries it in the path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastRequest {
+    /// Omitted when the server serves a single frequency.
+    pub freq: Option<Frequency>,
+    pub id: Option<String>,
+    pub category: Option<Category>,
+    pub values: Vec<f32>,
+}
+
+impl ForecastRequest {
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(f) = self.freq {
+            fields.push(("freq", Json::str(f.name())));
+        }
+        if let Some(id) = &self.id {
+            fields.push(("id", Json::str(id.as_str())));
+        }
+        if let Some(c) = self.category {
+            fields.push(("category", Json::str(c.name())));
+        }
+        fields.push(("values", Json::arr_f32(&self.values)));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        Ok(ForecastRequest {
+            freq: match doc.opt("freq") {
+                Some(j) => Some(Frequency::parse(j.as_str()?)?),
+                None => None,
+            },
+            id: match doc.opt("id") {
+                Some(j) => Some(j.as_str()?.to_string()),
+                None => None,
+            },
+            category: match doc.opt("category") {
+                Some(j) => Some(Category::parse(j.as_str()?)?),
+                None => None,
+            },
+            values: doc.get("values")?.as_f32_vec()?,
+        })
+    }
+}
+
+/// Forecast response body: `{id, freq, generation, forecast}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastResponse {
+    pub id: String,
+    pub freq: Frequency,
+    pub generation: u64,
+    pub forecast: Vec<f32>,
+}
+
+impl ForecastResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.as_str())),
+            ("freq", Json::str(self.freq.name())),
+            ("generation", Json::num(self.generation as f64)),
+            ("forecast", Json::arr_f32(&self.forecast)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        Ok(ForecastResponse {
+            id: doc.get("id")?.as_str()?.to_string(),
+            freq: Frequency::parse(doc.get("freq")?.as_str()?)?,
+            generation: doc.get("generation")?.as_f64()? as u64,
+            forecast: doc.get("forecast")?.as_f32_vec()?,
+        })
+    }
+}
+
+/// `POST /v1/series/{id}/observe` request body. `t0`, when present, is
+/// the absolute time index of `values[0]` — the server rejects
+/// observations that would rewind (`stale_observation`) or skip ahead
+/// of the stored state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObserveRequest {
+    pub freq: Option<Frequency>,
+    pub values: Vec<f32>,
+    pub t0: Option<u64>,
+}
+
+impl ObserveRequest {
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(f) = self.freq {
+            fields.push(("freq", Json::str(f.name())));
+        }
+        if let Some(t0) = self.t0 {
+            fields.push(("t0", Json::num(t0 as f64)));
+        }
+        fields.push(("values", Json::arr_f32(&self.values)));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        Ok(ObserveRequest {
+            freq: match doc.opt("freq") {
+                Some(j) => Some(Frequency::parse(j.as_str()?)?),
+                None => None,
+            },
+            values: doc.get("values")?.as_f32_vec()?,
+            t0: match doc.opt("t0") {
+                Some(j) => Some(j.as_f64()? as u64),
+                None => None,
+            },
+        })
+    }
+}
+
+/// Observe response body:
+/// `{id, freq, observed, generation, new_series}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObserveResponse {
+    pub id: String,
+    pub freq: Frequency,
+    /// Total observations consumed for this series so far.
+    pub observed: u64,
+    pub generation: u64,
+    /// True when this observe seeded the series' state.
+    pub new_series: bool,
+}
+
+impl ObserveResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.as_str())),
+            ("freq", Json::str(self.freq.name())),
+            ("observed", Json::num(self.observed as f64)),
+            ("generation", Json::num(self.generation as f64)),
+            ("new_series", Json::Bool(self.new_series)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        Ok(ObserveResponse {
+            id: doc.get("id")?.as_str()?.to_string(),
+            freq: Frequency::parse(doc.get("freq")?.as_str()?)?,
+            observed: doc.get("observed")?.as_f64()? as u64,
+            generation: doc.get("generation")?.as_f64()? as u64,
+            new_series: doc.get("new_series")?.as_bool()?,
+        })
+    }
+}
+
+/// `GET /v1/series/{id}/state` response body — the live ES state, with
+/// the seasonal rings in *phase order* (`seasonality[p]` is the value
+/// for time indices `t ≡ p (mod S)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesState {
+    pub id: String,
+    pub freq: Frequency,
+    pub observed: u64,
+    pub generation: u64,
+    pub level: f32,
+    pub seasonality: Vec<f32>,
+    /// Empty unless the frequency is dual-seasonal (hourly).
+    pub seasonality2: Vec<f32>,
+}
+
+impl SeriesState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.as_str())),
+            ("freq", Json::str(self.freq.name())),
+            ("observed", Json::num(self.observed as f64)),
+            ("generation", Json::num(self.generation as f64)),
+            ("level", Json::num(self.level as f64)),
+            ("seasonality", Json::arr_f32(&self.seasonality)),
+            ("seasonality2", Json::arr_f32(&self.seasonality2)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        Ok(SeriesState {
+            id: doc.get("id")?.as_str()?.to_string(),
+            freq: Frequency::parse(doc.get("freq")?.as_str()?)?,
+            observed: doc.get("observed")?.as_f64()? as u64,
+            generation: doc.get("generation")?.as_f64()? as u64,
+            level: doc.get("level")?.as_f32()?,
+            seasonality: doc.get("seasonality")?.as_f32_vec()?,
+            seasonality2: doc.get("seasonality2")?.as_f32_vec()?,
+        })
+    }
+}
+
+/// `POST /v1/reload` request body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReloadRequest {
+    pub freq: Option<Frequency>,
+    pub checkpoint: String,
+}
+
+impl ReloadRequest {
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(f) = self.freq {
+            fields.push(("freq", Json::str(f.name())));
+        }
+        fields.push(("checkpoint", Json::str(self.checkpoint.as_str())));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        Ok(ReloadRequest {
+            freq: match doc.opt("freq") {
+                Some(j) => Some(Frequency::parse(j.as_str()?)?),
+                None => None,
+            },
+            checkpoint: doc.get("checkpoint")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// The unified `/v1` error envelope:
+/// `{"error": {"code", "message", "retry_after_ms"?}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorEnvelope {
+    pub code: String,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ErrorEnvelope {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::str(self.code.as_str())),
+            ("message", Json::str(self.message.as_str())),
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            fields.push(("retry_after_ms", Json::num(ms as f64)));
+        }
+        Json::obj(vec![("error", Json::obj(fields))])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let err = doc.get("error").context("error envelope")?;
+        Ok(ErrorEnvelope {
+            code: err.get("code")?.as_str()?.to_string(),
+            message: err.get("message")?.as_str()?.to_string(),
+            retry_after_ms: match err.opt("retry_after_ms") {
+                Some(j) => Some(j.as_f64()? as u64),
+                None => None,
+            },
+        })
+    }
+}
+
+/// Typed service error: the requested series has no stored state.
+/// Surfaces as HTTP 404 with envelope code `unknown_series`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnknownSeries {
+    pub id: String,
+}
+
+impl fmt::Display for UnknownSeries {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "series '{}' has no stored state — POST an observe \
+                   first", self.id)
+    }
+}
+
+impl std::error::Error for UnknownSeries {}
+
+/// Typed service error: the observation batch starts at or before a
+/// time index the series has already consumed. Surfaces as HTTP 409
+/// with envelope code `stale_observation`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaleObservation {
+    /// Observations already consumed (the next accepted `t0`).
+    pub observed: u64,
+    /// The rejected batch's start index.
+    pub t0: u64,
+}
+
+impl fmt::Display for StaleObservation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "observation batch starts at t0={} but the series has \
+                   already consumed {} observations", self.t0, self.observed)
+    }
+}
+
+impl std::error::Error for StaleObservation {}
+
+/// Typed service error: the observation batch starts *past* the stored
+/// progress — accepting it would silently skip the gap. Surfaces as
+/// HTTP 400 (`bad_request`): unlike a stale replay, a gap is a client
+/// bug, not a retryable race.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObservationGap {
+    /// Observations already consumed (the next accepted `t0`).
+    pub observed: u64,
+    /// The rejected batch's start index.
+    pub t0: u64,
+}
+
+impl fmt::Display for ObservationGap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "observation batch starts at t0={} but only {} \
+                   observations are stored — refusing to skip the gap",
+               self.t0, self.observed)
+    }
+}
+
+impl std::error::Error for ObservationGap {}
+
+/// Validate an observe batch's `t0` against the stored progress.
+/// `Ok(())` means the batch appends cleanly at `observed`.
+pub fn check_t0(t0: Option<u64>, observed: u64) -> Result<()> {
+    match t0 {
+        None => Ok(()),
+        Some(t) if t == observed => Ok(()),
+        Some(t) if t < observed => {
+            Err(anyhow::Error::new(StaleObservation { observed, t0: t }))
+        }
+        Some(t) => {
+            Err(anyhow::Error::new(ObservationGap { observed, t0: t }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forecast_request_round_trips() {
+        let req = ForecastRequest {
+            freq: Some(Frequency::Quarterly),
+            id: Some("q-1".into()),
+            category: Some(Category::Macro),
+            values: vec![1.0, 2.5, 3.0],
+        };
+        let back =
+            ForecastRequest::from_json(&req.to_json()).expect("round trip");
+        assert_eq!(req, back);
+        // Optional fields really are optional on the wire.
+        let min = ForecastRequest {
+            freq: None,
+            id: None,
+            category: None,
+            values: vec![9.0],
+        };
+        let j = min.to_json();
+        assert!(j.opt("freq").is_none() && j.opt("id").is_none());
+        assert_eq!(ForecastRequest::from_json(&j).expect("min"), min);
+    }
+
+    #[test]
+    fn observe_and_state_round_trip() {
+        let obs = ObserveRequest {
+            freq: Some(Frequency::Monthly),
+            values: vec![5.0; 4],
+            t0: Some(120),
+        };
+        assert_eq!(ObserveRequest::from_json(&obs.to_json()).expect("obs"),
+                   obs);
+        let st = SeriesState {
+            id: "m1".into(),
+            freq: Frequency::Monthly,
+            observed: 124,
+            generation: 3,
+            level: 101.5,
+            seasonality: vec![0.9; 12],
+            seasonality2: vec![],
+        };
+        assert_eq!(SeriesState::from_json(&st.to_json()).expect("state"),
+                   st);
+    }
+
+    #[test]
+    fn error_envelope_round_trips() {
+        let env = ErrorEnvelope {
+            code: "queue_full".into(),
+            message: "busy".into(),
+            retry_after_ms: Some(1000),
+        };
+        assert_eq!(ErrorEnvelope::from_json(&env.to_json()).expect("env"),
+                   env);
+        assert_eq!(
+            env.to_json().to_string(),
+            r#"{"error":{"code":"queue_full","message":"busy","retry_after_ms":1000}}"#
+        );
+    }
+
+    #[test]
+    fn t0_contract() {
+        assert!(check_t0(None, 7).is_ok());
+        assert!(check_t0(Some(7), 7).is_ok());
+        let stale = check_t0(Some(3), 7).expect_err("stale");
+        assert!(stale.is::<StaleObservation>());
+        let gap = check_t0(Some(9), 7).expect_err("gap");
+        assert!(!gap.is::<StaleObservation>());
+        assert!(gap.is::<ObservationGap>());
+    }
+}

@@ -8,11 +8,30 @@
 //! `Link: </v1/...>; rel="successor-version"` pointer. New clients
 //! (including [`HttpClient`] callers in this repo) speak `/v1`.
 //!
-//! * `POST /v1/forecast` — `{"freq"?, "id"?, "category"?,
-//!   "values": [..]}` → `{"id", "freq", "generation",
-//!   "forecast": [..]}`. `freq` may be omitted when exactly one
-//!   frequency is being served; `id` is also the consistent-hash shard
-//!   key.
+//! * `POST /v1/series/{id}/observe` — `{"freq"?, "values": [..],
+//!   "t0"?}` → `{"id", "freq", "observed", "generation",
+//!   "new_series"}`. Advances the series' ES recurrence online (no RNN
+//!   retrain) and invalidates its cached forecast. `t0`, when present,
+//!   is the absolute index of `values[0]`: a replayed batch is `409`
+//!   (`stale_observation`), a batch that would skip ahead is `400`.
+//! * `GET /v1/series/{id}/forecast` — stateful forecast from the
+//!   series' stored ES state (`?freq=` required only when serving
+//!   multiple frequencies) → the same `{"id", "freq", "generation",
+//!   "forecast"}` shape as the POST route. Unknown series → `404`
+//!   (`unknown_series`).
+//! * `POST /v1/series/{id}/forecast` — stateless forecast from history
+//!   carried in the body (same body as the deprecated `/v1/forecast`,
+//!   with `id` taken from the path).
+//! * `GET /v1/series/{id}/state` — the stored ES state:
+//!   `{"id", "freq", "observed", "generation", "level", "seasonality",
+//!   "seasonality2"}`.
+//! * `POST /v1/forecast` — **deprecated** alias of
+//!   `POST /v1/series/{id}/forecast` with `id` in the body:
+//!   `{"freq"?, "id"?, "category"?, "values": [..]}` → `{"id", "freq",
+//!   "generation", "forecast": [..]}`. `freq` may be omitted when
+//!   exactly one frequency is being served; `id` is also the
+//!   consistent-hash shard key. Served byte-identically, plus the
+//!   `Deprecation` + `Link` successor headers.
 //! * `GET /v1/stats` — `{"schema_version": 1, "serving": {...},
 //!   "http": {...}, "backend": {...}, "shards": [...]}` — see
 //!   [`ServiceStats::to_json`](super::ServiceStats::to_json). Field
@@ -55,13 +74,13 @@
 //!   connection times out (`keep_alive`), a stalled mid-request client
 //!   gets `408` (`request_timeout`), and shutdown is observed promptly.
 //!
-//! Status contract: client mistakes → `400`, unknown route → `404`,
-//! wrong method → `405`, stalled request → `408`, oversized body →
-//! `413`, pool queue full (backpressure, [`QueueFull`](super::QueueFull))
-//! → `429` + `Retry-After`, oversized headers → `431`, chunked transfer
-//! → `501`, faults while serving a valid forecast → `500`, accept
-//! backlog full → `503` + `Retry-After` — each with the error envelope
-//! as its body.
+//! Status contract: client mistakes → `400`, unknown route or unknown
+//! series → `404`, wrong method → `405`, stalled request → `408`,
+//! replayed observation batch → `409`, oversized body → `413`, pool
+//! queue full (backpressure, [`QueueFull`](super::QueueFull)) → `429` +
+//! `Retry-After`, oversized headers → `431`, chunked transfer → `501`,
+//! faults while serving a valid forecast → `500`, accept backlog full →
+//! `503` + `Retry-After` — each with the error envelope as its body.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
@@ -77,6 +96,8 @@ use crate::config::{Category, Frequency};
 use crate::telemetry::registry::{Counter, Gauge, Registry};
 use crate::util::json::Json;
 
+use super::api;
+use super::api::{ObservationGap, StaleObservation, UnknownSeries};
 use super::pool::QueueFull;
 use super::router::ServingStack;
 use super::shard::ShardedStack;
@@ -151,8 +172,8 @@ struct ServerShared {
 /// Statuses an error response can carry, pre-registered under
 /// `fesrnn_http_responses_total{code=...}` so every code's series
 /// exists (at zero) from the very first scrape.
-const ERROR_STATUSES: [u16; 10] =
-    [400, 404, 405, 408, 413, 429, 431, 500, 501, 503];
+const ERROR_STATUSES: [u16; 11] =
+    [400, 404, 405, 408, 409, 413, 429, 431, 500, 501, 503];
 
 /// The HTTP front-end's own instruments, registered into the stack's
 /// [`Registry`] at server start (idempotent: a second server on the
@@ -528,6 +549,8 @@ fn next_conn(sh: &ServerShared) -> Option<TcpStream> {
 struct ParsedRequest {
     method: String,
     path: String,
+    /// Raw query string (after `?`, without it), empty when absent.
+    query: String,
     body: String,
     keep_alive: bool,
 }
@@ -757,6 +780,7 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>,
     RequestOutcome::Ready(ParsedRequest {
         method: head.method,
         path: head.path,
+        query: head.query,
         body,
         keep_alive: head.keep_alive,
     })
@@ -765,6 +789,7 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>,
 struct Head {
     method: String,
     path: String,
+    query: String,
     content_length: usize,
     keep_alive: bool,
 }
@@ -782,7 +807,10 @@ fn parse_head(raw: &[u8], max_body: usize) -> Result<Head, (u16, String)> {
         .ok_or_else(|| (400, "empty request line".to_string()))?
         .to_ascii_uppercase();
     let raw_path = parts.next().unwrap_or("/");
-    let path = raw_path.split('?').next().unwrap_or("/").to_string();
+    let (path, query) = match raw_path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (raw_path.to_string(), String::new()),
+    };
     let version = parts.next().unwrap_or("HTTP/1.1");
     // HTTP/1.1 defaults to keep-alive; 1.0 defaults to close.
     let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
@@ -835,6 +863,7 @@ fn parse_head(raw: &[u8], max_body: usize) -> Result<Head, (u16, String)> {
     Ok(Head {
         method,
         path,
+        query,
         content_length: content_length.unwrap_or(0) as usize,
         keep_alive: keep_alive && !saw_close,
     })
@@ -849,6 +878,7 @@ fn parse_head(raw: &[u8], max_body: usize) -> Result<Head, (u16, String)> {
 /// | 404 | `not_found` |
 /// | 405 | `method_not_allowed` |
 /// | 408 | `request_timeout` |
+/// | 409 | `conflict` |
 /// | 413 | `body_too_large` |
 /// | 429 | `queue_full` |
 /// | 431 | `headers_too_large` |
@@ -857,13 +887,17 @@ fn parse_head(raw: &[u8], max_body: usize) -> Result<Head, (u16, String)> {
 /// | 503 | `overloaded` |
 ///
 /// Any other status maps to `error`. Clients should branch on these
-/// strings, never on `message` text.
+/// strings, never on `message` text. Two routes refine their default:
+/// a missing series state is `404` with code `unknown_series`, and a
+/// replayed observation batch is `409` with code `stale_observation`
+/// (see [`Reply::error_coded`]).
 pub fn error_code(status: u16) -> &'static str {
     match status {
         400 => "bad_request",
         404 => "not_found",
         405 => "method_not_allowed",
         408 => "request_timeout",
+        409 => "conflict",
         413 => "body_too_large",
         429 => "queue_full",
         431 => "headers_too_large",
@@ -879,8 +913,15 @@ pub fn error_code(status: u16) -> &'static str {
 /// `retry_after_ms` field appears exactly when the response also
 /// carries a `Retry-After` header (same duration, in milliseconds).
 fn err_json(code: u16, msg: &str, retry_after: Option<u32>) -> Json {
+    err_json_coded(error_code(code), msg, retry_after)
+}
+
+/// [`err_json`] with an explicit envelope code, for the statuses whose
+/// default code is refined per-route (`unknown_series`,
+/// `stale_observation`).
+fn err_json_coded(code: &str, msg: &str, retry_after: Option<u32>) -> Json {
     let mut fields = vec![
-        ("code", Json::str(error_code(code))),
+        ("code", Json::str(code)),
         ("message", Json::str(msg)),
     ];
     if let Some(secs) = retry_after {
@@ -913,6 +954,13 @@ impl Reply {
     fn error(code: u16, msg: &str, retry_after: Option<u32>) -> Self {
         Self::json(code, err_json(code, msg, retry_after), retry_after)
     }
+
+    /// An error reply whose envelope code is route-refined rather than
+    /// the status default — e.g. `404`/`unknown_series`,
+    /// `409`/`stale_observation`.
+    fn error_coded(code: u16, envelope_code: &str, msg: &str) -> Self {
+        Self::json(code, err_json_coded(envelope_code, msg, None), None)
+    }
 }
 
 /// Map a request path to its normalized route. Legacy unversioned
@@ -941,6 +989,20 @@ fn route(sh: &ServerShared, req: &ParsedRequest) -> Reply {
     if successor.is_some() {
         sh.metrics.deprecated.inc();
     }
+    // Resource-oriented series routes. They postdate the unversioned
+    // prefix, so they are served under /v1 only — `split_alias`'s
+    // strip-prefix fallthrough must not grant an unversioned
+    // `/series/...` spelling that never existed.
+    if let Some(rest) = path.strip_prefix("/series/") {
+        if req.path.starts_with("/v1/series/") {
+            return route_series(sh, rest, req);
+        }
+        return Reply::error(
+            404,
+            &format!("no route for {} {} — series routes are served \
+                      under /v1 only", req.method, req.path),
+            None);
+    }
     let mut reply = match (req.method.as_str(), path) {
         ("POST", "/forecast") => handle_forecast(stack, &req.body),
         ("POST", "/reload") => match handle_reload(stack, &req.body) {
@@ -968,12 +1030,58 @@ fn route(sh: &ServerShared, req: &ParsedRequest) -> Reply {
                           None),
     };
     reply.successor = successor;
+    // `POST /v1/forecast` is itself deprecated now that the resource
+    // route exists: same handler, byte-identical payload, plus the
+    // successor headers — exactly the alias contract the legacy
+    // unversioned paths follow.
+    if req.method == "POST" && path == "/forecast" && successor.is_none() {
+        sh.metrics.deprecated.inc();
+        reply.successor = Some("/v1/series/{id}/forecast");
+    }
     reply
 }
 
-fn resolve_freq(stack: &ShardedStack, doc: &Json) -> Result<Frequency> {
-    match doc.opt("freq") {
-        Some(j) => Frequency::parse(j.as_str()?),
+/// Dispatch `/v1/series/{id}/{action}`. `rest` is everything after the
+/// `/series/` prefix; the id may itself contain `/` (split from the
+/// right), and percent-escapes are passed through opaquely — the id on
+/// the wire is the id in the store.
+fn route_series(sh: &ServerShared, rest: &str, req: &ParsedRequest)
+                -> Reply {
+    let stack = &*sh.stack;
+    let usage = "series routes are /v1/series/{id}/{observe|forecast|state}";
+    let Some((id, action)) = rest.rsplit_once('/') else {
+        return Reply::error(
+            404, &format!("no route for {} {} — {usage}", req.method,
+                          req.path),
+            None);
+    };
+    if id.is_empty() {
+        return Reply::error(
+            404, &format!("empty series id in {} — {usage}", req.path),
+            None);
+    }
+    match (req.method.as_str(), action) {
+        ("POST", "observe") => handle_observe(stack, id, &req.body),
+        ("GET", "forecast") => handle_series_forecast(stack, id, &req.query),
+        ("POST", "forecast") => handle_forecast_for(stack, id, &req.body),
+        ("GET", "state") => handle_series_state(stack, id, &req.query),
+        (_, "observe" | "forecast" | "state") => Reply::error(
+            405,
+            &format!("method {} not allowed for {}", req.method, req.path),
+            None),
+        _ => Reply::error(
+            404, &format!("no route for {} {} — {usage}", req.method,
+                          req.path),
+            None),
+    }
+}
+
+/// Fill in an omitted `freq` from the stack's single frequency, or
+/// explain which ones must be named.
+fn resolve_parsed_freq(stack: &ShardedStack, freq: Option<Frequency>)
+                       -> Result<Frequency> {
+    match freq {
+        Some(f) => Ok(f),
         None => stack.single_frequency().ok_or_else(|| {
             anyhow!("`freq` is required when serving multiple frequencies \
                      ({})",
@@ -987,6 +1095,20 @@ fn resolve_freq(stack: &ShardedStack, doc: &Json) -> Result<Frequency> {
     }
 }
 
+/// Resolve `freq` for the GET series routes from the `?freq=` query
+/// parameter (body-less requests), falling back to the stack's single
+/// frequency.
+fn resolve_freq_query(stack: &ShardedStack, query: &str)
+                      -> Result<Frequency> {
+    for pair in query.split('&') {
+        let Some((k, v)) = pair.split_once('=') else { continue };
+        if k == "freq" {
+            return Frequency::parse(v);
+        }
+    }
+    resolve_parsed_freq(stack, None)
+}
+
 /// Status mapping: malformed / unroutable / too-short requests are 400;
 /// a queue-full backpressure rejection is 429 + `Retry-After` (the
 /// request was valid — the server is asking the client to slow down);
@@ -994,22 +1116,140 @@ fn resolve_freq(stack: &ShardedStack, doc: &Json) -> Result<Frequency> {
 /// down) are 500 so monitoring and load balancers see a server outage,
 /// not a client mistake.
 fn handle_forecast(stack: &ShardedStack, body: &str) -> Reply {
-    let (freq, req) = match parse_forecast_request(stack, body) {
+    let (freq, req) = match parse_forecast_request(stack, body, None) {
         Ok(x) => x,
         Err(e) => return Reply::error(400, &format!("{e:#}"), None),
     };
+    run_forecast(stack, freq, req)
+}
+
+/// `POST /v1/series/{id}/forecast`: the same stateless forecast as the
+/// deprecated `/v1/forecast` alias, with the series id taken from the
+/// resource path (a body `id`, if present, is ignored).
+fn handle_forecast_for(stack: &ShardedStack, id: &str, body: &str) -> Reply {
+    let (freq, req) = match parse_forecast_request(stack, body, Some(id)) {
+        Ok(x) => x,
+        Err(e) => return Reply::error(400, &format!("{e:#}"), None),
+    };
+    run_forecast(stack, freq, req)
+}
+
+fn run_forecast(stack: &ShardedStack, freq: Frequency, req: ForecastRequest)
+                -> Reply {
     match stack.forecast(freq, req) {
         Ok(resp) => Reply::json(
             200,
-            Json::obj(vec![
-                ("id", Json::str(resp.id)),
-                ("freq", Json::str(freq.name())),
-                ("generation", Json::num(resp.generation as f64)),
-                ("forecast", Json::arr_f32(&resp.forecast)),
-            ]),
+            api::ForecastResponse {
+                id: resp.id,
+                freq,
+                generation: resp.generation,
+                forecast: resp.forecast,
+            }
+            .to_json(),
             None),
         Err(e) if e.is::<QueueFull>() => {
             Reply::error(429, &format!("{e:#}"), Some(1))
+        }
+        Err(e) => Reply::error(500, &format!("{e:#}"), None),
+    }
+}
+
+/// `POST /v1/series/{id}/observe`: advance the series' ES recurrence.
+/// Typed faults map per the status contract: a replayed batch → 409
+/// `stale_observation`, a batch that skips ahead → 400, queue
+/// backpressure → 429; anything else while applying a valid batch is a
+/// server fault (500).
+fn handle_observe(stack: &ShardedStack, id: &str, body: &str) -> Reply {
+    let parsed = Json::parse(body)
+        .context("request body")
+        .and_then(|doc| api::ObserveRequest::from_json(&doc));
+    let req = match parsed {
+        Ok(r) => r,
+        Err(e) => return Reply::error(400, &format!("{e:#}"), None),
+    };
+    let freq = match resolve_parsed_freq(stack, req.freq) {
+        Ok(f) => f,
+        Err(e) => return Reply::error(400, &format!("{e:#}"), None),
+    };
+    if req.values.is_empty() {
+        return Reply::error(
+            400, "an observe batch needs at least one value", None);
+    }
+    match stack.observe(freq, id, &req.values, req.t0) {
+        Ok(out) => Reply::json(
+            200,
+            api::ObserveResponse {
+                id: id.to_string(),
+                freq,
+                observed: out.observed,
+                generation: out.generation,
+                new_series: out.new_series,
+            }
+            .to_json(),
+            None),
+        Err(e) if e.is::<StaleObservation>() => {
+            Reply::error_coded(409, "stale_observation", &format!("{e:#}"))
+        }
+        Err(e) if e.is::<ObservationGap>() => {
+            Reply::error(400, &format!("{e:#}"), None)
+        }
+        Err(e) if e.is::<QueueFull>() => {
+            Reply::error(429, &format!("{e:#}"), Some(1))
+        }
+        Err(e) => Reply::error(500, &format!("{e:#}"), None),
+    }
+}
+
+/// `GET /v1/series/{id}/forecast`: stateful forecast from the stored
+/// ES state — no history values on the wire.
+fn handle_series_forecast(stack: &ShardedStack, id: &str, query: &str)
+                          -> Reply {
+    let freq = match resolve_freq_query(stack, query) {
+        Ok(f) => f,
+        Err(e) => return Reply::error(400, &format!("{e:#}"), None),
+    };
+    match stack.series_forecast(freq, id) {
+        Ok(resp) => Reply::json(
+            200,
+            api::ForecastResponse {
+                id: resp.id,
+                freq,
+                generation: resp.generation,
+                forecast: resp.forecast,
+            }
+            .to_json(),
+            None),
+        Err(e) if e.is::<UnknownSeries>() => {
+            Reply::error_coded(404, "unknown_series", &format!("{e:#}"))
+        }
+        Err(e) => Reply::error(500, &format!("{e:#}"), None),
+    }
+}
+
+/// `GET /v1/series/{id}/state`: the stored ES state, seasonal rings in
+/// phase order.
+fn handle_series_state(stack: &ShardedStack, id: &str, query: &str)
+                       -> Reply {
+    let freq = match resolve_freq_query(stack, query) {
+        Ok(f) => f,
+        Err(e) => return Reply::error(400, &format!("{e:#}"), None),
+    };
+    match stack.series_record(freq, id) {
+        Ok(rec) => Reply::json(
+            200,
+            api::SeriesState {
+                id: id.to_string(),
+                freq,
+                observed: rec.state.observed,
+                generation: rec.generation,
+                level: rec.state.level,
+                seasonality: rec.state.ring1,
+                seasonality2: rec.state.ring2,
+            }
+            .to_json(),
+            None),
+        Err(e) if e.is::<UnknownSeries>() => {
+            Reply::error_coded(404, "unknown_series", &format!("{e:#}"))
         }
         Err(e) => Reply::error(500, &format!("{e:#}"), None),
     }
@@ -1024,33 +1264,34 @@ static ANON_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Validate everything client-controlled up front, including the history
 /// length (mirroring the pool's own submit-time check) so a short
-/// request is a clean 400 before it ever reaches the queue.
-fn parse_forecast_request(stack: &ShardedStack, body: &str)
+/// request is a clean 400 before it ever reaches the queue. `path_id`,
+/// when present (the resource route), wins over any body `id`.
+fn parse_forecast_request(stack: &ShardedStack, body: &str,
+                          path_id: Option<&str>)
                           -> Result<(Frequency, ForecastRequest)> {
     let doc = Json::parse(body).context("request body")?;
-    let freq = resolve_freq(stack, &doc)?;
-    let values = doc.get("values")?.as_f32_vec()?;
-    let id = match doc.opt("id") {
-        Some(j) => j.as_str()?.to_string(),
-        None => format!("http-{}", ANON_SEQ.fetch_add(1, Ordering::Relaxed)),
+    let wire = api::ForecastRequest::from_json(&doc)?;
+    let freq = resolve_parsed_freq(stack, wire.freq)?;
+    let id = match path_id {
+        Some(p) => p.to_string(),
+        None => wire.id.unwrap_or_else(|| {
+            format!("http-{}", ANON_SEQ.fetch_add(1, Ordering::Relaxed))
+        }),
     };
-    let category = match doc.opt("category") {
-        Some(j) => Category::parse(j.as_str()?)?,
-        None => Category::Other,
-    };
+    let category = wire.category.unwrap_or(Category::Other);
     let need = stack.required_length(freq)?;
-    if values.len() < need {
+    if wire.values.len() < need {
         bail!("request needs ≥ {need} history values for {}, got {}",
-              freq.name(), values.len());
+              freq.name(), wire.values.len());
     }
-    Ok((freq, ForecastRequest { id, values, category }))
+    Ok((freq, ForecastRequest { id, values: wire.values, category }))
 }
 
 fn handle_reload(stack: &ShardedStack, body: &str) -> Result<Json> {
     let doc = Json::parse(body).context("request body")?;
-    let freq = resolve_freq(stack, &doc)?;
-    let path = doc.get("checkpoint")?.as_str()?;
-    let generation = stack.reload_checkpoint(freq, path)?;
+    let req = api::ReloadRequest::from_json(&doc)?;
+    let freq = resolve_parsed_freq(stack, req.freq)?;
+    let generation = stack.reload_checkpoint(freq, &req.checkpoint)?;
     Ok(Json::obj(vec![
         ("freq", Json::str(freq.name())),
         ("generation", Json::num(generation as f64)),
@@ -1219,6 +1460,7 @@ fn write_response(stream: &mut TcpStream, code: u16, body: &str,
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        409 => "Conflict",
         413 => "Content Too Large",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
@@ -1693,6 +1935,17 @@ mod tests {
         let e = plain.get("error").unwrap();
         assert_eq!(e.get("code").unwrap().as_str().unwrap(), "bad_request");
         assert!(e.opt("retry_after_ms").is_none());
+        // Route-refined codes override the status default …
+        let coded = err_json_coded("stale_observation", "old batch", None);
+        let e = coded.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(),
+                   "stale_observation");
+        // … and the refined replies still parse as the shared envelope.
+        let reply = Reply::error_coded(404, "unknown_series", "who?");
+        let env = api::ErrorEnvelope::from_json(
+            &Json::parse(&reply.body).unwrap()).unwrap();
+        assert_eq!(env.code, "unknown_series");
+        assert_eq!(reply.code, 404);
     }
 
     #[test]
@@ -1702,6 +1955,7 @@ mod tests {
             (404, "not_found"),
             (405, "method_not_allowed"),
             (408, "request_timeout"),
+            (409, "conflict"),
             (413, "body_too_large"),
             (429, "queue_full"),
             (431, "headers_too_large"),
@@ -1730,6 +1984,11 @@ mod tests {
         // … and unknown paths pass through untouched (→ 404).
         assert_eq!(split_alias("/nope"), ("/nope", None));
         assert_eq!(split_alias("/v2/forecast"), ("/v2/forecast", None));
+        // Series routes normalize with no legacy successor: they are
+        // /v1-native (route() additionally rejects the unversioned
+        // spelling, which split_alias alone cannot distinguish).
+        assert_eq!(split_alias("/v1/series/m1/observe"),
+                   ("/series/m1/observe", None));
     }
 
     #[test]
@@ -1739,6 +1998,14 @@ mod tests {
         assert!(h.keep_alive);
         assert_eq!(h.method, "GET");
         assert_eq!(h.path, "/x");
+        assert_eq!(h.query, "");
+        // The query string is captured, not discarded.
+        let h = parse_head(
+            b"GET /v1/series/m1/state?freq=monthly HTTP/1.1\r\nHost: a",
+            100)
+            .unwrap();
+        assert_eq!(h.path, "/v1/series/m1/state");
+        assert_eq!(h.query, "freq=monthly");
         // … unless Connection: close; 1.0 defaults to close …
         let h = parse_head(b"GET / HTTP/1.1\r\nConnection: close", 100)
             .unwrap();

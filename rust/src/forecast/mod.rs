@@ -3,8 +3,13 @@
 //! hot-swap, consistent-hash sharding, and a zero-dependency HTTP
 //! front-end.
 //!
-//! Five layers (one file each):
+//! Serving layers (one file each):
 //!
+//! * [`state`] — [`StateStore`]: the memory-mapped per-series ES state
+//!   slab behind the stateful observe → forecast path (one instance per
+//!   pool; see DESIGN.md §Stateful serving).
+//! * [`api`] — typed wire DTOs for the `/v1` surface, shared by the
+//!   server handlers, [`RemoteShard`], the CLI and tests.
 //! * [`pool`] — [`FreqPool`]: N worker threads for one frequency, each
 //!   owning its own backend (backends may be `!Send`), pulling
 //!   drain-rounds from one shared dynamic-batching queue so executions
@@ -27,9 +32,12 @@
 //!   is the other — a keep-alive connection pool speaking the `/v1`
 //!   wire format to another machine, with per-request deadlines and a
 //!   background health prober driving ejection/readmission.
-//! * [`http`] — [`HttpServer`]: `POST /v1/forecast`, `GET /v1/stats`,
-//!   `GET /v1/metrics` (Prometheus text), `GET /v1/healthz`,
-//!   `POST /v1/reload` over `std::net::TcpListener` and
+//! * [`http`] — [`HttpServer`]: the resource-first series surface
+//!   (`POST /v1/series/{id}/observe`, `GET /v1/series/{id}/forecast`,
+//!   `GET /v1/series/{id}/state`, `POST /v1/series/{id}/forecast` for
+//!   stateless bodies), plus `GET /v1/stats`, `GET /v1/metrics`
+//!   (Prometheus text), `GET /v1/healthz` and `POST /v1/reload` over
+//!   `std::net::TcpListener` and
 //!   [`util::json`](crate::util::json) — no async runtime, no
 //!   frameworks (the unversioned paths remain as deprecated aliases).
 //!   HTTP/1.1 keep-alive on a bounded pool of connection-handler
@@ -42,19 +50,23 @@
 //! wrapper over a one-pool stack: existing callers (tests, examples, the
 //! CLI demo path) keep working unchanged.
 
+pub mod api;
 pub mod http;
 pub mod pool;
 pub mod remote;
 pub mod router;
 pub mod shard;
+pub mod state;
 
 pub use http::{ClientOptions, ClientPool, HttpClient, HttpOptions,
                HttpReply, HttpServer};
-pub use pool::{ForecastHandle, FreqPool, QueueFull};
+pub use pool::{ForecastHandle, FreqPool, ObserveOutcome, QueueFull};
 pub use remote::{RemoteOptions, RemoteShard, ShardClient, ShardHealth};
 pub use router::ServingStack;
 pub use shard::{HashRing, ShardedStack};
+pub use state::{SeriesRecord, StateStore};
 
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -103,6 +115,11 @@ pub struct ServiceOptions {
     /// a traffic spike the excess is shed instead of degrading every
     /// queued request. `0` disables the limit.
     pub queue_limit: usize,
+    /// Directory for the durable per-series ES state store
+    /// ([`StateStore`]). `None` (the default) keeps live state in
+    /// memory only — observes still work, they just don't survive a
+    /// restart. Each pool stores under `<state_dir>/<freq>/`.
+    pub state_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceOptions {
@@ -112,6 +129,7 @@ impl Default for ServiceOptions {
             max_batch: 256,
             workers: 1,
             queue_limit: 1024,
+            state_dir: None,
         }
     }
 }
@@ -157,6 +175,23 @@ pub struct ServiceStats {
     pub backend_steady_allocs: u64,
     /// Bytes pinned by the backend's reusable compute arenas.
     pub backend_scratch_bytes: u64,
+    /// Observe requests processed (accepted + rejected).
+    pub observe_requests: u64,
+    /// Observes that seeded a brand-new series state.
+    pub observe_new_series: u64,
+    /// Observes rejected because the batch rewound time
+    /// (`stale_observation`, HTTP 409).
+    pub observe_stale: u64,
+    /// Series with live ES state in the store (gauge).
+    pub state_series: u64,
+    /// State-store slab footprint in bytes (gauge).
+    pub state_bytes: u64,
+    /// Stateful forecast served from the per-series cache.
+    pub state_cache_hits: u64,
+    /// Stateful forecast recomputed (cold or invalidated key).
+    pub state_cache_misses: u64,
+    /// Cache entries dropped by an observe on the same series.
+    pub state_cache_invalidations: u64,
 }
 
 impl ServiceStats {
@@ -196,6 +231,19 @@ impl ServiceStats {
              Json::num(self.backend_steady_allocs as f64)),
             ("backend_scratch_bytes",
              Json::num(self.backend_scratch_bytes as f64)),
+            ("observe_requests_total",
+             Json::num(self.observe_requests as f64)),
+            ("observe_new_series_total",
+             Json::num(self.observe_new_series as f64)),
+            ("observe_stale_total", Json::num(self.observe_stale as f64)),
+            ("state_series", Json::num(self.state_series as f64)),
+            ("state_bytes", Json::num(self.state_bytes as f64)),
+            ("state_cache_hits_total",
+             Json::num(self.state_cache_hits as f64)),
+            ("state_cache_misses_total",
+             Json::num(self.state_cache_misses as f64)),
+            ("state_cache_invalidations_total",
+             Json::num(self.state_cache_invalidations as f64)),
         ])
     }
 
@@ -215,6 +263,14 @@ impl ServiceStats {
         let n = |key: &str| -> Result<u64> {
             Ok(j.get(key)?.as_f64()? as u64)
         };
+        // Fields added after PR 9 parse leniently (default 0) so a newer
+        // router can still aggregate stats from an older remote shard.
+        let opt_n = |key: &str| -> Result<u64> {
+            match j.opt(key) {
+                Some(v) => Ok(v.as_f64()? as u64),
+                None => Ok(0),
+            }
+        };
         Ok(ServiceStats {
             requests: n("queue_accepted_total")?,
             rejected: n("queue_rejected_total")?,
@@ -232,6 +288,15 @@ impl ServiceStats {
             backend_spawns: n("backend_spawns")?,
             backend_steady_allocs: n("backend_steady_allocs")?,
             backend_scratch_bytes: n("backend_scratch_bytes")?,
+            observe_requests: opt_n("observe_requests_total")?,
+            observe_new_series: opt_n("observe_new_series_total")?,
+            observe_stale: opt_n("observe_stale_total")?,
+            state_series: opt_n("state_series")?,
+            state_bytes: opt_n("state_bytes")?,
+            state_cache_hits: opt_n("state_cache_hits_total")?,
+            state_cache_misses: opt_n("state_cache_misses_total")?,
+            state_cache_invalidations:
+                opt_n("state_cache_invalidations_total")?,
         })
     }
 
@@ -273,6 +338,14 @@ impl ServiceStats {
         self.backend_spawns += other.backend_spawns;
         self.backend_steady_allocs += other.backend_steady_allocs;
         self.backend_scratch_bytes += other.backend_scratch_bytes;
+        self.observe_requests += other.observe_requests;
+        self.observe_new_series += other.observe_new_series;
+        self.observe_stale += other.observe_stale;
+        self.state_series += other.state_series;
+        self.state_bytes += other.state_bytes;
+        self.state_cache_hits += other.state_cache_hits;
+        self.state_cache_misses += other.state_cache_misses;
+        self.state_cache_invalidations += other.state_cache_invalidations;
     }
 }
 
@@ -439,6 +512,14 @@ mod tests {
             backend_spawns: 8,
             backend_steady_allocs: 0,
             backend_scratch_bytes: 123_456,
+            observe_requests: 42,
+            observe_new_series: 6,
+            observe_stale: 2,
+            state_series: 6,
+            state_bytes: 4096,
+            state_cache_hits: 30,
+            state_cache_misses: 12,
+            state_cache_invalidations: 9,
             ..Default::default()
         };
         st.total = LatencySummary {
@@ -449,6 +530,25 @@ mod tests {
         let back =
             ServiceStats::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(st, back);
+    }
+
+    #[test]
+    fn stats_json_tolerates_pre_stateful_payloads() {
+        // A PR-9 era remote shard emits no observe/state fields; the
+        // aggregating router must parse its payload with zero defaults
+        // instead of erroring the whole /v1/stats scrape.
+        let modern = ServiceStats { requests: 4, workers: 1,
+                                    ..Default::default() };
+        let mut doc = match modern.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.retain(|k, _| !k.starts_with("observe_")
+                   && !k.starts_with("state_"));
+        let back = ServiceStats::from_json(&Json::Obj(doc)).unwrap();
+        assert_eq!(back.requests, 4);
+        assert_eq!(back.observe_requests, 0);
+        assert_eq!(back.state_series, 0);
     }
 
     #[test]

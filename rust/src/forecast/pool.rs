@@ -41,6 +41,8 @@ use crate::runtime::{execute_with_maps, Backend, HostTensor, Manifest,
 use crate::telemetry::registry::{Counter, Gauge, Histogram, Registry};
 use crate::telemetry::Quantiles;
 
+use super::api::{check_t0, StaleObservation, UnknownSeries};
+use super::state::{SeriesRecord, StateStore};
 use super::{pick_batch, plan_batches, ForecastRequest, ForecastResponse,
             ResponseReceiver, ServiceOptions, ServiceStats};
 
@@ -78,6 +80,27 @@ struct VersionedModel {
     state: ModelState,
 }
 
+/// Result of one observe: where the series' state now stands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObserveOutcome {
+    /// Total observations the series has consumed.
+    pub observed: u64,
+    /// Model generation the state was stamped with.
+    pub generation: u64,
+    /// True when this observe seeded the series.
+    pub new_series: bool,
+}
+
+/// One cached stateful forecast. The key triple is
+/// `(series, generation, observed)`: an observe bumps `observed`, a
+/// reload bumps `generation` — either mismatch is a miss, so stale
+/// forecasts can never be served.
+struct CachedForecast {
+    generation: u64,
+    observed: u64,
+    forecast: Vec<f32>,
+}
+
 struct Job {
     req: ForecastRequest,
     tx: mpsc::Sender<Result<ForecastResponse>>,
@@ -107,6 +130,13 @@ struct StatsInner {
     backend_spawns: u64,
     backend_steady_allocs: u64,
     backend_scratch_bytes: u64,
+    // Observe lane.
+    observes: u64,
+    observe_new: u64,
+    observe_stale: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_invalidations: u64,
 }
 
 /// Registry-facing instruments for one pool, updated on the same code
@@ -133,6 +163,14 @@ struct PoolMetrics {
     queue_wait: Histogram,
     execute: Histogram,
     total: Histogram,
+    observes: Counter,
+    observe_new: Counter,
+    observe_stale: Counter,
+    state_series: Gauge,
+    state_bytes: Gauge,
+    cache_hits: Counter,
+    cache_misses: Counter,
+    cache_invalidations: Counter,
 }
 
 impl PoolMetrics {
@@ -211,6 +249,38 @@ impl PoolMetrics {
             "fesrnn_request_total_seconds",
             "Enqueue to response sent.",
             &l, &self.total);
+        reg.register_counter(
+            "fesrnn_observe_requests_total",
+            "Observe requests processed (accepted + rejected).",
+            &l, &self.observes);
+        reg.register_counter(
+            "fesrnn_observe_new_series_total",
+            "Observes that seeded a brand-new series state.",
+            &l, &self.observe_new);
+        reg.register_counter(
+            "fesrnn_observe_stale_total",
+            "Observes rejected because the batch rewound time (HTTP 409).",
+            &l, &self.observe_stale);
+        reg.register_gauge(
+            "fesrnn_state_series",
+            "Series with live ES state in the store.",
+            &l, &self.state_series);
+        reg.register_gauge(
+            "fesrnn_state_bytes",
+            "State-store slab footprint in bytes.",
+            &l, &self.state_bytes);
+        reg.register_counter(
+            "fesrnn_state_cache_hits_total",
+            "Stateful forecasts served from the per-series cache.",
+            &l, &self.cache_hits);
+        reg.register_counter(
+            "fesrnn_state_cache_misses_total",
+            "Stateful forecasts recomputed (cold or invalidated key).",
+            &l, &self.cache_misses);
+        reg.register_counter(
+            "fesrnn_state_cache_invalidations_total",
+            "Forecast cache entries dropped by an observe.",
+            &l, &self.cache_invalidations);
     }
 }
 
@@ -230,6 +300,12 @@ pub(crate) struct PoolShared {
     // lint:lock-name(fcpool.stats)
     stats: Mutex<StatsInner>,
     metrics: PoolMetrics,
+    /// Per-series ES state (its own internal lock, `state.slab`).
+    state: Arc<StateStore>,
+    /// Stateful forecast cache, keyed by series id; entries carry the
+    /// `(generation, observed)` half of the invalidation key.
+    // lint:lock-name(fcpool.fcache)
+    fcache: Mutex<HashMap<String, CachedForecast>>,
 }
 
 impl PoolShared {
@@ -319,6 +395,119 @@ impl PoolShared {
         self.model.lock().unwrap().clone()
     }
 
+    /// Advance one series' ES recurrence over a batch of new
+    /// observations — synchronous and µs-scale (a handful of FLOPs per
+    /// point), so it bypasses the batching queue entirely. A first
+    /// observe seeds the state from the batch
+    /// ([`hw::es_state_seed`]); later observes continue the recurrence
+    /// bit-identically to re-filtering the full history. On success the
+    /// series' cached forecast is invalidated.
+    fn observe(&self, id: &str, values: &[f32], t0: Option<u64>)
+               -> Result<ObserveOutcome> {
+        self.stats.lock().unwrap().observes += 1;
+        self.metrics.observes.inc();
+        if values.is_empty() {
+            bail!("observe for `{id}` carries no values");
+        }
+        let generation = self.current_model().generation;
+        let (s1, s2) = (self.net.seasonality, self.net.seasonality2);
+        let result = self.state.update(id, |cur| match cur {
+            None => {
+                check_t0(t0, 0)?;
+                Ok(SeriesRecord {
+                    state: hw::es_state_seed(values, s1, s2),
+                    generation,
+                })
+            }
+            Some(mut rec) => {
+                check_t0(t0, rec.state.observed)?;
+                rec.state.advance(values, hw::INIT_ALPHA, hw::INIT_GAMMA,
+                                  hw::INIT_GAMMA);
+                rec.generation = generation;
+                Ok(rec)
+            }
+        });
+        match result {
+            Ok((rec, new_series)) => {
+                let invalidated =
+                    self.fcache.lock().unwrap().remove(id).is_some();
+                {
+                    let mut s = self.stats.lock().unwrap();
+                    if new_series {
+                        s.observe_new += 1;
+                    }
+                    if invalidated {
+                        s.cache_invalidations += 1;
+                    }
+                }
+                if new_series {
+                    self.metrics.observe_new.inc();
+                }
+                if invalidated {
+                    self.metrics.cache_invalidations.inc();
+                }
+                self.metrics.state_series.set(self.state.series() as u64);
+                self.metrics.state_bytes.set(self.state.bytes());
+                Ok(ObserveOutcome {
+                    observed: rec.state.observed,
+                    generation: rec.generation,
+                    new_series,
+                })
+            }
+            Err(e) => {
+                if e.is::<StaleObservation>() {
+                    self.stats.lock().unwrap().observe_stale += 1;
+                    self.metrics.observe_stale.inc();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The stored state for one series, or a typed [`UnknownSeries`].
+    fn series_record(&self, id: &str) -> Result<SeriesRecord> {
+        self.state.get(id)?.ok_or_else(|| {
+            anyhow::Error::new(UnknownSeries { id: id.to_string() })
+        })
+    }
+
+    /// Stateful forecast: the Holt-Winters h-step forecast off the
+    /// series' live state — no queue, no RNN pass, no history replay.
+    /// Cached per series under the `(generation, observed)` key.
+    fn series_forecast(&self, id: &str) -> Result<ForecastResponse> {
+        let generation = self.current_model().generation;
+        let rec = self.series_record(id)?;
+        let observed = rec.state.observed;
+        {
+            let cache = self.fcache.lock().unwrap();
+            if let Some(hit) = cache.get(id) {
+                if hit.generation == generation && hit.observed == observed {
+                    let forecast = hit.forecast.clone();
+                    drop(cache);
+                    self.stats.lock().unwrap().cache_hits += 1;
+                    self.metrics.cache_hits.inc();
+                    return Ok(ForecastResponse {
+                        id: id.to_string(),
+                        forecast,
+                        generation,
+                    });
+                }
+            }
+        }
+        let forecast = rec.state.forecast(self.net.horizon);
+        self.fcache.lock().unwrap().insert(
+            id.to_string(),
+            CachedForecast {
+                generation,
+                observed,
+                forecast: forecast.clone(),
+            },
+        );
+        self.stats.lock().unwrap().cache_misses += 1;
+        self.metrics.cache_misses.inc();
+        Ok(ForecastResponse { id: id.to_string(), forecast, generation })
+    }
+
     fn reload(&self, state: ModelState) -> u64 {
         let mut slot = self.model.lock().unwrap();
         let generation = slot.generation + 1;
@@ -341,6 +530,8 @@ impl PoolShared {
         // at once) holds; the depth gauge and the counters may be one
         // submit apart, which is fine for monitoring.
         let queue_depth = self.queue.lock().unwrap().jobs.len();
+        let state_series = self.state.series() as u64;
+        let state_bytes = self.state.bytes();
         let s = self.stats.lock().unwrap();
         ServiceStats {
             requests: s.requests,
@@ -359,6 +550,14 @@ impl PoolShared {
             backend_spawns: s.backend_spawns,
             backend_steady_allocs: s.backend_steady_allocs,
             backend_scratch_bytes: s.backend_scratch_bytes,
+            observe_requests: s.observes,
+            observe_new_series: s.observe_new,
+            observe_stale: s.observe_stale,
+            state_series,
+            state_bytes,
+            state_cache_hits: s.cache_hits,
+            state_cache_misses: s.cache_misses,
+            state_cache_invalidations: s.cache_invalidations,
         }
     }
 }
@@ -379,6 +578,23 @@ impl ForecastHandle {
     /// Submit without waiting; returns the reply receiver.
     pub fn submit(&self, req: ForecastRequest) -> Result<ResponseReceiver> {
         self.shared.submit(req)
+    }
+
+    /// Advance a series' ES state on new observations (synchronous; no
+    /// queue — see [`PoolShared::observe`]).
+    pub fn observe(&self, id: &str, values: &[f32], t0: Option<u64>)
+                   -> Result<ObserveOutcome> {
+        self.shared.observe(id, values, t0)
+    }
+
+    /// Stateful Holt-Winters forecast from the series' stored state.
+    pub fn series_forecast(&self, id: &str) -> Result<ForecastResponse> {
+        self.shared.series_forecast(id)
+    }
+
+    /// The stored state record for a series.
+    pub fn series_record(&self, id: &str) -> Result<SeriesRecord> {
+        self.shared.series_record(id)
     }
 
     pub fn stats(&self) -> Result<ServiceStats> {
@@ -420,6 +636,16 @@ impl FreqPool {
                  opts: ServiceOptions) -> Result<Self> {
         let net = NetworkConfig::for_freq(freq)?;
         let n_workers = opts.workers.max(1);
+        // Durable state slab under <state_dir>/<freq>/ when configured;
+        // otherwise in-memory (observes work, state dies with the
+        // process).
+        let series_state = match &opts.state_dir {
+            Some(dir) => Arc::new(StateStore::open(
+                &dir.join(freq.name()), net.seasonality,
+                net.seasonality2)?),
+            None => Arc::new(StateStore::in_memory(net.seasonality,
+                                                   net.seasonality2)),
+        };
         let shared = Arc::new(PoolShared {
             net,
             opts: ServiceOptions { workers: n_workers, ..opts },
@@ -434,10 +660,14 @@ impl FreqPool {
             })),
             stats: Mutex::new(StatsInner::default()),
             metrics: PoolMetrics::default(),
+            state: series_state,
+            fcache: Mutex::new(HashMap::new()),
         });
         shared.metrics.queue_limit.set(shared.opts.queue_limit as u64);
         shared.metrics.workers.set(n_workers as u64);
         shared.metrics.generation.set(1);
+        shared.metrics.state_series.set(shared.state.series() as u64);
+        shared.metrics.state_bytes.set(shared.state.bytes());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
@@ -512,6 +742,27 @@ impl FreqPool {
 
     pub fn stats(&self) -> ServiceStats {
         self.shared.stats_snapshot()
+    }
+
+    /// Advance a series' ES state on new observations.
+    pub fn observe(&self, id: &str, values: &[f32], t0: Option<u64>)
+                   -> Result<ObserveOutcome> {
+        self.shared.observe(id, values, t0)
+    }
+
+    /// Stateful forecast from the series' stored ES state.
+    pub fn series_forecast(&self, id: &str) -> Result<ForecastResponse> {
+        self.shared.series_forecast(id)
+    }
+
+    /// The stored state record for one series.
+    pub fn series_record(&self, id: &str) -> Result<SeriesRecord> {
+        self.shared.series_record(id)
+    }
+
+    /// The pool's per-series state store (checkpoint sidecars, tests).
+    pub fn state_store(&self) -> &Arc<StateStore> {
+        &self.shared.state
     }
 
     /// Bind this pool's registry instruments under `{shard, freq}`

@@ -51,11 +51,15 @@ use crate::telemetry::registry::{Counter, Gauge, Histogram, Registry};
 use crate::telemetry::Quantiles;
 use crate::util::json::Json;
 
+use super::api;
+use super::api::{StaleObservation, UnknownSeries};
 use super::http::{ClientOptions, ClientPool, HttpClient, HttpReply};
-use super::pool::QueueFull;
+use super::pool::{ObserveOutcome, QueueFull};
 use super::router::ServingStack;
+use super::state::SeriesRecord;
 use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
             ServiceStats};
+use crate::hw::EsState;
 
 /// What the consistent-hash ring routes to: one shard's worth of
 /// serving capacity, local or remote. Every method is the shard-shaped
@@ -71,6 +75,31 @@ pub trait ShardClient: Send + Sync {
     /// local pool's contract.
     fn submit(&self, freq: Frequency, req: ForecastRequest)
               -> Result<ResponseReceiver>;
+
+    /// Advance one series' ES state on new observations (the stateful
+    /// serving path). Defaulted to an error so special-purpose clients
+    /// (test stubs, bench shims) that never see stateful traffic need
+    /// not implement it.
+    fn observe(&self, _freq: Frequency, id: &str, _values: &[f32],
+               _t0: Option<u64>) -> Result<ObserveOutcome> {
+        bail!("this shard client does not serve observes (series `{id}`)")
+    }
+
+    /// Stateful forecast from a series' stored ES state. Defaulted like
+    /// [`observe`](Self::observe).
+    fn series_forecast(&self, _freq: Frequency, id: &str)
+                       -> Result<ForecastResponse> {
+        bail!("this shard client does not serve stateful forecasts \
+               (series `{id}`)")
+    }
+
+    /// The stored state record for one series. Defaulted like
+    /// [`observe`](Self::observe).
+    fn series_record(&self, _freq: Frequency, id: &str)
+                     -> Result<SeriesRecord> {
+        bail!("this shard client does not serve series state \
+               (series `{id}`)")
+    }
 
     /// Per-frequency serving stats (a remote's own aggregate).
     fn stats_snapshot(&self) -> Result<BTreeMap<Frequency, ServiceStats>>;
@@ -150,6 +179,21 @@ impl ShardClient for ServingStack {
     fn submit(&self, freq: Frequency, req: ForecastRequest)
               -> Result<ResponseReceiver> {
         ServingStack::submit(self, freq, req)
+    }
+
+    fn observe(&self, freq: Frequency, id: &str, values: &[f32],
+               t0: Option<u64>) -> Result<ObserveOutcome> {
+        ServingStack::observe(self, freq, id, values, t0)
+    }
+
+    fn series_forecast(&self, freq: Frequency, id: &str)
+                       -> Result<ForecastResponse> {
+        ServingStack::series_forecast(self, freq, id)
+    }
+
+    fn series_record(&self, freq: Frequency, id: &str)
+                     -> Result<SeriesRecord> {
+        ServingStack::series_record(self, freq, id)
     }
 
     fn stats_snapshot(&self) -> Result<BTreeMap<Frequency, ServiceStats>> {
@@ -353,15 +397,16 @@ impl RemoteShard {
             || format!("remote shard {}: {method} {path}", self.addr))
     }
 
+    /// The unified error envelope, for non-2xx replies that carry one.
+    fn error_envelope(reply: &HttpReply) -> Option<api::ErrorEnvelope> {
+        api::ErrorEnvelope::from_json(&Json::parse(&reply.body).ok()?).ok()
+    }
+
     /// Pull `error.message` out of the unified error envelope, falling
     /// back to the raw body for non-envelope responses.
     fn error_message(reply: &HttpReply) -> String {
-        Json::parse(&reply.body)
-            .ok()
-            .and_then(|doc| {
-                Some(doc.get("error").ok()?.get("message").ok()?.as_str()
-                        .ok()?.to_string())
-            })
+        Self::error_envelope(reply)
+            .map(|e| e.message)
             .unwrap_or_else(|| reply.body.clone())
     }
 
@@ -391,21 +436,23 @@ impl ShardClient for RemoteShard {
     /// flattening into a generic `500`.
     fn forecast(&self, freq: Frequency, req: ForecastRequest)
                 -> Result<ForecastResponse> {
-        let body = Json::obj(vec![
-            ("freq", Json::str(freq.name())),
-            ("id", Json::str(req.id.as_str())),
-            ("category", Json::str(req.category.name())),
-            ("values", Json::arr_f32(&req.values)),
-        ])
+        let body = api::ForecastRequest {
+            freq: Some(freq),
+            id: Some(req.id.clone()),
+            category: Some(req.category),
+            values: req.values,
+        }
+        .to_json()
         .to_string();
         let reply = self.request("POST", "/v1/forecast", Some(&body))?;
         match reply.code {
             200 => {
-                let doc = Json::parse(&reply.body)?;
+                let resp =
+                    api::ForecastResponse::from_json(&Json::parse(&reply.body)?)?;
                 Ok(ForecastResponse {
-                    id: doc.get("id")?.as_str()?.to_string(),
-                    forecast: doc.get("forecast")?.as_f32_vec()?,
-                    generation: doc.get("generation")?.as_f64()? as u64,
+                    id: resp.id,
+                    forecast: resp.forecast,
+                    generation: resp.generation,
                 })
             }
             // The remote does not echo its queue limit; 0 is the
@@ -428,6 +475,108 @@ impl ShardClient for RemoteShard {
                 let _ = tx.send(other);
                 Ok(rx)
             }
+        }
+    }
+
+    /// `POST /v1/series/{id}/observe`. A remote `409 stale_observation`
+    /// maps back to a typed [`StaleObservation`] so the local front-end
+    /// re-emits its own `409` — the write guard propagates across
+    /// machines like [`QueueFull`] backpressure does.
+    fn observe(&self, freq: Frequency, id: &str, values: &[f32],
+               t0: Option<u64>) -> Result<ObserveOutcome> {
+        let body = api::ObserveRequest {
+            freq: Some(freq),
+            values: values.to_vec(),
+            t0,
+        }
+        .to_json()
+        .to_string();
+        let path = format!("/v1/series/{id}/observe");
+        let reply = self.request("POST", &path, Some(&body))?;
+        match reply.code {
+            200 => {
+                let resp =
+                    api::ObserveResponse::from_json(&Json::parse(&reply.body)?)?;
+                Ok(ObserveOutcome {
+                    observed: resp.observed,
+                    generation: resp.generation,
+                    new_series: resp.new_series,
+                })
+            }
+            409 => {
+                // Reconstruct the typed error from the envelope message
+                // (our own wire format: "…already consumed N
+                // observations"); `observed` falls back to 0 if a future
+                // server rewords it — the type still routes the 409.
+                let msg = Self::error_message(&reply);
+                let observed = msg
+                    .rsplit("consumed ")
+                    .next()
+                    .and_then(|s| s.split_whitespace().next())
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0);
+                Err(anyhow::Error::new(StaleObservation {
+                    observed,
+                    t0: t0.unwrap_or(0),
+                }))
+            }
+            429 => Err(anyhow::Error::new(QueueFull { limit: 0 })),
+            code => bail!("remote shard {} rejected the observe ({code}): \
+                           {}",
+                          self.addr, Self::error_message(&reply)),
+        }
+    }
+
+    /// `GET /v1/series/{id}/forecast`. A remote `404 unknown_series`
+    /// maps back to a typed [`UnknownSeries`].
+    fn series_forecast(&self, freq: Frequency, id: &str)
+                       -> Result<ForecastResponse> {
+        let path = format!("/v1/series/{id}/forecast?freq={}", freq.name());
+        let reply = self.request("GET", &path, None)?;
+        match reply.code {
+            200 => {
+                let resp =
+                    api::ForecastResponse::from_json(&Json::parse(&reply.body)?)?;
+                Ok(ForecastResponse {
+                    id: resp.id,
+                    forecast: resp.forecast,
+                    generation: resp.generation,
+                })
+            }
+            404 => Err(anyhow::Error::new(UnknownSeries {
+                id: id.to_string(),
+            })),
+            code => bail!("remote shard {} rejected the stateful forecast \
+                           ({code}): {}",
+                          self.addr, Self::error_message(&reply)),
+        }
+    }
+
+    /// `GET /v1/series/{id}/state`.
+    fn series_record(&self, freq: Frequency, id: &str)
+                     -> Result<SeriesRecord> {
+        let path = format!("/v1/series/{id}/state?freq={}", freq.name());
+        let reply = self.request("GET", &path, None)?;
+        match reply.code {
+            200 => {
+                let st =
+                    api::SeriesState::from_json(&Json::parse(&reply.body)?)?;
+                Ok(SeriesRecord {
+                    state: EsState {
+                        level: st.level,
+                        ring1: st.seasonality,
+                        ring2: st.seasonality2,
+                        observed: st.observed,
+                    },
+                    generation: st.generation,
+                })
+            }
+            404 => Err(anyhow::Error::new(UnknownSeries {
+                id: id.to_string(),
+            })),
+            code => bail!("remote shard {} rejected the state read \
+                           ({code}): {}",
+                          self.addr, Self::error_message(&reply)),
         }
     }
 

@@ -12,7 +12,8 @@ use crate::config::Frequency;
 use crate::coordinator::{checkpoint, ModelState};
 use crate::telemetry::registry::Registry;
 
-use super::pool::{BackendFactory, ForecastHandle, FreqPool};
+use super::pool::{BackendFactory, ForecastHandle, FreqPool, ObserveOutcome};
+use super::state::SeriesRecord;
 use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
             ServiceOptions, ServiceStats};
 
@@ -101,6 +102,26 @@ impl ServingStack {
         self.pool(freq)?.handle().submit(req)
     }
 
+    /// Advance one series' ES state on new observations, routed by
+    /// frequency. Synchronous — no batching queue (see
+    /// [`FreqPool::observe`]).
+    pub fn observe(&self, freq: Frequency, id: &str, values: &[f32],
+                   t0: Option<u64>) -> Result<ObserveOutcome> {
+        self.pool(freq)?.observe(id, values, t0)
+    }
+
+    /// Stateful forecast from a series' stored ES state.
+    pub fn series_forecast(&self, freq: Frequency, id: &str)
+                           -> Result<ForecastResponse> {
+        self.pool(freq)?.series_forecast(id)
+    }
+
+    /// The stored state record for one series.
+    pub fn series_record(&self, freq: Frequency, id: &str)
+                         -> Result<SeriesRecord> {
+        self.pool(freq)?.series_record(id)
+    }
+
     /// Hot-swap one frequency's model; workers adopt it at their next
     /// batch boundary. Returns the new generation tag.
     pub fn reload(&self, freq: Frequency, state: ModelState) -> Result<u64> {
@@ -109,11 +130,33 @@ impl ServingStack {
 
     /// Hot-swap from a checkpoint file (JSON or the compact binary
     /// format — sniffed by magic). The checkpoint's recorded frequency
-    /// must match the pool it is being loaded into.
+    /// must match the pool it is being loaded into. When a
+    /// `<checkpoint>.state` sidecar (written by
+    /// [`export_state_sidecar`](Self::export_state_sidecar)) sits next
+    /// to the file, its per-series ES states are merged into the pool's
+    /// live store after the swap — newly published models arrive
+    /// together with the series states they were trained against.
     pub fn reload_checkpoint(&self, freq: Frequency, path: impl AsRef<Path>)
                              -> Result<u64> {
+        let path = path.as_ref();
         let state = checkpoint::load_model_state_for(path, freq.name())?;
-        self.reload(freq, state)
+        let generation = self.reload(freq, state)?;
+        let sidecar = checkpoint::state_sidecar_path(path);
+        if sidecar.exists() {
+            self.pool(freq)?.state_store().import_from(&sidecar)?;
+        }
+        Ok(generation)
+    }
+
+    /// Write the pool's per-series ES state as a `<checkpoint>.state`
+    /// sidecar next to `path`, for [`reload_checkpoint`]
+    /// (Self::reload_checkpoint) on another host to merge. Returns the
+    /// number of series exported.
+    pub fn export_state_sidecar(&self, freq: Frequency,
+                                path: impl AsRef<Path>) -> Result<usize> {
+        let store = self.pool(freq)?.state_store();
+        store.export_to(&checkpoint::state_sidecar_path(path.as_ref()))?;
+        Ok(store.series())
     }
 
     pub fn generation(&self, freq: Frequency) -> Result<u64> {

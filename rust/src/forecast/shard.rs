@@ -42,11 +42,13 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::Frequency;
 use crate::coordinator::ModelState;
-use crate::telemetry::registry::Registry;
+use crate::telemetry::registry::{Counter, Registry};
 
+use super::pool::ObserveOutcome;
 use super::remote::{hedged_forecast, HedgeClock, RemoteShard, ShardClient,
                     ShardHealth};
 use super::router::ServingStack;
+use super::state::SeriesRecord;
 use super::{ForecastRequest, ForecastResponse, ResponseReceiver,
             ServiceStats};
 
@@ -215,6 +217,11 @@ pub struct ShardedStack {
     replicas: AtomicUsize,
     /// The rolling-p95 hedge timer + ring-level hedge counters.
     hedge: HedgeClock,
+    /// Async observe fan-outs fired at non-primary replicas.
+    observe_fanout: Counter,
+    /// Fan-outs that failed (the replica re-converges on the next
+    /// observe or checkpoint sidecar import — see DESIGN.md).
+    observe_fanout_errors: Counter,
 }
 
 impl Default for ShardedStack {
@@ -240,6 +247,18 @@ impl ShardedStack {
             "Hedged or failed-over reads answered first by a non-primary \
              replica.",
             &[], &hedge.hedge_wins);
+        let observe_fanout = Counter::new();
+        let observe_fanout_errors = Counter::new();
+        registry.register_counter(
+            "fesrnn_observe_fanout_total",
+            "Asynchronous observe replications fired at non-primary \
+             replicas of a series' replica set.",
+            &[], &observe_fanout);
+        registry.register_counter(
+            "fesrnn_observe_fanout_errors_total",
+            "Asynchronous observe replications that failed (the replica \
+             re-converges on its next observe or sidecar import).",
+            &[], &observe_fanout_errors);
         Self {
             inner: RwLock::new(Shards {
                 ring: HashRing::new(),
@@ -248,6 +267,8 @@ impl ShardedStack {
             registry,
             replicas: AtomicUsize::new(1),
             hedge,
+            observe_fanout,
+            observe_fanout_errors,
         }
     }
 
@@ -504,6 +525,61 @@ impl ShardedStack {
     pub fn submit(&self, freq: Frequency, req: ForecastRequest)
                   -> Result<ResponseReceiver> {
         self.route(&req.id)?.submit(freq, req)
+    }
+
+    /// Advance a series' ES state: consistent-hash route by `id` to the
+    /// same replica set as [`forecast`](Self::forecast), apply on the
+    /// primary *synchronously* (the caller's next forecast must see the
+    /// new state), then replicate to the remaining replicas
+    /// *asynchronously* — a slow replica must not sit on the observe
+    /// hot path. The `t0` write guard applies on the primary only;
+    /// fan-outs are best-effort (a replica that missed one batch would
+    /// otherwise reject every later one). A failed fan-out bumps
+    /// `fesrnn_observe_fanout_errors_total`; a lagging replica
+    /// re-converges on a checkpoint state-sidecar import.
+    pub fn observe(&self, freq: Frequency, id: &str, values: &[f32],
+                   t0: Option<u64>) -> Result<ObserveOutcome> {
+        let replicas = self.route_replicas(id)?;
+        let (primary, rest) = replicas
+            .split_first()
+            .ok_or_else(|| anyhow!("no shards are running"))?;
+        let outcome = primary.observe(freq, id, values, t0)?;
+        for replica in rest {
+            self.observe_fanout.inc();
+            let client = Arc::clone(replica);
+            let errors = self.observe_fanout_errors.clone();
+            let (id, values) = (id.to_string(), values.to_vec());
+            std::thread::spawn(move || {
+                if client.observe(freq, &id, &values, None).is_err() {
+                    errors.inc();
+                }
+            });
+        }
+        Ok(outcome)
+    }
+
+    /// Async observe replications fired at non-primary replicas.
+    pub fn observe_fanouts(&self) -> u64 {
+        self.observe_fanout.get()
+    }
+
+    /// Fan-outs that failed.
+    pub fn observe_fanout_errors(&self) -> u64 {
+        self.observe_fanout_errors.get()
+    }
+
+    /// Stateful forecast from a series' stored ES state, routed to the
+    /// key's primary shard (the one synchronous observes land on — the
+    /// replica states are eventually consistent).
+    pub fn series_forecast(&self, freq: Frequency, id: &str)
+                           -> Result<ForecastResponse> {
+        self.route(id)?.series_forecast(freq, id)
+    }
+
+    /// The stored state record for one series, from the key's primary.
+    pub fn series_record(&self, freq: Frequency, id: &str)
+                         -> Result<SeriesRecord> {
+        self.route(id)?.series_record(freq, id)
     }
 
     /// Hot-swap `freq`'s model on every shard. Returns the newest

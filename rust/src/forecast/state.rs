@@ -1,0 +1,862 @@
+//! Memory-mapped per-series ES state store — the online half of the
+//! paper's per-series parameters.
+//!
+//! Each modeled series owns one fixed-size record
+//! `[crc | ordinal | observed | generation | level | ring1[S1] | ring2[S2]]`
+//! in a log-structured slab (`state.slab`). Updates append a fresh
+//! version of the record; the newest CRC-valid version wins on reopen,
+//! so a crash mid-write can only lose the torn tail, never corrupt an
+//! older version. Series ids live in an append-only sidecar
+//! (`state.ids`, one id per line, line number = ordinal) so the slab
+//! itself stays fixed-stride and mmap-friendly: a shard holding millions
+//! of series pays heap only for the id → ordinal index, while the float
+//! payload is paged in by the kernel on demand.
+//!
+//! Compaction (automatic once the slab is ≥ [`COMPACT_MIN_BYTES`] and
+//! ≥ 75% garbage, or explicit via [`StateStore::compact`]) rewrites the
+//! live records to a temp file and publishes it with an atomic rename —
+//! the same write-then-rename discipline as the checkpoint writer.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::hw::EsState;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Slab header: magic + format version + ring widths.
+pub const SLAB_MAGIC: &[u8; 8] = b"FESRNNST";
+pub const SLAB_VERSION: u32 = 1;
+const HEADER_BYTES: usize = 8 + 4 + 4 + 4;
+
+/// Auto-compaction floor: below this slab size garbage is not worth
+/// rewriting the file for.
+pub const COMPACT_MIN_BYTES: u64 = 1 << 20;
+
+/// One series' durable state: the live ES recurrence plus the model
+/// generation it was last observed under (the forecast-cache key is
+/// `(series, generation, observed)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesRecord {
+    pub state: EsState,
+    pub generation: u64,
+}
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) — records are small, the
+/// bitwise form keeps the module table-free.
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Read-only `mmap(2)` wrapper over the slab file. `std` already links
+/// libc on unix, so the two raw syscall bindings below add no
+/// dependency; on other targets the store transparently falls back to
+/// positioned reads.
+#[cfg(unix)]
+mod mm {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    use core::ffi::c_void;
+
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+
+    extern "C" {
+        fn mmap(addr: *mut c_void, len: usize, prot: i32, flags: i32,
+                fd: i32, offset: i64) -> *mut c_void;
+        fn munmap(ptr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ and owned exclusively by this
+    // wrapper; concurrent shared reads of immutable pages are safe.
+    unsafe impl Send for Mmap {}
+    // SAFETY: as above — read-only pages, no interior mutation.
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map `len` bytes of `file` read-only. Returns `None` on any
+        /// failure (including `len == 0`, which `mmap` rejects) so the
+        /// caller can fall back to positioned reads.
+        pub fn map(file: &File, len: usize) -> Option<Mmap> {
+            if len == 0 {
+                return None;
+            }
+            // SAFETY: fd is a valid open file descriptor for the
+            // lifetime of the call; a NULL addr + MAP_SHARED read-only
+            // mapping has no aliasing requirements on our side. The
+            // result is checked against MAP_FAILED before use.
+            let ptr = unsafe {
+                mmap(core::ptr::null_mut(), len, PROT_READ, MAP_SHARED,
+                     file.as_raw_fd(), 0)
+            };
+            if ptr as usize == usize::MAX {
+                return None;
+            }
+            Some(Mmap { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: ptr/len come from a successful PROT_READ mapping
+            // that lives exactly as long as `self`; the pages are never
+            // written through this mapping.
+            unsafe {
+                core::slice::from_raw_parts(self.ptr as *const u8, self.len)
+            }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: ptr/len are the exact values returned by mmap and
+            // have not been unmapped before; double-unmap is impossible
+            // because Drop runs once.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset).context("read_exact_at")
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset)).context("seek")?;
+        std::io::Read::read_exact(&mut f, buf).context("read_exact")
+    }
+}
+
+fn write_all_at(file: &File, buf: &[u8], offset: u64) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.write_all_at(buf, offset).context("write_all_at")
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset)).context("seek")?;
+        f.write_all(buf).context("write_all")
+    }
+}
+
+enum Backing {
+    /// Default: the slab lives in a heap buffer (no persistence).
+    Mem(Vec<u8>),
+    /// Durable: slab + ids sidecar on disk, slab mmapped read-only.
+    Disk {
+        file: File,
+        #[cfg(unix)]
+        map: Option<mm::Mmap>,
+        len: u64,
+        slab_path: PathBuf,
+        ids_path: PathBuf,
+        ids_file: File,
+    },
+}
+
+struct Inner {
+    backing: Backing,
+    /// id → ordinal (dense, assigned at first observe).
+    index: HashMap<String, u32>,
+    /// ordinal → id (mirrors the ids sidecar).
+    ids: Vec<String>,
+    /// ordinal → byte offset of the newest live record, if any.
+    offsets: Vec<Option<u64>>,
+    live: usize,
+}
+
+/// The per-frequency series state store. One instance per `FreqPool`;
+/// all mutation happens under a single mutex so an observe's
+/// read-modify-write is atomic with respect to concurrent observes.
+pub struct StateStore {
+    s1: usize,
+    s2: usize,
+    // lint:lock-name(state.slab)
+    inner: Mutex<Inner>,
+}
+
+impl StateStore {
+    /// Payload bytes per record (everything after the CRC).
+    fn payload_bytes(&self) -> usize {
+        4 + 4 + 8 + 4 + 4 * (self.s1 + self.s2)
+    }
+
+    /// Total bytes per record, CRC included. Bounded by the acceptance
+    /// contract: ≤ `4 * (4 + S1 + S2 + 3 floats)`.
+    pub fn record_bytes(&self) -> usize {
+        4 + self.payload_bytes()
+    }
+
+    fn header(&self) -> Vec<u8> {
+        let mut h = Vec::with_capacity(HEADER_BYTES);
+        h.extend_from_slice(SLAB_MAGIC);
+        h.extend_from_slice(&SLAB_VERSION.to_le_bytes());
+        h.extend_from_slice(&(self.s1 as u32).to_le_bytes());
+        h.extend_from_slice(&(self.s2 as u32).to_le_bytes());
+        h
+    }
+
+    /// In-memory store for the given ring widths (`s1` clamped to ≥ 1,
+    /// `s2 == 0` means single seasonality).
+    pub fn in_memory(s1: usize, s2: usize) -> StateStore {
+        let store = StateStore {
+            s1: s1.max(1),
+            s2,
+            inner: Mutex::new(Inner {
+                backing: Backing::Mem(Vec::new()),
+                index: HashMap::new(),
+                ids: Vec::new(),
+                offsets: Vec::new(),
+                live: 0,
+            }),
+        };
+        if let Backing::Mem(buf) = &mut store.inner.lock().unwrap().backing {
+            buf.extend_from_slice(&store.header());
+        }
+        store
+    }
+
+    /// Open (or create) the durable store under `dir` — `dir/state.slab`
+    /// plus `dir/state.ids`. A torn tail from a crashed writer is
+    /// truncated; every intact record version before it survives.
+    pub fn open(dir: &Path, s1: usize, s2: usize) -> Result<StateStore> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("create state dir {}", dir.display()))?;
+        let slab_path = dir.join("state.slab");
+        let ids_path = dir.join("state.ids");
+        let store = StateStore {
+            s1: s1.max(1),
+            s2,
+            inner: Mutex::new(Inner {
+                backing: Backing::Mem(Vec::new()),
+                index: HashMap::new(),
+                ids: Vec::new(),
+                offsets: Vec::new(),
+                live: 0,
+            }),
+        };
+
+        // Ids sidecar first: line number = ordinal.
+        let mut ids: Vec<String> = Vec::new();
+        let mut index = HashMap::new();
+        if ids_path.exists() {
+            let text = fs::read_to_string(&ids_path)
+                .with_context(|| format!("read {}", ids_path.display()))?;
+            for line in text.lines() {
+                index.insert(line.to_string(), ids.len() as u32);
+                ids.push(line.to_string());
+            }
+        }
+
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&slab_path)
+            .with_context(|| format!("open {}", slab_path.display()))?;
+        let mut len = file
+            .metadata()
+            .context("slab metadata")?
+            .len();
+        if len == 0 {
+            write_all_at(&file, &store.header(), 0)?;
+            len = HEADER_BYTES as u64;
+        } else {
+            if len < HEADER_BYTES as u64 {
+                bail!("state slab {} shorter than its header",
+                      slab_path.display());
+            }
+            let mut head = [0u8; HEADER_BYTES];
+            read_exact_at(&file, &mut head, 0)?;
+            if &head[..8] != SLAB_MAGIC {
+                bail!("{} is not a state slab (bad magic)",
+                      slab_path.display());
+            }
+            let ver = u32::from_le_bytes([head[8], head[9], head[10],
+                                          head[11]]);
+            if ver != SLAB_VERSION {
+                bail!("state slab version {ver} unsupported");
+            }
+            let fs1 = u32::from_le_bytes([head[12], head[13], head[14],
+                                          head[15]]) as usize;
+            let fs2 = u32::from_le_bytes([head[16], head[17], head[18],
+                                          head[19]]) as usize;
+            if fs1 != store.s1 || fs2 != store.s2 {
+                bail!("state slab ring widths ({fs1},{fs2}) do not match \
+                       the serving config ({},{})", store.s1, store.s2);
+            }
+        }
+
+        // Replay: newest CRC-valid version per ordinal wins; stop (and
+        // truncate) at the first short or corrupt record — that is the
+        // torn tail of a crashed writer.
+        let rb = store.record_bytes() as u64;
+        let mut offsets: Vec<Option<u64>> = vec![None; ids.len()];
+        let mut live = 0usize;
+        let mut off = HEADER_BYTES as u64;
+        let mut buf = vec![0u8; rb as usize];
+        while off + rb <= len {
+            read_exact_at(&file, &mut buf, off)?;
+            let crc = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            if crc != crc32(&buf[4..]) {
+                break;
+            }
+            let ord = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]])
+                as usize;
+            if ord >= ids.len() {
+                break;
+            }
+            if offsets[ord].is_none() {
+                live += 1;
+            }
+            offsets[ord] = Some(off);
+            off += rb;
+        }
+        if off < len {
+            file.set_len(off).context("truncate torn slab tail")?;
+        }
+        len = off;
+
+        let ids_file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&ids_path)
+            .with_context(|| format!("open {}", ids_path.display()))?;
+        {
+            let mut inner = store.inner.lock().unwrap();
+            inner.backing = Backing::Disk {
+                #[cfg(unix)]
+                map: mm::Mmap::map(&file, len as usize),
+                file,
+                len,
+                slab_path,
+                ids_path,
+                ids_file,
+            };
+            inner.index = index;
+            inner.ids = ids;
+            inner.offsets = offsets;
+            inner.live = live;
+        }
+        Ok(store)
+    }
+
+    pub fn s1(&self) -> usize {
+        self.s1
+    }
+
+    pub fn s2(&self) -> usize {
+        self.s2
+    }
+
+    /// Number of series with live state.
+    pub fn series(&self) -> usize {
+        self.inner.lock().unwrap().live
+    }
+
+    /// Current slab footprint in bytes (header + all record versions).
+    pub fn bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        match &inner.backing {
+            Backing::Mem(buf) => buf.len() as u64,
+            Backing::Disk { len, .. } => *len,
+        }
+    }
+
+    fn encode_record(&self, ord: u32, rec: &SeriesRecord) -> Result<Vec<u8>> {
+        if rec.state.ring1.len() != self.s1
+            || rec.state.ring2.len() != self.s2
+        {
+            bail!("record ring widths ({},{}) do not match the store \
+                   ({},{})", rec.state.ring1.len(), rec.state.ring2.len(),
+                  self.s1, self.s2);
+        }
+        let observed = u32::try_from(rec.state.observed)
+            .map_err(|_| anyhow!("observed count {} exceeds the record \
+                                  format", rec.state.observed))?;
+        let mut body = Vec::with_capacity(self.payload_bytes());
+        body.extend_from_slice(&ord.to_le_bytes());
+        body.extend_from_slice(&observed.to_le_bytes());
+        body.extend_from_slice(&rec.generation.to_le_bytes());
+        body.extend_from_slice(&rec.state.level.to_le_bytes());
+        for v in rec.state.ring1.iter().chain(rec.state.ring2.iter()) {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        Ok(out)
+    }
+
+    fn decode_record(&self, buf: &[u8]) -> SeriesRecord {
+        let observed =
+            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as u64;
+        let generation = u64::from_le_bytes([
+            buf[12], buf[13], buf[14], buf[15], buf[16], buf[17], buf[18],
+            buf[19],
+        ]);
+        let f = |i: usize| {
+            f32::from_le_bytes([buf[20 + 4 * i], buf[21 + 4 * i],
+                                buf[22 + 4 * i], buf[23 + 4 * i]])
+        };
+        let level = f(0);
+        let ring1 = (0..self.s1).map(|i| f(1 + i)).collect();
+        let ring2 = (0..self.s2).map(|i| f(1 + self.s1 + i)).collect();
+        SeriesRecord {
+            state: EsState { level, ring1, ring2, observed },
+            generation,
+        }
+    }
+
+    fn read_record(&self, inner: &Inner, off: u64) -> Result<SeriesRecord> {
+        let rb = self.record_bytes();
+        match &inner.backing {
+            Backing::Mem(buf) => {
+                let o = off as usize;
+                Ok(self.decode_record(&buf[o..o + rb]))
+            }
+            Backing::Disk { file, len, .. } => {
+                #[cfg(unix)]
+                if let Backing::Disk { map: Some(m), .. } = &inner.backing {
+                    let o = off as usize;
+                    if off + rb as u64 <= m.as_slice().len() as u64 {
+                        return Ok(self.decode_record(
+                            &m.as_slice()[o..o + rb]));
+                    }
+                }
+                if off + rb as u64 > *len {
+                    bail!("record offset {off} past slab end {len}");
+                }
+                let mut buf = vec![0u8; rb];
+                read_exact_at(file, &mut buf, off)?;
+                Ok(self.decode_record(&buf))
+            }
+        }
+    }
+
+    /// Look up a series' live state.
+    pub fn get(&self, id: &str) -> Result<Option<SeriesRecord>> {
+        let inner = self.inner.lock().unwrap();
+        let Some(&ord) = inner.index.get(id) else {
+            return Ok(None);
+        };
+        match inner.offsets.get(ord as usize).copied().flatten() {
+            Some(off) => Ok(Some(self.read_record(&inner, off)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Atomic read-modify-write: `f` sees the current record (if any)
+    /// and returns the replacement. Returns the stored record and
+    /// whether the series was newly created. The whole operation runs
+    /// under the slab lock, so concurrent observes of one series
+    /// serialize instead of losing updates.
+    pub fn update<F>(&self, id: &str, f: F) -> Result<(SeriesRecord, bool)>
+    where
+        F: FnOnce(Option<SeriesRecord>) -> Result<SeriesRecord>,
+    {
+        if id.is_empty() || id.contains('\n') || id.contains('\r') {
+            bail!("invalid series id");
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let existing_ord = inner.index.get(id).copied();
+        let current = match existing_ord {
+            Some(ord) => {
+                match inner.offsets.get(ord as usize).copied().flatten() {
+                    Some(off) => Some(self.read_record(&inner, off)?),
+                    None => None,
+                }
+            }
+            None => None,
+        };
+        let was_new = current.is_none();
+        let rec = f(current)?;
+
+        // Assign an ordinal (persisting the id first, so a crash between
+        // the two appends leaves an id without a record — harmless).
+        let ord = match existing_ord {
+            Some(o) => o,
+            None => {
+                let o = inner.ids.len() as u32;
+                if let Backing::Disk { ids_file, .. } = &mut inner.backing {
+                    use std::io::Write;
+                    ids_file
+                        .write_all(format!("{id}\n").as_bytes())
+                        .context("append state.ids")?;
+                }
+                inner.ids.push(id.to_string());
+                inner.index.insert(id.to_string(), o);
+                inner.offsets.push(None);
+                o
+            }
+        };
+
+        let bytes = self.encode_record(ord, &rec)?;
+        let off = match &mut inner.backing {
+            Backing::Mem(buf) => {
+                let off = buf.len() as u64;
+                buf.extend_from_slice(&bytes);
+                off
+            }
+            Backing::Disk { file, len, .. } => {
+                let off = *len;
+                write_all_at(file, &bytes, off)?;
+                *len = off + bytes.len() as u64;
+                off
+            }
+        };
+        if inner.offsets[ord as usize].is_none() {
+            inner.live += 1;
+        }
+        inner.offsets[ord as usize] = Some(off);
+
+        // Auto-compact once the slab is mostly dead versions.
+        let total = match &inner.backing {
+            Backing::Mem(buf) => buf.len() as u64,
+            Backing::Disk { len, .. } => *len,
+        };
+        let live_bytes = HEADER_BYTES as u64
+            + inner.live as u64 * self.record_bytes() as u64;
+        if total >= COMPACT_MIN_BYTES && live_bytes * 4 <= total {
+            self.compact_locked(&mut inner)?;
+        }
+        Ok((rec, was_new))
+    }
+
+    /// Rewrite the slab keeping only the newest version of each record,
+    /// publishing via write-then-rename.
+    pub fn compact(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.compact_locked(&mut inner)
+    }
+
+    fn compact_locked(&self, inner: &mut Inner) -> Result<()> {
+        let rb = self.record_bytes() as u64;
+        let ordinals: Vec<(usize, u64)> = inner
+            .offsets
+            .iter()
+            .enumerate()
+            .filter_map(|(ord, off)| off.map(|o| (ord, o)))
+            .collect();
+        let mut fresh = self.header();
+        let mut new_offsets: Vec<Option<u64>> = vec![None; inner.ids.len()];
+        for (ord, off) in ordinals {
+            let rec = self.read_record(inner, off)?;
+            let bytes = self.encode_record(ord as u32, &rec)?;
+            new_offsets[ord] = Some(fresh.len() as u64);
+            fresh.extend_from_slice(&bytes);
+        }
+        debug_assert_eq!(fresh.len() as u64,
+                         HEADER_BYTES as u64 + inner.live as u64 * rb);
+        match &mut inner.backing {
+            Backing::Mem(buf) => {
+                *buf = fresh;
+            }
+            Backing::Disk { file, len, slab_path, .. } => {
+                let tmp = slab_path.with_extension("slab.tmp");
+                fs::write(&tmp, &fresh)
+                    .with_context(|| format!("write {}", tmp.display()))?;
+                let tmp_file = File::open(&tmp).context("reopen tmp slab")?;
+                tmp_file.sync_data().context("sync tmp slab")?;
+                fs::rename(&tmp, &*slab_path)
+                    .with_context(|| format!("publish {}",
+                                             slab_path.display()))?;
+                let reopened = OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .open(&*slab_path)
+                    .context("reopen compacted slab")?;
+                *len = fresh.len() as u64;
+                *file = reopened;
+            }
+        }
+        #[cfg(unix)]
+        if let Backing::Disk { file, map, len, .. } = &mut inner.backing {
+            *map = mm::Mmap::map(file, *len as usize);
+        }
+        inner.offsets = new_offsets;
+        Ok(())
+    }
+
+    /// Serialize every live record (with its id) into a self-contained
+    /// sidecar file — the checkpoint writer calls this so a reload on a
+    /// fresh process restores the live states alongside the weights.
+    pub fn export_to(&self, path: &Path) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = self.header();
+        let live: Vec<(usize, u64)> = inner
+            .offsets
+            .iter()
+            .enumerate()
+            .filter_map(|(ord, off)| off.map(|o| (ord, o)))
+            .collect();
+        out.extend_from_slice(&(live.len() as u32).to_le_bytes());
+        for (ord, off) in live {
+            let rec = self.read_record(&inner, off)?;
+            let id = inner.ids[ord].as_bytes();
+            out.extend_from_slice(&(id.len() as u32).to_le_bytes());
+            out.extend_from_slice(id);
+            out.extend_from_slice(&self.encode_record(ord as u32, &rec)?);
+        }
+        let tmp = path.with_extension("state.tmp");
+        fs::write(&tmp, &out)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("publish {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a sidecar written by [`export_to`](Self::export_to),
+    /// merging its records into this store (imported records replace
+    /// same-id state).
+    pub fn import_from(&self, path: &Path) -> Result<usize> {
+        let mut bytes = Vec::new();
+        File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .with_context(|| format!("read {}", path.display()))?;
+        if bytes.len() < HEADER_BYTES + 4 || &bytes[..8] != SLAB_MAGIC {
+            bail!("{} is not a state sidecar", path.display());
+        }
+        let fs1 = u32::from_le_bytes([bytes[12], bytes[13], bytes[14],
+                                      bytes[15]]) as usize;
+        let fs2 = u32::from_le_bytes([bytes[16], bytes[17], bytes[18],
+                                      bytes[19]]) as usize;
+        if fs1 != self.s1 || fs2 != self.s2 {
+            bail!("state sidecar ring widths ({fs1},{fs2}) do not match \
+                   the store ({},{})", self.s1, self.s2);
+        }
+        let count = u32::from_le_bytes([
+            bytes[HEADER_BYTES], bytes[HEADER_BYTES + 1],
+            bytes[HEADER_BYTES + 2], bytes[HEADER_BYTES + 3],
+        ]) as usize;
+        let rb = self.record_bytes();
+        let mut i = HEADER_BYTES + 4;
+        let mut imported = 0usize;
+        for _ in 0..count {
+            if i + 4 > bytes.len() {
+                bail!("truncated state sidecar");
+            }
+            let id_len = u32::from_le_bytes([bytes[i], bytes[i + 1],
+                                             bytes[i + 2], bytes[i + 3]])
+                as usize;
+            i += 4;
+            if i + id_len + rb > bytes.len() {
+                bail!("truncated state sidecar");
+            }
+            let id = std::str::from_utf8(&bytes[i..i + id_len])
+                .context("state sidecar id is not utf-8")?
+                .to_string();
+            i += id_len;
+            let buf = &bytes[i..i + rb];
+            let crc = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            if crc != crc32(&buf[4..]) {
+                bail!("state sidecar record for '{id}' fails its CRC");
+            }
+            let rec = self.decode_record(buf);
+            i += rb;
+            self.update(&id, |_| Ok(rec))?;
+            imported += 1;
+        }
+        Ok(imported)
+    }
+
+    /// Ids of every series with live state (test/debug helper; the hot
+    /// path never materializes this).
+    pub fn ids(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .offsets
+            .iter()
+            .enumerate()
+            .filter_map(|(ord, off)| {
+                off.map(|_| inner.ids[ord].clone())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::es_state_seed;
+
+    fn rec(seed: f32, s1: usize, s2: usize, observed: u64) -> SeriesRecord {
+        SeriesRecord {
+            state: EsState {
+                level: seed,
+                ring1: (0..s1).map(|i| seed + i as f32).collect(),
+                ring2: (0..s2).map(|i| seed - i as f32).collect(),
+                observed,
+            },
+            generation: 7,
+        }
+    }
+
+    #[test]
+    fn record_size_within_acceptance_bound() {
+        for (s1, s2) in [(1usize, 0usize), (12, 0), (24, 168)] {
+            let st = StateStore::in_memory(s1, s2);
+            assert!(st.record_bytes() <= 4 * (4 + s1 + s2 + 3),
+                    "({s1},{s2}): {} bytes", st.record_bytes());
+        }
+    }
+
+    #[test]
+    fn memory_store_round_trips_and_counts() {
+        let st = StateStore::in_memory(4, 0);
+        assert_eq!(st.series(), 0);
+        assert!(st.get("a").unwrap().is_none());
+        let (r, new) = st.update("a", |cur| {
+            assert!(cur.is_none());
+            Ok(rec(1.0, 4, 0, 10))
+        }).unwrap();
+        assert!(new);
+        assert_eq!(r.state.observed, 10);
+        let (_, new) = st.update("a", |cur| {
+            let mut r = cur.unwrap();
+            r.state.observed += 1;
+            Ok(r)
+        }).unwrap();
+        assert!(!new);
+        assert_eq!(st.series(), 1);
+        assert_eq!(st.get("a").unwrap().unwrap().state.observed, 11);
+    }
+
+    #[test]
+    fn disk_store_persists_across_reopen() {
+        let dir = std::env::temp_dir()
+            .join(format!("fesrnn-state-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let st = StateStore::open(&dir, 12, 0).unwrap();
+            for i in 0..50 {
+                st.update(&format!("s{i}"), |_| Ok(rec(i as f32, 12, 0, i)))
+                    .unwrap();
+            }
+            // Update a subset so multiple versions exist.
+            for i in 0..10 {
+                st.update(&format!("s{i}"), |cur| {
+                    let mut r = cur.unwrap();
+                    r.state.level += 100.0;
+                    Ok(r)
+                }).unwrap();
+            }
+        }
+        let st = StateStore::open(&dir, 12, 0).unwrap();
+        assert_eq!(st.series(), 50);
+        assert_eq!(st.get("s3").unwrap().unwrap().state.level, 103.0);
+        assert_eq!(st.get("s30").unwrap().unwrap().state.level, 30.0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_without_losing_older_versions() {
+        let dir = std::env::temp_dir()
+            .join(format!("fesrnn-state-torn-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let st = StateStore::open(&dir, 4, 0).unwrap();
+            st.update("a", |_| Ok(rec(1.0, 4, 0, 5))).unwrap();
+            st.update("b", |_| Ok(rec(2.0, 4, 0, 6))).unwrap();
+        }
+        // Simulate a crash mid-append: garbage half-record at the tail.
+        let slab = dir.join("state.slab");
+        let mut bytes = fs::read(&slab).unwrap();
+        bytes.extend_from_slice(&[0xAB; 13]);
+        fs::write(&slab, &bytes).unwrap();
+        let st = StateStore::open(&dir, 4, 0).unwrap();
+        assert_eq!(st.series(), 2);
+        assert_eq!(st.get("a").unwrap().unwrap().state.observed, 5);
+        assert_eq!(st.get("b").unwrap().unwrap().state.observed, 6);
+        // A corrupted full-size tail record is also dropped.
+        let mut bytes = fs::read(&slab).unwrap();
+        let rb = st.record_bytes();
+        bytes.extend_from_slice(&vec![0x5A; rb]);
+        drop(st);
+        fs::write(&slab, &bytes).unwrap();
+        let st = StateStore::open(&dir, 4, 0).unwrap();
+        assert_eq!(st.series(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_bounds_slab_growth() {
+        let st = StateStore::in_memory(2, 0);
+        let rb = st.record_bytes() as u64;
+        for round in 0..200u64 {
+            for i in 0..40 {
+                st.update(&format!("s{i}"), |_| Ok(rec(1.0, 2, 0, round)))
+                    .unwrap();
+            }
+        }
+        st.compact().unwrap();
+        assert_eq!(st.series(), 40);
+        assert_eq!(st.bytes(), HEADER_BYTES as u64 + 40 * rb);
+        assert_eq!(st.get("s39").unwrap().unwrap().state.observed, 199);
+    }
+
+    #[test]
+    fn sidecar_export_import_round_trip() {
+        let dir = std::env::temp_dir()
+            .join(format!("fesrnn-state-side-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let st = StateStore::in_memory(3, 2);
+        st.update("x", |_| Ok(rec(4.0, 3, 2, 9))).unwrap();
+        st.update("y", |_| Ok(rec(5.0, 3, 2, 11))).unwrap();
+        let side = dir.join("ck.state");
+        st.export_to(&side).unwrap();
+        let fresh = StateStore::in_memory(3, 2);
+        assert_eq!(fresh.import_from(&side).unwrap(), 2);
+        assert_eq!(fresh.get("x").unwrap().unwrap(), rec(4.0, 3, 2, 9));
+        assert_eq!(fresh.get("y").unwrap().unwrap(), rec(5.0, 3, 2, 11));
+        // Width mismatch is a descriptive error, not silent corruption.
+        let wrong = StateStore::in_memory(4, 0);
+        assert!(wrong.import_from(&side).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hundred_thousand_series_round_trip() {
+        // Acceptance bar: the store round-trips ≥ 100k series per shard.
+        let st = StateStore::in_memory(1, 0);
+        for i in 0..100_000u64 {
+            let mut state = es_state_seed(&[i as f32 + 1.0, i as f32 + 2.0],
+                                          1, 0);
+            state.observed = i;
+            st.update(&format!("M4-{i}"), |_| {
+                Ok(SeriesRecord { state: state.clone(), generation: 1 })
+            }).unwrap();
+        }
+        assert_eq!(st.series(), 100_000);
+        assert_eq!(st.get("M4-99999").unwrap().unwrap().state.observed,
+                   99_999);
+        assert_eq!(st.bytes(),
+                   HEADER_BYTES as u64
+                       + 100_000 * st.record_bytes() as u64);
+    }
+}

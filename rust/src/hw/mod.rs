@@ -348,6 +348,123 @@ pub fn es_forecast(out: &EsOutput, period: usize, horizon: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Live per-series ES state for the stateful serving path (online
+/// observe → forecast without retraining).
+///
+/// The seasonal state is held as a *phase ring*: `ring1[t % S1]` is the
+/// most recent seasonal value for phase `t % S1`. Because the batch
+/// recurrence reads `seas[t]` and writes `seas[t + S]` — the same phase
+/// slot — advancing the ring in place replays **exactly** the f32
+/// operation sequence of [`es_filter`] / [`es_dual_filter`], so an
+/// incremental advance from stored state is bit-identical to filtering
+/// the full extended history with the same seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EsState {
+    /// Most recent smoothed level `l_t`.
+    pub level: f32,
+    /// Primary seasonal ring, length S1 (`[1.0]` for non-seasonal).
+    pub ring1: Vec<f32>,
+    /// Secondary seasonal ring, length S2; empty for single-seasonality.
+    pub ring2: Vec<f32>,
+    /// Number of observations consumed so far (the next time index).
+    pub observed: u64,
+}
+
+impl EsState {
+    /// Advance the recurrence over `y`, starting at time `self.observed`.
+    ///
+    /// Mirrors the `t > 0` branch of [`es_filter_into`] (single) or
+    /// [`es_dual_filter_into`] (dual, when `ring2` is non-empty) exactly;
+    /// the `t == 0` branch fires only on a freshly seeded state.
+    pub fn advance(&mut self, y: &[f32], alpha: f32, gamma1: f32,
+                   gamma2: f32) {
+        let s1 = self.ring1.len().max(1) as u64;
+        if self.ring2.is_empty() {
+            for (i, &y_t) in y.iter().enumerate() {
+                let t = self.observed + i as u64;
+                let p1 = (t % s1) as usize;
+                let s_t = self.ring1[p1];
+                let l_t = if t == 0 {
+                    y_t / s_t
+                } else {
+                    alpha * y_t / s_t + (1.0 - alpha) * self.level
+                };
+                self.ring1[p1] = gamma1 * y_t / l_t + (1.0 - gamma1) * s_t;
+                self.level = l_t;
+            }
+        } else {
+            let s2 = self.ring2.len() as u64;
+            for (i, &y_t) in y.iter().enumerate() {
+                let t = self.observed + i as u64;
+                let p1 = (t % s1) as usize;
+                let p2 = (t % s2) as usize;
+                let s1_t = self.ring1[p1];
+                let s2_t = self.ring2[p2];
+                let denom = s1_t * s2_t;
+                let l_t = if t == 0 {
+                    y_t / denom
+                } else {
+                    alpha * y_t / denom + (1.0 - alpha) * self.level
+                };
+                self.ring1[p1] =
+                    gamma1 * y_t / (l_t * s2_t) + (1.0 - gamma1) * s1_t;
+                self.ring2[p2] =
+                    gamma2 * y_t / (l_t * s1_t) + (1.0 - gamma2) * s2_t;
+                self.level = l_t;
+            }
+        }
+        self.observed += y.len() as u64;
+    }
+
+    /// Holt-Winters h-step forecast from the live state.
+    ///
+    /// For horizon step `h` the applicable phase is `(observed + h) % S`,
+    /// which is the same seasonal value [`es_forecast`] reads at
+    /// `seas[c + h % S]` — so a state advanced over history `y` forecasts
+    /// bit-identically to `es_forecast(&es_filter(y, ..), ..)`.
+    pub fn forecast(&self, horizon: usize) -> Vec<f32> {
+        let s1 = self.ring1.len().max(1) as u64;
+        (0..horizon as u64)
+            .map(|h| {
+                let t = self.observed + h;
+                let mut v = self.level * self.ring1[(t % s1) as usize];
+                if !self.ring2.is_empty() {
+                    v *= self.ring2[(t % self.ring2.len() as u64) as usize];
+                }
+                v
+            })
+            .collect()
+    }
+}
+
+/// Seed a fresh [`EsState`] from a series' first observation batch.
+///
+/// The seasonal rings come from the same ratio-to-moving-average
+/// decomposition as [`primer_for`] (dual configs decompose the primary
+/// cycle first, then the residual), but are used directly — no log-space
+/// round trip — so the seeded state, the forecast-from-extended-history
+/// oracle, and the lanes cross-check all share one derivation. The
+/// smoothing coefficients are the serving-path constants
+/// ([`INIT_ALPHA`], [`INIT_GAMMA`]); training refines per-series
+/// coefficients, the observe path deliberately does not.
+pub fn es_state_seed(y: &[f32], s1: usize, s2: usize) -> EsState {
+    let s1 = s1.max(1);
+    let (ring1, ring2) = if s2 > 0 {
+        let idx1 = seasonal_indices(y, s1);
+        let residual: Vec<f32> = y
+            .iter()
+            .enumerate()
+            .map(|(t, v)| v / idx1[t % s1].max(1e-6))
+            .collect();
+        (idx1, seasonal_indices(&residual, s2))
+    } else {
+        (seasonal_indices(y, s1), Vec::new())
+    };
+    let mut st = EsState { level: 0.0, ring1, ring2, observed: 0 };
+    st.advance(y, INIT_ALPHA, INIT_GAMMA, INIT_GAMMA);
+    st
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -621,5 +738,99 @@ mod tests {
         assert!((out.seas[c] / out.seas[c + 1] - 0.7 / 1.3).abs() < 0.05);
         let fc = es_forecast(&out, 2, 4);
         assert!((fc[0] / fc[1] - 0.7 / 1.3).abs() < 0.05);
+    }
+
+    fn demo_series(n: usize, s1: usize, s2: usize) -> Vec<f32> {
+        let mut rng = Rng::new(0x5eed);
+        (0..n)
+            .map(|t| {
+                200.0
+                    * (1.0 + 0.2 * ((t % s1.max(1)) as f32 - 1.0))
+                    * (1.0 + if s2 > 0 {
+                        0.1 * ((t % s2) as f32 - 2.0) / s2 as f32
+                    } else {
+                        0.0
+                    })
+                    * rng.uniform(0.95, 1.05) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn es_state_advance_is_bit_identical_to_batch_filter() {
+        let s = 12;
+        let y = demo_series(90, s, 0);
+        let (first, rest) = y.split_at(40);
+        let mut st = es_state_seed(first, s, 0);
+        // Feed the remainder in uneven chunks.
+        for chunk in rest.chunks(7) {
+            st.advance(chunk, INIT_ALPHA, INIT_GAMMA, INIT_GAMMA);
+        }
+        // Oracle: one batch filter over the full history with the seed
+        // rings from the FIRST batch (the seeding contract).
+        let s_init = seasonal_indices(first, s);
+        let out = es_filter(&y, INIT_ALPHA, INIT_GAMMA, &s_init);
+        let c = y.len();
+        assert_eq!(st.level, out.levels[c - 1]);
+        for p in 0..s {
+            // ring[p] holds the most recent seasonal value for phase p,
+            // which the batch filter leaves at seas[c + ((p + s - c % s) % s)].
+            let j = (p + s - c % s) % s;
+            assert_eq!(st.ring1[p], out.seas[c + j], "phase {p}");
+        }
+        assert_eq!(st.forecast(6), es_forecast(&out, s, 6));
+    }
+
+    #[test]
+    fn es_state_dual_advance_matches_batch_dual_filter() {
+        let (s1, s2) = (24, 168);
+        let y = demo_series(400, s1, s2);
+        let (first, rest) = y.split_at(336);
+        let mut st = es_state_seed(first, s1, s2);
+        st.advance(rest, INIT_ALPHA, INIT_GAMMA, INIT_GAMMA);
+        // Oracle: re-derive the seed rings exactly as es_state_seed does,
+        // then batch-filter the whole history.
+        let idx1 = seasonal_indices(first, s1);
+        let residual: Vec<f32> = first
+            .iter()
+            .enumerate()
+            .map(|(t, v)| v / idx1[t % s1].max(1e-6))
+            .collect();
+        let idx2 = seasonal_indices(&residual, s2);
+        let (levels, e1, e2) =
+            es_dual_filter(&y, INIT_ALPHA, INIT_GAMMA, INIT_GAMMA, &idx1,
+                           &idx2);
+        let c = y.len();
+        assert_eq!(st.level, levels[c - 1]);
+        for p in 0..s1 {
+            let j = (p + s1 - c % s1) % s1;
+            assert_eq!(st.ring1[p], e1[c + j], "ring1 phase {p}");
+        }
+        for p in 0..s2 {
+            let j = (p + s2 - c % s2) % s2;
+            assert_eq!(st.ring2[p], e2[c + j], "ring2 phase {p}");
+        }
+        // Forecast oracle straight off the batch filter tails.
+        let h = 48;
+        let fc = st.forecast(h);
+        for (i, got) in fc.iter().enumerate() {
+            let want = levels[c - 1]
+                * e1[c + i % s1]
+                * e2[c + i % s2];
+            assert_eq!(*got, want, "h={i}");
+        }
+    }
+
+    #[test]
+    fn es_state_seed_handles_short_and_flat_series() {
+        // Too short for decomposition: rings fall back to 1.0 and the
+        // level tracks the smoothed series.
+        let st = es_state_seed(&[5.0, 5.0, 5.0], 12, 0);
+        assert_eq!(st.observed, 3);
+        assert!((st.level - 5.0).abs() < 1e-3);
+        assert!(st.forecast(4).iter().all(|v| (v - 5.0).abs() < 1e-2));
+        // Non-seasonal config (s1 = 1) keeps a single-slot ring.
+        let st = es_state_seed(&[10.0, 12.0, 11.0, 13.0], 1, 0);
+        assert_eq!(st.ring1.len(), 1);
     }
 }

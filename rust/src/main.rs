@@ -24,9 +24,9 @@ use fast_esrnn::config::{Category, Frequency, NetworkConfig, TrainConfig,
                          ALL_CATEGORIES, MODELED_FREQS};
 use fast_esrnn::coordinator::{checkpoint, EvalSplit, ModelState, Trainer};
 use fast_esrnn::data::{self, stats, Corpus, GenOptions};
-use fast_esrnn::forecast::{http, ForecastRequest, HttpServer, QueueFull,
-                           RemoteOptions, RemoteShard, ServiceOptions,
-                           ServingStack, ShardedStack};
+use fast_esrnn::forecast::{api, http, ForecastRequest, HttpServer,
+                           QueueFull, RemoteOptions, RemoteShard,
+                           ServiceOptions, ServingStack, ShardedStack};
 use fast_esrnn::metrics::{mase, smape};
 use fast_esrnn::runtime::{backend_with_artifacts, Backend};
 use fast_esrnn::telemetry::promtext::{self, Sample};
@@ -282,6 +282,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("queue-limit", "1024",
              "per-pool backpressure: queued requests beyond this are shed \
               with 429 (0 = unbounded)")
+        .opt("state-dir", "",
+             "persist per-series ES state under this directory (one slab \
+              per frequency, survives restarts); empty = in-memory only")
         .opt("http", "",
              "also serve HTTP on this address (e.g. 127.0.0.1:8080)")
         .opt("requests", "64",
@@ -307,6 +310,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let opts = ServiceOptions {
         workers: a.get_usize("workers")?.max(1),
         queue_limit: a.get_usize("queue-limit")?,
+        state_dir: match a.get("state-dir") {
+            "" => None,
+            dir => Some(PathBuf::from(dir)),
+        },
         ..Default::default()
     };
 
@@ -341,12 +348,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let artifacts = PathBuf::from(a.get("artifacts"));
     let sharded = ShardedStack::new();
     for s in 0..n_shards {
+        // Series state lives per ring segment: each local shard gets
+        // its own slab subdirectory so two pools never contend for one
+        // file.
+        let mut shard_opts = opts.clone();
+        if let Some(dir) = &opts.state_dir {
+            shard_opts.state_dir = Some(dir.join(format!("shard-{s}")));
+        }
         let mut stack = ServingStack::new();
         for (freq, state) in &states {
             let (bn, art) = (backend_name.clone(), artifacts.clone());
             stack.start_pool(
                 Arc::new(move || backend_with_artifacts(&bn, Some(&art))),
-                *freq, state.clone(), opts.clone())?;
+                *freq, state.clone(), shard_opts.clone())?;
         }
         sharded.add_shard(&format!("shard-{s}"), stack)?;
     }
@@ -370,9 +384,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let server = HttpServer::start_sharded(Arc::clone(&sharded),
                                                a.get("http"))?;
         let addr = server.addr().to_string();
-        println!("HTTP front-end on http://{addr}  (POST /v1/forecast · \
-                  GET /v1/stats · GET /v1/metrics · GET /v1/healthz · \
-                  POST /v1/reload)");
+        println!("HTTP front-end on http://{addr}  \
+                  (POST /v1/series/{{id}}/observe · \
+                  GET /v1/series/{{id}}/forecast · \
+                  GET /v1/series/{{id}}/state · \
+                  POST /v1/forecast [deprecated] · GET /v1/stats · \
+                  GET /v1/metrics · GET /v1/healthz · POST /v1/reload)");
         if n_req == 0 {
             loop {
                 std::thread::park(); // serve until killed
@@ -415,7 +432,8 @@ fn demo_series(freq: Frequency, scale: usize)
 }
 
 /// Drive one frequency through the real HTTP wire on a single
-/// keep-alive connection: POST forecasts, report throughput.
+/// keep-alive connection: POST forecasts, report throughput, then
+/// exercise the stateful lane (observe → stateful forecast → state).
 fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
              -> Result<()> {
     let (net, candidates) = demo_series(freq, scale)?;
@@ -424,16 +442,19 @@ fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
     let mut ok = 0usize;
     for i in 0..n_req {
         let s = &candidates[i % candidates.len()];
-        let body = Json::obj(vec![
-            ("freq", Json::str(freq.name())),
-            ("id", Json::str(s.id.clone())),
-            ("category", Json::str(s.category.name())),
-            ("values", Json::arr_f32(&s.values)),
-        ])
+        let body = api::ForecastRequest {
+            freq: Some(freq),
+            id: Some(s.id.clone()),
+            category: Some(s.category),
+            values: s.values.clone(),
+        }
+        .to_json()
         .to_string();
         let reply = client.request("POST", "/v1/forecast", Some(&body))?;
         if reply.code == 200
-            && Json::parse(&reply.body)?.get("forecast")?.as_f32_vec()?.len()
+            && api::ForecastResponse::from_json(&Json::parse(&reply.body)?)?
+                .forecast
+                .len()
                 == net.horizon
         {
             ok += 1;
@@ -443,6 +464,31 @@ fn http_demo(addr: &str, freq: Frequency, n_req: usize, scale: usize)
     println!("[{}] HTTP keep-alive: {ok}/{n_req} ok in {secs:.3}s \
               ({:.1} req/s)",
              freq.name(), ok as f64 / secs);
+
+    // Stateful lane: feed one series' history as observations, then
+    // forecast from the stored state — no history on the wire.
+    let s = &candidates[0];
+    let observe = api::ObserveRequest {
+        freq: Some(freq),
+        values: s.values.clone(),
+        t0: None,
+    }
+    .to_json()
+    .to_string();
+    let path = format!("/v1/series/{}/observe", s.id);
+    let reply = client.request("POST", &path, Some(&observe))?;
+    if reply.code != 200 {
+        bail!("POST {path} → HTTP {}: {}", reply.code, reply.body);
+    }
+    let obs = api::ObserveResponse::from_json(&Json::parse(&reply.body)?)?;
+    let path = format!("/v1/series/{}/forecast?freq={}", s.id, freq.name());
+    let reply = client.request("GET", &path, None)?;
+    if reply.code != 200 {
+        bail!("GET {path} → HTTP {}: {}", reply.code, reply.body);
+    }
+    let fc = api::ForecastResponse::from_json(&Json::parse(&reply.body)?)?;
+    println!("    stateful `{}`: observed {} → {:?}", obs.id, obs.observed,
+             &fc.forecast[..4.min(fc.forecast.len())]);
     Ok(())
 }
 
@@ -511,9 +557,10 @@ fn render_top(addr: &str, samples: &[Sample],
     let _ = writeln!(out, "fast-esrnn top — {addr}");
     let _ = writeln!(
         out,
-        "{:<10} {:<10} {:>6} {:>6} {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "{:<10} {:<10} {:>6} {:>6} {:>10} {:>8} {:>8} {:>8} {:>8} {:>9} \
+         {:>8}",
         "SHARD", "FREQ", "DEPTH", "LIMIT", "ACCEPTED", "SHED/S", "P50MS",
-        "P95MS", "P99MS");
+        "P95MS", "P99MS", "OBSERVES", "SERIES");
     // Every bound pool exposes fesrnn_queue_accepted_total, so its
     // {shard, freq} pairs enumerate the rows.
     let mut keys: Vec<(String, String)> = samples
@@ -545,12 +592,14 @@ fn render_top(addr: &str, samples: &[Sample],
         let _ = writeln!(
             out,
             "{:<10} {:<10} {:>6} {:>6} {:>10} {:>8.1} {:>8.2} {:>8.2} \
-             {:>8.2}",
+             {:>8.2} {:>9} {:>8}",
             shard, freq,
             val("fesrnn_queue_depth") as u64,
             val("fesrnn_queue_limit") as u64,
             val("fesrnn_queue_accepted_total") as u64,
-            shed_rate, quant(0.50), quant(0.95), quant(0.99));
+            shed_rate, quant(0.50), quant(0.95), quant(0.99),
+            val("fesrnn_observe_requests_total") as u64,
+            val("fesrnn_state_series") as u64);
     }
     let conns =
         promtext::value(samples, "fesrnn_http_connections_total", &[]);
@@ -576,6 +625,24 @@ fn render_top(addr: &str, samples: &[Sample],
             .map(|s| s.value)
             .sum()
     };
+    // Stateful-serving footer: state-store footprint plus the forecast
+    // cache's hit economy, summed over {shard, freq} pools.
+    let observes = sum("fesrnn_observe_requests_total");
+    if observes > 0.0 {
+        let _ = writeln!(
+            out,
+            "observes {observes:.0} (stale {:.0} · fan-outs {:.0}, errors \
+             {:.0}) · state {:.0} series / {:.0} KiB · forecast cache \
+             {:.0} hits / {:.0} misses / {:.0} invalidations",
+            sum("fesrnn_observe_stale_total"),
+            sum("fesrnn_observe_fanout_total"),
+            sum("fesrnn_observe_fanout_errors_total"),
+            sum("fesrnn_state_series"),
+            sum("fesrnn_state_bytes") / 1024.0,
+            sum("fesrnn_state_cache_hits_total"),
+            sum("fesrnn_state_cache_misses_total"),
+            sum("fesrnn_state_cache_invalidations_total"));
+    }
     let inflight = sum("fesrnn_remote_inflight");
     let remotes = samples
         .iter()

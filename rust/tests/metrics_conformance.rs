@@ -10,7 +10,13 @@
 //!   `accepted + shed == submitted` per `{shard, freq}`, and the
 //!   `/v1/metrics` values equal the `/v1/stats` values;
 //! * legacy unversioned paths are aliases: byte-identical payloads plus
-//!   `Deprecation` / `Link` headers that the `/v1` routes do not carry.
+//!   `Deprecation` / `Link` headers that the `/v1` routes do not carry;
+//! * the resource-first series routes (`POST /v1/series/{id}/observe`,
+//!   `GET /v1/series/{id}/forecast`, `GET /v1/series/{id}/state`) speak
+//!   the typed DTO shapes with `unknown_series` / `stale_observation`
+//!   envelope codes, and `POST /v1/forecast` is itself a deprecated
+//!   alias of the series spelling — same payload, successor `Link`,
+//!   alias-hit counter.
 //!
 //! Runs on the native backend with fresh weights (metric plumbing does
 //! not depend on trained weights), one starved pool per shard so both
@@ -245,4 +251,131 @@ fn metrics_scrapes_are_valid_monotonic_and_agree_with_stats() {
         assert_eq!(new.header("deprecation"), None,
                    "{v1} must not be marked deprecated");
     }
+}
+
+fn deprecated_hits(scraper: &mut HttpClient) -> f64 {
+    let reply = scraper.request("GET", "/v1/metrics", None).unwrap();
+    assert_eq!(reply.code, 200);
+    let samples = promtext::parse(&reply.body).unwrap();
+    promtext::value(&samples, "fesrnn_http_deprecated_requests_total", &[])
+}
+
+#[test]
+fn series_routes_conform_and_v1_forecast_is_a_deprecated_alias() {
+    let (server, _sharded) = start_ring();
+    let addr = server.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // Observe: seed a series through the resource route. The stack
+    // serves one frequency, so `freq` may be omitted from the body.
+    let values: Vec<f32> =
+        (0..16).map(|i| 100.0 + (i % 4) as f32 * 5.0).collect();
+    let body = Json::obj(vec![
+        ("t0", Json::num(0.0)),
+        ("values", Json::arr_f32(&values)),
+    ])
+    .to_string();
+    let reply = client
+        .request("POST", "/v1/series/s-conf/observe", Some(&body))
+        .unwrap();
+    assert_eq!(reply.code, 200, "observe failed: {}", reply.body);
+    let doc = Json::parse(&reply.body).unwrap();
+    assert_eq!(doc.get("id").unwrap().as_str().unwrap(), "s-conf");
+    assert_eq!(doc.get("freq").unwrap().as_str().unwrap(), FREQ.name());
+    assert_eq!(doc.get("observed").unwrap().as_f64().unwrap(), 16.0);
+    assert!(doc.get("new_series").unwrap().as_bool().unwrap());
+
+    // Stateful forecast + state routes: typed shapes, no deprecation
+    // headers, and the explicit `?freq=` spelling also resolves.
+    let fc = client
+        .request("GET", "/v1/series/s-conf/forecast", None)
+        .unwrap();
+    assert_eq!(fc.code, 200, "series forecast failed: {}", fc.body);
+    assert_eq!(fc.header("deprecation"), None);
+    let doc = Json::parse(&fc.body).unwrap();
+    assert_eq!(doc.get("id").unwrap().as_str().unwrap(), "s-conf");
+    assert_eq!(doc.get("forecast").unwrap().as_f32_vec().unwrap().len(),
+               8);
+    let st = client
+        .request("GET",
+                 &format!("/v1/series/s-conf/state?freq={}", FREQ.name()),
+                 None)
+        .unwrap();
+    assert_eq!(st.code, 200, "series state failed: {}", st.body);
+    assert_eq!(st.header("deprecation"), None);
+    let doc = Json::parse(&st.body).unwrap();
+    assert_eq!(doc.get("observed").unwrap().as_f64().unwrap(), 16.0);
+    assert_eq!(doc.get("seasonality").unwrap().as_f32_vec().unwrap()
+                   .len(),
+               4);
+    assert!(doc.get("seasonality2").unwrap().as_f32_vec().unwrap()
+               .is_empty());
+
+    // Typed envelope codes: an unseen id is `unknown_series` (404), a
+    // rewound batch is `stale_observation` (409), a batch past the tip
+    // is a plain 400 — all in the standard error envelope.
+    let missing = client
+        .request("GET", "/v1/series/nobody/forecast", None)
+        .unwrap();
+    assert_eq!(missing.code, 404);
+    let env = Json::parse(&missing.body).unwrap();
+    assert_eq!(env.get("error").unwrap().get("code").unwrap()
+                  .as_str().unwrap(),
+               "unknown_series");
+    let stale_body = Json::obj(vec![
+        ("t0", Json::num(3.0)),
+        ("values", Json::arr_f32(&[1.0])),
+    ])
+    .to_string();
+    let stale = client
+        .request("POST", "/v1/series/s-conf/observe", Some(&stale_body))
+        .unwrap();
+    assert_eq!(stale.code, 409, "rewound observe: {}", stale.body);
+    let env = Json::parse(&stale.body).unwrap();
+    assert_eq!(env.get("error").unwrap().get("code").unwrap()
+                  .as_str().unwrap(),
+               "stale_observation");
+    let gap_body = Json::obj(vec![
+        ("t0", Json::num(500.0)),
+        ("values", Json::arr_f32(&[1.0])),
+    ])
+    .to_string();
+    let gap = client
+        .request("POST", "/v1/series/s-conf/observe", Some(&gap_body))
+        .unwrap();
+    assert_eq!(gap.code, 400, "gapped observe: {}", gap.body);
+
+    // Series routes are /v1-only — the unversioned spelling is NOT a
+    // legacy alias (it never existed before the /v1 surface).
+    let unversioned = client
+        .request("GET", "/series/s-conf/state", None)
+        .unwrap();
+    assert_eq!(unversioned.code, 404);
+
+    // `POST /v1/forecast` keeps serving the PR-8 contract but is now a
+    // deprecated alias of the series spelling: same payload for the
+    // same request, successor `Link`, and the alias-hit counter moves.
+    let fbody = forecast_body("s-alias");
+    let before = deprecated_hits(&mut client);
+    let legacy = client
+        .request("POST", "/v1/forecast", Some(&fbody))
+        .unwrap();
+    assert_eq!(legacy.code, 200, "legacy forecast: {}", legacy.body);
+    assert_eq!(legacy.header("deprecation"), Some("true"),
+               "POST /v1/forecast must be marked deprecated");
+    assert_eq!(legacy.header("link"),
+               Some("</v1/series/{id}/forecast>; \
+                     rel=\"successor-version\""),
+               "POST /v1/forecast must link its successor template");
+    let successor = client
+        .request("POST", "/v1/series/s-alias/forecast", Some(&fbody))
+        .unwrap();
+    assert_eq!(successor.code, 200, "successor: {}", successor.body);
+    assert_eq!(successor.header("deprecation"), None);
+    assert_eq!(legacy.body, successor.body,
+               "the alias and the series route must serve identical \
+                payloads");
+    let after = deprecated_hits(&mut client);
+    assert!(after >= before + 1.0,
+            "alias hit was not counted: {before} -> {after}");
 }

@@ -1,0 +1,389 @@
+//! Stateful-serving suite — the contract under test:
+//!
+//! * **Observe ≡ refilter.** Feeding a series to the service in
+//!   several `observe` batches and asking for its stateful forecast
+//!   gives the same answer as running the batch ES filter over the
+//!   full concatenated history with the same seed rings — to 1e-4,
+//!   for the single-seasonality path, the §8.2 hourly dual path, and
+//!   the lane-vectorized kernels (three independent derivations of
+//!   one number).
+//! * **Crash safety.** A writer killed mid-append leaves a torn slab
+//!   tail; reopening truncates the tear, loses nothing older, and the
+//!   recovered state keeps advancing exactly like an uninterrupted
+//!   one.
+//! * **Exact accounting under sharding.** Interleaved observes and
+//!   forecasts across a 2-shard ring are each counted on exactly one
+//!   shard: per-shard `observe_requests` sum to the number issued,
+//!   stale rejections are typed and tallied, and R = 2 replica
+//!   fan-outs are accounted asynchronously without double-counting
+//!   the synchronous primary.
+
+use std::fs;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use fast_esrnn::config::Frequency;
+use fast_esrnn::coordinator::ModelState;
+use fast_esrnn::forecast::api::{ObservationGap, StaleObservation,
+                                UnknownSeries};
+use fast_esrnn::forecast::{ServiceOptions, ServingStack, ShardedStack};
+use fast_esrnn::hw;
+use fast_esrnn::runtime::NativeBackend;
+use fast_esrnn::simd::{Lanes, LANES};
+
+const FREQ: Frequency = Frequency::Quarterly;
+const S1: usize = 4;
+const HORIZON: usize = 8;
+
+/// Positive quarterly series: trend × planted seasonal pattern.
+fn qgen(t: usize) -> f32 {
+    let pattern = [0.8f32, 1.1, 1.25, 0.9];
+    (100.0 + 0.5 * t as f32) * pattern[t % 4]
+}
+
+/// Positive hourly series with both a daily and a weekly cycle (§8.2).
+fn hgen(t: usize) -> f32 {
+    let day = (t % 24) as f32 / 24.0;
+    let week = (t % 168) as f32 / 168.0;
+    (50.0 + 0.05 * t as f32)
+        * (1.0 + 0.3 * (std::f32::consts::TAU * day).sin())
+        * (1.0 + 0.1 * (std::f32::consts::TAU * week).sin())
+}
+
+fn fresh_state(freq: Frequency) -> ModelState {
+    let backend = NativeBackend::new();
+    ModelState::init(&backend, freq.name(), 42).unwrap()
+}
+
+fn single_stack(freq: Frequency, state_dir: Option<PathBuf>)
+                -> ServingStack {
+    let mut stack = ServingStack::new();
+    stack
+        .start_pool_native(freq, fresh_state(freq), ServiceOptions {
+            workers: 1,
+            queue_limit: 64,
+            state_dir,
+            ..Default::default()
+        })
+        .unwrap();
+    stack
+}
+
+/// 1e-4 agreement per the acceptance contract (relative above 1.0).
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-4 * w.abs().max(1.0);
+        assert!((g - w).abs() <= tol,
+                "{what}[{i}]: got {g}, want {w} (tol {tol})");
+    }
+}
+
+/// The lane-vectorized oracle: marshal the series into lane 0 of the
+/// SoA layout (remaining lanes padded with 1.0), run the lanes kernel,
+/// and read the Holt-Winters forecast back out of lane 0.
+fn lanes_forecast_single(full: &[f32], rings: &[f32], horizon: usize)
+                         -> Vec<f32> {
+    let c = full.len();
+    let s = rings.len();
+    let mut y = vec![1.0f32; c * LANES];
+    for (t, &v) in full.iter().enumerate() {
+        y[t * LANES] = v;
+    }
+    let mut s_init = vec![1.0f32; s * LANES];
+    for (p, &r) in rings.iter().enumerate() {
+        s_init[p * LANES] = r;
+    }
+    let (levels, seas) = hw::es_filter_lanes(
+        &y, c, Lanes::splat(hw::INIT_ALPHA), Lanes::splat(hw::INIT_GAMMA),
+        &s_init, s);
+    let l = levels[(c - 1) * LANES];
+    (0..horizon).map(|h| l * seas[(c + h % s) * LANES]).collect()
+}
+
+/// Dual-seasonality variant of [`lanes_forecast_single`].
+fn lanes_forecast_dual(full: &[f32], idx1: &[f32], idx2: &[f32],
+                       horizon: usize) -> Vec<f32> {
+    let c = full.len();
+    let (s1, s2) = (idx1.len(), idx2.len());
+    let mut y = vec![1.0f32; c * LANES];
+    for (t, &v) in full.iter().enumerate() {
+        y[t * LANES] = v;
+    }
+    let mut i1 = vec![1.0f32; s1 * LANES];
+    for (p, &r) in idx1.iter().enumerate() {
+        i1[p * LANES] = r;
+    }
+    let mut i2 = vec![1.0f32; s2 * LANES];
+    for (p, &r) in idx2.iter().enumerate() {
+        i2[p * LANES] = r;
+    }
+    let (levels, seas1, seas2) = hw::es_dual_filter_lanes(
+        &y, c, Lanes::splat(hw::INIT_ALPHA), Lanes::splat(hw::INIT_GAMMA),
+        Lanes::splat(hw::INIT_GAMMA), &i1, s1, &i2, s2);
+    let l = levels[(c - 1) * LANES];
+    (0..horizon)
+        .map(|h| {
+            l * seas1[(c + h % s1) * LANES] * seas2[(c + h % s2) * LANES]
+        })
+        .collect()
+}
+
+#[test]
+fn observe_then_forecast_matches_the_extended_history_oracle() {
+    let stack = single_stack(FREQ, None);
+    let id = "Q-oracle";
+    let batch1: Vec<f32> = (0..48).map(qgen).collect();
+    let batch2: Vec<f32> = (48..68).map(qgen).collect();
+    let batch3: Vec<f32> = (68..77).map(qgen).collect();
+
+    let o1 = stack.observe(FREQ, id, &batch1, Some(0)).unwrap();
+    assert!(o1.new_series);
+    assert_eq!(o1.observed, 48);
+    let o2 = stack.observe(FREQ, id, &batch2, Some(48)).unwrap();
+    assert!(!o2.new_series);
+    assert_eq!(o2.observed, 68);
+    // t0 is optional: an untagged batch appends at the current tip.
+    let o3 = stack.observe(FREQ, id, &batch3, None).unwrap();
+    assert_eq!(o3.observed, 77);
+
+    // Scalar oracle: the seed rings come from the *first* batch (the
+    // service never sees the later batches at seed time), then the
+    // batch filter runs over the full concatenated history.
+    let full: Vec<f32> = (0..77).map(qgen).collect();
+    let rings = hw::seasonal_indices(&batch1, S1);
+    let out = hw::es_filter(&full, hw::INIT_ALPHA, hw::INIT_GAMMA, &rings);
+    let oracle = hw::es_forecast(&out, S1, HORIZON);
+
+    let served = stack.series_forecast(FREQ, id).unwrap();
+    assert_eq!(served.forecast.len(), HORIZON);
+    assert_close(&served.forecast, &oracle,
+                 "stateful forecast vs extended-history oracle");
+
+    // Lane-vectorized oracle: same numbers out of the SIMD kernel.
+    let lanes_fc = lanes_forecast_single(&full, &rings, HORIZON);
+    assert_close(&served.forecast, &lanes_fc,
+                 "stateful forecast vs lane-vectorized oracle");
+
+    // The state route exposes exactly the record the forecast used.
+    let rec = stack.series_record(FREQ, id).unwrap();
+    assert_eq!(rec.state.observed, 77);
+    assert_eq!(rec.state.ring1.len(), S1);
+    assert!(rec.state.ring2.is_empty());
+    assert_eq!(rec.generation, served.generation);
+    assert_eq!(rec.state.forecast(HORIZON), served.forecast);
+
+    // The t0 write guard is typed: a rewound batch is stale (409), a
+    // batch past the tip is a gap (400), an unseen id is unknown (404).
+    let stale = stack.observe(FREQ, id, &[qgen(5)], Some(5)).unwrap_err();
+    assert!(stale.is::<StaleObservation>(), "want StaleObservation: {stale:#}");
+    let gap = stack.observe(FREQ, id, &[qgen(200)], Some(200)).unwrap_err();
+    assert!(gap.is::<ObservationGap>(), "want ObservationGap: {gap:#}");
+    let unknown = stack.series_forecast(FREQ, "never-observed").unwrap_err();
+    assert!(unknown.is::<UnknownSeries>(), "want UnknownSeries: {unknown:#}");
+
+    // Repeat read is served from the cache; the counters agree with
+    // everything this test just did.
+    let again = stack.series_forecast(FREQ, id).unwrap();
+    assert_eq!(again.forecast, served.forecast);
+    let stats = stack.stats(FREQ).unwrap();
+    assert_eq!(stats.observe_requests, 5); // 3 applied + stale + gap
+    assert_eq!(stats.observe_new_series, 1);
+    assert_eq!(stats.observe_stale, 1);
+    assert_eq!(stats.state_series, 1);
+    assert!(stats.state_cache_hits >= 1, "repeat read missed the cache");
+}
+
+#[test]
+fn hourly_dual_observe_matches_the_dual_filter_and_lanes_oracles() {
+    const S1H: usize = 24;
+    const S2H: usize = 168;
+    const H: usize = 48;
+    let stack = single_stack(Frequency::Hourly, None);
+    let id = "H-oracle";
+    let batch1: Vec<f32> = (0..400).map(hgen).collect();
+    let batch2: Vec<f32> = (400..500).map(hgen).collect();
+
+    stack.observe(Frequency::Hourly, id, &batch1, None).unwrap();
+    let o = stack.observe(Frequency::Hourly, id, &batch2, Some(400))
+                 .unwrap();
+    assert_eq!(o.observed, 500);
+
+    // Dual-seasonality oracle, seeded exactly like the service: the
+    // primary cycle is decomposed first, then the residual.
+    let full: Vec<f32> = (0..500).map(hgen).collect();
+    let idx1 = hw::seasonal_indices(&batch1, S1H);
+    let residual: Vec<f32> = batch1
+        .iter()
+        .enumerate()
+        .map(|(t, v)| v / idx1[t % S1H].max(1e-6))
+        .collect();
+    let idx2 = hw::seasonal_indices(&residual, S2H);
+    let (levels, seas1, seas2) = hw::es_dual_filter(
+        &full, hw::INIT_ALPHA, hw::INIT_GAMMA, hw::INIT_GAMMA, &idx1,
+        &idx2);
+    let c = levels.len();
+    let l = levels[c - 1];
+    let oracle: Vec<f32> = (0..H)
+        .map(|h| l * seas1[c + h % S1H] * seas2[c + h % S2H])
+        .collect();
+
+    let served = stack.series_forecast(Frequency::Hourly, id).unwrap();
+    assert_eq!(served.forecast.len(), H);
+    assert_close(&served.forecast, &oracle,
+                 "hourly dual stateful forecast vs dual-filter oracle");
+
+    let lanes_fc = lanes_forecast_dual(&full, &idx1, &idx2, H);
+    assert_close(&served.forecast, &lanes_fc,
+                 "hourly dual stateful forecast vs lane-vectorized oracle");
+
+    let rec = stack.series_record(Frequency::Hourly, id).unwrap();
+    assert_eq!(rec.state.observed, 500);
+    assert_eq!(rec.state.ring1.len(), S1H);
+    assert_eq!(rec.state.ring2.len(), S2H);
+}
+
+#[test]
+fn state_survives_a_kill_mid_write_and_a_process_restart() {
+    let dir = std::env::temp_dir()
+        .join(format!("fesrnn-stateful-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    let id = "Q-durable";
+    let batch1: Vec<f32> = (0..48).map(qgen).collect();
+    let batch2: Vec<f32> = (48..60).map(qgen).collect();
+
+    let first = {
+        let stack = single_stack(FREQ, Some(dir.clone()));
+        stack.observe(FREQ, id, &batch1, None).unwrap();
+        stack.observe(FREQ, id, &batch2, None).unwrap();
+        stack.series_forecast(FREQ, id).unwrap().forecast
+    }; // the stack drop is the process going away
+
+    // A writer killed mid-append leaves a torn half-record at the tail.
+    let slab = dir.join(FREQ.name()).join("state.slab");
+    assert!(slab.exists(),
+            "durable slab missing at {}", slab.display());
+    let mut bytes = fs::read(&slab).unwrap();
+    bytes.extend_from_slice(&[0xEE; 17]);
+    fs::write(&slab, &bytes).unwrap();
+
+    // Restart: the tear is truncated, the intact state is bit-exact.
+    let stack = single_stack(FREQ, Some(dir.clone()));
+    let rec = stack.series_record(FREQ, id).unwrap();
+    assert_eq!(rec.state.observed, 60);
+    assert_eq!(stack.series_forecast(FREQ, id).unwrap().forecast, first,
+               "recovered forecast drifted from the pre-crash one");
+
+    // The recovered state advances exactly like an uninterrupted one:
+    // the t0 guard proves the tip survived, the oracle proves the
+    // rings did.
+    let batch3: Vec<f32> = (60..70).map(qgen).collect();
+    stack.observe(FREQ, id, &batch3, Some(60)).unwrap();
+    let full: Vec<f32> = (0..70).map(qgen).collect();
+    let rings = hw::seasonal_indices(&batch1, S1);
+    let out = hw::es_filter(&full, hw::INIT_ALPHA, hw::INIT_GAMMA, &rings);
+    let oracle = hw::es_forecast(&out, S1, HORIZON);
+    assert_close(&stack.series_forecast(FREQ, id).unwrap().forecast,
+                 &oracle, "post-recovery forecast vs oracle");
+    drop(stack);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_shard_interleaving_keeps_exact_accounting() {
+    let sharded = ShardedStack::new();
+    sharded.add_shard("a", single_stack(FREQ, None)).unwrap();
+    sharded.add_shard("b", single_stack(FREQ, None)).unwrap();
+
+    const SERIES: usize = 60;
+    const ROUNDS: usize = 3;
+    let ids: Vec<String> =
+        (0..SERIES).map(|i| format!("acct-{i}")).collect();
+    let mut mirrors: Vec<hw::EsState> = Vec::new();
+
+    // Seed every series, keeping a scalar mirror of the expected state.
+    for id in &ids {
+        let batch: Vec<f32> = (0..16).map(qgen).collect();
+        let o = sharded.observe(FREQ, id, &batch, Some(0)).unwrap();
+        assert!(o.new_series);
+        mirrors.push(hw::es_state_seed(&batch, S1, 0));
+    }
+
+    // Interleave observes and forecasts across both shards; every
+    // forecast must match the scalar mirror no matter which shard the
+    // id hashed to.
+    for round in 0..ROUNDS {
+        for (i, id) in ids.iter().enumerate() {
+            let t = 16 + round * 4;
+            let batch: Vec<f32> =
+                (t..t + 4).map(|u| qgen(u + i)).collect();
+            let o = sharded.observe(FREQ, id, &batch, Some(t as u64))
+                           .unwrap();
+            assert!(!o.new_series);
+            assert_eq!(o.observed, (t + 4) as u64);
+            mirrors[i].advance(&batch, hw::INIT_ALPHA, hw::INIT_GAMMA,
+                               hw::INIT_GAMMA);
+            let served = sharded.series_forecast(FREQ, id).unwrap();
+            assert_close(&served.forecast, &mirrors[i].forecast(HORIZON),
+                         "sharded stateful forecast vs scalar mirror");
+        }
+    }
+
+    // Rewound batches are refused with the typed 409 — and tallied.
+    for id in ids.iter().take(10) {
+        let err = sharded.observe(FREQ, id, &[qgen(1)], Some(3))
+                         .unwrap_err();
+        assert!(err.is::<StaleObservation>(),
+                "want StaleObservation: {err:#}");
+    }
+    let err = sharded.series_forecast(FREQ, "acct-missing").unwrap_err();
+    assert!(err.is::<UnknownSeries>(), "want UnknownSeries: {err:#}");
+
+    // Exact accounting: every observe issued landed on exactly one
+    // shard — the per-shard counters sum to the number issued, with
+    // no fan-out inflation at R = 1.
+    let issued = (SERIES * (1 + ROUNDS) + 10) as u64;
+    let per_shard = sharded.shard_stats();
+    assert_eq!(per_shard.len(), 2);
+    let mut sum = 0u64;
+    for (label, by_freq) in &per_shard {
+        let st = by_freq.get(&FREQ).unwrap();
+        assert!(st.observe_requests > 0,
+                "shard `{label}` saw no observes — the ring is not \
+                 spreading keys");
+        sum += st.observe_requests;
+    }
+    assert_eq!(sum, issued);
+    let agg = sharded.stats(FREQ).unwrap();
+    assert_eq!(agg.observe_requests, issued);
+    assert_eq!(agg.observe_new_series, SERIES as u64);
+    assert_eq!(agg.observe_stale, 10);
+    assert_eq!(agg.state_series, SERIES as u64);
+    assert_eq!(sharded.observe_fanouts(), 0,
+               "R = 1 must not fan out observes");
+
+    // R = 2: the primary applies synchronously (counted above the
+    // ring), the replica asynchronously — both eventually appear in
+    // the pool counters, and the fan-out counter is exact.
+    sharded.set_replicas(2);
+    for i in 0..5 {
+        let id = format!("fan-{i}");
+        let batch: Vec<f32> = (0..8).map(qgen).collect();
+        sharded.observe(FREQ, &id, &batch, None).unwrap();
+    }
+    assert_eq!(sharded.observe_fanouts(), 5);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let agg = sharded.stats(FREQ).unwrap();
+        if agg.observe_requests == issued + 10 {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "async observe fan-outs never landed: {} of {} observes \
+                 accounted", agg.observe_requests, issued + 10);
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(sharded.observe_fanout_errors(), 0,
+               "local replica fan-outs must not fail");
+}

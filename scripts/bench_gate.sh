@@ -2,9 +2,9 @@
 # CI perf gate: run the quick benches, record the speedup trajectories,
 # and fail on regression.
 #
-#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json] [bench8_out.json] [bench9_out.json]
+#   scripts/bench_gate.sh [bench3_out.json] [bench4_out.json] [bench5_out.json] [bench6_out.json] [bench8_out.json] [bench9_out.json] [bench10_out.json]
 #
-# Six gates, all measured as same-machine ratios (stable across runner
+# Seven gates, all measured as same-machine ratios (stable across runner
 # hardware generations in a way absolute numbers are not):
 #
 # * BENCH_3 — `micro_hotpath` (and `table5_speedup`) in quick mode:
@@ -32,6 +32,12 @@
 #   unhedged (R=1); fails when the hedged p99 speedup drops more than
 #   10% below benches/bench9_baseline.json (hedging must keep rescuing
 #   the tail).
+# * BENCH_10 — `http_throughput` stateful-series section: observe
+#   throughput on `POST /v1/series/{id}/observe` plus the stateful
+#   forecast read p95 pure vs under a 50% observe mix; fails when the
+#   mix inflates the read p95 past the cap in
+#   benches/bench10_baseline.json (cache invalidation must stay cheap)
+#   or observe throughput collapses relative to reads.
 #
 # Every cargo invocation is --locked: the committed Cargo.lock is the
 # only dependency resolution CI may use.
@@ -43,12 +49,14 @@ out5="${3:-BENCH_5.json}"
 out6="${4:-BENCH_6.json}"
 out8="${5:-BENCH_8.json}"
 out9="${6:-BENCH_9.json}"
+out10="${7:-BENCH_10.json}"
 baseline="benches/bench3_baseline.json"
 baseline4="benches/bench4_baseline.json"
 baseline5="benches/bench5_baseline.json"
 baseline6="benches/bench6_baseline.json"
 baseline8="benches/bench8_baseline.json"
 baseline9="benches/bench9_baseline.json"
+baseline10="benches/bench10_baseline.json"
 
 export FAST_ESRNN_QUICK=1
 FAST_ESRNN_BENCH_JSON="$out" FAST_ESRNN_BENCH6_JSON="$out6" \
@@ -56,7 +64,7 @@ FAST_ESRNN_BENCH_JSON="$out" FAST_ESRNN_BENCH6_JSON="$out6" \
 cargo bench --locked --bench table5_speedup
 FAST_ESRNN_BENCH_JSON="$out4" cargo bench --locked --bench serving_throughput
 FAST_ESRNN_BENCH_JSON="$out5" FAST_ESRNN_BENCH8_JSON="$out8" \
-    FAST_ESRNN_BENCH9_JSON="$out9" \
+    FAST_ESRNN_BENCH9_JSON="$out9" FAST_ESRNN_BENCH10_JSON="$out10" \
     cargo bench --locked --bench http_throughput
 
 python3 - "$out" "$baseline" <<'EOF'
@@ -250,4 +258,46 @@ if got < floor:
           f"{floor:.2f}x — one slow replica is a p99 cliff again")
     sys.exit(1)
 print("hedging gate OK")
+EOF
+
+python3 - "$out10" "$baseline10" <<'EOF'
+import json, sys
+
+out_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(out_path) as f:
+    result = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+obs = result["observe"]
+pure, mixed = result["forecast_pure"], result["forecast_mixed"]
+ratio = result["mixed_p95_ratio"]
+cap = baseline["max_mixed_p95_ratio"]
+obs_ratio = result["observe_rps_ratio"]
+want = baseline["min_observe_rps_ratio"]
+floor = want * 0.9
+print(f"stateful series routes ({int(result['series'])} series, "
+      f"{int(result['threads'])} clients): observe {obs['rps']:.0f} "
+      f"req/s, pure forecast {pure['rps']:.0f} req/s "
+      f"p95 {pure['p95_ms']:.2f} ms, 50% observe mix "
+      f"p95 {mixed['p95_ms']:.2f} ms "
+      f"({int(mixed['observes'])} observes interleaved)")
+print(f"  mixed/pure read p95 ratio {ratio:.2f} (cap {cap:.2f}); "
+      f"observe/read rps ratio {obs_ratio:.2f} "
+      f"(baseline {want:.2f}, gate floor {floor:.2f})")
+failed = False
+# Cap is absolute (bench8-style): invalidation churn inflating the
+# read tail past the cap is a regression regardless of machine speed.
+if ratio > cap:
+    print(f"FAIL: observe mix inflates stateful read p95 {ratio:.2f}x "
+          f"(cap {cap:.2f}x) — cache invalidation is blocking reads")
+    failed = True
+if obs_ratio < floor:
+    print(f"FAIL: observe throughput collapsed to {obs_ratio:.2f}x the "
+          f"read rate (floor {floor:.2f}x) — the state-store write "
+          f"path is too slow")
+    failed = True
+if failed:
+    sys.exit(1)
+print("stateful gate OK")
 EOF

@@ -397,12 +397,14 @@ fn push(out: &mut Vec<Violation>, scan: &Scan, rule: &'static str,
 
 // ------------------------------------------------------------- rules R1/R7
 
-const SERVING_FILES: [&str; 5] = [
+const SERVING_FILES: [&str; 7] = [
     "forecast/http.rs",
     "forecast/pool.rs",
     "forecast/shard.rs",
     "forecast/router.rs",
     "forecast/remote.rs",
+    "forecast/state.rs",
+    "forecast/api.rs",
 ];
 
 const LOCK_FAMILY: [&str; 9] = [
@@ -510,13 +512,15 @@ fn rule_r7(scan: &Scan, out: &mut Vec<Violation>) {
 // ---------------------------------------------------------------- rule R2
 
 // `forecast/remote.rs` spawns the per-remote health prober and the
-// hedged-read replica threads — both deliberate, both joined/detached
+// hedged-read replica threads, and `forecast/shard.rs` spawns the
+// async observe replica fan-out — all deliberate, all joined/detached
 // by design.
-const SPAWN_FILES: [&str; 4] = [
+const SPAWN_FILES: [&str; 5] = [
     "runtime/native/pool.rs",
     "forecast/pool.rs",
     "forecast/http.rs",
     "forecast/remote.rs",
+    "forecast/shard.rs",
 ];
 
 fn rule_r2(scan: &Scan, out: &mut Vec<Violation>) {
